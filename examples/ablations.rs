@@ -1,0 +1,130 @@
+//! Ablation study over the design choices DESIGN.md calls out:
+//!
+//! * **ψ** — the vanishing parameter: |G|+|O|, degree, accuracy, time.
+//! * **τ** — the (CCOP) ℓ1 radius: (INF) frequency, IHB viability,
+//!   generalization-bound trade-off (paper §4.4.3).
+//! * **ε-factor** — solver accuracy: does looser solving hurt?
+//! * **IHB / WIHB / no-IHB** — speed vs sparsity (the §4.4 trade-off).
+//!
+//! Run: `cargo run --release --example ablations [scale]`
+
+use avi_scale::data::load_registry_dataset;
+use avi_scale::data::splits::train_test_split;
+use avi_scale::oavi::{Oavi, OaviConfig};
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use avi_scale::svm::linear::LinearSvmConfig;
+use avi_scale::util::timer::Timer;
+
+fn main() -> avi_scale::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.05);
+    let ds = load_registry_dataset("htru", scale, 17)?;
+    let split = train_test_split(&ds, 0.6, 1);
+    println!("ablations on htru (m={}, n={})\n", ds.len(), ds.n_features());
+
+    // ---- ψ sweep -------------------------------------------------------
+    println!("## ψ sweep (CGAVI-IHB)");
+    println!(
+        "{:>8} {:>9} {:>7} {:>9} {:>10} {:>8}",
+        "psi", "|G|+|O|", "deg", "err %", "fit s", "D bound"
+    );
+    for psi in [0.1, 0.05, 0.01, 0.005, 0.001, 0.0005] {
+        let cfg = OaviConfig::cgavi_ihb(psi);
+        let t = Timer::start();
+        let pipe = train_pipeline(
+            &PipelineConfig {
+                method: GeneratorMethod::Oavi(cfg),
+                svm: LinearSvmConfig::default(),
+                ordering: FeatureOrdering::Pearson,
+            },
+            &split.train,
+        )?;
+        let secs = t.secs();
+        println!(
+            "{:>8} {:>9} {:>7.2} {:>9.2} {:>10.4} {:>8}",
+            psi,
+            pipe.transformer.total_size(),
+            pipe.transformer.avg_degree(),
+            pipe.error_on(&split.test) * 100.0,
+            secs,
+            cfg.theorem_degree()
+        );
+    }
+
+    // ---- τ sweep -------------------------------------------------------
+    println!("\n## τ sweep (CGAVI-IHB; (INF) disables IHB when the closed form leaves the ball)");
+    println!(
+        "{:>8} {:>9} {:>10} {:>12} {:>12}",
+        "tau", "|G|+|O|", "max ℓ1", "INF fired", "solver runs"
+    );
+    for tau in [2.0, 5.0, 20.0, 100.0, 1000.0] {
+        let mut cfg = OaviConfig::cgavi_ihb(0.005);
+        cfg.tau = tau;
+        let x0 = split.train.class_matrix(0);
+        let model = Oavi::new(cfg).fit(&x0)?;
+        println!(
+            "{:>8} {:>9} {:>10.2} {:>12} {:>12}",
+            tau,
+            model.total_size(),
+            model.generator_set().max_coeff_l1(),
+            model.stats.inf_disabled_ihb,
+            model.stats.solver_runs
+        );
+    }
+
+    // ---- ε-factor sweep -------------------------------------------------
+    println!("\n## solver-accuracy sweep (BPCGAVI, ε = factor·ψ)");
+    println!("{:>10} {:>9} {:>10} {:>12}", "factor", "|G|+|O|", "fit s", "solver iters");
+    for factor in [1.0, 0.1, 0.01, 0.001] {
+        let mut cfg = OaviConfig::bpcgavi(0.005);
+        cfg.eps_factor = factor;
+        let x0 = split.train.class_matrix(0);
+        let t = Timer::start();
+        let model = Oavi::new(cfg).fit(&x0)?;
+        println!(
+            "{:>10} {:>9} {:>10.4} {:>12}",
+            factor,
+            model.total_size(),
+            t.secs(),
+            model.stats.solver_iters
+        );
+    }
+
+    // ---- IHB mode comparison --------------------------------------------
+    println!("\n## IHB mode (speed vs sparsity, paper §4.4)");
+    println!(
+        "{:<14} {:>10} {:>8} {:>9} {:>12} {:>12}",
+        "mode", "fit s", "SPAR", "err %", "ihb solves", "solver runs"
+    );
+    for (name, cfg) in [
+        ("CGAVI-IHB", OaviConfig::cgavi_ihb(0.005)),
+        ("BPCGAVI-WIHB", OaviConfig::bpcgavi_wihb(0.005)),
+        ("BPCGAVI", OaviConfig::bpcgavi(0.005)),
+    ] {
+        let t = Timer::start();
+        let pipe = train_pipeline(
+            &PipelineConfig {
+                method: GeneratorMethod::Oavi(cfg),
+                svm: LinearSvmConfig::default(),
+                ordering: FeatureOrdering::Pearson,
+            },
+            &split.train,
+        )?;
+        let secs = t.secs();
+        let x0 = split.train.class_matrix(0);
+        let model = Oavi::new(cfg).fit(&x0)?;
+        println!(
+            "{:<14} {:>10.4} {:>8.2} {:>9.2} {:>12} {:>12}",
+            name,
+            secs,
+            pipe.transformer.sparsity(),
+            pipe.error_on(&split.test) * 100.0,
+            model.stats.ihb_solves,
+            model.stats.solver_runs + model.stats.wihb_resolves
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Figure 1 driver: Theorem 4.3 bound curves (left) and bound-vs-empirical
+//! |G|+|O| on random data (right).  Writes CSVs under target/bench_results.
+//!
+//! Run: `cargo run --release --example bound_plot [m] [runs]`
+
+use avi_scale::bench::figures::{fig1_bound_curves, fig1_empirical};
+use avi_scale::bench::report_figure;
+
+fn main() -> avi_scale::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let m: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(10_000);
+    let runs: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(10);
+
+    let psis: Vec<f64> = (0..14).map(|i| 10f64.powf(-0.3 * i as f64 - 0.3)).collect();
+    let left = fig1_bound_curves(&[1, 10, 50, 100, 250], &psis);
+    report_figure("fig1_left", "psi*1e6", &{
+        let mut s = left.clone();
+        for ser in &mut s {
+            for p in &mut ser.points {
+                p.0 *= 1e6;
+            }
+        }
+        s
+    });
+
+    println!("\nempirical run: m = {m}, runs = {runs}, psi = 0.005 (paper: m = 10,000, 10 runs)");
+    let right = fig1_empirical(m, &[1, 2, 3, 4, 5, 6], 0.005, runs, 0xF1)?;
+    report_figure("fig1_right", "n", &right);
+    Ok(())
+}

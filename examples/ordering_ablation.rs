@@ -1,0 +1,50 @@
+//! Table 1 driver: Pearson vs reverse-Pearson ordering for CGAVI-IHB+SVM
+//! on the six registry datasets.
+//!
+//! Run: `cargo run --release --example ordering_ablation [scale] [splits]`
+
+use avi_scale::coordinator::pool::ThreadPool;
+use avi_scale::data::load_registry_dataset;
+use avi_scale::oavi::OaviConfig;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::report::{run_cell, Method, Protocol};
+use avi_scale::pipeline::GeneratorMethod;
+
+fn main() -> avi_scale::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale: f64 = args.first().and_then(|v| v.parse().ok()).unwrap_or(0.03);
+    let splits: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(3);
+    let pool = ThreadPool::default_size();
+
+    println!("Table 1 (CGAVI-IHB+SVM; scale {scale}, {splits} splits; paper uses 10 splits)\n");
+    println!("{:<10} {:>14} {:>18} {:>8}", "dataset", "Pearson err%", "rev-Pearson err%", "delta");
+    for name in ["bank", "credit", "htru", "seeds", "skin", "spam"] {
+        let ds = load_registry_dataset(name, scale, 3)?;
+        let mut errs = Vec::new();
+        for ordering in [FeatureOrdering::Pearson, FeatureOrdering::ReversePearson] {
+            let protocol = Protocol {
+                n_splits: splits,
+                cv_folds: 3,
+                psis: &[0.01, 0.005],
+                lambdas: &[1e-3],
+                ordering,
+                ..Default::default()
+            };
+            let cell = run_cell(
+                Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005))),
+                &ds,
+                &protocol,
+                &pool,
+            )?;
+            errs.push(cell.error_mean * 100.0);
+        }
+        println!(
+            "{name:<10} {:>14.2} {:>18.2} {:>8.2}",
+            errs[0],
+            errs[1],
+            (errs[0] - errs[1]).abs()
+        );
+    }
+    println!("\npaper shape: deltas are small (≤ ~0.2pp) — the ordering choice barely matters");
+    Ok(())
+}

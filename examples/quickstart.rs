@@ -1,0 +1,44 @@
+//! Quickstart: fit OAVI on the paper's synthetic dataset, inspect the
+//! generators, transform features, and train the downstream SVM.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use avi_scale::data::splits::train_test_split;
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::oavi::{Oavi, OaviConfig};
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+fn main() -> avi_scale::Result<()> {
+    // 1. data: the Appendix-C synthetic set (two quadric surfaces + noise)
+    let ds = synthetic_dataset(5_000, 42);
+    println!("dataset: {} samples, {} features, {} classes", ds.len(), ds.n_features(), ds.n_classes);
+
+    // 2. fit OAVI on one class and look at what it found
+    let cfg = OaviConfig::cgavi_ihb(0.005);
+    let model = Oavi::new(cfg).fit(&ds.class_matrix(0))?;
+    println!("\nCGAVI-IHB on class 0:");
+    println!("  |G| = {}, |O| = {}, degree reached = {}", model.generators.len(), model.o_terms.len(), model.stats.degree_reached);
+    println!("  oracle calls = {} (= |G|+|O|−1)", model.stats.oracle_calls);
+    println!("  IHB closed-form solves = {}", model.stats.ihb_solves);
+    for (i, g) in model.generators.iter().take(4).enumerate() {
+        println!("  g{i}: leading {} (degree {}), training MSE {:.2e}", g.leading, g.degree(), g.mse);
+    }
+    println!("\n  as polynomials (coefficients < 1e-3 hidden):");
+    for desc in model.generator_set().describe(1e-3).iter().take(3) {
+        println!("    {desc} = 0  (approximately)");
+    }
+
+    // 3. the full Algorithm-2 pipeline: per-class OAVI → |g(x)| features → ℓ1 SVM
+    let split = train_test_split(&ds, 0.6, 7);
+    let pipeline_cfg = PipelineConfig {
+        method: GeneratorMethod::Oavi(cfg),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    let pipeline = train_pipeline(&pipeline_cfg, &split.train)?;
+    println!("\npipeline: {} transformed features", pipeline.transformer.n_generators());
+    println!("test error: {:.2}%", pipeline.error_on(&split.test) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Figures 2/3/4 driver: training time vs number of samples for the
+//! solver/IHB/algorithm comparisons, on bank/htru/skin/synthetic.
+//!
+//! Run: `cargo run --release --example scaling_curves [figure] [scale] [runs]`
+//!   figure ∈ {2, 3, 4, all}    (default all)
+//!   scale  ∈ (0,1]             (default 0.05 — skin/synthetic get large)
+//!   runs   : reps per point    (default 3; paper 10)
+
+use avi_scale::bench::figures::{
+    fig2_methods, fig3_methods, fig4_methods, training_time_sweep, SweepSpec,
+};
+use avi_scale::bench::report_figure;
+
+fn main() -> avi_scale::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let which = args.first().cloned().unwrap_or_else(|| "all".into());
+    let scale: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.05);
+    let runs: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(3);
+
+    let spec = SweepSpec {
+        datasets: vec!["bank".into(), "htru".into(), "skin".into(), "synthetic".into()],
+        fractions: vec![0.125, 0.25, 0.5, 0.75, 1.0],
+        runs,
+        psi: 0.005,
+        scale,
+        seed: 0xF16,
+    };
+
+    if which == "2" || which == "all" {
+        println!("### Figure 2: PCGAVI vs BPCGAVI");
+        for (ds, series) in training_time_sweep(&fig2_methods(), &spec)? {
+            report_figure(&format!("fig2_{ds}"), "m", &series);
+        }
+    }
+    if which == "3" || which == "all" {
+        println!("### Figure 3: BPCGAVI vs BPCGAVI-WIHB vs CGAVI-IHB");
+        for (ds, series) in training_time_sweep(&fig3_methods(), &spec)? {
+            report_figure(&format!("fig3_{ds}"), "m", &series);
+        }
+    }
+    if which == "4" || which == "all" {
+        println!("### Figure 4: CGAVI-IHB / BPCGAVI-WIHB / AGDAVI-IHB / ABM / VCA");
+        for (ds, series) in training_time_sweep(&fig4_methods(), &spec)? {
+            report_figure(&format!("fig4_{ds}"), "m", &series);
+        }
+    }
+    Ok(())
+}

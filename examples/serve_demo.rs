@@ -1,0 +1,70 @@
+//! Coordinator demo: train a pipeline, start the batched transform
+//! service, fire concurrent clients, report throughput + latency
+//! percentiles + batching stats.
+//!
+//! Run: `cargo run --release --example serve_demo [requests] [clients]`
+
+use std::sync::Arc;
+
+use avi_scale::coordinator::service::{latency_percentiles, BatchPolicy, TransformService};
+use avi_scale::data::splits::train_test_split;
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::oavi::OaviConfig;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+fn main() -> avi_scale::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_req: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(20_000);
+    let clients: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(8);
+
+    let ds = synthetic_dataset(8_000, 5);
+    let split = train_test_split(&ds, 0.6, 1);
+    let cfg = PipelineConfig {
+        method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005)),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    let model = Arc::new(train_pipeline(&cfg, &split.train)?);
+    println!("model trained: {} features, test rows available: {}", model.transformer.n_generators(), split.test.len());
+
+    let svc = TransformService::start(model, BatchPolicy::default());
+    let rows: Vec<Vec<f64>> = (0..n_req)
+        .map(|i| split.test.x.row(i % split.test.len()).to_vec())
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let latencies = std::sync::Mutex::new(Vec::with_capacity(n_req));
+    let queue = std::sync::Mutex::new(rows);
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            scope.spawn(|| loop {
+                let row = queue.lock().unwrap().pop();
+                match row {
+                    Some(r) => {
+                        let resp = svc.predict_blocking(r).expect("predict");
+                        latencies
+                            .lock()
+                            .unwrap()
+                            .push(resp.latency.as_secs_f64() * 1e6);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let lat = latencies.into_inner().unwrap();
+    let (p50, p95, p99) = latency_percentiles(lat);
+    println!("requests   = {n_req} from {clients} concurrent clients");
+    println!("throughput = {:.0} req/s", n_req as f64 / wall);
+    println!("latency    = p50 {p50:.0}us  p95 {p95:.0}us  p99 {p99:.0}us");
+    println!(
+        "batches    = {} (max batch size {})",
+        svc.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+        svc.metrics.max_batch.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT-lower the L2 model to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (function, shape) in DESIGN.md §6 plus a
+``manifest.json`` the Rust runtime uses to discover artifacts and their
+shapes.  Pure build-time tooling — never imported at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Fixed shapes (DESIGN.md §6). M_TILE rows per dispatch; Rust accumulates
+# across tiles.  L_PAD sizes cover the live ℓ range; G_PAD generators.
+M_TILE = 4096
+L_PADS = (64, 256)
+G_PAD = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs():
+    """(name, fn, example_args) for every artifact we ship."""
+    specs = []
+    for l_pad in L_PADS:
+        specs.append(
+            (
+                f"gram_update_{M_TILE}x{l_pad}",
+                model.gram_update_aot,
+                (f32(M_TILE, l_pad), f32(M_TILE)),
+            )
+        )
+        specs.append(
+            (
+                f"oracle_solve_{l_pad}",
+                model.oracle_solve_aot,
+                (f32(l_pad, l_pad), f32(l_pad), f32(), f32(l_pad)),
+            )
+        )
+        specs.append(
+            (
+                f"ihb_update_{l_pad}",
+                model.ihb_update_aot,
+                (f32(l_pad, l_pad), f32(l_pad), f32(), f32(l_pad), f32(l_pad)),
+            )
+        )
+        specs.append(
+            (
+                f"transform_{M_TILE}x{l_pad}x{G_PAD}",
+                model.transform_aot,
+                (f32(M_TILE, l_pad), f32(l_pad, G_PAD), f32(M_TILE, G_PAD)),
+            )
+        )
+    return specs
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="substring filter on artifact names"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "m_tile": M_TILE,
+        "l_pads": list(L_PADS),
+        "g_pad": G_PAD,
+        "artifacts": {},
+    }
+    for name, fn, example_args in artifact_specs():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [list(a.shape) for a in example_args],
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

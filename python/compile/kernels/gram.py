@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: masked, tiled Gram update — the O(m·ℓ) hot spot of OAVI.
+
+For every border term u, OAVI (with IHB, Theorem 4.9) needs exactly two
+sample-dependent quantities: ``A^T b`` and ``b^T b`` where ``A = O(X)`` is the
+evaluation matrix of the non-leading terms and ``b = u(X)`` is the evaluation
+vector of the candidate leading term.  Everything else in the oracle is
+O(ℓ²) work on the (inverse) Gram matrix.  This kernel computes the partial
+``A^T b`` / ``b^T b`` over one (M_TILE × L_PAD) row tile; the Rust runtime
+streams row tiles and accumulates, so the end-to-end cost is linear in m
+(the paper's Theorem 4.3 headline) with a fixed-shape AOT artifact.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the row tile lives in VMEM
+(4096×256 f32 = 4 MiB); the reduction is expressed as a matmul
+``A^T @ b[:, None]`` so the MXU performs it; the grid walks the L dimension
+in 128-wide MXU-aligned blocks.  Under ``interpret=True`` the same kernel
+lowers to plain HLO so the CPU PJRT client can execute it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned block width for the L (feature/term) dimension.
+L_BLOCK = 128
+
+
+def _gram_update_kernel(a_ref, b_ref, atb_ref, btb_ref):
+    """One grid step: partial A^T b for an L_BLOCK-wide column slab.
+
+    a_ref:   (M_TILE, L_BLOCK) slab of the evaluation matrix A = O(X)
+    b_ref:   (M_TILE, 1)       candidate column b = u(X)
+    atb_ref: (L_BLOCK, 1)      output slab of A^T b
+    btb_ref: (1, 1)            output b^T b (written once, by program 0)
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    # (L_BLOCK, M) @ (M, 1) -> (L_BLOCK, 1): contraction over samples on
+    # the MXU. f32 accumulation.
+    atb_ref[...] = jnp.dot(
+        a.T, b, preferred_element_type=jnp.float32
+    )
+    # b^T b is identical for every grid step; write it on the first.
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        btb_ref[...] = jnp.dot(
+            b.T, b, preferred_element_type=jnp.float32
+        )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gram_update(a, b):
+    """Partial Gram update over one row tile.
+
+    Args:
+      a: (M_TILE, L_PAD) float32 — row tile of A (dead columns zero-padded).
+      b: (M_TILE,)       float32 — row tile of the candidate column.
+
+    Returns:
+      (atb, btb): (L_PAD,) float32 partial ``A^T b`` and () float32 partial
+      ``b^T b``; partial sums over this tile only — the caller accumulates.
+    """
+    m_tile, l_pad = a.shape
+    # Narrow artifacts (L_PAD < 128) use a single full-width block; wide
+    # ones walk MXU-aligned 128-lane slabs.
+    block = min(L_BLOCK, l_pad)
+    assert l_pad % block == 0, (l_pad, block)
+    b2 = b.reshape(m_tile, 1)
+    grid = (l_pad // block,)
+    atb, btb = pl.pallas_call(
+        _gram_update_kernel,
+        grid=grid,
+        in_specs=[
+            # Walk A in L_BLOCK-wide column slabs; full M rows per step.
+            pl.BlockSpec((m_tile, block), lambda i: (0, i)),
+            pl.BlockSpec((m_tile, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b2)
+    return atb.reshape(l_pad), btb.reshape(())

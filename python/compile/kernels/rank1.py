@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused symmetric rank-1 update — the O(ℓ²) core of
+the Theorem 4.9 inverse append.
+
+``ihb_update`` spends its FLOPs in two places: the mat-vec ``w = N·Aᵀb``
+and the rank-1 correction ``N + w wᵀ / s``.  This kernel fuses the rank-1
+correction with the masking so the (L, L) intermediate is produced in one
+VMEM-resident pass:
+
+    out = a * outer(row_mask, col_mask) + alpha * outer(u, v)
+
+TPU mapping: one (L_BLOCK, L_BLOCK) tile per grid step; u/v slabs are
+broadcast along the tile rows/cols — pure VPU work (no MXU needed), bound
+by the VMEM write bandwidth of `out`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+L_BLOCK = 128
+
+
+def _rank1_kernel(a_ref, u_ref, v_ref, rm_ref, cm_ref, alpha_ref, out_ref):
+    """out = a ⊙ (rm cmᵀ) + alpha · (u vᵀ) for one (BL, BL) tile."""
+    u = u_ref[...]          # (BL, 1)
+    v = v_ref[...]          # (1, BL)
+    rm = rm_ref[...]        # (BL, 1)
+    cm = cm_ref[...]        # (1, BL)
+    alpha = alpha_ref[0, 0]
+    out_ref[...] = a_ref[...] * (rm * cm) + alpha * (u * v)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rank1_update(a, u, v, row_mask, col_mask, alpha):
+    """Masked rank-1 update over a padded square matrix.
+
+    Args:
+      a:        (L, L) f32.
+      u:        (L,)   f32 — left vector.
+      v:        (L,)   f32 — right vector.
+      row_mask: (L,)   f32 — 0/1 rows of `a` to keep.
+      col_mask: (L,)   f32 — 0/1 cols of `a` to keep.
+      alpha:    ()     f32 — scale of the outer product.
+
+    Returns:
+      (L, L) f32: ``a·(row_mask col_maskᵀ) + alpha·(u vᵀ)``.
+    """
+    l_pad = a.shape[0]
+    block = min(L_BLOCK, l_pad)
+    assert l_pad % block == 0, (l_pad, block)
+    grid = (l_pad // block, l_pad // block)
+    return pl.pallas_call(
+        _rank1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block), lambda i, j: (0, j)),
+            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l_pad, l_pad), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        a,
+        u.reshape(l_pad, 1),
+        v.reshape(1, l_pad),
+        row_mask.reshape(l_pad, 1),
+        col_mask.reshape(1, l_pad),
+        alpha.reshape(1, 1),
+    )

@@ -1,0 +1,56 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel must match its
+reference under ``assert_allclose`` across the hypothesis shape/dtype sweep
+in ``python/tests/``.  They are also what the L2 model would be without the
+kernels, which makes them the "roofline" comparator for DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_update_ref(a, b):
+    """Reference for kernels.gram.gram_update: (A^T b, b^T b)."""
+    atb = a.T @ b
+    btb = jnp.dot(b, b)
+    return atb.astype(jnp.float32), btb.astype(jnp.float32)
+
+
+def transform_ref(a, c, u):
+    """Reference for kernels.transform.transform: |A @ C + U|."""
+    return jnp.abs(a @ c + u).astype(jnp.float32)
+
+
+def oracle_solve_ref(n_inv, atb, btb, mask):
+    """Reference for model.oracle_solve.
+
+    c = -(A^T A)^{-1} A^T b restricted to live coordinates; residual
+    m·MSE = b^T b + c^T A^T b (valid at the optimum).
+    """
+    c = -(n_inv @ (atb * mask)) * mask
+    mse_m = btb + jnp.dot(c, atb)
+    return c.astype(jnp.float32), mse_m.astype(jnp.float32)
+
+
+def ihb_update_ref(n_inv, atb, btb, mask, k):
+    """Reference for model.ihb_update (Theorem 4.9 block-inverse append).
+
+    Given N = (A^T A)^{-1} on the live block selected by ``mask`` (with
+    mask[k] == 0 — index k is the appended column), returns the inverse of
+    the bordered Gram matrix embedded in the same padded shape.
+    """
+    atb_l = atb * mask
+    w = n_inv @ atb_l                      # N A^T b
+    s = btb - jnp.dot(atb_l, w)            # Schur complement
+    n1 = n_inv + jnp.outer(w, w) / s
+    n2 = -w / s
+    ek = jnp.zeros_like(atb).at[k].set(1.0)
+    out = (
+        n1 * jnp.outer(mask, mask)
+        + jnp.outer(ek, n2 * mask)
+        + jnp.outer(n2 * mask, ek)
+        + jnp.outer(ek, ek) / s
+    )
+    return out.astype(jnp.float32)

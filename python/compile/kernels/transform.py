@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: fused ``|A @ C + U|`` — the (FT) feature transform.
+
+Test-time (Theorem 4.2) evaluation of a generator set G over a data tile:
+``A = O(X)`` holds the evaluations of the non-leading terms, ``C`` the
+coefficient matrix (one column per generator), and ``U`` the evaluations of
+the leading terms (LTC = 1).  The transformed features are the absolute
+generator values |g(x)| = |O(x)·c_g + u_g(x)| per Algorithm 2 / (FT).
+
+The matmul, the bias add, and the absolute value are fused in one kernel so
+the (M, G) intermediate never round-trips to HBM.  Grid walks (M, G) in
+MXU-aligned blocks with the full K (=L_PAD) contraction per step — for
+L_PAD ≤ 256 the K slab fits VMEM comfortably (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+M_BLOCK = 512
+G_BLOCK = 128
+
+
+def _transform_kernel(a_ref, c_ref, u_ref, out_ref):
+    """out = |a @ c + u| for one (M_BLOCK, G_BLOCK) output tile."""
+    acc = jnp.dot(
+        a_ref[...], c_ref[...], preferred_element_type=jnp.float32
+    )
+    out_ref[...] = jnp.abs(acc + u_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def transform(a, c, u):
+    """Fused feature transform over one row tile.
+
+    Args:
+      a: (M_TILE, L_PAD) float32 — evaluations of O over the tile.
+      c: (L_PAD, G_PAD)  float32 — generator coefficient matrix
+         (dead rows/columns zero-padded).
+      u: (M_TILE, G_PAD) float32 — leading-term evaluations.
+
+    Returns:
+      (M_TILE, G_PAD) float32 — |a @ c + u|.
+    """
+    m_tile, l_pad = a.shape
+    _, g_pad = c.shape
+    assert m_tile % M_BLOCK == 0 and g_pad % G_BLOCK == 0
+    grid = (m_tile // M_BLOCK, g_pad // G_BLOCK)
+    return pl.pallas_call(
+        _transform_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M_BLOCK, l_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((l_pad, G_BLOCK), lambda i, j: (0, j)),
+            pl.BlockSpec((M_BLOCK, G_BLOCK), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((M_BLOCK, G_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_tile, g_pad), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, c, u)

@@ -1,0 +1,111 @@
+"""L2 — JAX compute graph for the OAVI oracle, calling the L1 kernels.
+
+Four fixed-shape jitted functions make up the AOT surface consumed by the
+Rust runtime (see DESIGN.md §6 for the artifact contract):
+
+- ``gram_update``    : per-border-term column statistics over a row tile
+                       (calls the Pallas gram kernel).  Rust streams row
+                       tiles and accumulates partial sums ⇒ linear in m.
+- ``oracle_solve``   : IHB closed-form coefficients c = −N·A^Tb and the
+                       optimal residual m·MSE = b^Tb + c^T A^Tb.
+- ``ihb_update``     : Theorem 4.9 block-inverse append for the maintained
+                       N = (A^T A)^{-1} when a border term joins O.
+- ``transform``      : the (FT) feature map |A·C + U| (calls the Pallas
+                       transform kernel).
+
+Dead padding is handled with 0/1 masks so one artifact serves every live
+size ℓ ≤ L_PAD.  All functions are pure and shape-static, which is what
+lets ``aot.py`` lower them once to HLO text.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gram import gram_update as _gram_kernel
+from compile.kernels.rank1 import rank1_update as _rank1_kernel
+from compile.kernels.transform import transform as _transform_kernel
+
+
+def gram_update(a, b):
+    """Partial (A^T b, b^T b) over one (M_TILE, L_PAD) row tile.
+
+    Thin L2 wrapper over the L1 Pallas kernel; kept separate so the AOT
+    artifact boundary is a jax function, not a pallas_call.
+    """
+    return _gram_kernel(a, b)
+
+
+def oracle_solve(n_inv, atb, btb, mask):
+    """Closed-form IHB solution of Line 7 / (CCOP) warm start.
+
+    Args:
+      n_inv: (L, L) f32 — maintained (A^T A)^{-1}, garbage outside the live
+        block (the mask zeroes it out).
+      atb:   (L,) f32 — accumulated A^T b (live prefix, zero-padded).
+      btb:   ()  f32 — accumulated b^T b.
+      mask:  (L,) f32 — 1.0 on live coordinates, 0.0 on padding.
+
+    Returns:
+      c:     (L,) f32 — optimal coefficients −(A^TA)^{-1}A^Tb (0 on padding).
+      mse_m: ()  f32 — m·MSE(g, X) at the optimum: b^Tb + c^T A^Tb.
+    """
+    atb_l = atb * mask
+    c = -(jnp.dot(n_inv, atb_l)) * mask
+    mse_m = btb + jnp.dot(c, atb_l)
+    return c, mse_m
+
+
+def ihb_update(n_inv, atb, btb, mask, k):
+    """Theorem 4.9: (A^TA)^{-1} → ((A,b)^T(A,b))^{-1} in O(ℓ²).
+
+    ``k`` is the index of the appended column (one-hot encoded as an (L,)
+    f32 vector by the Rust caller so the artifact stays shape-static);
+    ``mask`` selects the previously-live block and must have mask·k == 0.
+
+    Returns the updated padded inverse.  Requires the Schur complement
+    s = b^Tb − b^TA N A^Tb > 0 (columns independent — guaranteed by OAVI's
+    construction; the Rust caller guards and falls back to a Cholesky
+    rebuild otherwise).
+    """
+    ek = k  # one-hot (L,)
+    atb_l = atb * mask
+    w = jnp.dot(n_inv, atb_l) * mask       # N A^T b
+    s = btb - jnp.dot(atb_l, w)            # Schur complement
+    inv_s = 1.0 / s
+    # two fused masked rank-1 passes (L1 Pallas kernel):
+    #   n1  = N ⊙ (mask maskᵀ) + (1/s)·w wᵀ
+    #   out = n1 ⊙ (1 1ᵀ)      + (1)·(e_k + w·(−1/s))(…)ᵀ …
+    # the border row/col and corner assemble from e_k and n2 = −w/s:
+    n1 = _rank1_kernel(n_inv, w, w, mask, mask, inv_s)
+    n2_plus_corner = ek * (0.5 * inv_s) - w * inv_s  # shared by row and col
+    ones = jnp.ones_like(mask)
+    out = _rank1_kernel(n1, ek, n2_plus_corner, ones, ones, jnp.float32(1.0))
+    out = _rank1_kernel(out, n2_plus_corner, ek, ones, ones, jnp.float32(1.0))
+    return out
+
+
+def transform(a, c, u):
+    """(FT) feature map over one row tile: |A·C + U| (Pallas kernel)."""
+    return _transform_kernel(a, c, u)
+
+
+# --- AOT entry points (return tuples — required by the HLO text bridge) ---
+
+def gram_update_aot(a, b):
+    atb, btb = gram_update(a, b)
+    return (atb, btb)
+
+
+def oracle_solve_aot(n_inv, atb, btb, mask):
+    c, mse_m = oracle_solve(n_inv, atb, btb, mask)
+    return (c, mse_m)
+
+
+def ihb_update_aot(n_inv, atb, btb, mask, k):
+    return (ihb_update(n_inv, atb, btb, mask, k),)
+
+
+def transform_aot(a, c, u):
+    return (transform(a, c, u),)

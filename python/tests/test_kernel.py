@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is THE
+core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gram import L_BLOCK, gram_update
+from compile.kernels.transform import G_BLOCK, M_BLOCK, transform
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape, dtype=np.float32, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- gram ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m_tiles=st.integers(min_value=1, max_value=4),
+    l_blocks=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_gram_update_matches_ref(m_tiles, l_blocks, seed, scale):
+    rng = np.random.default_rng(seed)
+    m, l = 8 * m_tiles, L_BLOCK * l_blocks
+    a = rand(rng, m, l, scale=scale)
+    b = rand(rng, m, scale=scale)
+    atb, btb = gram_update(a, b)
+    atb_r, btb_r = ref.gram_update_ref(a, b)
+    np.testing.assert_allclose(atb, atb_r, rtol=1e-5, atol=1e-5 * scale**2)
+    np.testing.assert_allclose(btb, btb_r, rtol=1e-5, atol=1e-5 * scale**2)
+
+
+def test_gram_update_zero_padding_is_inert():
+    """Zero-padded columns must yield exactly zero in A^T b."""
+    rng = np.random.default_rng(0)
+    a = np.zeros((16, L_BLOCK), np.float32)
+    a[:, :5] = rand(rng, 16, 5)
+    b = rand(rng, 16)
+    atb, _ = gram_update(a, b)
+    assert np.all(np.asarray(atb)[5:] == 0.0)
+
+
+def test_gram_update_accumulates_across_tiles():
+    """Summing per-tile partials equals the full-matrix product."""
+    rng = np.random.default_rng(1)
+    m, l, tiles = 32, L_BLOCK, 4
+    a = rand(rng, m * tiles, l)
+    b = rand(rng, m * tiles)
+    acc_atb = np.zeros(l, np.float32)
+    acc_btb = np.float32(0.0)
+    for t in range(tiles):
+        atb, btb = gram_update(a[t * m : (t + 1) * m], b[t * m : (t + 1) * m])
+        acc_atb += np.asarray(atb)
+        acc_btb += np.asarray(btb)
+    np.testing.assert_allclose(acc_atb, a.T @ b, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(acc_btb, b @ b, rtol=2e-5)
+
+
+def test_gram_update_dtype_is_f32():
+    rng = np.random.default_rng(2)
+    atb, btb = gram_update(rand(rng, 8, L_BLOCK), rand(rng, 8))
+    assert atb.dtype == jnp.float32 and btb.dtype == jnp.float32
+
+
+def test_gram_update_rejects_unaligned_l():
+    rng = np.random.default_rng(3)
+    with pytest.raises(AssertionError):
+        gram_update(rand(rng, 8, L_BLOCK + 1), rand(rng, 8))
+
+
+# ----------------------------------------------------------- transform ---
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mi=st.integers(min_value=1, max_value=2),
+    gi=st.integers(min_value=1, max_value=2),
+    l=st.sampled_from([16, 64, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_transform_matches_ref(mi, gi, l, seed):
+    rng = np.random.default_rng(seed)
+    m, g = M_BLOCK * mi, G_BLOCK * gi
+    a = rand(rng, m, l)
+    c = rand(rng, l, g)
+    u = rand(rng, m, g)
+    out = transform(a, c, u)
+    np.testing.assert_allclose(
+        out, ref.transform_ref(a, c, u), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_transform_output_nonnegative():
+    rng = np.random.default_rng(7)
+    out = transform(
+        rand(rng, M_BLOCK, 64), rand(rng, 64, G_BLOCK), rand(rng, M_BLOCK, G_BLOCK)
+    )
+    assert np.all(np.asarray(out) >= 0.0)
+
+
+def test_transform_identity_coeffs():
+    """C = I, U = 0 ⇒ output = |A| (padding-free sanity case)."""
+    rng = np.random.default_rng(8)
+    a = rand(rng, M_BLOCK, G_BLOCK)
+    c = np.eye(G_BLOCK, dtype=np.float32)
+    u = np.zeros((M_BLOCK, G_BLOCK), np.float32)
+    np.testing.assert_allclose(transform(a, c, u), np.abs(a), rtol=1e-6)
+
+
+# ------------------------------------------------------------- rank1 ---
+
+from compile.kernels.rank1 import rank1_update
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.sampled_from([8, 64, 128, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rank1_update_matches_numpy(l, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, l, l)
+    u = rand(rng, l)
+    v = rand(rng, l)
+    rm = (rng.uniform(size=l) > 0.3).astype(np.float32)
+    cm = (rng.uniform(size=l) > 0.3).astype(np.float32)
+    alpha = np.float32(rng.standard_normal())
+    out = rank1_update(a, u, v, rm, cm, alpha)
+    expect = a * np.outer(rm, cm) + alpha * np.outer(u, v)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_rank1_identity_masks_are_noop_with_zero_alpha():
+    rng = np.random.default_rng(3)
+    a = rand(rng, 64, 64)
+    ones = np.ones(64, np.float32)
+    zero = np.float32(0.0)
+    out = rank1_update(a, rand(rng, 64), rand(rng, 64), ones, ones, zero)
+    np.testing.assert_allclose(out, a, rtol=1e-7)

@@ -1,0 +1,124 @@
+"""L2 correctness: model functions vs numpy ground truth.
+
+oracle_solve must match the normal-equations solution (numpy lstsq);
+ihb_update must match a freshly inverted bordered Gram matrix — this is
+the Theorem 4.9 parity check at the python layer (the Rust layer repeats
+it against its own Cholesky).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def padded_problem(rng, m, l_live, l_pad):
+    """Random well-conditioned least-squares instance, zero-padded."""
+    a_live = rng.standard_normal((m, l_live)).astype(np.float32)
+    b = rng.standard_normal(m).astype(np.float32)
+    a = np.zeros((m, l_pad), np.float32)
+    a[:, :l_live] = a_live
+    gram = a_live.T @ a_live + 1e-4 * np.eye(l_live, dtype=np.float32)
+    n_inv = np.zeros((l_pad, l_pad), np.float32)
+    n_inv[:l_live, :l_live] = np.linalg.inv(gram)
+    atb = np.zeros(l_pad, np.float32)
+    atb[:l_live] = a_live.T @ b
+    mask = np.zeros(l_pad, np.float32)
+    mask[:l_live] = 1.0
+    return a_live, b, n_inv, atb, np.float32(b @ b), mask
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=20, max_value=200),
+    l_live=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_oracle_solve_matches_normal_equations(m, l_live, seed):
+    rng = np.random.default_rng(seed)
+    l_pad = 64
+    a_live, b, n_inv, atb, btb, mask = padded_problem(rng, m, l_live, l_pad)
+    c, mse_m = model.oracle_solve(n_inv, atb, btb, mask)
+    c = np.asarray(c)
+    # numpy ground truth: minimize ||A y + b||² ⇒ y = -lstsq(A, b)
+    y, *_ = np.linalg.lstsq(a_live, -b, rcond=None)
+    np.testing.assert_allclose(c[:l_live], y, rtol=2e-2, atol=2e-3)
+    assert np.all(c[l_live:] == 0.0)
+    resid = a_live @ c[:l_live] + b
+    np.testing.assert_allclose(
+        float(mse_m), float(resid @ resid), rtol=2e-2, atol=2e-3
+    )
+
+
+def test_oracle_solve_padding_garbage_is_ignored():
+    """Garbage in dead regions of N/Atb must not leak into the output."""
+    rng = np.random.default_rng(5)
+    l_pad = 64
+    a_live, b, n_inv, atb, btb, mask = padded_problem(rng, 50, 6, l_pad)
+    n_dirty = n_inv.copy()
+    n_dirty[6:, :] = 999.0
+    n_dirty[:, 6:] = 999.0
+    atb_dirty = atb.copy()
+    atb_dirty[6:] = -777.0
+    c0, m0 = model.oracle_solve(n_inv, atb, btb, mask)
+    c1, m1 = model.oracle_solve(n_dirty, atb_dirty, btb, mask)
+    np.testing.assert_allclose(np.asarray(c0)[:6], np.asarray(c1)[:6], rtol=1e-6)
+    np.testing.assert_allclose(float(m0), float(m1), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=30, max_value=150),
+    l_live=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ihb_update_matches_fresh_inverse(m, l_live, seed):
+    """Theorem 4.9: the O(ℓ²) block append equals inverting from scratch."""
+    rng = np.random.default_rng(seed)
+    l_pad = 64
+    a_live = rng.standard_normal((m, l_live)).astype(np.float32)
+    b = rng.standard_normal(m).astype(np.float32)
+    gram = (a_live.T @ a_live).astype(np.float32)
+    n_inv = np.zeros((l_pad, l_pad), np.float32)
+    n_inv[:l_live, :l_live] = np.linalg.inv(
+        gram + 1e-6 * np.eye(l_live, dtype=np.float32)
+    )
+    atb = np.zeros(l_pad, np.float32)
+    atb[:l_live] = a_live.T @ b
+    mask = np.zeros(l_pad, np.float32)
+    mask[:l_live] = 1.0
+    k_onehot = np.zeros(l_pad, np.float32)
+    k_onehot[l_live] = 1.0
+
+    out = np.asarray(
+        model.ihb_update(n_inv, atb, np.float32(b @ b), mask, k_onehot)
+    )
+    a_new = np.concatenate([a_live, b[:, None]], axis=1)
+    fresh = np.linalg.inv(
+        (a_new.T @ a_new) + 1e-6 * np.eye(l_live + 1, dtype=np.float32)
+    )
+    live = l_live + 1
+    np.testing.assert_allclose(out[:live, :live], fresh, rtol=5e-2, atol=5e-3)
+    # dead region must stay zero
+    assert np.all(out[live:, :] == 0.0) and np.all(out[:, live:] == 0.0)
+
+
+def test_ihb_update_ref_agrees_with_model():
+    rng = np.random.default_rng(11)
+    l_pad = 64
+    a_live, b, n_inv, atb, btb, mask = padded_problem(rng, 80, 9, l_pad)
+    k_onehot = np.zeros(l_pad, np.float32)
+    k_onehot[9] = 1.0
+    out_model = np.asarray(model.ihb_update(n_inv, atb, btb, mask, k_onehot))
+    out_ref = np.asarray(ref.ihb_update_ref(n_inv, atb, btb, mask, 9))
+    np.testing.assert_allclose(out_model, out_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_gram_update_wrapper_reexports_kernel():
+    rng = np.random.default_rng(12)
+    a = rng.standard_normal((8, 128)).astype(np.float32)
+    b = rng.standard_normal(8).astype(np.float32)
+    atb, btb = model.gram_update(a, b)
+    np.testing.assert_allclose(np.asarray(atb), a.T @ b, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(btb), float(b @ b), rtol=1e-5)

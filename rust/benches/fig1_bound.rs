@@ -1,0 +1,33 @@
+//! Figure 1: (left) the Theorem 4.3 bound on |G|+|O| vs ψ for several n;
+//! (right) theoretical bound vs empirical |G|+|O| for CGAVI on random
+//! data (ψ = 0.005), with the n⁴ guide line.
+
+use avi_scale::bench::figures::{fig1_bound_curves, fig1_empirical};
+use avi_scale::bench::report_figure;
+
+fn main() {
+    let psis: Vec<f64> = (0..12).map(|i| 10f64.powf(-0.5 - 0.35 * i as f64)).collect();
+    let left = fig1_bound_curves(&[1, 10, 50, 100, 250], &psis);
+    report_figure("fig1_left_bound_vs_psi", "psi*1e6", &{
+        // x column in csv-friendly form
+        let mut scaled = left.clone();
+        for s in &mut scaled {
+            for p in &mut s.points {
+                p.0 *= 1e6;
+            }
+        }
+        scaled
+    });
+
+    let m: usize = std::env::var("AVI_BENCH_M")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000); // paper: 10,000
+    let runs: usize = std::env::var("AVI_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3); // paper: 10
+    let right = fig1_empirical(m, &[1, 2, 3, 4, 5], 0.005, runs, 0xF1).expect("fig1 right");
+    report_figure("fig1_right_bound_vs_empirical", "n", &right);
+    println!("\nshape check: empirical |G|+|O| ≤ bound for every n (paper: slightly smaller)");
+}

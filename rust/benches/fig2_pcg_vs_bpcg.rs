@@ -1,0 +1,32 @@
+//! Figure 2: training time of PCGAVI vs BPCGAVI over the number of
+//! training samples (bank, htru, skin, synthetic; ψ = 0.005).
+//!
+//! Paper shape to check: BPCGAVI ≤ PCGAVI everywhere except possibly
+//! skin-like data.  Scale via AVI_BENCH_SCALE / AVI_BENCH_RUNS env vars.
+
+use avi_scale::bench::figures::{fig2_methods, training_time_sweep, SweepSpec};
+use avi_scale::bench::report_figure;
+
+fn main() {
+    let mut spec = SweepSpec::quick();
+    if let Ok(s) = std::env::var("AVI_BENCH_SCALE") {
+        spec.scale = s.parse().unwrap_or(spec.scale);
+    }
+    if let Ok(r) = std::env::var("AVI_BENCH_RUNS") {
+        spec.runs = r.parse().unwrap_or(spec.runs);
+    }
+    let blocks = training_time_sweep(&fig2_methods(), &spec).expect("sweep");
+    for (ds, series) in &blocks {
+        report_figure(&format!("fig2_{ds}"), "m", series);
+    }
+    // paper-shape summary: BPCGAVI vs PCGAVI at the largest m
+    println!("\nshape check (largest m):");
+    for (ds, series) in &blocks {
+        let pcg = series[0].points.last().unwrap().1;
+        let bpcg = series[1].points.last().unwrap().1;
+        println!(
+            "  {ds:<10} PCGAVI {pcg:.4}s  BPCGAVI {bpcg:.4}s  → {}",
+            if bpcg <= pcg { "BPCG faster (paper shape)" } else { "PCG faster (skin-like exception)" }
+        );
+    }
+}

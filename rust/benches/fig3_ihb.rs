@@ -1,0 +1,38 @@
+//! Figure 3: training time of BPCGAVI vs BPCGAVI-WIHB vs CGAVI-IHB over
+//! the number of training samples (ψ = 0.005).
+//!
+//! Paper shape: CGAVI-IHB < BPCGAVI-WIHB < BPCGAVI, and (synthetic) the
+//! training time is linear in m.
+
+use avi_scale::bench::figures::{fig3_methods, training_time_sweep, SweepSpec};
+use avi_scale::bench::report_figure;
+
+fn main() {
+    let mut spec = SweepSpec::quick();
+    if let Ok(s) = std::env::var("AVI_BENCH_SCALE") {
+        spec.scale = s.parse().unwrap_or(spec.scale);
+    }
+    if let Ok(r) = std::env::var("AVI_BENCH_RUNS") {
+        spec.runs = r.parse().unwrap_or(spec.runs);
+    }
+    let blocks = training_time_sweep(&fig3_methods(), &spec).expect("sweep");
+    for (ds, series) in &blocks {
+        report_figure(&format!("fig3_{ds}"), "m", series);
+    }
+    println!("\nshape check (largest m): expect CGAVI-IHB ≤ BPCGAVI-WIHB ≤ BPCGAVI");
+    for (ds, series) in &blocks {
+        let vals: Vec<(String, f64)> = series
+            .iter()
+            .map(|s| (s.name.clone(), s.points.last().unwrap().1))
+            .collect();
+        println!("  {ds:<10} {:?}", vals);
+    }
+    // linearity check on synthetic: time(m)/m roughly constant
+    if let Some((_, series)) = blocks.iter().find(|(d, _)| d == "synthetic") {
+        let ihb = series.iter().find(|s| s.name == "CGAVI-IHB").unwrap();
+        if ihb.points.len() >= 2 {
+            let per_m: Vec<f64> = ihb.points.iter().map(|&(m, t, _)| t / m).collect();
+            println!("  synthetic CGAVI-IHB time/m: {per_m:?} (≈constant ⇒ linear in m)");
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Figure 4: training times of CGAVI-IHB, BPCGAVI-WIHB, AGDAVI-IHB, ABM,
+//! and VCA over the number of training samples.
+//!
+//! Paper shape: ABM/VCA can win at small m but scale worse; the OAVI-IHB
+//! family is fastest at large m (linear in m).
+
+use avi_scale::bench::figures::{fig4_methods, training_time_sweep, SweepSpec};
+use avi_scale::bench::report_figure;
+
+fn main() {
+    let mut spec = SweepSpec::quick();
+    if let Ok(s) = std::env::var("AVI_BENCH_SCALE") {
+        spec.scale = s.parse().unwrap_or(spec.scale);
+    }
+    if let Ok(r) = std::env::var("AVI_BENCH_RUNS") {
+        spec.runs = r.parse().unwrap_or(spec.runs);
+    }
+    let blocks = training_time_sweep(&fig4_methods(), &spec).expect("sweep");
+    for (ds, series) in &blocks {
+        report_figure(&format!("fig4_{ds}"), "m", series);
+    }
+    println!("\nshape check: growth factor time(max m)/time(min m) per method");
+    for (ds, series) in &blocks {
+        print!("  {ds:<10}");
+        for s in series {
+            let first = s.points.first().unwrap().1.max(1e-9);
+            let last = s.points.last().unwrap().1;
+            print!(" {}={:.1}x", s.name, last / first);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,57 @@
+//! Micro: linalg substrate timings — Theorem 4.9 append (O(ℓ²)) vs
+//! Cholesky rebuild (O(ℓ³)), Jacobi eigen, and the gram_stats hot loop.
+
+use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::bench::{report_figure, Bencher, Series};
+use avi_scale::linalg::eigen::sym_eig;
+use avi_scale::linalg::gram::GramState;
+use avi_scale::util::rng::Rng;
+
+fn main() {
+    let bencher = Bencher::new(1, 7);
+    let mut rng = Rng::new(7);
+    let mut append_series = Series::new("thm4.9_append");
+    let mut rebuild_series = Series::new("cholesky_rebuild");
+    let mut eig_series = Series::new("jacobi_eig");
+    for &ell in &[16usize, 32, 64, 128] {
+        let m = 2000;
+        let cols: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let newcol: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+        let gram = GramState::from_columns(&cols).unwrap();
+        let atb: Vec<f64> =
+            cols.iter().map(|c| avi_scale::linalg::dot(c, &newcol)).collect();
+        let btb = avi_scale::linalg::dot(&newcol, &newcol);
+
+        let stat = bencher.run("append", || {
+            let mut g = gram.clone();
+            g.append(&atb, btb).unwrap();
+            g
+        });
+        append_series.push_obs(ell as f64, &[stat.median_s]);
+
+        let stat = bencher.run("rebuild", || {
+            let mut g = gram.clone();
+            g.rebuild_inverse().unwrap();
+            g
+        });
+        rebuild_series.push_obs(ell as f64, &[stat.median_s]);
+
+        let b = gram.b().clone();
+        let stat = bencher.run("eig", || sym_eig(&b, 30).unwrap());
+        eig_series.push_obs(ell as f64, &[stat.median_s]);
+
+        let stat = bencher.run("gram_stats", || NativeBackend.gram_stats(&cols, &newcol));
+        println!(
+            "ell={ell:>4}: gram_stats {:.1}us ({:.2} GB/s effective)",
+            stat.median_s * 1e6,
+            (m * ell * 8) as f64 / stat.median_s / 1e9
+        );
+    }
+    report_figure(
+        "micro_linalg",
+        "ell",
+        &[append_series, rebuild_series, eig_series],
+    );
+    println!("shape check: append grows ~ell^2, rebuild ~ell^3 (appendix A claim)");
+}

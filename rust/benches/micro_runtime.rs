@@ -1,0 +1,76 @@
+//! Micro: native vs PJRT (AOT Pallas artifact) backends on the two hot
+//! paths — gram_stats and the (FT) transform.  Requires `make artifacts`;
+//! skips with a message otherwise.
+
+use std::sync::Arc;
+
+use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::bench::{report_figure, Bencher, Series};
+use avi_scale::linalg::dense::Matrix;
+use avi_scale::runtime::{PjrtRuntime, XlaBackend};
+use avi_scale::util::rng::Rng;
+
+fn main() {
+    let rt = match PjrtRuntime::load(std::path::Path::new("artifacts")) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!("SKIP micro_runtime: {e}");
+            return;
+        }
+    };
+    let xla = XlaBackend::new(rt);
+    let native = NativeBackend;
+    let bencher = Bencher::new(1, 5);
+    let mut rng = Rng::new(11);
+
+    let mut native_gram = Series::new("native_gram");
+    let mut xla_gram = Series::new("xla_gram");
+    for &m in &[4096usize, 16384, 65536] {
+        let ell = 32;
+        let cols: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+        let sn = bencher.run("native", || native.gram_stats(&cols, &b));
+        let sx = bencher.run("xla", || xla.gram_stats(&cols, &b));
+        println!(
+            "gram m={m:>6} ell={ell}: native {:>9.1}us  xla {:>9.1}us ({:.1}x)",
+            sn.median_s * 1e6,
+            sx.median_s * 1e6,
+            sx.median_s / sn.median_s
+        );
+        native_gram.push_obs(m as f64, &[sn.median_s]);
+        xla_gram.push_obs(m as f64, &[sx.median_s]);
+    }
+    report_figure("micro_runtime_gram", "m", &[native_gram, xla_gram]);
+
+    let mut native_tr = Series::new("native_transform");
+    let mut xla_tr = Series::new("xla_transform");
+    for &m in &[4096usize, 16384] {
+        let (ell, g) = (32usize, 24usize);
+        let cols: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let mut c = Matrix::zeros(ell, g);
+        let mut u = Matrix::zeros(m, g);
+        for j in 0..ell {
+            for k in 0..g {
+                c.set(j, k, rng.normal());
+            }
+        }
+        for i in 0..m {
+            for k in 0..g {
+                u.set(i, k, rng.normal());
+            }
+        }
+        let sn = bencher.run("native", || native.transform_abs(&cols, &c, &u));
+        let sx = bencher.run("xla", || xla.transform_abs(&cols, &c, &u));
+        println!(
+            "transform m={m:>6}: native {:>9.1}us  xla {:>9.1}us ({:.1}x)",
+            sn.median_s * 1e6,
+            sx.median_s * 1e6,
+            sx.median_s / sn.median_s
+        );
+        native_tr.push_obs(m as f64, &[sn.median_s]);
+        xla_tr.push_obs(m as f64, &[sx.median_s]);
+    }
+    report_figure("micro_runtime_transform", "m", &[native_tr, xla_tr]);
+}

@@ -1,0 +1,55 @@
+//! Micro: solver-family iteration counts and wall time on fixed Gram
+//! instances — the §4.3 story (BPCG vs PCG vs CG) at the oracle level.
+
+use avi_scale::bench::{Bencher, Series, report_figure};
+use avi_scale::linalg::gram::GramState;
+use avi_scale::solvers::{GramProblem, SolverKind, SolverParams};
+use avi_scale::util::rng::Rng;
+
+fn instance(rng: &mut Rng, m: usize, ell: usize) -> (GramState, Vec<f64>, f64) {
+    let cols: Vec<Vec<f64>> =
+        (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+    let b: Vec<f64> = (0..m).map(|_| rng.uniform() - 0.4).collect();
+    let gram = GramState::from_columns(&cols).unwrap();
+    let atb: Vec<f64> = cols.iter().map(|c| avi_scale::linalg::dot(c, &b)).collect();
+    let btb = avi_scale::linalg::dot(&b, &b);
+    (gram, atb, btb)
+}
+
+fn main() {
+    let bencher = Bencher::new(1, 7);
+    let mut rng = Rng::new(0xBEEF);
+    let mut time_series: Vec<Series> = Vec::new();
+    let solvers = [SolverKind::Cg, SolverKind::Pcg, SolverKind::Bpcg, SolverKind::Agd];
+    let mut per_solver: Vec<Series> =
+        solvers.iter().map(|s| Series::new(s.name())).collect();
+    for &ell in &[8usize, 16, 32, 64] {
+        let (gram, atb, btb) = instance(&mut rng, 500, ell);
+        let p = GramProblem { b: gram.b(), atb: &atb, btb, m: 500 };
+        // tight ball so FW variants actually iterate
+        let params = SolverParams { eps: 1e-8, max_iters: 20_000, radius: 0.5, psi: None };
+        for (si, solver) in solvers.iter().enumerate() {
+            let params = if *solver == SolverKind::Agd {
+                SolverParams { radius: 0.0, ..params }
+            } else {
+                params
+            };
+            let stat = bencher.run(&format!("{}_{ell}", solver.name()), || {
+                solver.solve(&p, &params)
+            });
+            let res = solver.solve(&p, &params);
+            println!(
+                "ell={ell:>3} {:<5} median {:>10.3}us  iters {:>6}  f {:.3e}  ({:?})",
+                solver.name(),
+                stat.median_s * 1e6,
+                res.iters,
+                res.f,
+                res.termination
+            );
+            per_solver[si].push_obs(ell as f64, &[stat.median_s]);
+        }
+    }
+    time_series.append(&mut per_solver);
+    report_figure("micro_solvers", "ell", &time_series);
+    println!("shape check: BPCG should need no more iterations than PCG on boundary problems");
+}

@@ -1,0 +1,67 @@
+//! Table 3: test error, hyperopt time, test time, |G|+|O|, degree, SPAR
+//! for CGAVI-IHB+SVM, AGDAVI-IHB+SVM, BPCGAVI-WIHB+SVM, ABM+SVM, VCA+SVM
+//! and the polynomial-kernel SVM across the six registry datasets.
+//!
+//! Scaled down by default (AVI_BENCH_SCALE / AVI_BENCH_SPLITS to grow).
+
+use avi_scale::baselines::abm::AbmConfig;
+use avi_scale::baselines::vca::VcaConfig;
+use avi_scale::coordinator::pool::ThreadPool;
+use avi_scale::data::load_registry_dataset;
+use avi_scale::oavi::OaviConfig;
+use avi_scale::pipeline::report::{format_table, run_cell, Method, Protocol};
+use avi_scale::pipeline::GeneratorMethod;
+
+fn main() {
+    let scale: f64 = std::env::var("AVI_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.015);
+    let splits: usize = std::env::var("AVI_BENCH_SPLITS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2); // paper: 10
+    let methods = [
+        Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005))),
+        Method::Generator(GeneratorMethod::Oavi(OaviConfig::agdavi_ihb(0.005))),
+        Method::Generator(GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.005))),
+        Method::Generator(GeneratorMethod::Abm(AbmConfig::new(0.005))),
+        Method::Generator(GeneratorMethod::Vca(VcaConfig::new(0.005))),
+        Method::KernelSvm,
+    ];
+    let pool = ThreadPool::default_size();
+    let mut cells = Vec::new();
+    for name in ["bank", "credit", "htru", "seeds", "skin", "spam"] {
+        let ds = load_registry_dataset(name, scale, 9).expect("dataset");
+        let protocol = Protocol {
+            n_splits: splits,
+            cv_folds: 3,
+            psis: &[0.01, 0.005],
+            lambdas: &[1e-2, 1e-3],
+            ..Default::default()
+        };
+        for method in methods {
+            let cell = run_cell(method, &ds, &protocol, &pool).expect("cell");
+            println!(
+                "[done] {:<22} {:<8} err={:.2}% hyper={:.2}s",
+                cell.method,
+                cell.dataset,
+                cell.error_mean * 100.0,
+                cell.hyper_secs
+            );
+            cells.push(cell);
+        }
+    }
+    println!("\n{}", format_table(&cells));
+    let rows: Vec<Vec<f64>> = cells
+        .iter()
+        .map(|c| {
+            vec![c.error_mean, c.error_std, c.hyper_secs, c.test_secs, c.size, c.degree, c.spar]
+        })
+        .collect();
+    let _ = avi_scale::data::csvio::write_csv(
+        std::path::Path::new("target/bench_results/table3.csv"),
+        &["error_mean", "error_std", "hyper_secs", "test_secs", "size", "degree", "spar"],
+        &rows,
+    );
+}

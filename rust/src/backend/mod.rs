@@ -1,0 +1,167 @@
+//! Compute backends for the O(m·ℓ) streaming hot path.
+//!
+//! OAVI touches the full data set only through two operations:
+//!
+//! 1. **gram_stats** — `(Aᵀb, bᵀb)` for a candidate column b (per border
+//!    term; the dominant training cost), and
+//! 2. **transform** — the (FT) feature map `|A·C + U|` (test time).
+//!
+//! [`NativeBackend`] implements both in plain Rust (f64) and is the
+//! correctness reference.  [`crate::runtime::XlaBackend`] dispatches to the
+//! AOT-compiled Pallas artifacts via PJRT (f32, tiled to the artifact
+//! shapes) and must agree with the native path within f32 tolerance —
+//! enforced by `rust/tests/runtime_parity.rs`.
+
+use crate::linalg::dense::Matrix;
+use crate::linalg::dot;
+
+/// Streaming compute abstraction over the per-sample hot loops.
+///
+/// Deliberately NOT `Send`/`Sync`: the `xla` crate's PJRT handles are
+/// `Rc`-based.  Cross-thread parallelism in this codebase happens at the
+/// job level (one backend per worker), never by sharing a backend.
+pub trait ComputeBackend {
+    /// `(Aᵀb, bᵀb)` where A's columns are `cols` and b is `b_col`.
+    fn gram_stats(&self, cols: &[Vec<f64>], b_col: &[f64]) -> (Vec<f64>, f64);
+
+    /// `|A·C + U|` where A is m×ℓ (columns `cols`), C is ℓ×g, U is m×g.
+    /// Row-major output m×g.
+    fn transform_abs(&self, cols: &[Vec<f64>], c: &Matrix, u: &Matrix) -> Matrix;
+
+    /// Human-readable backend name (for logs/benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Plain-Rust reference backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn gram_stats(&self, cols: &[Vec<f64>], b_col: &[f64]) -> (Vec<f64>, f64) {
+        // Perf pass #2 (EXPERIMENTS.md §Perf): for DRAM-resident columns,
+        // process four at a time so each pass over the (cache-missing) b
+        // column amortizes across four dot products — b traffic drops 4×.
+        // For cache-resident m the simple vectorized dot is faster, so the
+        // blocked path only kicks in past the last-level-cache scale.
+        let m = b_col.len();
+        const BLOCK_THRESHOLD_BYTES: usize = 4 << 20; // ~LLC slice
+        if m * std::mem::size_of::<f64>() < BLOCK_THRESHOLD_BYTES {
+            let atb: Vec<f64> = cols.iter().map(|c| dot(c, b_col)).collect();
+            return (atb, dot(b_col, b_col));
+        }
+        let mut atb = vec![0.0f64; cols.len()];
+        let mut j = 0;
+        while j + 4 <= cols.len() {
+            let (c0, c1, c2, c3) = (&cols[j], &cols[j + 1], &cols[j + 2], &cols[j + 3]);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for i in 0..m {
+                let bi = b_col[i];
+                s0 += c0[i] * bi;
+                s1 += c1[i] * bi;
+                s2 += c2[i] * bi;
+                s3 += c3[i] * bi;
+            }
+            atb[j] = s0;
+            atb[j + 1] = s1;
+            atb[j + 2] = s2;
+            atb[j + 3] = s3;
+            j += 4;
+        }
+        for (jj, c) in cols.iter().enumerate().skip(j) {
+            atb[jj] = dot(c, b_col);
+        }
+        (atb, dot(b_col, b_col))
+    }
+
+    fn transform_abs(&self, cols: &[Vec<f64>], c: &Matrix, u: &Matrix) -> Matrix {
+        let m = u.rows();
+        let g = u.cols();
+        debug_assert_eq!(c.rows(), cols.len());
+        debug_assert_eq!(c.cols(), g);
+        let mut out = u.clone();
+        // out += A @ C, column-of-A major: cache-friendly over the long m axis
+        for (j, col) in cols.iter().enumerate() {
+            let crow = c.row(j);
+            for i in 0..m {
+                let a_ij = col[i];
+                if a_ij == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for (o, ck) in orow.iter_mut().zip(crow.iter()) {
+                    *o += a_ij * ck;
+                }
+            }
+        }
+        for v in out.data_mut().iter_mut() {
+            *v = v.abs();
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{all_close, property};
+
+    #[test]
+    fn gram_stats_matches_definition() {
+        property(16, |rng| {
+            let m = 10 + rng.below(40);
+            let ell = 1 + rng.below(6);
+            let cols: Vec<Vec<f64>> =
+                (0..ell).map(|_| (0..m).map(|_| rng.normal()).collect()).collect();
+            let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let (atb, btb) = NativeBackend.gram_stats(&cols, &b);
+            let expect: Vec<f64> = cols.iter().map(|c| dot(c, &b)).collect();
+            all_close(&atb, &expect, 1e-12, "atb")?;
+            crate::util::proptest::close(btb, dot(&b, &b), 1e-12, "btb")
+        });
+    }
+
+    #[test]
+    fn transform_matches_manual() {
+        property(16, |rng| {
+            let m = 5 + rng.below(20);
+            let ell = 1 + rng.below(4);
+            let g = 1 + rng.below(4);
+            let cols: Vec<Vec<f64>> =
+                (0..ell).map(|_| (0..m).map(|_| rng.normal()).collect()).collect();
+            let mut c = Matrix::zeros(ell, g);
+            let mut u = Matrix::zeros(m, g);
+            for i in 0..ell {
+                for j in 0..g {
+                    c.set(i, j, rng.normal());
+                }
+            }
+            for i in 0..m {
+                for j in 0..g {
+                    u.set(i, j, rng.normal());
+                }
+            }
+            let out = NativeBackend.transform_abs(&cols, &c, &u);
+            for i in 0..m {
+                for j in 0..g {
+                    let mut v = u.get(i, j);
+                    for (k, col) in cols.iter().enumerate() {
+                        v += col[i] * c.get(k, j);
+                    }
+                    if (out.get(i, j) - v.abs()).abs() > 1e-10 {
+                        return Err(format!("({i},{j}): {} vs {}", out.get(i, j), v.abs()));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn backend_name() {
+        assert_eq!(NativeBackend.name(), "native");
+    }
+}

@@ -1,0 +1,8 @@
+//! Baseline generator-constructing algorithms from the paper's §1.2/§6:
+//! ABM (monomial-aware, SVD-based) and VCA (monomial-agnostic).
+
+pub mod abm;
+pub mod vca;
+
+pub use abm::{Abm, AbmConfig};
+pub use vca::{Vca, VcaConfig, VcaModel};

@@ -1,0 +1,449 @@
+//! Vanishing Component Analysis (Livni et al. 2013) — the paper's
+//! monomial-agnostic baseline.
+//!
+//! VCA constructs polynomials as linear combinations of *polynomials*
+//! (not monomials): per degree d, candidates are products of F₁ × F_{d−1}
+//! entries, projected against the span of all non-vanishing polynomials
+//! so far, then eigendecomposed; small-eigenvalue directions become
+//! vanishing components, the rest are normalized to unit evaluation norm
+//! and join F_d.  Polynomials are stored as an op-DAG ([`VcaNode`]) so
+//! they can be evaluated on unseen data (transform/test time).
+//!
+//! The spurious-vanishing problem the paper discusses (§1.2, Table 3's
+//! spam row) is inherent to this normalization and intentionally left in.
+
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+use crate::linalg::dot;
+use crate::linalg::eigen::sym_eig;
+use crate::oavi::driver::FitStats;
+use crate::util::timer::Timer;
+
+/// One node of the polynomial DAG.
+#[derive(Clone, Debug)]
+pub enum VcaNode {
+    /// constant-1 polynomial.
+    One,
+    /// input feature x_j.
+    Feature(usize),
+    /// pointwise product of two earlier nodes.
+    Product(usize, usize),
+    /// Σ w_i · node_i.
+    LinComb(Vec<(f64, usize)>),
+}
+
+/// VCA configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct VcaConfig {
+    /// vanishing parameter ψ (MSE of the *unnormalized* component).
+    pub psi: f64,
+    pub max_degree: u32,
+    /// cap on candidates per degree (guards the combinatorial blow-up the
+    /// paper observes on spam; overflow is truncated deterministically).
+    pub max_candidates: usize,
+}
+
+impl VcaConfig {
+    pub fn new(psi: f64) -> Self {
+        VcaConfig { psi, max_degree: 12, max_candidates: 3_000 }
+    }
+}
+
+/// Fitted VCA model.
+#[derive(Clone, Debug)]
+pub struct VcaModel {
+    nodes: Vec<VcaNode>,
+    /// vanishing components (node ids) — the generators.
+    pub vanishing: Vec<usize>,
+    /// per-degree non-vanishing components (node ids) — the F sets.
+    pub f_sets: Vec<Vec<usize>>,
+    /// degree of each node (parallel to `nodes`).
+    degrees: Vec<u32>,
+    pub stats: FitStats,
+}
+
+impl VcaModel {
+    /// |V| + Σ_d |F_d| — the paper's |G|+|O| analogue for VCA.
+    pub fn total_size(&self) -> usize {
+        self.vanishing.len() + self.f_sets.iter().map(|f| f.len()).sum::<usize>()
+    }
+
+    pub fn n_generators(&self) -> usize {
+        self.vanishing.len()
+    }
+
+    /// Average degree of the vanishing components (Table 3 "Degree").
+    pub fn avg_degree(&self) -> f64 {
+        if self.vanishing.is_empty() {
+            return 0.0;
+        }
+        self.vanishing.iter().map(|&i| self.degrees[i] as f64).sum::<f64>()
+            / self.vanishing.len() as f64
+    }
+
+    /// (SPAR) over the LinComb coefficients of the vanishing components.
+    pub fn sparsity(&self) -> f64 {
+        let (mut gz, mut ge) = (0usize, 0usize);
+        for &v in &self.vanishing {
+            if let VcaNode::LinComb(terms) = &self.nodes[v] {
+                ge += terms.len();
+                gz += terms.iter().filter(|(w, _)| *w == 0.0).count();
+            }
+        }
+        if ge == 0 {
+            0.0
+        } else {
+            gz as f64 / ge as f64
+        }
+    }
+
+    /// Evaluate every node over `x` (memoized DAG walk).
+    fn eval_nodes(&self, x: &Matrix) -> Vec<Vec<f64>> {
+        let m = x.rows();
+        let mut vals: Vec<Vec<f64>> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let v = match node {
+                VcaNode::One => vec![1.0; m],
+                VcaNode::Feature(j) => x.col(*j),
+                VcaNode::Product(a, b) => {
+                    let (va, vb) = (&vals[*a], &vals[*b]);
+                    (0..m).map(|i| va[i] * vb[i]).collect()
+                }
+                VcaNode::LinComb(terms) => {
+                    let mut out = vec![0.0; m];
+                    for (w, idx) in terms {
+                        if *w == 0.0 {
+                            continue;
+                        }
+                        let src = &vals[*idx];
+                        for (o, s) in out.iter_mut().zip(src.iter()) {
+                            *o += w * s;
+                        }
+                    }
+                    out
+                }
+            };
+            vals.push(v);
+        }
+        vals
+    }
+
+    /// |g(x)| for every vanishing component — the (FT) feature block.
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let vals = self.eval_nodes(x);
+        let m = x.rows();
+        let mut out = Matrix::zeros(m, self.vanishing.len());
+        for (gi, &nid) in self.vanishing.iter().enumerate() {
+            for i in 0..m {
+                out.set(i, gi, vals[nid][i].abs());
+            }
+        }
+        out
+    }
+
+    /// MSE of every vanishing component on `x`.
+    pub fn mse_on(&self, x: &Matrix) -> Vec<f64> {
+        let vals = self.eval_nodes(x);
+        let m = x.rows() as f64;
+        self.vanishing
+            .iter()
+            .map(|&nid| vals[nid].iter().map(|v| v * v).sum::<f64>() / m)
+            .collect()
+    }
+}
+
+/// The VCA algorithm.
+pub struct Vca {
+    config: VcaConfig,
+}
+
+impl Vca {
+    pub fn new(config: VcaConfig) -> Self {
+        Vca { config }
+    }
+
+    pub fn fit(&self, x: &Matrix) -> Result<VcaModel> {
+        let cfg = self.config;
+        let timer = Timer::start();
+        let m = x.rows();
+        let n = x.cols();
+        if m == 0 || n == 0 {
+            return Err(AviError::Data("VCA fit: empty data".into()));
+        }
+
+        let mut nodes: Vec<VcaNode> = Vec::new();
+        let mut degrees: Vec<u32> = Vec::new();
+        let mut evals: Vec<Vec<f64>> = Vec::new(); // training evaluations per node
+        let push =
+            |nodes: &mut Vec<VcaNode>, degrees: &mut Vec<u32>, evals: &mut Vec<Vec<f64>>,
+             node: VcaNode, deg: u32, ev: Vec<f64>| {
+                nodes.push(node);
+                degrees.push(deg);
+                evals.push(ev);
+                nodes.len() - 1
+            };
+
+        let one = push(&mut nodes, &mut degrees, &mut evals, VcaNode::One, 0, vec![1.0; m]);
+        // f0 = 1/√m — unit-norm constant component
+        let inv_sqrt_m = 1.0 / (m as f64).sqrt();
+        let f0 = push(
+            &mut nodes,
+            &mut degrees,
+            &mut evals,
+            VcaNode::LinComb(vec![(inv_sqrt_m, one)]),
+            0,
+            vec![inv_sqrt_m; m],
+        );
+
+        // orthonormal basis of span(F): node ids whose eval vectors are
+        // orthonormal (f0 plus everything appended below)
+        let mut f_basis: Vec<usize> = vec![f0];
+        let mut f_sets: Vec<Vec<usize>> = vec![vec![f0]];
+        let mut vanishing: Vec<usize> = Vec::new();
+        let mut stats = FitStats::default();
+
+        for d in 1..=cfg.max_degree {
+            // ---- candidates
+            let mut cands: Vec<usize> = Vec::new();
+            if d == 1 {
+                for j in 0..n {
+                    let ev = x.col(j);
+                    let id = push(
+                        &mut nodes,
+                        &mut degrees,
+                        &mut evals,
+                        VcaNode::Feature(j),
+                        1,
+                        ev,
+                    );
+                    cands.push(id);
+                }
+            } else {
+                let f1 = f_sets[1].clone();
+                let fprev = f_sets[d as usize - 1].clone();
+                'outer: for &a in &f1 {
+                    for &b in &fprev {
+                        let ev: Vec<f64> =
+                            (0..m).map(|i| evals[a][i] * evals[b][i]).collect();
+                        let id = push(
+                            &mut nodes,
+                            &mut degrees,
+                            &mut evals,
+                            VcaNode::Product(a, b),
+                            d,
+                            ev,
+                        );
+                        cands.push(id);
+                        if cands.len() >= cfg.max_candidates {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            if cands.is_empty() {
+                break;
+            }
+            stats.degree_reached = d;
+            stats.oracle_calls += 1; // one eigendecomposition per degree
+
+            // ---- project against span(F)
+            let mut proj_ids: Vec<usize> = Vec::with_capacity(cands.len());
+            for &c in &cands {
+                let mut terms = vec![(1.0, c)];
+                let mut ev = evals[c].clone();
+                for &f in &f_basis {
+                    let w = dot(&evals[c], &evals[f]);
+                    if w != 0.0 {
+                        terms.push((-w, f));
+                        for (e, fe) in ev.iter_mut().zip(evals[f].iter()) {
+                            *e -= w * fe;
+                        }
+                    }
+                }
+                let id = push(
+                    &mut nodes,
+                    &mut degrees,
+                    &mut evals,
+                    VcaNode::LinComb(terms),
+                    d,
+                    ev,
+                );
+                proj_ids.push(id);
+            }
+
+            // ---- eigendecompose the candidate Gram
+            let k = proj_ids.len();
+            let mut gram = Matrix::zeros(k, k);
+            for i in 0..k {
+                for j in i..k {
+                    let v = dot(&evals[proj_ids[i]], &evals[proj_ids[j]]);
+                    gram.set(i, j, v);
+                    gram.set(j, i, v);
+                }
+            }
+            let eig = sym_eig(&gram, 40)?;
+
+            let mut new_f: Vec<usize> = Vec::new();
+            for (ei, &lam) in eig.values.iter().enumerate() {
+                let lam = lam.max(0.0);
+                let w_col = eig.vectors.col(ei);
+                // component p = Σ_j w_j · proj_j ; ‖p(X)‖² = λ
+                let mse = lam / m as f64;
+                if mse <= cfg.psi {
+                    let terms: Vec<(f64, usize)> = w_col
+                        .iter()
+                        .zip(proj_ids.iter())
+                        .map(|(w, &id)| (*w, id))
+                        .collect();
+                    let mut ev = vec![0.0; m];
+                    for (w, id) in &terms {
+                        for (e, s) in ev.iter_mut().zip(evals[*id].iter()) {
+                            *e += w * s;
+                        }
+                    }
+                    let id = push(
+                        &mut nodes,
+                        &mut degrees,
+                        &mut evals,
+                        VcaNode::LinComb(terms),
+                        d,
+                        ev,
+                    );
+                    vanishing.push(id);
+                } else {
+                    // normalize to unit evaluation norm → joins F_d
+                    let s = lam.sqrt();
+                    let terms: Vec<(f64, usize)> = w_col
+                        .iter()
+                        .zip(proj_ids.iter())
+                        .map(|(w, &id)| (*w / s, id))
+                        .collect();
+                    let mut ev = vec![0.0; m];
+                    for (w, id) in &terms {
+                        for (e, src) in ev.iter_mut().zip(evals[*id].iter()) {
+                            *e += w * src;
+                        }
+                    }
+                    let id = push(
+                        &mut nodes,
+                        &mut degrees,
+                        &mut evals,
+                        VcaNode::LinComb(terms),
+                        d,
+                        ev,
+                    );
+                    new_f.push(id);
+                }
+            }
+            f_basis.extend(new_f.iter().copied());
+            let stop = new_f.is_empty();
+            f_sets.push(new_f);
+            if stop {
+                break;
+            }
+        }
+
+        stats.wall_secs = timer.secs();
+        Ok(VcaModel { nodes, vanishing, f_sets, degrees, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn circle(m: usize, seed: u64) -> Matrix {
+        // unit circle scaled into [0,1]²: (x−.5)² + (y−.5)² = 0.16
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(m, 2);
+        for i in 0..m {
+            let th = rng.uniform() * std::f64::consts::TAU;
+            x.set(i, 0, 0.5 + 0.4 * th.cos());
+            x.set(i, 1, 0.5 + 0.4 * th.sin());
+        }
+        x
+    }
+
+    #[test]
+    fn finds_circle_generator() {
+        let x = circle(200, 1);
+        let model = Vca::new(VcaConfig::new(1e-6)).fit(&x).unwrap();
+        assert!(!model.vanishing.is_empty());
+        // must vanish out-of-sample
+        let fresh = circle(100, 2);
+        let best = model
+            .mse_on(&fresh)
+            .into_iter()
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < 1e-6, "best out-sample mse {best}");
+        // the circle relation is degree 2
+        assert!(model.avg_degree() >= 2.0);
+    }
+
+    #[test]
+    fn training_mse_respects_psi() {
+        let mut rng = Rng::new(3);
+        let mut x = Matrix::zeros(80, 3);
+        for i in 0..80 {
+            for j in 0..3 {
+                x.set(i, j, rng.uniform());
+            }
+        }
+        let psi = 0.02;
+        let model = Vca::new(VcaConfig::new(psi)).fit(&x).unwrap();
+        for mse in model.mse_on(&x) {
+            assert!(mse <= psi * (1.0 + 1e-6) + 1e-12, "training mse {mse} > ψ");
+        }
+    }
+
+    #[test]
+    fn transform_columns_match_generator_count() {
+        let x = circle(100, 4);
+        let model = Vca::new(VcaConfig::new(1e-4)).fit(&x).unwrap();
+        let t = model.transform(&x);
+        assert_eq!(t.cols(), model.n_generators());
+        assert_eq!(t.rows(), 100);
+        for v in t.data() {
+            assert!(*v >= 0.0);
+        }
+    }
+
+    #[test]
+    fn f_vectors_are_orthonormal_on_train() {
+        let x = circle(150, 5);
+        let model = Vca::new(VcaConfig::new(1e-5)).fit(&x).unwrap();
+        let vals = model.eval_nodes(&x);
+        let basis: Vec<usize> = model.f_sets.iter().flatten().copied().collect();
+        for (ai, &a) in basis.iter().enumerate() {
+            for &b in basis.iter().skip(ai) {
+                let d = dot(&vals[a], &vals[b]);
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!(
+                    (d - expect).abs() < 1e-6,
+                    "⟨f{a}, f{b}⟩ = {d}, expected {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn monomial_agnostic_feature_permutation_invariance() {
+        // VCA's output sizes are invariant to feature permutation
+        let x = circle(120, 6);
+        let model_a = Vca::new(VcaConfig::new(1e-5)).fit(&x).unwrap();
+        let mut xp = Matrix::zeros(120, 2);
+        for i in 0..120 {
+            xp.set(i, 0, x.get(i, 1));
+            xp.set(i, 1, x.get(i, 0));
+        }
+        let model_b = Vca::new(VcaConfig::new(1e-5)).fit(&xp).unwrap();
+        assert_eq!(model_a.n_generators(), model_b.n_generators());
+        assert_eq!(model_a.total_size(), model_b.total_size());
+    }
+
+    #[test]
+    fn empty_data_errors() {
+        assert!(Vca::new(VcaConfig::new(0.1)).fit(&Matrix::zeros(0, 2)).is_err());
+    }
+}

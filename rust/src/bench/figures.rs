@@ -1,0 +1,249 @@
+//! Paper-figure experiment runners, shared by `cargo bench` targets and
+//! the `examples/` drivers.  Each function regenerates the data series of
+//! one figure/table of the paper (same workloads, same protocol; sizes
+//! scaled by [`SweepSpec::scale`] so CI-class machines finish quickly —
+//! crank `scale`/`runs` up to approach the paper's full sweeps).
+
+use crate::baselines::abm::{Abm, AbmConfig};
+use crate::baselines::vca::{Vca, VcaConfig};
+use crate::bench::Series;
+use crate::data::{load_registry_dataset, Dataset};
+use crate::error::Result;
+use crate::oavi::{Oavi, OaviConfig};
+use crate::ordering::{order_features, FeatureOrdering};
+use crate::util::timer::Timer;
+
+/// Sweep protocol for the training-time figures (paper §6.3).
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// registry dataset names.
+    pub datasets: Vec<String>,
+    /// fractions of the (scaled) dataset to train on.
+    pub fractions: Vec<f64>,
+    /// repetitions per point (paper: 10).
+    pub runs: usize,
+    /// vanishing parameter (paper: 0.005).
+    pub psi: f64,
+    /// dataset scale multiplier vs the paper's full sizes.
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl SweepSpec {
+    /// Quick defaults: ~minutes on a laptop-class CPU.
+    pub fn quick() -> Self {
+        SweepSpec {
+            datasets: vec!["bank".into(), "htru".into(), "skin".into(), "synthetic".into()],
+            fractions: vec![0.25, 0.5, 0.75, 1.0],
+            runs: 3,
+            psi: 0.005,
+            scale: 0.02,
+            seed: 0xF16,
+        }
+    }
+}
+
+/// A generator-constructing algorithm under timing test.
+#[derive(Clone, Copy, Debug)]
+pub enum TimedMethod {
+    Oavi(OaviConfig),
+    Abm(AbmConfig),
+    Vca(VcaConfig),
+}
+
+impl TimedMethod {
+    pub fn name(&self) -> String {
+        match self {
+            TimedMethod::Oavi(c) => c.name(),
+            TimedMethod::Abm(_) => "ABM".into(),
+            TimedMethod::Vca(_) => "VCA".into(),
+        }
+    }
+
+    fn with_psi(&self, psi: f64) -> TimedMethod {
+        match *self {
+            TimedMethod::Oavi(mut c) => {
+                c.psi = psi;
+                TimedMethod::Oavi(c)
+            }
+            TimedMethod::Abm(mut c) => {
+                c.psi = psi;
+                TimedMethod::Abm(c)
+            }
+            TimedMethod::Vca(mut c) => {
+                c.psi = psi;
+                TimedMethod::Vca(c)
+            }
+        }
+    }
+
+    /// Fit once per class (the §6.3 protocol) and return wall seconds.
+    fn time_fit(&self, ds: &Dataset) -> Result<f64> {
+        let timer = Timer::start();
+        for k in 0..ds.n_classes {
+            let xk = ds.class_matrix(k);
+            match self {
+                TimedMethod::Oavi(cfg) => {
+                    Oavi::new(*cfg).fit(&xk)?;
+                }
+                TimedMethod::Abm(cfg) => {
+                    Abm::new(*cfg).fit(&xk)?;
+                }
+                TimedMethod::Vca(cfg) => {
+                    Vca::new(*cfg).fit(&xk)?;
+                }
+            }
+        }
+        Ok(timer.secs())
+    }
+}
+
+/// Training-time-vs-m sweep: one `(dataset, series-per-method)` block per
+/// dataset — the common engine behind Figures 2, 3 and 4.
+pub fn training_time_sweep(
+    methods: &[TimedMethod],
+    spec: &SweepSpec,
+) -> Result<Vec<(String, Vec<Series>)>> {
+    let mut out = Vec::new();
+    for ds_name in &spec.datasets {
+        let full = load_registry_dataset(ds_name, spec.scale, spec.seed)?;
+        // Pearson-order once (monomial-aware algorithms; §6.1)
+        let perm = order_features(&full.x, FeatureOrdering::Pearson);
+        let full = full.permute_features(&perm);
+        let mut series: Vec<Series> =
+            methods.iter().map(|m| Series::new(m.name())).collect();
+        for &frac in &spec.fractions {
+            let m_sub = ((full.len() as f64) * frac).round() as usize;
+            let sub = full.head(m_sub.max(40));
+            for (mi, method) in methods.iter().enumerate() {
+                let method = method.with_psi(spec.psi);
+                let mut times = Vec::with_capacity(spec.runs);
+                for _ in 0..spec.runs {
+                    times.push(method.time_fit(&sub)?);
+                }
+                series[mi].push_obs(sub.len() as f64, &times);
+            }
+        }
+        out.push((ds_name.clone(), series));
+    }
+    Ok(out)
+}
+
+/// Figure 2: PCGAVI vs BPCGAVI.
+pub fn fig2_methods() -> Vec<TimedMethod> {
+    vec![
+        TimedMethod::Oavi(OaviConfig::pcgavi(0.005)),
+        TimedMethod::Oavi(OaviConfig::bpcgavi(0.005)),
+    ]
+}
+
+/// Figure 3: BPCGAVI vs BPCGAVI-WIHB vs CGAVI-IHB.
+pub fn fig3_methods() -> Vec<TimedMethod> {
+    vec![
+        TimedMethod::Oavi(OaviConfig::bpcgavi(0.005)),
+        TimedMethod::Oavi(OaviConfig::bpcgavi_wihb(0.005)),
+        TimedMethod::Oavi(OaviConfig::cgavi_ihb(0.005)),
+    ]
+}
+
+/// Figure 4: CGAVI-IHB, BPCGAVI-WIHB, AGDAVI-IHB, ABM, VCA.
+pub fn fig4_methods() -> Vec<TimedMethod> {
+    vec![
+        TimedMethod::Oavi(OaviConfig::cgavi_ihb(0.005)),
+        TimedMethod::Oavi(OaviConfig::bpcgavi_wihb(0.005)),
+        TimedMethod::Oavi(OaviConfig::agdavi_ihb(0.005)),
+        TimedMethod::Abm(AbmConfig::new(0.005)),
+        TimedMethod::Vca(VcaConfig::new(0.005)),
+    ]
+}
+
+/// Figure 1 (left): the Theorem 4.3 bound as a function of ψ for several n.
+pub fn fig1_bound_curves(ns: &[usize], psis: &[f64]) -> Vec<Series> {
+    ns.iter()
+        .map(|&n| {
+            let mut s = Series::new(format!("n={n}"));
+            for &psi in psis {
+                let cfg = OaviConfig::cgavi_ihb(psi);
+                s.points.push((psi, cfg.size_bound(n), 0.0));
+            }
+            s
+        })
+        .collect()
+}
+
+/// Figure 1 (right): theoretical bound vs empirical |G|+|O| on random
+/// data (m samples, ψ fixed, n sweep), plus the paper's n⁴ guide line.
+pub fn fig1_empirical(
+    m: usize,
+    ns: &[usize],
+    psi: f64,
+    runs: usize,
+    seed: u64,
+) -> Result<Vec<Series>> {
+    use crate::util::rng::Rng;
+    let mut bound = Series::new("Theorem 4.3 bound");
+    let mut empirical = Series::new("CGAVI |G|+|O|");
+    let mut guide = Series::new("n^4");
+    let cfg = OaviConfig::cgavi_ihb(psi);
+    for &n in ns {
+        bound.points.push((n as f64, cfg.size_bound(n), 0.0));
+        guide.points.push((n as f64, (n as f64).powi(4), 0.0));
+        let mut sizes = Vec::with_capacity(runs);
+        for r in 0..runs {
+            let mut rng = Rng::new(seed ^ ((n as u64) << 8) ^ r as u64);
+            let mut x = crate::linalg::dense::Matrix::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    x.set(i, j, rng.uniform());
+                }
+            }
+            let model = Oavi::new(cfg).fit(&x)?;
+            sizes.push(model.total_size() as f64);
+        }
+        empirical.push_obs(n as f64, &sizes);
+    }
+    Ok(vec![bound, empirical, guide])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_produces_monotone_sizes() {
+        let spec = SweepSpec {
+            datasets: vec!["bank".into()],
+            fractions: vec![0.5, 1.0],
+            runs: 1,
+            psi: 0.01,
+            scale: 0.05,
+            seed: 1,
+        };
+        let blocks =
+            training_time_sweep(&[TimedMethod::Oavi(OaviConfig::cgavi_ihb(0.01))], &spec)
+                .unwrap();
+        assert_eq!(blocks.len(), 1);
+        let series = &blocks[0].1[0];
+        assert_eq!(series.points.len(), 2);
+        assert!(series.points[0].0 < series.points[1].0);
+    }
+
+    #[test]
+    fn fig1_bound_is_monotone_in_n_and_psi() {
+        let curves = fig1_bound_curves(&[2, 8], &[0.1, 0.01]);
+        // larger n ⇒ larger bound at the same ψ
+        assert!(curves[1].points[0].1 > curves[0].points[0].1);
+        // smaller ψ ⇒ larger bound at the same n
+        assert!(curves[0].points[1].1 > curves[0].points[0].1);
+    }
+
+    #[test]
+    fn fig1_empirical_below_bound() {
+        let series = fig1_empirical(300, &[2, 3], 0.05, 1, 3).unwrap();
+        let bound = &series[0];
+        let emp = &series[1];
+        for (b, e) in bound.points.iter().zip(emp.points.iter()) {
+            assert!(e.1 <= b.1, "empirical {} above bound {}", e.1, b.1);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Benchmark harness (criterion is unavailable in this offline
+//! environment; this is the crate's replacement).
+//!
+//! Two layers:
+//! * [`Bencher`] — warmup + repeated timing of a closure, reporting
+//!   median/p10/p90 (and writing CSV rows under `target/bench_results/`).
+//! * [`Series`] — named (x, y±σ) curves for the paper's figures, printed
+//!   as aligned tables plus a crude ASCII log-plot so `cargo bench`
+//!   output is directly comparable to the paper.
+
+pub mod figures;
+
+use std::path::PathBuf;
+
+use crate::data::csvio::write_csv;
+use crate::util::timer::Timer;
+use crate::util::{mean, median, std_dev};
+
+/// Repeat-timing harness.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+/// One timing result.
+#[derive(Clone, Debug)]
+pub struct BenchStat {
+    pub name: String,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, iters: 5 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters: iters.max(1) }
+    }
+
+    /// Time `f` and report stats.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStat {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            times.push(t.secs());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| times[((times.len() - 1) as f64 * q).round() as usize];
+        BenchStat {
+            name: name.to_string(),
+            median_s: median(&times),
+            p10_s: pick(0.1),
+            p90_s: pick(0.9),
+            iters: self.iters,
+        }
+    }
+}
+
+/// A named measurement series for figure reproduction: y(x) ± σ.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64, f64)>, // (x, mean, std)
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    /// Add a point from repeated observations.
+    pub fn push_obs(&mut self, x: f64, obs: &[f64]) {
+        self.points.push((x, mean(obs), std_dev(obs)));
+    }
+}
+
+/// Print a figure-style block: aligned table + ASCII log-log sketch, and
+/// write `target/bench_results/<id>.csv`.
+pub fn report_figure(id: &str, x_label: &str, series: &[Series]) {
+    println!("\n=== {id} ===");
+    // table
+    print!("{x_label:>12}");
+    for s in series {
+        print!(" {:>18}", s.name);
+    }
+    println!();
+    let xs: Vec<f64> = series
+        .first()
+        .map(|s| s.points.iter().map(|p| p.0).collect())
+        .unwrap_or_default();
+    for (i, x) in xs.iter().enumerate() {
+        print!("{x:>12.0}");
+        for s in series {
+            if let Some(&(_, m, sd)) = s.points.get(i) {
+                print!(" {:>10.4}±{:<7.4}", m, sd);
+            } else {
+                print!(" {:>18}", "-");
+            }
+        }
+        println!();
+    }
+    ascii_loglog(series);
+    // CSV
+    let mut header: Vec<String> = vec![x_label.to_string()];
+    for s in series {
+        header.push(format!("{}_mean", s.name));
+        header.push(format!("{}_std", s.name));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut rows = Vec::new();
+    for (i, x) in xs.iter().enumerate() {
+        let mut row = vec![*x];
+        for s in series {
+            if let Some(&(_, m, sd)) = s.points.get(i) {
+                row.push(m);
+                row.push(sd);
+            } else {
+                row.push(f64::NAN);
+                row.push(f64::NAN);
+            }
+        }
+        rows.push(row);
+    }
+    let path = PathBuf::from("target/bench_results").join(format!("{id}.csv"));
+    if let Err(e) = write_csv(&path, &header_refs, &rows) {
+        eprintln!("(csv write failed: {e})");
+    } else {
+        println!("[csv] {}", path.display());
+    }
+}
+
+/// Tiny ASCII log-log plot (good enough to eyeball slopes/crossovers).
+fn ascii_loglog(series: &[Series]) {
+    const W: usize = 64;
+    const H: usize = 16;
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|&(x, y, _)| (x, y)))
+        .filter(|&(x, y)| x > 0.0 && y > 0.0)
+        .collect();
+    if pts.len() < 2 {
+        return;
+    }
+    let (x0, x1) = pts.iter().fold((f64::MAX, f64::MIN), |(a, b), &(x, _)| {
+        (a.min(x.ln()), b.max(x.ln()))
+    });
+    let (y0, y1) = pts.iter().fold((f64::MAX, f64::MIN), |(a, b), &(_, y)| {
+        (a.min(y.ln()), b.max(y.ln()))
+    });
+    if x1 <= x0 || y1 <= y0 {
+        return;
+    }
+    let mut grid = vec![vec![' '; W]; H];
+    let marks = ['o', '+', 'x', '*', '#', '@', '%', '&'];
+    for (si, s) in series.iter().enumerate() {
+        for &(x, y, _) in &s.points {
+            if x <= 0.0 || y <= 0.0 {
+                continue;
+            }
+            let cx = (((x.ln() - x0) / (x1 - x0)) * (W - 1) as f64).round() as usize;
+            let cy = (((y.ln() - y0) / (y1 - y0)) * (H - 1) as f64).round() as usize;
+            grid[H - 1 - cy][cx] = marks[si % marks.len()];
+        }
+    }
+    println!("  (log-log sketch; {} )",
+        series
+            .iter()
+            .enumerate()
+            .map(|(i, s)| format!("{}={}", marks[i % marks.len()], s.name))
+            .collect::<Vec<_>>()
+            .join(", "));
+    for row in grid {
+        println!("  |{}", row.into_iter().collect::<String>());
+    }
+    println!("  +{}", "-".repeat(W));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_reports_ordered_percentiles() {
+        let b = Bencher::new(0, 7);
+        let stat = b.run("spin", || {
+            std::hint::black_box((0..2000).map(|i| i as f64).sum::<f64>())
+        });
+        assert!(stat.p10_s <= stat.median_s);
+        assert!(stat.median_s <= stat.p90_s);
+        assert_eq!(stat.iters, 7);
+        assert_eq!(stat.name, "spin");
+    }
+
+    #[test]
+    fn series_accumulates_stats() {
+        let mut s = Series::new("t");
+        s.push_obs(10.0, &[1.0, 2.0, 3.0]);
+        assert_eq!(s.points.len(), 1);
+        let (x, m, sd) = s.points[0];
+        assert_eq!(x, 10.0);
+        assert_eq!(m, 2.0);
+        assert!(sd > 0.9 && sd < 1.1);
+    }
+
+    #[test]
+    fn report_figure_writes_csv() {
+        let mut s = Series::new("algo");
+        s.push_obs(100.0, &[0.5]);
+        s.push_obs(1000.0, &[5.0]);
+        report_figure("unit_test_fig", "m", &[s]);
+        let path = std::path::Path::new("target/bench_results/unit_test_fig.csv");
+        assert!(path.exists());
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("algo_mean"));
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: thread-pool job scheduling for per-class / per-fold /
+//! per-grid-point fits, and a serving-style batched transform service.
+//!
+//! The paper's contribution is algorithmic, so the coordinator is a thin
+//! but real runtime layer (per the architecture contract): it owns worker
+//! lifecycles, request routing, batching, and metrics — Python never runs
+//! here.
+
+pub mod pool;
+pub mod router;
+pub mod service;
+
+pub use pool::ThreadPool;
+pub use router::ModelRouter;
+pub use service::{ServeMetrics, TransformService};

@@ -1,0 +1,167 @@
+//! A small scoped thread pool (tokio/rayon are unavailable offline; the
+//! std::thread::scope pattern is all the paper's workloads need).
+//!
+//! Jobs are `FnOnce() -> T`; results come back **in submission order**
+//! regardless of completion order — the invariant the coordinator property
+//! tests pin down (every job runs exactly once, order preserved).
+
+use std::sync::Mutex;
+
+/// Fixed-size scoped thread pool.
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// `workers` ≥ 1 (clamped).
+    pub fn new(workers: usize) -> Self {
+        ThreadPool { workers: workers.max(1) }
+    }
+
+    /// Reasonable default: available parallelism − 1, at least 1.
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        ThreadPool::new(n.saturating_sub(1).max(1))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run all jobs, returning results in submission order.
+    pub fn run_all<T: Send>(&self, jobs: Vec<Box<dyn FnOnce() -> T + Send>>) -> Vec<T> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // single worker or single job: run inline (no thread overhead)
+        if self.workers == 1 || n == 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let queue: Mutex<Vec<(usize, Box<dyn FnOnce() -> T + Send>)>> =
+            Mutex::new(jobs.into_iter().enumerate().rev().collect());
+        let results: Mutex<Vec<Option<T>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n) {
+                scope.spawn(|| loop {
+                    let job = queue.lock().expect("queue poisoned").pop();
+                    match job {
+                        Some((idx, f)) => {
+                            let out = f();
+                            results.lock().expect("results poisoned")[idx] = Some(out);
+                        }
+                        None => break,
+                    }
+                });
+            }
+        });
+        results
+            .into_inner()
+            .expect("results poisoned")
+            .into_iter()
+            .map(|r| r.expect("job dropped without result"))
+            .collect()
+    }
+
+    /// Map a slice through a function in parallel (convenience wrapper).
+    pub fn map<I: Sync, T: Send>(&self, items: &[I], f: impl Fn(&I) -> T + Sync) -> Vec<T> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let n = items.len();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(&items[i]);
+                    results.lock().expect("poisoned")[i] = Some(out);
+                });
+            }
+        });
+        results
+            .into_inner()
+            .expect("poisoned")
+            .into_iter()
+            .map(|r| r.expect("missing result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn results_in_submission_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..64usize)
+            .map(|i| {
+                Box::new(move || {
+                    // stagger completion order
+                    std::thread::sleep(std::time::Duration::from_micros((64 - i) as u64));
+                    i * i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let pool = ThreadPool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> =
+            vec![Box::new(|| 1), Box::new(|| 2)];
+        assert_eq!(pool.run_all(jobs), vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let pool = ThreadPool::new(3);
+        let out: Vec<u32> = pool.run_all(vec![]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_matches_serial() {
+        let pool = ThreadPool::new(3);
+        let items: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let par = pool.map(&items, |x| x * 2.0);
+        let ser: Vec<f64> = items.iter().map(|x| x * 2.0).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn property_every_job_runs_exactly_once() {
+        property(10, |rng| {
+            let n = rng.below(40) + 1;
+            let workers = rng.below(6) + 1;
+            let counter = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let pool = ThreadPool::new(workers);
+            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..n)
+                .map(|i| {
+                    let c = counter.clone();
+                    Box::new(move || {
+                        c.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        i
+                    }) as Box<dyn FnOnce() -> usize + Send>
+                })
+                .collect();
+            let out = pool.run_all(jobs);
+            if counter.load(std::sync::atomic::Ordering::SeqCst) != n {
+                return Err("some job ran != 1 times".into());
+            }
+            if out != (0..n).collect::<Vec<usize>>() {
+                return Err("order not preserved".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,217 @@
+//! Multi-model router: the vLLM-router-shaped piece of the coordinator.
+//!
+//! Production deployments serve *several* fitted pipelines at once (one
+//! per dataset / ψ working point / A-B arm).  The router owns one
+//! [`TransformService`] per registered model, routes each request by
+//! model key, and load-reports per model.  Routing invariants (pinned by
+//! the property tests below):
+//!
+//! 1. every accepted request is answered exactly once,
+//! 2. a request is only ever served by the model it named,
+//! 3. unknown keys are rejected synchronously (no silent drops),
+//! 4. per-model FIFO: two requests from one client to one model come
+//!    back in submission order (batching never reorders within a batch).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::service::{BatchPolicy, Response, TransformService};
+use crate::error::{AviError, Result};
+use crate::pipeline::PipelineModel;
+
+/// Per-model routing entry.
+struct Route {
+    service: TransformService,
+    requests: AtomicU64,
+}
+
+/// A keyed collection of serving pipelines.
+pub struct ModelRouter {
+    routes: HashMap<String, Route>,
+}
+
+impl ModelRouter {
+    pub fn new() -> Self {
+        ModelRouter { routes: HashMap::new() }
+    }
+
+    /// Register a fitted pipeline under `key` (replaces an existing
+    /// route with the same key; the old service drains on drop).
+    pub fn register(
+        &mut self,
+        key: impl Into<String>,
+        model: Arc<PipelineModel>,
+        policy: BatchPolicy,
+    ) {
+        let service = TransformService::start(model, policy);
+        self.routes
+            .insert(key.into(), Route { service, requests: AtomicU64::new(0) });
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.routes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+
+    /// Registered keys (sorted, deterministic).
+    pub fn keys(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.routes.keys().cloned().collect();
+        k.sort();
+        k
+    }
+
+    /// Route one request to the named model (blocking).
+    pub fn predict(&self, key: &str, row: Vec<f64>) -> Result<Response> {
+        let route = self
+            .routes
+            .get(key)
+            .ok_or_else(|| AviError::Coordinator(format!("unknown model '{key}'")))?;
+        route.requests.fetch_add(1, Ordering::Relaxed);
+        route.service.predict_blocking(row)
+    }
+
+    /// Route a batch of (key, row) pairs; results come back in input
+    /// order.  Rows for the same model are submitted together so the
+    /// per-model batcher can coalesce them.
+    pub fn predict_batch(&self, items: Vec<(String, Vec<f64>)>) -> Result<Vec<Response>> {
+        // group by key, remembering original positions
+        let mut by_key: HashMap<&str, Vec<(usize, Vec<f64>)>> = HashMap::new();
+        for (i, (key, row)) in items.iter().enumerate() {
+            by_key.entry(key.as_str()).or_default().push((i, row.clone()));
+        }
+        let mut out: Vec<Option<Response>> = vec![None; items.len()];
+        for (key, group) in by_key {
+            let route = self
+                .routes
+                .get(key)
+                .ok_or_else(|| AviError::Coordinator(format!("unknown model '{key}'")))?;
+            route
+                .requests
+                .fetch_add(group.len() as u64, Ordering::Relaxed);
+            let (idxs, rows): (Vec<usize>, Vec<Vec<f64>>) = group.into_iter().unzip();
+            let responses = route.service.predict_many(rows)?;
+            for (idx, resp) in idxs.into_iter().zip(responses) {
+                out[idx] = Some(resp);
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("answered")).collect())
+    }
+
+    /// (key, requests-served) load report.
+    pub fn load_report(&self) -> Vec<(String, u64)> {
+        let mut report: Vec<(String, u64)> = self
+            .routes
+            .iter()
+            .map(|(k, r)| (k.clone(), r.requests.load(Ordering::Relaxed)))
+            .collect();
+        report.sort();
+        report
+    }
+}
+
+impl Default for ModelRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::oavi::OaviConfig;
+    use crate::ordering::FeatureOrdering;
+    use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+    use crate::svm::linear::LinearSvmConfig;
+
+    fn model(psi: f64, seed: u64) -> Arc<PipelineModel> {
+        let ds = synthetic_dataset(300, seed);
+        let cfg = PipelineConfig {
+            method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(psi)),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        Arc::new(train_pipeline(&cfg, &ds).unwrap())
+    }
+
+    fn router() -> ModelRouter {
+        let mut r = ModelRouter::new();
+        r.register("tight", model(0.001, 1), BatchPolicy::default());
+        r.register("loose", model(0.05, 2), BatchPolicy::default());
+        r
+    }
+
+    #[test]
+    fn routes_by_key_and_rejects_unknown() {
+        let r = router();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.keys(), vec!["loose".to_string(), "tight".to_string()]);
+        let ds = synthetic_dataset(10, 3);
+        let row = ds.x.row(0).to_vec();
+        assert!(r.predict("tight", row.clone()).is_ok());
+        assert!(r.predict("nope", row).is_err());
+    }
+
+    #[test]
+    fn batch_preserves_input_order_across_models() {
+        let r = router();
+        let ds = synthetic_dataset(40, 4);
+        // interleave models
+        let items: Vec<(String, Vec<f64>)> = (0..40)
+            .map(|i| {
+                let key = if i % 2 == 0 { "tight" } else { "loose" };
+                (key.to_string(), ds.x.row(i).to_vec())
+            })
+            .collect();
+        let responses = r.predict_batch(items).unwrap();
+        assert_eq!(responses.len(), 40);
+        // per-model answers match direct submission
+        let direct_tight = r.predict("tight", ds.x.row(0).to_vec()).unwrap();
+        assert_eq!(responses[0].label, direct_tight.label);
+        let report = r.load_report();
+        // 20 batch + 1 direct for tight; 20 for loose
+        assert_eq!(report[0], ("loose".to_string(), 20));
+        assert_eq!(report[1], ("tight".to_string(), 21));
+    }
+
+    #[test]
+    fn replacing_a_route_keeps_serving() {
+        let mut r = router();
+        let ds = synthetic_dataset(10, 5);
+        let row = ds.x.row(0).to_vec();
+        let before = r.predict("tight", row.clone()).unwrap();
+        r.register("tight", model(0.001, 1), BatchPolicy::default());
+        let after = r.predict("tight", row).unwrap();
+        assert_eq!(before.label, after.label); // same training → same model
+    }
+
+    #[test]
+    fn property_exactly_once_under_concurrency() {
+        let r = std::sync::Arc::new(router());
+        let ds = synthetic_dataset(64, 6);
+        let answered = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let r = r.clone();
+                let ds = &ds;
+                let answered = &answered;
+                scope.spawn(move || {
+                    for i in 0..16 {
+                        let key = if (t + i) % 2 == 0 { "tight" } else { "loose" };
+                        let row = ds.x.row((t * 16 + i) % 64).to_vec();
+                        r.predict(key, row).unwrap();
+                        answered.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(answered.load(std::sync::atomic::Ordering::SeqCst), 64);
+        let total: u64 = r.load_report().iter().map(|(_, n)| n).sum();
+        assert_eq!(total, 64);
+    }
+}

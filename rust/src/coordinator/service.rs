@@ -1,0 +1,319 @@
+//! Serving-style transform service: clients submit feature rows, a
+//! batcher thread groups them (vLLM-router style — size- or
+//! deadline-triggered), runs the (FT) transform + SVM through the fitted
+//! pipeline, and answers each request exactly once.
+//!
+//! This is the request path the architecture contract cares about: the
+//! pipeline model wraps AOT PJRT executables (or the native backend) and
+//! no Python is anywhere near it.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+use crate::pipeline::PipelineModel;
+
+/// One inference request: a feature row + a oneshot response channel.
+struct Request {
+    row: Vec<f64>,
+    enqueued: Instant,
+    respond: Sender<Response>,
+}
+
+/// The answer to a request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub label: usize,
+    /// end-to-end latency as observed by the service.
+    pub latency: Duration,
+    /// how many requests shared the batch.
+    pub batch_size: usize,
+}
+
+/// Service counters.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub max_batch: AtomicU64,
+}
+
+/// Batched transform/predict service over a fitted pipeline.
+pub struct TransformService {
+    tx: Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    pub metrics: Arc<ServeMetrics>,
+    n_features: usize,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// flush when this many requests are pending…
+    pub max_batch: usize,
+    /// …or when the oldest pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+impl TransformService {
+    /// Spawn the batcher thread over a trained pipeline.
+    pub fn start(model: Arc<PipelineModel>, policy: BatchPolicy) -> Self {
+        let (tx, rx) = channel::<Request>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(ServeMetrics::default());
+        let n_features = model.perm.len();
+        let stop_c = stop.clone();
+        let metrics_c = metrics.clone();
+        let handle = std::thread::spawn(move || batcher_loop(model, rx, policy, stop_c, metrics_c));
+        TransformService { tx, handle: Some(handle), stop, metrics, n_features }
+    }
+
+    /// Submit a row; blocks until the prediction arrives.
+    pub fn predict_blocking(&self, row: Vec<f64>) -> Result<Response> {
+        if row.len() != self.n_features {
+            return Err(AviError::Coordinator(format!(
+                "feature length {} != {}",
+                row.len(),
+                self.n_features
+            )));
+        }
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { row, enqueued: Instant::now(), respond: rtx })
+            .map_err(|_| AviError::Coordinator("service stopped".into()))?;
+        rrx.recv().map_err(|_| AviError::Coordinator("response dropped".into()))
+    }
+
+    /// Fire-and-collect helper used by the demo/benches: submit many rows
+    /// from this thread, return all responses.
+    pub fn predict_many(&self, rows: Vec<Vec<f64>>) -> Result<Vec<Response>> {
+        let mut rxs = Vec::with_capacity(rows.len());
+        for row in rows {
+            if row.len() != self.n_features {
+                return Err(AviError::Coordinator("bad feature length".into()));
+            }
+            let (rtx, rrx) = channel();
+            self.tx
+                .send(Request { row, enqueued: Instant::now(), respond: rtx })
+                .map_err(|_| AviError::Coordinator("service stopped".into()))?;
+            rxs.push(rrx);
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| AviError::Coordinator("response dropped".into())))
+            .collect()
+    }
+
+    /// Graceful shutdown (drains pending requests first).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TransformService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    model: Arc<PipelineModel>,
+    rx: Receiver<Request>,
+    policy: BatchPolicy,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<ServeMetrics>,
+) {
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // drain whatever is available without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(req) => {
+                    pending.push(req);
+                    if pending.len() >= policy.max_batch {
+                        break;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    flush(&model, &mut pending, &metrics);
+                    return;
+                }
+            }
+        }
+        // Perf pass #1 (EXPERIMENTS.md §Perf): continuous batching.  Once
+        // the channel is drained, flush whatever accumulated — under
+        // sustained load the batch naturally grows to what arrived during
+        // the previous flush's processing; waiting out `max_wait` only
+        // added latency (p50 was pinned at the deadline).  `max_wait`
+        // remains as the recv_timeout pacing below.
+        if !pending.is_empty() {
+            flush(&model, &mut pending, &metrics);
+            continue;
+        }
+        if stop.load(Ordering::SeqCst) {
+            flush(&model, &mut pending, &metrics);
+            return;
+        }
+        if pending.is_empty() {
+            // block briefly for the next request
+            match rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(req) => pending.push(req),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+fn flush(model: &PipelineModel, pending: &mut Vec<Request>, metrics: &ServeMetrics) {
+    if pending.is_empty() {
+        return;
+    }
+    let batch: Vec<Request> = std::mem::take(pending);
+    let rows: Vec<Vec<f64>> = batch.iter().map(|r| r.row.clone()).collect();
+    let x = Matrix::from_rows(&rows).expect("uniform rows");
+    let labels = model.predict(&x);
+    let bsz = batch.len();
+    metrics.requests.fetch_add(bsz as u64, Ordering::Relaxed);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.max_batch.fetch_max(bsz as u64, Ordering::Relaxed);
+    for (req, label) in batch.into_iter().zip(labels.into_iter()) {
+        let _ = req.respond.send(Response {
+            label,
+            latency: req.enqueued.elapsed(),
+            batch_size: bsz,
+        });
+    }
+}
+
+/// Latency summary helper for the demo/benches.
+pub fn latency_percentiles(mut lat_us: Vec<f64>) -> (f64, f64, f64) {
+    if lat_us.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| lat_us[((lat_us.len() - 1) as f64 * q).round() as usize];
+    (pick(0.5), pick(0.95), pick(0.99))
+}
+
+/// Shared-state stress helper used by tests: submit from several threads.
+pub fn stress(service: &TransformService, rows: Vec<Vec<f64>>, threads: usize) -> Vec<usize> {
+    let rows = Arc::new(Mutex::new(rows));
+    let out = Arc::new(Mutex::new(Vec::new()));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let rows = rows.clone();
+            let out = out.clone();
+            let svc = &*service;
+            scope.spawn(move || loop {
+                let row = rows.lock().unwrap().pop();
+                match row {
+                    Some(r) => {
+                        let resp = svc.predict_blocking(r).expect("predict");
+                        out.lock().unwrap().push(resp.label);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    Arc::try_unwrap(out).unwrap().into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::oavi::OaviConfig;
+    use crate::ordering::FeatureOrdering;
+    use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+    use crate::svm::linear::LinearSvmConfig;
+
+    fn trained_model() -> Arc<PipelineModel> {
+        let ds = synthetic_dataset(300, 21);
+        let cfg = PipelineConfig {
+            method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        Arc::new(train_pipeline(&cfg, &ds).unwrap())
+    }
+
+    #[test]
+    fn serves_predictions_matching_offline_path() {
+        let model = trained_model();
+        let ds = synthetic_dataset(64, 22);
+        let offline = model.predict(&ds.x);
+        let svc = TransformService::start(model.clone(), BatchPolicy::default());
+        let rows: Vec<Vec<f64>> = (0..64).map(|i| ds.x.row(i).to_vec()).collect();
+        let responses = svc.predict_many(rows).unwrap();
+        let online: Vec<usize> = responses.iter().map(|r| r.label).collect();
+        assert_eq!(online, offline);
+        assert!(svc.metrics.requests.load(Ordering::Relaxed) == 64);
+        assert!(svc.metrics.batches.load(Ordering::Relaxed) >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batches_respect_cap() {
+        let model = trained_model();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) };
+        let svc = TransformService::start(model, policy);
+        let ds = synthetic_dataset(40, 23);
+        let rows: Vec<Vec<f64>> = (0..40).map(|i| ds.x.row(i).to_vec()).collect();
+        let responses = svc.predict_many(rows).unwrap();
+        for r in &responses {
+            assert!(r.batch_size <= 8, "batch {}", r.batch_size);
+        }
+        assert!(svc.metrics.max_batch.load(Ordering::Relaxed) <= 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered() {
+        let model = trained_model();
+        let svc = TransformService::start(model, BatchPolicy::default());
+        let ds = synthetic_dataset(60, 24);
+        let rows: Vec<Vec<f64>> = (0..60).map(|i| ds.x.row(i).to_vec()).collect();
+        let labels = stress(&svc, rows, 4);
+        assert_eq!(labels.len(), 60);
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 60);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_feature_length() {
+        let model = trained_model();
+        let svc = TransformService::start(model, BatchPolicy::default());
+        assert!(svc.predict_blocking(vec![0.0; 99]).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn percentiles() {
+        let (p50, p95, p99) = latency_percentiles(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(p50, 3.0);
+        assert_eq!(p95, 100.0);
+        assert_eq!(p99, 100.0);
+        assert_eq!(latency_percentiles(vec![]), (0.0, 0.0, 0.0));
+    }
+}

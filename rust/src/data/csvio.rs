@@ -1,0 +1,110 @@
+//! Minimal CSV I/O: load real datasets when available, dump results.
+//!
+//! Format: numeric columns, label (integer) in the last column, optional
+//! header row (auto-detected).  Used as the optional real-UCI path and by
+//! the bench harness for result series.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::data::scaling::minmax_scale_in_place;
+use crate::data::Dataset;
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+
+/// Load `<path>` as a dataset (label = last column, min-max scaled).
+pub fn load_csv_dataset(path: &Path, name: &str) -> Result<Dataset> {
+    let text = fs::read_to_string(path)?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut labels: Vec<i64> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
+        let parsed: std::result::Result<Vec<f64>, _> =
+            fields.iter().map(|f| f.parse::<f64>()).collect();
+        match parsed {
+            Ok(vals) if vals.len() >= 2 => {
+                let (label, feats) = vals.split_last().unwrap();
+                rows.push(feats.to_vec());
+                labels.push(label.round() as i64);
+            }
+            _ if lineno == 0 => continue, // header
+            _ => {
+                return Err(AviError::Data(format!(
+                    "{}: unparsable line {}",
+                    path.display(),
+                    lineno + 1
+                )))
+            }
+        }
+    }
+    if rows.is_empty() {
+        return Err(AviError::Data(format!("{}: no rows", path.display())));
+    }
+    // remap labels to 0..k
+    let mut uniq: Vec<i64> = labels.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let y: Vec<usize> = labels
+        .iter()
+        .map(|l| uniq.binary_search(l).unwrap())
+        .collect();
+    let mut x = Matrix::from_rows(&rows)?;
+    minmax_scale_in_place(&mut x);
+    Dataset::new(name, x, y, uniq.len())
+}
+
+/// Write a simple CSV (header + rows) — bench series output.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut f = fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let line: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_csv_dataset() {
+        let dir = std::env::temp_dir().join("avi_scale_csv_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.csv");
+        fs::write(&path, "a,b,label\n0.0,2.0,1\n1.0,4.0,0\n0.5,3.0,1\n").unwrap();
+        let ds = load_csv_dataset(&path, "toy").unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.n_features(), 2);
+        assert_eq!(ds.n_classes, 2);
+        assert_eq!(ds.y, vec![1, 0, 1]);
+        assert_eq!(ds.x.get(1, 0), 1.0); // scaled
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("avi_scale_csv_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        fs::write(&path, "h\nnot,numbers,here\n").unwrap();
+        assert!(load_csv_dataset(&path, "bad").is_err());
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join("avi_scale_csv_test3/nested");
+        let path = dir.join("out.csv");
+        write_csv(&path, &["x", "y"], &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("x,y\n1,2\n3,4\n"));
+    }
+}

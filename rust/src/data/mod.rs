@@ -1,0 +1,183 @@
+//! Datasets: the paper's Table 2 registry (simulated — see DESIGN.md §4/§5
+//! for the substitution rationale), the exact Appendix-C synthetic set,
+//! scaling, and splits.
+
+pub mod csvio;
+pub mod scaling;
+pub mod splits;
+pub mod synthetic;
+pub mod uci_sim;
+
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+
+/// A labelled classification dataset with features in [0,1]^n.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// m×n feature matrix.
+    pub x: Matrix,
+    /// class labels in {0, …, n_classes−1}, length m.
+    pub y: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Matrix, y: Vec<usize>, n_classes: usize) -> Result<Self> {
+        if x.rows() != y.len() {
+            return Err(AviError::Data(format!(
+                "rows {} != labels {}",
+                x.rows(),
+                y.len()
+            )));
+        }
+        if y.iter().any(|&c| c >= n_classes) {
+            return Err(AviError::Data("label out of range".into()));
+        }
+        Ok(Dataset { name: name.into(), x, y, n_classes })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Rows belonging to class k as a fresh matrix (Algorithm 2 Line 2).
+    pub fn class_matrix(&self, k: usize) -> Matrix {
+        let rows: Vec<Vec<f64>> = (0..self.len())
+            .filter(|&i| self.y[i] == k)
+            .map(|i| self.x.row(i).to_vec())
+            .collect();
+        Matrix::from_rows(&rows).expect("uniform row width")
+    }
+
+    /// Per-class sample counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &c in &self.y {
+            counts[c] += 1;
+        }
+        counts
+    }
+
+    /// Subset by row indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let rows: Vec<Vec<f64>> = idx.iter().map(|&i| self.x.row(i).to_vec()).collect();
+        let y: Vec<usize> = idx.iter().map(|&i| self.y[i]).collect();
+        Dataset {
+            name: self.name.clone(),
+            x: Matrix::from_rows(&rows).expect("uniform rows"),
+            y,
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// First `m` samples (after the dataset's canonical shuffle) — the
+    /// paper's "subsets of the full data set of varying sizes" (§6.3).
+    pub fn head(&self, m: usize) -> Dataset {
+        let idx: Vec<usize> = (0..m.min(self.len())).collect();
+        self.subset(&idx)
+    }
+
+    /// Reorder features by a permutation (Pearson ordering).
+    pub fn permute_features(&self, perm: &[usize]) -> Dataset {
+        assert_eq!(perm.len(), self.n_features());
+        let mut x = Matrix::zeros(self.len(), self.n_features());
+        for i in 0..self.len() {
+            for (new_j, &old_j) in perm.iter().enumerate() {
+                x.set(i, new_j, self.x.get(i, old_j));
+            }
+        }
+        Dataset { name: self.name.clone(), x, y: self.y.clone(), n_classes: self.n_classes }
+    }
+}
+
+/// The paper's Table 2 registry (plus `synthetic`).  `scale` ∈ (0,1]
+/// shrinks sample counts proportionally for quick runs.
+pub fn load_registry_dataset(name: &str, scale: f64, seed: u64) -> Result<Dataset> {
+    let scaled = |m: usize| ((m as f64 * scale).round() as usize).max(60);
+    match name {
+        "bank" => uci_sim::bank(scaled(1372), seed),
+        "credit" => uci_sim::credit(scaled(30_000), seed),
+        "htru" | "htru2" => uci_sim::htru(scaled(17_898), seed),
+        "seeds" => uci_sim::seeds(scaled(210), seed),
+        "skin" => uci_sim::skin(scaled(245_057), seed),
+        "spam" => uci_sim::spam(scaled(4_601), seed),
+        "synthetic" => Ok(synthetic::synthetic_dataset(scaled(2_000_000), seed)),
+        other => Err(AviError::Data(format!("unknown dataset '{other}'"))),
+    }
+}
+
+/// Names in the paper's Table 2 order.
+pub const REGISTRY: &[&str] = &["bank", "credit", "htru", "seeds", "skin", "spam", "synthetic"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_rows(&[
+            vec![0.1, 0.2],
+            vec![0.3, 0.4],
+            vec![0.5, 0.6],
+            vec![0.7, 0.8],
+        ])
+        .unwrap();
+        Dataset::new("toy", x, vec![0, 1, 0, 1], 2).unwrap()
+    }
+
+    #[test]
+    fn class_matrix_selects_rows() {
+        let ds = toy();
+        let c0 = ds.class_matrix(0);
+        assert_eq!(c0.rows(), 2);
+        assert_eq!(c0.row(1), &[0.5, 0.6]);
+        assert_eq!(ds.class_counts(), vec![2, 2]);
+    }
+
+    #[test]
+    fn subset_and_head() {
+        let ds = toy();
+        let s = ds.subset(&[3, 0]);
+        assert_eq!(s.y, vec![1, 0]);
+        assert_eq!(s.x.row(0), &[0.7, 0.8]);
+        assert_eq!(ds.head(2).len(), 2);
+    }
+
+    #[test]
+    fn permute_features_swaps_columns() {
+        let ds = toy();
+        let p = ds.permute_features(&[1, 0]);
+        assert_eq!(p.x.row(0), &[0.2, 0.1]);
+    }
+
+    #[test]
+    fn validation() {
+        let x = Matrix::zeros(3, 2);
+        assert!(Dataset::new("bad", x.clone(), vec![0, 1], 2).is_err());
+        assert!(Dataset::new("bad", x, vec![0, 5, 0], 2).is_err());
+    }
+
+    #[test]
+    fn registry_loads_small() {
+        for name in ["bank", "seeds"] {
+            let ds = load_registry_dataset(name, 0.1, 42).unwrap();
+            assert!(ds.len() >= 60, "{name}");
+            // all features in [0,1]
+            for v in ds.x.data() {
+                assert!((0.0..=1.0).contains(v), "{name}: {v}");
+            }
+        }
+        assert!(load_registry_dataset("nope", 1.0, 0).is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! Min-max feature scaling (paper §6.1: every dataset is scaled to [0,1]).
+//!
+//! In the pipeline the scaler is *fit on training data* and applied to
+//! test data with clamping to [0,1] — out-of-range test values would break
+//! the `X ⊆ [0,1]^n` assumption of Theorem 4.3.
+
+use crate::linalg::dense::Matrix;
+
+/// Per-feature (min, max) fitted on training data.
+#[derive(Clone, Debug)]
+pub struct MinMaxScaler {
+    mins: Vec<f64>,
+    maxs: Vec<f64>,
+}
+
+impl MinMaxScaler {
+    /// Fit on the rows of `x`.
+    pub fn fit(x: &Matrix) -> Self {
+        let n = x.cols();
+        let mut mins = vec![f64::INFINITY; n];
+        let mut maxs = vec![f64::NEG_INFINITY; n];
+        for i in 0..x.rows() {
+            for j in 0..n {
+                let v = x.get(i, j);
+                mins[j] = mins[j].min(v);
+                maxs[j] = maxs[j].max(v);
+            }
+        }
+        // constant features scale to 0
+        for j in 0..n {
+            if !mins[j].is_finite() {
+                mins[j] = 0.0;
+                maxs[j] = 1.0;
+            }
+        }
+        MinMaxScaler { mins, maxs }
+    }
+
+    /// Transform (clamped to [0,1]).
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let mut out = x.clone();
+        self.transform_in_place(&mut out);
+        out
+    }
+
+    pub fn transform_in_place(&self, x: &mut Matrix) {
+        let n = x.cols();
+        assert_eq!(n, self.mins.len());
+        for i in 0..x.rows() {
+            for j in 0..n {
+                let range = self.maxs[j] - self.mins[j];
+                let v = if range > 0.0 {
+                    (x.get(i, j) - self.mins[j]) / range
+                } else {
+                    0.0
+                };
+                x.set(i, j, v.clamp(0.0, 1.0));
+            }
+        }
+    }
+}
+
+/// One-shot scaling of a full matrix (dataset generators).
+pub fn minmax_scale_in_place(x: &mut Matrix) {
+    let scaler = MinMaxScaler::fit(x);
+    scaler.transform_in_place(x);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_to_unit_interval() {
+        let mut x = Matrix::from_rows(&[vec![-2.0, 10.0], vec![0.0, 20.0], vec![2.0, 15.0]])
+            .unwrap();
+        minmax_scale_in_place(&mut x);
+        assert_eq!(x.get(0, 0), 0.0);
+        assert_eq!(x.get(2, 0), 1.0);
+        assert_eq!(x.get(1, 1), 1.0);
+        assert_eq!(x.get(0, 1), 0.0);
+        assert!((x.get(2, 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn test_data_is_clamped() {
+        let train = Matrix::from_rows(&[vec![0.0], vec![10.0]]).unwrap();
+        let scaler = MinMaxScaler::fit(&train);
+        let test = Matrix::from_rows(&[vec![-5.0], vec![15.0], vec![5.0]]).unwrap();
+        let t = scaler.transform(&test);
+        assert_eq!(t.get(0, 0), 0.0);
+        assert_eq!(t.get(1, 0), 1.0);
+        assert_eq!(t.get(2, 0), 0.5);
+    }
+
+    #[test]
+    fn constant_feature_maps_to_zero() {
+        let train = Matrix::from_rows(&[vec![3.0], vec![3.0]]).unwrap();
+        let scaler = MinMaxScaler::fit(&train);
+        let t = scaler.transform(&train);
+        assert_eq!(t.get(0, 0), 0.0);
+        assert_eq!(t.get(1, 0), 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Train/test partitions and k-fold cross-validation (paper §6: ten
+//! random 60%/40% splits, 3-fold CV for hyperparameters).
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// A random train/test split.
+pub struct Split {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Shuffle and split: `train_frac` of samples go to train.
+pub fn train_test_split(ds: &Dataset, train_frac: f64, seed: u64) -> Split {
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let n_train = ((ds.len() as f64) * train_frac).round() as usize;
+    let n_train = n_train.clamp(1, ds.len().saturating_sub(1).max(1));
+    Split { train: ds.subset(&idx[..n_train]), test: ds.subset(&idx[n_train..]) }
+}
+
+/// k-fold CV index pairs (train_idx, val_idx) over `m` samples.
+pub fn kfold_indices(m: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && m >= k);
+    let mut idx: Vec<usize> = (0..m).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &sample) in idx.iter().enumerate() {
+        folds[i % k].push(sample);
+    }
+    (0..k)
+        .map(|f| {
+            let val = folds[f].clone();
+            let train: Vec<usize> = (0..k)
+                .filter(|&g| g != f)
+                .flat_map(|g| folds[g].iter().copied())
+                .collect();
+            (train, val)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::Matrix;
+
+    fn ds(m: usize) -> Dataset {
+        let rows: Vec<Vec<f64>> = (0..m).map(|i| vec![i as f64 / m as f64]).collect();
+        Dataset::new("t", Matrix::from_rows(&rows).unwrap(), vec![0; m], 1).unwrap()
+    }
+
+    #[test]
+    fn split_sizes_and_disjointness() {
+        let d = ds(100);
+        let s = train_test_split(&d, 0.6, 7);
+        assert_eq!(s.train.len(), 60);
+        assert_eq!(s.test.len(), 40);
+        // disjoint: every original value appears exactly once
+        let mut all: Vec<i64> = s
+            .train
+            .x
+            .data()
+            .iter()
+            .chain(s.test.x.data().iter())
+            .map(|v| (v * 100.0).round() as i64)
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn split_is_seeded() {
+        let d = ds(50);
+        let a = train_test_split(&d, 0.6, 1);
+        let b = train_test_split(&d, 0.6, 1);
+        assert_eq!(a.train.x.data(), b.train.x.data());
+        let c = train_test_split(&d, 0.6, 2);
+        assert_ne!(a.train.x.data(), c.train.x.data());
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let folds = kfold_indices(10, 3, 5);
+        assert_eq!(folds.len(), 3);
+        for (train, val) in &folds {
+            assert_eq!(train.len() + val.len(), 10);
+            let mut merged: Vec<usize> = train.iter().chain(val.iter()).copied().collect();
+            merged.sort_unstable();
+            assert_eq!(merged, (0..10).collect::<Vec<usize>>());
+        }
+        // every sample appears in exactly one validation fold
+        let mut vals: Vec<usize> = folds.iter().flat_map(|(_, v)| v.iter().copied()).collect();
+        vals.sort_unstable();
+        assert_eq!(vals, (0..10).collect::<Vec<usize>>());
+    }
+}

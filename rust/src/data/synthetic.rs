@@ -1,0 +1,100 @@
+//! The paper's synthetic dataset — Appendix C, implemented exactly.
+//!
+//! Two classes in [0,1]³:
+//! * class 1: points satisfying `x₁² + 0.01·x₂ + x₃² − 1 = 0`
+//! * class 2: points satisfying `x₁² + x₃² − 1.3 = 0`
+//!
+//! perturbed by additive N(0, 0.05²) noise, then min-max scaled to [0,1]³
+//! (the paper preprocesses every dataset that way, §6.1).
+
+use crate::data::scaling::minmax_scale_in_place;
+use crate::data::Dataset;
+use crate::linalg::dense::Matrix;
+use crate::util::rng::Rng;
+
+/// Sample a point on `x1² + a·x2 + x3² = c` with x1, x2 free in [0,1] and
+/// x3 solved (rejection on the radicand).
+fn sample_on_surface(rng: &mut Rng, a: f64, c: f64) -> [f64; 3] {
+    loop {
+        let x1 = rng.uniform();
+        let x2 = rng.uniform();
+        let rad = c - a * x2 - x1 * x1;
+        if rad >= 0.0 {
+            let x3 = rad.sqrt();
+            // keep the branch inside a sane box; the paper scales to [0,1]
+            // afterwards anyway
+            if x3 <= 1.3 {
+                return [x1, x2, x3];
+            }
+        }
+    }
+}
+
+/// Generate the Appendix-C synthetic dataset with `m` samples
+/// (≈ m/2 per class), noise σ = 0.05, min-max scaled.
+pub fn synthetic_dataset(m: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5e7e_71c0);
+    let mut x = Matrix::zeros(m, 3);
+    let mut y = Vec::with_capacity(m);
+    for i in 0..m {
+        let class = i % 2;
+        let p = if class == 0 {
+            sample_on_surface(&mut rng, 0.01, 1.0)
+        } else {
+            sample_on_surface(&mut rng, 0.0, 1.3)
+        };
+        for (j, pj) in p.iter().enumerate() {
+            x.set(i, j, pj + rng.normal_ms(0.0, 0.05));
+        }
+        y.push(class);
+    }
+    minmax_scale_in_place(&mut x);
+    Dataset { name: "synthetic".into(), x, y, n_classes: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_labels() {
+        let ds = synthetic_dataset(1000, 1);
+        assert_eq!(ds.len(), 1000);
+        assert_eq!(ds.n_features(), 3);
+        assert_eq!(ds.n_classes, 2);
+        let counts = ds.class_counts();
+        assert_eq!(counts[0], 500);
+        assert_eq!(counts[1], 500);
+    }
+
+    #[test]
+    fn features_in_unit_box() {
+        let ds = synthetic_dataset(500, 2);
+        for v in ds.x.data() {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+
+    #[test]
+    fn classes_lie_near_their_varieties_pre_scaling() {
+        // regenerate without scaling to check the defining equations
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let p = sample_on_surface(&mut rng, 0.01, 1.0);
+            let r = p[0] * p[0] + 0.01 * p[1] + p[2] * p[2] - 1.0;
+            assert!(r.abs() < 1e-12, "class-1 residual {r}");
+            let q = sample_on_surface(&mut rng, 0.0, 1.3);
+            let r2 = q[0] * q[0] + q[2] * q[2] - 1.3;
+            assert!(r2.abs() < 1e-12, "class-2 residual {r2}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = synthetic_dataset(100, 3);
+        let b = synthetic_dataset(100, 3);
+        assert_eq!(a.x.data(), b.x.data());
+        let c = synthetic_dataset(100, 4);
+        assert_ne!(a.x.data(), c.x.data());
+    }
+}

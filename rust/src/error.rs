@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by avi-scale.
+#[derive(Debug, Error)]
+pub enum AviError {
+    /// A linear-algebra precondition failed (singular matrix, dimension
+    /// mismatch, non-PSD Gram, …).
+    #[error("linear algebra error: {0}")]
+    Linalg(String),
+
+    /// The IHB Schur complement was non-positive — the appended column is
+    /// (numerically) in the span of the existing evaluation matrix.  OAVI
+    /// recovers by rebuilding the inverse via Cholesky with jitter.
+    #[error("IHB append failed: Schur complement {0:.3e} <= 0")]
+    SchurNotPositive(f64),
+
+    /// A convex solver failed to make progress / hit a numerical issue.
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// Invalid configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Dataset construction/loading problem.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// PJRT runtime problems (missing artifact, compile/execute failure).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator/service failure (channel closed, worker panicked).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// IO.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, AviError>;
+
+impl From<anyhow::Error> for AviError {
+    fn from(e: anyhow::Error) -> Self {
+        AviError::Runtime(format!("{e:#}"))
+    }
+}

@@ -1,0 +1,52 @@
+//! # avi-scale
+//!
+//! Production-grade reproduction of *“Approximate Vanishing Ideal
+//! Computations at Scale”* (Wirth, Kera, Pokutta — ICLR 2023): the Oracle
+//! Approximate Vanishing Ideal algorithm (OAVI) with Blended Pairwise
+//! Conditional Gradients (BPCG) and Inverse Hessian Boosting (IHB/WIHB),
+//! plus every substrate the paper depends on — convex solvers, baselines
+//! (ABM, VCA), linear/kernel SVMs, dataset generators, Pearson ordering,
+//! the Algorithm-2 classification pipeline, and a serving-style
+//! coordinator.
+//!
+//! ## Architecture (three layers, AOT via PJRT)
+//!
+//! * **L3 (this crate)** — the framework: algorithm drivers, scheduling,
+//!   CLI, metrics.  Owns the event loop; Python never runs at request
+//!   time.
+//! * **L2/L1 (python/compile)** — the numeric hot spots (Gram updates,
+//!   IHB solve/append, the (FT) feature transform) authored in JAX +
+//!   Pallas and AOT-lowered to `artifacts/*.hlo.txt`, which
+//!   [`runtime::PjrtRuntime`] loads and executes through the PJRT C API.
+//!   A bit-compatible native Rust path ([`backend::NativeBackend`]) covers
+//!   shapes beyond the padded artifacts and is the correctness reference.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use avi_scale::data::synthetic::synthetic_dataset;
+//! use avi_scale::oavi::{Oavi, OaviConfig};
+//!
+//! let ds = synthetic_dataset(10_000, 42);
+//! let cfg = OaviConfig::cgavi_ihb(0.005);
+//! let model = Oavi::new(cfg).fit(&ds.class_matrix(0)).unwrap();
+//! println!("|G| = {}, |O| = {}", model.generators.len(), model.o_terms.len());
+//! ```
+
+pub mod backend;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod linalg;
+pub mod oavi;
+pub mod ordering;
+pub mod pipeline;
+pub mod poly;
+pub mod runtime;
+pub mod solvers;
+pub mod svm;
+pub mod util;
+
+pub use error::{AviError, Result};

@@ -1,0 +1,188 @@
+//! Cholesky factorization for SPD Gram matrices.
+//!
+//! Used as (a) the rebuild path when the IHB block-inverse update hits a
+//! non-positive Schur complement (numerical rank deficiency), and (b) the
+//! ground truth in IHB parity tests.
+
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Fails if a pivot is non-positive.
+    pub fn new(a: &Matrix) -> Result<Self> {
+        if a.rows() != a.cols() {
+            return Err(AviError::Linalg("cholesky: non-square".into()));
+        }
+        let n = a.rows();
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(AviError::Linalg(format!(
+                            "cholesky: pivot {s:.3e} <= 0 at {i}"
+                        )));
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.get(j, j));
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Factor with diagonal jitter escalation: tries `a + jitter·I` with
+    /// jitter ∈ {0, ε, 10ε, …} until the factorization succeeds.
+    pub fn new_with_jitter(a: &Matrix, base: f64) -> Result<(Self, f64)> {
+        if let Ok(c) = Cholesky::new(a) {
+            return Ok((c, 0.0));
+        }
+        let mut jitter = base.max(1e-12);
+        for _ in 0..12 {
+            let mut aj = a.clone();
+            for i in 0..a.rows() {
+                let v = aj.get(i, i);
+                aj.set(i, i, v + jitter);
+            }
+            if let Ok(c) = Cholesky::new(&aj) {
+                return Ok((c, jitter));
+            }
+            jitter *= 10.0;
+        }
+        Err(AviError::Linalg("cholesky: jitter escalation exhausted".into()))
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        debug_assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l.get(i, k) * y[k];
+            }
+            y[i] = s / self.l.get(i, i);
+        }
+        // backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l.get(k, i) * x[k];
+            }
+            x[i] = s / self.l.get(i, i);
+        }
+        x
+    }
+
+    /// A^{-1} via n solves against unit vectors.
+    pub fn inverse(&self) -> Matrix {
+        let n = self.l.rows();
+        let mut inv = Matrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let x = self.solve(&e);
+            for i in 0..n {
+                inv.set(i, j, x[i]);
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+
+    /// log det A = 2 Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{all_close, property};
+    use crate::util::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Matrix {
+        let mut a = Matrix::zeros(n + 2, n);
+        for i in 0..n + 2 {
+            for j in 0..n {
+                a.set(i, j, rng.normal());
+            }
+        }
+        let mut g = a.gram();
+        for i in 0..n {
+            g.set(i, i, g.get(i, i) + 0.1);
+        }
+        g
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        let a = Matrix::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]).unwrap();
+        let c = Cholesky::new(&a).unwrap();
+        let x = c.solve(&[8.0, 7.0]);
+        // A x = b exact: x = [1.25, 1.5]
+        assert!((x[0] - 1.25).abs() < 1e-12);
+        assert!((x[1] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]).unwrap();
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_recovers_singular() {
+        // rank-1 PSD matrix
+        let a = Matrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]).unwrap();
+        let (c, jitter) = Cholesky::new_with_jitter(&a, 1e-10).unwrap();
+        assert!(jitter > 0.0);
+        let _ = c.solve(&[1.0, 1.0]);
+    }
+
+    #[test]
+    fn property_inverse_roundtrip() {
+        property(24, |rng| {
+            let n = rng.below(8) + 1;
+            let g = random_spd(rng, n);
+            let c = Cholesky::new(&g).map_err(|e| e.to_string())?;
+            let inv = c.inverse();
+            let prod = g.matmul(&inv).map_err(|e| e.to_string())?;
+            let eye = Matrix::eye(n);
+            all_close(prod.data(), eye.data(), 1e-6, "G G^{-1} = I")
+        });
+    }
+
+    #[test]
+    fn property_solve_matches_matvec() {
+        property(24, |rng| {
+            let n = rng.below(10) + 1;
+            let g = random_spd(rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = g.matvec(&x_true);
+            let c = Cholesky::new(&g).map_err(|e| e.to_string())?;
+            all_close(&c.solve(&b), &x_true, 1e-6, "solve")
+        });
+    }
+
+    #[test]
+    fn log_det_of_identity_is_zero() {
+        let c = Cholesky::new(&Matrix::eye(5)).unwrap();
+        assert!(c.log_det().abs() < 1e-12);
+    }
+}

@@ -1,0 +1,320 @@
+//! Incrementally maintained Gram matrix `B = AᵀA` and its inverse
+//! `N = B^{-1}` — the heart of Inverse Hessian Boosting (paper §4.4,
+//! Theorem 4.9).
+//!
+//! OAVI appends one column `b = u(X)` to the evaluation matrix `A`
+//! whenever a border term u joins `O`.  [`GramState::append`] performs the
+//! O(ℓ²) block-inverse update of Theorem 4.9 (the O(mℓ) part — computing
+//! `Aᵀb`/`bᵀb` — lives in the streaming backend, not here).  A failed
+//! Schur guard signals numerical rank deficiency; callers recover with
+//! [`GramState::rebuild`] (Cholesky + jitter).
+
+use crate::error::{AviError, Result};
+use crate::linalg::chol::Cholesky;
+use crate::linalg::dense::Matrix;
+use crate::linalg::dot;
+
+/// Maintained `B = AᵀA`, `N = B^{-1}` for a growing evaluation matrix.
+#[derive(Clone, Debug)]
+pub struct GramState {
+    b: Matrix,
+    n_inv: Matrix,
+    /// number of samples m (rows of A); used by MSE = residual/m.
+    m: usize,
+    /// Maintain `N = B^{-1}` on append?  Pure-solver OAVI modes (PCGAVI,
+    /// BPCGAVI without IHB) disable this so they don't pay IHB's O(ℓ²)
+    /// bookkeeping they never use.
+    track_inverse: bool,
+}
+
+/// Relative tolerance on the Schur complement: s must exceed
+/// `SCHUR_RTOL · bᵀb` for the update to be considered numerically sound.
+const SCHUR_RTOL: f64 = 1e-12;
+
+impl GramState {
+    /// Start with A = the constant-1 column (OAVI Line 2: O = {𝟙}):
+    /// B = [[m]], N = [[1/m]].
+    pub fn new_ones(m: usize) -> Self {
+        let mut b = Matrix::zeros(1, 1);
+        b.set(0, 0, m as f64);
+        let mut n = Matrix::zeros(1, 1);
+        n.set(0, 0, 1.0 / m as f64);
+        GramState { b, n_inv: n, m, track_inverse: true }
+    }
+
+    /// Like [`GramState::new_ones`] but without inverse maintenance.
+    pub fn new_ones_b_only(m: usize) -> Self {
+        let mut g = GramState::new_ones(m);
+        g.track_inverse = false;
+        g
+    }
+
+    /// Build from explicit evaluation columns (used by rebuilds and tests).
+    pub fn from_columns(cols: &[Vec<f64>]) -> Result<Self> {
+        if cols.is_empty() {
+            return Err(AviError::Linalg("from_columns: empty".into()));
+        }
+        let m = cols[0].len();
+        let ell = cols.len();
+        let mut b = Matrix::zeros(ell, ell);
+        for i in 0..ell {
+            for j in i..ell {
+                let v = dot(&cols[i], &cols[j]);
+                b.set(i, j, v);
+                b.set(j, i, v);
+            }
+        }
+        let (chol, _jitter) = Cholesky::new_with_jitter(&b, 1e-10 * b.max_abs().max(1.0))?;
+        let n_inv = chol.inverse();
+        Ok(GramState { b, n_inv, m, track_inverse: true })
+    }
+
+    /// Current ℓ (number of columns of A).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.b.rows()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of samples m.
+    #[inline]
+    pub fn samples(&self) -> usize {
+        self.m
+    }
+
+    /// Gram matrix `B = AᵀA`.
+    #[inline]
+    pub fn b(&self) -> &Matrix {
+        &self.b
+    }
+
+    /// Inverse `N = (AᵀA)^{-1}`.
+    #[inline]
+    pub fn n_inv(&self) -> &Matrix {
+        &self.n_inv
+    }
+
+    /// Closed-form IHB solution of OAVI Line 7 for candidate column stats
+    /// `(Aᵀb, bᵀb)`: returns `(c, m·MSE)` with `c = −N Aᵀb` and
+    /// `m·MSE = bᵀb + cᵀAᵀb` (optimal residual; clamped at 0).
+    pub fn solve_closed_form(&self, atb: &[f64], btb: f64) -> (Vec<f64>, f64) {
+        debug_assert_eq!(atb.len(), self.len());
+        assert!(self.track_inverse, "solve_closed_form requires inverse tracking");
+        let mut c = self.n_inv.matvec(atb);
+        for ci in c.iter_mut() {
+            *ci = -*ci;
+        }
+        let resid = (btb + dot(&c, atb)).max(0.0);
+        (c, resid)
+    }
+
+    /// Theorem 4.9: append column b with precomputed `atb = Aᵀb`,
+    /// `btb = bᵀb` in O(ℓ²).  Errors with [`AviError::SchurNotPositive`]
+    /// when b is numerically in span(A).
+    pub fn append(&mut self, atb: &[f64], btb: f64) -> Result<()> {
+        let ell = self.len();
+        debug_assert_eq!(atb.len(), ell);
+        if btb <= 0.0 {
+            return Err(AviError::SchurNotPositive(btb));
+        }
+        // grow B
+        let mut b_new = Matrix::zeros(ell + 1, ell + 1);
+        for i in 0..ell {
+            b_new.row_mut(i)[..ell].copy_from_slice(&self.b.row(i)[..ell]);
+            b_new.set(i, ell, atb[i]);
+            b_new.set(ell, i, atb[i]);
+        }
+        b_new.set(ell, ell, btb);
+
+        if !self.track_inverse {
+            self.b = b_new;
+            return Ok(());
+        }
+
+        // w = N Aᵀb;  s = bᵀb − bᵀA N Aᵀb  (Schur complement)
+        let w = self.n_inv.matvec(atb);
+        let s = btb - dot(atb, &w);
+        if s <= SCHUR_RTOL * btb {
+            return Err(AviError::SchurNotPositive(s));
+        }
+        let inv_s = 1.0 / s;
+
+        // grow N via the block-inverse formulas (Appendix A):
+        //   Ñ₁ = N + w wᵀ / s,   ñ₂ = −w / s,   ñ₃ = 1 / s
+        let mut n_new = Matrix::zeros(ell + 1, ell + 1);
+        for i in 0..ell {
+            let wi = w[i];
+            let src = self.n_inv.row(i);
+            let dst = n_new.row_mut(i);
+            for j in 0..ell {
+                dst[j] = src[j] + wi * w[j] * inv_s;
+            }
+            dst[ell] = -wi * inv_s;
+        }
+        for j in 0..ell {
+            n_new.set(ell, j, -w[j] * inv_s);
+        }
+        n_new.set(ell, ell, inv_s);
+
+        self.b = b_new;
+        self.n_inv = n_new;
+        Ok(())
+    }
+
+    /// Rebuild `N` from the stored `B` via Cholesky with jitter
+    /// escalation — the recovery path after numerical failure, and a
+    /// periodic hygiene step for very long runs.
+    pub fn rebuild_inverse(&mut self) -> Result<f64> {
+        let (chol, jitter) =
+            Cholesky::new_with_jitter(&self.b, 1e-10 * self.b.max_abs().max(1.0))?;
+        self.n_inv = chol.inverse();
+        self.track_inverse = true;
+        Ok(jitter)
+    }
+
+    /// ‖B·N − I‖∞ — inverse drift diagnostic used by tests and the
+    /// perf-pass hygiene checks.
+    pub fn inverse_drift(&self) -> f64 {
+        let prod = self.b.matmul(&self.n_inv).expect("square");
+        let n = prod.rows();
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let target = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((prod.get(i, j) - target).abs());
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{all_close, close, property};
+    use crate::util::rng::Rng;
+
+    fn random_cols(rng: &mut Rng, m: usize, ell: usize) -> Vec<Vec<f64>> {
+        (0..ell)
+            .map(|_| (0..m).map(|_| rng.uniform()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn new_ones_matches_manual() {
+        let g = GramState::new_ones(50);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.b().get(0, 0), 50.0);
+        assert!((g.n_inv().get(0, 0) - 0.02).abs() < 1e-15);
+    }
+
+    #[test]
+    fn append_matches_fresh_inverse() {
+        property(24, |rng| {
+            let m = 30 + rng.below(50);
+            let ell = 1 + rng.below(6);
+            let cols = random_cols(rng, m, ell);
+            // incremental build
+            let mut g = GramState::from_columns(&cols[..1]).map_err(|e| e.to_string())?;
+            for c in &cols[1..] {
+                let atb: Vec<f64> = (0..g.len())
+                    .map(|j| dot(&cols[j], c))
+                    .collect();
+                g.append(&atb, dot(c, c)).map_err(|e| e.to_string())?;
+            }
+            // fresh build
+            let fresh = GramState::from_columns(&cols).map_err(|e| e.to_string())?;
+            all_close(g.b().data(), fresh.b().data(), 1e-9, "B")?;
+            all_close(g.n_inv().data(), fresh.n_inv().data(), 1e-5, "N")?;
+            close(g.inverse_drift(), 0.0, 1e-6, "drift")
+        });
+    }
+
+    #[test]
+    fn append_rejects_dependent_column() {
+        let mut rng = Rng::new(5);
+        let m = 40;
+        let c0: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+        let c1: Vec<f64> = c0.iter().map(|v| 2.0 * v).collect(); // dependent
+        let mut g = GramState::from_columns(std::slice::from_ref(&c0)).unwrap();
+        let atb = vec![dot(&c0, &c1)];
+        let err = g.append(&atb, dot(&c1, &c1)).unwrap_err();
+        assert!(matches!(err, AviError::SchurNotPositive(_)), "{err}");
+    }
+
+    #[test]
+    fn append_rejects_zero_column() {
+        let mut g = GramState::new_ones(10);
+        assert!(g.append(&[0.0], 0.0).is_err());
+    }
+
+    #[test]
+    fn closed_form_solves_least_squares() {
+        property(24, |rng| {
+            let m = 50 + rng.below(50);
+            let ell = 1 + rng.below(5);
+            let cols = random_cols(rng, m, ell);
+            let b_col: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+            let g = GramState::from_columns(&cols).map_err(|e| e.to_string())?;
+            let atb: Vec<f64> = cols.iter().map(|c| dot(c, &b_col)).collect();
+            let (c, resid) = g.solve_closed_form(&atb, dot(&b_col, &b_col));
+            // residual r = A c + b must be orthogonal to the columns of A
+            let mut r = b_col.clone();
+            for (j, col) in cols.iter().enumerate() {
+                for (ri, ci) in r.iter_mut().zip(col.iter()) {
+                    *ri += c[j] * ci;
+                }
+            }
+            for col in &cols {
+                close(dot(col, &r), 0.0, 1e-5 * m as f64, "orthogonality")?;
+            }
+            close(resid, dot(&r, &r), 1e-6, "residual value")
+        });
+    }
+
+    #[test]
+    fn rebuild_fixes_drift() {
+        let mut rng = Rng::new(11);
+        let cols = random_cols(&mut rng, 60, 5);
+        let mut g = GramState::from_columns(&cols).unwrap();
+        // corrupt the inverse
+        g.n_inv.set(0, 0, g.n_inv.get(0, 0) + 0.5);
+        assert!(g.inverse_drift() > 1e-3);
+        g.rebuild_inverse().unwrap();
+        assert!(g.inverse_drift() < 1e-7);
+    }
+
+    #[test]
+    fn samples_reported() {
+        assert_eq!(GramState::new_ones(123).samples(), 123);
+    }
+}
+
+#[cfg(test)]
+mod tests_b_only {
+    use super::*;
+    use crate::linalg::dot;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn b_only_mode_grows_b_without_inverse() {
+        let mut rng = Rng::new(42);
+        let m = 30;
+        let ones = vec![1.0; m];
+        let c1: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+        let mut g = GramState::new_ones_b_only(m);
+        let atb = vec![dot(&ones, &c1)];
+        g.append(&atb, dot(&c1, &c1)).unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.b().get(0, 1), atb[0]);
+        // enabling tracking later via rebuild works
+        g.rebuild_inverse().unwrap();
+        assert!(g.inverse_drift() < 1e-8);
+        let (_, resid) = g.solve_closed_form(&[0.0, 0.0], 1.0);
+        assert!((resid - 1.0).abs() < 1e-12);
+    }
+}

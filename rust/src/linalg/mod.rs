@@ -1,0 +1,102 @@
+//! Dense linear algebra substrate (BLAS-free, f64).
+//!
+//! OAVI's oracle works on Gram matrices `B = AᵀA ∈ R^{ℓ×ℓ}` with ℓ ≤ a few
+//! hundred, plus streaming O(m·ℓ) products against the evaluation matrix.
+//! Everything here is sized for that regime: straightforward cache-friendly
+//! loops, no SIMD intrinsics (the compiler autovectorizes the inner dots),
+//! and numerically defensive factorizations.
+
+pub mod chol;
+pub mod dense;
+pub mod eigen;
+pub mod gram;
+
+pub use chol::Cholesky;
+pub use dense::Matrix;
+pub use gram::GramState;
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps the FP dependency chain short so
+    // LLVM vectorizes; also slightly better numerics than naive.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// ℓ1 norm.
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// max |x_i|.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |acc, v| acc.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..23).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..23).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let v = vec![3.0, -4.0];
+        assert_eq!(norm2(&v), 5.0);
+        assert_eq!(norm1(&v), 7.0);
+        assert_eq!(norm_inf(&v), 4.0);
+        assert_eq!(norm2_sq(&v), 25.0);
+    }
+}

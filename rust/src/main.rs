@@ -1,0 +1,311 @@
+//! avi-scale CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! avi-scale datasets                      # Table 2: the dataset registry
+//! avi-scale fit      [opts]               # fit one OAVI/ABM/VCA model per class
+//! avi-scale pipeline [opts]               # full Algorithm-2 train/test run
+//! avi-scale serve    [opts]               # batched transform service demo
+//! avi-scale bound    [opts]               # Theorem 4.3 bound vs empirical
+//! ```
+//!
+//! Common options: `--dataset <name>` `--method <name>` `--psi <f>`
+//! `--scale <f>` `--seed <u64>` `--backend native|xla` `--ordering
+//! pearson|reverse|native` `--workers <n>`.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::baselines::abm::AbmConfig;
+use avi_scale::baselines::vca::VcaConfig;
+use avi_scale::coordinator::pool::ThreadPool;
+use avi_scale::coordinator::service::{latency_percentiles, BatchPolicy, TransformService};
+use avi_scale::data::{load_registry_dataset, REGISTRY};
+use avi_scale::error::Result;
+use avi_scale::oavi::OaviConfig;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{
+    fit_transformer, train_pipeline_with_backend, GeneratorMethod, PipelineConfig,
+};
+use avi_scale::runtime::{PjrtRuntime, XlaBackend};
+use avi_scale::svm::linear::LinearSvmConfig;
+use avi_scale::util::sci;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, opts)) = parse(&args) else {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    let run = match cmd.as_str() {
+        "datasets" => cmd_datasets(&opts),
+        "fit" => cmd_fit(&opts),
+        "pipeline" => cmd_pipeline(&opts),
+        "predict" => cmd_predict(&opts),
+        "serve" => cmd_serve(&opts),
+        "bound" => cmd_bound(&opts),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    match run {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+avi-scale — Approximate Vanishing Ideal computations at scale
+
+USAGE: avi-scale <command> [--key value]...
+
+COMMANDS:
+  datasets    print the Table-2 dataset registry
+  fit         fit generator models per class; print |G|+|O|, degree, SPAR
+  pipeline    Algorithm-2 train/test run with a 60/40 split
+              (--save <path> persists the trained pipeline as JSON)
+  predict     load a saved pipeline (--model <path>) and evaluate it on a
+              dataset's test split
+  serve       batched transform service demo (latency/throughput)
+  bound       Theorem 4.3 bound vs empirical |G|+|O|
+
+OPTIONS:
+  --dataset <bank|credit|htru|seeds|skin|spam|synthetic>   (default synthetic)
+  --method  <cgavi-ihb|agdavi-ihb|bpcgavi-wihb|bpcgavi|pcgavi|cgavi|abm|vca>
+  --psi <f64>            vanishing parameter        (default 0.005)
+  --scale <f64>          dataset size multiplier    (default 0.05)
+  --seed <u64>           RNG seed                   (default 42)
+  --backend <native|xla> compute backend            (default native)
+  --ordering <pearson|reverse|native>               (default pearson)
+  --workers <n>          thread-pool size           (default auto)
+  --requests <n>         serve demo request count   (default 2000)
+";
+
+fn parse(args: &[String]) -> Option<(String, HashMap<String, String>)> {
+    let cmd = args.first()?.clone();
+    let mut opts = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let k = args[i].strip_prefix("--")?.to_string();
+        let v = args.get(i + 1)?.clone();
+        opts.insert(k, v);
+        i += 2;
+    }
+    Some((cmd, opts))
+}
+
+fn opt_f64(opts: &HashMap<String, String>, key: &str, default: f64) -> f64 {
+    opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn opt_u64(opts: &HashMap<String, String>, key: &str, default: u64) -> u64 {
+    opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn opt_usize(opts: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn method_for(name: &str, psi: f64) -> Result<GeneratorMethod> {
+    Ok(match name {
+        "cgavi-ihb" => GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(psi)),
+        "agdavi-ihb" => GeneratorMethod::Oavi(OaviConfig::agdavi_ihb(psi)),
+        "bpcgavi-wihb" => GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(psi)),
+        "bpcgavi" => GeneratorMethod::Oavi(OaviConfig::bpcgavi(psi)),
+        "pcgavi" => GeneratorMethod::Oavi(OaviConfig::pcgavi(psi)),
+        "cgavi" => GeneratorMethod::Oavi(OaviConfig::cgavi(psi)),
+        "abm" => GeneratorMethod::Abm(AbmConfig::new(psi)),
+        "vca" => GeneratorMethod::Vca(VcaConfig::new(psi)),
+        other => {
+            return Err(avi_scale::AviError::Config(format!("unknown method '{other}'")))
+        }
+    })
+}
+
+fn ordering_for(name: &str) -> FeatureOrdering {
+    match name {
+        "reverse" => FeatureOrdering::ReversePearson,
+        "native" => FeatureOrdering::Native,
+        _ => FeatureOrdering::Pearson,
+    }
+}
+
+fn backend_for(opts: &HashMap<String, String>) -> Result<Box<dyn ComputeBackend>> {
+    match opts.get("backend").map(|s| s.as_str()).unwrap_or("native") {
+        "xla" => {
+            let rt = Arc::new(PjrtRuntime::load_default()?);
+            Ok(Box::new(XlaBackend::new(rt)))
+        }
+        _ => Ok(Box::new(NativeBackend)),
+    }
+}
+
+fn load(opts: &HashMap<String, String>) -> Result<avi_scale::data::Dataset> {
+    let name = opts.get("dataset").map(|s| s.as_str()).unwrap_or("synthetic");
+    let scale = opt_f64(opts, "scale", 0.05);
+    let seed = opt_u64(opts, "seed", 42);
+    load_registry_dataset(name, scale, seed)
+}
+
+fn cmd_datasets(_opts: &HashMap<String, String>) -> Result<()> {
+    println!(
+        "{:<11} {:>9} {:>9} {:>8}   (Table 2; simulated — DESIGN.md §5)",
+        "dataset", "#samples", "#features", "classes"
+    );
+    for name in REGISTRY {
+        let ds = load_registry_dataset(name, 0.01, 0)?;
+        let full_m: usize = match *name {
+            "bank" => 1372,
+            "credit" => 30_000,
+            "htru" => 17_898,
+            "seeds" => 210,
+            "skin" => 245_057,
+            "spam" => 4_601,
+            _ => 2_000_000,
+        };
+        println!("{:<11} {:>9} {:>9} {:>8}", name, full_m, ds.n_features(), ds.n_classes);
+    }
+    Ok(())
+}
+
+fn cmd_fit(opts: &HashMap<String, String>) -> Result<()> {
+    let ds = load(opts)?;
+    let psi = opt_f64(opts, "psi", 0.005);
+    let method = method_for(opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb"), psi)?;
+    let backend = backend_for(opts)?;
+    let ordering = ordering_for(opts.get("ordering").map(|s| s.as_str()).unwrap_or("pearson"));
+    let perm = avi_scale::ordering::order_features(&ds.x, ordering);
+    let ordered = ds.permute_features(&perm);
+    let t0 = std::time::Instant::now();
+    let transformer = fit_transformer(&method, &ordered, backend.as_ref())?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!("method    = {}", transformer.method_name);
+    println!(
+        "dataset   = {} (m={}, n={}, k={})",
+        ds.name,
+        ds.len(),
+        ds.n_features(),
+        ds.n_classes
+    );
+    println!("backend   = {}", backend.name());
+    println!("fit time  = {}s", sci(secs));
+    println!("|G|+|O|   = {}", transformer.total_size());
+    println!("|G|       = {}", transformer.n_generators());
+    println!("avg deg   = {:.2}", transformer.avg_degree());
+    println!("SPAR      = {:.2}", transformer.sparsity());
+    Ok(())
+}
+
+fn cmd_pipeline(opts: &HashMap<String, String>) -> Result<()> {
+    let ds = load(opts)?;
+    let psi = opt_f64(opts, "psi", 0.005);
+    let method = method_for(opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb"), psi)?;
+    let backend = backend_for(opts)?;
+    let ordering = ordering_for(opts.get("ordering").map(|s| s.as_str()).unwrap_or("pearson"));
+    let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
+    let cfg = PipelineConfig { method, svm: LinearSvmConfig::default(), ordering };
+    let t0 = std::time::Instant::now();
+    let model = train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?;
+    let train_secs = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let err = model.error_on(&split.test);
+    let test_secs = t1.elapsed().as_secs_f64();
+    println!("method      = {}", cfg.method.name());
+    println!(
+        "dataset     = {} (train {}, test {})",
+        ds.name,
+        split.train.len(),
+        split.test.len()
+    );
+    println!("train time  = {}s", sci(train_secs));
+    println!("test time   = {}s", sci(test_secs));
+    println!("test error  = {:.2}%", err * 100.0);
+    println!("|G|+|O|     = {}", model.transformer.total_size());
+    if let Some(path) = opts.get("save") {
+        avi_scale::pipeline::persist::save(&model, std::path::Path::new(path))?;
+        println!("saved       = {path}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(opts: &HashMap<String, String>) -> Result<()> {
+    let path = opts
+        .get("model")
+        .ok_or_else(|| avi_scale::AviError::Config("predict needs --model <path>".into()))?;
+    let model = avi_scale::pipeline::persist::load(std::path::Path::new(path))?;
+    let ds = load(opts)?;
+    let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
+    let t = std::time::Instant::now();
+    let err = model.error_on(&split.test);
+    println!("model       = {path} ({})", model.transformer.method_name);
+    println!("dataset     = {} (test {})", ds.name, split.test.len());
+    println!("test error  = {:.2}%", err * 100.0);
+    println!("test time   = {}s", sci(t.elapsed().as_secs_f64()));
+    Ok(())
+}
+
+fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
+    let ds = load(opts)?;
+    let psi = opt_f64(opts, "psi", 0.005);
+    let method = method_for(opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb"), psi)?;
+    let backend = backend_for(opts)?;
+    let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
+    let cfg = PipelineConfig {
+        method,
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    let model = Arc::new(train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?);
+    let svc = TransformService::start(model, BatchPolicy::default());
+    let n_req = opt_usize(opts, "requests", 2000).min(split.test.len().max(1) * 50);
+    let rows: Vec<Vec<f64>> = (0..n_req)
+        .map(|i| split.test.x.row(i % split.test.len()).to_vec())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = svc.predict_many(rows)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let lat_us: Vec<f64> = responses.iter().map(|r| r.latency.as_secs_f64() * 1e6).collect();
+    let (p50, p95, p99) = latency_percentiles(lat_us);
+    println!("requests    = {n_req}");
+    println!("throughput  = {:.0} req/s", n_req as f64 / wall);
+    println!("latency p50 = {p50:.0}us  p95 = {p95:.0}us  p99 = {p99:.0}us");
+    println!(
+        "batches     = {} (max batch {})",
+        svc.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+        svc.metrics.max_batch.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_bound(opts: &HashMap<String, String>) -> Result<()> {
+    let psi = opt_f64(opts, "psi", 0.005);
+    let ds = load(opts)?;
+    let cfg = OaviConfig::cgavi_ihb(psi);
+    println!(
+        "Theorem 4.3: D = {}, bound C(D+n, D) = {:.3e}",
+        cfg.theorem_degree(),
+        cfg.size_bound(ds.n_features())
+    );
+    let workers = opt_usize(opts, "workers", 0);
+    let pool = if workers == 0 { ThreadPool::default_size() } else { ThreadPool::new(workers) };
+    let sizes: Vec<usize> = pool.map(&(0..ds.n_classes).collect::<Vec<_>>(), |&k| {
+        let xk = ds.class_matrix(k);
+        avi_scale::oavi::Oavi::new(cfg).fit(&xk).map(|m| m.total_size()).unwrap_or(0)
+    });
+    for (k, s) in sizes.iter().enumerate() {
+        println!("class {k}: empirical |G|+|O| = {s}");
+    }
+    Ok(())
+}

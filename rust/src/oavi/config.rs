@@ -1,0 +1,186 @@
+//! OAVI configuration: solver, IHB mode, vanishing parameter, safeguards.
+
+use crate::error::{AviError, Result};
+use crate::solvers::SolverKind;
+
+/// How Inverse Hessian Boosting is used (paper §4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IhbMode {
+    /// Pure solver from cold start (PCGAVI / BPCGAVI in Figures 2–3).
+    None,
+    /// Full IHB: closed-form `y0 = −(AᵀA)^{-1}Aᵀb` decides vanishing and
+    /// supplies the coefficients; the solver is only a fallback
+    /// (CGAVI-IHB, AGDAVI-IHB).
+    Ihb,
+    /// Weak IHB: the closed form decides *whether* a term vanishes, and
+    /// each accepted generator is re-solved with BPCG from a vertex to
+    /// obtain sparse coefficients (BPCGAVI-WIHB, §4.4.3).
+    Wihb,
+}
+
+/// Full OAVI configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct OaviConfig {
+    /// Vanishing parameter ψ ≥ 0 (Definition 2.2).
+    pub psi: f64,
+    /// ℓ1 bound τ on generator coefficient vectors; (CCOP) radius is τ−1.
+    /// Paper default: 1000.
+    pub tau: f64,
+    /// The convex oracle.
+    pub solver: SolverKind,
+    /// IHB mode.
+    pub ihb: IhbMode,
+    /// Use the ℓ1-constrained problem (CCOP)?  Forced false for AGD
+    /// (the paper's AGDAVI solves the unconstrained Line-7 problem).
+    pub constrained: bool,
+    /// Solver accuracy factor: ε = `eps_factor`·ψ (paper: 0.01).
+    pub eps_factor: f64,
+    /// Solver iteration cap (paper: 10,000).
+    pub max_solver_iters: usize,
+    /// Safety cap on the border degree (Theorem 4.3 bounds the true
+    /// termination degree at D = ⌈−log ψ / log 4⌉; this cap only guards
+    /// pathological configs).
+    pub max_degree: u32,
+    /// Safety cap on |O| (memory guard for adversarial data).
+    pub max_o_terms: usize,
+}
+
+impl OaviConfig {
+    fn base(psi: f64, solver: SolverKind, ihb: IhbMode, constrained: bool) -> Self {
+        OaviConfig {
+            psi,
+            tau: 1000.0,
+            solver,
+            ihb,
+            constrained,
+            eps_factor: 0.01,
+            max_solver_iters: 10_000,
+            max_degree: 12,
+            max_o_terms: 5_000,
+        }
+    }
+
+    /// CGAVI-IHB — the paper's fastest variant (§4.4, Figure 4).
+    pub fn cgavi_ihb(psi: f64) -> Self {
+        Self::base(psi, SolverKind::Cg, IhbMode::Ihb, true)
+    }
+
+    /// AGDAVI-IHB — IHB with the unconstrained AGD oracle.
+    pub fn agdavi_ihb(psi: f64) -> Self {
+        Self::base(psi, SolverKind::Agd, IhbMode::Ihb, false)
+    }
+
+    /// BPCGAVI-WIHB — sparse generators at IHB-class speed (§4.4.3).
+    pub fn bpcgavi_wihb(psi: f64) -> Self {
+        Self::base(psi, SolverKind::Bpcg, IhbMode::Wihb, true)
+    }
+
+    /// BPCGAVI — pure BPCG from cold start (Figures 2–3 baseline).
+    pub fn bpcgavi(psi: f64) -> Self {
+        Self::base(psi, SolverKind::Bpcg, IhbMode::None, true)
+    }
+
+    /// PCGAVI — pure PCG from cold start (Figure 2 baseline).
+    pub fn pcgavi(psi: f64) -> Self {
+        Self::base(psi, SolverKind::Pcg, IhbMode::None, true)
+    }
+
+    /// CGAVI — vanilla Frank–Wolfe, cold start.
+    pub fn cgavi(psi: f64) -> Self {
+        Self::base(psi, SolverKind::Cg, IhbMode::None, true)
+    }
+
+    /// AGDAVI — unconstrained AGD, cold start.
+    pub fn agdavi(psi: f64) -> Self {
+        Self::base(psi, SolverKind::Agd, IhbMode::None, false)
+    }
+
+    /// Display name matching the paper's nomenclature.
+    pub fn name(&self) -> String {
+        let base = format!("{}AVI", self.solver.name());
+        match self.ihb {
+            IhbMode::None => base,
+            IhbMode::Ihb => format!("{base}-IHB"),
+            IhbMode::Wihb => format!("{base}-WIHB"),
+        }
+    }
+
+    /// (CCOP) ball radius τ−1.
+    pub fn radius(&self) -> f64 {
+        self.tau - 1.0
+    }
+
+    /// Theorem 4.3 termination degree D = ⌈−log ψ / log 4⌉.
+    pub fn theorem_degree(&self) -> u32 {
+        if self.psi >= 1.0 {
+            return 1;
+        }
+        ((-self.psi.ln()) / 4f64.ln()).ceil() as u32
+    }
+
+    /// Theorem 4.3 size bound C(D+n, D) on |G|+|O|.
+    pub fn size_bound(&self, n_features: usize) -> f64 {
+        let d = self.theorem_degree() as u64;
+        crate::util::binomial_f64(d + n_features as u64, d)
+    }
+
+    /// Validate invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.psi < 0.0 || !self.psi.is_finite() {
+            return Err(AviError::Config(format!("psi must be ≥ 0, got {}", self.psi)));
+        }
+        if self.constrained && self.tau < 2.0 {
+            return Err(AviError::Config(format!("tau must be ≥ 2, got {}", self.tau)));
+        }
+        if self.ihb == IhbMode::Wihb && self.solver != SolverKind::Bpcg {
+            return Err(AviError::Config(
+                "WIHB re-solves with BPCG; configure solver = Bpcg".into(),
+            ));
+        }
+        if self.constrained && self.solver == SolverKind::Agd {
+            return Err(AviError::Config("AGD solves the unconstrained problem".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_paper() {
+        assert_eq!(OaviConfig::cgavi_ihb(0.01).name(), "CGAVI-IHB");
+        assert_eq!(OaviConfig::agdavi_ihb(0.01).name(), "AGDAVI-IHB");
+        assert_eq!(OaviConfig::bpcgavi_wihb(0.01).name(), "BPCGAVI-WIHB");
+        assert_eq!(OaviConfig::bpcgavi(0.01).name(), "BPCGAVI");
+        assert_eq!(OaviConfig::pcgavi(0.01).name(), "PCGAVI");
+    }
+
+    #[test]
+    fn theorem_degree_examples() {
+        // ψ = 0.005 ⇒ D = ⌈5.298/1.386⌉ = ⌈3.82⌉ = 4
+        assert_eq!(OaviConfig::cgavi_ihb(0.005).theorem_degree(), 4);
+        // ψ = 0.25 ⇒ D = ⌈1.386/1.386⌉ = 1
+        assert_eq!(OaviConfig::cgavi_ihb(0.25).theorem_degree(), 1);
+        assert_eq!(OaviConfig::cgavi_ihb(1.5).theorem_degree(), 1);
+    }
+
+    #[test]
+    fn size_bound_matches_binomial() {
+        let cfg = OaviConfig::cgavi_ihb(0.005); // D = 4
+        assert_eq!(cfg.size_bound(3), 35.0); // C(7,4)
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        assert!(OaviConfig::cgavi_ihb(-1.0).validate().is_err());
+        let mut cfg = OaviConfig::cgavi_ihb(0.01);
+        cfg.tau = 1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = OaviConfig::bpcgavi_wihb(0.01);
+        cfg.solver = SolverKind::Cg;
+        assert!(cfg.validate().is_err());
+        assert!(OaviConfig::cgavi_ihb(0.01).validate().is_ok());
+    }
+}

@@ -1,0 +1,9 @@
+//! The Oracle Approximate Vanishing Ideal algorithm (Algorithm 1) with
+//! Inverse Hessian Boosting (§4.4) — the paper's core contribution.
+
+pub mod config;
+pub mod driver;
+pub mod persist;
+
+pub use config::{IhbMode, OaviConfig};
+pub use driver::{FitStats, Oavi, OaviModel};

@@ -1,0 +1,254 @@
+//! Model persistence: save/load fitted generator sets as a simple JSON
+//! document (hand-rolled — serde is unavailable offline).
+//!
+//! The format stores the order ideal's recipes (not raw exponent vectors)
+//! so a loaded model evaluates through exactly the same
+//! one-multiply-per-term path as a freshly fitted one.
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{AviError, Result};
+use crate::poly::eval::{Recipe, TermSet};
+use crate::poly::poly::{Generator, GeneratorSet};
+
+/// Serialize a generator set to a JSON string.
+pub fn to_json(gs: &GeneratorSet) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"n_vars\": {},\n", gs.o_terms.n_vars()));
+    // recipes: [[-1,-1]] for One, [parent, var] otherwise
+    out.push_str("  \"o_recipes\": [");
+    for i in 0..gs.o_terms.len() {
+        if i > 0 {
+            out.push(',');
+        }
+        match gs.o_terms.recipe(i) {
+            Recipe::One => out.push_str("[-1,-1]"),
+            Recipe::Product { parent, var } => {
+                out.push_str(&format!("[{parent},{var}]"))
+            }
+        }
+    }
+    out.push_str("],\n  \"generators\": [\n");
+    for (gi, g) in gs.generators.iter().enumerate() {
+        if gi > 0 {
+            out.push_str(",\n");
+        }
+        let coeffs: Vec<String> = g.coeffs.iter().map(|c| format!("{c:e}")).collect();
+        out.push_str(&format!(
+            "    {{\"parent\": {}, \"var\": {}, \"mse\": {:e}, \"coeffs\": [{}]}}",
+            g.leading_parent,
+            g.leading_var,
+            g.mse,
+            coeffs.join(",")
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Parse a generator set back from [`to_json`] output.
+pub fn from_json(text: &str) -> Result<GeneratorSet> {
+    let n_vars = extract_usize(text, "\"n_vars\":")?;
+    let recipes_src = extract_array(text, "\"o_recipes\":")?;
+    let mut o = TermSet::with_one(n_vars);
+    let pairs = parse_pairs(&recipes_src)?;
+    if pairs.first() != Some(&(-1, -1)) {
+        return Err(AviError::Data("persist: first recipe must be the One term".into()));
+    }
+    for (i, pair) in pairs.into_iter().enumerate() {
+        match pair {
+            (-1, -1) => {
+                if i != 0 {
+                    return Err(AviError::Data("persist: One recipe not first".into()));
+                }
+            }
+            (p, v) => {
+                if p < 0 || v < 0 {
+                    return Err(AviError::Data("persist: bad recipe".into()));
+                }
+                o.push_product(p as usize, v as usize)?;
+            }
+        }
+    }
+    let mut generators = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find("{\"parent\":") {
+        let obj_src = &rest[pos..];
+        let end = obj_src
+            .find('}')
+            .ok_or_else(|| AviError::Data("persist: unterminated generator".into()))?;
+        let obj = &obj_src[..=end];
+        let parent = extract_usize(obj, "\"parent\":")?;
+        let var = extract_usize(obj, "\"var\":")?;
+        let mse = extract_f64(obj, "\"mse\":")?;
+        let coeff_src = extract_array(obj, "\"coeffs\":")?;
+        let coeffs: Vec<f64> = if coeff_src.trim().is_empty() {
+            Vec::new()
+        } else {
+            coeff_src
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<f64>()
+                        .map_err(|e| AviError::Data(format!("persist: coeff {e}")))
+                })
+                .collect::<Result<_>>()?
+        };
+        if parent >= o.len() || var >= n_vars {
+            return Err(AviError::Data("persist: leading recipe out of range".into()));
+        }
+        let leading = o.terms()[parent].times_var(var);
+        generators.push(Generator {
+            coeffs,
+            leading,
+            leading_parent: parent,
+            leading_var: var,
+            mse,
+        });
+        rest = &rest[pos + end..];
+    }
+    Ok(GeneratorSet { o_terms: o, generators })
+}
+
+/// Save to a file.
+pub fn save(gs: &GeneratorSet, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    fs::write(path, to_json(gs))?;
+    Ok(())
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<GeneratorSet> {
+    from_json(&fs::read_to_string(path)?)
+}
+
+fn extract_usize(text: &str, key: &str) -> Result<usize> {
+    extract_f64(text, key).map(|v| v as usize)
+}
+
+fn extract_f64(text: &str, key: &str) -> Result<f64> {
+    let pos = text
+        .find(key)
+        .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
+    let rest = &text[pos + key.len()..];
+    let end = rest
+        .find([',', '}', '\n', ']'])
+        .unwrap_or(rest.len());
+    rest[..end]
+        .trim()
+        .parse::<f64>()
+        .map_err(|e| AviError::Data(format!("persist: {key} parse: {e}")))
+}
+
+fn extract_array(text: &str, key: &str) -> Result<String> {
+    let pos = text
+        .find(key)
+        .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
+    let rest = &text[pos + key.len()..];
+    let start = rest
+        .find('[')
+        .ok_or_else(|| AviError::Data("persist: missing [".to_string()))?;
+    // match brackets (arrays may nest one level: recipes)
+    let mut depth = 0usize;
+    for (i, ch) in rest[start..].char_indices() {
+        match ch {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(rest[start + 1..start + i].to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(AviError::Data("persist: unbalanced array".into()))
+}
+
+fn parse_pairs(src: &str) -> Result<Vec<(i64, i64)>> {
+    let mut out = Vec::new();
+    let mut rest = src;
+    while let Some(start) = rest.find('[') {
+        let end = rest[start..]
+            .find(']')
+            .ok_or_else(|| AviError::Data("persist: unbalanced pair".into()))?
+            + start;
+        let inner = &rest[start + 1..end];
+        let parts: Vec<&str> = inner.split(',').map(|p| p.trim()).collect();
+        if parts.len() != 2 {
+            return Err(AviError::Data("persist: pair arity".into()));
+        }
+        let a = parts[0]
+            .parse::<i64>()
+            .map_err(|e| AviError::Data(format!("persist: {e}")))?;
+        let b = parts[1]
+            .parse::<i64>()
+            .map_err(|e| AviError::Data(format!("persist: {e}")))?;
+        out.push((a, b));
+        rest = &rest[end + 1..];
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::Matrix;
+    use crate::oavi::{Oavi, OaviConfig};
+    use crate::util::rng::Rng;
+
+    fn fitted() -> GeneratorSet {
+        let mut rng = Rng::new(5);
+        let mut x = Matrix::zeros(120, 2);
+        for i in 0..120 {
+            let t = rng.uniform();
+            x.set(i, 0, t);
+            x.set(i, 1, t * t);
+        }
+        Oavi::new(OaviConfig::cgavi_ihb(0.001)).fit(&x).unwrap().generator_set()
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure_and_numerics() {
+        let gs = fitted();
+        let json = to_json(&gs);
+        let back = from_json(&json).unwrap();
+        assert_eq!(back.o_terms.len(), gs.o_terms.len());
+        assert_eq!(back.generators.len(), gs.generators.len());
+        assert_eq!(back.o_terms.terms(), gs.o_terms.terms());
+        // identical transforms on fresh data
+        let mut rng = Rng::new(9);
+        let mut z = Matrix::zeros(30, 2);
+        for i in 0..30 {
+            for j in 0..2 {
+                z.set(i, j, rng.uniform());
+            }
+        }
+        let a = gs.transform(&z);
+        let b = back.transform(&z);
+        for i in 0..30 {
+            for j in 0..a.cols() {
+                assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let gs = fitted();
+        let path = std::env::temp_dir().join("avi_scale_persist/model.json");
+        save(&gs, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.total_size(), gs.total_size());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("{\"n_vars\": 2, \"o_recipes\": [[0,0]]}").is_err()); // bad first recipe
+        assert!(from_json("not json at all").is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Data-driven feature ordering (paper §5, Algorithm 5).
+//!
+//! Monomial-aware algorithms (OAVI, ABM) depend on the order of the
+//! features.  Pearson ordering sorts features *increasingly* by their
+//! total absolute Pearson correlation with all features, making the
+//! output invariant to the input feature permutation; reverse-Pearson is
+//! the Table-1 ablation.
+
+use crate::linalg::dense::Matrix;
+
+/// The orderings studied in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureOrdering {
+    /// Keep the dataset's native order (not data-driven).
+    Native,
+    /// Algorithm 5: ascending Σ_j |r_ij|.
+    Pearson,
+    /// Table 1 ablation: descending Σ_j |r_ij|.
+    ReversePearson,
+}
+
+/// Pearson correlation coefficient between two equal-length vectors
+/// (Definition 5.1).  Returns 0 for constant vectors.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (x, y) in a.iter().zip(b.iter()) {
+        let dx = x - ma;
+        let dy = y - mb;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Algorithm 5: the permutation that sorts features by ascending
+/// `p_i = Σ_j |r_{c_i c_j}|` (ties broken by original index → the output
+/// is a well-defined function of the data).
+pub fn pearson_permutation(x: &Matrix, reverse: bool) -> Vec<usize> {
+    let n = x.cols();
+    let cols: Vec<Vec<f64>> = (0..n).map(|j| x.col(j)).collect();
+    let mut p = vec![0.0; n];
+    for i in 0..n {
+        for j in 0..n {
+            p[i] += pearson(&cols[i], &cols[j]).abs();
+        }
+    }
+    let mut perm: Vec<usize> = (0..n).collect();
+    perm.sort_by(|&a, &b| {
+        let ord = p[a].partial_cmp(&p[b]).unwrap();
+        let ord = if reverse { ord.reverse() } else { ord };
+        ord.then(a.cmp(&b))
+    });
+    perm
+}
+
+/// Apply an ordering to a feature matrix (returns the permutation used).
+pub fn order_features(x: &Matrix, ordering: FeatureOrdering) -> Vec<usize> {
+    match ordering {
+        FeatureOrdering::Native => (0..x.cols()).collect(),
+        FeatureOrdering::Pearson => pearson_permutation(x, false),
+        FeatureOrdering::ReversePearson => pearson_permutation(x, true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pearson_known_values() {
+        let a = [1.0, 2.0, 3.0];
+        assert!((pearson(&a, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson(&a, &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&a, &[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn ordering_puts_least_correlated_first() {
+        // features: f0 and f1 perfectly correlated, f2 independent noise
+        let mut rng = Rng::new(3);
+        let m = 500;
+        let mut x = Matrix::zeros(m, 3);
+        for i in 0..m {
+            let t = rng.uniform();
+            x.set(i, 0, t);
+            x.set(i, 1, 1.0 - t);
+            x.set(i, 2, rng.uniform());
+        }
+        let perm = pearson_permutation(&x, false);
+        assert_eq!(perm[0], 2, "independent feature must come first: {perm:?}");
+        let rev = pearson_permutation(&x, true);
+        assert_eq!(rev[2], 2);
+    }
+
+    #[test]
+    fn permutation_invariance() {
+        // Algorithm 5's point: the *ordered* dataset is invariant to a
+        // pre-permutation of the features.
+        let mut rng = Rng::new(5);
+        let m = 200;
+        let mut x = Matrix::zeros(m, 4);
+        for i in 0..m {
+            let t = rng.uniform();
+            x.set(i, 0, t);
+            x.set(i, 1, t * t + 0.1 * rng.uniform());
+            x.set(i, 2, rng.uniform());
+            x.set(i, 3, 0.5 * t + 0.5 * rng.uniform());
+        }
+        let ds = crate::data::Dataset::new("t", x, vec![0; m], 1).unwrap();
+        let perm_pre = [2usize, 0, 3, 1];
+        let shuffled = ds.permute_features(&perm_pre);
+
+        let o1 = order_features(&ds.x, FeatureOrdering::Pearson);
+        let o2 = order_features(&shuffled.x, FeatureOrdering::Pearson);
+        let a = ds.permute_features(&o1);
+        let b = shuffled.permute_features(&o2);
+        for j in 0..4 {
+            for i in 0..5 {
+                assert!(
+                    (a.x.get(i, j) - b.x.get(i, j)).abs() < 1e-12,
+                    "column {j} differs after ordering"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn native_is_identity() {
+        let x = Matrix::zeros(3, 5);
+        assert_eq!(order_features(&x, FeatureOrdering::Native), vec![0, 1, 2, 3, 4]);
+    }
+}

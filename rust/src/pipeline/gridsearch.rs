@@ -1,0 +1,179 @@
+//! Hyperparameter grid search with k-fold CV (paper §6.2: 3-fold CV over
+//! the vanishing parameter ψ and the SVM's ℓ1 coefficient).
+
+use crate::coordinator::pool::ThreadPool;
+use crate::data::splits::kfold_indices;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::ordering::FeatureOrdering;
+use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use crate::svm::kernel::{PolyKernelConfig, PolyKernelSvm};
+use crate::svm::linear::LinearSvmConfig;
+use crate::svm::metrics::error_rate;
+use crate::util::timer::Timer;
+
+/// Default ψ grid (log-spaced around the paper's 0.005 working point).
+pub const PSI_GRID: &[f64] = &[0.05, 0.01, 0.005, 0.001];
+/// Default SVM ℓ1 grid.
+pub const LAMBDA_GRID: &[f64] = &[1e-2, 1e-3, 1e-4];
+
+/// Result of a grid search.
+#[derive(Clone, Debug)]
+pub struct GridSearchResult {
+    pub best_psi: f64,
+    pub best_lambda: f64,
+    pub best_cv_error: f64,
+    /// wall-clock of the whole search (Table 3 "Time hyper.", together
+    /// with the final refit).
+    pub search_secs: f64,
+    /// (psi, lambda, cv_error) for every grid point.
+    pub table: Vec<(f64, f64, f64)>,
+}
+
+/// Cross-validated grid search for a generator method + linear SVM.
+/// `pool` parallelizes grid points across worker threads.
+pub fn grid_search(
+    method: &GeneratorMethod,
+    ordering: FeatureOrdering,
+    train: &Dataset,
+    psis: &[f64],
+    lambdas: &[f64],
+    folds: usize,
+    seed: u64,
+    pool: &ThreadPool,
+) -> Result<GridSearchResult> {
+    let timer = Timer::start();
+    let fold_idx = kfold_indices(train.len(), folds, seed);
+    // pre-materialize fold datasets once
+    let fold_data: Vec<(Dataset, Dataset)> = fold_idx
+        .iter()
+        .map(|(tr, va)| (train.subset(tr), train.subset(va)))
+        .collect();
+
+    // one job per (psi, lambda): CV error averaged over folds
+    let mut jobs: Vec<Box<dyn FnOnce() -> (f64, f64, f64) + Send>> = Vec::new();
+    for &psi in psis {
+        for &lambda in lambdas {
+            let method = method.with_psi(psi);
+            let fold_data = fold_data.clone();
+            jobs.push(Box::new(move || {
+                let mut errs = Vec::with_capacity(fold_data.len());
+                for (tr, va) in &fold_data {
+                    let cfg = PipelineConfig {
+                        method,
+                        svm: LinearSvmConfig { lambda, ..Default::default() },
+                        ordering,
+                    };
+                    match train_pipeline(&cfg, tr) {
+                        Ok(model) => errs.push(model.error_on(va)),
+                        Err(_) => errs.push(1.0), // failed config = worst error
+                    }
+                }
+                (psi, lambda, crate::util::mean(&errs))
+            }));
+        }
+    }
+    let table = pool.run_all(jobs);
+
+    let (mut best_psi, mut best_lambda, mut best_err) = (psis[0], lambdas[0], f64::INFINITY);
+    for &(psi, lambda, err) in &table {
+        if err < best_err {
+            best_err = err;
+            best_psi = psi;
+            best_lambda = lambda;
+        }
+    }
+    Ok(GridSearchResult {
+        best_psi,
+        best_lambda,
+        best_cv_error: best_err,
+        search_secs: timer.secs(),
+        table,
+    })
+}
+
+/// Grid search for the polynomial-kernel SVM baseline (degree × λ).
+pub fn grid_search_kernel_svm(
+    train: &Dataset,
+    degrees: &[u32],
+    lambdas: &[f64],
+    folds: usize,
+    seed: u64,
+    pool: &ThreadPool,
+) -> Result<(PolyKernelConfig, f64, f64)> {
+    let timer = Timer::start();
+    let fold_idx = kfold_indices(train.len(), folds, seed);
+    let fold_data: Vec<(Dataset, Dataset)> = fold_idx
+        .iter()
+        .map(|(tr, va)| (train.subset(tr), train.subset(va)))
+        .collect();
+
+    let mut jobs: Vec<Box<dyn FnOnce() -> (u32, f64, f64) + Send>> = Vec::new();
+    for &degree in degrees {
+        for &lambda in lambdas {
+            let fold_data = fold_data.clone();
+            jobs.push(Box::new(move || {
+                let mut errs = Vec::new();
+                for (tr, va) in &fold_data {
+                    let cfg = PolyKernelConfig { degree, lambda, ..Default::default() };
+                    match PolyKernelSvm::fit(&tr.x, &tr.y, tr.n_classes, cfg) {
+                        Ok(svm) => errs.push(error_rate(&svm.predict(&va.x), &va.y)),
+                        Err(_) => errs.push(1.0),
+                    }
+                }
+                (degree, lambda, crate::util::mean(&errs))
+            }));
+        }
+    }
+    let table = pool.run_all(jobs);
+    let mut best = (degrees[0], lambdas[0], f64::INFINITY);
+    for &(d, l, e) in &table {
+        if e < best.2 {
+            best = (d, l, e);
+        }
+    }
+    Ok((
+        PolyKernelConfig { degree: best.0, lambda: best.1, ..Default::default() },
+        best.2,
+        timer.secs(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::oavi::OaviConfig;
+
+    #[test]
+    fn grid_search_selects_reasonable_psi() {
+        let ds = synthetic_dataset(400, 3);
+        let pool = ThreadPool::new(2);
+        let res = grid_search(
+            &GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            FeatureOrdering::Pearson,
+            &ds,
+            &[0.05, 0.005],
+            &[1e-3],
+            3,
+            7,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(res.table.len(), 2);
+        assert!(res.best_cv_error <= 0.5);
+        assert!(res.table.iter().any(|&(p, _, _)| p == res.best_psi));
+        assert!(res.search_secs > 0.0);
+    }
+
+    #[test]
+    fn kernel_grid_runs() {
+        let ds = synthetic_dataset(200, 4);
+        let pool = ThreadPool::new(2);
+        let (cfg, err, secs) =
+            grid_search_kernel_svm(&ds, &[2, 3], &[1e-3], 3, 5, &pool).unwrap();
+        assert!(cfg.degree == 2 || cfg.degree == 3);
+        assert!(err <= 0.6);
+        assert!(secs > 0.0);
+    }
+}

@@ -1,0 +1,348 @@
+//! The classification pipeline of Algorithm 2: per-class generator
+//! construction → (FT) feature transform → ℓ1 linear SVM, plus the
+//! hyperparameter grid search (3-fold CV) and Table-3 style reporting.
+
+pub mod gridsearch;
+pub mod persist;
+pub mod report;
+
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::baselines::abm::{Abm, AbmConfig};
+use crate::baselines::vca::{Vca, VcaConfig, VcaModel};
+use crate::data::Dataset;
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+use crate::oavi::{Oavi, OaviConfig};
+use crate::ordering::{order_features, FeatureOrdering};
+use crate::poly::poly::GeneratorSet;
+use crate::svm::linear::{LinearSvm, LinearSvmConfig};
+
+/// Which generator-constructing algorithm the pipeline uses.
+#[derive(Clone, Copy, Debug)]
+pub enum GeneratorMethod {
+    Oavi(OaviConfig),
+    Abm(AbmConfig),
+    Vca(VcaConfig),
+}
+
+impl GeneratorMethod {
+    /// The paper's method name (CGAVI-IHB, ABM, VCA, …).
+    pub fn name(&self) -> String {
+        match self {
+            GeneratorMethod::Oavi(cfg) => cfg.name(),
+            GeneratorMethod::Abm(_) => "ABM".into(),
+            GeneratorMethod::Vca(_) => "VCA".into(),
+        }
+    }
+
+    /// Same method with a different ψ (grid search).
+    pub fn with_psi(&self, psi: f64) -> GeneratorMethod {
+        match *self {
+            GeneratorMethod::Oavi(mut cfg) => {
+                cfg.psi = psi;
+                GeneratorMethod::Oavi(cfg)
+            }
+            GeneratorMethod::Abm(mut cfg) => {
+                cfg.psi = psi;
+                GeneratorMethod::Abm(cfg)
+            }
+            GeneratorMethod::Vca(mut cfg) => {
+                cfg.psi = psi;
+                GeneratorMethod::Vca(cfg)
+            }
+        }
+    }
+
+    /// Monomial-aware methods need the Pearson ordering; VCA is agnostic.
+    pub fn is_monomial_aware(&self) -> bool {
+        !matches!(self, GeneratorMethod::Vca(_))
+    }
+}
+
+/// Per-class fitted generator model.
+#[derive(Clone, Debug)]
+pub enum ClassModel {
+    MonomialAware(GeneratorSet),
+    Vca(VcaModel),
+}
+
+impl ClassModel {
+    pub fn n_generators(&self) -> usize {
+        match self {
+            ClassModel::MonomialAware(gs) => gs.generators.len(),
+            ClassModel::Vca(v) => v.n_generators(),
+        }
+    }
+
+    pub fn total_size(&self) -> usize {
+        match self {
+            ClassModel::MonomialAware(gs) => gs.total_size(),
+            ClassModel::Vca(v) => v.total_size(),
+        }
+    }
+
+    fn transform(&self, x: &Matrix) -> Matrix {
+        match self {
+            ClassModel::MonomialAware(gs) => gs.transform(x),
+            ClassModel::Vca(v) => v.transform(x),
+        }
+    }
+}
+
+/// The union-of-classes feature transformer (Algorithm 2 Lines 1–9).
+#[derive(Clone, Debug)]
+pub struct FittedTransformer {
+    pub method_name: String,
+    pub per_class: Vec<ClassModel>,
+}
+
+impl FittedTransformer {
+    /// (FT): concatenate |g(x)| blocks of all classes → m × |G| features.
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let blocks: Vec<Matrix> = self.per_class.iter().map(|c| c.transform(x)).collect();
+        let total: usize = blocks.iter().map(|b| b.cols()).sum();
+        let mut out = Matrix::zeros(x.rows(), total);
+        let mut off = 0;
+        for b in &blocks {
+            for i in 0..x.rows() {
+                let dst = out.row_mut(i);
+                dst[off..off + b.cols()].copy_from_slice(b.row(i));
+            }
+            off += b.cols();
+        }
+        out
+    }
+
+    /// Σ_i (|G^i| + |O^i|) — Table 3's |G|+|O| row.
+    pub fn total_size(&self) -> usize {
+        self.per_class.iter().map(|c| c.total_size()).sum()
+    }
+
+    /// Total number of generators |G| (feature dimension after (FT)).
+    pub fn n_generators(&self) -> usize {
+        self.per_class.iter().map(|c| c.n_generators()).sum()
+    }
+
+    /// Weighted average generator degree across classes.
+    pub fn avg_degree(&self) -> f64 {
+        let (mut s, mut n) = (0.0, 0usize);
+        for c in &self.per_class {
+            match c {
+                ClassModel::MonomialAware(gs) => {
+                    s += gs.avg_degree() * gs.generators.len() as f64;
+                    n += gs.generators.len();
+                }
+                ClassModel::Vca(v) => {
+                    s += v.avg_degree() * v.n_generators() as f64;
+                    n += v.n_generators();
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            s / n as f64
+        }
+    }
+
+    /// (SPAR) pooled across classes.
+    pub fn sparsity(&self) -> f64 {
+        // pool numerators/denominators rather than averaging ratios
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for c in &self.per_class {
+            match c {
+                ClassModel::MonomialAware(gs) => {
+                    for g in &gs.generators {
+                        num += g.n_zero_coeffs() as f64;
+                        den += g.n_coeffs() as f64;
+                    }
+                }
+                ClassModel::Vca(v) => {
+                    // VCA's SPAR is already a pooled ratio; weight by its size
+                    let ge = v.n_generators().max(1) as f64;
+                    num += v.sparsity() * ge;
+                    den += ge;
+                }
+            }
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+}
+
+/// Fit the per-class generator models (Algorithm 2 Lines 1–5).
+pub fn fit_transformer(
+    method: &GeneratorMethod,
+    train: &Dataset,
+    backend: &dyn ComputeBackend,
+) -> Result<FittedTransformer> {
+    let mut per_class = Vec::with_capacity(train.n_classes);
+    for k in 0..train.n_classes {
+        let xk = train.class_matrix(k);
+        if xk.rows() == 0 {
+            return Err(AviError::Data(format!("class {k} has no samples")));
+        }
+        let model = match method {
+            GeneratorMethod::Oavi(cfg) => ClassModel::MonomialAware(
+                Oavi::new(*cfg).fit_with_backend(&xk, backend)?.generator_set(),
+            ),
+            GeneratorMethod::Abm(cfg) => {
+                ClassModel::MonomialAware(Abm::new(*cfg).fit(&xk)?.generator_set())
+            }
+            GeneratorMethod::Vca(cfg) => ClassModel::Vca(Vca::new(*cfg).fit(&xk)?),
+        };
+        per_class.push(model);
+    }
+    Ok(FittedTransformer { method_name: method.name(), per_class })
+}
+
+/// Full pipeline configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub method: GeneratorMethod,
+    pub svm: LinearSvmConfig,
+    pub ordering: FeatureOrdering,
+}
+
+/// A trained pipeline: ordering permutation + transformer + SVM.
+#[derive(Clone, Debug)]
+pub struct PipelineModel {
+    pub perm: Vec<usize>,
+    pub transformer: FittedTransformer,
+    pub svm: LinearSvm,
+    pub n_classes: usize,
+}
+
+impl PipelineModel {
+    /// Predict labels for raw (scaled) features.
+    pub fn predict(&self, x: &Matrix) -> Vec<usize> {
+        let xp = permute_cols(x, &self.perm);
+        let feats = self.transformer.transform(&xp);
+        self.svm.predict(&feats)
+    }
+
+    /// Classification error on a dataset.
+    pub fn error_on(&self, ds: &Dataset) -> f64 {
+        crate::svm::metrics::error_rate(&self.predict(&ds.x), &ds.y)
+    }
+}
+
+/// Train the full Algorithm-2 pipeline.
+pub fn train_pipeline(cfg: &PipelineConfig, train: &Dataset) -> Result<PipelineModel> {
+    train_pipeline_with_backend(cfg, train, &NativeBackend)
+}
+
+/// Train with an explicit compute backend.
+pub fn train_pipeline_with_backend(
+    cfg: &PipelineConfig,
+    train: &Dataset,
+    backend: &dyn ComputeBackend,
+) -> Result<PipelineModel> {
+    let ordering = if cfg.method.is_monomial_aware() {
+        cfg.ordering
+    } else {
+        FeatureOrdering::Native // VCA is data-driven already (§5)
+    };
+    let perm = order_features(&train.x, ordering);
+    let ordered = train.permute_features(&perm);
+    let transformer = fit_transformer(&cfg.method, &ordered, backend)?;
+    let feats = transformer.transform(&ordered.x);
+    let svm = LinearSvm::fit(&feats, &ordered.y, ordered.n_classes, cfg.svm)?;
+    Ok(PipelineModel { perm, transformer, svm, n_classes: train.n_classes })
+}
+
+fn permute_cols(x: &Matrix, perm: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(x.rows(), perm.len());
+    for i in 0..x.rows() {
+        for (new_j, &old_j) in perm.iter().enumerate() {
+            out.set(i, new_j, x.get(i, old_j));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::synthetic_dataset;
+
+    fn small_synth() -> Dataset {
+        synthetic_dataset(600, 9)
+    }
+
+    #[test]
+    fn oavi_pipeline_beats_chance_on_synthetic() {
+        let ds = small_synth();
+        let split = crate::data::splits::train_test_split(&ds, 0.6, 1);
+        let cfg = PipelineConfig {
+            method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005)),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        let model = train_pipeline(&cfg, &split.train).unwrap();
+        let err = model.error_on(&split.test);
+        assert!(err < 0.25, "test error {err}");
+        assert!(model.transformer.n_generators() > 0);
+    }
+
+    #[test]
+    fn all_methods_run_end_to_end() {
+        let ds = small_synth().head(300);
+        let split = crate::data::splits::train_test_split(&ds, 0.6, 2);
+        for method in [
+            GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.01)),
+            GeneratorMethod::Abm(AbmConfig::new(0.01)),
+            GeneratorMethod::Vca(VcaConfig::new(0.01)),
+        ] {
+            let cfg = PipelineConfig {
+                method,
+                svm: LinearSvmConfig::default(),
+                ordering: FeatureOrdering::Pearson,
+            };
+            let model = train_pipeline(&cfg, &split.train).unwrap();
+            let err = model.error_on(&split.test);
+            assert!(err <= 0.5, "{}: error {err}", method.name());
+            assert!(model.transformer.total_size() > 0);
+        }
+    }
+
+    #[test]
+    fn transform_concatenates_class_blocks() {
+        let ds = small_synth().head(200);
+        let method = GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01));
+        let t = fit_transformer(&method, &ds, &NativeBackend).unwrap();
+        let feats = t.transform(&ds.x);
+        assert_eq!(feats.cols(), t.n_generators());
+        assert_eq!(feats.rows(), 200);
+        assert_eq!(t.per_class.len(), 2);
+    }
+
+    #[test]
+    fn with_psi_rewrites_psi_everywhere() {
+        let m = GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.1)).with_psi(0.02);
+        match m {
+            GeneratorMethod::Oavi(cfg) => assert_eq!(cfg.psi, 0.02),
+            _ => unreachable!(),
+        }
+        let m = GeneratorMethod::Vca(VcaConfig::new(0.1)).with_psi(0.3);
+        match m {
+            GeneratorMethod::Vca(cfg) => assert_eq!(cfg.psi, 0.3),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn stats_are_finite_and_consistent() {
+        let ds = small_synth().head(300);
+        let method = GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.01));
+        let t = fit_transformer(&method, &ds, &NativeBackend).unwrap();
+        assert!(t.avg_degree() >= 1.0);
+        assert!((0.0..=1.0).contains(&t.sparsity()));
+        assert!(t.total_size() >= t.n_generators());
+    }
+}

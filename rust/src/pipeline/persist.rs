@@ -1,0 +1,270 @@
+//! Whole-pipeline persistence: ordering permutation + per-class generator
+//! sets + SVM weights, as one JSON document.  Covers monomial-aware
+//! models (OAVI family, ABM); VCA's op-DAG has its own in-memory
+//! representation and is not serialized (returns an error).
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{AviError, Result};
+use crate::oavi::persist as gs_persist;
+use crate::pipeline::{ClassModel, FittedTransformer, PipelineModel};
+use crate::svm::linear::{LinearSvm, LinearSvmConfig};
+
+/// Serialize a trained pipeline to JSON.
+pub fn to_json(model: &PipelineModel) -> Result<String> {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"perm\": [{}],\n",
+        model
+            .perm
+            .iter()
+            .map(|p| p.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    ));
+    out.push_str(&format!("  \"n_classes\": {},\n", model.n_classes));
+    out.push_str(&format!(
+        "  \"method\": {:?},\n",
+        model.transformer.method_name
+    ));
+    // per-class generator sets (nested JSON from oavi::persist)
+    out.push_str("  \"classes\": [\n");
+    for (i, cm) in model.transformer.per_class.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        match cm {
+            ClassModel::MonomialAware(gs) => out.push_str(&gs_persist::to_json(gs)),
+            ClassModel::Vca(_) => {
+                return Err(AviError::Config(
+                    "pipeline persistence does not support VCA models".into(),
+                ))
+            }
+        }
+    }
+    out.push_str("\n  ],\n");
+    // SVM weights
+    out.push_str("  \"svm\": {\n");
+    out.push_str(&format!("    \"lambda\": {:e},\n", model.svm.config.lambda));
+    out.push_str("    \"heads\": [\n");
+    for (hi, (w, b)) in model.svm.weights.iter().enumerate() {
+        if hi > 0 {
+            out.push_str(",\n");
+        }
+        let ws: Vec<String> = w.iter().map(|v| format!("{v:e}")).collect();
+        out.push_str(&format!(
+            "      {{\"bias\": {:e}, \"w\": [{}]}}",
+            b,
+            ws.join(",")
+        ));
+    }
+    out.push_str("\n    ]\n  }\n}\n");
+    Ok(out)
+}
+
+/// Parse a pipeline back.
+pub fn from_json(text: &str) -> Result<PipelineModel> {
+    // perm
+    let perm_src = extract_after(text, "\"perm\":")?;
+    let perm: Vec<usize> = parse_num_list(&perm_src)?
+        .into_iter()
+        .map(|v| v as usize)
+        .collect();
+    let n_classes = extract_num(text, "\"n_classes\":")? as usize;
+    let method_name = {
+        let pos = text
+            .find("\"method\":")
+            .ok_or_else(|| AviError::Data("persist: missing method".into()))?;
+        let rest = &text[pos + 9..];
+        let q1 = rest.find('"').ok_or_else(|| AviError::Data("bad method".into()))?;
+        let q2 = rest[q1 + 1..]
+            .find('"')
+            .ok_or_else(|| AviError::Data("bad method".into()))?;
+        rest[q1 + 1..q1 + 1 + q2].to_string()
+    };
+
+    // classes: split on the top-level generator-set objects.  Each class
+    // document starts with `{\n  "n_vars":` (the oavi::persist format).
+    let classes_pos = text
+        .find("\"classes\":")
+        .ok_or_else(|| AviError::Data("persist: missing classes".into()))?;
+    let svm_pos = text
+        .find("\"svm\":")
+        .ok_or_else(|| AviError::Data("persist: missing svm".into()))?;
+    let classes_src = &text[classes_pos..svm_pos];
+    let mut per_class = Vec::new();
+    let mut search = 0usize;
+    while let Some(rel) = classes_src[search..].find("\"n_vars\":") {
+        let start = search + rel;
+        let end = classes_src[start..]
+            .find("\"generators\"")
+            .and_then(|g| {
+                // the class document ends at the ]\n} closing the
+                // generators array
+                classes_src[start + g..].find("]\n}").map(|e| start + g + e + 3)
+            })
+            .ok_or_else(|| AviError::Data("persist: unterminated class".into()))?;
+        // include a bit of left context so extract finds keys
+        let doc = &classes_src[start.saturating_sub(2)..end];
+        per_class.push(ClassModel::MonomialAware(gs_persist::from_json(doc)?));
+        search = end;
+    }
+    if per_class.len() != n_classes {
+        return Err(AviError::Data(format!(
+            "persist: {} classes parsed, expected {n_classes}",
+            per_class.len()
+        )));
+    }
+
+    // svm
+    let svm_src = &text[svm_pos..];
+    let lambda = extract_num(svm_src, "\"lambda\":")?;
+    let mut weights = Vec::new();
+    let mut search = 0usize;
+    while let Some(rel) = svm_src[search..].find("\"bias\":") {
+        let start = search + rel;
+        let bias = extract_num(&svm_src[start..], "\"bias\":")?;
+        let w_src = extract_after(&svm_src[start..], "\"w\":")?;
+        let w = parse_num_list(&w_src)?;
+        search = start + 7;
+        weights.push((w, bias));
+    }
+    if weights.is_empty() {
+        return Err(AviError::Data("persist: no svm heads".into()));
+    }
+    let svm = LinearSvm {
+        weights,
+        n_classes,
+        config: LinearSvmConfig { lambda, ..Default::default() },
+        iters: vec![],
+    };
+    Ok(PipelineModel {
+        perm,
+        transformer: FittedTransformer { method_name, per_class },
+        svm,
+        n_classes,
+    })
+}
+
+/// Save to file.
+pub fn save(model: &PipelineModel, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    fs::write(path, to_json(model)?)?;
+    Ok(())
+}
+
+/// Load from file.
+pub fn load(path: &Path) -> Result<PipelineModel> {
+    from_json(&fs::read_to_string(path)?)
+}
+
+fn extract_after(text: &str, key: &str) -> Result<String> {
+    let pos = text
+        .find(key)
+        .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
+    let rest = &text[pos + key.len()..];
+    let start = rest
+        .find('[')
+        .ok_or_else(|| AviError::Data(format!("persist: {key} not an array")))?;
+    let end = rest[start..]
+        .find(']')
+        .ok_or_else(|| AviError::Data("persist: unbalanced".into()))?;
+    Ok(rest[start + 1..start + end].to_string())
+}
+
+fn extract_num(text: &str, key: &str) -> Result<f64> {
+    let pos = text
+        .find(key)
+        .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
+    let rest = &text[pos + key.len()..];
+    let end = rest.find([',', '}', '\n']).unwrap_or(rest.len());
+    rest[..end]
+        .trim()
+        .parse::<f64>()
+        .map_err(|e| AviError::Data(format!("persist: {key}: {e}")))
+}
+
+fn parse_num_list(src: &str) -> Result<Vec<f64>> {
+    if src.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    src.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<f64>()
+                .map_err(|e| AviError::Data(format!("persist: list: {e}")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::oavi::OaviConfig;
+    use crate::ordering::FeatureOrdering;
+    use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+    use crate::svm::linear::LinearSvmConfig;
+
+    fn trained() -> PipelineModel {
+        let ds = synthetic_dataset(400, 31);
+        train_pipeline(
+            &PipelineConfig {
+                method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005)),
+                svm: LinearSvmConfig::default(),
+                ordering: FeatureOrdering::Pearson,
+            },
+            &ds,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pipeline_roundtrip_predicts_identically() {
+        let model = trained();
+        let json = to_json(&model).unwrap();
+        let back = from_json(&json).unwrap();
+        let ds = synthetic_dataset(50, 32);
+        assert_eq!(model.predict(&ds.x), back.predict(&ds.x));
+        assert_eq!(model.perm, back.perm);
+        assert_eq!(
+            model.transformer.total_size(),
+            back.transformer.total_size()
+        );
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let model = trained();
+        let path = std::env::temp_dir().join("avi_scale_pipe/model.json");
+        save(&model, &path).unwrap();
+        let back = load(&path).unwrap();
+        let ds = synthetic_dataset(20, 33);
+        assert_eq!(model.predict(&ds.x), back.predict(&ds.x));
+    }
+
+    #[test]
+    fn vca_is_rejected() {
+        use crate::baselines::vca::VcaConfig;
+        let ds = synthetic_dataset(200, 34);
+        let model = train_pipeline(
+            &PipelineConfig {
+                method: GeneratorMethod::Vca(VcaConfig::new(0.01)),
+                svm: LinearSvmConfig::default(),
+                ordering: FeatureOrdering::Native,
+            },
+            &ds,
+        )
+        .unwrap();
+        assert!(to_json(&model).is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("{\"perm\": [0], \"n_classes\": 2}").is_err());
+    }
+}

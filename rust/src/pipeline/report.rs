@@ -1,0 +1,254 @@
+//! Table-3 style experiment cells: (method × dataset) → test error,
+//! hyperparameter-optimization time, test time, |G|+|O|, degree, SPAR —
+//! averaged over random 60/40 splits, with 3-fold CV inside each split
+//! (paper §6.2 protocol).
+
+use crate::coordinator::pool::ThreadPool;
+use crate::data::splits::train_test_split;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::ordering::FeatureOrdering;
+use crate::pipeline::gridsearch::{grid_search, grid_search_kernel_svm};
+use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use crate::svm::kernel::PolyKernelSvm;
+use crate::svm::linear::LinearSvmConfig;
+use crate::svm::metrics::error_rate;
+use crate::util::timer::Timer;
+use crate::util::{mean, std_dev};
+
+/// A Table-3 column entry: generator method + SVM, or the kernel baseline.
+#[derive(Clone, Copy, Debug)]
+pub enum Method {
+    /// generator-constructing method + linear SVM (OAVI family, ABM, VCA).
+    Generator(GeneratorMethod),
+    /// polynomial-kernel SVM baseline.
+    KernelSvm,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Generator(g) => format!("{}+SVM", g.name()),
+            Method::KernelSvm => "SVM".into(),
+        }
+    }
+}
+
+/// Experiment protocol knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct Protocol {
+    pub n_splits: usize,
+    pub train_frac: f64,
+    pub cv_folds: usize,
+    pub psis: &'static [f64],
+    pub lambdas: &'static [f64],
+    pub ordering: FeatureOrdering,
+    pub seed: u64,
+}
+
+impl Default for Protocol {
+    fn default() -> Self {
+        Protocol {
+            n_splits: 10,
+            train_frac: 0.6,
+            cv_folds: 3,
+            psis: super::gridsearch::PSI_GRID,
+            lambdas: super::gridsearch::LAMBDA_GRID,
+            ordering: FeatureOrdering::Pearson,
+            seed: 0xAB1E,
+        }
+    }
+}
+
+/// One (method × dataset) cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub method: String,
+    pub dataset: String,
+    pub error_mean: f64,
+    pub error_std: f64,
+    /// hyperparameter search + final refit, seconds (mean over splits).
+    pub hyper_secs: f64,
+    /// test-set evaluation seconds (mean).
+    pub test_secs: f64,
+    /// Σ_i |G^i|+|O^i| (generator methods only; 0 for kernel SVM).
+    pub size: f64,
+    /// average generator degree.
+    pub degree: f64,
+    /// (SPAR).
+    pub spar: f64,
+}
+
+/// Run one cell of Table 3.
+pub fn run_cell(
+    method: Method,
+    ds: &Dataset,
+    protocol: &Protocol,
+    pool: &ThreadPool,
+) -> Result<CellResult> {
+    let mut errors = Vec::new();
+    let mut hyper_times = Vec::new();
+    let mut test_times = Vec::new();
+    let mut sizes = Vec::new();
+    let mut degrees = Vec::new();
+    let mut spars = Vec::new();
+
+    for split_i in 0..protocol.n_splits {
+        let split = train_test_split(ds, protocol.train_frac, protocol.seed + split_i as u64);
+        match method {
+            Method::Generator(gen) => {
+                let hyper_timer = Timer::start();
+                let gs = grid_search(
+                    &gen,
+                    protocol.ordering,
+                    &split.train,
+                    protocol.psis,
+                    protocol.lambdas,
+                    protocol.cv_folds,
+                    protocol.seed + 100 + split_i as u64,
+                    pool,
+                )?;
+                // refit on the whole training split with the best combo
+                let cfg = PipelineConfig {
+                    method: gen.with_psi(gs.best_psi),
+                    svm: LinearSvmConfig { lambda: gs.best_lambda, ..Default::default() },
+                    ordering: protocol.ordering,
+                };
+                let model = train_pipeline(&cfg, &split.train)?;
+                hyper_times.push(hyper_timer.secs());
+
+                let test_timer = Timer::start();
+                let err = model.error_on(&split.test);
+                test_times.push(test_timer.secs());
+                errors.push(err);
+                sizes.push(model.transformer.total_size() as f64);
+                degrees.push(model.transformer.avg_degree());
+                spars.push(model.transformer.sparsity());
+            }
+            Method::KernelSvm => {
+                let hyper_timer = Timer::start();
+                let (best_cfg, _cv_err, _secs) = grid_search_kernel_svm(
+                    &split.train,
+                    &[2, 3, 4],
+                    protocol.lambdas,
+                    protocol.cv_folds,
+                    protocol.seed + 100 + split_i as u64,
+                    pool,
+                )?;
+                let svm =
+                    PolyKernelSvm::fit(&split.train.x, &split.train.y, ds.n_classes, best_cfg)?;
+                hyper_times.push(hyper_timer.secs());
+                let test_timer = Timer::start();
+                let err = error_rate(&svm.predict(&split.test.x), &split.test.y);
+                test_times.push(test_timer.secs());
+                errors.push(err);
+                sizes.push(0.0);
+                degrees.push(best_cfg.degree as f64);
+                spars.push(0.0);
+            }
+        }
+    }
+
+    Ok(CellResult {
+        method: method.name(),
+        dataset: ds.name.clone(),
+        error_mean: mean(&errors),
+        error_std: std_dev(&errors),
+        hyper_secs: mean(&hyper_times),
+        test_secs: mean(&test_times),
+        size: mean(&sizes),
+        degree: mean(&degrees),
+        spar: mean(&spars),
+    })
+}
+
+/// Pretty-print a block of cells as a paper-style table.
+pub fn format_table(cells: &[CellResult]) -> String {
+    use crate::util::sci;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<22} {:<10} {:>9} {:>11} {:>11} {:>9} {:>7} {:>6}\n",
+        "method", "dataset", "err %", "hyper s", "test s", "|G|+|O|", "deg", "SPAR"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<22} {:<10} {:>9.2} {:>11} {:>11} {:>9.1} {:>7.2} {:>6.2}\n",
+            c.method,
+            c.dataset,
+            c.error_mean * 100.0,
+            sci(c.hyper_secs),
+            sci(c.test_secs),
+            c.size,
+            c.degree,
+            c.spar
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::oavi::OaviConfig;
+
+    #[test]
+    fn cell_runs_for_generator_method() {
+        let ds = synthetic_dataset(240, 31);
+        let protocol = Protocol {
+            n_splits: 2,
+            cv_folds: 2,
+            psis: &[0.01],
+            lambdas: &[1e-3],
+            ..Default::default()
+        };
+        let pool = ThreadPool::new(2);
+        let cell = run_cell(
+            Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01))),
+            &ds,
+            &protocol,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(cell.method, "CGAVI-IHB+SVM");
+        assert!(cell.error_mean <= 0.5);
+        assert!(cell.size > 0.0);
+        assert!(cell.hyper_secs > 0.0);
+        assert!(cell.degree >= 1.0);
+    }
+
+    #[test]
+    fn cell_runs_for_kernel_svm() {
+        let ds = synthetic_dataset(150, 32);
+        let protocol = Protocol {
+            n_splits: 1,
+            cv_folds: 2,
+            psis: &[0.01],
+            lambdas: &[1e-3],
+            ..Default::default()
+        };
+        let pool = ThreadPool::new(2);
+        let cell = run_cell(Method::KernelSvm, &ds, &protocol, &pool).unwrap();
+        assert_eq!(cell.method, "SVM");
+        assert_eq!(cell.size, 0.0);
+    }
+
+    #[test]
+    fn table_formatting_contains_rows() {
+        let cell = CellResult {
+            method: "X+SVM".into(),
+            dataset: "toy".into(),
+            error_mean: 0.0123,
+            error_std: 0.001,
+            hyper_secs: 3.1,
+            test_secs: 0.0015,
+            size: 28.8,
+            degree: 2.09,
+            spar: 0.41,
+        };
+        let t = format_table(&[cell]);
+        assert!(t.contains("X+SVM"));
+        assert!(t.contains("1.23"));
+        assert!(t.contains("3.1e+00"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Border computation (Definition 2.5).
+//!
+//! For an order ideal `O` the degree-d border is
+//! `∂_d O = { u ∈ T_d : every proper divisor of u lies in O }`.
+//! Because `O` is divisor-closed it suffices to check the ≤ n *maximal*
+//! divisors `u / x_j` (for `x_j | u`): if they are all in `O`, every
+//! deeper divisor is too.
+//!
+//! Candidates are generated as `t · x_j` for `t ∈ O_{d−1}`; each candidate
+//! carries the recipe `(parent ∈ O, var)` used for its O(m) evaluation
+//! column (`u(X) = t(X) ⊙ x_j`).
+
+use std::collections::HashSet;
+
+use crate::poly::eval::TermSet;
+use crate::poly::term::Term;
+
+/// A border term with its evaluation recipe.
+#[derive(Clone, Debug)]
+pub struct BorderTerm {
+    pub term: Term,
+    /// Index into the `TermSet` of the parent `term / x_var`.
+    pub parent: usize,
+    /// Variable index such that `term = parent · x_var`.
+    pub var: usize,
+}
+
+/// Compute `∂_d O`, DegLex-ascending.
+///
+/// `o` must be an order ideal containing all accepted terms of degree
+/// < d (which OAVI guarantees).  Returns an empty vec when the border is
+/// empty — OAVI's termination condition.
+pub fn compute_border(o: &TermSet, d: u32) -> Vec<BorderTerm> {
+    let n = o.n_vars();
+    let mut seen: HashSet<Term> = HashSet::new();
+    let mut out: Vec<BorderTerm> = Vec::new();
+
+    for parent_idx in o.degree_indices(d - 1) {
+        let parent = &o.terms()[parent_idx];
+        for j in 0..n {
+            let cand = parent.times_var(j);
+            if seen.contains(&cand) {
+                continue;
+            }
+            seen.insert(cand.clone());
+            // all maximal divisors must lie in O
+            let mut ok = true;
+            for k in 0..n {
+                if let Some(div) = cand.div_var(k) {
+                    if !o.contains(&div) {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            // canonical recipe: divide by the smallest variable present, so
+            // identical candidates generated via different parents agree
+            let var = cand.min_var().expect("degree ≥ 1");
+            let canon_parent = cand.div_var(var).expect("positive exponent");
+            let parent_pos = o.position(&canon_parent).expect("order ideal");
+            out.push(BorderTerm { term: cand, parent: parent_pos, var });
+        }
+    }
+    out.sort_by(|a, b| a.term.cmp(&b.term));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    /// O = {1}: border at degree 1 is all n variables.
+    #[test]
+    fn degree1_border_is_all_vars() {
+        let o = TermSet::with_one(4);
+        let border = compute_border(&o, 1);
+        assert_eq!(border.len(), 4);
+        for (j, bt) in border.iter().enumerate() {
+            assert_eq!(bt.term, Term::var(4, j));
+            assert_eq!(bt.parent, 0);
+            assert_eq!(bt.var, j);
+        }
+    }
+
+    /// O = {1, x0, x1} over n=2: degree-2 border is {x0², x0x1, x1²}.
+    #[test]
+    fn full_degree2_border() {
+        let mut o = TermSet::with_one(2);
+        o.push_product(0, 0).unwrap();
+        o.push_product(0, 1).unwrap();
+        let border = compute_border(&o, 2);
+        let terms: Vec<Term> = border.iter().map(|b| b.term.clone()).collect();
+        assert_eq!(
+            terms,
+            vec![
+                Term::from_exps(&[2, 0]),
+                Term::from_exps(&[1, 1]),
+                Term::from_exps(&[0, 2]),
+            ]
+        );
+    }
+
+    /// If x1 was claimed as a leading term (not in O), any multiple of x1
+    /// is excluded from later borders.
+    #[test]
+    fn missing_divisor_excludes_candidates() {
+        let mut o = TermSet::with_one(2);
+        o.push_product(0, 0).unwrap(); // only x0 ∈ O; x1 became a generator
+        let border = compute_border(&o, 2);
+        let terms: Vec<Term> = border.iter().map(|b| b.term.clone()).collect();
+        assert_eq!(terms, vec![Term::from_exps(&[2, 0])]); // x0x1, x1² excluded
+    }
+
+    /// Empty border when the last degree produced no O terms.
+    #[test]
+    fn empty_border_terminates() {
+        let o = TermSet::with_one(3); // degree-0 only
+        assert!(compute_border(&o, 2).is_empty());
+    }
+
+    #[test]
+    fn property_border_invariants() {
+        property(32, |rng| {
+            let n = 1 + rng.below(4);
+            let mut o = TermSet::with_one(n);
+            let mut d = 1u32;
+            // simulate a few OAVI degrees with random accept/reject
+            for _ in 0..3 {
+                let border = compute_border(&o, d);
+                // (1) sorted DegLex, no duplicates
+                for w in border.windows(2) {
+                    if w[0].term >= w[1].term {
+                        return Err(format!(
+                            "border not strictly ascending: {} then {}",
+                            w[0].term, w[1].term
+                        ));
+                    }
+                }
+                for bt in &border {
+                    // (2) degree is exactly d
+                    if bt.term.degree() != d {
+                        return Err(format!("border term {} has degree != {d}", bt.term));
+                    }
+                    // (3) not already in O
+                    if o.contains(&bt.term) {
+                        return Err(format!("border term {} already in O", bt.term));
+                    }
+                    // (4) recipe is consistent
+                    let parent = &o.terms()[bt.parent];
+                    if parent.times_var(bt.var) != bt.term {
+                        return Err("recipe mismatch".into());
+                    }
+                    // (5) all maximal divisors in O
+                    for k in 0..n {
+                        if let Some(div) = bt.term.div_var(k) {
+                            if !o.contains(&div) {
+                                return Err(format!(
+                                    "divisor {div} of {} missing from O",
+                                    bt.term
+                                ));
+                            }
+                        }
+                    }
+                }
+                // randomly accept ~60% of border terms into O (DegLex order
+                // is preserved because the border is sorted)
+                for bt in &border {
+                    if rng.uniform() < 0.6 {
+                        o.push_product(bt.parent, bt.var).map_err(|e| e.to_string())?;
+                    }
+                }
+                d += 1;
+            }
+            Ok(())
+        });
+    }
+}

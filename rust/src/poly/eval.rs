@@ -1,0 +1,252 @@
+//! Order-ideal term sets with one-multiply-per-term evaluation.
+//!
+//! Every non-constant term OAVI ever touches is `parent · x_j` for a
+//! parent already in `O` (O is an order ideal by construction).  Storing
+//! that recipe makes evaluating all of `O` over q new points cost one
+//! multiply per (term, point) — exactly the O((|G|+|O|)·q) evaluation
+//! complexity of Theorem 4.2.
+
+use std::collections::HashMap;
+
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+use crate::poly::term::Term;
+
+/// How a term is produced from earlier ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Recipe {
+    /// The constant-1 monomial.
+    One,
+    /// `terms[parent] * x_var`.
+    Product { parent: usize, var: usize },
+}
+
+/// An append-only, DegLex-ascending order ideal of terms with recipes.
+#[derive(Clone, Debug)]
+pub struct TermSet {
+    n_vars: usize,
+    terms: Vec<Term>,
+    recipes: Vec<Recipe>,
+    index: HashMap<Term, usize>,
+}
+
+impl TermSet {
+    /// Start with O = {𝟙} (OAVI Line 2).
+    pub fn with_one(n_vars: usize) -> Self {
+        let one = Term::one(n_vars);
+        let mut index = HashMap::new();
+        index.insert(one.clone(), 0);
+        TermSet { n_vars, terms: vec![one], recipes: vec![Recipe::One], index }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    #[inline]
+    pub fn n_vars(&self) -> usize {
+        self.n_vars
+    }
+
+    /// Terms in append (= DegLex) order.
+    #[inline]
+    pub fn terms(&self) -> &[Term] {
+        &self.terms
+    }
+
+    #[inline]
+    pub fn recipe(&self, i: usize) -> Recipe {
+        self.recipes[i]
+    }
+
+    /// Index of a term, if present.
+    pub fn position(&self, t: &Term) -> Option<usize> {
+        self.index.get(t).copied()
+    }
+
+    pub fn contains(&self, t: &Term) -> bool {
+        self.index.contains_key(t)
+    }
+
+    /// Append `parent_idx · x_var`; enforces DegLex-ascending append order
+    /// and order-ideal structure (the parent must already be present).
+    pub fn push_product(&mut self, parent_idx: usize, var: usize) -> Result<usize> {
+        if parent_idx >= self.terms.len() {
+            return Err(AviError::Config(format!(
+                "push_product: parent {parent_idx} out of range"
+            )));
+        }
+        let term = self.terms[parent_idx].times_var(var);
+        if let Some(last) = self.terms.last() {
+            if *last >= term {
+                return Err(AviError::Config(format!(
+                    "push_product: {term} would break DegLex append order (last = {last})"
+                )));
+            }
+        }
+        let idx = self.terms.len();
+        self.index.insert(term.clone(), idx);
+        self.terms.push(term);
+        self.recipes.push(Recipe::Product { parent: parent_idx, var });
+        Ok(idx)
+    }
+
+    /// Evaluate every term over the rows of `x` (m×n) → one column per
+    /// term (each of length m).  One multiply per (term, sample).
+    pub fn eval_columns(&self, x: &Matrix) -> Vec<Vec<f64>> {
+        let m = x.rows();
+        let mut cols: Vec<Vec<f64>> = Vec::with_capacity(self.terms.len());
+        for recipe in &self.recipes {
+            let col = self.eval_recipe_column(x, *recipe, &cols, m);
+            cols.push(col);
+        }
+        cols
+    }
+
+    /// Evaluate one recipe given already-evaluated earlier columns.
+    pub fn eval_recipe_column(
+        &self,
+        x: &Matrix,
+        recipe: Recipe,
+        cols: &[Vec<f64>],
+        m: usize,
+    ) -> Vec<f64> {
+        match recipe {
+            Recipe::One => vec![1.0; m],
+            Recipe::Product { parent, var } => {
+                let p = &cols[parent];
+                (0..m).map(|i| p[i] * x.get(i, var)).collect()
+            }
+        }
+    }
+
+    /// Evaluate every term at a single point (used by tests/diagnostics).
+    pub fn eval_point(&self, x: &[f64]) -> Vec<f64> {
+        let mut vals = Vec::with_capacity(self.terms.len());
+        for recipe in &self.recipes {
+            let v = match *recipe {
+                Recipe::One => 1.0,
+                Recipe::Product { parent, var } => vals[parent] * x[var],
+            };
+            vals.push(v);
+        }
+        vals
+    }
+
+    /// Maximum degree currently present.
+    pub fn max_degree(&self) -> u32 {
+        self.terms.iter().map(|t| t.degree()).max().unwrap_or(0)
+    }
+
+    /// Indices of terms with exactly degree d.
+    pub fn degree_indices(&self, d: u32) -> Vec<usize> {
+        self.terms
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.degree() == d)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    fn sample_x(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+        let mut x = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                x.set(i, j, rng.uniform());
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn with_one_evaluates_to_ones() {
+        let ts = TermSet::with_one(3);
+        let mut rng = Rng::new(1);
+        let x = sample_x(&mut rng, 5, 3);
+        let cols = ts.eval_columns(&x);
+        assert_eq!(cols, vec![vec![1.0; 5]]);
+    }
+
+    #[test]
+    fn push_product_builds_expected_terms() {
+        let mut ts = TermSet::with_one(2);
+        let i1 = ts.push_product(0, 0).unwrap(); // x0
+        let i2 = ts.push_product(0, 1).unwrap(); // x1
+        let i3 = ts.push_product(i1, 0).unwrap(); // x0²
+        assert_eq!(ts.terms()[i1], Term::var(2, 0));
+        assert_eq!(ts.terms()[i2], Term::var(2, 1));
+        assert_eq!(ts.terms()[i3], Term::from_exps(&[2, 0]));
+        assert!(ts.contains(&Term::from_exps(&[2, 0])));
+        assert_eq!(ts.position(&Term::var(2, 1)), Some(i2));
+    }
+
+    #[test]
+    fn push_product_rejects_order_violation() {
+        let mut ts = TermSet::with_one(2);
+        ts.push_product(0, 1).unwrap(); // x1 first
+        // now x0 < x1 would break append order
+        assert!(ts.push_product(0, 0).is_err());
+    }
+
+    #[test]
+    fn eval_columns_match_direct_term_eval() {
+        property(32, |rng| {
+            let n = 1 + rng.below(4);
+            let mut ts = TermSet::with_one(n);
+            // grow a random order ideal: repeatedly multiply a random
+            // existing term by a var, skipping order violations
+            for _ in 0..12 {
+                let parent = rng.below(ts.len());
+                let var = rng.below(n);
+                let _ = ts.push_product(parent, var);
+            }
+            let m = 6;
+            let x = sample_x(rng, m, n);
+            let cols = ts.eval_columns(&x);
+            for (ti, term) in ts.terms().iter().enumerate() {
+                for i in 0..m {
+                    let direct = term.eval(x.row(i));
+                    if (cols[ti][i] - direct).abs() > 1e-12 {
+                        return Err(format!(
+                            "term {term} at row {i}: {} vs {}",
+                            cols[ti][i], direct
+                        ));
+                    }
+                }
+            }
+            // eval_point agrees with columns
+            let point_vals = ts.eval_point(x.row(0));
+            for (ti, v) in point_vals.iter().enumerate() {
+                if (cols[ti][0] - v).abs() > 1e-12 {
+                    return Err("eval_point mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degree_queries() {
+        let mut ts = TermSet::with_one(2);
+        let i1 = ts.push_product(0, 0).unwrap();
+        ts.push_product(0, 1).unwrap();
+        ts.push_product(i1, 0).unwrap();
+        assert_eq!(ts.max_degree(), 2);
+        assert_eq!(ts.degree_indices(1).len(), 2);
+        assert_eq!(ts.degree_indices(2).len(), 1);
+        assert_eq!(ts.degree_indices(0), vec![0]);
+    }
+}

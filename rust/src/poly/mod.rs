@@ -1,0 +1,16 @@
+//! Monomials, term orderings, borders, and generator polynomials.
+//!
+//! OAVI is *monomial-aware*: it walks terms in degree-lexicographic order
+//! (DegLex, paper §2.2), maintains an order ideal `O ⊆ T` of non-leading
+//! terms, and constructs generators `g = Σ c_j t_j + u` with `t_j ∈ O`,
+//! leading term `u` from the border `∂_d O` (Definition 2.5), and LTC = 1.
+
+pub mod border;
+pub mod eval;
+pub mod poly;
+pub mod term;
+
+pub use border::{compute_border, BorderTerm};
+pub use eval::TermSet;
+pub use poly::{Generator, GeneratorSet};
+pub use term::Term;

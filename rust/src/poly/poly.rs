@@ -1,0 +1,256 @@
+//! Generator polynomials `g = Σ_j c_j t_j + u` (LTC = 1) and generator
+//! sets with the paper's reporting statistics (average degree, SPAR).
+
+use crate::linalg::dense::Matrix;
+use crate::poly::eval::TermSet;
+use crate::poly::term::Term;
+
+/// A (ψ,1)-approximately vanishing generator.
+///
+/// `coeffs[j]` multiplies the j-th term of the `TermSet` snapshot the
+/// generator was built against (only the first `coeffs.len()` terms of the
+/// final O are referenced — O only *grows* during OAVI, so indices stay
+/// valid).
+#[derive(Clone, Debug)]
+pub struct Generator {
+    /// Coefficients over the O-prefix (length = |O| at construction time).
+    pub coeffs: Vec<f64>,
+    /// Leading term u (coefficient 1).
+    pub leading: Term,
+    /// Recipe for evaluating u on new data: O-index of `u / x_var`.
+    pub leading_parent: usize,
+    /// Variable such that `u = O[leading_parent] · x_var`.
+    pub leading_var: usize,
+    /// Training MSE(g, X) at construction.
+    pub mse: f64,
+}
+
+impl Generator {
+    /// Degree of the generator (= degree of its leading term).
+    pub fn degree(&self) -> u32 {
+        self.leading.degree()
+    }
+
+    /// Number of non-leading coefficients (gₑ in (SPAR)).
+    pub fn n_coeffs(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Number of zero non-leading coefficients (g_z in (SPAR)).
+    pub fn n_zero_coeffs(&self) -> usize {
+        self.coeffs.iter().filter(|c| **c == 0.0).count()
+    }
+
+    /// ℓ1 norm of the full coefficient vector (incl. the leading 1).
+    pub fn coeff_l1(&self) -> f64 {
+        1.0 + self.coeffs.iter().map(|c| c.abs()).sum::<f64>()
+    }
+
+    /// Evaluate over precomputed O columns + leading column.
+    pub fn eval_from_columns(&self, o_cols: &[Vec<f64>], lead_col: &[f64]) -> Vec<f64> {
+        let m = lead_col.len();
+        let mut out = lead_col.to_vec();
+        for (j, &c) in self.coeffs.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let col = &o_cols[j];
+            for i in 0..m {
+                out[i] += c * col[i];
+            }
+        }
+        debug_assert_eq!(out.len(), m);
+        out
+    }
+}
+
+/// The output of a generator-constructing run on one class:
+/// `(G, O) = OAVI(X, ψ)`.
+#[derive(Clone, Debug)]
+pub struct GeneratorSet {
+    pub o_terms: TermSet,
+    pub generators: Vec<Generator>,
+}
+
+impl GeneratorSet {
+    /// `|G| + |O|` — the paper's central size statistic.
+    pub fn total_size(&self) -> usize {
+        self.generators.len() + self.o_terms.len()
+    }
+
+    /// Average degree of the generators (Table 3 row "Degree").
+    pub fn avg_degree(&self) -> f64 {
+        if self.generators.is_empty() {
+            return 0.0;
+        }
+        self.generators.iter().map(|g| g.degree() as f64).sum::<f64>()
+            / self.generators.len() as f64
+    }
+
+    /// (SPAR): Σ g_z / Σ gₑ over all generators; larger = sparser.
+    pub fn sparsity(&self) -> f64 {
+        let (mut gz, mut ge) = (0usize, 0usize);
+        for g in &self.generators {
+            gz += g.n_zero_coeffs();
+            ge += g.n_coeffs();
+        }
+        if ge == 0 {
+            0.0
+        } else {
+            gz as f64 / ge as f64
+        }
+    }
+
+    /// Max ℓ1 norm over generator coefficient vectors (generalization
+    /// bound diagnostics; must stay ≤ τ for CGAVI variants).
+    pub fn max_coeff_l1(&self) -> f64 {
+        self.generators.iter().map(|g| g.coeff_l1()).fold(0.0, f64::max)
+    }
+
+    /// Evaluate |g(z)| for every generator over new data — the (FT)
+    /// feature block contributed by this class (m × |G|, row-major).
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let m = x.rows();
+        let o_cols = self.o_terms.eval_columns(x);
+        let mut out = Matrix::zeros(m, self.generators.len());
+        for (gi, g) in self.generators.iter().enumerate() {
+            let lead: Vec<f64> = (0..m)
+                .map(|i| o_cols[g.leading_parent][i] * x.get(i, g.leading_var))
+                .collect();
+            let vals = g.eval_from_columns(&o_cols, &lead);
+            for i in 0..m {
+                out.set(i, gi, vals[i].abs());
+            }
+        }
+        out
+    }
+
+    /// Human-readable polynomial strings — the interpretability payoff of
+    /// sparse monomial-aware generators the paper emphasizes (§1).
+    /// Coefficients below `tol` are treated as zero.
+    pub fn describe(&self, tol: f64) -> Vec<String> {
+        self.generators
+            .iter()
+            .map(|g| {
+                let mut s = g.leading.to_string();
+                for (j, &c) in g.coeffs.iter().enumerate() {
+                    if c.abs() <= tol {
+                        continue;
+                    }
+                    let term = &self.o_terms.terms()[j];
+                    let mag = c.abs();
+                    let sign = if c >= 0.0 { "+" } else { "-" };
+                    if term.degree() == 0 {
+                        s.push_str(&format!(" {sign} {mag:.4}"));
+                    } else {
+                        s.push_str(&format!(" {sign} {mag:.4}*{term}"));
+                    }
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// MSE of every generator over new data (out-sample vanishing check).
+    pub fn mse_on(&self, x: &Matrix) -> Vec<f64> {
+        let m = x.rows();
+        let o_cols = self.o_terms.eval_columns(x);
+        self.generators
+            .iter()
+            .map(|g| {
+                let lead: Vec<f64> = (0..m)
+                    .map(|i| o_cols[g.leading_parent][i] * x.get(i, g.leading_var))
+                    .collect();
+                let vals = g.eval_from_columns(&o_cols, &lead);
+                vals.iter().map(|v| v * v).sum::<f64>() / m as f64
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny hand-checkable generator set over n=1:
+    /// O = {1, x0}, generator g = x0² − x0 (vanishes on {0, 1}).
+    fn toy() -> GeneratorSet {
+        let mut o = TermSet::with_one(1);
+        let ix = o.push_product(0, 0).unwrap(); // x0
+        let g = Generator {
+            coeffs: vec![0.0, -1.0], // 0·1 − 1·x0
+            leading: Term::from_exps(&[2]),
+            leading_parent: ix,
+            leading_var: 0,
+            mse: 0.0,
+        };
+        GeneratorSet { o_terms: o, generators: vec![g] }
+    }
+
+    #[test]
+    fn stats() {
+        let gs = toy();
+        assert_eq!(gs.total_size(), 3); // |G|=1, |O|=2
+        assert_eq!(gs.avg_degree(), 2.0);
+        assert_eq!(gs.sparsity(), 0.5); // one zero of two coefficients
+        assert_eq!(gs.max_coeff_l1(), 2.0);
+    }
+
+    #[test]
+    fn transform_vanishes_on_roots() {
+        let gs = toy();
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![0.5]]).unwrap();
+        let t = gs.transform(&x);
+        assert!(t.get(0, 0).abs() < 1e-15); // g(0) = 0
+        assert!(t.get(1, 0).abs() < 1e-15); // g(1) = 0
+        assert!((t.get(2, 0) - 0.25).abs() < 1e-15); // |0.25 − 0.5|
+    }
+
+    #[test]
+    fn mse_on_matches_transform() {
+        let gs = toy();
+        let x = Matrix::from_rows(&[vec![0.0], vec![0.5], vec![1.0]]).unwrap();
+        let mse = gs.mse_on(&x);
+        assert_eq!(mse.len(), 1);
+        assert!((mse[0] - 0.0625 / 3.0).abs() < 1e-12); // (0 + 0.0625 + 0) / 3
+    }
+
+    #[test]
+    fn generator_accessors() {
+        let gs = toy();
+        let g = &gs.generators[0];
+        assert_eq!(g.degree(), 2);
+        assert_eq!(g.n_coeffs(), 2);
+        assert_eq!(g.n_zero_coeffs(), 1);
+    }
+}
+
+#[cfg(test)]
+mod describe_tests {
+    use super::*;
+    use crate::poly::eval::TermSet;
+    use crate::poly::term::Term;
+
+    #[test]
+    fn describe_formats_sparse_polynomials() {
+        let mut o = TermSet::with_one(2);
+        let ix = o.push_product(0, 0).unwrap(); // x0
+        let g = Generator {
+            coeffs: vec![0.5, -1.0], // 0.5·1 − 1·x0
+            leading: Term::from_exps(&[2, 0]),
+            leading_parent: ix,
+            leading_var: 0,
+            mse: 0.0,
+        };
+        let gs = GeneratorSet { o_terms: o, generators: vec![g] };
+        let desc = gs.describe(1e-12);
+        // terms appear in O (DegLex) order: constant, then x0
+        assert_eq!(desc, vec!["x0^2 + 0.5000 - 1.0000*x0".to_string()]);
+        // tol filters small coefficients
+        let gs2 = GeneratorSet {
+            o_terms: gs.o_terms.clone(),
+            generators: vec![Generator { coeffs: vec![1e-15, -1.0], ..gs.generators[0].clone() }],
+        };
+        assert_eq!(gs2.describe(1e-12), vec!["x0^2 - 1.0000*x0".to_string()]);
+    }
+}

@@ -1,0 +1,284 @@
+//! Monomials as exponent vectors with the DegLex total order.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// A monomial over n variables, stored as an exponent vector.
+///
+/// The constant-1 monomial is the all-zero vector.  Ordering is
+/// degree-lexicographic (DegLex, paper §2.2): lower total degree first;
+/// ties broken lexicographically with *earlier variables heavier*, i.e.
+/// for degree-2 terms over (t, u, v):
+/// `t² < tu < tv < u² < uv < v²`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Term {
+    exps: Box<[u16]>,
+    degree: u32,
+}
+
+impl Term {
+    /// The constant-1 monomial.
+    pub fn one(n_vars: usize) -> Self {
+        Term { exps: vec![0u16; n_vars].into_boxed_slice(), degree: 0 }
+    }
+
+    /// The degree-1 monomial x_j.
+    pub fn var(n_vars: usize, j: usize) -> Self {
+        let mut exps = vec![0u16; n_vars];
+        exps[j] = 1;
+        Term { exps: exps.into_boxed_slice(), degree: 1 }
+    }
+
+    /// From an explicit exponent vector.
+    pub fn from_exps(exps: &[u16]) -> Self {
+        let degree = exps.iter().map(|&e| e as u32).sum();
+        Term { exps: exps.to_vec().into_boxed_slice(), degree }
+    }
+
+    /// Total degree.
+    #[inline]
+    pub fn degree(&self) -> u32 {
+        self.degree
+    }
+
+    /// Number of variables.
+    #[inline]
+    pub fn n_vars(&self) -> usize {
+        self.exps.len()
+    }
+
+    /// Exponent of variable j.
+    #[inline]
+    pub fn exp(&self, j: usize) -> u16 {
+        self.exps[j]
+    }
+
+    /// Exponent vector.
+    #[inline]
+    pub fn exps(&self) -> &[u16] {
+        &self.exps
+    }
+
+    /// self * x_j.
+    pub fn times_var(&self, j: usize) -> Term {
+        let mut exps = self.exps.to_vec();
+        exps[j] += 1;
+        Term { exps: exps.into_boxed_slice(), degree: self.degree + 1 }
+    }
+
+    /// self / x_j, or None if x_j ∤ self.
+    pub fn div_var(&self, j: usize) -> Option<Term> {
+        if self.exps[j] == 0 {
+            return None;
+        }
+        let mut exps = self.exps.to_vec();
+        exps[j] -= 1;
+        Some(Term { exps: exps.into_boxed_slice(), degree: self.degree - 1 })
+    }
+
+    /// Does `self` divide `other`?
+    pub fn divides(&self, other: &Term) -> bool {
+        self.exps.iter().zip(other.exps.iter()).all(|(a, b)| a <= b)
+    }
+
+    /// Smallest variable index with a positive exponent (None for 𝟙).
+    pub fn min_var(&self) -> Option<usize> {
+        self.exps.iter().position(|&e| e > 0)
+    }
+
+    /// Evaluate at a point.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.exps.len());
+        let mut acc = 1.0;
+        for (xi, &e) in x.iter().zip(self.exps.iter()) {
+            match e {
+                0 => {}
+                1 => acc *= xi,
+                2 => acc *= xi * xi,
+                _ => acc *= xi.powi(e as i32),
+            }
+        }
+        acc
+    }
+}
+
+impl Ord for Term {
+    fn cmp(&self, other: &Self) -> Ordering {
+        debug_assert_eq!(self.n_vars(), other.n_vars());
+        match self.degree.cmp(&other.degree) {
+            Ordering::Equal => {}
+            ord => return ord,
+        }
+        // Equal degree: lexicographic with earlier variables heavier —
+        // a HIGHER exponent on an earlier variable makes the term SMALLER
+        // (t² < tu: (2,0) < (1,1)).
+        for (a, b) in self.exps.iter().zip(other.exps.iter()) {
+            match b.cmp(a) {
+                Ordering::Equal => {}
+                ord => return ord,
+            }
+        }
+        Ordering::Equal
+    }
+}
+
+impl PartialOrd for Term {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl fmt::Debug for Term {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl fmt::Display for Term {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.degree == 0 {
+            return write!(f, "1");
+        }
+        let mut first = true;
+        for (j, &e) in self.exps.iter().enumerate() {
+            if e == 0 {
+                continue;
+            }
+            if !first {
+                write!(f, "*")?;
+            }
+            first = false;
+            if e == 1 {
+                write!(f, "x{j}")?;
+            } else {
+                write!(f, "x{j}^{e}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    fn t(exps: &[u16]) -> Term {
+        Term::from_exps(exps)
+    }
+
+    #[test]
+    fn paper_deglex_example() {
+        // 1 < t < u < v < t² < tu < tv < u² < uv < v² < t³ < ...
+        let seq = vec![
+            t(&[0, 0, 0]),
+            t(&[1, 0, 0]),
+            t(&[0, 1, 0]),
+            t(&[0, 0, 1]),
+            t(&[2, 0, 0]),
+            t(&[1, 1, 0]),
+            t(&[1, 0, 1]),
+            t(&[0, 2, 0]),
+            t(&[0, 1, 1]),
+            t(&[0, 0, 2]),
+            t(&[3, 0, 0]),
+        ];
+        for w in seq.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn divisibility() {
+        let tu = t(&[1, 1, 0]);
+        assert!(t(&[1, 0, 0]).divides(&tu));
+        assert!(t(&[0, 1, 0]).divides(&tu));
+        assert!(!t(&[0, 0, 1]).divides(&tu));
+        assert!(t(&[0, 0, 0]).divides(&tu));
+        assert_eq!(tu.div_var(0), Some(t(&[0, 1, 0])));
+        assert_eq!(tu.div_var(2), None);
+    }
+
+    #[test]
+    fn times_var_and_min_var() {
+        let one = Term::one(3);
+        assert_eq!(one.min_var(), None);
+        let u = one.times_var(1);
+        assert_eq!(u, Term::var(3, 1));
+        assert_eq!(u.min_var(), Some(1));
+        assert_eq!(u.times_var(1).exp(1), 2);
+        assert_eq!(u.times_var(1).degree(), 2);
+    }
+
+    #[test]
+    fn eval_matches_definition() {
+        let term = t(&[2, 0, 1]);
+        let x = [0.5, 3.0, 2.0];
+        assert!((term.eval(&x) - 0.5f64.powi(2) * 2.0).abs() < 1e-15);
+        assert_eq!(Term::one(3).eval(&x), 1.0);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Term::one(2).to_string(), "1");
+        assert_eq!(t(&[1, 2]).to_string(), "x0*x1^2");
+    }
+
+    #[test]
+    fn property_order_is_total_and_multiplicative() {
+        property(64, |rng| {
+            let n = 1 + rng.below(5);
+            let rand_term = |rng: &mut crate::util::rng::Rng| {
+                let exps: Vec<u16> = (0..n).map(|_| rng.below(4) as u16).collect();
+                Term::from_exps(&exps)
+            };
+            let a = rand_term(rng);
+            let b = rand_term(rng);
+            let c_var = rng.below(n);
+            // antisymmetry/totality
+            use std::cmp::Ordering::*;
+            match a.cmp(&b) {
+                Less => {
+                    if b.cmp(&a) != Greater {
+                        return Err("antisymmetry violated".into());
+                    }
+                    // multiplicative: a < b ⇒ a·x_j < b·x_j
+                    if a.times_var(c_var) >= b.times_var(c_var) {
+                        return Err(format!("not multiplicative: {a} {b} x{c_var}"));
+                    }
+                }
+                Equal => {
+                    if a.exps() != b.exps() {
+                        return Err("equal terms with different exps".into());
+                    }
+                }
+                Greater => {}
+            }
+            // 1 is the global minimum
+            if a.degree() > 0 && a <= Term::one(n) {
+                return Err(format!("{a} <= 1"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_divisor_is_smaller() {
+        property(64, |rng| {
+            let n = 1 + rng.below(4);
+            let exps: Vec<u16> = (0..n).map(|_| rng.below(4) as u16).collect();
+            let term = Term::from_exps(&exps);
+            for j in 0..n {
+                if let Some(d) = term.div_var(j) {
+                    if d >= term {
+                        return Err(format!("divisor {d} >= {term}"));
+                    }
+                    if !d.divides(&term) {
+                        return Err(format!("{d} should divide {term}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,125 @@
+//! [`XlaBackend`]: the [`crate::backend::ComputeBackend`] implementation
+//! that routes the streaming hot paths through the AOT PJRT artifacts.
+//!
+//! Tiling contract (DESIGN.md §6): rows are processed in `M_TILE`-row
+//! chunks (the final partial tile is zero-padded — zero rows contribute
+//! nothing to either `Aᵀb` or `bᵀb`, and transform rows beyond m are
+//! discarded); the live column count ℓ is padded to the smallest artifact
+//! `L_PAD ≥ ℓ`.  Shapes beyond every artifact fall back to the native
+//! backend so the system never refuses work.
+
+use std::sync::Arc;
+
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::linalg::dense::Matrix;
+use crate::runtime::PjrtRuntime;
+
+/// PJRT-backed compute backend with native fallback.
+pub struct XlaBackend {
+    rt: Arc<PjrtRuntime>,
+    fallback: NativeBackend,
+}
+
+impl XlaBackend {
+    pub fn new(rt: Arc<PjrtRuntime>) -> Self {
+        XlaBackend { rt, fallback: NativeBackend }
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.rt
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn gram_stats(&self, cols: &[Vec<f64>], b_col: &[f64]) -> (Vec<f64>, f64) {
+        let ell = cols.len();
+        let m = b_col.len();
+        let Some((m_tile, l_pad)) = self.rt.gram_artifact_for(ell) else {
+            return self.fallback.gram_stats(cols, b_col);
+        };
+        let mut atb = vec![0.0f64; ell];
+        let mut btb = 0.0f64;
+        let mut a_tile = vec![0.0f32; m_tile * l_pad];
+        let mut b_tile = vec![0.0f32; m_tile];
+        let mut row = 0usize;
+        while row < m {
+            let take = (m - row).min(m_tile);
+            // pack the row tile (row-major) from the column-major inputs
+            a_tile.iter_mut().for_each(|v| *v = 0.0);
+            b_tile.iter_mut().for_each(|v| *v = 0.0);
+            for (j, col) in cols.iter().enumerate() {
+                for i in 0..take {
+                    a_tile[i * l_pad + j] = col[row + i] as f32;
+                }
+            }
+            for i in 0..take {
+                b_tile[i] = b_col[row + i] as f32;
+            }
+            match self.rt.gram_update_tile(m_tile, l_pad, &a_tile, &b_tile) {
+                Ok((atb_part, btb_part)) => {
+                    for j in 0..ell {
+                        atb[j] += atb_part[j] as f64;
+                    }
+                    btb += btb_part as f64;
+                }
+                Err(_) => return self.fallback.gram_stats(cols, b_col),
+            }
+            row += take;
+        }
+        (atb, btb)
+    }
+
+    fn transform_abs(&self, cols: &[Vec<f64>], c: &Matrix, u: &Matrix) -> Matrix {
+        let ell = cols.len();
+        let m = u.rows();
+        let g = u.cols();
+        let Some((m_tile, l_pad, g_pad)) = self.rt.transform_artifact_for(ell, g) else {
+            return self.fallback.transform_abs(cols, c, u);
+        };
+        let mut out = Matrix::zeros(m, g);
+        // pack C once (ℓ×g live block inside l_pad×g_pad)
+        let mut c_pad = vec![0.0f32; l_pad * g_pad];
+        for j in 0..ell {
+            for k in 0..g {
+                c_pad[j * g_pad + k] = c.get(j, k) as f32;
+            }
+        }
+        let mut a_tile = vec![0.0f32; m_tile * l_pad];
+        let mut u_tile = vec![0.0f32; m_tile * g_pad];
+        let mut row = 0usize;
+        while row < m {
+            let take = (m - row).min(m_tile);
+            a_tile.iter_mut().for_each(|v| *v = 0.0);
+            u_tile.iter_mut().for_each(|v| *v = 0.0);
+            for (j, col) in cols.iter().enumerate() {
+                for i in 0..take {
+                    a_tile[i * l_pad + j] = col[row + i] as f32;
+                }
+            }
+            for i in 0..take {
+                for k in 0..g {
+                    u_tile[i * g_pad + k] = u.get(row + i, k) as f32;
+                }
+            }
+            match self.rt.transform_tile(m_tile, l_pad, g_pad, &a_tile, &c_pad, &u_tile) {
+                Ok(vals) => {
+                    for i in 0..take {
+                        for k in 0..g {
+                            out.set(row + i, k, vals[i * g_pad + k] as f64);
+                        }
+                    }
+                }
+                Err(_) => return self.fallback.transform_abs(cols, c, u),
+            }
+            row += take;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+// Execution-level tests (need built artifacts) are in
+// rust/tests/runtime_parity.rs.

@@ -1,0 +1,270 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, lowered
+//! from the JAX/Pallas L2/L1 stack by `make artifacts`), compile them once
+//! on the CPU PJRT client, and serve them to the L3 hot paths.
+//!
+//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §6).
+//!
+//! [`XlaBackend`] adapts the fixed-shape artifacts to arbitrary problem
+//! sizes: rows are streamed in `M_TILE`-row tiles with partial-sum
+//! accumulation (this is what makes OAVI linear in m end-to-end), live
+//! dimensions are zero-padded to the next artifact width, and any shape
+//! beyond the largest artifact falls back to the native backend (bit-for-
+//! bit the same math in f64, covered by parity tests).
+
+pub mod backend;
+
+pub use backend::XlaBackend;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{AviError, Result};
+
+/// Artifact names understood by the runtime (shapes encoded in the name).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `gram_update_{M}x{L}` — (A:(M,L), b:(M)) → (Aᵀb:(L), bᵀb:())
+    GramUpdate { m_tile: usize, l_pad: usize },
+    /// `oracle_solve_{L}` — (N, Atb, btb, mask) → (c, m·MSE)
+    OracleSolve { l_pad: usize },
+    /// `ihb_update_{L}` — (N, Atb, btb, mask, k_onehot) → N'
+    IhbUpdate { l_pad: usize },
+    /// `transform_{M}x{L}x{G}` — (A, C, U) → |A·C + U|
+    Transform { m_tile: usize, l_pad: usize, g_pad: usize },
+}
+
+fn parse_artifact_name(stem: &str) -> Option<ArtifactKind> {
+    let nums = |s: &str| -> Option<Vec<usize>> {
+        s.split('x').map(|p| p.parse::<usize>().ok()).collect()
+    };
+    if let Some(rest) = stem.strip_prefix("gram_update_") {
+        let d = nums(rest)?;
+        if d.len() == 2 {
+            return Some(ArtifactKind::GramUpdate { m_tile: d[0], l_pad: d[1] });
+        }
+    } else if let Some(rest) = stem.strip_prefix("oracle_solve_") {
+        return Some(ArtifactKind::OracleSolve { l_pad: rest.parse().ok()? });
+    } else if let Some(rest) = stem.strip_prefix("ihb_update_") {
+        return Some(ArtifactKind::IhbUpdate { l_pad: rest.parse().ok()? });
+    } else if let Some(rest) = stem.strip_prefix("transform_") {
+        let d = nums(rest)?;
+        if d.len() == 3 {
+            return Some(ArtifactKind::Transform { m_tile: d[0], l_pad: d[1], g_pad: d[2] });
+        }
+    }
+    None
+}
+
+/// A compiled-artifact registry over one PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    /// lazily compiled executables (compile once, reuse forever).
+    exes: Mutex<HashMap<ArtifactKind, xla::PjRtLoadedExecutable>>,
+    available: Vec<(ArtifactKind, PathBuf)>,
+}
+
+impl PjrtRuntime {
+    /// Discover artifacts in `dir` and connect the PJRT CPU client.
+    /// Compilation is lazy (first use per artifact).
+    pub fn load(dir: &Path) -> Result<Self> {
+        if !dir.is_dir() {
+            return Err(AviError::Runtime(format!(
+                "artifact dir {} missing — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let mut available = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                if let Some(kind) = parse_artifact_name(stem) {
+                    available.push((kind, path.clone()));
+                }
+            }
+        }
+        if available.is_empty() {
+            return Err(AviError::Runtime(format!(
+                "no artifacts in {} — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| AviError::Runtime(format!("PJRT client: {e}")))?;
+        Ok(PjrtRuntime { client, exes: Mutex::new(HashMap::new()), available })
+    }
+
+    /// Default artifact location (repo-root `artifacts/`).
+    pub fn load_default() -> Result<Self> {
+        Self::load(Path::new("artifacts"))
+    }
+
+    /// All discovered artifact kinds.
+    pub fn artifacts(&self) -> Vec<ArtifactKind> {
+        self.available.iter().map(|(k, _)| k.clone()).collect()
+    }
+
+    /// Smallest gram-update artifact with `l_pad ≥ ell`, if any.
+    pub fn gram_artifact_for(&self, ell: usize) -> Option<(usize, usize)> {
+        self.available
+            .iter()
+            .filter_map(|(k, _)| match k {
+                ArtifactKind::GramUpdate { m_tile, l_pad } if *l_pad >= ell => {
+                    Some((*m_tile, *l_pad))
+                }
+                _ => None,
+            })
+            .min_by_key(|(_, l)| *l)
+    }
+
+    /// Smallest transform artifact with `l_pad ≥ ell` and `g_pad ≥ g`.
+    pub fn transform_artifact_for(&self, ell: usize, g: usize) -> Option<(usize, usize, usize)> {
+        self.available
+            .iter()
+            .filter_map(|(k, _)| match k {
+                ArtifactKind::Transform { m_tile, l_pad, g_pad }
+                    if *l_pad >= ell && *g_pad >= g =>
+                {
+                    Some((*m_tile, *l_pad, *g_pad))
+                }
+                _ => None,
+            })
+            .min_by_key(|(_, l, g)| (*l, *g))
+    }
+
+    /// Execute an artifact on literals, compiling (and caching) on first use.
+    pub fn execute(&self, kind: &ArtifactKind, args: &[xla::Literal]) -> Result<xla::Literal> {
+        {
+            let exes = self.exes.lock().expect("exes poisoned");
+            if let Some(exe) = exes.get(kind) {
+                return run_exe(exe, args);
+            }
+        }
+        // compile outside the lock (slow), then insert
+        let path = self
+            .available
+            .iter()
+            .find(|(k, _)| k == kind)
+            .map(|(_, p)| p.clone())
+            .ok_or_else(|| AviError::Runtime(format!("artifact {kind:?} not available")))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| AviError::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| AviError::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| AviError::Runtime(format!("compile {}: {e}", path.display())))?;
+        let out = run_exe(&exe, args)?;
+        self.exes.lock().expect("exes poisoned").insert(kind.clone(), exe);
+        Ok(out)
+    }
+
+    /// `(Aᵀb, bᵀb)` over one padded row tile through the gram artifact.
+    /// `a_tile` is row-major (m_tile × l_pad) f32, `b_tile` is (m_tile) f32.
+    pub fn gram_update_tile(
+        &self,
+        m_tile: usize,
+        l_pad: usize,
+        a_tile: &[f32],
+        b_tile: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        debug_assert_eq!(a_tile.len(), m_tile * l_pad);
+        debug_assert_eq!(b_tile.len(), m_tile);
+        let kind = ArtifactKind::GramUpdate { m_tile, l_pad };
+        let a = xla::Literal::vec1(a_tile)
+            .reshape(&[m_tile as i64, l_pad as i64])
+            .map_err(|e| AviError::Runtime(format!("reshape A: {e}")))?;
+        let b = xla::Literal::vec1(b_tile);
+        let out = self.execute(&kind, &[a, b])?;
+        let (atb, btb) = out
+            .to_tuple2()
+            .map_err(|e| AviError::Runtime(format!("tuple2: {e}")))?;
+        let atb_v = atb
+            .to_vec::<f32>()
+            .map_err(|e| AviError::Runtime(format!("atb to_vec: {e}")))?;
+        let btb_v = btb
+            .to_vec::<f32>()
+            .map_err(|e| AviError::Runtime(format!("btb to_vec: {e}")))?;
+        Ok((atb_v, btb_v[0]))
+    }
+
+    /// `|A·C + U|` over one padded row tile through the transform artifact.
+    pub fn transform_tile(
+        &self,
+        m_tile: usize,
+        l_pad: usize,
+        g_pad: usize,
+        a_tile: &[f32],
+        c: &[f32],
+        u_tile: &[f32],
+    ) -> Result<Vec<f32>> {
+        let kind = ArtifactKind::Transform { m_tile, l_pad, g_pad };
+        let a = xla::Literal::vec1(a_tile)
+            .reshape(&[m_tile as i64, l_pad as i64])
+            .map_err(|e| AviError::Runtime(format!("reshape A: {e}")))?;
+        let cm = xla::Literal::vec1(c)
+            .reshape(&[l_pad as i64, g_pad as i64])
+            .map_err(|e| AviError::Runtime(format!("reshape C: {e}")))?;
+        let u = xla::Literal::vec1(u_tile)
+            .reshape(&[m_tile as i64, g_pad as i64])
+            .map_err(|e| AviError::Runtime(format!("reshape U: {e}")))?;
+        let out = self.execute(&kind, &[a, cm, u])?;
+        let t = out
+            .to_tuple1()
+            .map_err(|e| AviError::Runtime(format!("tuple1: {e}")))?;
+        t.to_vec::<f32>()
+            .map_err(|e| AviError::Runtime(format!("transform to_vec: {e}")))
+    }
+}
+
+fn run_exe(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+    let bufs = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| AviError::Runtime(format!("execute: {e}")))?;
+    bufs[0][0]
+        .to_literal_sync()
+        .map_err(|e| AviError::Runtime(format!("to_literal: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            parse_artifact_name("gram_update_4096x256"),
+            Some(ArtifactKind::GramUpdate { m_tile: 4096, l_pad: 256 })
+        );
+        assert_eq!(
+            parse_artifact_name("oracle_solve_64"),
+            Some(ArtifactKind::OracleSolve { l_pad: 64 })
+        );
+        assert_eq!(
+            parse_artifact_name("ihb_update_256"),
+            Some(ArtifactKind::IhbUpdate { l_pad: 256 })
+        );
+        assert_eq!(
+            parse_artifact_name("transform_4096x64x256"),
+            Some(ArtifactKind::Transform { m_tile: 4096, l_pad: 64, g_pad: 256 })
+        );
+        assert_eq!(parse_artifact_name("bogus_3"), None);
+        assert_eq!(parse_artifact_name("gram_update_4096"), None);
+    }
+
+    #[test]
+    fn load_errors_without_artifacts() {
+        let dir = std::env::temp_dir().join("avi_scale_no_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(PjrtRuntime::load(&dir).is_err());
+        assert!(PjrtRuntime::load(Path::new("/definitely/not/here")).is_err());
+    }
+
+    // Execution tests live in rust/tests/runtime_parity.rs (they need the
+    // artifacts built by `make artifacts`).
+}

@@ -1,0 +1,175 @@
+//! Accelerated Gradient Descent (Nesterov 1983) for the *unconstrained*
+//! Line-7 problem — the AGDAVI solver, and the fallback IHB polisher
+//! (Algorithm 4: warm-start AGD at `y0 = −(AᵀA)^{-1}Aᵀb`).
+//!
+//! The step size uses `L = 2·λ_max(B)/m` from power iteration; momentum is
+//! the standard `(t_k − 1)/t_{k+1}` sequence with function-value restarts
+//! (quadratics have unknown-but-positive strong convexity here, restarts
+//! recover the linear rate without needing μ).
+
+use crate::linalg::eigen::lambda_max;
+use crate::linalg::norm_inf;
+use crate::solvers::{GramProblem, SolveResult, SolverParams, Termination};
+
+/// AGD with function-value restarts.
+pub fn solve_agd(p: &GramProblem, params: &SolverParams, warm: Option<&[f64]>) -> SolveResult {
+    let ell = p.dim();
+    let m = p.m as f64;
+    let lmax = lambda_max(p.b, 100).max(1e-300);
+    let l_smooth = 2.0 * lmax / m;
+    let step = 1.0 / l_smooth;
+
+    let mut y: Vec<f64> = warm.map(|w| w.to_vec()).unwrap_or_else(|| vec![0.0; ell]);
+    let mut x = y.clone(); // extrapolated point
+    let mut t_k = 1.0f64;
+    let mut f_prev = f64::INFINITY;
+    let mut stall = 0usize;
+    // gradient scale for the convergence test: ∇f entries are O(‖B‖·y/m)
+    let grad_tol = (params.eps / m).sqrt().max(1e-13) * (1.0 + lmax / m);
+
+    for t in 0..params.max_iters {
+        let bx = p.b.matvec(&x);
+        let g = p.grad_with_by(&bx);
+        // y⁺ = x − (1/L) ∇f(x)
+        let y_new: Vec<f64> = x.iter().zip(g.iter()).map(|(xi, gi)| xi - step * gi).collect();
+        let f_new = p.f(&y_new);
+
+        // certificates on the new point
+        if let Some(psi) = params.psi {
+            if f_new <= psi {
+                return SolveResult {
+                    y: y_new,
+                    f: f_new,
+                    iters: t + 1,
+                    termination: Termination::TargetReached,
+                };
+            }
+        }
+        if norm_inf(&g) <= grad_tol {
+            return SolveResult {
+                y: y_new,
+                f: f_new,
+                iters: t + 1,
+                termination: Termination::GradConverged,
+            };
+        }
+
+        if f_new > f_prev {
+            // function-value restart: drop momentum, retry from y
+            t_k = 1.0;
+            x = y.clone();
+            stall += 1;
+            if stall >= 30 {
+                let f = p.f(&y);
+                return SolveResult { y, f, iters: t + 1, termination: Termination::Stalled };
+            }
+            continue;
+        }
+        if f_prev - f_new <= 1e-16 * f_new.max(1.0) {
+            stall += 1;
+            if stall >= 30 {
+                return SolveResult {
+                    y: y_new,
+                    f: f_new,
+                    iters: t + 1,
+                    termination: Termination::Stalled,
+                };
+            }
+        } else {
+            stall = 0;
+        }
+
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt());
+        let beta = (t_k - 1.0) / t_next;
+        x = y_new
+            .iter()
+            .zip(y.iter())
+            .map(|(yn, yo)| yn + beta * (yn - yo))
+            .collect();
+        y = y_new;
+        t_k = t_next;
+        f_prev = f_new;
+    }
+    let f = p.f(&y);
+    SolveResult { y, f, iters: params.max_iters, termination: Termination::MaxIters }
+}
+
+/// Closed-form optimal objective for diagnostics: `f* = (β − rᵀ B^{-1} r)/m`
+/// via a dense solve (O(ℓ³); tests only).
+#[cfg(test)]
+pub fn f_star(p: &GramProblem) -> f64 {
+    let chol = crate::linalg::chol::Cholesky::new_with_jitter(p.b, 1e-12).unwrap().0;
+    let w = chol.solve(p.atb);
+    ((p.btb - crate::linalg::dot(p.atb, &w)) / p.m as f64).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::testutil::random_instance;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reaches_unconstrained_optimum() {
+        property(16, |rng| {
+            let inst = random_instance(rng, 60, 5);
+            let p = GramProblem {
+                b: inst.gram.b(),
+                atb: &inst.atb,
+                btb: inst.btb,
+                m: inst.m,
+            };
+            let params = SolverParams { eps: 1e-12, max_iters: 50_000, radius: 0.0, psi: None };
+            let res = solve_agd(&p, &params, None);
+            if res.f > inst.f_opt + 1e-5 * (1.0 + inst.f_opt) {
+                return Err(format!("f {} vs opt {} ({:?})", res.f, inst.f_opt, res.termination));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn warm_start_at_optimum_is_instant() {
+        let mut rng = Rng::new(12);
+        let inst = random_instance(&mut rng, 50, 6);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        let params = SolverParams { eps: 1e-10, max_iters: 10_000, radius: 0.0, psi: None };
+        let res = solve_agd(&p, &params, Some(&inst.y_opt));
+        assert!(res.iters <= 3, "{} iters", res.iters);
+    }
+
+    #[test]
+    fn psi_certificate_stops_early() {
+        let mut rng = Rng::new(13);
+        let inst = random_instance(&mut rng, 50, 4);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        let params = SolverParams { eps: 1e-12, max_iters: 10_000, radius: 0.0, psi: Some(1e9) };
+        let res = solve_agd(&p, &params, None);
+        assert_eq!(res.termination, Termination::TargetReached);
+        assert_eq!(res.iters, 1);
+    }
+
+    #[test]
+    fn f_star_matches_gram_closed_form() {
+        let mut rng = Rng::new(14);
+        let inst = random_instance(&mut rng, 70, 5);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        assert!((f_star(&p) - inst.f_opt).abs() < 1e-9);
+    }
+}

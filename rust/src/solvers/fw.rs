@@ -1,0 +1,214 @@
+//! Vanilla Frank–Wolfe (CG) over the ℓ1-ball, in Gram space.
+//!
+//! Used by CGAVI and as the IHB fast path (warm-started at the closed-form
+//! optimum, it certifies convergence via the FW gap in one iteration).
+
+use crate::linalg::dot;
+use crate::solvers::lmo::{lmo_l1, ActiveSet, Vertex};
+use crate::solvers::{quad_line_search, GramProblem, SolveResult, SolverParams, Termination};
+
+/// Decompose a dense feasible point (‖y0‖₁ ≤ r) into a convex combination
+/// of ℓ1-ball vertices: weight |y_i|/r on `sign(y_i)·r·e_i`, remaining mass
+/// split over the ±r·e_0 pair (which sums to 0).
+pub(crate) fn warm_active_set(p: &GramProblem, r: f64, y0: &[f64]) -> ActiveSet {
+    let mut act = ActiveSet::at_origin(p, r);
+    act.weights.clear();
+    let mut used = 0.0;
+    for (i, &yi) in y0.iter().enumerate() {
+        if yi != 0.0 {
+            let w = yi.abs() / r;
+            let sign = if yi > 0.0 { 1 } else { -1 };
+            *act.weights.entry(Vertex { coord: i, sign }).or_insert(0.0) += w;
+            used += w;
+        }
+    }
+    let rest = (1.0 - used).max(0.0);
+    if rest > 0.0 {
+        *act.weights.entry(Vertex { coord: 0, sign: 1 }).or_insert(0.0) += rest / 2.0;
+        *act.weights.entry(Vertex { coord: 0, sign: -1 }).or_insert(0.0) += rest / 2.0;
+    }
+    act.y = y0.to_vec();
+    act.by = p.b.matvec(y0);
+    act
+}
+
+/// Shared early-exit certificates (paper §6.1): vanishing reached /
+/// provably hopeless.
+#[inline]
+pub(crate) fn certificates(
+    f: f64,
+    gap: f64,
+    params: &SolverParams,
+) -> Option<Termination> {
+    if let Some(psi) = params.psi {
+        if f <= psi {
+            return Some(Termination::TargetReached);
+        }
+        // f* ≥ f − gap: if even the best attainable value exceeds ψ, no
+        // approximately vanishing coefficient vector exists in the ball.
+        if f - gap > psi {
+            return Some(Termination::Hopeless);
+        }
+    }
+    if gap <= params.eps {
+        return Some(Termination::GapConverged);
+    }
+    None
+}
+
+/// Vanilla CG with exact line search.
+pub fn solve_cg(p: &GramProblem, params: &SolverParams, warm: Option<&[f64]>) -> SolveResult {
+    let r = params.radius;
+    let mut act = match warm {
+        Some(y0) => warm_active_set(p, r, y0),
+        None => ActiveSet::at_vertex(p, r, Vertex { coord: 0, sign: 1 }),
+    };
+    let mut stall = 0usize;
+    let mut f_prev = f64::INFINITY;
+
+    for t in 0..params.max_iters {
+        let g = p.grad_with_by(&act.by);
+        let w = lmo_l1(&g, r);
+        let f = p.f_with_by(&act.y, &act.by);
+        let gap = dot(&g, &act.y) - w.dot_grad(&g, r);
+        if let Some(term) = certificates(f, gap, params) {
+            return SolveResult { y: act.y, f, iters: t, termination: term };
+        }
+        // d = w − y;  ⟨g, d⟩ = −gap;  dᵀBd via the maintained By
+        let wv = w.value(r);
+        let dbd = wv * wv * p.b.get(w.coord, w.coord) - 2.0 * wv * act.by[w.coord]
+            + dot(&act.y, &act.by);
+        let gamma = quad_line_search(-gap, dbd, p.m, 1.0);
+        act.fw_step(p, w, gamma);
+
+        if f_prev - f <= 1e-16 * f.max(1.0) {
+            stall += 1;
+            if stall >= 50 {
+                let f = p.f_with_by(&act.y, &act.by);
+                return SolveResult { y: act.y, f, iters: t, termination: Termination::Stalled };
+            }
+        } else {
+            stall = 0;
+        }
+        f_prev = f;
+    }
+    let f = p.f_with_by(&act.y, &act.by);
+    SolveResult { y: act.y, f, iters: params.max_iters, termination: Termination::MaxIters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::testutil::random_instance;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn converges_to_unconstrained_optimum_when_interior() {
+        property(16, |rng| {
+            let inst = random_instance(rng, 60, 4);
+            if crate::linalg::norm1(&inst.y_opt) > 50.0 {
+                return Ok(()); // optimum outside a generous ball — skip
+            }
+            let p = GramProblem {
+                b: inst.gram.b(),
+                atb: &inst.atb,
+                btb: inst.btb,
+                m: inst.m,
+            };
+            let params = SolverParams { eps: 1e-9, max_iters: 20_000, radius: 100.0, psi: None };
+            let res = solve_cg(&p, &params, None);
+            if res.f > inst.f_opt + 1e-6 {
+                return Err(format!("f {} vs opt {}", res.f, inst.f_opt));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn warm_start_at_optimum_terminates_immediately() {
+        let mut rng = Rng::new(8);
+        let inst = random_instance(&mut rng, 50, 5);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        let params = SolverParams { eps: 1e-7, max_iters: 10_000, radius: 1000.0, psi: None };
+        let res = solve_cg(&p, &params, Some(&inst.y_opt));
+        assert!(res.iters <= 2, "took {} iters", res.iters);
+        assert!((res.f - inst.f_opt).abs() < 1e-8);
+    }
+
+    #[test]
+    fn target_reached_certificate_fires() {
+        let mut rng = Rng::new(9);
+        let inst = random_instance(&mut rng, 50, 5);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        // psi far above f(y0) ⇒ immediate TargetReached
+        let params = SolverParams { eps: 1e-12, max_iters: 100, radius: 10.0, psi: Some(1e6) };
+        let res = solve_cg(&p, &params, None);
+        assert_eq!(res.termination, Termination::TargetReached);
+        assert_eq!(res.iters, 0);
+    }
+
+    #[test]
+    fn hopeless_certificate_fires() {
+        // a problem whose optimum is far above psi: b orthogonal to A and huge
+        let mut rng = Rng::new(10);
+        let inst = random_instance(&mut rng, 50, 3);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb + 1e6, // inflate ‖b‖² so f* is large
+            m: inst.m,
+        };
+        let params = SolverParams { eps: 1e-12, max_iters: 10_000, radius: 5.0, psi: Some(1e-6) };
+        let res = solve_cg(&p, &params, None);
+        assert_eq!(res.termination, Termination::Hopeless);
+    }
+
+    #[test]
+    fn iterate_stays_in_ball() {
+        property(12, |rng| {
+            let inst = random_instance(rng, 40, 6);
+            let p = GramProblem {
+                b: inst.gram.b(),
+                atb: &inst.atb,
+                btb: inst.btb,
+                m: inst.m,
+            };
+            let r = 0.5; // tight ball so the constraint binds
+            let params = SolverParams { eps: 1e-10, max_iters: 3000, radius: r, psi: None };
+            let res = solve_cg(&p, &params, None);
+            if crate::linalg::norm1(&res.y) > r + 1e-9 {
+                return Err(format!("left the ball: {}", crate::linalg::norm1(&res.y)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn warm_decomposition_is_exact() {
+        let mut rng = Rng::new(11);
+        let inst = random_instance(&mut rng, 30, 5);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        let y0 = vec![0.5, -0.25, 0.0, 0.1, 0.0];
+        let act = warm_active_set(&p, 2.0, &y0);
+        act.check_invariants(&p).unwrap();
+        for (i, v) in y0.iter().enumerate() {
+            assert!((act.y[i] - v).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! ℓ1-ball linear minimization oracle + active-set state shared by the
+//! Frank–Wolfe family.
+//!
+//! Vertices of the ℓ1-ball of radius r are `±r·e_i`; we encode them as
+//! `(coord, sign)`.  The active set keeps the convex-combination weights
+//! `λ_v` and maintains both the iterate `y = Σ λ_v v` and the product
+//! `By` incrementally — each vertex step touches one column of B, so a
+//! solver iteration is O(ℓ), not O(ℓ²).
+
+use std::collections::HashMap;
+
+use crate::linalg::dense::Matrix;
+use crate::solvers::GramProblem;
+
+/// A vertex `sign · r · e_coord` of the ℓ1-ball.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Vertex {
+    pub coord: usize,
+    /// +1.0 or −1.0
+    pub sign: i8,
+}
+
+impl Vertex {
+    #[inline]
+    pub fn value(&self, r: f64) -> f64 {
+        self.sign as f64 * r
+    }
+
+    /// ⟨g, v⟩ for this vertex.
+    #[inline]
+    pub fn dot_grad(&self, g: &[f64], r: f64) -> f64 {
+        self.value(r) * g[self.coord]
+    }
+}
+
+/// Global LMO: `argmin_{v ∈ vert(P)} ⟨g, v⟩` = `−r·sign(g_i)·e_i` at
+/// `i = argmax |g_i|`.
+pub fn lmo_l1(g: &[f64], _r: f64) -> Vertex {
+    let mut best = 0usize;
+    let mut best_abs = -1.0f64;
+    for (i, gi) in g.iter().enumerate() {
+        let a = gi.abs();
+        if a > best_abs {
+            best_abs = a;
+            best = i;
+        }
+    }
+    let sign = if g[best] > 0.0 { -1 } else { 1 };
+    Vertex { coord: best, sign }
+}
+
+/// Active-set iterate for FW variants over the ℓ1-ball.
+pub struct ActiveSet {
+    pub r: f64,
+    pub y: Vec<f64>,
+    /// Maintained `B·y`.
+    pub by: Vec<f64>,
+    pub weights: HashMap<Vertex, f64>,
+}
+
+/// Weights below this are culled after reweighting steps.
+const WEIGHT_EPS: f64 = 1e-15;
+
+impl ActiveSet {
+    /// Start at a deterministic vertex (`+r·e_0`) — FW needs a vertex
+    /// start for the convex decomposition to be valid.
+    pub fn at_vertex(p: &GramProblem, r: f64, v: Vertex) -> Self {
+        let ell = p.dim();
+        let mut y = vec![0.0; ell];
+        y[v.coord] = v.value(r);
+        let by = scaled_col(p.b, v.coord, v.value(r));
+        let mut weights = HashMap::new();
+        weights.insert(v, 1.0);
+        ActiveSet { r, y, by, weights }
+    }
+
+    /// Start at the origin — a valid point of the ball but *not* a vertex;
+    /// FW variants treat it as an empty active set plus pure-FW first step.
+    /// (The origin is the midpoint of ±r·e_0 — we seed with that pair at
+    /// weight ½ each so the decomposition stays exact.)
+    pub fn at_origin(p: &GramProblem, r: f64) -> Self {
+        let ell = p.dim();
+        let mut weights = HashMap::new();
+        weights.insert(Vertex { coord: 0, sign: 1 }, 0.5);
+        weights.insert(Vertex { coord: 0, sign: -1 }, 0.5);
+        ActiveSet { r, y: vec![0.0; ell], by: vec![0.0; ell], weights }
+    }
+
+    /// ⟨∇f, ·⟩-extreme active vertices: (away = max, local-FW = min).
+    /// Returns None when the active set is empty.
+    pub fn away_and_local(&self, g: &[f64]) -> Option<(Vertex, Vertex)> {
+        let mut away: Option<(Vertex, f64)> = None;
+        let mut local: Option<(Vertex, f64)> = None;
+        for (&v, _) in self.weights.iter() {
+            let d = v.dot_grad(g, self.r);
+            match away {
+                Some((_, best)) if d <= best => {}
+                _ => away = Some((v, d)),
+            }
+            match local {
+                Some((_, best)) if d >= best => {}
+                _ => local = Some((v, d)),
+            }
+        }
+        match (away, local) {
+            (Some((a, _)), Some((s, _))) => Some((a, s)),
+            _ => None,
+        }
+    }
+
+    /// y += γ(v_to − v_from) (pairwise step); updates weights and By.
+    pub fn pairwise_step(&mut self, p: &GramProblem, from: Vertex, to: Vertex, gamma: f64) {
+        if gamma == 0.0 {
+            return;
+        }
+        let wf = self.weights.get_mut(&from).expect("from must be active");
+        *wf -= gamma;
+        let drop = *wf <= WEIGHT_EPS;
+        if drop {
+            self.weights.remove(&from);
+        }
+        *self.weights.entry(to).or_insert(0.0) += gamma;
+
+        let vf = from.value(self.r);
+        let vt = to.value(self.r);
+        self.y[from.coord] -= gamma * vf;
+        self.y[to.coord] += gamma * vt;
+        add_scaled_col(p.b, from.coord, -gamma * vf, &mut self.by);
+        add_scaled_col(p.b, to.coord, gamma * vt, &mut self.by);
+    }
+
+    /// y ← (1−γ)·y + γ·v (global FW step); rescales all weights.
+    pub fn fw_step(&mut self, p: &GramProblem, v: Vertex, gamma: f64) {
+        if gamma == 0.0 {
+            return;
+        }
+        for w in self.weights.values_mut() {
+            *w *= 1.0 - gamma;
+        }
+        self.weights.retain(|_, w| *w > WEIGHT_EPS);
+        *self.weights.entry(v).or_insert(0.0) += gamma;
+
+        let vv = v.value(self.r);
+        for yi in self.y.iter_mut() {
+            *yi *= 1.0 - gamma;
+        }
+        self.y[v.coord] += gamma * vv;
+        for byi in self.by.iter_mut() {
+            *byi *= 1.0 - gamma;
+        }
+        add_scaled_col(p.b, v.coord, gamma * vv, &mut self.by);
+    }
+
+    /// Weight of a vertex (0 if inactive).
+    pub fn weight(&self, v: Vertex) -> f64 {
+        self.weights.get(&v).copied().unwrap_or(0.0)
+    }
+
+    /// Invariant check (tests): y = Σ λ_v v, Σ λ_v = 1, λ ≥ 0, and the
+    /// maintained By matches B·y.
+    #[cfg(test)]
+    pub fn check_invariants(&self, p: &GramProblem) -> Result<(), String> {
+        let mut y = vec![0.0; self.y.len()];
+        let mut total = 0.0;
+        for (&v, &w) in self.weights.iter() {
+            if w < 0.0 {
+                return Err(format!("negative weight {w} on {v:?}"));
+            }
+            y[v.coord] += w * v.value(self.r);
+            total += w;
+        }
+        if (total - 1.0).abs() > 1e-9 {
+            return Err(format!("weights sum to {total}"));
+        }
+        for i in 0..y.len() {
+            if (y[i] - self.y[i]).abs() > 1e-8 * self.r.max(1.0) {
+                return Err(format!("y[{i}] decomposition mismatch"));
+            }
+        }
+        let by = p.b.matvec(&self.y);
+        for i in 0..by.len() {
+            if (by[i] - self.by[i]).abs() > 1e-6 * p.b.max_abs().max(1.0) {
+                return Err(format!("By[{i}] drift: {} vs {}", self.by[i], by[i]));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `alpha · B[:, j]` as a fresh vector.
+fn scaled_col(b: &Matrix, j: usize, alpha: f64) -> Vec<f64> {
+    (0..b.rows()).map(|i| alpha * b.get(i, j)).collect()
+}
+
+/// `out += alpha · B[:, j]` — the O(ℓ) per-step Gram touch.
+#[inline]
+fn add_scaled_col(b: &Matrix, j: usize, alpha: f64, out: &mut [f64]) {
+    if alpha == 0.0 {
+        return;
+    }
+    for (i, o) in out.iter_mut().enumerate() {
+        *o += alpha * b.get(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::testutil::random_instance;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn lmo_picks_largest_gradient_coordinate() {
+        let g = vec![0.5, -2.0, 1.0];
+        let v = lmo_l1(&g, 3.0);
+        assert_eq!(v.coord, 1);
+        assert_eq!(v.sign, 1); // g[1] < 0 ⇒ +r e_1 minimizes ⟨g, v⟩
+        assert_eq!(v.value(3.0), 3.0);
+        assert_eq!(v.dot_grad(&g, 3.0), -6.0);
+    }
+
+    #[test]
+    fn steps_preserve_invariants() {
+        property(24, |rng| {
+            let inst = random_instance(rng, 30, 6);
+            let p = GramProblem {
+                b: inst.gram.b(),
+                atb: &inst.atb,
+                btb: inst.btb,
+                m: inst.m,
+            };
+            let r = 2.0;
+            let mut act = ActiveSet::at_vertex(&p, r, Vertex { coord: 0, sign: 1 });
+            for _ in 0..20 {
+                act.check_invariants(&p)?;
+                let g = p.grad_with_by(&act.by);
+                let w = lmo_l1(&g, r);
+                if rng.uniform() < 0.5 {
+                    // FW step with a random feasible γ
+                    act.fw_step(&p, w, rng.uniform() * 0.9);
+                } else if let Some((a, _s)) = act.away_and_local(&g) {
+                    let gamma = act.weight(a) * rng.uniform();
+                    act.pairwise_step(&p, a, w, gamma);
+                }
+            }
+            act.check_invariants(&p)
+        });
+    }
+
+    #[test]
+    fn origin_start_is_exact_decomposition() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let inst = random_instance(&mut rng, 20, 4);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        let act = ActiveSet::at_origin(&p, 5.0);
+        act.check_invariants(&p).unwrap();
+        assert!(act.y.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn pairwise_drop_step_removes_vertex() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let inst = random_instance(&mut rng, 20, 4);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        let v0 = Vertex { coord: 0, sign: 1 };
+        let v1 = Vertex { coord: 1, sign: -1 };
+        let mut act = ActiveSet::at_vertex(&p, 1.0, v0);
+        act.pairwise_step(&p, v0, v1, 1.0); // full mass shift = drop step
+        assert_eq!(act.weight(v0), 0.0);
+        assert_eq!(act.weight(v1), 1.0);
+        assert!(!act.weights.contains_key(&v0));
+        act.check_invariants(&p).unwrap();
+    }
+}

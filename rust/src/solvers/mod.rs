@@ -1,0 +1,273 @@
+//! Convex-oracle substrate: the quadratic problems of OAVI Line 7 /
+//! (CCOP), solved in *Gram space*.
+//!
+//! With `B = AᵀA`, `r = Aᵀb`, `β = bᵀb` precomputed (O(mℓ) once, by the
+//! streaming backend), the objective
+//! `f(y) = ‖Ay + b‖²/m = (yᵀBy + 2yᵀr + β)/m`
+//! and its gradient `∇f(y) = 2(By + r)/m` cost O(ℓ²)/O(ℓ) per iteration —
+//! never O(mℓ).  This is what makes solver iterations m-independent and
+//! the whole of OAVI linear in m (§4.1, Corollary 4.8).
+//!
+//! Solvers: [`agd`] (unconstrained, Nesterov), and the Frank–Wolfe family
+//! on the ℓ1-ball of radius τ−1 — [`fw`] (vanilla CG), [`pcg`] (pairwise),
+//! [`bpcg`] (blended pairwise, Algorithm 3 of the paper).
+
+pub mod agd;
+pub mod bpcg;
+pub mod fw;
+pub mod lmo;
+pub mod pcg;
+
+use crate::linalg::dense::Matrix;
+use crate::linalg::dot;
+
+/// A quadratic problem in Gram space: minimize
+/// `f(y) = (yᵀBy + 2yᵀatb + btb)/m` (over the ℓ1-ball of radius
+/// `radius` if constrained).
+#[derive(Clone, Copy)]
+pub struct GramProblem<'a> {
+    pub b: &'a Matrix,
+    pub atb: &'a [f64],
+    pub btb: f64,
+    pub m: usize,
+}
+
+impl<'a> GramProblem<'a> {
+    pub fn dim(&self) -> usize {
+        self.atb.len()
+    }
+
+    /// f(y), given the maintained product `by = B·y`.
+    #[inline]
+    pub fn f_with_by(&self, y: &[f64], by: &[f64]) -> f64 {
+        ((dot(y, by) + 2.0 * dot(y, self.atb) + self.btb) / self.m as f64).max(0.0)
+    }
+
+    /// f(y) from scratch (O(ℓ²)).
+    pub fn f(&self, y: &[f64]) -> f64 {
+        let by = self.b.matvec(y);
+        self.f_with_by(y, &by)
+    }
+
+    /// ∇f(y) given `by = B·y`.
+    #[inline]
+    pub fn grad_with_by(&self, by: &[f64]) -> Vec<f64> {
+        let scale = 2.0 / self.m as f64;
+        by.iter().zip(self.atb.iter()).map(|(byi, ri)| scale * (byi + ri)).collect()
+    }
+
+    /// Curvature along d: `dᵀBd / m · 2` is the second derivative of
+    /// `γ ↦ f(y + γd)`; returns `dᵀBd`.
+    pub fn quad_form(&self, d: &[f64]) -> f64 {
+        let bd = self.b.matvec(d);
+        dot(d, &bd)
+    }
+}
+
+/// Why the solver stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Termination {
+    /// Frank–Wolfe gap ≤ ε (certified ε-accurate).
+    GapConverged,
+    /// Gradient-based convergence (AGD).
+    GradConverged,
+    /// f(y) dropped to the ψ target — a vanishing generator exists;
+    /// no need to keep optimizing (paper §6.1 early termination).
+    TargetReached,
+    /// Certified lower bound f(y) − gap > ψ — no vanishing polynomial
+    /// with these terms exists; stop early (paper §6.1).
+    Hopeless,
+    /// Iteration cap hit.
+    MaxIters,
+    /// Progress stalled below machine-level improvements.
+    Stalled,
+}
+
+/// Solver configuration shared across the family.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverParams {
+    /// Target accuracy on the objective (paper: ε = 0.01·ψ).
+    pub eps: f64,
+    /// Iteration cap (paper: 10,000).
+    pub max_iters: usize,
+    /// ℓ1-ball radius τ−1 for the constrained problem (CCOP).
+    pub radius: f64,
+    /// Vanishing threshold ψ for the early-exit certificates
+    /// (`None` disables them).
+    pub psi: Option<f64>,
+}
+
+impl SolverParams {
+    pub fn for_psi(psi: f64, radius: f64) -> Self {
+        SolverParams { eps: 0.01 * psi, max_iters: 10_000, radius, psi: Some(psi) }
+    }
+}
+
+impl Default for SolverParams {
+    fn default() -> Self {
+        SolverParams { eps: 1e-8, max_iters: 10_000, radius: 999.0, psi: None }
+    }
+}
+
+/// Result of a solver run.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub y: Vec<f64>,
+    /// f(y) at the returned point.
+    pub f: f64,
+    pub iters: usize,
+    pub termination: Termination,
+}
+
+/// Exact line search for quadratics: minimize `f(y + γ d)` over `[0, γmax]`
+/// given `gd = ⟨∇f(y), d⟩` and `dbd = dᵀBd`.
+#[inline]
+pub fn quad_line_search(gd: f64, dbd: f64, m: usize, gamma_max: f64) -> f64 {
+    if dbd <= 0.0 {
+        // degenerate direction: either descend to the boundary or stay
+        return if gd < 0.0 { gamma_max } else { 0.0 };
+    }
+    let gamma = -gd * m as f64 / (2.0 * dbd);
+    gamma.clamp(0.0, gamma_max)
+}
+
+/// The solver family used by OAVI (paper naming: CGAVI, PCGAVI, BPCGAVI,
+/// AGDAVI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    /// Vanilla Frank–Wolfe / Conditional Gradients.
+    Cg,
+    /// Pairwise Conditional Gradients.
+    Pcg,
+    /// Blended Pairwise Conditional Gradients (Algorithm 3).
+    Bpcg,
+    /// Accelerated Gradient Descent (unconstrained Line 7).
+    Agd,
+}
+
+impl SolverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Cg => "CG",
+            SolverKind::Pcg => "PCG",
+            SolverKind::Bpcg => "BPCG",
+            SolverKind::Agd => "AGD",
+        }
+    }
+
+    /// Solve the Gram problem with this solver from a cold start.
+    pub fn solve(&self, p: &GramProblem, params: &SolverParams) -> SolveResult {
+        match self {
+            SolverKind::Cg => fw::solve_cg(p, params, None),
+            SolverKind::Pcg => pcg::solve_pcg(p, params, None),
+            SolverKind::Bpcg => bpcg::solve_bpcg(p, params, None),
+            SolverKind::Agd => agd::solve_agd(p, params, None),
+        }
+    }
+
+    /// Solve with a dense warm start (IHB's `y0`).  For FW variants the
+    /// warm start must be inside the ℓ1-ball; callers enforce (INF).
+    pub fn solve_warm(
+        &self,
+        p: &GramProblem,
+        params: &SolverParams,
+        y0: &[f64],
+    ) -> SolveResult {
+        match self {
+            SolverKind::Cg => fw::solve_cg(p, params, Some(y0)),
+            SolverKind::Pcg => pcg::solve_pcg(p, params, Some(y0)),
+            SolverKind::Bpcg => bpcg::solve_bpcg(p, params, Some(y0)),
+            SolverKind::Agd => agd::solve_agd(p, params, Some(y0)),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::linalg::gram::GramState;
+    use crate::util::rng::Rng;
+
+    /// Random least-squares instance in Gram space + its closed-form
+    /// optimum (unconstrained).
+    pub struct Instance {
+        pub gram: GramState,
+        pub atb: Vec<f64>,
+        pub btb: f64,
+        pub m: usize,
+        pub y_opt: Vec<f64>,
+        pub f_opt: f64,
+    }
+
+    pub fn random_instance(rng: &mut Rng, m: usize, ell: usize) -> Instance {
+        let cols: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let b_col: Vec<f64> = (0..m).map(|_| rng.uniform() - 0.5).collect();
+        let gram = GramState::from_columns(&cols).unwrap();
+        let atb: Vec<f64> = cols.iter().map(|c| crate::linalg::dot(c, &b_col)).collect();
+        let btb = crate::linalg::dot(&b_col, &b_col);
+        let (y_opt, resid) = gram.solve_closed_form(&atb, btb);
+        let f_opt = resid / m as f64;
+        Instance { gram, atb, btb, m, y_opt, f_opt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f_and_grad_consistent() {
+        let mut rng = Rng::new(3);
+        let inst = testutil::random_instance(&mut rng, 40, 5);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        let y: Vec<f64> = (0..5).map(|_| rng.normal() * 0.1).collect();
+        // finite-difference gradient check
+        let by = p.b.matvec(&y);
+        let g = p.grad_with_by(&by);
+        let f0 = p.f(&y);
+        let h = 1e-6;
+        for j in 0..5 {
+            let mut yh = y.clone();
+            yh[j] += h;
+            let fd = (p.f(&yh) - f0) / h;
+            assert!((fd - g[j]).abs() < 1e-4, "grad[{j}]: {fd} vs {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn f_at_optimum_matches_closed_form() {
+        let mut rng = Rng::new(4);
+        let inst = testutil::random_instance(&mut rng, 60, 4);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        assert!((p.f(&inst.y_opt) - inst.f_opt).abs() < 1e-9);
+    }
+
+    #[test]
+    fn line_search_clamps() {
+        assert_eq!(quad_line_search(-1.0, 0.0, 10, 1.0), 1.0);
+        assert_eq!(quad_line_search(1.0, 0.0, 10, 1.0), 0.0);
+        // γ* = -gd·m/(2dbd) = 1·10/(2·10) = 0.5
+        assert!((quad_line_search(-1.0, 10.0, 10, 1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(quad_line_search(-100.0, 1.0, 10, 0.25), 0.25);
+    }
+
+    #[test]
+    fn params_for_psi() {
+        let p = SolverParams::for_psi(0.005, 999.0);
+        assert!((p.eps - 5e-5).abs() < 1e-12);
+        assert_eq!(p.max_iters, 10_000);
+        assert_eq!(p.psi, Some(0.005));
+    }
+}

@@ -1,0 +1,164 @@
+//! Pairwise Conditional Gradients (Lacoste-Julien & Jaggi 2015).
+//!
+//! Each step moves weight γ from the away vertex to the global FW vertex.
+//! PCG's rate carries the infamous `(3|vert(P)|! + 1)` factor through
+//! swap-steps (Theorem 4.6) — the paper's motivation for BPCG; we keep it
+//! as the Figure-2 baseline (PCGAVI).
+
+use crate::linalg::dot;
+use crate::solvers::fw::{certificates, warm_active_set};
+use crate::solvers::lmo::{lmo_l1, ActiveSet, Vertex};
+use crate::solvers::{quad_line_search, GramProblem, SolveResult, SolverParams, Termination};
+
+/// PCG with exact line search.
+pub fn solve_pcg(p: &GramProblem, params: &SolverParams, warm: Option<&[f64]>) -> SolveResult {
+    let r = params.radius;
+    let mut act = match warm {
+        Some(y0) => warm_active_set(p, r, y0),
+        None => ActiveSet::at_vertex(p, r, Vertex { coord: 0, sign: 1 }),
+    };
+    let mut stall = 0usize;
+    let mut f_prev = f64::INFINITY;
+
+    for t in 0..params.max_iters {
+        let g = p.grad_with_by(&act.by);
+        let w = lmo_l1(&g, r);
+        let f = p.f_with_by(&act.y, &act.by);
+        let fw_gap = dot(&g, &act.y) - w.dot_grad(&g, r);
+        if let Some(term) = certificates(f, fw_gap, params) {
+            return SolveResult { y: act.y, f, iters: t, termination: term };
+        }
+        let (a, _local) = match act.away_and_local(&g) {
+            Some(pair) => pair,
+            None => {
+                return SolveResult { y: act.y, f, iters: t, termination: Termination::Stalled }
+            }
+        };
+        // pairwise direction d = w − a
+        let gd = w.dot_grad(&g, r) - a.dot_grad(&g, r);
+        if gd >= 0.0 {
+            // no descent in the pairwise direction: numerically converged
+            return SolveResult { y: act.y, f, iters: t, termination: Termination::Stalled };
+        }
+        let dbd = pair_quad(p, w, a, r);
+        let gamma_max = act.weight(a);
+        let gamma = quad_line_search(gd, dbd, p.m, gamma_max);
+        act.pairwise_step(p, a, w, gamma);
+
+        if f_prev - f <= 1e-16 * f.max(1.0) {
+            stall += 1;
+            if stall >= 50 {
+                let f = p.f_with_by(&act.y, &act.by);
+                return SolveResult { y: act.y, f, iters: t, termination: Termination::Stalled };
+            }
+        } else {
+            stall = 0;
+        }
+        f_prev = f;
+    }
+    let f = p.f_with_by(&act.y, &act.by);
+    SolveResult { y: act.y, f, iters: params.max_iters, termination: Termination::MaxIters }
+}
+
+/// (w − a)ᵀ B (w − a) for two ℓ1-ball vertices — three Gram entries.
+#[inline]
+pub(crate) fn pair_quad(p: &GramProblem, w: Vertex, a: Vertex, r: f64) -> f64 {
+    let wv = w.value(r);
+    let av = a.value(r);
+    wv * wv * p.b.get(w.coord, w.coord) + av * av * p.b.get(a.coord, a.coord)
+        - 2.0 * wv * av * p.b.get(w.coord, a.coord)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::testutil::random_instance;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn converges_to_unconstrained_optimum_when_interior() {
+        property(16, |rng| {
+            let inst = random_instance(rng, 60, 4);
+            if crate::linalg::norm1(&inst.y_opt) > 50.0 {
+                return Ok(());
+            }
+            let p = GramProblem {
+                b: inst.gram.b(),
+                atb: &inst.atb,
+                btb: inst.btb,
+                m: inst.m,
+            };
+            let params = SolverParams { eps: 1e-9, max_iters: 20_000, radius: 100.0, psi: None };
+            let res = solve_pcg(&p, &params, None);
+            if res.f > inst.f_opt + 1e-6 {
+                return Err(format!("f {} vs opt {} ({:?})", res.f, inst.f_opt, res.termination));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn respects_ball_constraint() {
+        property(12, |rng| {
+            let inst = random_instance(rng, 40, 6);
+            let p = GramProblem {
+                b: inst.gram.b(),
+                atb: &inst.atb,
+                btb: inst.btb,
+                m: inst.m,
+            };
+            let r = 0.5;
+            let params = SolverParams { eps: 1e-10, max_iters: 3000, radius: r, psi: None };
+            let res = solve_pcg(&p, &params, None);
+            if crate::linalg::norm1(&res.y) > r + 1e-9 {
+                return Err("left the ball".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pcg_faster_than_cg_on_boundary_solutions() {
+        // On problems whose solution sits on the boundary, CG zig-zags;
+        // pairwise steps don't.  Check PCG needs no more iterations.
+        let mut rng = crate::util::rng::Rng::new(21);
+        let mut cg_total = 0usize;
+        let mut pcg_total = 0usize;
+        for _ in 0..5 {
+            let inst = random_instance(&mut rng, 60, 8);
+            let p = GramProblem {
+                b: inst.gram.b(),
+                atb: &inst.atb,
+                btb: inst.btb,
+                m: inst.m,
+            };
+            let params =
+                SolverParams { eps: 1e-8, max_iters: 50_000, radius: 0.3, psi: None };
+            cg_total += crate::solvers::fw::solve_cg(&p, &params, None).iters;
+            pcg_total += solve_pcg(&p, &params, None).iters;
+        }
+        assert!(
+            pcg_total <= cg_total * 2,
+            "pcg {pcg_total} vs cg {cg_total} iterations"
+        );
+    }
+
+    #[test]
+    fn pair_quad_matches_dense() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let inst = random_instance(&mut rng, 30, 5);
+        let p = GramProblem {
+            b: inst.gram.b(),
+            atb: &inst.atb,
+            btb: inst.btb,
+            m: inst.m,
+        };
+        let r = 2.0;
+        let w = Vertex { coord: 1, sign: 1 };
+        let a = Vertex { coord: 3, sign: -1 };
+        let mut d = vec![0.0; 5];
+        d[w.coord] += w.value(r);
+        d[a.coord] -= a.value(r);
+        assert!((pair_quad(&p, w, a, r) - p.quad_form(&d)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,228 @@
+//! Polynomial-kernel SVM baseline (paper §6.1).
+//!
+//! Kernelized Pegasos (Shalev-Shwartz et al.) on the hinge loss with ℓ2
+//! regularization and kernel `K(x, z) = (γ·xᵀz + 1)^degree`.  The paper
+//! caps the baseline at 10,000 iterations — which is precisely why the
+//! poly-kernel SVM falls apart on the 245k-sample skin dataset (Table 3);
+//! we reproduce that behaviour by keeping the same cap, and the kernel
+//! prediction cost O(#SV · q) reproduces its slow test times.
+
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+use crate::linalg::dot;
+use crate::util::rng::Rng;
+
+/// Hyperparameters for the poly-kernel baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct PolyKernelConfig {
+    pub degree: u32,
+    /// ℓ2 regularization λ (Pegasos's 1/(λT) step scale).
+    pub lambda: f64,
+    /// kernel scale γ.
+    pub gamma: f64,
+    /// iteration cap — paper: 10,000.
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for PolyKernelConfig {
+    fn default() -> Self {
+        PolyKernelConfig { degree: 3, lambda: 1e-3, gamma: 1.0, max_iters: 10_000, seed: 0 }
+    }
+}
+
+/// One-vs-rest polynomial-kernel SVM.
+pub struct PolyKernelSvm {
+    config: PolyKernelConfig,
+    n_classes: usize,
+    /// support vectors (rows) shared across heads.
+    support: Matrix,
+    /// per-head α_i·y_i coefficients over the support rows.
+    alphas: Vec<Vec<f64>>,
+}
+
+impl PolyKernelSvm {
+    pub fn fit(
+        x: &Matrix,
+        y: &[usize],
+        n_classes: usize,
+        config: PolyKernelConfig,
+    ) -> Result<Self> {
+        if x.rows() != y.len() {
+            return Err(AviError::Data("PolyKernelSvm::fit: rows != labels".into()));
+        }
+        let m = x.rows();
+        let heads = if n_classes == 2 { 1 } else { n_classes };
+        // Pegasos visits at most max_iters random samples; only visited
+        // samples can become support vectors.  Collect per-head α over a
+        // shared index set for memory sanity.
+        let mut alphas_by_index: Vec<std::collections::HashMap<usize, f64>> =
+            vec![std::collections::HashMap::new(); heads];
+        let t_cap = config.max_iters;
+        for (head, alpha) in alphas_by_index.iter_mut().enumerate() {
+            let target = if n_classes == 2 { 1 } else { head };
+            let mut rng = Rng::new(config.seed ^ (head as u64).wrapping_mul(0x9E37));
+            for t in 1..=t_cap {
+                let i = rng.below(m);
+                let yi = if y[i] == target { 1.0 } else { -1.0 };
+                // f(x_i) = 1/(λ t) Σ_j α_j y_j K(x_j, x_i)
+                let mut f = 0.0;
+                for (&j, &aj) in alpha.iter() {
+                    f += aj * poly_kernel(x.row(j), x.row(i), &config);
+                }
+                f /= config.lambda * t as f64;
+                if yi * f < 1.0 {
+                    *alpha.entry(i).or_insert(0.0) += yi;
+                }
+            }
+        }
+        // union of support indices
+        let mut support_idx: Vec<usize> = alphas_by_index
+            .iter()
+            .flat_map(|a| a.keys().copied())
+            .collect();
+        support_idx.sort_unstable();
+        support_idx.dedup();
+        let support_rows: Vec<Vec<f64>> =
+            support_idx.iter().map(|&i| x.row(i).to_vec()).collect();
+        let support = if support_rows.is_empty() {
+            Matrix::zeros(0, x.cols())
+        } else {
+            Matrix::from_rows(&support_rows)?
+        };
+        let scale = 1.0 / (config.lambda * t_cap as f64);
+        let alphas: Vec<Vec<f64>> = alphas_by_index
+            .iter()
+            .map(|a| {
+                support_idx
+                    .iter()
+                    .map(|i| a.get(i).copied().unwrap_or(0.0) * scale)
+                    .collect()
+            })
+            .collect();
+        Ok(PolyKernelSvm { config, n_classes, support, alphas })
+    }
+
+    /// Number of support vectors (test-time cost driver).
+    pub fn n_support(&self) -> usize {
+        self.support.rows()
+    }
+
+    pub fn decision_row(&self, row: &[f64]) -> Vec<f64> {
+        self.alphas
+            .iter()
+            .map(|alpha| {
+                let mut f = 0.0;
+                for (j, aj) in alpha.iter().enumerate() {
+                    if *aj != 0.0 {
+                        f += aj * poly_kernel(self.support.row(j), row, &self.config);
+                    }
+                }
+                f
+            })
+            .collect()
+    }
+
+    pub fn predict_row(&self, row: &[f64]) -> usize {
+        let d = self.decision_row(row);
+        if self.n_classes == 2 {
+            usize::from(d[0] >= 0.0)
+        } else {
+            d.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        }
+    }
+
+    pub fn predict(&self, x: &Matrix) -> Vec<usize> {
+        (0..x.rows()).map(|i| self.predict_row(x.row(i))).collect()
+    }
+}
+
+#[inline]
+fn poly_kernel(a: &[f64], b: &[f64], cfg: &PolyKernelConfig) -> f64 {
+    (cfg.gamma * dot(a, b) + 1.0).powi(cfg.degree as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// XOR-ish data (centered so sign(a·b) is the label): not linearly
+    /// separable, poly kernel (deg ≥ 2) solves it.
+    fn xor_data(m: usize, seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(m, 2);
+        let mut y = Vec::with_capacity(m);
+        for i in 0..m {
+            let a = rng.uniform() - 0.5;
+            let b = rng.uniform() - 0.5;
+            x.set(i, 0, a);
+            x.set(i, 1, b);
+            y.push(usize::from(a * b > 0.0));
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn solves_xor_with_degree_2() {
+        let (x, y) = xor_data(300, 1);
+        let cfg = PolyKernelConfig {
+            degree: 2,
+            lambda: 1e-5,
+            gamma: 4.0,
+            max_iters: 10_000,
+            ..Default::default()
+        };
+        let svm = PolyKernelSvm::fit(&x, &y, 2, cfg).unwrap();
+        let err = crate::svm::metrics::error_rate(&svm.predict(&x), &y);
+        assert!(err < 0.05, "training error {err}");
+        assert!(svm.n_support() > 0);
+    }
+
+    #[test]
+    fn iteration_cap_limits_quality_on_large_data() {
+        // With a tiny iteration budget relative to m, accuracy degrades —
+        // the paper's skin phenomenon in miniature.
+        let (x, y) = xor_data(5000, 2);
+        let starved = PolyKernelConfig {
+            degree: 2,
+            lambda: 1e-5,
+            gamma: 4.0,
+            max_iters: 60,
+            ..Default::default()
+        };
+        let svm = PolyKernelSvm::fit(&x, &y, 2, starved).unwrap();
+        let err_starved = crate::svm::metrics::error_rate(&svm.predict(&x), &y);
+        let ample = PolyKernelConfig {
+            degree: 2,
+            lambda: 1e-5,
+            gamma: 4.0,
+            max_iters: 8000,
+            ..Default::default()
+        };
+        let svm2 = PolyKernelSvm::fit(&x, &y, 2, ample).unwrap();
+        let err_ample = crate::svm::metrics::error_rate(&svm2.predict(&x), &y);
+        assert!(
+            err_starved > err_ample,
+            "starved {err_starved} vs ample {err_ample}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = xor_data(200, 3);
+        let cfg = PolyKernelConfig { max_iters: 500, ..Default::default() };
+        let a = PolyKernelSvm::fit(&x, &y, 2, cfg).unwrap();
+        let b = PolyKernelSvm::fit(&x, &y, 2, cfg).unwrap();
+        assert_eq!(a.predict(&x), b.predict(&x));
+    }
+
+    #[test]
+    fn validates_shapes() {
+        let x = Matrix::zeros(3, 2);
+        assert!(PolyKernelSvm::fit(&x, &[0, 1], 2, PolyKernelConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! Classification metrics.
+
+/// Fraction of mismatches (the paper's "test set error in percent" / 100).
+pub fn error_rate(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let wrong = pred.iter().zip(truth.iter()).filter(|(p, t)| p != t).count();
+    wrong as f64 / pred.len() as f64
+}
+
+/// Accuracy = 1 − error.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    1.0 - error_rate(pred, truth)
+}
+
+/// k×k confusion matrix (rows = truth, cols = prediction).
+pub fn confusion(pred: &[usize], truth: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; k]; k];
+    for (&p, &t) in pred.iter().zip(truth.iter()) {
+        m[t][p] += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let pred = [0, 1, 1, 0];
+        let truth = [0, 1, 0, 0];
+        assert!((error_rate(&pred, &truth) - 0.25).abs() < 1e-15);
+        assert!((accuracy(&pred, &truth) - 0.75).abs() < 1e-15);
+        assert_eq!(error_rate(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let pred = [0, 1, 1, 0];
+        let truth = [0, 1, 0, 0];
+        let c = confusion(&pred, &truth, 2);
+        assert_eq!(c[0][0], 2);
+        assert_eq!(c[0][1], 1);
+        assert_eq!(c[1][1], 1);
+        assert_eq!(c[1][0], 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! SVM substrate: ℓ1-regularized squared-hinge linear SVM (the paper's
+//! downstream classifier, §3.2 Line 10) and the polynomial-kernel SVM
+//! baseline (§6.1).
+
+pub mod kernel;
+pub mod linear;
+pub mod metrics;
+
+pub use kernel::PolyKernelSvm;
+pub use linear::{LinearSvm, LinearSvmConfig};
+pub use metrics::error_rate;

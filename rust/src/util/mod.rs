@@ -1,0 +1,97 @@
+//! Small shared utilities: deterministic RNG, timing, formatting, a
+//! hand-rolled property-testing helper (proptest is unavailable offline).
+
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+/// Format a float like the paper's tables (`3.1e+00` style).
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0.0e+00".to_string();
+    }
+    let sign = if x < 0.0 { "-" } else { "" };
+    let ax = x.abs();
+    let exp = ax.log10().floor() as i32;
+    let mant = ax / 10f64.powi(exp);
+    // rounding may push the mantissa to 10.0
+    let (mant, exp) = if mant >= 9.95 { (1.0, exp + 1) } else { (mant, exp) };
+    format!("{sign}{mant:.1}e{}{:02}", if exp < 0 { "-" } else { "+" }, exp.abs())
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mu = mean(xs);
+    (xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (copies and sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Binomial coefficient C(n, k) with saturation, in f64 (Theorem 4.3 bound
+/// can overflow u64 for large n, D).
+pub fn binomial_f64(n: u64, k: u64) -> f64 {
+    let k = k.min(n - k.min(n));
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc *= (n - i) as f64 / (i + 1) as f64;
+        if !acc.is_finite() {
+            return f64::INFINITY;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_small() {
+        assert_eq!(binomial_f64(5, 2), 10.0);
+        assert_eq!(binomial_f64(10, 0), 1.0);
+        assert_eq!(binomial_f64(10, 10), 1.0);
+        assert_eq!(binomial_f64(6, 3), 20.0);
+    }
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(sci(0.0), "0.0e+00");
+        assert_eq!(sci(3.1), "3.1e+00");
+        assert_eq!(sci(160.0), "1.6e+02");
+        assert_eq!(sci(0.0015), "1.5e-03");
+        assert_eq!(sci(-0.0015), "-1.5e-03");
+        assert_eq!(sci(9.99), "1.0e+01");
+    }
+}

@@ -1,0 +1,93 @@
+//! Hand-rolled property-testing harness (the `proptest` crate is not
+//! available in this offline environment).
+//!
+//! Usage:
+//! ```ignore
+//! property(64, |rng| {
+//!     let n = rng.below(10) + 1;
+//!     // ... generate a case, return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+//! Each case gets an independently seeded [`Rng`]; on failure the seed is
+//! reported so the case can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` randomized cases of `prop`; panic with the failing seed on
+/// the first violation.
+pub fn property(cases: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    property_seeded(0xA1B2_C3D4, cases, prop)
+}
+
+/// Like [`property`] but with an explicit base seed (for replaying).
+pub fn property_seeded(
+    base_seed: u64,
+    cases: u64,
+    prop: impl Fn(&mut Rng) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two floats are close (absolute + relative), returning a
+/// property-friendly error.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol}, scale {scale})"))
+    }
+}
+
+/// Assert slices are elementwise close.
+pub fn all_close(a: &[f64], b: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        close(*x, *y, tol, &format!("{what}[{i}]"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        property(32, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("uniform out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        property(8, |_| Err("always fails".into()));
+    }
+
+    #[test]
+    fn close_accepts_relative_tolerance() {
+        close(1000.0, 1000.1, 1e-3, "x").unwrap();
+        assert!(close(1.0, 2.0, 1e-3, "x").is_err());
+    }
+
+    #[test]
+    fn all_close_checks_lengths() {
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-9, "v").is_err());
+        all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-9, "v").unwrap();
+    }
+}

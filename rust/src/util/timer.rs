@@ -1,0 +1,51 @@
+//! Wall-clock timing helpers used by the pipeline and bench harness.
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed nanoseconds.
+    pub fn nanos(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::hint::black_box((0..10_000).sum::<u64>());
+        assert!(t.secs() >= 0.0);
+        assert!(t.nanos() > 0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

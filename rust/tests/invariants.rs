@@ -1,0 +1,165 @@
+//! Cross-module property tests of the paper's theoretical claims —
+//! Theorem 4.3 (termination degree + size bound), Theorem 4.9 (inverse
+//! maintenance), Remark 4.5 (τ threshold), oracle-count accounting, and
+//! solver-family agreement — on randomized instances.
+
+use avi_scale::data::{load_registry_dataset, synthetic::synthetic_dataset};
+use avi_scale::linalg::dense::Matrix;
+use avi_scale::linalg::gram::GramState;
+use avi_scale::oavi::{Oavi, OaviConfig};
+use avi_scale::solvers::{GramProblem, SolverKind, SolverParams};
+use avi_scale::util::proptest::{close, property};
+use avi_scale::util::rng::Rng;
+
+fn random_unit_data(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+    let mut x = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            x.set(i, j, rng.uniform());
+        }
+    }
+    x
+}
+
+#[test]
+fn theorem_4_3_size_bound_across_psi_and_n() {
+    property(12, |rng| {
+        let n = 1 + rng.below(4);
+        let m = 50 + rng.below(100);
+        let x = random_unit_data(rng, m, n);
+        let psi = [0.5, 0.2, 0.05, 0.02][rng.below(4)];
+        let cfg = OaviConfig::cgavi_ihb(psi);
+        let model = Oavi::new(cfg).fit(&x).map_err(|e| e.to_string())?;
+        let bound = cfg.size_bound(n);
+        if (model.total_size() as f64) > bound {
+            return Err(format!(
+                "|G|+|O| = {} > C(D+n,D) = {bound} (psi {psi}, n {n})",
+                model.total_size()
+            ));
+        }
+        if model.stats.degree_reached > cfg.theorem_degree() {
+            return Err(format!(
+                "degree {} > D = {}",
+                model.stats.degree_reached,
+                cfg.theorem_degree()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn oracle_call_accounting_matches_paper() {
+    // §4.1: the solver is called exactly once per border term, for a total
+    // of |G| + |O| − 1 calls.
+    property(10, |rng| {
+        let n = 1 + rng.below(3);
+        let m = 60 + rng.below(60);
+        let x = random_unit_data(rng, m, n);
+        let cfg = OaviConfig::cgavi_ihb(0.05);
+        let model = Oavi::new(cfg).fit(&x).map_err(|e| e.to_string())?;
+        if model.stats.oracle_calls != model.total_size() - 1 {
+            return Err(format!(
+                "calls {} != |G|+|O|−1 = {}",
+                model.stats.oracle_calls,
+                model.total_size() - 1
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ihb_inverse_stays_consistent_through_a_full_fit() {
+    // Theorem 4.9 maintenance drift over a real fit on registry data
+    let ds = load_registry_dataset("seeds", 1.0, 5).unwrap();
+    for k in 0..ds.n_classes {
+        let x = ds.class_matrix(k);
+        let model = Oavi::new(OaviConfig::cgavi_ihb(0.002)).fit(&x).unwrap();
+        // rebuild the Gram from the final O columns and compare inverses
+        let cols = model.o_terms.eval_columns(&x);
+        let fresh = GramState::from_columns(&cols).unwrap();
+        assert!(fresh.inverse_drift() < 1e-6);
+    }
+}
+
+#[test]
+fn solver_family_agrees_on_oavi_outputs() {
+    // With interior optima (tau large), all four OAVI variants must find
+    // the same generator structure on exact algebraic data.
+    let ds = synthetic_dataset(800, 3);
+    let x = ds.class_matrix(0);
+    let psi = 0.005;
+    let reference = Oavi::new(OaviConfig::cgavi_ihb(psi)).fit(&x).unwrap();
+    for cfg in [
+        OaviConfig::agdavi_ihb(psi),
+        OaviConfig::bpcgavi_wihb(psi),
+        OaviConfig::bpcgavi(psi),
+        OaviConfig::pcgavi(psi),
+        OaviConfig::cgavi(psi),
+    ] {
+        let model = Oavi::new(cfg).fit(&x).unwrap();
+        assert_eq!(
+            model.o_terms.len(),
+            reference.o_terms.len(),
+            "{}: |O| mismatch",
+            cfg.name()
+        );
+        assert_eq!(
+            model.generators.len(),
+            reference.generators.len(),
+            "{}: |G| mismatch",
+            cfg.name()
+        );
+        for (a, b) in model.generators.iter().zip(reference.generators.iter()) {
+            assert_eq!(a.leading, b.leading, "{}: leading term mismatch", cfg.name());
+        }
+    }
+}
+
+#[test]
+fn remark_4_5_small_tau_disables_ihb_but_still_terminates() {
+    // With τ barely above 2, (INF) fires and OAVI must fall back to the
+    // constrained solver and still terminate with valid generators.
+    let ds = synthetic_dataset(400, 7);
+    let x = ds.class_matrix(0);
+    let mut cfg = OaviConfig::cgavi_ihb(0.005);
+    cfg.tau = 2.0;
+    let model = Oavi::new(cfg).fit(&x).unwrap();
+    // coefficients must respect the ball
+    for g in &model.generators {
+        let l1: f64 = g.coeffs.iter().map(|c| c.abs()).sum();
+        assert!(l1 <= cfg.tau - 1.0 + 1e-6, "coeff ℓ1 {l1} > τ−1");
+    }
+    // with such a tight ball on curved data, (INF) must have fired
+    assert!(model.stats.inf_disabled_ihb || model.generators.is_empty());
+}
+
+#[test]
+fn gram_closed_form_equals_solver_across_instances() {
+    property(12, |rng| {
+        let m = 40 + rng.below(60);
+        let ell = 1 + rng.below(6);
+        let cols: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let b: Vec<f64> = (0..m).map(|_| rng.uniform() - 0.3).collect();
+        let gram = GramState::from_columns(&cols).map_err(|e| e.to_string())?;
+        let atb: Vec<f64> =
+            cols.iter().map(|c| avi_scale::linalg::dot(c, &b)).collect();
+        let btb = avi_scale::linalg::dot(&b, &b);
+        let (y0, resid) = gram.solve_closed_form(&atb, btb);
+        let p = GramProblem { b: gram.b(), atb: &atb, btb, m };
+        let params = SolverParams { eps: 1e-10, max_iters: 30_000, radius: 1e6, psi: None };
+        for solver in [SolverKind::Cg, SolverKind::Pcg, SolverKind::Bpcg, SolverKind::Agd] {
+            let res = solver.solve(&p, &params);
+            close(
+                res.f,
+                resid / m as f64,
+                1e-4,
+                &format!("{} vs closed form", solver.name()),
+            )?;
+        }
+        let _ = y0;
+        Ok(())
+    });
+}

@@ -1,0 +1,158 @@
+//! End-to-end pipeline integration: Algorithm 2 on the paper's datasets
+//! (scaled down), across all generator methods, including CV grid search
+//! and the serving path — the cross-module composition tests.
+
+use std::sync::Arc;
+
+use avi_scale::baselines::abm::AbmConfig;
+use avi_scale::baselines::vca::VcaConfig;
+use avi_scale::coordinator::pool::ThreadPool;
+use avi_scale::coordinator::service::{BatchPolicy, TransformService};
+use avi_scale::data::splits::train_test_split;
+use avi_scale::data::{load_registry_dataset, synthetic::synthetic_dataset};
+use avi_scale::oavi::OaviConfig;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::gridsearch::grid_search;
+use avi_scale::pipeline::report::{run_cell, Method, Protocol};
+use avi_scale::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+fn default_cfg(method: GeneratorMethod) -> PipelineConfig {
+    PipelineConfig {
+        method,
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    }
+}
+
+#[test]
+fn synthetic_separates_well_with_cgavi_ihb() {
+    // the paper's headline qualitative claim on its own synthetic set:
+    // OAVI features make the two varieties (nearly) linearly separable
+    let ds = synthetic_dataset(3000, 1);
+    let split = train_test_split(&ds, 0.6, 0);
+    let model = train_pipeline(
+        &default_cfg(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005))),
+        &split.train,
+    )
+    .unwrap();
+    let err = model.error_on(&split.test);
+    assert!(err < 0.12, "synthetic test error {err}");
+}
+
+#[test]
+fn every_registry_dataset_trains_every_method() {
+    for name in ["bank", "htru", "seeds", "spam"] {
+        let ds = load_registry_dataset(name, 0.04, 7).unwrap();
+        let split = train_test_split(&ds, 0.6, 1);
+        for method in [
+            GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.01)),
+            GeneratorMethod::Abm(AbmConfig::new(0.01)),
+            GeneratorMethod::Vca(VcaConfig::new(0.01)),
+        ] {
+            let model = train_pipeline(&default_cfg(method), &split.train)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", method.name()));
+            let err = model.error_on(&split.test);
+            assert!(
+                err <= 0.55,
+                "{name}/{}: error {err} worse than chance",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn grid_search_plus_refit_beats_worst_grid_point() {
+    let ds = load_registry_dataset("bank", 0.25, 3).unwrap();
+    let split = train_test_split(&ds, 0.6, 2);
+    let pool = ThreadPool::new(2);
+    let method = GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01));
+    let gs = grid_search(
+        &method,
+        FeatureOrdering::Pearson,
+        &split.train,
+        &[0.05, 0.005],
+        &[1e-2, 1e-4],
+        3,
+        5,
+        &pool,
+    )
+    .unwrap();
+    let worst = gs.table.iter().map(|t| t.2).fold(0.0f64, f64::max);
+    assert!(gs.best_cv_error <= worst);
+    // refit with the winner generalizes
+    let cfg = PipelineConfig {
+        method: method.with_psi(gs.best_psi),
+        svm: LinearSvmConfig { lambda: gs.best_lambda, ..Default::default() },
+        ordering: FeatureOrdering::Pearson,
+    };
+    let model = train_pipeline(&cfg, &split.train).unwrap();
+    assert!(model.error_on(&split.test) < 0.2, "bank should be near-separable");
+}
+
+#[test]
+fn table3_cell_protocol_runs_reduced() {
+    let ds = load_registry_dataset("seeds", 1.0, 11).unwrap();
+    let protocol = Protocol {
+        n_splits: 2,
+        cv_folds: 2,
+        psis: &[0.01],
+        lambdas: &[1e-3],
+        ..Default::default()
+    };
+    let pool = ThreadPool::new(2);
+    let cell = run_cell(
+        Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01))),
+        &ds,
+        &protocol,
+        &pool,
+    )
+    .unwrap();
+    assert!(cell.error_mean < 0.4, "seeds error {}", cell.error_mean);
+    assert!(cell.size > 0.0);
+}
+
+#[test]
+fn serving_path_agrees_with_batch_path_on_registry_data() {
+    let ds = load_registry_dataset("htru", 0.03, 13).unwrap();
+    let split = train_test_split(&ds, 0.6, 3);
+    let model = Arc::new(
+        train_pipeline(
+            &default_cfg(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01))),
+            &split.train,
+        )
+        .unwrap(),
+    );
+    let offline = model.predict(&split.test.x);
+    let svc = TransformService::start(model.clone(), BatchPolicy::default());
+    let rows: Vec<Vec<f64>> =
+        (0..split.test.len()).map(|i| split.test.x.row(i).to_vec()).collect();
+    let online: Vec<usize> =
+        svc.predict_many(rows).unwrap().into_iter().map(|r| r.label).collect();
+    assert_eq!(online, offline);
+    svc.shutdown();
+}
+
+#[test]
+fn out_sample_vanishing_on_registry_data() {
+    // paper §1.1/§3.3: CGAVI generators vanish on out-sample data too
+    let ds = load_registry_dataset("bank", 0.3, 17).unwrap();
+    let split = train_test_split(&ds, 0.6, 4);
+    let psi = 0.01;
+    for k in 0..ds.n_classes {
+        let x_train = split.train.class_matrix(k);
+        let x_test = split.test.class_matrix(k);
+        let model = avi_scale::oavi::Oavi::new(OaviConfig::cgavi_ihb(psi))
+            .fit(&x_train)
+            .unwrap();
+        let gs = model.generator_set();
+        for (gi, mse) in gs.mse_on(&x_test).iter().enumerate() {
+            assert!(
+                *mse < 20.0 * psi,
+                "class {k} generator {gi}: out-sample MSE {mse} ≫ ψ={psi}"
+            );
+        }
+    }
+}

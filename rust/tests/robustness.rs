@@ -1,0 +1,191 @@
+//! Failure injection & adversarial inputs: the framework must degrade
+//! gracefully (clean errors or sane output), never panic or hang, on
+//! hostile data.
+
+use avi_scale::baselines::abm::{Abm, AbmConfig};
+use avi_scale::baselines::vca::{Vca, VcaConfig};
+use avi_scale::linalg::dense::Matrix;
+use avi_scale::oavi::{Oavi, OaviConfig};
+use avi_scale::ordering::{order_features, FeatureOrdering};
+use avi_scale::svm::linear::{LinearSvm, LinearSvmConfig};
+use avi_scale::util::rng::Rng;
+
+fn constant_data(m: usize, n: usize, v: f64) -> Matrix {
+    let mut x = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            x.set(i, j, v);
+        }
+    }
+    x
+}
+
+#[test]
+fn constant_zero_data_terminates_quickly() {
+    // x_j ≡ 0: every degree-1 monomial vanishes exactly; O stays {1}.
+    let x = constant_data(50, 3, 0.0);
+    let model = Oavi::new(OaviConfig::cgavi_ihb(1e-6)).fit(&x).unwrap();
+    assert_eq!(model.o_terms.len(), 1);
+    assert_eq!(model.generators.len(), 3);
+    for g in &model.generators {
+        assert!(g.mse <= 1e-6);
+    }
+}
+
+#[test]
+fn constant_one_data_is_handled() {
+    // x_j ≡ 1: columns equal the constant column — maximal degeneracy.
+    let x = constant_data(50, 3, 1.0);
+    let model = Oavi::new(OaviConfig::cgavi_ihb(1e-6)).fit(&x).unwrap();
+    // x_j − 1 vanishes exactly ⇒ all degree-1 terms become generators
+    assert_eq!(model.generators.len(), 3);
+    assert_eq!(model.o_terms.len(), 1);
+}
+
+#[test]
+fn single_sample_fits() {
+    let x = Matrix::from_rows(&[vec![0.3, 0.7]]).unwrap();
+    for cfg in [OaviConfig::cgavi_ihb(0.01), OaviConfig::bpcgavi(0.01)] {
+        let model = Oavi::new(cfg).fit(&x).unwrap();
+        assert!(model.total_size() >= 1);
+    }
+    assert!(Abm::new(AbmConfig::new(0.01)).fit(&x).is_ok());
+    assert!(Vca::new(VcaConfig::new(0.01)).fit(&x).is_ok());
+}
+
+#[test]
+fn single_feature_fits() {
+    let mut rng = Rng::new(1);
+    let rows: Vec<Vec<f64>> = (0..40).map(|_| vec![rng.uniform()]).collect();
+    let x = Matrix::from_rows(&rows).unwrap();
+    let model = Oavi::new(OaviConfig::cgavi_ihb(0.01)).fit(&x).unwrap();
+    assert!(model.stats.degree_reached >= 1);
+}
+
+#[test]
+fn near_zero_psi_on_exact_variety_is_stable() {
+    // ψ at the f64 cancellation floor with data exactly on a line: IHB
+    // must find the exact generator without Schur failures cascading.
+    // (ψ = 0 exactly is the theoretical case — floating-point residuals
+    // of exact relations land at ~1e-15, which is why the paper's
+    // practical setting is ψ > 0.)
+    let rows: Vec<Vec<f64>> = (0..60)
+        .map(|i| {
+            let t = i as f64 / 59.0;
+            vec![t, 1.0 - t]
+        })
+        .collect();
+    let x = Matrix::from_rows(&rows).unwrap();
+    let model = Oavi::new(OaviConfig::cgavi_ihb(1e-14)).fit(&x).unwrap();
+    // x0 + x1 − 1 = 0 is degree 1 ⇒ a degree-1 generator exists
+    assert!(model.generators.iter().any(|g| g.degree() == 1));
+    let gs = model.generator_set();
+    // the closed-form residual is exact in exact arithmetic; recomputing
+    // ‖Ac+b‖²/m directly from an ill-conditioned (near-dependent) system
+    // can drift a few orders above the f64 floor — anything ≪ practical ψ
+    // values is fine.
+    for mse in gs.mse_on(&x) {
+        assert!(mse < 1e-6, "exact generator has mse {mse}");
+    }
+    // ψ = 0 exactly must still terminate without panicking
+    let strict = Oavi::new(OaviConfig::cgavi_ihb(0.0)).fit(&x).unwrap();
+    assert!(strict.stats.degree_reached <= OaviConfig::cgavi_ihb(0.0).max_degree);
+}
+
+#[test]
+fn extreme_psi_values() {
+    let mut rng = Rng::new(2);
+    let rows: Vec<Vec<f64>> = (0..50)
+        .map(|_| vec![rng.uniform(), rng.uniform()])
+        .collect();
+    let x = Matrix::from_rows(&rows).unwrap();
+    // ψ ≥ 1: everything vanishes at degree 1 (x ∈ [0,1] ⇒ MSE(x_j) ≤ 1)
+    let loose = Oavi::new(OaviConfig::cgavi_ihb(1.0)).fit(&x).unwrap();
+    assert_eq!(loose.o_terms.len(), 1);
+    // negative ψ rejected by validation
+    assert!(Oavi::new(OaviConfig::cgavi_ihb(-0.1)).fit(&x).is_err());
+    // NaN ψ rejected
+    assert!(Oavi::new(OaviConfig::cgavi_ihb(f64::NAN)).fit(&x).is_err());
+}
+
+#[test]
+fn duplicated_and_correlated_features_dont_blow_up() {
+    let mut rng = Rng::new(3);
+    let mut rows = Vec::new();
+    for _ in 0..80 {
+        let t = rng.uniform();
+        rows.push(vec![t, t, t, 2.0 * t - t]); // three exact duplicates
+    }
+    let x = Matrix::from_rows(&rows).unwrap();
+    let model = Oavi::new(OaviConfig::cgavi_ihb(1e-12)).fit(&x).unwrap();
+    // pairwise differences vanish: at least 3 degree-1 generators
+    let deg1 = model.generators.iter().filter(|g| g.degree() == 1).count();
+    assert!(deg1 >= 3, "found {deg1} degree-1 generators");
+}
+
+#[test]
+fn ordering_handles_constant_and_nan_free_data() {
+    // constant feature has zero variance ⇒ Pearson 0 by convention
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(4);
+    for _ in 0..30 {
+        rows.push(vec![0.5, rng.uniform()]);
+    }
+    let x = Matrix::from_rows(&rows).unwrap();
+    let perm = order_features(&x, FeatureOrdering::Pearson);
+    assert_eq!(perm.len(), 2);
+}
+
+#[test]
+fn svm_on_single_class_labels_errors() {
+    let x = constant_data(10, 2, 0.5);
+    assert!(LinearSvm::fit(&x, &vec![0; 10], 1, LinearSvmConfig::default()).is_err());
+}
+
+#[test]
+fn svm_on_degenerate_features_is_finite() {
+    // all-zero features: the SVM must converge to the bias-only solution
+    let x = constant_data(40, 3, 0.0);
+    let y: Vec<usize> = (0..40).map(|i| i % 2).collect();
+    let svm = LinearSvm::fit(&x, &y, 2, LinearSvmConfig::default()).unwrap();
+    for (w, b) in &svm.weights {
+        assert!(w.iter().all(|v| v.is_finite()));
+        assert!(b.is_finite());
+    }
+}
+
+#[test]
+fn tiny_tau_never_panics_across_solvers() {
+    let mut rng = Rng::new(5);
+    let rows: Vec<Vec<f64>> = (0..60)
+        .map(|_| vec![rng.uniform(), rng.uniform(), rng.uniform()])
+        .collect();
+    let x = Matrix::from_rows(&rows).unwrap();
+    for mut cfg in [
+        OaviConfig::cgavi_ihb(0.01),
+        OaviConfig::bpcgavi(0.01),
+        OaviConfig::pcgavi(0.01),
+    ] {
+        cfg.tau = 2.0; // minimum legal
+        let model = Oavi::new(cfg).fit(&x).unwrap();
+        for g in &model.generators {
+            let l1: f64 = g.coeffs.iter().map(|c| c.abs()).sum();
+            assert!(l1 <= 1.0 + 1e-6, "{}: coeffs left the ball: {l1}", cfg.name());
+        }
+    }
+}
+
+#[test]
+fn max_degree_cap_terminates_adversarial_config() {
+    // ψ so small nothing vanishes on random data: the degree cap (and
+    // max_o_terms) must still terminate the fit in bounded work.
+    let mut rng = Rng::new(6);
+    let rows: Vec<Vec<f64>> = (0..30).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+    let x = Matrix::from_rows(&rows).unwrap();
+    let mut cfg = OaviConfig::cgavi_ihb(1e-300);
+    cfg.max_degree = 3;
+    cfg.max_o_terms = 50;
+    let model = Oavi::new(cfg).fit(&x).unwrap();
+    assert!(model.stats.degree_reached <= 3);
+    assert!(model.o_terms.len() <= 50);
+}

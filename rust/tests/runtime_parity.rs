@@ -1,0 +1,129 @@
+//! PJRT runtime ↔ native backend parity — the end-to-end check of the
+//! three-layer contract: the JAX/Pallas-authored, AOT-compiled artifacts
+//! must compute the same numbers as the native Rust reference (within f32
+//! tolerance), through the exact code path the production system uses.
+//!
+//! Skips gracefully (with a loud message) if `make artifacts` has not run.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::linalg::dense::Matrix;
+use avi_scale::oavi::{Oavi, OaviConfig};
+use avi_scale::runtime::{PjrtRuntime, XlaBackend};
+use avi_scale::util::rng::Rng;
+
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtRuntime::load(&dir) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP runtime_parity: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn gram_stats_parity_small() {
+    let Some(rt) = runtime() else { return };
+    let xla = XlaBackend::new(rt);
+    let native = NativeBackend;
+    let mut rng = Rng::new(1);
+    for (m, ell) in [(100usize, 3usize), (4096, 10), (5000, 40), (9000, 64)] {
+        let cols: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+        let (atb_x, btb_x) = xla.gram_stats(&cols, &b);
+        let (atb_n, btb_n) = native.gram_stats(&cols, &b);
+        let scale = m as f64;
+        for j in 0..ell {
+            assert!(
+                (atb_x[j] - atb_n[j]).abs() < 1e-3 * scale,
+                "m={m} ell={ell} atb[{j}]: {} vs {}",
+                atb_x[j],
+                atb_n[j]
+            );
+        }
+        assert!((btb_x - btb_n).abs() < 1e-3 * scale, "btb {} vs {}", btb_x, btb_n);
+    }
+}
+
+#[test]
+fn transform_parity() {
+    let Some(rt) = runtime() else { return };
+    let xla = XlaBackend::new(rt);
+    let native = NativeBackend;
+    let mut rng = Rng::new(2);
+    let (m, ell, g) = (5000usize, 12usize, 7usize);
+    let cols: Vec<Vec<f64>> =
+        (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+    let mut c = Matrix::zeros(ell, g);
+    let mut u = Matrix::zeros(m, g);
+    for j in 0..ell {
+        for k in 0..g {
+            c.set(j, k, rng.normal());
+        }
+    }
+    for i in 0..m {
+        for k in 0..g {
+            u.set(i, k, rng.normal());
+        }
+    }
+    let tx = xla.transform_abs(&cols, &c, &u);
+    let tn = native.transform_abs(&cols, &c, &u);
+    let mut worst = 0.0f64;
+    for i in 0..m {
+        for k in 0..g {
+            worst = worst.max((tx.get(i, k) - tn.get(i, k)).abs());
+        }
+    }
+    assert!(worst < 1e-3, "worst transform deviation {worst}");
+}
+
+#[test]
+fn oavi_fit_through_xla_backend_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let xla = XlaBackend::new(rt);
+    let ds = synthetic_dataset(2000, 7);
+    let x = ds.class_matrix(0);
+    let cfg = OaviConfig::cgavi_ihb(0.005);
+    let native_model = Oavi::new(cfg).fit(&x).unwrap();
+    let xla_model = Oavi::new(cfg).fit_with_backend(&x, &xla).unwrap();
+    // identical structure discovery (f32 stats are well inside the ψ margin)
+    assert_eq!(native_model.o_terms.len(), xla_model.o_terms.len());
+    assert_eq!(native_model.generators.len(), xla_model.generators.len());
+    for (a, b) in native_model.generators.iter().zip(xla_model.generators.iter()) {
+        assert_eq!(a.leading, b.leading);
+        assert!((a.mse - b.mse).abs() < 1e-4, "mse {} vs {}", a.mse, b.mse);
+    }
+}
+
+#[test]
+fn fallback_beyond_artifact_width() {
+    let Some(rt) = runtime() else { return };
+    let xla = XlaBackend::new(rt);
+    // ℓ = 300 exceeds the largest L_PAD=256 artifact ⇒ silent native fallback
+    let mut rng = Rng::new(3);
+    let m = 200;
+    let cols: Vec<Vec<f64>> =
+        (0..300).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+    let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+    let (atb_x, btb_x) = xla.gram_stats(&cols, &b);
+    let (atb_n, btb_n) = NativeBackend.gram_stats(&cols, &b);
+    assert_eq!(atb_x, atb_n); // exact: same f64 code path
+    assert_eq!(btb_x, btb_n);
+}
+
+#[test]
+fn runtime_lists_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.gram_artifact_for(1).is_some());
+    assert!(rt.gram_artifact_for(64).is_some());
+    assert!(rt.gram_artifact_for(200).is_some());
+    assert!(rt.gram_artifact_for(257).is_none());
+    assert!(rt.transform_artifact_for(10, 10).is_some());
+    assert!(rt.transform_artifact_for(10, 500).is_none());
+}
