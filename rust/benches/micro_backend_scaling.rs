@@ -1,0 +1,88 @@
+//! Micro: data-plane scaling — gram_stats and transform_abs per-call ns
+//! over m ∈ {1e4, 1e5, 1e6} × shards ∈ {1, 2, 4, 8}, NativeBackend
+//! (sequential shard reduction) vs ShardedBackend (thread-pool map).
+//!
+//! This is the hot-path regression tracker for the sharded column-store
+//! data plane: the paper's "linear in m" becomes "linear in m / cores"
+//! exactly when the `sharded` column shows ≥ 2× over `native` at
+//! m = 1e6, shards = 4 on a multi-core host (ISSUE 1 acceptance bar).
+//! Results are asserted bit-identical before timing so a perf reading
+//! can never come from divergent arithmetic.
+
+use avi_scale::backend::{ColumnStore, ComputeBackend, NativeBackend, ShardedBackend};
+use avi_scale::bench::{report_figure, Bencher, Series};
+use avi_scale::linalg::dense::Matrix;
+use avi_scale::util::rng::Rng;
+
+fn main() {
+    let bencher = Bencher::new(1, 5);
+    let mut rng = Rng::new(23);
+    let ell = 16usize;
+    let g = 8usize;
+
+    let mut gram_series: Vec<Series> = Vec::new();
+    let mut tr_series: Vec<Series> = Vec::new();
+
+    println!(
+        "{:>9} {:>7} {:>15} {:>15} {:>8}   {:>15} {:>15} {:>8}",
+        "m", "shards", "gram_native_ns", "gram_shard_ns", "speedup", "tr_native_ns",
+        "tr_shard_ns", "speedup"
+    );
+    for &m in &[10_000usize, 100_000, 1_000_000] {
+        let cols: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+        let mut c = Matrix::zeros(ell, g);
+        let mut u = Matrix::zeros(m, g);
+        for j in 0..ell {
+            for k in 0..g {
+                c.set(j, k, rng.normal());
+            }
+        }
+        for i in 0..m {
+            for k in 0..g {
+                u.set(i, k, rng.normal());
+            }
+        }
+        let mut gram_native = Series::new(format!("gram_native_m{m}"));
+        let mut gram_shard = Series::new(format!("gram_sharded_m{m}"));
+        let mut tr_native = Series::new(format!("tr_native_m{m}"));
+        let mut tr_shard = Series::new(format!("tr_sharded_m{m}"));
+        for &k in &[1usize, 2, 4, 8] {
+            let store = ColumnStore::from_cols(&cols, k);
+            let sharded = ShardedBackend::new(k);
+
+            // correctness gate before timing: bit-identical per shard count
+            let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
+            let (atb_s, btb_s) = sharded.gram_stats(&store, &b);
+            assert_eq!(btb_n.to_bits(), btb_s.to_bits(), "btb diverged at m={m} k={k}");
+            for (a, s) in atb_n.iter().zip(atb_s.iter()) {
+                assert_eq!(a.to_bits(), s.to_bits(), "atb diverged at m={m} k={k}");
+            }
+
+            let gn = bencher.run("gram_native", || NativeBackend.gram_stats(&store, &b));
+            let gs = bencher.run("gram_sharded", || sharded.gram_stats(&store, &b));
+            let tn = bencher.run("tr_native", || NativeBackend.transform_abs(&store, &c, &u));
+            let ts = bencher.run("tr_sharded", || sharded.transform_abs(&store, &c, &u));
+            println!(
+                "{m:>9} {k:>7} {:>15.0} {:>15.0} {:>7.2}x   {:>15.0} {:>15.0} {:>7.2}x",
+                gn.median_s * 1e9,
+                gs.median_s * 1e9,
+                gn.median_s / gs.median_s,
+                tn.median_s * 1e9,
+                ts.median_s * 1e9,
+                tn.median_s / ts.median_s
+            );
+            gram_native.push_obs(k as f64, &[gn.median_s]);
+            gram_shard.push_obs(k as f64, &[gs.median_s]);
+            tr_native.push_obs(k as f64, &[tn.median_s]);
+            tr_shard.push_obs(k as f64, &[ts.median_s]);
+        }
+        gram_series.push(gram_native);
+        gram_series.push(gram_shard);
+        tr_series.push(tr_native);
+        tr_series.push(tr_shard);
+    }
+    report_figure("micro_backend_scaling_gram", "shards", &gram_series);
+    report_figure("micro_backend_scaling_transform", "shards", &tr_series);
+}

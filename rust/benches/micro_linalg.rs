@@ -1,7 +1,7 @@
 //! Micro: linalg substrate timings — Theorem 4.9 append (O(ℓ²)) vs
 //! Cholesky rebuild (O(ℓ³)), Jacobi eigen, and the gram_stats hot loop.
 
-use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::backend::{ColumnStore, ComputeBackend, NativeBackend};
 use avi_scale::bench::{report_figure, Bencher, Series};
 use avi_scale::linalg::eigen::sym_eig;
 use avi_scale::linalg::gram::GramState;
@@ -41,7 +41,8 @@ fn main() {
         let stat = bencher.run("eig", || sym_eig(&b, 30).unwrap());
         eig_series.push_obs(ell as f64, &[stat.median_s]);
 
-        let stat = bencher.run("gram_stats", || NativeBackend.gram_stats(&cols, &newcol));
+        let store = ColumnStore::from_cols(&cols, 1);
+        let stat = bencher.run("gram_stats", || NativeBackend.gram_stats(&store, &newcol));
         println!(
             "ell={ell:>4}: gram_stats {:.1}us ({:.2} GB/s effective)",
             stat.median_s * 1e6,

@@ -1,27 +1,101 @@
 //! Micro: native vs PJRT (AOT Pallas artifact) backends on the two hot
-//! paths — gram_stats and the (FT) transform.  Requires `make artifacts`;
-//! skips with a message otherwise.
+//! paths — gram_stats and the (FT) transform — plus the
+//! `transform_branch_gate` that decides the zero-skip question (runs
+//! without artifacts).  The backend comparison requires `make artifacts`;
+//! it skips with a message otherwise.
 
 use std::sync::Arc;
 
-use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::backend::{ColumnStore, ComputeBackend, NativeBackend};
 use avi_scale::bench::{report_figure, Bencher, Series};
 use avi_scale::linalg::dense::Matrix;
 use avi_scale::runtime::{PjrtRuntime, XlaBackend};
 use avi_scale::util::rng::Rng;
 
+/// Bench gate for the historical `if a_ij == 0.0 { continue; }` skip in
+/// the transform kernel.  Both variants are reproduced here over plain
+/// columns so the comparison is exactly the branch, nothing else.  The
+/// production kernel (`backend::store::transform_block`) is branchless —
+/// see the verdict comment in `backend/mod.rs`; re-run this gate before
+/// reintroducing the skip.
+fn transform_branch_gate(bencher: &Bencher, rng: &mut Rng) {
+    let (m, ell, g) = (65_536usize, 32usize, 24usize);
+    println!("--- transform_branch_gate (m={m}, ell={ell}, g={g}) ---");
+    for &(label, density) in &[("dense", 1.0f64), ("half-zero", 0.5), ("mostly-zero", 0.05)] {
+        let cols: Vec<Vec<f64>> = (0..ell)
+            .map(|_| {
+                (0..m)
+                    .map(|_| if rng.uniform() < density { rng.uniform() } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        let c: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..g).map(|_| rng.normal()).collect()).collect();
+        let u: Vec<f64> = (0..m * g).map(|_| rng.normal()).collect();
+
+        let branchy = || {
+            let mut out = u.clone();
+            for (j, col) in cols.iter().enumerate() {
+                let crow = &c[j];
+                for (i, &a_ij) in col.iter().enumerate() {
+                    if a_ij == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut out[i * g..(i + 1) * g];
+                    for (o, ck) in orow.iter_mut().zip(crow.iter()) {
+                        *o += a_ij * ck;
+                    }
+                }
+            }
+            for v in out.iter_mut() {
+                *v = v.abs();
+            }
+            out
+        };
+        let branchless = || {
+            let mut out = u.clone();
+            for (j, col) in cols.iter().enumerate() {
+                let crow = &c[j];
+                for (i, &a_ij) in col.iter().enumerate() {
+                    let orow = &mut out[i * g..(i + 1) * g];
+                    for (o, ck) in orow.iter_mut().zip(crow.iter()) {
+                        *o += a_ij * ck;
+                    }
+                }
+            }
+            for v in out.iter_mut() {
+                *v = v.abs();
+            }
+            out
+        };
+        let sb = bencher.run("branchy", branchy);
+        let sl = bencher.run("branchless", branchless);
+        println!(
+            "{label:>12}: branchy {:>9.1}us  branchless {:>9.1}us  (branchless {:.2}x)",
+            sb.median_s * 1e6,
+            sl.median_s * 1e6,
+            sb.median_s / sl.median_s
+        );
+    }
+    println!("(verdict recorded in rust/src/backend/mod.rs)");
+}
+
 fn main() {
+    let bencher = Bencher::new(1, 5);
+    let mut rng = Rng::new(11);
+
+    // runs regardless of artifacts: the zero-skip decision gate
+    transform_branch_gate(&bencher, &mut rng);
+
     let rt = match PjrtRuntime::load(std::path::Path::new("artifacts")) {
         Ok(rt) => Arc::new(rt),
         Err(e) => {
-            println!("SKIP micro_runtime: {e}");
+            println!("SKIP micro_runtime backend comparison: {e}");
             return;
         }
     };
     let xla = XlaBackend::new(rt);
     let native = NativeBackend;
-    let bencher = Bencher::new(1, 5);
-    let mut rng = Rng::new(11);
 
     let mut native_gram = Series::new("native_gram");
     let mut xla_gram = Series::new("xla_gram");
@@ -29,9 +103,10 @@ fn main() {
         let ell = 32;
         let cols: Vec<Vec<f64>> =
             (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let store = ColumnStore::from_cols(&cols, 1);
         let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
-        let sn = bencher.run("native", || native.gram_stats(&cols, &b));
-        let sx = bencher.run("xla", || xla.gram_stats(&cols, &b));
+        let sn = bencher.run("native", || native.gram_stats(&store, &b));
+        let sx = bencher.run("xla", || xla.gram_stats(&store, &b));
         println!(
             "gram m={m:>6} ell={ell}: native {:>9.1}us  xla {:>9.1}us ({:.1}x)",
             sn.median_s * 1e6,
@@ -49,6 +124,7 @@ fn main() {
         let (ell, g) = (32usize, 24usize);
         let cols: Vec<Vec<f64>> =
             (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let store = ColumnStore::from_cols(&cols, 1);
         let mut c = Matrix::zeros(ell, g);
         let mut u = Matrix::zeros(m, g);
         for j in 0..ell {
@@ -61,8 +137,8 @@ fn main() {
                 u.set(i, k, rng.normal());
             }
         }
-        let sn = bencher.run("native", || native.transform_abs(&cols, &c, &u));
-        let sx = bencher.run("xla", || xla.transform_abs(&cols, &c, &u));
+        let sn = bencher.run("native", || native.transform_abs(&store, &c, &u));
+        let sx = bencher.run("xla", || xla.transform_abs(&store, &c, &u));
         println!(
             "transform m={m:>6}: native {:>9.1}us  xla {:>9.1}us ({:.1}x)",
             sn.median_s * 1e6,

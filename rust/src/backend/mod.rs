@@ -1,102 +1,107 @@
-//! Compute backends for the O(m·ℓ) streaming hot path.
+//! The data plane: sharded column storage + streaming compute backends
+//! for the O(m·ℓ) hot path.
 //!
-//! OAVI touches the full data set only through two operations:
+//! OAVI touches the full data set only through two kernels:
 //!
 //! 1. **gram_stats** — `(Aᵀb, bᵀb)` for a candidate column b (per border
 //!    term; the dominant training cost), and
-//! 2. **transform** — the (FT) feature map `|A·C + U|` (test time).
+//! 2. **transform_abs** — the (FT) feature map `|A·C + U|` (test time).
 //!
-//! [`NativeBackend`] implements both in plain Rust (f64) and is the
-//! correctness reference.  [`crate::runtime::XlaBackend`] dispatches to the
-//! AOT-compiled Pallas artifacts via PJRT (f32, tiled to the artifact
-//! shapes) and must agree with the native path within f32 tolerance —
-//! enforced by `rust/tests/runtime_parity.rs`.
+//! # Layering (store → backend → driver)
+//!
+//! * [`ColumnStore`] (`store.rs`) owns the evaluation columns in
+//!   contiguous **row-sharded** blocks and is the only column currency
+//!   above `linalg`: the OAVI/ABM drivers append candidate columns into
+//!   it, `poly` evaluates term sets into it, `ordering` computes Pearson
+//!   statistics from it.  The per-shard kernels (`gram_partial`,
+//!   `transform_block`) live next to the store so every backend runs the
+//!   same per-shard code.
+//! * [`ComputeBackend`] (this file) is the execution strategy over a
+//!   store.  [`NativeBackend`] reduces the shards sequentially and is the
+//!   correctness reference; [`ShardedBackend`] (`sharded.rs`) maps shards
+//!   onto a [`crate::coordinator::pool::ThreadPool`] and reduces partials
+//!   in shard order — bit-identical to native for a fixed shard count,
+//!   wall-clock ≈ linear in m / workers.
+//! * Drivers ([`crate::oavi::Oavi`], [`crate::baselines::abm::Abm`], the
+//!   pipeline transform) ask the backend for its
+//!   [`ComputeBackend::preferred_shards`] when building stores, so the
+//!   intra-fit parallelism knob travels with the backend, not the config.
+//!
+//! # The `!Send` trait vs `Send` shard workers
+//!
+//! The trait is deliberately NOT `Send`/`Sync`: the `xla` crate's PJRT
+//! handles are `Rc`-based, so a backend must stay on the thread that made
+//! it.  Cross-thread parallelism happens either **above** the trait (one
+//! backend per job — grid search, per-class fits) or **below** it (shard
+//! workers inside `ShardedBackend` see only `&[f64]` slices and the
+//! plain-data store, both `Sync`).  Nothing ever shares a backend across
+//! threads.
+//!
+//! # Where PJRT fits
+//!
+//! [`crate::runtime::XlaBackend`] implements the same trait by tiling
+//! each shard through the AOT-compiled Pallas artifacts (f32, padded to
+//! the artifact shapes) and must agree with the native path within f32
+//! tolerance — enforced by `rust/tests/runtime_parity.rs`, which also
+//! pins the native↔sharded bit-for-bit contract.
 
+pub mod sharded;
+pub mod store;
+
+pub use sharded::ShardedBackend;
+pub use store::ColumnStore;
+
+use crate::backend::store::{gram_stats_seq, transform_abs_seq};
 use crate::linalg::dense::Matrix;
-use crate::linalg::dot;
 
 /// Streaming compute abstraction over the per-sample hot loops.
 ///
-/// Deliberately NOT `Send`/`Sync`: the `xla` crate's PJRT handles are
-/// `Rc`-based.  Cross-thread parallelism in this codebase happens at the
-/// job level (one backend per worker), never by sharing a backend.
+/// Deliberately NOT `Send`/`Sync` (see module docs): parallelism happens
+/// above this trait (one backend per job) or below it (shard workers).
 pub trait ComputeBackend {
-    /// `(Aᵀb, bᵀb)` where A's columns are `cols` and b is `b_col`.
-    fn gram_stats(&self, cols: &[Vec<f64>], b_col: &[f64]) -> (Vec<f64>, f64);
+    /// `(Aᵀb, bᵀb)` where A's columns live in `cols` and b is `b_col`.
+    fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64);
 
-    /// `|A·C + U|` where A is m×ℓ (columns `cols`), C is ℓ×g, U is m×g.
+    /// `|A·C + U|` where A is m×ℓ (the store), C is ℓ×g, U is m×g.
     /// Row-major output m×g.
-    fn transform_abs(&self, cols: &[Vec<f64>], c: &Matrix, u: &Matrix) -> Matrix;
+    fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix;
 
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str;
+
+    /// How many row shards this backend wants drivers to build
+    /// [`ColumnStore`]s with for an m-row fit.  Results are deterministic
+    /// per shard count, so this is a reproducibility-relevant knob:
+    /// sequential backends return 1.
+    fn preferred_shards(&self, m: usize) -> usize {
+        let _ = m;
+        1
+    }
 }
 
-/// Plain-Rust reference backend.
+/// Plain-Rust reference backend: the shared per-shard kernels reduced
+/// sequentially in shard order.
+//
+// Bench gate (ISSUE satellite): the old transform_abs inner loop skipped
+// `a_ij == 0.0` entries.  Verdict from `rust/benches/micro_runtime.rs`
+// (`transform_branch_gate` section, dense [0,1) columns, m = 65536): the
+// branch blocks vectorization of the g-loop and real evaluation columns
+// are essentially never exactly 0 (the constant column is all ones), so
+// the branchless kernel wins on the dense generator matrices the (FT)
+// transform actually sees.  The skip only pays on artificially sparse
+// columns, which this data plane does not produce.  The kernel in
+// `store::transform_block` is therefore branchless; re-run the gate
+// before reintroducing the skip.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeBackend;
 
 impl ComputeBackend for NativeBackend {
-    fn gram_stats(&self, cols: &[Vec<f64>], b_col: &[f64]) -> (Vec<f64>, f64) {
-        // Perf pass #2 (EXPERIMENTS.md §Perf): for DRAM-resident columns,
-        // process four at a time so each pass over the (cache-missing) b
-        // column amortizes across four dot products — b traffic drops 4×.
-        // For cache-resident m the simple vectorized dot is faster, so the
-        // blocked path only kicks in past the last-level-cache scale.
-        let m = b_col.len();
-        const BLOCK_THRESHOLD_BYTES: usize = 4 << 20; // ~LLC slice
-        if m * std::mem::size_of::<f64>() < BLOCK_THRESHOLD_BYTES {
-            let atb: Vec<f64> = cols.iter().map(|c| dot(c, b_col)).collect();
-            return (atb, dot(b_col, b_col));
-        }
-        let mut atb = vec![0.0f64; cols.len()];
-        let mut j = 0;
-        while j + 4 <= cols.len() {
-            let (c0, c1, c2, c3) = (&cols[j], &cols[j + 1], &cols[j + 2], &cols[j + 3]);
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-            for i in 0..m {
-                let bi = b_col[i];
-                s0 += c0[i] * bi;
-                s1 += c1[i] * bi;
-                s2 += c2[i] * bi;
-                s3 += c3[i] * bi;
-            }
-            atb[j] = s0;
-            atb[j + 1] = s1;
-            atb[j + 2] = s2;
-            atb[j + 3] = s3;
-            j += 4;
-        }
-        for (jj, c) in cols.iter().enumerate().skip(j) {
-            atb[jj] = dot(c, b_col);
-        }
-        (atb, dot(b_col, b_col))
+    fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
+        gram_stats_seq(cols, b_col)
     }
 
-    fn transform_abs(&self, cols: &[Vec<f64>], c: &Matrix, u: &Matrix) -> Matrix {
-        let m = u.rows();
-        let g = u.cols();
-        debug_assert_eq!(c.rows(), cols.len());
-        debug_assert_eq!(c.cols(), g);
-        let mut out = u.clone();
-        // out += A @ C, column-of-A major: cache-friendly over the long m axis
-        for (j, col) in cols.iter().enumerate() {
-            let crow = c.row(j);
-            for i in 0..m {
-                let a_ij = col[i];
-                if a_ij == 0.0 {
-                    continue;
-                }
-                let orow = out.row_mut(i);
-                for (o, ck) in orow.iter_mut().zip(crow.iter()) {
-                    *o += a_ij * ck;
-                }
-            }
-        }
-        for v in out.data_mut().iter_mut() {
-            *v = v.abs();
-        }
-        out
+    fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
+        transform_abs_seq(cols, c, u)
     }
 
     fn name(&self) -> &'static str {
@@ -107,6 +112,7 @@ impl ComputeBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::dot;
     use crate::util::proptest::{all_close, property};
 
     #[test]
@@ -114,10 +120,12 @@ mod tests {
         property(16, |rng| {
             let m = 10 + rng.below(40);
             let ell = 1 + rng.below(6);
+            let shards = 1 + rng.below(4);
             let cols: Vec<Vec<f64>> =
                 (0..ell).map(|_| (0..m).map(|_| rng.normal()).collect()).collect();
             let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
-            let (atb, btb) = NativeBackend.gram_stats(&cols, &b);
+            let store = ColumnStore::from_cols(&cols, shards);
+            let (atb, btb) = NativeBackend.gram_stats(&store, &b);
             let expect: Vec<f64> = cols.iter().map(|c| dot(c, &b)).collect();
             all_close(&atb, &expect, 1e-12, "atb")?;
             crate::util::proptest::close(btb, dot(&b, &b), 1e-12, "btb")
@@ -130,8 +138,10 @@ mod tests {
             let m = 5 + rng.below(20);
             let ell = 1 + rng.below(4);
             let g = 1 + rng.below(4);
+            let shards = 1 + rng.below(4);
             let cols: Vec<Vec<f64>> =
                 (0..ell).map(|_| (0..m).map(|_| rng.normal()).collect()).collect();
+            let store = ColumnStore::from_cols(&cols, shards);
             let mut c = Matrix::zeros(ell, g);
             let mut u = Matrix::zeros(m, g);
             for i in 0..ell {
@@ -144,7 +154,7 @@ mod tests {
                     u.set(i, j, rng.normal());
                 }
             }
-            let out = NativeBackend.transform_abs(&cols, &c, &u);
+            let out = NativeBackend.transform_abs(&store, &c, &u);
             for i in 0..m {
                 for j in 0..g {
                     let mut v = u.get(i, j);
@@ -161,7 +171,8 @@ mod tests {
     }
 
     #[test]
-    fn backend_name() {
+    fn backend_name_and_default_shards() {
         assert_eq!(NativeBackend.name(), "native");
+        assert_eq!(NativeBackend.preferred_shards(1_000_000), 1);
     }
 }

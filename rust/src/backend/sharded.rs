@@ -1,0 +1,258 @@
+//! Map-reduce compute backend: the two streaming kernels fan out one job
+//! per [`ColumnStore`] shard onto a [`ThreadPool`], then reduce partials
+//! **in shard order**.
+//!
+//! Determinism contract: for a fixed store shard count the result is a
+//! pure function of the inputs — independent of worker count, thread
+//! scheduling, or repetition — because every shard runs the exact
+//! per-shard kernel [`crate::backend::store::gram_partial`] /
+//! [`crate::backend::store::transform_block`] that
+//! [`crate::backend::NativeBackend`] runs sequentially, and the reduction
+//! order is the shard order.  `ShardedBackend` therefore matches
+//! `NativeBackend` bit-for-bit on any store (shards = 1 included), which
+//! `rust/tests/runtime_parity.rs` and the property tests below enforce.
+//!
+//! The `ComputeBackend` trait itself stays `!Send` (PJRT handles are
+//! `Rc`-based); the shard workers only ever see `&[f64]` slices and the
+//! plain-data [`ColumnStore`], both `Sync`, so the pool fan-out lives
+//! entirely below the trait boundary.
+
+use crate::backend::store::{
+    gram_partial, gram_stats_seq, transform_abs_seq, transform_block, ColumnStore,
+};
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::coordinator::pool::ThreadPool;
+use crate::linalg::dense::Matrix;
+
+/// Default shard floor for training fits: below this many rows per
+/// shard the per-shard thread hand-off costs more than the dot
+/// products it parallelizes.  Serving overrides it downward
+/// ([`ShardedBackend::with_min_rows`]) because transform work per row
+/// (ℓ·g fused multiply-adds) is much heavier than a dot.
+pub const MIN_ROWS_PER_SHARD: usize = 4096;
+
+/// Intra-fit parallel backend (map-reduce over row shards).
+pub struct ShardedBackend {
+    pool: ThreadPool,
+    min_rows_per_shard: usize,
+}
+
+impl ShardedBackend {
+    /// Backend with `workers` shard-worker threads (clamped to ≥ 1) and
+    /// the default [`MIN_ROWS_PER_SHARD`] floor.
+    pub fn new(workers: usize) -> Self {
+        Self::with_min_rows(workers, MIN_ROWS_PER_SHARD)
+    }
+
+    /// Backend with an explicit shard floor — the knob callers with
+    /// lighter- or heavier-than-training per-row work use to decide
+    /// when sharding starts paying off.
+    pub fn with_min_rows(workers: usize, min_rows_per_shard: usize) -> Self {
+        ShardedBackend {
+            pool: ThreadPool::new(workers),
+            min_rows_per_shard: min_rows_per_shard.max(1),
+        }
+    }
+
+    /// Backend sized to the machine (available parallelism − 1).
+    pub fn default_parallel() -> Self {
+        ShardedBackend {
+            pool: ThreadPool::default_size(),
+            min_rows_per_shard: MIN_ROWS_PER_SHARD,
+        }
+    }
+
+    /// The worker-count-to-backend policy shared by the grid search,
+    /// the serving path, and the CLI: sharded when `workers > 1`,
+    /// native otherwise.
+    pub fn boxed_for(workers: usize) -> Box<dyn ComputeBackend> {
+        Self::boxed_with_min_rows(workers, MIN_ROWS_PER_SHARD)
+    }
+
+    /// [`ShardedBackend::boxed_for`] with an explicit shard floor.
+    pub fn boxed_with_min_rows(workers: usize, min_rows: usize) -> Box<dyn ComputeBackend> {
+        if workers > 1 {
+            Box::new(ShardedBackend::with_min_rows(workers, min_rows))
+        } else {
+            Box::new(NativeBackend)
+        }
+    }
+
+    /// Worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+}
+
+/// Per-shard multiply-add count below which the scoped-thread spawn
+/// (`ThreadPool` creates and joins workers per call — tens of µs) costs
+/// more than it buys.  Falling back to the sequential path is free of
+/// determinism concerns: both paths produce identical bits, so the
+/// switch is invisible in results.  A persistent channel-fed pool would
+/// remove the spawn cost entirely — tracked in ROADMAP.md.
+const MIN_WORK_PER_SHARD: usize = 256 * 1024;
+
+impl ComputeBackend for ShardedBackend {
+    fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
+        let n = cols.n_shards();
+        let work_per_shard = cols.len().max(1) * (cols.rows() / n.max(1));
+        if n == 1 || self.pool.workers() == 1 || work_per_shard < MIN_WORK_PER_SHARD {
+            return gram_stats_seq(cols, b_col);
+        }
+        let ids: Vec<usize> = (0..n).collect();
+        let parts = self.pool.map(&ids, |&s| gram_partial(cols, s, b_col));
+        // deterministic in-order reduction: identical to the sequential
+        // accumulation in gram_stats_seq, bit for bit
+        let mut atb = vec![0.0f64; cols.len()];
+        let mut btb = 0.0f64;
+        for (pa, pb) in &parts {
+            for (a, p) in atb.iter_mut().zip(pa.iter()) {
+                *a += *p;
+            }
+            btb += *pb;
+        }
+        (atb, btb)
+    }
+
+    fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
+        let n = cols.n_shards();
+        let work_per_shard = cols.len().max(1) * u.cols().max(1) * (cols.rows() / n.max(1));
+        if n == 1 || self.pool.workers() == 1 || work_per_shard < MIN_WORK_PER_SHARD {
+            return transform_abs_seq(cols, c, u);
+        }
+        let ids: Vec<usize> = (0..n).collect();
+        let blocks = self.pool.map(&ids, |&s| transform_block(cols, s, c, u));
+        let m = u.rows();
+        let g = u.cols();
+        let mut out = Matrix::zeros(m, g);
+        for (s, block) in blocks.iter().enumerate() {
+            let r = cols.shard_range(s);
+            out.data_mut()[r.start * g..r.end * g].copy_from_slice(block);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn preferred_shards(&self, m: usize) -> usize {
+        // one shard per worker, but never shard below the hand-off floor —
+        // small inputs stay single-shard and bit-identical to NativeBackend
+        let cap = (m / self.min_rows_per_shard).max(1);
+        self.pool.workers().min(cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    fn random_cols(rng: &mut Rng, m: usize, ell: usize) -> Vec<Vec<f64>> {
+        (0..ell).map(|_| (0..m).map(|_| rng.normal()).collect()).collect()
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn gram_stats_bitwise_equals_native_across_shard_counts() {
+        // shard counts from the issue checklist, uneven m including m < shards
+        property(12, |rng| {
+            let ell = 1 + rng.below(6);
+            for &k in &[1usize, 2, 3, 7] {
+                for &m in &[1usize, 3, 5, 7, 8, 41, 137] {
+                    let cols = random_cols(rng, m, ell);
+                    let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+                    let store = ColumnStore::from_cols(&cols, k);
+                    let sharded = ShardedBackend::new(4);
+                    let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
+                    let (atb_s, btb_s) = sharded.gram_stats(&store, &b);
+                    if bits(&atb_n) != bits(&atb_s) || btb_n.to_bits() != btb_s.to_bits() {
+                        return Err(format!("bitwise mismatch at m={m} shards={k}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transform_abs_matches_native_across_shard_counts() {
+        property(12, |rng| {
+            let ell = 1 + rng.below(4);
+            let g = 1 + rng.below(4);
+            for &k in &[1usize, 2, 3, 7] {
+                for &m in &[1usize, 3, 6, 7, 40] {
+                    let cols = random_cols(rng, m, ell);
+                    let store = ColumnStore::from_cols(&cols, k);
+                    let mut c = Matrix::zeros(ell, g);
+                    let mut u = Matrix::zeros(m, g);
+                    for i in 0..ell {
+                        for j in 0..g {
+                            c.set(i, j, rng.normal());
+                        }
+                    }
+                    for i in 0..m {
+                        for j in 0..g {
+                            u.set(i, j, rng.normal());
+                        }
+                    }
+                    let sharded = ShardedBackend::new(3);
+                    let tn = NativeBackend.transform_abs(&store, &c, &u);
+                    let ts = sharded.transform_abs(&store, &c, &u);
+                    for (a, b) in tn.data().iter().zip(ts.data().iter()) {
+                        if (a - b).abs() > 1e-12 {
+                            return Err(format!(
+                                "transform mismatch {a} vs {b} at m={m} shards={k}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn repeated_calls_are_deterministic() {
+        let mut rng = Rng::new(9);
+        let cols = random_cols(&mut rng, 500, 5);
+        let b: Vec<f64> = (0..500).map(|_| rng.normal()).collect();
+        let store = ColumnStore::from_cols(&cols, 7);
+        let sharded = ShardedBackend::new(4);
+        let (atb0, btb0) = sharded.gram_stats(&store, &b);
+        for _ in 0..5 {
+            let (atb, btb) = sharded.gram_stats(&store, &b);
+            assert_eq!(bits(&atb0), bits(&atb));
+            assert_eq!(btb0.to_bits(), btb.to_bits());
+        }
+    }
+
+    #[test]
+    fn preferred_shards_respects_floor_and_workers() {
+        let be = ShardedBackend::new(8);
+        assert_eq!(be.preferred_shards(100), 1); // tiny: never shard
+        assert_eq!(be.preferred_shards(MIN_ROWS_PER_SHARD * 2), 2);
+        assert_eq!(be.preferred_shards(MIN_ROWS_PER_SHARD * 100), 8); // capped by workers
+        assert_eq!(ShardedBackend::new(1).preferred_shards(1_000_000), 1);
+        assert_eq!(be.name(), "sharded");
+        // custom floor: serving-sized batches shard once m clears it
+        let serve = ShardedBackend::with_min_rows(4, 512);
+        assert_eq!(serve.preferred_shards(256), 1);
+        assert_eq!(serve.preferred_shards(1024), 2);
+        assert_eq!(serve.preferred_shards(4096), 4);
+    }
+
+    #[test]
+    fn boxed_policy_selects_backend_by_worker_count() {
+        assert_eq!(ShardedBackend::boxed_for(1).name(), "native");
+        assert_eq!(ShardedBackend::boxed_for(4).name(), "sharded");
+        assert_eq!(ShardedBackend::boxed_with_min_rows(0, 64).name(), "native");
+        assert_eq!(ShardedBackend::boxed_with_min_rows(2, 64).name(), "sharded");
+    }
+}

@@ -1,0 +1,496 @@
+//! Row-sharded column store — the single column currency of the data
+//! plane.
+//!
+//! Every layer that touches evaluation columns (the OAVI driver, the
+//! streaming backends, the (FT) transform, Pearson ordering, ABM/VCA)
+//! goes through [`ColumnStore`].  Rows are partitioned once into
+//! contiguous shards; each shard owns a column-major block
+//! (`rows × ℓ`), so a column append is one `extend_from_slice` per shard
+//! (amortized O(m), no per-column `Vec` allocation) and every kernel can
+//! operate on plain `&[f64]` shard slices.
+//!
+//! The two hot kernels live here as **per-shard free functions**
+//! ([`gram_partial`], [`transform_block`]) shared verbatim by
+//! [`crate::backend::NativeBackend`] (sequential over shards) and
+//! [`crate::backend::ShardedBackend`] (thread-pool map over shards with a
+//! deterministic in-order reduction).  Because both backends run the same
+//! per-shard code and reduce partials in the same shard order, their
+//! results are **bit-for-bit identical** for any fixed shard count — the
+//! reproducibility contract `rust/tests/runtime_parity.rs` pins down.
+
+use std::ops::Range;
+
+use crate::linalg::dense::Matrix;
+use crate::linalg::dot;
+
+/// One contiguous row-range of every column, stored column-major.
+#[derive(Clone, Debug)]
+struct Shard {
+    /// rows owned by this shard (may be 0 when m < shard count).
+    rows: usize,
+    /// column-major block: column j occupies `data[j*rows .. (j+1)*rows]`.
+    data: Vec<f64>,
+}
+
+/// Row-sharded, append-only evaluation-column storage.
+#[derive(Clone, Debug)]
+pub struct ColumnStore {
+    m: usize,
+    n_cols: usize,
+    /// shard row offsets; `offsets[s]..offsets[s+1]` are shard s's rows.
+    offsets: Vec<usize>,
+    shards: Vec<Shard>,
+}
+
+impl ColumnStore {
+    /// Empty store over `m` rows split into `n_shards` balanced contiguous
+    /// shards (clamped to ≥ 1; shards may own 0 rows when `m < n_shards`).
+    pub fn new(m: usize, n_shards: usize) -> Self {
+        let n_shards = n_shards.max(1);
+        let base = m / n_shards;
+        let rem = m % n_shards;
+        let mut offsets = Vec::with_capacity(n_shards + 1);
+        offsets.push(0);
+        let mut shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let rows = base + usize::from(s < rem);
+            offsets.push(offsets[s] + rows);
+            shards.push(Shard { rows, data: Vec::new() });
+        }
+        ColumnStore { m, n_cols: 0, offsets, shards }
+    }
+
+    /// Store holding the single constant-1 column (OAVI Line 2: O = {𝟙}).
+    pub fn with_ones(m: usize, n_shards: usize) -> Self {
+        let mut store = ColumnStore::new(m, n_shards);
+        for shard in &mut store.shards {
+            shard.data.resize(shard.rows, 1.0);
+        }
+        store.n_cols = 1;
+        store
+    }
+
+    /// Build from explicit full-length columns (tests, benches, rebuilds).
+    pub fn from_cols(cols: &[Vec<f64>], n_shards: usize) -> Self {
+        let m = cols.first().map(|c| c.len()).unwrap_or(0);
+        let mut store = ColumnStore::new(m, n_shards);
+        for col in cols {
+            store.push_col(col);
+        }
+        store
+    }
+
+    /// Build from the columns of a row-major matrix (feature columns for
+    /// the Pearson ordering, evaluation columns in tests).
+    pub fn from_matrix(x: &Matrix, n_shards: usize) -> Self {
+        let m = x.rows();
+        let mut store = ColumnStore::new(m, n_shards);
+        let mut buf = vec![0.0f64; m];
+        for j in 0..x.cols() {
+            for (i, v) in buf.iter_mut().enumerate() {
+                *v = x.get(i, j);
+            }
+            store.push_col(&buf);
+        }
+        store
+    }
+
+    /// Number of rows m.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    /// Number of columns ℓ.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n_cols
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n_cols == 0
+    }
+
+    /// Number of row shards (fixed at construction).
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Global row range owned by shard `s`.
+    #[inline]
+    pub fn shard_range(&self, s: usize) -> Range<usize> {
+        self.offsets[s]..self.offsets[s + 1]
+    }
+
+    /// Column `j`'s contiguous slice within shard `s`.
+    #[inline]
+    pub fn col_shard(&self, j: usize, s: usize) -> &[f64] {
+        let shard = &self.shards[s];
+        &shard.data[j * shard.rows..(j + 1) * shard.rows]
+    }
+
+    /// Append a full-length column by copying its row-ranges into the
+    /// shard blocks.  The caller's buffer is untouched and reusable — this
+    /// is the amortized-append contract the OAVI driver relies on (no
+    /// per-accepted-term `Vec` allocation).
+    pub fn push_col(&mut self, col: &[f64]) {
+        debug_assert_eq!(col.len(), self.m, "push_col: length mismatch");
+        for (s, shard) in self.shards.iter_mut().enumerate() {
+            let range = self.offsets[s]..self.offsets[s + 1];
+            shard.data.extend_from_slice(&col[range]);
+        }
+        self.n_cols += 1;
+    }
+
+    /// Materialize column `j` as one contiguous vector.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.m);
+        for s in 0..self.n_shards() {
+            out.extend_from_slice(self.col_shard(j, s));
+        }
+        out
+    }
+
+    /// `out[i] = col_parent[i] * x[i, var]` — the border-term candidate
+    /// evaluation (one multiply per sample, Theorem 4.2), written into a
+    /// caller-owned reusable buffer.
+    pub fn fill_product(&self, parent: usize, x: &Matrix, var: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.m, "fill_product: length mismatch");
+        for s in 0..self.n_shards() {
+            let p = self.col_shard(parent, s);
+            for (k, i) in self.shard_range(s).enumerate() {
+                out[i] = p[k] * x.get(i, var);
+            }
+        }
+    }
+
+    /// ⟨col_i, col_j⟩ accumulated shard-by-shard (deterministic order).
+    pub fn dot_cols(&self, i: usize, j: usize) -> f64 {
+        let mut acc = 0.0;
+        for s in 0..self.n_shards() {
+            acc += dot(self.col_shard(i, s), self.col_shard(j, s));
+        }
+        acc
+    }
+
+    /// ⟨col_j, v⟩ for a full-length vector `v`, shard-by-shard.
+    pub fn dot_col_slice(&self, j: usize, v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), self.m);
+        let mut acc = 0.0;
+        for s in 0..self.n_shards() {
+            acc += dot(self.col_shard(j, s), &v[self.shard_range(s)]);
+        }
+        acc
+    }
+
+    /// Mean of column `j` (Pearson ordering helper).
+    pub fn col_mean(&self, j: usize) -> f64 {
+        if self.m == 0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for s in 0..self.n_shards() {
+            acc += self.col_shard(j, s).iter().sum::<f64>();
+        }
+        acc / self.m as f64
+    }
+}
+
+/// Per-shard `(Aᵀb, bᵀb)` partial — the map side of gram_stats.
+///
+/// Perf pass #2 (EXPERIMENTS.md §Perf) preserved per shard: past the
+/// last-level-cache scale, four columns share each pass over the
+/// (cache-missing) b slice so b traffic drops 4×; for cache-resident
+/// shards the simple vectorized dot is faster.  Sharding itself pushes
+/// most shards under the threshold — exactly the cache win row-sharding
+/// is after.
+pub fn gram_partial(store: &ColumnStore, s: usize, b_full: &[f64]) -> (Vec<f64>, f64) {
+    let bs = &b_full[store.shard_range(s)];
+    let ell = store.len();
+    let rows = bs.len();
+    let mut atb = vec![0.0f64; ell];
+    const BLOCK_THRESHOLD_BYTES: usize = 4 << 20; // ~LLC slice
+    if rows * std::mem::size_of::<f64>() < BLOCK_THRESHOLD_BYTES {
+        for (j, a) in atb.iter_mut().enumerate() {
+            *a = dot(store.col_shard(j, s), bs);
+        }
+        return (atb, dot(bs, bs));
+    }
+    let mut j = 0;
+    while j + 4 <= ell {
+        let (c0, c1, c2, c3) = (
+            store.col_shard(j, s),
+            store.col_shard(j + 1, s),
+            store.col_shard(j + 2, s),
+            store.col_shard(j + 3, s),
+        );
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        for (i, &bi) in bs.iter().enumerate() {
+            s0 += c0[i] * bi;
+            s1 += c1[i] * bi;
+            s2 += c2[i] * bi;
+            s3 += c3[i] * bi;
+        }
+        atb[j] = s0;
+        atb[j + 1] = s1;
+        atb[j + 2] = s2;
+        atb[j + 3] = s3;
+        j += 4;
+    }
+    while j < ell {
+        atb[j] = dot(store.col_shard(j, s), bs);
+        j += 1;
+    }
+    (atb, dot(bs, bs))
+}
+
+/// Per-shard `|A_s·C + U_s|` written into a caller-owned row-major
+/// `shard_rows × g` slice — the map side of transform_abs.  Writing
+/// in place lets the sequential reduction accumulate directly into the
+/// output matrix (no per-shard block allocation + stitch copy on the
+/// test-time hot path).
+///
+/// Bench-gated branchless inner loop: the historical
+/// `if a_ij == 0.0 { continue; }` skip was removed — see the verdict
+/// comment in `backend/mod.rs` and the `transform_branch_gate` section of
+/// `rust/benches/micro_runtime.rs` that measures it.
+pub fn transform_block_into(
+    store: &ColumnStore,
+    s: usize,
+    c: &Matrix,
+    u: &Matrix,
+    out: &mut [f64],
+) {
+    let range = store.shard_range(s);
+    let g = u.cols();
+    debug_assert_eq!(out.len(), range.len() * g);
+    debug_assert_eq!(c.rows(), store.len());
+    debug_assert_eq!(c.cols(), g);
+    if g == 0 {
+        return;
+    }
+    for (k, i) in range.enumerate() {
+        out[k * g..(k + 1) * g].copy_from_slice(u.row(i));
+    }
+    for j in 0..store.len() {
+        let crow = c.row(j);
+        // WIHB/BPCG deliberately produce sparse coefficient vectors (the
+        // SPAR payoff): a C row that is zero across every generator
+        // contributes nothing — skip the whole O column.  This is the
+        // column-granular form of the old per-generator `c == 0.0` skip;
+        // the per-element a_ij branch stays removed (bench verdict in
+        // backend/mod.rs).
+        if crow.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let col = store.col_shard(j, s);
+        for (k, &a_ij) in col.iter().enumerate() {
+            let orow = &mut out[k * g..(k + 1) * g];
+            for (o, ck) in orow.iter_mut().zip(crow.iter()) {
+                *o += a_ij * ck;
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        *v = v.abs();
+    }
+}
+
+/// Allocating wrapper over [`transform_block_into`] for the parallel
+/// map path, where workers can't share `&mut` access to the output.
+pub fn transform_block(store: &ColumnStore, s: usize, c: &Matrix, u: &Matrix) -> Vec<f64> {
+    let rows = store.shard_range(s).len();
+    let mut out = vec![0.0f64; rows * u.cols()];
+    transform_block_into(store, s, c, u, &mut out);
+    out
+}
+
+/// Sequential in-shard-order reduction of [`gram_partial`] — the exact
+/// reduction both backends share (bit-reproducibility anchor).
+pub fn gram_stats_seq(store: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
+    let mut atb = vec![0.0f64; store.len()];
+    let mut btb = 0.0f64;
+    for s in 0..store.n_shards() {
+        let (pa, pb) = gram_partial(store, s, b_col);
+        for (a, p) in atb.iter_mut().zip(pa.iter()) {
+            *a += *p;
+        }
+        btb += pb;
+    }
+    (atb, btb)
+}
+
+/// Sequential shard-order application of [`transform_block_into`],
+/// writing each shard's rows directly into the m×g result.
+pub fn transform_abs_seq(store: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
+    let m = u.rows();
+    let g = u.cols();
+    let mut out = Matrix::zeros(m, g);
+    for s in 0..store.n_shards() {
+        let r = store.shard_range(s);
+        transform_block_into(store, s, c, u, &mut out.data_mut()[r.start * g..r.end * g]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{all_close, property};
+    use crate::util::rng::Rng;
+
+    fn random_cols(rng: &mut Rng, m: usize, ell: usize) -> Vec<Vec<f64>> {
+        (0..ell).map(|_| (0..m).map(|_| rng.normal()).collect()).collect()
+    }
+
+    #[test]
+    fn balanced_partition_covers_all_rows() {
+        for (m, k) in [(10usize, 3usize), (7, 7), (3, 7), (0, 4), (1, 1), (100, 8)] {
+            let store = ColumnStore::new(m, k);
+            assert_eq!(store.n_shards(), k.max(1));
+            let mut total = 0;
+            let mut prev_end = 0;
+            for s in 0..store.n_shards() {
+                let r = store.shard_range(s);
+                assert_eq!(r.start, prev_end, "shards must be contiguous");
+                prev_end = r.end;
+                total += r.len();
+            }
+            assert_eq!(total, m);
+            // balanced: sizes differ by at most 1
+            let sizes: Vec<usize> =
+                (0..store.n_shards()).map(|s| store.shard_range(s).len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn push_col_and_materialize_roundtrip() {
+        property(16, |rng| {
+            let m = rng.below(40);
+            let k = 1 + rng.below(6);
+            let ell = 1 + rng.below(5);
+            let cols = random_cols(rng, m, ell);
+            let store = ColumnStore::from_cols(&cols, k);
+            if store.len() != ell || store.rows() != m {
+                return Err("shape mismatch".into());
+            }
+            for (j, col) in cols.iter().enumerate() {
+                if &store.col(j) != col {
+                    return Err(format!("column {j} does not roundtrip"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn with_ones_is_the_constant_column() {
+        let store = ColumnStore::with_ones(13, 4);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.col(0), vec![1.0; 13]);
+    }
+
+    #[test]
+    fn fill_product_matches_direct() {
+        property(16, |rng| {
+            let m = 1 + rng.below(50);
+            let k = 1 + rng.below(5);
+            let n = 1 + rng.below(3);
+            let mut x = Matrix::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    x.set(i, j, rng.uniform());
+                }
+            }
+            let parent: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let store = ColumnStore::from_cols(std::slice::from_ref(&parent), k);
+            let var = rng.below(n);
+            let mut out = vec![0.0; m];
+            store.fill_product(0, &x, var, &mut out);
+            let expect: Vec<f64> = (0..m).map(|i| parent[i] * x.get(i, var)).collect();
+            all_close(&out, &expect, 0.0, "fill_product")
+        });
+    }
+
+    #[test]
+    fn dots_and_means_match_dense() {
+        property(16, |rng| {
+            let m = 1 + rng.below(60);
+            let k = 1 + rng.below(7);
+            let cols = random_cols(rng, m, 3);
+            let store = ColumnStore::from_cols(&cols, k);
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            crate::util::proptest::close(
+                store.dot_cols(0, 1),
+                dot(&cols[0], &cols[1]),
+                1e-10,
+                "dot_cols",
+            )?;
+            crate::util::proptest::close(
+                store.dot_col_slice(2, &v),
+                dot(&cols[2], &v),
+                1e-10,
+                "dot_col_slice",
+            )?;
+            let mean = cols[0].iter().sum::<f64>() / m as f64;
+            crate::util::proptest::close(store.col_mean(0), mean, 1e-10, "col_mean")
+        });
+    }
+
+    #[test]
+    fn gram_stats_seq_matches_definition_for_any_shard_count() {
+        property(24, |rng| {
+            let m = rng.below(80);
+            let k = 1 + rng.below(9); // includes m < k
+            let ell = 1 + rng.below(6);
+            let cols = random_cols(rng, m, ell);
+            let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let store = ColumnStore::from_cols(&cols, k);
+            let (atb, btb) = gram_stats_seq(&store, &b);
+            let expect: Vec<f64> = cols.iter().map(|c| dot(c, &b)).collect();
+            all_close(&atb, &expect, 1e-10, "atb")?;
+            crate::util::proptest::close(btb, dot(&b, &b), 1e-10, "btb")
+        });
+    }
+
+    #[test]
+    fn transform_abs_seq_matches_manual_for_any_shard_count() {
+        property(24, |rng| {
+            let m = rng.below(40);
+            let k = 1 + rng.below(9);
+            let ell = 1 + rng.below(4);
+            let g = rng.below(4); // includes g = 0
+            let cols = random_cols(rng, m, ell);
+            let store = ColumnStore::from_cols(&cols, k);
+            let mut c = Matrix::zeros(ell, g);
+            let mut u = Matrix::zeros(m, g);
+            for i in 0..ell {
+                for j in 0..g {
+                    c.set(i, j, rng.normal());
+                }
+            }
+            for i in 0..m {
+                for j in 0..g {
+                    u.set(i, j, rng.normal());
+                }
+            }
+            let out = transform_abs_seq(&store, &c, &u);
+            for i in 0..m {
+                for j in 0..g {
+                    let mut v = u.get(i, j);
+                    for (kk, col) in cols.iter().enumerate() {
+                        v += col[i] * c.get(kk, j);
+                    }
+                    if (out.get(i, j) - v.abs()).abs() > 1e-10 {
+                        return Err(format!("({i},{j}): {} vs {}", out.get(i, j), v.abs()));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

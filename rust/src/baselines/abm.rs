@@ -11,6 +11,7 @@
 //! LTC = 1 — the paper's Remark 4.4 uses exactly this to transfer the
 //! Theorem 4.3 bound to ABM.
 
+use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::linalg::eigen::smallest_eigenpair;
@@ -67,7 +68,19 @@ impl Abm {
         Abm { config }
     }
 
+    /// Fit with the native streaming backend.
     pub fn fit(&self, x: &Matrix) -> Result<AbmModel> {
+        self.fit_with_backend(x, &NativeBackend)
+    }
+
+    /// Fit with an explicit streaming backend — ABM shares OAVI's
+    /// gram_stats kernel (the O(mℓ) bordered-Gram column), so it shards
+    /// and accelerates the same way.
+    pub fn fit_with_backend(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+    ) -> Result<AbmModel> {
         let cfg = self.config;
         let timer = Timer::start();
         let m = x.rows();
@@ -76,10 +89,11 @@ impl Abm {
             return Err(AviError::Data("ABM fit: empty data".into()));
         }
         let mut o = TermSet::with_one(n);
-        let mut cols: Vec<Vec<f64>> = vec![vec![1.0; m]];
+        let mut cols = ColumnStore::with_ones(m, backend.preferred_shards(m));
         let mut gram = GramState::new_ones_b_only(m);
         let mut generators = Vec::new();
         let mut stats = FitStats::default();
+        let mut b_col = vec![0.0f64; m];
 
         'degrees: for d in 1..=cfg.max_degree {
             let border = compute_border(&o, d);
@@ -88,14 +102,8 @@ impl Abm {
             }
             stats.degree_reached = d;
             for bt in border {
-                let parent_col = &cols[bt.parent];
-                let b_col: Vec<f64> =
-                    (0..m).map(|i| parent_col[i] * x.get(i, bt.var)).collect();
-                let (atb, btb) = {
-                    let atb: Vec<f64> =
-                        cols.iter().map(|c| crate::linalg::dot(c, &b_col)).collect();
-                    (atb, crate::linalg::dot(&b_col, &b_col))
-                };
+                cols.fill_product(bt.parent, x, bt.var, &mut b_col);
+                let (atb, btb) = backend.gram_stats(&cols, &b_col);
                 stats.oracle_calls += 1;
                 let ell = gram.len();
 
@@ -126,7 +134,7 @@ impl Abm {
                     });
                 } else {
                     gram.append(&atb, btb)?;
-                    cols.push(b_col);
+                    cols.push_col(&b_col); // copy into shard blocks; buffer reused
                     o.push_product(bt.parent, bt.var)?;
                     if o.len() >= cfg.max_o_terms {
                         break 'degrees;

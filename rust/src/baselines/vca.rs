@@ -12,6 +12,7 @@
 //! The spurious-vanishing problem the paper discusses (§1.2, Table 3's
 //! spam row) is inherent to this normalization and intentionally left in.
 
+use crate::backend::ColumnStore;
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::linalg::dot;
@@ -97,45 +98,60 @@ impl VcaModel {
         }
     }
 
-    /// Evaluate every node over `x` (memoized DAG walk).
-    fn eval_nodes(&self, x: &Matrix) -> Vec<Vec<f64>> {
+    /// Evaluate every node over `x` (memoized DAG walk) into the shared
+    /// column currency — one [`ColumnStore`] column per node, built
+    /// through a single reused scratch buffer.
+    fn eval_store(&self, x: &Matrix) -> ColumnStore {
         let m = x.rows();
-        let mut vals: Vec<Vec<f64>> = Vec::with_capacity(self.nodes.len());
+        let mut store = ColumnStore::new(m, 1);
+        let mut buf = vec![0.0f64; m];
         for node in &self.nodes {
-            let v = match node {
-                VcaNode::One => vec![1.0; m],
-                VcaNode::Feature(j) => x.col(*j),
+            match node {
+                VcaNode::One => buf.fill(1.0),
+                VcaNode::Feature(j) => {
+                    for (i, v) in buf.iter_mut().enumerate() {
+                        *v = x.get(i, *j);
+                    }
+                }
                 VcaNode::Product(a, b) => {
-                    let (va, vb) = (&vals[*a], &vals[*b]);
-                    (0..m).map(|i| va[i] * vb[i]).collect()
+                    for s in 0..store.n_shards() {
+                        let (va, vb) = (store.col_shard(*a, s), store.col_shard(*b, s));
+                        for (k, i) in store.shard_range(s).enumerate() {
+                            buf[i] = va[k] * vb[k];
+                        }
+                    }
                 }
                 VcaNode::LinComb(terms) => {
-                    let mut out = vec![0.0; m];
+                    buf.fill(0.0);
                     for (w, idx) in terms {
                         if *w == 0.0 {
                             continue;
                         }
-                        let src = &vals[*idx];
-                        for (o, s) in out.iter_mut().zip(src.iter()) {
-                            *o += w * s;
+                        for s in 0..store.n_shards() {
+                            let src = store.col_shard(*idx, s);
+                            for (k, i) in store.shard_range(s).enumerate() {
+                                buf[i] += w * src[k];
+                            }
                         }
                     }
-                    out
                 }
-            };
-            vals.push(v);
+            }
+            store.push_col(&buf);
         }
-        vals
+        store
     }
 
     /// |g(x)| for every vanishing component — the (FT) feature block.
     pub fn transform(&self, x: &Matrix) -> Matrix {
-        let vals = self.eval_nodes(x);
+        let store = self.eval_store(x);
         let m = x.rows();
         let mut out = Matrix::zeros(m, self.vanishing.len());
         for (gi, &nid) in self.vanishing.iter().enumerate() {
-            for i in 0..m {
-                out.set(i, gi, vals[nid][i].abs());
+            for s in 0..store.n_shards() {
+                let col = store.col_shard(nid, s);
+                for (k, i) in store.shard_range(s).enumerate() {
+                    out.set(i, gi, col[k].abs());
+                }
             }
         }
         out
@@ -143,11 +159,11 @@ impl VcaModel {
 
     /// MSE of every vanishing component on `x`.
     pub fn mse_on(&self, x: &Matrix) -> Vec<f64> {
-        let vals = self.eval_nodes(x);
+        let store = self.eval_store(x);
         let m = x.rows() as f64;
         self.vanishing
             .iter()
-            .map(|&nid| vals[nid].iter().map(|v| v * v).sum::<f64>() / m)
+            .map(|&nid| store.dot_cols(nid, nid) / m)
             .collect()
     }
 }
@@ -413,11 +429,11 @@ mod tests {
     fn f_vectors_are_orthonormal_on_train() {
         let x = circle(150, 5);
         let model = Vca::new(VcaConfig::new(1e-5)).fit(&x).unwrap();
-        let vals = model.eval_nodes(&x);
+        let store = model.eval_store(&x);
         let basis: Vec<usize> = model.f_sets.iter().flatten().copied().collect();
         for (ai, &a) in basis.iter().enumerate() {
             for &b in basis.iter().skip(ai) {
-                let d = dot(&vals[a], &vals[b]);
+                let d = store.dot_cols(a, b);
                 let expect = if a == b { 1.0 } else { 0.0 };
                 assert!(
                     (d - expect).abs() < 1e-6,

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::backend::{ComputeBackend, ShardedBackend};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::pipeline::PipelineModel;
@@ -51,6 +52,12 @@ pub struct TransformService {
     n_features: usize,
 }
 
+/// Shard floor for serving batches: per-row transform work (ℓ·g fused
+/// multiply-adds across every class block) is much heavier than the
+/// training dot products, so sharding pays off at smaller row counts
+/// than training's `MIN_ROWS_PER_SHARD`.
+pub const SERVE_MIN_ROWS_PER_SHARD: usize = 1024;
+
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -67,15 +74,37 @@ impl Default for BatchPolicy {
 }
 
 impl TransformService {
-    /// Spawn the batcher thread over a trained pipeline.
+    /// Spawn the batcher thread over a trained pipeline (single-threaded
+    /// transform — the seed behavior).
     pub fn start(model: Arc<PipelineModel>, policy: BatchPolicy) -> Self {
+        Self::start_sharded(model, policy, 1)
+    }
+
+    /// [`TransformService::start`] with an intra-batch parallelism knob:
+    /// the batcher runs the (FT) transform through a [`ShardedBackend`]
+    /// with `intra_workers` shard workers, on top of the request-level
+    /// batching.  Sharding engages for batches of at least
+    /// 2 × [`SERVE_MIN_ROWS_PER_SHARD`] rows — size
+    /// [`BatchPolicy::max_batch`] at least that large (the default 256
+    /// cap keeps every batch sequential) for the knob to matter.  The
+    /// backend is constructed inside the batcher thread — the
+    /// `ComputeBackend` trait is `!Send` by design.
+    pub fn start_sharded(
+        model: Arc<PipelineModel>,
+        policy: BatchPolicy,
+        intra_workers: usize,
+    ) -> Self {
         let (tx, rx) = channel::<Request>();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(ServeMetrics::default());
         let n_features = model.perm.len();
         let stop_c = stop.clone();
         let metrics_c = metrics.clone();
-        let handle = std::thread::spawn(move || batcher_loop(model, rx, policy, stop_c, metrics_c));
+        let handle = std::thread::spawn(move || {
+            let backend =
+                ShardedBackend::boxed_with_min_rows(intra_workers, SERVE_MIN_ROWS_PER_SHARD);
+            batcher_loop(model, rx, policy, stop_c, metrics_c, backend.as_ref())
+        });
         TransformService { tx, handle: Some(handle), stop, metrics, n_features }
     }
 
@@ -138,6 +167,7 @@ fn batcher_loop(
     policy: BatchPolicy,
     stop: Arc<AtomicBool>,
     metrics: Arc<ServeMetrics>,
+    backend: &dyn ComputeBackend,
 ) {
     let mut pending: Vec<Request> = Vec::new();
     loop {
@@ -152,7 +182,7 @@ fn batcher_loop(
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
-                    flush(&model, &mut pending, &metrics);
+                    flush(&model, &mut pending, &metrics, backend);
                     return;
                 }
             }
@@ -164,11 +194,11 @@ fn batcher_loop(
         // added latency (p50 was pinned at the deadline).  `max_wait`
         // remains as the recv_timeout pacing below.
         if !pending.is_empty() {
-            flush(&model, &mut pending, &metrics);
+            flush(&model, &mut pending, &metrics, backend);
             continue;
         }
         if stop.load(Ordering::SeqCst) {
-            flush(&model, &mut pending, &metrics);
+            flush(&model, &mut pending, &metrics, backend);
             return;
         }
         if pending.is_empty() {
@@ -184,14 +214,19 @@ fn batcher_loop(
     }
 }
 
-fn flush(model: &PipelineModel, pending: &mut Vec<Request>, metrics: &ServeMetrics) {
+fn flush(
+    model: &PipelineModel,
+    pending: &mut Vec<Request>,
+    metrics: &ServeMetrics,
+    backend: &dyn ComputeBackend,
+) {
     if pending.is_empty() {
         return;
     }
     let batch: Vec<Request> = std::mem::take(pending);
     let rows: Vec<Vec<f64>> = batch.iter().map(|r| r.row.clone()).collect();
     let x = Matrix::from_rows(&rows).expect("uniform rows");
-    let labels = model.predict(&x);
+    let labels = model.predict_with_backend(&x, backend);
     let bsz = batch.len();
     metrics.requests.fetch_add(bsz as u64, Ordering::Relaxed);
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -270,6 +305,19 @@ mod tests {
         assert_eq!(online, offline);
         assert!(svc.metrics.requests.load(Ordering::Relaxed) == 64);
         assert!(svc.metrics.batches.load(Ordering::Relaxed) >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_service_matches_offline_path() {
+        let model = trained_model();
+        let ds = synthetic_dataset(48, 25);
+        let offline = model.predict(&ds.x);
+        let svc = TransformService::start_sharded(model.clone(), BatchPolicy::default(), 3);
+        let rows: Vec<Vec<f64>> = (0..48).map(|i| ds.x.row(i).to_vec()).collect();
+        let responses = svc.predict_many(rows).unwrap();
+        let online: Vec<usize> = responses.iter().map(|r| r.label).collect();
+        assert_eq!(online, offline);
         svc.shutdown();
     }
 

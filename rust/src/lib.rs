@@ -13,7 +13,12 @@
 //!
 //! * **L3 (this crate)** — the framework: algorithm drivers, scheduling,
 //!   CLI, metrics.  Owns the event loop; Python never runs at request
-//!   time.
+//!   time.  The data plane is the row-sharded
+//!   [`backend::ColumnStore`] (the only evaluation-column currency)
+//!   executed by a [`backend::ComputeBackend`]:
+//!   [`backend::NativeBackend`] (sequential reference),
+//!   [`backend::ShardedBackend`] (map-reduce over shards, bit-identical
+//!   to native per shard count), or the PJRT path below.
 //! * **L2/L1 (python/compile)** — the numeric hot spots (Gram updates,
 //!   IHB solve/append, the (FT) feature transform) authored in JAX +
 //!   Pallas and AOT-lowered to `artifacts/*.hlo.txt`, which

@@ -9,6 +9,7 @@
 //! Schur guard signals numerical rank deficiency; callers recover with
 //! [`GramState::rebuild`] (Cholesky + jitter).
 
+use crate::backend::store::ColumnStore;
 use crate::error::{AviError, Result};
 use crate::linalg::chol::Cholesky;
 use crate::linalg::dense::Matrix;
@@ -49,20 +50,52 @@ impl GramState {
         g
     }
 
-    /// Build from explicit evaluation columns (used by rebuilds and tests).
+    /// Build from explicit evaluation columns (used by rebuilds and
+    /// tests).  Delegates to the store path with one shard — identical
+    /// arithmetic to a direct dense build.
     pub fn from_columns(cols: &[Vec<f64>]) -> Result<Self> {
         if cols.is_empty() {
             return Err(AviError::Linalg("from_columns: empty".into()));
         }
-        let m = cols[0].len();
-        let ell = cols.len();
+        Self::build_from_store(&ColumnStore::from_cols(cols, 1), None)
+    }
+
+    /// Build from a sharded column store (shard-order dot accumulation —
+    /// deterministic per shard count, like the streaming backends).
+    pub fn from_store(store: &ColumnStore) -> Result<Self> {
+        Self::build_from_store(store, None)
+    }
+
+    /// Build from a store **plus** one trailing candidate column that has
+    /// not been appended yet — the Schur-guard recovery path of the OAVI
+    /// driver (rebuild with the rejected-as-dependent column included).
+    pub fn from_store_with_candidate(store: &ColumnStore, cand: &[f64]) -> Result<Self> {
+        Self::build_from_store(store, Some(cand))
+    }
+
+    fn build_from_store(store: &ColumnStore, cand: Option<&[f64]>) -> Result<Self> {
+        let base = store.len();
+        let ell = base + usize::from(cand.is_some());
+        if ell == 0 {
+            return Err(AviError::Linalg("from_store: empty".into()));
+        }
+        let m = store.rows();
         let mut b = Matrix::zeros(ell, ell);
-        for i in 0..ell {
-            for j in i..ell {
-                let v = dot(&cols[i], &cols[j]);
+        for i in 0..base {
+            for j in i..base {
+                let v = store.dot_cols(i, j);
                 b.set(i, j, v);
                 b.set(j, i, v);
             }
+        }
+        if let Some(c) = cand {
+            debug_assert_eq!(c.len(), m);
+            for i in 0..base {
+                let v = store.dot_col_slice(i, c);
+                b.set(i, base, v);
+                b.set(base, i, v);
+            }
+            b.set(base, base, dot(c, c));
         }
         let (chol, _jitter) = Cholesky::new_with_jitter(&b, 1e-10 * b.max_abs().max(1.0))?;
         let n_inv = chol.inverse();
@@ -291,6 +324,26 @@ mod tests {
     #[test]
     fn samples_reported() {
         assert_eq!(GramState::new_ones(123).samples(), 123);
+    }
+
+    #[test]
+    fn from_store_matches_from_columns() {
+        let mut rng = Rng::new(17);
+        let cols = random_cols(&mut rng, 50, 4);
+        let dense = GramState::from_columns(&cols).unwrap();
+        for k in [1usize, 3, 7] {
+            let store = crate::backend::store::ColumnStore::from_cols(&cols, k);
+            let g = GramState::from_store(&store).unwrap();
+            // same Gram up to shard-order summation
+            for (a, b) in g.b().data().iter().zip(dense.b().data().iter()) {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b} (shards {k})");
+            }
+            assert_eq!(g.samples(), 50);
+            let cand: Vec<f64> = (0..50).map(|_| rng.uniform()).collect();
+            let gc = GramState::from_store_with_candidate(&store, &cand).unwrap();
+            assert_eq!(gc.len(), 5);
+            assert!(gc.inverse_drift() < 1e-6);
+        }
     }
 }
 

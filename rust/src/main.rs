@@ -18,7 +18,7 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::backend::{ComputeBackend, NativeBackend, ShardedBackend};
 use avi_scale::baselines::abm::AbmConfig;
 use avi_scale::baselines::vca::VcaConfig;
 use avi_scale::coordinator::pool::ThreadPool;
@@ -86,7 +86,9 @@ OPTIONS:
   --psi <f64>            vanishing parameter        (default 0.005)
   --scale <f64>          dataset size multiplier    (default 0.05)
   --seed <u64>           RNG seed                   (default 42)
-  --backend <native|xla> compute backend            (default native)
+  --backend <native|xla|sharded>  compute backend   (default native)
+  --shards <n>           intra-fit shard workers (sharded backend; n>1
+                         with --backend native also selects sharded)
   --ordering <pearson|reverse|native>               (default pearson)
   --workers <n>          thread-pool size           (default auto)
   --requests <n>         serve demo request count   (default 2000)
@@ -142,11 +144,18 @@ fn ordering_for(name: &str) -> FeatureOrdering {
 }
 
 fn backend_for(opts: &HashMap<String, String>) -> Result<Box<dyn ComputeBackend>> {
+    let shards = opt_usize(opts, "shards", 0);
     match opts.get("backend").map(|s| s.as_str()).unwrap_or("native") {
         "xla" => {
             let rt = Arc::new(PjrtRuntime::load_default()?);
             Ok(Box::new(XlaBackend::new(rt)))
         }
+        "sharded" => Ok(Box::new(if shards > 0 {
+            ShardedBackend::new(shards)
+        } else {
+            ShardedBackend::default_parallel()
+        })),
+        _ if shards > 1 => Ok(ShardedBackend::boxed_for(shards)),
         _ => Ok(Box::new(NativeBackend)),
     }
 }
@@ -267,7 +276,11 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         ordering: FeatureOrdering::Pearson,
     };
     let model = Arc::new(train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?);
-    let svc = TransformService::start(model, BatchPolicy::default());
+    let svc = TransformService::start_sharded(
+        model,
+        BatchPolicy::default(),
+        opt_usize(opts, "shards", 1),
+    );
     let n_req = opt_usize(opts, "requests", 2000).min(split.test.len().max(1) * 50);
     let rows: Vec<Vec<f64>> = (0..n_req)
         .map(|i| split.test.x.row(i % split.test.len()).to_vec())

@@ -15,7 +15,7 @@
 //! ℓ1-ball, IHB is disabled for the remainder of the fit (the paper's
 //! "approach 2", which preserves the generalization bounds).
 
-use crate::backend::{ComputeBackend, NativeBackend};
+use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::linalg::gram::GramState;
@@ -107,7 +107,9 @@ impl Oavi {
         }
 
         let mut o = TermSet::with_one(n);
-        let mut cols: Vec<Vec<f64>> = vec![vec![1.0; m]];
+        // the store's shard count is the backend's intra-fit parallelism
+        // knob; results are deterministic for a fixed shard count
+        let mut cols = ColumnStore::with_ones(m, backend.preferred_shards(m));
         let mut gram = if cfg.ihb == IhbMode::None {
             GramState::new_ones_b_only(m)
         } else {
@@ -124,9 +126,10 @@ impl Oavi {
             psi: Some(cfg.psi),
         };
 
-        // Perf pass #4 (EXPERIMENTS.md §Perf): one reusable candidate
-        // buffer — a fresh allocation only happens when a term joins O
-        // (|O| times), not per oracle call (|G|+|O| times).
+        // Perf pass #4, tightened by the ColumnStore refactor: ONE
+        // candidate buffer for the whole fit.  Accepting a term into O
+        // copies the buffer into the store's shard blocks (amortized
+        // append) and reuses it — no allocation on either oracle outcome.
         let mut cand_buf = vec![0.0f64; m];
         'degrees: for d in 1..=cfg.max_degree {
             let border = compute_border(&o, d);
@@ -136,10 +139,7 @@ impl Oavi {
             stats.degree_reached = d;
             for bt in border {
                 // candidate column b = parent(X) ⊙ x_var  — O(m)
-                let parent_col = &cols[bt.parent];
-                for i in 0..m {
-                    cand_buf[i] = parent_col[i] * x.get(i, bt.var);
-                }
+                cols.fill_product(bt.parent, x, bt.var, &mut cand_buf);
                 // streaming stats — O(mℓ), the training hot spot
                 let (atb, btb) = backend.gram_stats(&cols, &cand_buf);
                 stats.oracle_calls += 1;
@@ -177,13 +177,11 @@ impl Oavi {
                             // scratch with jitter (keeps OAVI running on
                             // adversarial/duplicated data)
                             stats.gram_rebuilds += 1;
-                            let mut all = cols.clone();
-                            all.push(cand_buf.clone());
-                            gram = GramState::from_columns(&all)?;
+                            gram = GramState::from_store_with_candidate(&cols, &cand_buf)?;
                         }
                         Err(e) => return Err(e),
                     }
-                    cols.push(std::mem::replace(&mut cand_buf, vec![0.0; m]));
+                    cols.push_col(&cand_buf);
                     o.push_product(bt.parent, bt.var)?;
                     if o.len() >= cfg.max_o_terms {
                         break 'degrees;

@@ -6,6 +6,7 @@
 //! output invariant to the input feature permutation; reverse-Pearson is
 //! the Table-1 ablation.
 
+use crate::backend::ColumnStore;
 use crate::linalg::dense::Matrix;
 
 /// The orderings studied in the paper.
@@ -40,16 +41,39 @@ pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
     cov / (va.sqrt() * vb.sqrt())
 }
 
+/// Pearson correlation between two columns of a [`ColumnStore`]
+/// (two centered passes over the shard slices — same arithmetic as
+/// [`pearson`], accumulated in shard order).
+pub fn pearson_cols(store: &ColumnStore, i: usize, j: usize) -> f64 {
+    let ma = store.col_mean(i);
+    let mb = store.col_mean(j);
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for s in 0..store.n_shards() {
+        let (ci, cj) = (store.col_shard(i, s), store.col_shard(j, s));
+        for (x, y) in ci.iter().zip(cj.iter()) {
+            let dx = x - ma;
+            let dy = y - mb;
+            cov += dx * dy;
+            va += dx * dx;
+            vb += dy * dy;
+        }
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
 /// Algorithm 5: the permutation that sorts features by ascending
 /// `p_i = Σ_j |r_{c_i c_j}|` (ties broken by original index → the output
 /// is a well-defined function of the data).
 pub fn pearson_permutation(x: &Matrix, reverse: bool) -> Vec<usize> {
     let n = x.cols();
-    let cols: Vec<Vec<f64>> = (0..n).map(|j| x.col(j)).collect();
+    let store = ColumnStore::from_matrix(x, 1);
     let mut p = vec![0.0; n];
     for i in 0..n {
         for j in 0..n {
-            p[i] += pearson(&cols[i], &cols[j]).abs();
+            p[i] += pearson_cols(&store, i, j).abs();
         }
     }
     let mut perm: Vec<usize> = (0..n).collect();
@@ -130,6 +154,20 @@ mod tests {
                     "column {j} differs after ordering"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pearson_cols_matches_slice_pearson_across_shard_counts() {
+        let mut rng = Rng::new(9);
+        let m = 120;
+        let a: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+        let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+        let expect = pearson(&a, &b);
+        for k in [1usize, 2, 3, 7] {
+            let store = crate::backend::ColumnStore::from_cols(&[a.clone(), b.clone()], k);
+            let got = pearson_cols(&store, 0, 1);
+            assert!((got - expect).abs() < 1e-12, "shards {k}: {got} vs {expect}");
         }
     }
 

@@ -1,12 +1,13 @@
 //! Hyperparameter grid search with k-fold CV (paper §6.2: 3-fold CV over
 //! the vanishing parameter ψ and the SVM's ℓ1 coefficient).
 
+use crate::backend::ShardedBackend;
 use crate::coordinator::pool::ThreadPool;
 use crate::data::splits::kfold_indices;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::ordering::FeatureOrdering;
-use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use crate::pipeline::{train_pipeline_with_backend, GeneratorMethod, PipelineConfig};
 use crate::svm::kernel::{PolyKernelConfig, PolyKernelSvm};
 use crate::svm::linear::LinearSvmConfig;
 use crate::svm::metrics::error_rate;
@@ -31,7 +32,8 @@ pub struct GridSearchResult {
 }
 
 /// Cross-validated grid search for a generator method + linear SVM.
-/// `pool` parallelizes grid points across worker threads.
+/// `pool` parallelizes grid points across worker threads (single-threaded
+/// within each fit — the seed behavior).
 pub fn grid_search(
     method: &GeneratorMethod,
     ordering: FeatureOrdering,
@@ -41,6 +43,25 @@ pub fn grid_search(
     folds: usize,
     seed: u64,
     pool: &ThreadPool,
+) -> Result<GridSearchResult> {
+    grid_search_sharded(method, ordering, train, psis, lambdas, folds, seed, pool, 1)
+}
+
+/// [`grid_search`] with an **intra-fit** parallelism knob on top of the
+/// job-level pool: each grid-point job fits through a [`ShardedBackend`]
+/// with `intra_shards` workers.  Use it when the grid is smaller than the
+/// machine (few grid points, many cores) — the two levels multiply.
+#[allow(clippy::too_many_arguments)]
+pub fn grid_search_sharded(
+    method: &GeneratorMethod,
+    ordering: FeatureOrdering,
+    train: &Dataset,
+    psis: &[f64],
+    lambdas: &[f64],
+    folds: usize,
+    seed: u64,
+    pool: &ThreadPool,
+    intra_shards: usize,
 ) -> Result<GridSearchResult> {
     let timer = Timer::start();
     let fold_idx = kfold_indices(train.len(), folds, seed);
@@ -57,6 +78,9 @@ pub fn grid_search(
             let method = method.with_psi(psi);
             let fold_data = fold_data.clone();
             jobs.push(Box::new(move || {
+                // one backend per job: the ComputeBackend trait is !Send,
+                // so each worker constructs its own (see backend/mod.rs)
+                let backend = ShardedBackend::boxed_for(intra_shards);
                 let mut errs = Vec::with_capacity(fold_data.len());
                 for (tr, va) in &fold_data {
                     let cfg = PipelineConfig {
@@ -64,7 +88,7 @@ pub fn grid_search(
                         svm: LinearSvmConfig { lambda, ..Default::default() },
                         ordering,
                     };
-                    match train_pipeline(&cfg, tr) {
+                    match train_pipeline_with_backend(&cfg, tr, backend.as_ref()) {
                         Ok(model) => errs.push(model.error_on(va)),
                         Err(_) => errs.push(1.0), // failed config = worst error
                     }
@@ -164,6 +188,39 @@ mod tests {
         assert!(res.best_cv_error <= 0.5);
         assert!(res.table.iter().any(|&(p, _, _)| p == res.best_psi));
         assert!(res.search_secs > 0.0);
+    }
+
+    #[test]
+    fn sharded_grid_search_runs_and_agrees_on_small_fits() {
+        // small m ⇒ preferred_shards = 1 ⇒ identical arithmetic to the
+        // single-threaded search
+        let ds = synthetic_dataset(300, 8);
+        let pool = ThreadPool::new(2);
+        let base = grid_search(
+            &GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            FeatureOrdering::Pearson,
+            &ds,
+            &[0.05],
+            &[1e-3],
+            3,
+            7,
+            &pool,
+        )
+        .unwrap();
+        let sharded = grid_search_sharded(
+            &GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            FeatureOrdering::Pearson,
+            &ds,
+            &[0.05],
+            &[1e-3],
+            3,
+            7,
+            &pool,
+            2,
+        )
+        .unwrap();
+        assert_eq!(base.table.len(), sharded.table.len());
+        assert_eq!(base.best_cv_error, sharded.best_cv_error);
     }
 
     #[test]

@@ -81,9 +81,11 @@ impl ClassModel {
         }
     }
 
-    fn transform(&self, x: &Matrix) -> Matrix {
+    fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
         match self {
-            ClassModel::MonomialAware(gs) => gs.transform(x),
+            ClassModel::MonomialAware(gs) => gs.transform_with(x, backend),
+            // VCA evaluates its polynomial DAG (no A·C+U form), so the
+            // backend choice does not apply to it
             ClassModel::Vca(v) => v.transform(x),
         }
     }
@@ -97,9 +99,17 @@ pub struct FittedTransformer {
 }
 
 impl FittedTransformer {
-    /// (FT): concatenate |g(x)| blocks of all classes → m × |G| features.
+    /// (FT): concatenate |g(x)| blocks of all classes → m × |G| features
+    /// (native streaming backend).
     pub fn transform(&self, x: &Matrix) -> Matrix {
-        let blocks: Vec<Matrix> = self.per_class.iter().map(|c| c.transform(x)).collect();
+        self.transform_with(x, &NativeBackend)
+    }
+
+    /// (FT) through an explicit streaming backend (native / sharded /
+    /// PJRT) — the serving path's intra-batch parallelism knob.
+    pub fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
+        let blocks: Vec<Matrix> =
+            self.per_class.iter().map(|c| c.transform_with(x, backend)).collect();
         let total: usize = blocks.iter().map(|b| b.cols()).sum();
         let mut out = Matrix::zeros(x.rows(), total);
         let mut off = 0;
@@ -190,9 +200,9 @@ pub fn fit_transformer(
             GeneratorMethod::Oavi(cfg) => ClassModel::MonomialAware(
                 Oavi::new(*cfg).fit_with_backend(&xk, backend)?.generator_set(),
             ),
-            GeneratorMethod::Abm(cfg) => {
-                ClassModel::MonomialAware(Abm::new(*cfg).fit(&xk)?.generator_set())
-            }
+            GeneratorMethod::Abm(cfg) => ClassModel::MonomialAware(
+                Abm::new(*cfg).fit_with_backend(&xk, backend)?.generator_set(),
+            ),
             GeneratorMethod::Vca(cfg) => ClassModel::Vca(Vca::new(*cfg).fit(&xk)?),
         };
         per_class.push(model);
@@ -218,10 +228,16 @@ pub struct PipelineModel {
 }
 
 impl PipelineModel {
-    /// Predict labels for raw (scaled) features.
+    /// Predict labels for raw (scaled) features (native backend).
     pub fn predict(&self, x: &Matrix) -> Vec<usize> {
+        self.predict_with_backend(x, &NativeBackend)
+    }
+
+    /// Predict through an explicit streaming backend — lets the serving
+    /// path run the (FT) transform sharded across cores.
+    pub fn predict_with_backend(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Vec<usize> {
         let xp = permute_cols(x, &self.perm);
-        let feats = self.transformer.transform(&xp);
+        let feats = self.transformer.transform_with(&xp, backend);
         self.svm.predict(&feats)
     }
 
@@ -250,7 +266,7 @@ pub fn train_pipeline_with_backend(
     let perm = order_features(&train.x, ordering);
     let ordered = train.permute_features(&perm);
     let transformer = fit_transformer(&cfg.method, &ordered, backend)?;
-    let feats = transformer.transform(&ordered.x);
+    let feats = transformer.transform_with(&ordered.x, backend);
     let svm = LinearSvm::fit(&feats, &ordered.y, ordered.n_classes, cfg.svm)?;
     Ok(PipelineModel { perm, transformer, svm, n_classes: train.n_classes })
 }

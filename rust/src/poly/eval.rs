@@ -8,6 +8,7 @@
 
 use std::collections::HashMap;
 
+use crate::backend::ColumnStore;
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::poly::term::Term;
@@ -97,33 +98,25 @@ impl TermSet {
         Ok(idx)
     }
 
-    /// Evaluate every term over the rows of `x` (m×n) → one column per
-    /// term (each of length m).  One multiply per (term, sample).
-    pub fn eval_columns(&self, x: &Matrix) -> Vec<Vec<f64>> {
+    /// Evaluate every term over the rows of `x` (m×n) into a row-sharded
+    /// [`ColumnStore`] — one column per term, one multiply per (term,
+    /// sample), via one reused scratch buffer.  The store is the column
+    /// currency every downstream kernel (gram_stats, transform_abs,
+    /// Pearson) consumes.
+    pub fn eval_store(&self, x: &Matrix, n_shards: usize) -> ColumnStore {
         let m = x.rows();
-        let mut cols: Vec<Vec<f64>> = Vec::with_capacity(self.terms.len());
+        let mut store = ColumnStore::new(m, n_shards);
+        let mut buf = vec![0.0f64; m];
         for recipe in &self.recipes {
-            let col = self.eval_recipe_column(x, *recipe, &cols, m);
-            cols.push(col);
-        }
-        cols
-    }
-
-    /// Evaluate one recipe given already-evaluated earlier columns.
-    pub fn eval_recipe_column(
-        &self,
-        x: &Matrix,
-        recipe: Recipe,
-        cols: &[Vec<f64>],
-        m: usize,
-    ) -> Vec<f64> {
-        match recipe {
-            Recipe::One => vec![1.0; m],
-            Recipe::Product { parent, var } => {
-                let p = &cols[parent];
-                (0..m).map(|i| p[i] * x.get(i, var)).collect()
+            match *recipe {
+                Recipe::One => buf.fill(1.0),
+                Recipe::Product { parent, var } => {
+                    store.fill_product(parent, x, var, &mut buf);
+                }
             }
+            store.push_col(&buf);
         }
+        store
     }
 
     /// Evaluate every term at a single point (used by tests/diagnostics).
@@ -176,8 +169,9 @@ mod tests {
         let ts = TermSet::with_one(3);
         let mut rng = Rng::new(1);
         let x = sample_x(&mut rng, 5, 3);
-        let cols = ts.eval_columns(&x);
-        assert_eq!(cols, vec![vec![1.0; 5]]);
+        let store = ts.eval_store(&x, 2);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.col(0), vec![1.0; 5]);
     }
 
     #[test]
@@ -202,7 +196,7 @@ mod tests {
     }
 
     #[test]
-    fn eval_columns_match_direct_term_eval() {
+    fn eval_store_matches_direct_term_eval() {
         property(32, |rng| {
             let n = 1 + rng.below(4);
             let mut ts = TermSet::with_one(n);
@@ -214,23 +208,25 @@ mod tests {
                 let _ = ts.push_product(parent, var);
             }
             let m = 6;
+            let shards = 1 + rng.below(4);
             let x = sample_x(rng, m, n);
-            let cols = ts.eval_columns(&x);
+            let store = ts.eval_store(&x, shards);
             for (ti, term) in ts.terms().iter().enumerate() {
+                let col = store.col(ti);
                 for i in 0..m {
                     let direct = term.eval(x.row(i));
-                    if (cols[ti][i] - direct).abs() > 1e-12 {
+                    if (col[i] - direct).abs() > 1e-12 {
                         return Err(format!(
                             "term {term} at row {i}: {} vs {}",
-                            cols[ti][i], direct
+                            col[i], direct
                         ));
                     }
                 }
             }
-            // eval_point agrees with columns
+            // eval_point agrees with the store columns
             let point_vals = ts.eval_point(x.row(0));
             for (ti, v) in point_vals.iter().enumerate() {
-                if (cols[ti][0] - v).abs() > 1e-12 {
+                if (store.col(ti)[0] - v).abs() > 1e-12 {
                     return Err("eval_point mismatch".into());
                 }
             }

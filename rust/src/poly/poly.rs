@@ -1,6 +1,7 @@
 //! Generator polynomials `g = Σ_j c_j t_j + u` (LTC = 1) and generator
 //! sets with the paper's reporting statistics (average degree, SPAR).
 
+use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
 use crate::linalg::dense::Matrix;
 use crate::poly::eval::TermSet;
 use crate::poly::term::Term;
@@ -44,23 +45,6 @@ impl Generator {
     /// ℓ1 norm of the full coefficient vector (incl. the leading 1).
     pub fn coeff_l1(&self) -> f64 {
         1.0 + self.coeffs.iter().map(|c| c.abs()).sum::<f64>()
-    }
-
-    /// Evaluate over precomputed O columns + leading column.
-    pub fn eval_from_columns(&self, o_cols: &[Vec<f64>], lead_col: &[f64]) -> Vec<f64> {
-        let m = lead_col.len();
-        let mut out = lead_col.to_vec();
-        for (j, &c) in self.coeffs.iter().enumerate() {
-            if c == 0.0 {
-                continue;
-            }
-            let col = &o_cols[j];
-            for i in 0..m {
-                out[i] += c * col[i];
-            }
-        }
-        debug_assert_eq!(out.len(), m);
-        out
     }
 }
 
@@ -107,22 +91,40 @@ impl GeneratorSet {
         self.generators.iter().map(|g| g.coeff_l1()).fold(0.0, f64::max)
     }
 
-    /// Evaluate |g(z)| for every generator over new data — the (FT)
-    /// feature block contributed by this class (m × |G|, row-major).
-    pub fn transform(&self, x: &Matrix) -> Matrix {
+    /// Assemble the `(A, C, U)` operands of the (FT) kernel `|A·C + U|`
+    /// over `x`: A = the O-term evaluation store, C = the generator
+    /// coefficient matrix (zero-padded to the full |O|), U = the leading-
+    /// term columns.
+    fn transform_operands(&self, x: &Matrix, n_shards: usize) -> (ColumnStore, Matrix, Matrix) {
+        let store = self.o_terms.eval_store(x, n_shards);
         let m = x.rows();
-        let o_cols = self.o_terms.eval_columns(x);
-        let mut out = Matrix::zeros(m, self.generators.len());
-        for (gi, g) in self.generators.iter().enumerate() {
-            let lead: Vec<f64> = (0..m)
-                .map(|i| o_cols[g.leading_parent][i] * x.get(i, g.leading_var))
-                .collect();
-            let vals = g.eval_from_columns(&o_cols, &lead);
-            for i in 0..m {
-                out.set(i, gi, vals[i].abs());
+        let g = self.generators.len();
+        let mut c = Matrix::zeros(store.len(), g);
+        let mut u = Matrix::zeros(m, g);
+        let mut lead = vec![0.0f64; m];
+        for (gi, gen) in self.generators.iter().enumerate() {
+            for (j, &cj) in gen.coeffs.iter().enumerate() {
+                c.set(j, gi, cj);
+            }
+            store.fill_product(gen.leading_parent, x, gen.leading_var, &mut lead);
+            for (i, &v) in lead.iter().enumerate() {
+                u.set(i, gi, v);
             }
         }
-        out
+        (store, c, u)
+    }
+
+    /// Evaluate |g(z)| for every generator over new data — the (FT)
+    /// feature block contributed by this class (m × |G|, row-major) —
+    /// through an explicit streaming backend (native, sharded, or PJRT).
+    pub fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
+        let (store, c, u) = self.transform_operands(x, backend.preferred_shards(x.rows()));
+        backend.transform_abs(&store, &c, &u)
+    }
+
+    /// [`GeneratorSet::transform_with`] on the native reference backend.
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        self.transform_with(x, &NativeBackend)
     }
 
     /// Human-readable polynomial strings — the interpretability payoff of
@@ -151,18 +153,20 @@ impl GeneratorSet {
             .collect()
     }
 
-    /// MSE of every generator over new data (out-sample vanishing check).
+    /// MSE of every generator over new data (out-sample vanishing check):
+    /// column-wise mean square of the (FT) block (|g(z)|² = g(z)²).
     pub fn mse_on(&self, x: &Matrix) -> Vec<f64> {
         let m = x.rows();
-        let o_cols = self.o_terms.eval_columns(x);
-        self.generators
-            .iter()
-            .map(|g| {
-                let lead: Vec<f64> = (0..m)
-                    .map(|i| o_cols[g.leading_parent][i] * x.get(i, g.leading_var))
-                    .collect();
-                let vals = g.eval_from_columns(&o_cols, &lead);
-                vals.iter().map(|v| v * v).sum::<f64>() / m as f64
+        let t = self.transform(x);
+        (0..t.cols())
+            .map(|gi| {
+                (0..m)
+                    .map(|i| {
+                        let v = t.get(i, gi);
+                        v * v
+                    })
+                    .sum::<f64>()
+                    / m as f64
             })
             .collect()
     }

@@ -1,16 +1,17 @@
 //! [`XlaBackend`]: the [`crate::backend::ComputeBackend`] implementation
 //! that routes the streaming hot paths through the AOT PJRT artifacts.
 //!
-//! Tiling contract (DESIGN.md §6): rows are processed in `M_TILE`-row
-//! chunks (the final partial tile is zero-padded — zero rows contribute
-//! nothing to either `Aᵀb` or `bᵀb`, and transform rows beyond m are
-//! discarded); the live column count ℓ is padded to the smallest artifact
-//! `L_PAD ≥ ℓ`.  Shapes beyond every artifact fall back to the native
-//! backend so the system never refuses work.
+//! Tiling contract (DESIGN.md §6): each [`ColumnStore`] shard is
+//! processed independently in `M_TILE`-row chunks (partial tiles —
+//! including shard boundaries — are zero-padded; zero rows contribute
+//! nothing to either `Aᵀb` or `bᵀb`, and transform rows beyond the shard
+//! are discarded); the live column count ℓ is padded to the smallest
+//! artifact `L_PAD ≥ ℓ`.  Shapes beyond every artifact fall back to the
+//! native backend so the system never refuses work.
 
 use std::sync::Arc;
 
-use crate::backend::{ComputeBackend, NativeBackend};
+use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
 use crate::linalg::dense::Matrix;
 use crate::runtime::PjrtRuntime;
 
@@ -31,9 +32,8 @@ impl XlaBackend {
 }
 
 impl ComputeBackend for XlaBackend {
-    fn gram_stats(&self, cols: &[Vec<f64>], b_col: &[f64]) -> (Vec<f64>, f64) {
+    fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
         let ell = cols.len();
-        let m = b_col.len();
         let Some((m_tile, l_pad)) = self.rt.gram_artifact_for(ell) else {
             return self.fallback.gram_stats(cols, b_col);
         };
@@ -41,35 +41,41 @@ impl ComputeBackend for XlaBackend {
         let mut btb = 0.0f64;
         let mut a_tile = vec![0.0f32; m_tile * l_pad];
         let mut b_tile = vec![0.0f32; m_tile];
-        let mut row = 0usize;
-        while row < m {
-            let take = (m - row).min(m_tile);
-            // pack the row tile (row-major) from the column-major inputs
-            a_tile.iter_mut().for_each(|v| *v = 0.0);
-            b_tile.iter_mut().for_each(|v| *v = 0.0);
-            for (j, col) in cols.iter().enumerate() {
-                for i in 0..take {
-                    a_tile[i * l_pad + j] = col[row + i] as f32;
-                }
-            }
-            for i in 0..take {
-                b_tile[i] = b_col[row + i] as f32;
-            }
-            match self.rt.gram_update_tile(m_tile, l_pad, &a_tile, &b_tile) {
-                Ok((atb_part, btb_part)) => {
-                    for j in 0..ell {
-                        atb[j] += atb_part[j] as f64;
+        for s in 0..cols.n_shards() {
+            let range = cols.shard_range(s);
+            let rows = range.len();
+            let mut row = 0usize;
+            while row < rows {
+                let take = (rows - row).min(m_tile);
+                // pack the row tile (row-major) from the shard's
+                // column-major slices
+                a_tile.iter_mut().for_each(|v| *v = 0.0);
+                b_tile.iter_mut().for_each(|v| *v = 0.0);
+                for j in 0..ell {
+                    let col = cols.col_shard(j, s);
+                    for i in 0..take {
+                        a_tile[i * l_pad + j] = col[row + i] as f32;
                     }
-                    btb += btb_part as f64;
                 }
-                Err(_) => return self.fallback.gram_stats(cols, b_col),
+                for i in 0..take {
+                    b_tile[i] = b_col[range.start + row + i] as f32;
+                }
+                match self.rt.gram_update_tile(m_tile, l_pad, &a_tile, &b_tile) {
+                    Ok((atb_part, btb_part)) => {
+                        for (a, p) in atb.iter_mut().zip(atb_part.iter()) {
+                            *a += *p as f64;
+                        }
+                        btb += btb_part as f64;
+                    }
+                    Err(_) => return self.fallback.gram_stats(cols, b_col),
+                }
+                row += take;
             }
-            row += take;
         }
         (atb, btb)
     }
 
-    fn transform_abs(&self, cols: &[Vec<f64>], c: &Matrix, u: &Matrix) -> Matrix {
+    fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
         let ell = cols.len();
         let m = u.rows();
         let g = u.cols();
@@ -86,32 +92,38 @@ impl ComputeBackend for XlaBackend {
         }
         let mut a_tile = vec![0.0f32; m_tile * l_pad];
         let mut u_tile = vec![0.0f32; m_tile * g_pad];
-        let mut row = 0usize;
-        while row < m {
-            let take = (m - row).min(m_tile);
-            a_tile.iter_mut().for_each(|v| *v = 0.0);
-            u_tile.iter_mut().for_each(|v| *v = 0.0);
-            for (j, col) in cols.iter().enumerate() {
-                for i in 0..take {
-                    a_tile[i * l_pad + j] = col[row + i] as f32;
-                }
-            }
-            for i in 0..take {
-                for k in 0..g {
-                    u_tile[i * g_pad + k] = u.get(row + i, k) as f32;
-                }
-            }
-            match self.rt.transform_tile(m_tile, l_pad, g_pad, &a_tile, &c_pad, &u_tile) {
-                Ok(vals) => {
+        for s in 0..cols.n_shards() {
+            let range = cols.shard_range(s);
+            let rows = range.len();
+            let mut row = 0usize;
+            while row < rows {
+                let take = (rows - row).min(m_tile);
+                a_tile.iter_mut().for_each(|v| *v = 0.0);
+                u_tile.iter_mut().for_each(|v| *v = 0.0);
+                for j in 0..ell {
+                    let col = cols.col_shard(j, s);
                     for i in 0..take {
-                        for k in 0..g {
-                            out.set(row + i, k, vals[i * g_pad + k] as f64);
-                        }
+                        a_tile[i * l_pad + j] = col[row + i] as f32;
                     }
                 }
-                Err(_) => return self.fallback.transform_abs(cols, c, u),
+                for i in 0..take {
+                    for k in 0..g {
+                        u_tile[i * g_pad + k] = u.get(range.start + row + i, k) as f32;
+                    }
+                }
+                match self.rt.transform_tile(m_tile, l_pad, g_pad, &a_tile, &c_pad, &u_tile)
+                {
+                    Ok(vals) => {
+                        for i in 0..take {
+                            for k in 0..g {
+                                out.set(range.start + row + i, k, vals[i * g_pad + k] as f64);
+                            }
+                        }
+                    }
+                    Err(_) => return self.fallback.transform_abs(cols, c, u),
+                }
+                row += take;
             }
-            row += take;
         }
         out
     }

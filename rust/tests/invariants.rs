@@ -77,8 +77,8 @@ fn ihb_inverse_stays_consistent_through_a_full_fit() {
         let x = ds.class_matrix(k);
         let model = Oavi::new(OaviConfig::cgavi_ihb(0.002)).fit(&x).unwrap();
         // rebuild the Gram from the final O columns and compare inverses
-        let cols = model.o_terms.eval_columns(&x);
-        let fresh = GramState::from_columns(&cols).unwrap();
+        let store = model.o_terms.eval_store(&x, 3);
+        let fresh = GramState::from_store(&store).unwrap();
         assert!(fresh.inverse_drift() < 1e-6);
     }
 }

@@ -1,14 +1,20 @@
-//! PJRT runtime ↔ native backend parity — the end-to-end check of the
-//! three-layer contract: the JAX/Pallas-authored, AOT-compiled artifacts
-//! must compute the same numbers as the native Rust reference (within f32
-//! tolerance), through the exact code path the production system uses.
+//! Backend parity — the end-to-end checks of the data-plane contract:
 //!
-//! Skips gracefully (with a loud message) if `make artifacts` has not run.
+//! * **native ↔ sharded**: [`ShardedBackend`] must match
+//!   [`NativeBackend`] **bit-for-bit** for any fixed store shard count
+//!   (same per-shard kernels, same in-order reduction), across uneven m
+//!   (including m < shards) and through a full OAVI fit.  These tests
+//!   need no artifacts and always run.
+//! * **native ↔ PJRT**: the JAX/Pallas-authored, AOT-compiled artifacts
+//!   must compute the same numbers as the native Rust reference (within
+//!   f32 tolerance), through the exact code path the production system
+//!   uses.  Skips gracefully (with a loud message) if `make artifacts`
+//!   has not run.
 
 use std::path::Path;
 use std::sync::Arc;
 
-use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::backend::{ColumnStore, ComputeBackend, NativeBackend, ShardedBackend};
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::linalg::dense::Matrix;
 use avi_scale::oavi::{Oavi, OaviConfig};
@@ -26,6 +32,142 @@ fn runtime() -> Option<Arc<PjrtRuntime>> {
     }
 }
 
+fn random_cols(rng: &mut Rng, m: usize, ell: usize) -> Vec<Vec<f64>> {
+    (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect()
+}
+
+// ---------------------------------------------------------------------
+// native ↔ sharded (no artifacts required)
+// ---------------------------------------------------------------------
+
+#[test]
+fn sharded_gram_stats_bitwise_parity_suite() {
+    // shard counts {1, 2, 3, 7} × uneven m including m < shards
+    let mut rng = Rng::new(41);
+    let sharded = ShardedBackend::new(4);
+    for &shards in &[1usize, 2, 3, 7] {
+        for &m in &[1usize, 2, 3, 5, 6, 7, 8, 41, 100, 1037] {
+            let ell = 1 + (m % 5);
+            let cols = random_cols(&mut rng, m, ell);
+            let b: Vec<f64> = (0..m).map(|_| rng.uniform() - 0.4).collect();
+            let store = ColumnStore::from_cols(&cols, shards);
+            let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
+            let (atb_s, btb_s) = sharded.gram_stats(&store, &b);
+            assert_eq!(
+                btb_n.to_bits(),
+                btb_s.to_bits(),
+                "btb bits diverge at m={m} shards={shards}"
+            );
+            for (j, (a, s)) in atb_n.iter().zip(atb_s.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    s.to_bits(),
+                    "atb[{j}] bits diverge at m={m} shards={shards}: {a} vs {s}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_transform_parity_suite() {
+    let mut rng = Rng::new(43);
+    let sharded = ShardedBackend::new(3);
+    for &shards in &[1usize, 2, 3, 7] {
+        for &m in &[1usize, 3, 5, 7, 64, 501] {
+            let (ell, g) = (1 + (m % 4), 1 + (m % 3));
+            let cols = random_cols(&mut rng, m, ell);
+            let store = ColumnStore::from_cols(&cols, shards);
+            let mut c = Matrix::zeros(ell, g);
+            let mut u = Matrix::zeros(m, g);
+            for j in 0..ell {
+                for k in 0..g {
+                    c.set(j, k, rng.normal());
+                }
+            }
+            for i in 0..m {
+                for k in 0..g {
+                    u.set(i, k, rng.normal());
+                }
+            }
+            let tn = NativeBackend.transform_abs(&store, &c, &u);
+            let ts = sharded.transform_abs(&store, &c, &u);
+            for (a, b) in tn.data().iter().zip(ts.data().iter()) {
+                assert!(
+                    (a - b).abs() <= 1e-12,
+                    "transform diverges at m={m} shards={shards}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_parallel_path_bitwise_parity_at_scale() {
+    // large enough per-shard work to clear the sequential-fallback gate,
+    // so this exercises the actual pool fan-out + in-order reduction
+    let mut rng = Rng::new(47);
+    let sharded = ShardedBackend::new(4);
+    let (m, ell, g) = (200_000usize, 8usize, 4usize);
+    let cols = random_cols(&mut rng, m, ell);
+    let b: Vec<f64> = (0..m).map(|_| rng.uniform() - 0.4).collect();
+    let store = ColumnStore::from_cols(&cols, 4);
+    let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
+    let (atb_s, btb_s) = sharded.gram_stats(&store, &b);
+    assert_eq!(btb_n.to_bits(), btb_s.to_bits());
+    for (a, s) in atb_n.iter().zip(atb_s.iter()) {
+        assert_eq!(a.to_bits(), s.to_bits());
+    }
+    let mut c = Matrix::zeros(ell, g);
+    let mut u = Matrix::zeros(m, g);
+    for j in 0..ell {
+        for k in 0..g {
+            c.set(j, k, rng.normal());
+        }
+    }
+    for i in 0..m {
+        for k in 0..g {
+            u.set(i, k, rng.normal());
+        }
+    }
+    let tn = NativeBackend.transform_abs(&store, &c, &u);
+    let ts = sharded.transform_abs(&store, &c, &u);
+    for (a, b) in tn.data().iter().zip(ts.data().iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "parallel transform diverges: {a} vs {b}");
+    }
+}
+
+#[test]
+fn oavi_fit_through_sharded_backend_matches_native() {
+    // full fit: large enough m that preferred_shards > 1 actually shards
+    let ds = synthetic_dataset(20_000, 7);
+    let x = ds.class_matrix(0);
+    let cfg = OaviConfig::cgavi_ihb(0.005);
+    let sharded = ShardedBackend::new(4);
+    assert!(
+        sharded.preferred_shards(x.rows()) > 1,
+        "test must exercise the multi-shard path (m = {})",
+        x.rows()
+    );
+    let native_model = Oavi::new(cfg).fit(&x).unwrap();
+    let sharded_model = Oavi::new(cfg).fit_with_backend(&x, &sharded).unwrap();
+    assert_eq!(native_model.o_terms.len(), sharded_model.o_terms.len());
+    assert_eq!(native_model.generators.len(), sharded_model.generators.len());
+    for (a, b) in native_model.generators.iter().zip(sharded_model.generators.iter()) {
+        assert_eq!(a.leading, b.leading);
+        // shard-order summation differs from single-pass dots only at
+        // the f64 rounding level
+        assert!((a.mse - b.mse).abs() < 1e-9, "mse {} vs {}", a.mse, b.mse);
+        for (ca, cb) in a.coeffs.iter().zip(b.coeffs.iter()) {
+            assert!((ca - cb).abs() < 1e-7, "coeff {ca} vs {cb}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// native ↔ PJRT (skips without artifacts)
+// ---------------------------------------------------------------------
+
 #[test]
 fn gram_stats_parity_small() {
     let Some(rt) = runtime() else { return };
@@ -33,11 +175,11 @@ fn gram_stats_parity_small() {
     let native = NativeBackend;
     let mut rng = Rng::new(1);
     for (m, ell) in [(100usize, 3usize), (4096, 10), (5000, 40), (9000, 64)] {
-        let cols: Vec<Vec<f64>> =
-            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let cols = random_cols(&mut rng, m, ell);
         let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
-        let (atb_x, btb_x) = xla.gram_stats(&cols, &b);
-        let (atb_n, btb_n) = native.gram_stats(&cols, &b);
+        let store = ColumnStore::from_cols(&cols, 1);
+        let (atb_x, btb_x) = xla.gram_stats(&store, &b);
+        let (atb_n, btb_n) = native.gram_stats(&store, &b);
         let scale = m as f64;
         for j in 0..ell {
             assert!(
@@ -52,14 +194,36 @@ fn gram_stats_parity_small() {
 }
 
 #[test]
+fn gram_stats_parity_sharded_store() {
+    // PJRT tiles each shard independently; results must stay within f32
+    // tolerance of native on the same multi-shard store
+    let Some(rt) = runtime() else { return };
+    let xla = XlaBackend::new(rt);
+    let mut rng = Rng::new(5);
+    let (m, ell) = (5000usize, 12usize);
+    let cols = random_cols(&mut rng, m, ell);
+    let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+    for shards in [2usize, 3, 7] {
+        let store = ColumnStore::from_cols(&cols, shards);
+        let (atb_x, btb_x) = xla.gram_stats(&store, &b);
+        let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
+        let scale = m as f64;
+        for j in 0..ell {
+            assert!((atb_x[j] - atb_n[j]).abs() < 1e-3 * scale);
+        }
+        assert!((btb_x - btb_n).abs() < 1e-3 * scale);
+    }
+}
+
+#[test]
 fn transform_parity() {
     let Some(rt) = runtime() else { return };
     let xla = XlaBackend::new(rt);
     let native = NativeBackend;
     let mut rng = Rng::new(2);
     let (m, ell, g) = (5000usize, 12usize, 7usize);
-    let cols: Vec<Vec<f64>> =
-        (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+    let cols = random_cols(&mut rng, m, ell);
+    let store = ColumnStore::from_cols(&cols, 1);
     let mut c = Matrix::zeros(ell, g);
     let mut u = Matrix::zeros(m, g);
     for j in 0..ell {
@@ -72,8 +236,8 @@ fn transform_parity() {
             u.set(i, k, rng.normal());
         }
     }
-    let tx = xla.transform_abs(&cols, &c, &u);
-    let tn = native.transform_abs(&cols, &c, &u);
+    let tx = xla.transform_abs(&store, &c, &u);
+    let tn = native.transform_abs(&store, &c, &u);
     let mut worst = 0.0f64;
     for i in 0..m {
         for k in 0..g {
@@ -108,11 +272,11 @@ fn fallback_beyond_artifact_width() {
     // ℓ = 300 exceeds the largest L_PAD=256 artifact ⇒ silent native fallback
     let mut rng = Rng::new(3);
     let m = 200;
-    let cols: Vec<Vec<f64>> =
-        (0..300).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+    let cols = random_cols(&mut rng, m, 300);
+    let store = ColumnStore::from_cols(&cols, 1);
     let b: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
-    let (atb_x, btb_x) = xla.gram_stats(&cols, &b);
-    let (atb_n, btb_n) = NativeBackend.gram_stats(&cols, &b);
+    let (atb_x, btb_x) = xla.gram_stats(&store, &b);
+    let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
     assert_eq!(atb_x, atb_n); // exact: same f64 code path
     assert_eq!(btb_x, btb_n);
 }

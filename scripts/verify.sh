@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate for the data plane (run from the repo root):
+#   fmt --check, clippy (-D warnings on the new data-plane modules),
+#   release build, full test suite.
+#
+# Clippy note: the seed predates a clippy pass, so warnings are denied
+# only in the modules this gate owns (backend/, the scaling bench, the
+# parity tests); everything else is reported but non-fatal to keep the
+# gate actionable.  Tighten the allowlist as modules get cleaned up.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy =="
+CLIPPY_LOG=$(mktemp)
+# pipefail makes this fail loudly if clippy itself can't run (missing
+# component) or emits deny-level errors; warnings exit 0 and are gated
+# by the span grep below
+cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
+# every rustc diagnostic carries a "--> path:line:col" span line; match
+# spans inside the strict modules regardless of header distance
+STRICT_SPANS='^[[:space:]]*--> (src/backend/|benches/micro_backend_scaling|tests/runtime_parity)'
+if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
+  echo "FAIL: clippy findings in strict data-plane modules:"
+  grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
+  exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "verify.sh: all gates passed"
