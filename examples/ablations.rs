@@ -12,7 +12,8 @@ use avi_scale::data::load_registry_dataset;
 use avi_scale::data::splits::train_test_split;
 use avi_scale::oavi::{Oavi, OaviConfig};
 use avi_scale::ordering::FeatureOrdering;
-use avi_scale::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use avi_scale::estimator::EstimatorConfig;
+use avi_scale::pipeline::{train_pipeline, PipelineConfig};
 use avi_scale::svm::linear::LinearSvmConfig;
 use avi_scale::util::timer::Timer;
 
@@ -36,7 +37,7 @@ fn main() -> avi_scale::Result<()> {
         let t = Timer::start();
         let pipe = train_pipeline(
             &PipelineConfig {
-                method: GeneratorMethod::Oavi(cfg),
+                estimator: EstimatorConfig::Oavi(cfg),
                 svm: LinearSvmConfig::default(),
                 ordering: FeatureOrdering::Pearson,
             },
@@ -107,7 +108,7 @@ fn main() -> avi_scale::Result<()> {
         let t = Timer::start();
         let pipe = train_pipeline(
             &PipelineConfig {
-                method: GeneratorMethod::Oavi(cfg),
+                estimator: EstimatorConfig::Oavi(cfg),
                 svm: LinearSvmConfig::default(),
                 ordering: FeatureOrdering::Pearson,
             },

@@ -15,7 +15,7 @@ use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::data::load_registry_dataset;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::pipeline::report::{format_table, run_cell, Method, Protocol};
-use avi_scale::pipeline::GeneratorMethod;
+use avi_scale::estimator::EstimatorConfig;
 
 fn main() -> avi_scale::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -24,11 +24,11 @@ fn main() -> avi_scale::Result<()> {
     let use_xla = args.iter().any(|a| a == "--xla");
 
     let methods = [
-        Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005))),
-        Method::Generator(GeneratorMethod::Oavi(OaviConfig::agdavi_ihb(0.005))),
-        Method::Generator(GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.005))),
-        Method::Generator(GeneratorMethod::Abm(AbmConfig::new(0.005))),
-        Method::Generator(GeneratorMethod::Vca(VcaConfig::new(0.005))),
+        Method::Estimator(EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.005))),
+        Method::Estimator(EstimatorConfig::Oavi(OaviConfig::agdavi_ihb(0.005))),
+        Method::Estimator(EstimatorConfig::Oavi(OaviConfig::bpcgavi_wihb(0.005))),
+        Method::Estimator(EstimatorConfig::Abm(AbmConfig::new(0.005))),
+        Method::Estimator(EstimatorConfig::Vca(VcaConfig::new(0.005))),
         Method::KernelSvm,
     ];
     let pool = ThreadPool::default_size();

@@ -8,7 +8,7 @@ use avi_scale::data::load_registry_dataset;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::ordering::FeatureOrdering;
 use avi_scale::pipeline::report::{run_cell, Method, Protocol};
-use avi_scale::pipeline::GeneratorMethod;
+use avi_scale::estimator::EstimatorConfig;
 
 fn main() -> avi_scale::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,7 +31,7 @@ fn main() -> avi_scale::Result<()> {
                 ..Default::default()
             };
             let cell = run_cell(
-                Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005))),
+                Method::Estimator(EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.005))),
                 &ds,
                 &protocol,
                 &pool,

@@ -7,7 +7,8 @@ use avi_scale::data::splits::train_test_split;
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::oavi::{Oavi, OaviConfig};
 use avi_scale::ordering::FeatureOrdering;
-use avi_scale::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use avi_scale::estimator::EstimatorConfig;
+use avi_scale::pipeline::{train_pipeline, PipelineConfig};
 use avi_scale::svm::linear::LinearSvmConfig;
 
 fn main() -> avi_scale::Result<()> {
@@ -33,7 +34,7 @@ fn main() -> avi_scale::Result<()> {
     // 3. the full Algorithm-2 pipeline: per-class OAVI → |g(x)| features → ℓ1 SVM
     let split = train_test_split(&ds, 0.6, 7);
     let pipeline_cfg = PipelineConfig {
-        method: GeneratorMethod::Oavi(cfg),
+        estimator: EstimatorConfig::Oavi(cfg),
         svm: LinearSvmConfig::default(),
         ordering: FeatureOrdering::Pearson,
     };

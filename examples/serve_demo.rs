@@ -11,7 +11,8 @@ use avi_scale::data::splits::train_test_split;
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::ordering::FeatureOrdering;
-use avi_scale::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use avi_scale::estimator::EstimatorConfig;
+use avi_scale::pipeline::{train_pipeline, PipelineConfig};
 use avi_scale::svm::linear::LinearSvmConfig;
 
 fn main() -> avi_scale::Result<()> {
@@ -22,7 +23,7 @@ fn main() -> avi_scale::Result<()> {
     let ds = synthetic_dataset(8_000, 5);
     let split = train_test_split(&ds, 0.6, 1);
     let cfg = PipelineConfig {
-        method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005)),
+        estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.005)),
         svm: LinearSvmConfig::default(),
         ordering: FeatureOrdering::Pearson,
     };

@@ -3,10 +3,10 @@
 
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::data::load_registry_dataset;
+use avi_scale::estimator::EstimatorConfig;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::ordering::FeatureOrdering;
 use avi_scale::pipeline::report::{run_cell, Method, Protocol};
-use avi_scale::pipeline::GeneratorMethod;
 
 fn main() {
     let scale: f64 = std::env::var("AVI_BENCH_SCALE")
@@ -33,7 +33,7 @@ fn main() {
                 ..Default::default()
             };
             let cell = run_cell(
-                Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005))),
+                Method::Estimator(EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.005))),
                 &ds,
                 &protocol,
                 &pool,

@@ -8,9 +8,9 @@ use avi_scale::baselines::abm::AbmConfig;
 use avi_scale::baselines::vca::VcaConfig;
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::data::load_registry_dataset;
+use avi_scale::estimator::EstimatorConfig;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::pipeline::report::{format_table, run_cell, Method, Protocol};
-use avi_scale::pipeline::GeneratorMethod;
 
 fn main() {
     let scale: f64 = std::env::var("AVI_BENCH_SCALE")
@@ -22,11 +22,11 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(2); // paper: 10
     let methods = [
-        Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005))),
-        Method::Generator(GeneratorMethod::Oavi(OaviConfig::agdavi_ihb(0.005))),
-        Method::Generator(GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.005))),
-        Method::Generator(GeneratorMethod::Abm(AbmConfig::new(0.005))),
-        Method::Generator(GeneratorMethod::Vca(VcaConfig::new(0.005))),
+        Method::Estimator(EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.005))),
+        Method::Estimator(EstimatorConfig::Oavi(OaviConfig::agdavi_ihb(0.005))),
+        Method::Estimator(EstimatorConfig::Oavi(OaviConfig::bpcgavi_wihb(0.005))),
+        Method::Estimator(EstimatorConfig::Abm(AbmConfig::new(0.005))),
+        Method::Estimator(EstimatorConfig::Vca(VcaConfig::new(0.005))),
         Method::KernelSvm,
     ];
     let pool = ThreadPool::default_size();

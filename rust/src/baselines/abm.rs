@@ -20,7 +20,6 @@ use crate::oavi::driver::FitStats;
 use crate::poly::border::compute_border;
 use crate::poly::eval::TermSet;
 use crate::poly::poly::{Generator, GeneratorSet};
-use crate::util::timer::Timer;
 
 /// ABM configuration.
 #[derive(Clone, Copy, Debug)]
@@ -68,6 +67,10 @@ impl Abm {
         Abm { config }
     }
 
+    pub fn config(&self) -> &AbmConfig {
+        &self.config
+    }
+
     /// Fit with the native streaming backend.
     pub fn fit(&self, x: &Matrix) -> Result<AbmModel> {
         self.fit_with_backend(x, &NativeBackend)
@@ -82,7 +85,6 @@ impl Abm {
         backend: &dyn ComputeBackend,
     ) -> Result<AbmModel> {
         let cfg = self.config;
-        let timer = Timer::start();
         let m = x.rows();
         let n = x.cols();
         if m == 0 || n == 0 {
@@ -142,7 +144,6 @@ impl Abm {
                 }
             }
         }
-        stats.wall_secs = timer.secs();
         Ok(AbmModel { generators, o_terms: o, stats })
     }
 }

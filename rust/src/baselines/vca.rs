@@ -9,16 +9,22 @@
 //! and join F_d.  Polynomials are stored as an op-DAG ([`VcaNode`]) so
 //! they can be evaluated on unseen data (transform/test time).
 //!
+//! Backend-generic like OAVI/ABM: the two O(m·k) hot spots — projecting
+//! candidates against span(F) and the candidate Gram — are `Aᵀb` shapes,
+//! so they run through [`ComputeBackend::gram_stats`] over
+//! [`ColumnStore`]s sized by [`ComputeBackend::preferred_shards`].
+//! Results are deterministic per shard count, and native ↔ sharded are
+//! bit-identical for a fixed shard count (the data-plane contract pinned
+//! by `rust/tests/runtime_parity.rs`).
+//!
 //! The spurious-vanishing problem the paper discusses (§1.2, Table 3's
 //! spam row) is inherent to this normalization and intentionally left in.
 
-use crate::backend::ColumnStore;
+use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
-use crate::linalg::dot;
 use crate::linalg::eigen::sym_eig;
 use crate::oavi::driver::FitStats;
-use crate::util::timer::Timer;
 
 /// One node of the polynomial DAG.
 #[derive(Clone, Debug)]
@@ -60,10 +66,72 @@ pub struct VcaModel {
     pub f_sets: Vec<Vec<usize>>,
     /// degree of each node (parallel to `nodes`).
     degrees: Vec<u32>,
+    /// input feature dimension the DAG was fitted against (bounds every
+    /// `Feature` index; persisted so loads can validate).
+    n_vars: usize,
     pub stats: FitStats,
 }
 
 impl VcaModel {
+    /// Rebuild a model from persisted parts (the op-DAG, the component id
+    /// lists, per-node degrees, and the input feature dimension),
+    /// validating DAG well-formedness and feature-index bounds.
+    pub fn from_parts(
+        nodes: Vec<VcaNode>,
+        vanishing: Vec<usize>,
+        f_sets: Vec<Vec<usize>>,
+        degrees: Vec<u32>,
+        n_vars: usize,
+    ) -> Result<VcaModel> {
+        if nodes.len() != degrees.len() {
+            return Err(AviError::Data(format!(
+                "VCA model: {} nodes but {} degrees",
+                nodes.len(),
+                degrees.len()
+            )));
+        }
+        if n_vars == 0 {
+            return Err(AviError::Data("VCA model: n_vars must be ≥ 1".into()));
+        }
+        let n = nodes.len();
+        for (i, node) in nodes.iter().enumerate() {
+            let ok = match node {
+                VcaNode::One => true,
+                // bound feature reads so a loaded model can never index
+                // past the data matrix at transform time
+                VcaNode::Feature(j) => *j < n_vars,
+                VcaNode::Product(a, b) => *a < i && *b < i,
+                VcaNode::LinComb(terms) => terms.iter().all(|(_, id)| *id < i),
+            };
+            if !ok {
+                return Err(AviError::Data(format!(
+                    "VCA model: node {i} references a later node or an out-of-range feature"
+                )));
+            }
+        }
+        if vanishing.iter().any(|&v| v >= n)
+            || f_sets.iter().flatten().any(|&f| f >= n)
+        {
+            return Err(AviError::Data("VCA model: component id out of range".into()));
+        }
+        Ok(VcaModel { nodes, vanishing, f_sets, degrees, n_vars, stats: FitStats::default() })
+    }
+
+    /// The polynomial op-DAG (persistence/introspection).
+    pub fn nodes(&self) -> &[VcaNode] {
+        &self.nodes
+    }
+
+    /// Input feature dimension the model was fitted against.
+    pub fn n_vars(&self) -> usize {
+        self.n_vars
+    }
+
+    /// Per-node degrees, parallel to [`VcaModel::nodes`].
+    pub fn degrees(&self) -> &[u32] {
+        &self.degrees
+    }
+
     /// |V| + Σ_d |F_d| — the paper's |G|+|O| analogue for VCA.
     pub fn total_size(&self) -> usize {
         self.vanishing.len() + self.f_sets.iter().map(|f| f.len()).sum::<usize>()
@@ -100,10 +168,12 @@ impl VcaModel {
 
     /// Evaluate every node over `x` (memoized DAG walk) into the shared
     /// column currency — one [`ColumnStore`] column per node, built
-    /// through a single reused scratch buffer.
-    fn eval_store(&self, x: &Matrix) -> ColumnStore {
+    /// through a single reused scratch buffer.  Per-element accumulation
+    /// order is shard-independent, so the evaluations are bitwise
+    /// identical for every shard count.
+    fn eval_store(&self, x: &Matrix, n_shards: usize) -> ColumnStore {
         let m = x.rows();
-        let mut store = ColumnStore::new(m, 1);
+        let mut store = ColumnStore::new(m, n_shards);
         let mut buf = vec![0.0f64; m];
         for node in &self.nodes {
             match node {
@@ -141,9 +211,19 @@ impl VcaModel {
         store
     }
 
-    /// |g(x)| for every vanishing component — the (FT) feature block.
+    /// |g(x)| for every vanishing component — the (FT) feature block —
+    /// with the DAG evaluation store sharded to the backend's preference.
+    pub fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
+        self.transform_sharded(x, backend.preferred_shards(x.rows()))
+    }
+
+    /// [`VcaModel::transform_with`] on the native reference backend.
     pub fn transform(&self, x: &Matrix) -> Matrix {
-        let store = self.eval_store(x);
+        self.transform_sharded(x, 1)
+    }
+
+    fn transform_sharded(&self, x: &Matrix, n_shards: usize) -> Matrix {
+        let store = self.eval_store(x, n_shards);
         let m = x.rows();
         let mut out = Matrix::zeros(m, self.vanishing.len());
         for (gi, &nid) in self.vanishing.iter().enumerate() {
@@ -159,7 +239,7 @@ impl VcaModel {
 
     /// MSE of every vanishing component on `x`.
     pub fn mse_on(&self, x: &Matrix) -> Vec<f64> {
-        let store = self.eval_store(x);
+        let store = self.eval_store(x, 1);
         let m = x.rows() as f64;
         self.vanishing
             .iter()
@@ -178,14 +258,31 @@ impl Vca {
         Vca { config }
     }
 
+    pub fn config(&self) -> &VcaConfig {
+        &self.config
+    }
+
+    /// Fit with the native streaming backend.
     pub fn fit(&self, x: &Matrix) -> Result<VcaModel> {
+        self.fit_with_backend(x, &NativeBackend)
+    }
+
+    /// Fit with an explicit streaming backend: candidate projections and
+    /// the per-degree candidate Gram run through
+    /// [`ComputeBackend::gram_stats`], so `--backend sharded` accelerates
+    /// VCA the same way it accelerates OAVI/ABM.
+    pub fn fit_with_backend(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+    ) -> Result<VcaModel> {
         let cfg = self.config;
-        let timer = Timer::start();
         let m = x.rows();
         let n = x.cols();
         if m == 0 || n == 0 {
             return Err(AviError::Data("VCA fit: empty data".into()));
         }
+        let n_shards = backend.preferred_shards(m);
 
         let mut nodes: Vec<VcaNode> = Vec::new();
         let mut degrees: Vec<u32> = Vec::new();
@@ -212,8 +309,12 @@ impl Vca {
         );
 
         // orthonormal basis of span(F): node ids whose eval vectors are
-        // orthonormal (f0 plus everything appended below)
+        // orthonormal (f0 plus everything appended below).  `f_store`
+        // mirrors `f_basis` as backend-ready columns for the projection
+        // kernel.
         let mut f_basis: Vec<usize> = vec![f0];
+        let mut f_store = ColumnStore::new(m, n_shards);
+        f_store.push_col(&evals[f0]);
         let mut f_sets: Vec<Vec<usize>> = vec![vec![f0]];
         let mut vanishing: Vec<usize> = Vec::new();
         let mut stats = FitStats::default();
@@ -262,13 +363,16 @@ impl Vca {
             stats.degree_reached = d;
             stats.oracle_calls += 1; // one eigendecomposition per degree
 
-            // ---- project against span(F)
+            // ---- project against span(F): the weight vector ⟨cand, f_k⟩
+            // over the whole basis is one gram_stats call (Aᵀb with
+            // A = the orthonormal-basis store) — the backend hot spot
             let mut proj_ids: Vec<usize> = Vec::with_capacity(cands.len());
+            let mut proj_store = ColumnStore::new(m, n_shards);
             for &c in &cands {
+                let (ws, _btb) = backend.gram_stats(&f_store, &evals[c]);
                 let mut terms = vec![(1.0, c)];
                 let mut ev = evals[c].clone();
-                for &f in &f_basis {
-                    let w = dot(&evals[c], &evals[f]);
+                for (&f, &w) in f_basis.iter().zip(ws.iter()) {
                     if w != 0.0 {
                         terms.push((-w, f));
                         for (e, fe) in ev.iter_mut().zip(evals[f].iter()) {
@@ -276,6 +380,7 @@ impl Vca {
                         }
                     }
                 }
+                proj_store.push_col(&ev);
                 let id = push(
                     &mut nodes,
                     &mut degrees,
@@ -287,15 +392,14 @@ impl Vca {
                 proj_ids.push(id);
             }
 
-            // ---- eigendecompose the candidate Gram
+            // ---- eigendecompose the candidate Gram, one backend-executed
+            // Aᵀb per row (rows are exactly symmetric: the per-shard
+            // kernels are elementwise-commutative in their two operands)
             let k = proj_ids.len();
             let mut gram = Matrix::zeros(k, k);
-            for i in 0..k {
-                for j in i..k {
-                    let v = dot(&evals[proj_ids[i]], &evals[proj_ids[j]]);
-                    gram.set(i, j, v);
-                    gram.set(j, i, v);
-                }
+            for (i, &pid) in proj_ids.iter().enumerate() {
+                let (row, _btb) = backend.gram_stats(&proj_store, &evals[pid]);
+                gram.row_mut(i).copy_from_slice(&row);
             }
             let eig = sym_eig(&gram, 40)?;
 
@@ -351,6 +455,9 @@ impl Vca {
                     new_f.push(id);
                 }
             }
+            for &id in &new_f {
+                f_store.push_col(&evals[id]);
+            }
             f_basis.extend(new_f.iter().copied());
             let stop = new_f.is_empty();
             f_sets.push(new_f);
@@ -359,14 +466,14 @@ impl Vca {
             }
         }
 
-        stats.wall_secs = timer.secs();
-        Ok(VcaModel { nodes, vanishing, f_sets, degrees, stats })
+        Ok(VcaModel { nodes, vanishing, f_sets, degrees, n_vars: n, stats })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::ShardedBackend;
     use crate::util::rng::Rng;
 
     fn circle(m: usize, seed: u64) -> Matrix {
@@ -429,7 +536,7 @@ mod tests {
     fn f_vectors_are_orthonormal_on_train() {
         let x = circle(150, 5);
         let model = Vca::new(VcaConfig::new(1e-5)).fit(&x).unwrap();
-        let store = model.eval_store(&x);
+        let store = model.eval_store(&x, 1);
         let basis: Vec<usize> = model.f_sets.iter().flatten().copied().collect();
         for (ai, &a) in basis.iter().enumerate() {
             for &b in basis.iter().skip(ai) {
@@ -456,6 +563,58 @@ mod tests {
         let model_b = Vca::new(VcaConfig::new(1e-5)).fit(&xp).unwrap();
         assert_eq!(model_a.n_generators(), model_b.n_generators());
         assert_eq!(model_a.total_size(), model_b.total_size());
+    }
+
+    #[test]
+    fn sharded_backend_fit_matches_native_statistics() {
+        // same shard count ⇒ bitwise (pinned in runtime_parity.rs); here:
+        // the structural outputs must agree across backends even when the
+        // preferred shard counts differ
+        let x = circle(300, 8);
+        let native = Vca::new(VcaConfig::new(1e-5)).fit(&x).unwrap();
+        let sharded_backend = ShardedBackend::with_min_rows(3, 32);
+        let sharded =
+            Vca::new(VcaConfig::new(1e-5)).fit_with_backend(&x, &sharded_backend).unwrap();
+        assert_eq!(native.n_generators(), sharded.n_generators());
+        assert_eq!(native.total_size(), sharded.total_size());
+        let mn = native.mse_on(&x);
+        let ms = sharded.mse_on(&x);
+        for (a, b) in mn.iter().zip(ms.iter()) {
+            assert!((a - b).abs() < 1e-9, "mse {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn from_parts_validates_dag_shape() {
+        let x = circle(80, 9);
+        let model = Vca::new(VcaConfig::new(1e-4)).fit(&x).unwrap();
+        assert_eq!(model.n_vars(), 2);
+        let rebuilt = VcaModel::from_parts(
+            model.nodes().to_vec(),
+            model.vanishing.clone(),
+            model.f_sets.clone(),
+            model.degrees().to_vec(),
+            model.n_vars(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt.transform(&x).data(), model.transform(&x).data());
+        // forward reference is rejected
+        assert!(VcaModel::from_parts(
+            vec![VcaNode::Product(0, 1), VcaNode::One],
+            vec![],
+            vec![],
+            vec![0, 0],
+            2,
+        )
+        .is_err());
+        // feature index beyond the fitted dimension is rejected
+        assert!(
+            VcaModel::from_parts(vec![VcaNode::Feature(2)], vec![], vec![], vec![1], 2).is_err()
+        );
+        // out-of-range component id is rejected
+        assert!(VcaModel::from_parts(vec![VcaNode::One], vec![3], vec![], vec![0], 2).is_err());
+        // arity mismatch is rejected
+        assert!(VcaModel::from_parts(vec![VcaNode::One], vec![], vec![], vec![], 2).is_err());
     }
 
     #[test]

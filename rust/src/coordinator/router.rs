@@ -1,7 +1,9 @@
 //! Multi-model router: the vLLM-router-shaped piece of the coordinator.
 //!
 //! Production deployments serve *several* fitted pipelines at once (one
-//! per dataset / ψ working point / A-B arm).  The router owns one
+//! per dataset / ψ working point / estimator / A-B arm — the estimator
+//! layer makes OAVI, ABM, and VCA routes interchangeable).  The router
+//! owns one
 //! [`TransformService`] per registered model, routes each request by
 //! model key, and load-reports per model.  Routing invariants (pinned by
 //! the property tests below):
@@ -124,19 +126,43 @@ impl Default for ModelRouter {
 mod tests {
     use super::*;
     use crate::data::synthetic::synthetic_dataset;
+    use crate::estimator::EstimatorConfig;
     use crate::oavi::OaviConfig;
     use crate::ordering::FeatureOrdering;
-    use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+    use crate::pipeline::{train_pipeline, PipelineConfig};
     use crate::svm::linear::LinearSvmConfig;
 
     fn model(psi: f64, seed: u64) -> Arc<PipelineModel> {
         let ds = synthetic_dataset(300, seed);
         let cfg = PipelineConfig {
-            method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(psi)),
+            estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(psi)),
             svm: LinearSvmConfig::default(),
             ordering: FeatureOrdering::Pearson,
         };
         Arc::new(train_pipeline(&cfg, &ds).unwrap())
+    }
+
+    #[test]
+    fn routes_serve_every_estimator() {
+        // per-estimator serving routes: one fitted pipeline per method
+        // behind one router — the serving shape the estimator layer
+        // enables (each route's model is a trait-object transformer)
+        let ds = synthetic_dataset(240, 9);
+        let mut r = ModelRouter::new();
+        for est in EstimatorConfig::battery(0.01) {
+            let cfg = PipelineConfig {
+                estimator: est,
+                svm: LinearSvmConfig::default(),
+                ordering: FeatureOrdering::Pearson,
+            };
+            let m = Arc::new(train_pipeline(&cfg, &ds).unwrap());
+            r.register(est.name(), m, BatchPolicy::default());
+        }
+        assert_eq!(r.len(), 4);
+        let row = ds.x.row(0).to_vec();
+        for key in r.keys() {
+            assert!(r.predict(&key, row.clone()).is_ok(), "route {key}");
+        }
     }
 
     fn router() -> ModelRouter {

@@ -278,15 +278,16 @@ pub fn stress(service: &TransformService, rows: Vec<Vec<f64>>, threads: usize) -
 mod tests {
     use super::*;
     use crate::data::synthetic::synthetic_dataset;
+    use crate::estimator::EstimatorConfig;
     use crate::oavi::OaviConfig;
     use crate::ordering::FeatureOrdering;
-    use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+    use crate::pipeline::{train_pipeline, PipelineConfig};
     use crate::svm::linear::LinearSvmConfig;
 
     fn trained_model() -> Arc<PipelineModel> {
         let ds = synthetic_dataset(300, 21);
         let cfg = PipelineConfig {
-            method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01)),
             svm: LinearSvmConfig::default(),
             ordering: FeatureOrdering::Pearson,
         };

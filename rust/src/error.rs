@@ -1,51 +1,89 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — `thiserror` is unavailable in
+//! the offline build environment, and the enum is small enough that the
+//! derive buys nothing.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by avi-scale.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum AviError {
     /// A linear-algebra precondition failed (singular matrix, dimension
     /// mismatch, non-PSD Gram, …).
-    #[error("linear algebra error: {0}")]
     Linalg(String),
 
     /// The IHB Schur complement was non-positive — the appended column is
     /// (numerically) in the span of the existing evaluation matrix.  OAVI
     /// recovers by rebuilding the inverse via Cholesky with jitter.
-    #[error("IHB append failed: Schur complement {0:.3e} <= 0")]
     SchurNotPositive(f64),
 
     /// A convex solver failed to make progress / hit a numerical issue.
-    #[error("solver error: {0}")]
     Solver(String),
 
     /// Invalid configuration.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Dataset construction/loading problem.
-    #[error("data error: {0}")]
     Data(String),
 
     /// PJRT runtime problems (missing artifact, compile/execute failure).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator/service failure (channel closed, worker panicked).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// IO.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for AviError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AviError::Linalg(m) => write!(f, "linear algebra error: {m}"),
+            AviError::SchurNotPositive(s) => {
+                write!(f, "IHB append failed: Schur complement {s:.3e} <= 0")
+            }
+            AviError::Solver(m) => write!(f, "solver error: {m}"),
+            AviError::Config(m) => write!(f, "config error: {m}"),
+            AviError::Data(m) => write!(f, "data error: {m}"),
+            AviError::Runtime(m) => write!(f, "runtime error: {m}"),
+            AviError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            AviError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AviError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AviError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for AviError {
+    fn from(e: std::io::Error) -> Self {
+        AviError::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, AviError>;
 
-impl From<anyhow::Error> for AviError {
-    fn from(e: anyhow::Error) -> Self {
-        AviError::Runtime(format!("{e:#}"))
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_variants() {
+        assert_eq!(AviError::Config("bad psi".into()).to_string(), "config error: bad psi");
+        assert_eq!(
+            AviError::SchurNotPositive(-1.5e-3).to_string(),
+            "IHB append failed: Schur complement -1.500e-3 <= 0"
+        );
+        let io: AviError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("io error"));
     }
 }

@@ -1,0 +1,594 @@
+//! The estimator layer: one typed fit/transform surface for every
+//! generator-constructing algorithm (OAVI family, ABM, VCA).
+//!
+//! The paper's experiments treat the constructors as interchangeable
+//! front-ends to the same (FT) feature transform + ℓ1-SVM pipeline
+//! (Tables 2–3), and the CG-family follow-up swaps oracles under an
+//! identical outer loop.  This module is that interchangeability made
+//! typed:
+//!
+//! * [`VanishingIdealEstimator`] — the algorithm: `fit` one class's data
+//!   through an explicit [`ComputeBackend`] and return a fitted model.
+//!   `Oavi`, `Abm`, and `Vca` all implement it, so every call site
+//!   (pipeline, grid search, serving, CLI) is algorithm-agnostic.
+//! * [`FittedModel`] — the artifact: the (FT) feature-block producer plus
+//!   the Table-3 statistics and a persistence payload.  Implementations
+//!   wrap [`GeneratorSet`] (monomial-aware methods) and [`VcaModel`]
+//!   (the polynomial op-DAG).
+//! * [`FitReport`] — unified fit diagnostics: the method name, output
+//!   sizes, wall-clock, and the raw [`FitStats`] counters (a superset of
+//!   the old OAVI-only surface — ABM/VCA report wall-clock too).
+//! * [`EstimatorConfig`] — the typed, copyable configuration that builds
+//!   estimators; [`EstimatorBuilder`] constructs it from CLI-style method
+//!   names.  This replaces the old untyped method enum and the
+//!   per-algorithm `match` arms that used to live at every layer.
+//!
+//! Adding a constructor (e.g. the gradient-boosted AVI of Kera &
+//! Hasegawa) means implementing the two traits and registering the
+//! config variant here — no pipeline, serving, or CLI changes.
+//!
+//! Persistence for fitted models and whole pipelines lives in
+//! [`persist`] (one versioned envelope for every estimator).
+
+pub mod persist;
+
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::baselines::abm::{Abm, AbmConfig};
+use crate::baselines::vca::{Vca, VcaConfig, VcaModel};
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+use crate::oavi::{FitStats, Oavi, OaviConfig};
+use crate::poly::poly::GeneratorSet;
+use crate::util::timer::Timer;
+
+/// Default ψ hyper-grid (log-spaced around the paper's 0.005 working
+/// point) — [`VanishingIdealEstimator::hyper_grid`]'s default answer.
+pub const PSI_GRID: &[f64] = &[0.05, 0.01, 0.005, 0.001];
+
+/// Unified fit diagnostics — the cross-estimator superset of the OAVI
+/// driver's [`FitStats`].
+#[derive(Clone, Debug, Default)]
+pub struct FitReport {
+    /// The paper's method name (CGAVI-IHB, ABM, VCA, …).
+    pub name: String,
+    /// |G| — number of (approximately) vanishing generators.
+    pub n_generators: usize,
+    /// |O| (monomial-aware) or Σ_d |F_d| (VCA) — the non-vanishing side.
+    pub n_order_terms: usize,
+    /// Wall-clock seconds of the fit, measured uniformly at the
+    /// estimator boundary for every algorithm.
+    pub wall_secs: f64,
+    /// Raw algorithm counters (oracle calls, solver iterations, …).
+    pub stats: FitStats,
+}
+
+impl FitReport {
+    /// The paper's method name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// |G| + |O| — the paper's central size statistic.
+    pub fn total_size(&self) -> usize {
+        self.n_generators + self.n_order_terms
+    }
+}
+
+/// A fitted vanishing-ideal model: the per-class (FT) feature-block
+/// producer plus reporting statistics and a persistence payload.
+///
+/// `Send + Sync` so fitted pipelines can be shared across serving
+/// threads (the models are plain data; only backends are thread-pinned).
+pub trait FittedModel: Send + Sync + std::fmt::Debug {
+    /// |g(z)| for every generator over new data — the m × |G| feature
+    /// block — through an explicit streaming backend.
+    fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix;
+
+    /// Fit diagnostics (name, sizes, wall-clock, counters).
+    fn report(&self) -> &FitReport;
+
+    /// |G| (feature dimension contributed by this class).
+    fn n_generators(&self) -> usize {
+        self.report().n_generators
+    }
+
+    /// |G| + |O| — Table 3's size statistic.
+    fn total_size(&self) -> usize {
+        self.report().total_size()
+    }
+
+    /// Average generator degree (Table 3 "Degree").
+    fn avg_degree(&self) -> f64;
+
+    /// (SPAR) as a pooled `(zero_count, total_count)` pair so callers can
+    /// aggregate across classes without averaging ratios.
+    fn sparsity_pool(&self) -> (f64, f64);
+
+    /// Stable payload discriminator for the persistence envelope.
+    fn payload_kind(&self) -> &'static str;
+
+    /// Serialize the transform-relevant state as the envelope payload.
+    fn payload_json(&self) -> String;
+
+    /// Clone through the trait object (fitted models are plain data).
+    fn clone_box(&self) -> Box<dyn FittedModel>;
+}
+
+impl Clone for Box<dyn FittedModel> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// [`FittedModel::transform_with`] on the native reference backend.
+pub fn transform_native(model: &dyn FittedModel, x: &Matrix) -> Matrix {
+    model.transform_with(x, &NativeBackend)
+}
+
+/// A generator-constructing algorithm, generic over the streaming
+/// compute backend: the single fit surface of the crate.
+pub trait VanishingIdealEstimator {
+    /// The paper's method name (CGAVI-IHB, ABM, VCA, …).
+    fn name(&self) -> String;
+
+    /// Monomial-aware methods consume the Pearson feature ordering; VCA
+    /// is ordering-agnostic (§5).
+    fn is_monomial_aware(&self) -> bool {
+        true
+    }
+
+    /// The ψ grid this estimator wants cross-validated (paper §6.2).
+    fn hyper_grid(&self) -> &'static [f64] {
+        PSI_GRID
+    }
+
+    /// Fit one class's data (m×n, expected in [0,1]) through `backend`.
+    fn fit(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Result<Box<dyn FittedModel>>;
+}
+
+// ---------------------------------------------------------------------
+// Fitted-model wrappers
+// ---------------------------------------------------------------------
+
+/// Monomial-aware fitted model (OAVI family, ABM): a [`GeneratorSet`]
+/// plus its report.
+#[derive(Clone, Debug)]
+pub struct FittedGeneratorSet {
+    pub set: GeneratorSet,
+    pub report: FitReport,
+}
+
+impl FittedModel for FittedGeneratorSet {
+    fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
+        self.set.transform_with(x, backend)
+    }
+
+    fn report(&self) -> &FitReport {
+        &self.report
+    }
+
+    fn avg_degree(&self) -> f64 {
+        self.set.avg_degree()
+    }
+
+    fn sparsity_pool(&self) -> (f64, f64) {
+        let (mut gz, mut ge) = (0usize, 0usize);
+        for g in &self.set.generators {
+            gz += g.n_zero_coeffs();
+            ge += g.n_coeffs();
+        }
+        (gz as f64, ge as f64)
+    }
+
+    fn payload_kind(&self) -> &'static str {
+        persist::KIND_GENERATOR_SET
+    }
+
+    fn payload_json(&self) -> String {
+        persist::generator_set_to_json(&self.set)
+    }
+
+    fn clone_box(&self) -> Box<dyn FittedModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Monomial-agnostic fitted model: VCA's polynomial op-DAG plus report.
+#[derive(Clone, Debug)]
+pub struct FittedVca {
+    pub model: VcaModel,
+    pub report: FitReport,
+}
+
+impl FittedModel for FittedVca {
+    fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
+        self.model.transform_with(x, backend)
+    }
+
+    fn report(&self) -> &FitReport {
+        &self.report
+    }
+
+    fn avg_degree(&self) -> f64 {
+        self.model.avg_degree()
+    }
+
+    fn sparsity_pool(&self) -> (f64, f64) {
+        // VCA's SPAR is already a pooled ratio; weight by its size
+        let ge = self.model.n_generators().max(1) as f64;
+        (self.model.sparsity() * ge, ge)
+    }
+
+    fn payload_kind(&self) -> &'static str {
+        persist::KIND_VCA_DAG
+    }
+
+    fn payload_json(&self) -> String {
+        persist::vca_to_json(&self.model)
+    }
+
+    fn clone_box(&self) -> Box<dyn FittedModel> {
+        Box::new(self.clone())
+    }
+}
+
+fn report_for(
+    name: String,
+    n_generators: usize,
+    n_order_terms: usize,
+    stats: FitStats,
+) -> FitReport {
+    FitReport { name, n_generators, n_order_terms, wall_secs: 0.0, stats }
+}
+
+// ---------------------------------------------------------------------
+// Trait impls for the three algorithms
+// ---------------------------------------------------------------------
+
+impl VanishingIdealEstimator for Oavi {
+    fn name(&self) -> String {
+        self.config().name()
+    }
+
+    fn fit(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Result<Box<dyn FittedModel>> {
+        let timer = Timer::start();
+        let model = self.fit_with_backend(x, backend)?;
+        let mut report = report_for(
+            self.config().name(),
+            model.generators.len(),
+            model.o_terms.len(),
+            model.stats.clone(),
+        );
+        report.wall_secs = timer.secs();
+        Ok(Box::new(FittedGeneratorSet { set: model.generator_set(), report }))
+    }
+}
+
+impl VanishingIdealEstimator for Abm {
+    fn name(&self) -> String {
+        "ABM".into()
+    }
+
+    fn fit(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Result<Box<dyn FittedModel>> {
+        let timer = Timer::start();
+        let model = self.fit_with_backend(x, backend)?;
+        let mut report = report_for(
+            self.name(),
+            model.generators.len(),
+            model.o_terms.len(),
+            model.stats.clone(),
+        );
+        report.wall_secs = timer.secs();
+        Ok(Box::new(FittedGeneratorSet { set: model.generator_set(), report }))
+    }
+}
+
+impl VanishingIdealEstimator for Vca {
+    fn name(&self) -> String {
+        "VCA".into()
+    }
+
+    fn is_monomial_aware(&self) -> bool {
+        false
+    }
+
+    fn fit(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Result<Box<dyn FittedModel>> {
+        let timer = Timer::start();
+        let model = self.fit_with_backend(x, backend)?;
+        let n_f: usize = model.f_sets.iter().map(|f| f.len()).sum();
+        let mut report = report_for(self.name(), model.n_generators(), n_f, model.stats.clone());
+        report.wall_secs = timer.secs();
+        Ok(Box::new(FittedVca { model, report }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed configuration
+// ---------------------------------------------------------------------
+
+/// Typed, copyable estimator configuration — the value that travels
+/// through grid search jobs, protocol structs, and the CLI, and builds
+/// the trait object at fit time.
+#[derive(Clone, Copy, Debug)]
+pub enum EstimatorConfig {
+    Oavi(OaviConfig),
+    Abm(AbmConfig),
+    Vca(VcaConfig),
+}
+
+impl EstimatorConfig {
+    /// The paper's method name (CGAVI-IHB, ABM, VCA, …).
+    pub fn name(&self) -> String {
+        match self {
+            EstimatorConfig::Oavi(cfg) => cfg.name(),
+            EstimatorConfig::Abm(_) => "ABM".into(),
+            EstimatorConfig::Vca(_) => "VCA".into(),
+        }
+    }
+
+    /// The vanishing parameter ψ.
+    pub fn psi(&self) -> f64 {
+        match self {
+            EstimatorConfig::Oavi(cfg) => cfg.psi,
+            EstimatorConfig::Abm(cfg) => cfg.psi,
+            EstimatorConfig::Vca(cfg) => cfg.psi,
+        }
+    }
+
+    /// Same method with a different ψ (grid search).
+    pub fn with_psi(&self, psi: f64) -> EstimatorConfig {
+        let mut out = *self;
+        match &mut out {
+            EstimatorConfig::Oavi(cfg) => cfg.psi = psi,
+            EstimatorConfig::Abm(cfg) => cfg.psi = psi,
+            EstimatorConfig::Vca(cfg) => cfg.psi = psi,
+        }
+        out
+    }
+
+    /// Monomial-aware methods need the Pearson ordering; VCA is agnostic.
+    pub fn is_monomial_aware(&self) -> bool {
+        !matches!(self, EstimatorConfig::Vca(_))
+    }
+
+    /// Validate invariants before fitting.
+    pub fn validate(&self) -> Result<()> {
+        let psi = self.psi();
+        if psi < 0.0 || !psi.is_finite() {
+            return Err(AviError::Config(format!("psi must be ≥ 0, got {psi}")));
+        }
+        match self {
+            EstimatorConfig::Oavi(cfg) => cfg.validate(),
+            EstimatorConfig::Abm(_) | EstimatorConfig::Vca(_) => Ok(()),
+        }
+    }
+
+    /// Build the estimator trait object.
+    pub fn build(&self) -> Box<dyn VanishingIdealEstimator> {
+        match self {
+            EstimatorConfig::Oavi(cfg) => Box::new(Oavi::new(*cfg)),
+            EstimatorConfig::Abm(cfg) => Box::new(Abm::new(*cfg)),
+            EstimatorConfig::Vca(cfg) => Box::new(Vca::new(*cfg)),
+        }
+    }
+
+    /// Convenience: build + fit in one call.
+    pub fn fit(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+    ) -> Result<Box<dyn FittedModel>> {
+        self.validate()?;
+        self.build().fit(x, backend)
+    }
+
+    /// Parse a CLI-style method name (`cgavi-ihb`, `abm`, `vca`, …).
+    pub fn parse(method: &str, psi: f64) -> Result<EstimatorConfig> {
+        EstimatorBuilder::new(method).psi(psi).build()
+    }
+
+    /// Every registered method name, in CLI/usage order.
+    pub fn known_methods() -> &'static [&'static str] {
+        &[
+            "cgavi-ihb",
+            "agdavi-ihb",
+            "bpcgavi-wihb",
+            "bpcgavi",
+            "pcgavi",
+            "cgavi",
+            "abm",
+            "vca",
+        ]
+    }
+
+    /// The Table-3 method battery at one ψ: the paper's headline OAVI
+    /// variants plus both baselines (mixed-method grid-search input).
+    pub fn battery(psi: f64) -> Vec<EstimatorConfig> {
+        vec![
+            EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(psi)),
+            EstimatorConfig::Oavi(OaviConfig::bpcgavi_wihb(psi)),
+            EstimatorConfig::Abm(AbmConfig::new(psi)),
+            EstimatorConfig::Vca(VcaConfig::new(psi)),
+        ]
+    }
+}
+
+/// Builder from CLI-style method names — the typed replacement for the
+/// string `match` that used to live in `main.rs`.
+#[derive(Clone, Debug)]
+pub struct EstimatorBuilder {
+    method: String,
+    psi: f64,
+    tau: Option<f64>,
+    max_degree: Option<u32>,
+}
+
+impl EstimatorBuilder {
+    /// Start from a method name (see [`EstimatorConfig::known_methods`]).
+    pub fn new(method: impl Into<String>) -> Self {
+        EstimatorBuilder { method: method.into(), psi: 0.005, tau: None, max_degree: None }
+    }
+
+    /// Vanishing parameter ψ (default 0.005, the paper's working point).
+    pub fn psi(mut self, psi: f64) -> Self {
+        self.psi = psi;
+        self
+    }
+
+    /// ℓ1 bound τ (OAVI family only; ignored by ABM/VCA).
+    pub fn tau(mut self, tau: f64) -> Self {
+        self.tau = Some(tau);
+        self
+    }
+
+    /// Border-degree safety cap.
+    pub fn max_degree(mut self, d: u32) -> Self {
+        self.max_degree = Some(d);
+        self
+    }
+
+    /// Resolve the name and produce a validated config.
+    pub fn build(self) -> Result<EstimatorConfig> {
+        let psi = self.psi;
+        let mut cfg = match self.method.as_str() {
+            "cgavi-ihb" => EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(psi)),
+            "agdavi-ihb" => EstimatorConfig::Oavi(OaviConfig::agdavi_ihb(psi)),
+            "bpcgavi-wihb" => EstimatorConfig::Oavi(OaviConfig::bpcgavi_wihb(psi)),
+            "bpcgavi" => EstimatorConfig::Oavi(OaviConfig::bpcgavi(psi)),
+            "pcgavi" => EstimatorConfig::Oavi(OaviConfig::pcgavi(psi)),
+            "cgavi" => EstimatorConfig::Oavi(OaviConfig::cgavi(psi)),
+            "abm" => EstimatorConfig::Abm(AbmConfig::new(psi)),
+            "vca" => EstimatorConfig::Vca(VcaConfig::new(psi)),
+            other => {
+                return Err(AviError::Config(format!(
+                    "unknown method '{other}' (known: {})",
+                    EstimatorConfig::known_methods().join(", ")
+                )))
+            }
+        };
+        match &mut cfg {
+            EstimatorConfig::Oavi(c) => {
+                if let Some(tau) = self.tau {
+                    c.tau = tau;
+                }
+                if let Some(d) = self.max_degree {
+                    c.max_degree = d;
+                }
+            }
+            EstimatorConfig::Abm(c) => {
+                if let Some(d) = self.max_degree {
+                    c.max_degree = d;
+                }
+            }
+            EstimatorConfig::Vca(c) => {
+                if let Some(d) = self.max_degree {
+                    c.max_degree = d;
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn parabola(m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(m, 2);
+        for i in 0..m {
+            let t = rng.uniform();
+            x.set(i, 0, t);
+            x.set(i, 1, t * t);
+        }
+        x
+    }
+
+    #[test]
+    fn every_estimator_fits_through_the_trait() {
+        let x = parabola(150, 1);
+        for cfg in EstimatorConfig::battery(0.01) {
+            let model = cfg.fit(&x, &NativeBackend).unwrap();
+            assert!(model.n_generators() > 0, "{}: no generators", cfg.name());
+            assert!(model.total_size() >= model.n_generators());
+            let t = transform_native(model.as_ref(), &x);
+            assert_eq!(t.rows(), 150);
+            assert_eq!(t.cols(), model.n_generators());
+            let report = model.report();
+            assert_eq!(report.name(), cfg.name());
+            assert!(report.wall_secs > 0.0, "{}: no wall-clock", cfg.name());
+            assert_eq!(report.total_size(), model.total_size());
+        }
+    }
+
+    #[test]
+    fn builder_parses_every_known_method() {
+        for name in EstimatorConfig::known_methods() {
+            let cfg = EstimatorConfig::parse(name, 0.01).unwrap();
+            assert_eq!(cfg.psi(), 0.01);
+            let est = cfg.build();
+            assert!(!est.name().is_empty());
+            assert!(!est.hyper_grid().is_empty());
+        }
+        assert!(EstimatorConfig::parse("nope", 0.01).is_err());
+    }
+
+    #[test]
+    fn builder_overrides_apply() {
+        let cfg = EstimatorBuilder::new("cgavi-ihb").psi(0.02).tau(500.0).build().unwrap();
+        match cfg {
+            EstimatorConfig::Oavi(c) => {
+                assert_eq!(c.psi, 0.02);
+                assert_eq!(c.tau, 500.0);
+            }
+            _ => unreachable!(),
+        }
+        let cfg = EstimatorBuilder::new("vca").psi(0.1).max_degree(3).build().unwrap();
+        match cfg {
+            EstimatorConfig::Vca(c) => {
+                assert_eq!(c.psi, 0.1);
+                assert_eq!(c.max_degree, 3);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn with_psi_rewrites_psi_everywhere() {
+        for cfg in EstimatorConfig::battery(0.1) {
+            assert_eq!(cfg.with_psi(0.03).psi(), 0.03);
+            assert_eq!(cfg.with_psi(0.03).name(), cfg.name());
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_psi() {
+        for cfg in EstimatorConfig::battery(0.01) {
+            assert!(cfg.with_psi(-1.0).validate().is_err());
+            assert!(cfg.with_psi(f64::NAN).validate().is_err());
+            assert!(cfg.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn monomial_awareness_matches_paper() {
+        assert!(EstimatorConfig::parse("cgavi-ihb", 0.01).unwrap().is_monomial_aware());
+        assert!(EstimatorConfig::parse("abm", 0.01).unwrap().is_monomial_aware());
+        assert!(!EstimatorConfig::parse("vca", 0.01).unwrap().is_monomial_aware());
+        assert!(!Vca::new(VcaConfig::new(0.01)).is_monomial_aware());
+        assert!(Abm::new(AbmConfig::new(0.01)).is_monomial_aware());
+    }
+
+    #[test]
+    fn fitted_models_clone_through_the_trait() {
+        let x = parabola(80, 3);
+        let model = EstimatorConfig::parse("abm", 1e-6).unwrap().fit(&x, &NativeBackend).unwrap();
+        let cloned = model.clone_box();
+        let a = transform_native(model.as_ref(), &x);
+        let b = transform_native(cloned.as_ref(), &x);
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -1,0 +1,643 @@
+//! Unified model persistence: ONE versioned envelope for every
+//! estimator, replacing the old parallel `oavi/persist.rs` (generator
+//! sets only) and `pipeline/persist.rs` (monomial-aware pipelines only)
+//! paths.  VCA's op-DAG serializes like everything else.
+//!
+//! Documents are hand-rolled JSON (serde is unavailable offline) with a
+//! versioned header:
+//!
+//! ```json
+//! { "format": "avi-scale-model", "version": 1,
+//!   "estimator": "CGAVI-IHB", "kind": "generator-set",
+//!   "payload": { ... } }
+//! ```
+//!
+//! * `format` discriminates single fitted models
+//!   ([`FORMAT_MODEL`]) from whole pipelines ([`FORMAT_PIPELINE`]).
+//! * `version` gates evolution: unknown versions are rejected loudly
+//!   instead of mis-parsed.
+//! * `kind` selects the payload codec ([`KIND_GENERATOR_SET`] for the
+//!   monomial-aware methods, [`KIND_VCA_DAG`] for VCA) — the one place a
+//!   new estimator registers its serialization.
+//!
+//! Numeric fidelity: floats are emitted with Rust's shortest-round-trip
+//! formatting, so a loaded model transforms **bit-identically** to the
+//! fitted one (pinned by `rust/tests/estimator_conformance.rs`).
+
+use std::fs;
+use std::path::Path;
+
+use crate::baselines::vca::{VcaModel, VcaNode};
+use crate::error::{AviError, Result};
+use crate::estimator::{FitReport, FittedGeneratorSet, FittedModel, FittedVca};
+use crate::pipeline::{FittedTransformer, PipelineModel};
+use crate::poly::eval::{Recipe, TermSet};
+use crate::poly::poly::{Generator, GeneratorSet};
+use crate::svm::linear::{LinearSvm, LinearSvmConfig};
+
+/// Envelope format tag for a single fitted estimator model.
+pub const FORMAT_MODEL: &str = "avi-scale-model";
+/// Envelope format tag for a whole fitted pipeline.
+pub const FORMAT_PIPELINE: &str = "avi-scale-pipeline";
+/// Current envelope version (bump on breaking payload changes).
+pub const VERSION: u64 = 1;
+
+/// Payload codec tag: monomial-aware generator set (OAVI family, ABM).
+pub const KIND_GENERATOR_SET: &str = "generator-set";
+/// Payload codec tag: VCA polynomial op-DAG.
+pub const KIND_VCA_DAG: &str = "vca-dag";
+
+// ---------------------------------------------------------------------
+// Single fitted model
+// ---------------------------------------------------------------------
+
+/// Serialize one fitted model inside the versioned envelope.
+pub fn model_to_json(model: &dyn FittedModel) -> String {
+    format!(
+        "{{\n\"format\": \"{FORMAT_MODEL}\",\n\"version\": {VERSION},\n\
+         \"estimator\": \"{}\",\n\"kind\": \"{}\",\n\"payload\": {}}}\n",
+        model.report().name(),
+        model.payload_kind(),
+        model.payload_json(),
+    )
+}
+
+/// Parse a fitted model back from [`model_to_json`] output.
+pub fn model_from_json(text: &str) -> Result<Box<dyn FittedModel>> {
+    check_header(text, FORMAT_MODEL)?;
+    let estimator = extract_str(text, "\"estimator\":")?;
+    let kind = extract_str(text, "\"kind\":")?;
+    let payload = extract_object(text, "\"payload\":")?;
+    decode_payload(&estimator, &kind, &payload)
+}
+
+/// Save one fitted model to a file.
+pub fn save_model(model: &dyn FittedModel, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    fs::write(path, model_to_json(model))?;
+    Ok(())
+}
+
+/// Load one fitted model from a file.
+pub fn load_model(path: &Path) -> Result<Box<dyn FittedModel>> {
+    model_from_json(&fs::read_to_string(path)?)
+}
+
+fn decode_payload(estimator: &str, kind: &str, payload: &str) -> Result<Box<dyn FittedModel>> {
+    match kind {
+        KIND_GENERATOR_SET => {
+            let set = generator_set_from_json(payload)?;
+            let report = loaded_report(estimator, set.generators.len(), set.o_terms.len());
+            Ok(Box::new(FittedGeneratorSet { set, report }))
+        }
+        KIND_VCA_DAG => {
+            let model = vca_from_json(payload)?;
+            let n_f: usize = model.f_sets.iter().map(|f| f.len()).sum();
+            let report = loaded_report(estimator, model.n_generators(), n_f);
+            Ok(Box::new(FittedVca { model, report }))
+        }
+        other => Err(AviError::Data(format!(
+            "persist: unknown payload kind '{other}' (known: {KIND_GENERATOR_SET}, {KIND_VCA_DAG})"
+        ))),
+    }
+}
+
+/// Report for a loaded model: name and sizes survive persistence; the
+/// fit-time counters and wall-clock do not.
+fn loaded_report(name: &str, n_generators: usize, n_order_terms: usize) -> FitReport {
+    FitReport {
+        name: name.to_string(),
+        n_generators,
+        n_order_terms,
+        ..FitReport::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Whole pipeline
+// ---------------------------------------------------------------------
+
+/// Serialize a trained pipeline (ordering permutation + per-class models
+/// + SVM heads) inside the versioned envelope.  Every estimator —
+/// including VCA, which the old path rejected — round-trips.
+pub fn pipeline_to_json(model: &PipelineModel) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n\"format\": \"{FORMAT_PIPELINE}\",\n\"version\": {VERSION},\n"));
+    out.push_str(&format!("\"method\": \"{}\",\n", model.transformer.method_name));
+    out.push_str(&format!(
+        "\"perm\": [{}],\n",
+        model.perm.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(",")
+    ));
+    out.push_str(&format!("\"n_classes\": {},\n", model.n_classes));
+    out.push_str("\"classes\": [\n");
+    for (i, cm) in model.transformer.per_class.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&model_to_json(cm.as_ref()));
+    }
+    out.push_str("\n],\n");
+    out.push_str("\"svm\": {\n");
+    out.push_str(&format!("\"lambda\": {:e},\n", model.svm.config.lambda));
+    out.push_str("\"heads\": [\n");
+    for (hi, (w, b)) in model.svm.weights.iter().enumerate() {
+        if hi > 0 {
+            out.push_str(",\n");
+        }
+        let ws: Vec<String> = w.iter().map(|v| format!("{v:e}")).collect();
+        out.push_str(&format!("{{\"bias\": {b:e}, \"w\": [{}]}}", ws.join(",")));
+    }
+    out.push_str("\n]\n}\n}\n");
+    out
+}
+
+/// Parse a pipeline back from [`pipeline_to_json`] output.
+pub fn pipeline_from_json(text: &str) -> Result<PipelineModel> {
+    check_header(text, FORMAT_PIPELINE)?;
+    let method_name = extract_str(text, "\"method\":")?;
+    let perm: Vec<usize> = parse_num_list(&extract_array(text, "\"perm\":")?)?
+        .into_iter()
+        .map(|v| v as usize)
+        .collect();
+    let n_classes = extract_f64(text, "\"n_classes\":")? as usize;
+
+    let classes_src = extract_array(text, "\"classes\":")?;
+    let mut per_class: Vec<Box<dyn FittedModel>> = Vec::new();
+    for doc in split_objects(&classes_src) {
+        per_class.push(model_from_json(doc)?);
+    }
+    if per_class.len() != n_classes {
+        return Err(AviError::Data(format!(
+            "persist: {} classes parsed, expected {n_classes}",
+            per_class.len()
+        )));
+    }
+
+    let svm_pos = text
+        .find("\"svm\":")
+        .ok_or_else(|| AviError::Data("persist: missing svm".into()))?;
+    let svm_src = &text[svm_pos..];
+    let lambda = extract_f64(svm_src, "\"lambda\":")?;
+    let mut weights = Vec::new();
+    for head in split_objects(&extract_array(svm_src, "\"heads\":")?) {
+        let bias = extract_f64(head, "\"bias\":")?;
+        let w = parse_num_list(&extract_array(head, "\"w\":")?)?;
+        weights.push((w, bias));
+    }
+    if weights.is_empty() {
+        return Err(AviError::Data("persist: no svm heads".into()));
+    }
+    let svm = LinearSvm {
+        weights,
+        n_classes,
+        config: LinearSvmConfig { lambda, ..Default::default() },
+        iters: vec![],
+    };
+    Ok(PipelineModel {
+        perm,
+        transformer: FittedTransformer { method_name, per_class },
+        svm,
+        n_classes,
+    })
+}
+
+/// Save a pipeline to a file.
+pub fn save(model: &PipelineModel, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    fs::write(path, pipeline_to_json(model))?;
+    Ok(())
+}
+
+/// Load a pipeline from a file.
+pub fn load(path: &Path) -> Result<PipelineModel> {
+    pipeline_from_json(&fs::read_to_string(path)?)
+}
+
+// ---------------------------------------------------------------------
+// Payload codecs
+// ---------------------------------------------------------------------
+
+/// Generator-set payload: the order ideal's recipes (not raw exponent
+/// vectors), so a loaded model evaluates through exactly the same
+/// one-multiply-per-term path as a freshly fitted one.
+pub fn generator_set_to_json(gs: &GeneratorSet) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("\"n_vars\": {},\n", gs.o_terms.n_vars()));
+    // recipes: [[-1,-1]] for One, [parent, var] otherwise
+    out.push_str("\"o_recipes\": [");
+    for i in 0..gs.o_terms.len() {
+        if i > 0 {
+            out.push(',');
+        }
+        match gs.o_terms.recipe(i) {
+            Recipe::One => out.push_str("[-1,-1]"),
+            Recipe::Product { parent, var } => out.push_str(&format!("[{parent},{var}]")),
+        }
+    }
+    out.push_str("],\n\"generators\": [\n");
+    for (gi, g) in gs.generators.iter().enumerate() {
+        if gi > 0 {
+            out.push_str(",\n");
+        }
+        let coeffs: Vec<String> = g.coeffs.iter().map(|c| format!("{c:e}")).collect();
+        out.push_str(&format!(
+            "{{\"parent\": {}, \"var\": {}, \"mse\": {:e}, \"coeffs\": [{}]}}",
+            g.leading_parent,
+            g.leading_var,
+            g.mse,
+            coeffs.join(",")
+        ));
+    }
+    out.push_str("\n]\n}");
+    out
+}
+
+/// Parse a generator set back from [`generator_set_to_json`] output.
+pub fn generator_set_from_json(text: &str) -> Result<GeneratorSet> {
+    let n_vars = as_index(extract_f64(text, "\"n_vars\":")?)?;
+    let recipes_src = extract_array(text, "\"o_recipes\":")?;
+    let mut o = TermSet::with_one(n_vars);
+    let pairs = parse_pairs(&recipes_src)?;
+    if pairs.first() != Some(&(-1, -1)) {
+        return Err(AviError::Data("persist: first recipe must be the One term".into()));
+    }
+    for (i, pair) in pairs.into_iter().enumerate() {
+        match pair {
+            (-1, -1) => {
+                if i != 0 {
+                    return Err(AviError::Data("persist: One recipe not first".into()));
+                }
+            }
+            (p, v) => {
+                if p < 0 || v < 0 {
+                    return Err(AviError::Data("persist: bad recipe".into()));
+                }
+                o.push_product(p as usize, v as usize)?;
+            }
+        }
+    }
+    let gens_src = extract_array(text, "\"generators\":")?;
+    let mut generators = Vec::new();
+    for obj in split_objects(&gens_src) {
+        let parent = as_index(extract_f64(obj, "\"parent\":")?)?;
+        let var = as_index(extract_f64(obj, "\"var\":")?)?;
+        let mse = extract_f64(obj, "\"mse\":")?;
+        let coeffs = parse_num_list(&extract_array(obj, "\"coeffs\":")?)?;
+        if parent >= o.len() || var >= n_vars {
+            return Err(AviError::Data("persist: leading recipe out of range".into()));
+        }
+        let leading = o.terms()[parent].times_var(var);
+        generators.push(Generator {
+            coeffs,
+            leading,
+            leading_parent: parent,
+            leading_var: var,
+            mse,
+        });
+    }
+    Ok(GeneratorSet { o_terms: o, generators })
+}
+
+/// VCA payload: each op-DAG node as a flat numeric record whose first
+/// entry is the variant tag — `[0]` One, `[1, j]` Feature, `[2, a, b]`
+/// Product, `[3, w0, id0, w1, id1, …]` LinComb — plus `n_vars` so loads
+/// can bound every `Feature` index against the fitted data dimension.
+pub fn vca_to_json(model: &VcaModel) -> String {
+    let mut out = format!("{{\n\"n_vars\": {},\n\"nodes\": [", model.n_vars());
+    for (i, node) in model.nodes().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        match node {
+            VcaNode::One => out.push_str("[0]"),
+            VcaNode::Feature(j) => out.push_str(&format!("[1,{j}]")),
+            VcaNode::Product(a, b) => out.push_str(&format!("[2,{a},{b}]")),
+            VcaNode::LinComb(terms) => {
+                out.push_str("[3");
+                for (w, id) in terms {
+                    out.push_str(&format!(",{w:e},{id}"));
+                }
+                out.push(']');
+            }
+        }
+    }
+    out.push_str("],\n\"degrees\": [");
+    let degs: Vec<String> = model.degrees().iter().map(|d| d.to_string()).collect();
+    out.push_str(&degs.join(","));
+    out.push_str("],\n\"vanishing\": [");
+    let vans: Vec<String> = model.vanishing.iter().map(|v| v.to_string()).collect();
+    out.push_str(&vans.join(","));
+    out.push_str("],\n\"f_sets\": [");
+    for (i, f) in model.f_sets.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let ids: Vec<String> = f.iter().map(|v| v.to_string()).collect();
+        out.push_str(&format!("[{}]", ids.join(",")));
+    }
+    out.push_str("]\n}");
+    out
+}
+
+/// Parse a VCA model back from [`vca_to_json`] output.
+pub fn vca_from_json(text: &str) -> Result<VcaModel> {
+    let n_vars = as_index(extract_f64(text, "\"n_vars\":")?)?;
+    let node_rows = parse_nested_lists(&extract_array(text, "\"nodes\":")?)?;
+    let mut nodes = Vec::with_capacity(node_rows.len());
+    for row in &node_rows {
+        let tag = *row.first().ok_or_else(|| AviError::Data("persist: empty node".into()))?;
+        let node = match tag as i64 {
+            0 if row.len() == 1 => VcaNode::One,
+            1 if row.len() == 2 => VcaNode::Feature(as_index(row[1])?),
+            2 if row.len() == 3 => VcaNode::Product(as_index(row[1])?, as_index(row[2])?),
+            3 if row.len() % 2 == 1 => VcaNode::LinComb(
+                row[1..]
+                    .chunks_exact(2)
+                    .map(|c| Ok((c[0], as_index(c[1])?)))
+                    .collect::<Result<_>>()?,
+            ),
+            _ => {
+                return Err(AviError::Data(format!("persist: malformed VCA node {row:?}")));
+            }
+        };
+        nodes.push(node);
+    }
+    let degrees: Vec<u32> = parse_num_list(&extract_array(text, "\"degrees\":")?)?
+        .into_iter()
+        .map(|v| as_index(v).map(|i| i as u32))
+        .collect::<Result<_>>()?;
+    let vanishing: Vec<usize> = parse_num_list(&extract_array(text, "\"vanishing\":")?)?
+        .into_iter()
+        .map(as_index)
+        .collect::<Result<_>>()?;
+    let f_sets: Vec<Vec<usize>> = parse_nested_lists(&extract_array(text, "\"f_sets\":")?)?
+        .into_iter()
+        .map(|f| f.into_iter().map(as_index).collect::<Result<Vec<usize>>>())
+        .collect::<Result<_>>()?;
+    VcaModel::from_parts(nodes, vanishing, f_sets, degrees, n_vars)
+}
+
+/// Strict f64 → index conversion: rejects negative, fractional, and
+/// non-finite values instead of saturating them into valid-looking ids
+/// (corrupt payloads must fail the load, not mutate the model).
+fn as_index(v: f64) -> Result<usize> {
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+        return Err(AviError::Data(format!("persist: '{v}' is not a valid index")));
+    }
+    Ok(v as usize)
+}
+
+// ---------------------------------------------------------------------
+// Hand-rolled JSON helpers
+// ---------------------------------------------------------------------
+
+/// Validate the envelope header: the format tag and a known version.
+fn check_header(text: &str, expected_format: &str) -> Result<()> {
+    let format = extract_str(text, "\"format\":")
+        .map_err(|_| AviError::Data("persist: missing envelope header".into()))?;
+    if format != expected_format {
+        return Err(AviError::Data(format!(
+            "persist: format '{format}', expected '{expected_format}'"
+        )));
+    }
+    let version = extract_f64(text, "\"version\":")? as u64;
+    if version != VERSION {
+        return Err(AviError::Data(format!(
+            "persist: unsupported envelope version {version} (supported: {VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+fn extract_str(text: &str, key: &str) -> Result<String> {
+    let pos = text
+        .find(key)
+        .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
+    let rest = &text[pos + key.len()..];
+    let q1 = rest
+        .find('"')
+        .ok_or_else(|| AviError::Data(format!("persist: {key} not a string")))?;
+    let q2 = rest[q1 + 1..]
+        .find('"')
+        .ok_or_else(|| AviError::Data(format!("persist: unterminated {key}")))?;
+    Ok(rest[q1 + 1..q1 + 1 + q2].to_string())
+}
+
+fn extract_f64(text: &str, key: &str) -> Result<f64> {
+    let pos = text
+        .find(key)
+        .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
+    let rest = &text[pos + key.len()..];
+    let end = rest.find([',', '}', '\n', ']']).unwrap_or(rest.len());
+    rest[..end]
+        .trim()
+        .parse::<f64>()
+        .map_err(|e| AviError::Data(format!("persist: {key} parse: {e}")))
+}
+
+/// Contents of the depth-matched `[…]` array after `key`.
+fn extract_array(text: &str, key: &str) -> Result<String> {
+    extract_delimited(text, key, '[', ']')
+}
+
+/// The depth-matched `{…}` object after `key`, braces included.
+fn extract_object(text: &str, key: &str) -> Result<String> {
+    let inner = extract_delimited(text, key, '{', '}')?;
+    Ok(format!("{{{inner}}}"))
+}
+
+fn extract_delimited(text: &str, key: &str, open: char, close: char) -> Result<String> {
+    let pos = text
+        .find(key)
+        .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
+    let rest = &text[pos + key.len()..];
+    let start = rest
+        .find(open)
+        .ok_or_else(|| AviError::Data(format!("persist: {key} missing '{open}'")))?;
+    let mut depth = 0usize;
+    for (i, ch) in rest[start..].char_indices() {
+        if ch == open {
+            depth += 1;
+        } else if ch == close {
+            depth -= 1;
+            if depth == 0 {
+                return Ok(rest[start + 1..start + i].to_string());
+            }
+        }
+    }
+    Err(AviError::Data(format!("persist: unbalanced {key}")))
+}
+
+/// Split an array body into its top-level `{…}` objects (depth-matched;
+/// the format emits no braces inside strings).
+fn split_objects(src: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in src.char_indices() {
+        match ch {
+            '{' => {
+                if depth == 0 {
+                    start = i;
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    out.push(&src[start..i + 1]);
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn parse_num_list(src: &str) -> Result<Vec<f64>> {
+    if src.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    src.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<f64>()
+                .map_err(|e| AviError::Data(format!("persist: list: {e}")))
+        })
+        .collect()
+}
+
+/// Top-level `[…]` groups of an array body, each parsed as a number list
+/// (empty groups allowed).
+fn parse_nested_lists(src: &str) -> Result<Vec<Vec<f64>>> {
+    let mut out = Vec::new();
+    let mut rest = src;
+    while let Some(start) = rest.find('[') {
+        let end = rest[start..]
+            .find(']')
+            .ok_or_else(|| AviError::Data("persist: unbalanced nested list".into()))?
+            + start;
+        out.push(parse_num_list(&rest[start + 1..end])?);
+        rest = &rest[end + 1..];
+    }
+    Ok(out)
+}
+
+fn parse_pairs(src: &str) -> Result<Vec<(i64, i64)>> {
+    parse_nested_lists(src)?
+        .into_iter()
+        .map(|row| {
+            if row.len() != 2 {
+                return Err(AviError::Data("persist: pair arity".into()));
+            }
+            Ok((row[0] as i64, row[1] as i64))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::estimator::EstimatorConfig;
+    use crate::linalg::dense::Matrix;
+    use crate::util::rng::Rng;
+
+    fn parabola(m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(m, 2);
+        for i in 0..m {
+            let t = rng.uniform();
+            x.set(i, 0, t);
+            x.set(i, 1, t * t);
+        }
+        x
+    }
+
+    #[test]
+    fn model_envelope_roundtrips_every_estimator_bitwise() {
+        let x = parabola(120, 5);
+        let z = parabola(40, 6);
+        for cfg in EstimatorConfig::battery(0.001) {
+            let model = cfg.fit(&x, &NativeBackend).unwrap();
+            let json = model_to_json(model.as_ref());
+            let back = model_from_json(&json)
+                .unwrap_or_else(|e| panic!("{}: {e}", cfg.name()));
+            assert_eq!(back.report().name(), cfg.name());
+            assert_eq!(back.n_generators(), model.n_generators());
+            assert_eq!(back.total_size(), model.total_size());
+            let a = model.transform_with(&z, &NativeBackend);
+            let b = back.transform_with(&z, &NativeBackend);
+            let bits = |m: &Matrix| m.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "{}: transform not bitwise equal", cfg.name());
+        }
+    }
+
+    #[test]
+    fn unknown_version_and_format_are_rejected() {
+        let x = parabola(60, 7);
+        let model = EstimatorConfig::parse("cgavi-ihb", 0.01)
+            .unwrap()
+            .fit(&x, &NativeBackend)
+            .unwrap();
+        let json = model_to_json(model.as_ref());
+        let v99 = json.replace("\"version\": 1", "\"version\": 99");
+        assert!(model_from_json(&v99).is_err());
+        let bad_fmt = json.replace(FORMAT_MODEL, "mystery-format");
+        assert!(model_from_json(&bad_fmt).is_err());
+        let bad_kind = json.replace(KIND_GENERATOR_SET, "alien-kind");
+        assert!(model_from_json(&bad_kind).is_err());
+        assert!(model_from_json("{}").is_err());
+        assert!(model_from_json("not json at all").is_err());
+    }
+
+    #[test]
+    fn model_file_roundtrip() {
+        let x = parabola(80, 8);
+        let model = EstimatorConfig::parse("vca", 1e-4)
+            .unwrap()
+            .fit(&x, &NativeBackend)
+            .unwrap();
+        let path = std::env::temp_dir().join("avi_scale_estimator/vca.json");
+        save_model(model.as_ref(), &path).unwrap();
+        let back = load_model(&path).unwrap();
+        assert_eq!(back.report().name(), "VCA");
+        assert_eq!(back.total_size(), model.total_size());
+    }
+
+    #[test]
+    fn generator_set_payload_rejects_garbage() {
+        assert!(generator_set_from_json("{}").is_err());
+        // bad first recipe
+        assert!(generator_set_from_json(
+            "{\"n_vars\": 2, \"o_recipes\": [[0,0]], \"generators\": []}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn vca_payload_rejects_malformed_nodes() {
+        let doc = |nodes: &str, degrees: &str| {
+            format!(
+                "{{\"n_vars\": 2, \"nodes\": [{nodes}], \"degrees\": [{degrees}], \
+                 \"vanishing\": [], \"f_sets\": []}}"
+            )
+        };
+        assert!(vca_from_json("{}").is_err());
+        // Feature node with wrong arity
+        assert!(vca_from_json(&doc("[1]", "0")).is_err());
+        // forward-referencing product
+        assert!(vca_from_json(&doc("[2,0,1],[0]", "0,0")).is_err());
+        // feature index beyond the stored n_vars
+        assert!(vca_from_json(&doc("[1,5]", "1")).is_err());
+        // negative / fractional ids must be rejected, not coerced
+        assert!(vca_from_json(&doc("[2,-1,0],[0]", "0,0")).is_err());
+        assert!(vca_from_json(&doc("[1,0.5]", "1")).is_err());
+        // well-formed minimal doc parses
+        assert!(vca_from_json(&doc("[0],[1,1]", "0,1")).is_ok());
+    }
+}

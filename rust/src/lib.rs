@@ -9,33 +9,54 @@
 //! the Algorithm-2 classification pipeline, and a serving-style
 //! coordinator.
 //!
-//! ## Architecture (three layers, AOT via PJRT)
+//! ## Architecture (store → backend → estimator → pipeline)
 //!
-//! * **L3 (this crate)** — the framework: algorithm drivers, scheduling,
-//!   CLI, metrics.  Owns the event loop; Python never runs at request
-//!   time.  The data plane is the row-sharded
-//!   [`backend::ColumnStore`] (the only evaluation-column currency)
-//!   executed by a [`backend::ComputeBackend`]:
-//!   [`backend::NativeBackend`] (sequential reference),
-//!   [`backend::ShardedBackend`] (map-reduce over shards, bit-identical
-//!   to native per shard count), or the PJRT path below.
-//! * **L2/L1 (python/compile)** — the numeric hot spots (Gram updates,
-//!   IHB solve/append, the (FT) feature transform) authored in JAX +
-//!   Pallas and AOT-lowered to `artifacts/*.hlo.txt`, which
-//!   [`runtime::PjrtRuntime`] loads and executes through the PJRT C API.
-//!   A bit-compatible native Rust path ([`backend::NativeBackend`]) covers
-//!   shapes beyond the padded artifacts and is the correctness reference.
+//! The crate is four layers, each consuming only the one below:
+//!
+//! * **Store** — [`backend::ColumnStore`]: the row-sharded column-major
+//!   evaluation store, the only column currency above `linalg`.  The
+//!   per-shard kernels (`gram_partial`, `transform_block`) live next to
+//!   it so every execution strategy runs identical per-shard code.
+//! * **Backend** — [`backend::ComputeBackend`]: the execution strategy
+//!   over a store.  [`backend::NativeBackend`] (sequential reference),
+//!   [`backend::ShardedBackend`] (thread-pool map-reduce, bit-identical
+//!   to native per shard count), or [`runtime::XlaBackend`] (AOT
+//!   JAX/Pallas artifacts through the PJRT C API; f32, padded shapes).
+//! * **Estimator** — [`estimator::VanishingIdealEstimator`]: the unified
+//!   fit/transform surface.  OAVI variants ([`oavi::Oavi`]), ABM
+//!   ([`baselines::abm::Abm`]), and VCA ([`baselines::vca::Vca`]) all
+//!   fit through any backend and return
+//!   [`estimator::FittedModel`] trait objects with a uniform
+//!   [`estimator::FitReport`]; the typed
+//!   [`estimator::EstimatorConfig`] builds them, and
+//!   [`estimator::persist`] round-trips every fitted model (and whole
+//!   pipelines) through one versioned envelope.
+//! * **Pipeline & serving** — [`pipeline`] (Algorithm 2: per-class fits
+//!   → (FT) transform → ℓ1 SVM, mixed-method grid search, Table-3
+//!   reporting) and [`coordinator`] (batched transform service, multi-
+//!   model router) are estimator-agnostic: they hold trait objects and
+//!   never branch on the algorithm.
+//!
+//! Numeric hot spots (Gram updates, IHB solve/append, the (FT)
+//! transform) are authored in JAX + Pallas and AOT-lowered to
+//! `artifacts/*.hlo.txt`, which [`runtime::PjrtRuntime`] loads; Python
+//! never runs at request time.  The native Rust path is the bit-level
+//! correctness reference for shapes beyond the padded artifacts.
 //!
 //! ## Quickstart
 //!
 //! ```no_run
+//! use avi_scale::backend::NativeBackend;
 //! use avi_scale::data::synthetic::synthetic_dataset;
-//! use avi_scale::oavi::{Oavi, OaviConfig};
+//! use avi_scale::estimator::EstimatorConfig;
 //!
 //! let ds = synthetic_dataset(10_000, 42);
-//! let cfg = OaviConfig::cgavi_ihb(0.005);
-//! let model = Oavi::new(cfg).fit(&ds.class_matrix(0)).unwrap();
-//! println!("|G| = {}, |O| = {}", model.generators.len(), model.o_terms.len());
+//! // any estimator by name: cgavi-ihb, bpcgavi-wihb, abm, vca, ...
+//! let cfg = EstimatorConfig::parse("cgavi-ihb", 0.005).unwrap();
+//! let model = cfg.fit(&ds.class_matrix(0), &NativeBackend).unwrap();
+//! let report = model.report();
+//! println!("{}: |G| = {}, |G|+|O| = {} in {:.3}s",
+//!     report.name(), report.n_generators, report.total_size(), report.wall_secs);
 //! ```
 
 pub mod backend;
@@ -44,6 +65,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod estimator;
 pub mod linalg;
 pub mod oavi;
 pub mod ordering;

@@ -1,5 +1,11 @@
 //! avi-scale CLI — the L3 leader entrypoint.
 //!
+//! Every generator method goes through the estimator layer
+//! ([`avi_scale::estimator::EstimatorConfig`]): `--method` selects any
+//! estimator by name and the rest of the command is method-agnostic —
+//! fit, pipeline, save/load (all estimators persist, VCA included), and
+//! serve behave identically for OAVI variants, ABM, and VCA.
+//!
 //! Subcommands (hand-rolled parser; clap is unavailable offline):
 //!
 //! ```text
@@ -19,17 +25,14 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use avi_scale::backend::{ComputeBackend, NativeBackend, ShardedBackend};
-use avi_scale::baselines::abm::AbmConfig;
-use avi_scale::baselines::vca::VcaConfig;
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::coordinator::service::{latency_percentiles, BatchPolicy, TransformService};
 use avi_scale::data::{load_registry_dataset, REGISTRY};
 use avi_scale::error::Result;
+use avi_scale::estimator::EstimatorConfig;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::ordering::FeatureOrdering;
-use avi_scale::pipeline::{
-    fit_transformer, train_pipeline_with_backend, GeneratorMethod, PipelineConfig,
-};
+use avi_scale::pipeline::{fit_transformer, train_pipeline_with_backend, PipelineConfig};
 use avi_scale::runtime::{PjrtRuntime, XlaBackend};
 use avi_scale::svm::linear::LinearSvmConfig;
 use avi_scale::util::sci;
@@ -119,20 +122,9 @@ fn opt_usize(opts: &HashMap<String, String>, key: &str, default: usize) -> usize
     opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn method_for(name: &str, psi: f64) -> Result<GeneratorMethod> {
-    Ok(match name {
-        "cgavi-ihb" => GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(psi)),
-        "agdavi-ihb" => GeneratorMethod::Oavi(OaviConfig::agdavi_ihb(psi)),
-        "bpcgavi-wihb" => GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(psi)),
-        "bpcgavi" => GeneratorMethod::Oavi(OaviConfig::bpcgavi(psi)),
-        "pcgavi" => GeneratorMethod::Oavi(OaviConfig::pcgavi(psi)),
-        "cgavi" => GeneratorMethod::Oavi(OaviConfig::cgavi(psi)),
-        "abm" => GeneratorMethod::Abm(AbmConfig::new(psi)),
-        "vca" => GeneratorMethod::Vca(VcaConfig::new(psi)),
-        other => {
-            return Err(avi_scale::AviError::Config(format!("unknown method '{other}'")))
-        }
-    })
+fn estimator_for(opts: &HashMap<String, String>, psi: f64) -> Result<EstimatorConfig> {
+    let name = opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb");
+    EstimatorConfig::parse(name, psi)
 }
 
 fn ordering_for(name: &str) -> FeatureOrdering {
@@ -191,13 +183,14 @@ fn cmd_datasets(_opts: &HashMap<String, String>) -> Result<()> {
 fn cmd_fit(opts: &HashMap<String, String>) -> Result<()> {
     let ds = load(opts)?;
     let psi = opt_f64(opts, "psi", 0.005);
-    let method = method_for(opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb"), psi)?;
+    let estimator = estimator_for(opts, psi)?;
     let backend = backend_for(opts)?;
     let ordering = ordering_for(opts.get("ordering").map(|s| s.as_str()).unwrap_or("pearson"));
+    let est = estimator.build();
     let perm = avi_scale::ordering::order_features(&ds.x, ordering);
     let ordered = ds.permute_features(&perm);
     let t0 = std::time::Instant::now();
-    let transformer = fit_transformer(&method, &ordered, backend.as_ref())?;
+    let transformer = fit_transformer(est.as_ref(), &ordered, backend.as_ref())?;
     let secs = t0.elapsed().as_secs_f64();
     println!("method    = {}", transformer.method_name);
     println!(
@@ -209,6 +202,8 @@ fn cmd_fit(opts: &HashMap<String, String>) -> Result<()> {
     );
     println!("backend   = {}", backend.name());
     println!("fit time  = {}s", sci(secs));
+    let wall: f64 = transformer.per_class.iter().map(|c| c.report().wall_secs).sum();
+    println!("fit wall  = {}s (Σ per-class FitReport)", sci(wall));
     println!("|G|+|O|   = {}", transformer.total_size());
     println!("|G|       = {}", transformer.n_generators());
     println!("avg deg   = {:.2}", transformer.avg_degree());
@@ -219,18 +214,18 @@ fn cmd_fit(opts: &HashMap<String, String>) -> Result<()> {
 fn cmd_pipeline(opts: &HashMap<String, String>) -> Result<()> {
     let ds = load(opts)?;
     let psi = opt_f64(opts, "psi", 0.005);
-    let method = method_for(opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb"), psi)?;
+    let estimator = estimator_for(opts, psi)?;
     let backend = backend_for(opts)?;
     let ordering = ordering_for(opts.get("ordering").map(|s| s.as_str()).unwrap_or("pearson"));
     let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
-    let cfg = PipelineConfig { method, svm: LinearSvmConfig::default(), ordering };
+    let cfg = PipelineConfig { estimator, svm: LinearSvmConfig::default(), ordering };
     let t0 = std::time::Instant::now();
     let model = train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?;
     let train_secs = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
     let err = model.error_on(&split.test);
     let test_secs = t1.elapsed().as_secs_f64();
-    println!("method      = {}", cfg.method.name());
+    println!("method      = {}", model.transformer.method_name);
     println!(
         "dataset     = {} (train {}, test {})",
         ds.name,
@@ -242,7 +237,7 @@ fn cmd_pipeline(opts: &HashMap<String, String>) -> Result<()> {
     println!("test error  = {:.2}%", err * 100.0);
     println!("|G|+|O|     = {}", model.transformer.total_size());
     if let Some(path) = opts.get("save") {
-        avi_scale::pipeline::persist::save(&model, std::path::Path::new(path))?;
+        avi_scale::estimator::persist::save(&model, std::path::Path::new(path))?;
         println!("saved       = {path}");
     }
     Ok(())
@@ -252,7 +247,7 @@ fn cmd_predict(opts: &HashMap<String, String>) -> Result<()> {
     let path = opts
         .get("model")
         .ok_or_else(|| avi_scale::AviError::Config("predict needs --model <path>".into()))?;
-    let model = avi_scale::pipeline::persist::load(std::path::Path::new(path))?;
+    let model = avi_scale::estimator::persist::load(std::path::Path::new(path))?;
     let ds = load(opts)?;
     let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
     let t = std::time::Instant::now();
@@ -267,11 +262,11 @@ fn cmd_predict(opts: &HashMap<String, String>) -> Result<()> {
 fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     let ds = load(opts)?;
     let psi = opt_f64(opts, "psi", 0.005);
-    let method = method_for(opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb"), psi)?;
+    let estimator = estimator_for(opts, psi)?;
     let backend = backend_for(opts)?;
     let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
     let cfg = PipelineConfig {
-        method,
+        estimator,
         svm: LinearSvmConfig::default(),
         ordering: FeatureOrdering::Pearson,
     };

@@ -25,9 +25,11 @@ use crate::poly::border::compute_border;
 use crate::poly::eval::TermSet;
 use crate::poly::poly::{Generator, GeneratorSet};
 use crate::solvers::{GramProblem, SolverKind, SolverParams, Termination};
-use crate::util::timer::Timer;
 
 /// Diagnostics accumulated over one fit.
+///
+/// Wall-clock lives in [`crate::estimator::FitReport`], which wraps these
+/// counters and is measured uniformly for every estimator.
 #[derive(Clone, Debug, Default)]
 pub struct FitStats {
     /// Convex-oracle calls (= border terms processed = |G| + |O| − 1).
@@ -47,8 +49,6 @@ pub struct FitStats {
     pub inf_disabled_ihb: bool,
     /// Final border degree processed.
     pub degree_reached: u32,
-    /// Wall-clock seconds of the fit.
-    pub wall_secs: f64,
 }
 
 /// Fitted OAVI output `(G, O)` plus diagnostics.
@@ -99,7 +99,6 @@ impl Oavi {
     ) -> Result<OaviModel> {
         let cfg = self.config;
         cfg.validate()?;
-        let timer = Timer::start();
         let m = x.rows();
         let n = x.cols();
         if m == 0 || n == 0 {
@@ -190,7 +189,6 @@ impl Oavi {
             }
         }
 
-        stats.wall_secs = timer.secs();
         Ok(OaviModel { generators, o_terms: o, config: cfg, stats })
     }
 

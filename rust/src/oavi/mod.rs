@@ -3,7 +3,6 @@
 
 pub mod config;
 pub mod driver;
-pub mod persist;
 
 pub use config::{IhbMode, OaviConfig};
 pub use driver::{FitStats, Oavi, OaviModel};

@@ -1,41 +1,67 @@
 //! Hyperparameter grid search with k-fold CV (paper §6.2: 3-fold CV over
-//! the vanishing parameter ψ and the SVM's ℓ1 coefficient).
+//! the vanishing parameter ψ and the SVM's ℓ1 coefficient), over **any
+//! set of estimators**: the grid is estimator × ψ × λ, so a single
+//! search can race CGAVI-IHB against ABM and VCA (mixed-method model
+//! selection) with one deduplicated loop instead of per-algorithm
+//! near-duplicates.
 
 use crate::backend::ShardedBackend;
 use crate::coordinator::pool::ThreadPool;
 use crate::data::splits::kfold_indices;
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{AviError, Result};
+use crate::estimator::EstimatorConfig;
 use crate::ordering::FeatureOrdering;
-use crate::pipeline::{train_pipeline_with_backend, GeneratorMethod, PipelineConfig};
+use crate::pipeline::{train_pipeline_with_backend, PipelineConfig};
 use crate::svm::kernel::{PolyKernelConfig, PolyKernelSvm};
 use crate::svm::linear::LinearSvmConfig;
 use crate::svm::metrics::error_rate;
 use crate::util::timer::Timer;
 
-/// Default ψ grid (log-spaced around the paper's 0.005 working point).
-pub const PSI_GRID: &[f64] = &[0.05, 0.01, 0.005, 0.001];
+/// Default ψ grid — re-exported from the estimator layer, where
+/// [`crate::estimator::VanishingIdealEstimator::hyper_grid`] defaults
+/// to it.
+pub use crate::estimator::PSI_GRID;
+
 /// Default SVM ℓ1 grid.
 pub const LAMBDA_GRID: &[f64] = &[1e-2, 1e-3, 1e-4];
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    /// Method name of the winner's [`crate::estimator::FitReport`] (falls
+    /// back to the config name when every fold failed).
+    pub name: String,
+    pub estimator: EstimatorConfig,
+    pub psi: f64,
+    pub lambda: f64,
+    pub cv_error: f64,
+}
 
 /// Result of a grid search.
 #[derive(Clone, Debug)]
 pub struct GridSearchResult {
+    /// Winning estimator config with the best ψ already applied.
+    pub best: EstimatorConfig,
+    /// The winner's fitted method name (via `FitReport::name()`).
+    pub best_name: String,
     pub best_psi: f64,
     pub best_lambda: f64,
     pub best_cv_error: f64,
     /// wall-clock of the whole search (Table 3 "Time hyper.", together
     /// with the final refit).
     pub search_secs: f64,
-    /// (psi, lambda, cv_error) for every grid point.
-    pub table: Vec<(f64, f64, f64)>,
+    /// every evaluated grid point, in submission order.
+    pub table: Vec<GridPoint>,
 }
 
-/// Cross-validated grid search for a generator method + linear SVM.
+/// Cross-validated grid search over estimator × ψ × λ with a linear SVM.
 /// `pool` parallelizes grid points across worker threads (single-threaded
-/// within each fit — the seed behavior).
+/// within each fit).  An empty `psis` slice means "each estimator's own
+/// [`crate::estimator::VanishingIdealEstimator::hyper_grid`]".
+#[allow(clippy::too_many_arguments)]
 pub fn grid_search(
-    method: &GeneratorMethod,
+    estimators: &[EstimatorConfig],
     ordering: FeatureOrdering,
     train: &Dataset,
     psis: &[f64],
@@ -44,7 +70,7 @@ pub fn grid_search(
     seed: u64,
     pool: &ThreadPool,
 ) -> Result<GridSearchResult> {
-    grid_search_sharded(method, ordering, train, psis, lambdas, folds, seed, pool, 1)
+    grid_search_sharded(estimators, ordering, train, psis, lambdas, folds, seed, pool, 1)
 }
 
 /// [`grid_search`] with an **intra-fit** parallelism knob on top of the
@@ -53,7 +79,7 @@ pub fn grid_search(
 /// machine (few grid points, many cores) — the two levels multiply.
 #[allow(clippy::too_many_arguments)]
 pub fn grid_search_sharded(
-    method: &GeneratorMethod,
+    estimators: &[EstimatorConfig],
     ordering: FeatureOrdering,
     train: &Dataset,
     psis: &[f64],
@@ -63,6 +89,9 @@ pub fn grid_search_sharded(
     pool: &ThreadPool,
     intra_shards: usize,
 ) -> Result<GridSearchResult> {
+    if estimators.is_empty() {
+        return Err(AviError::Config("grid_search: no estimators given".into()));
+    }
     let timer = Timer::start();
     let fold_idx = kfold_indices(train.len(), folds, seed);
     // pre-materialize fold datasets once
@@ -71,46 +100,71 @@ pub fn grid_search_sharded(
         .map(|(tr, va)| (train.subset(tr), train.subset(va)))
         .collect();
 
-    // one job per (psi, lambda): CV error averaged over folds
-    let mut jobs: Vec<Box<dyn FnOnce() -> (f64, f64, f64) + Send>> = Vec::new();
-    for &psi in psis {
-        for &lambda in lambdas {
-            let method = method.with_psi(psi);
-            let fold_data = fold_data.clone();
-            jobs.push(Box::new(move || {
-                // one backend per job: the ComputeBackend trait is !Send,
-                // so each worker constructs its own (see backend/mod.rs)
-                let backend = ShardedBackend::boxed_for(intra_shards);
-                let mut errs = Vec::with_capacity(fold_data.len());
-                for (tr, va) in &fold_data {
-                    let cfg = PipelineConfig {
-                        method,
-                        svm: LinearSvmConfig { lambda, ..Default::default() },
-                        ordering,
-                    };
-                    match train_pipeline_with_backend(&cfg, tr, backend.as_ref()) {
-                        Ok(model) => errs.push(model.error_on(va)),
-                        Err(_) => errs.push(1.0), // failed config = worst error
+    // one job per (estimator, psi, lambda): CV error averaged over folds
+    let mut jobs: Vec<Box<dyn FnOnce() -> GridPoint + Send>> = Vec::new();
+    for &base in estimators {
+        let psi_grid: Vec<f64> = if psis.is_empty() {
+            base.build().hyper_grid().to_vec()
+        } else {
+            psis.to_vec()
+        };
+        for psi in psi_grid {
+            for &lambda in lambdas {
+                let estimator = base.with_psi(psi);
+                let fold_data = fold_data.clone();
+                jobs.push(Box::new(move || {
+                    // one backend per job: the ComputeBackend trait is
+                    // !Send, so each worker constructs its own
+                    let backend = ShardedBackend::boxed_for(intra_shards);
+                    let mut errs = Vec::with_capacity(fold_data.len());
+                    let mut fitted_name: Option<String> = None;
+                    for (tr, va) in &fold_data {
+                        let cfg = PipelineConfig {
+                            estimator,
+                            svm: LinearSvmConfig { lambda, ..Default::default() },
+                            ordering,
+                        };
+                        match train_pipeline_with_backend(&cfg, tr, backend.as_ref()) {
+                            Ok(model) => {
+                                if fitted_name.is_none() {
+                                    // FitReport name, surfaced via the
+                                    // transformer
+                                    fitted_name = Some(model.transformer.method_name.clone());
+                                }
+                                errs.push(model.error_on(va));
+                            }
+                            Err(_) => errs.push(1.0), // failed config = worst error
+                        }
                     }
-                }
-                (psi, lambda, crate::util::mean(&errs))
-            }));
+                    GridPoint {
+                        name: fitted_name.unwrap_or_else(|| estimator.name()),
+                        estimator,
+                        psi,
+                        lambda,
+                        cv_error: crate::util::mean(&errs),
+                    }
+                }));
+            }
         }
+    }
+    if jobs.is_empty() {
+        return Err(AviError::Config("grid_search: empty ψ/λ grid".into()));
     }
     let table = pool.run_all(jobs);
 
-    let (mut best_psi, mut best_lambda, mut best_err) = (psis[0], lambdas[0], f64::INFINITY);
-    for &(psi, lambda, err) in &table {
-        if err < best_err {
-            best_err = err;
-            best_psi = psi;
-            best_lambda = lambda;
+    // first strictly-better point wins ties (deterministic in grid order)
+    let mut best = &table[0];
+    for p in &table[1..] {
+        if p.cv_error < best.cv_error {
+            best = p;
         }
     }
     Ok(GridSearchResult {
-        best_psi,
-        best_lambda,
-        best_cv_error: best_err,
+        best: best.estimator,
+        best_name: best.name.clone(),
+        best_psi: best.psi,
+        best_lambda: best.lambda,
+        best_cv_error: best.cv_error,
         search_secs: timer.secs(),
         table,
     })
@@ -174,7 +228,7 @@ mod tests {
         let ds = synthetic_dataset(400, 3);
         let pool = ThreadPool::new(2);
         let res = grid_search(
-            &GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            &[EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))],
             FeatureOrdering::Pearson,
             &ds,
             &[0.05, 0.005],
@@ -186,8 +240,58 @@ mod tests {
         .unwrap();
         assert_eq!(res.table.len(), 2);
         assert!(res.best_cv_error <= 0.5);
-        assert!(res.table.iter().any(|&(p, _, _)| p == res.best_psi));
+        assert!(res.table.iter().any(|p| p.psi == res.best_psi));
+        assert_eq!(res.best.psi(), res.best_psi);
+        assert_eq!(res.best_name, "CGAVI-IHB");
         assert!(res.search_secs > 0.0);
+    }
+
+    #[test]
+    fn mixed_method_grid_search_races_estimators() {
+        let ds = synthetic_dataset(300, 5);
+        let pool = ThreadPool::new(2);
+        let battery = EstimatorConfig::battery(0.01);
+        let res = grid_search(
+            &battery,
+            FeatureOrdering::Pearson,
+            &ds,
+            &[0.01],
+            &[1e-3],
+            2,
+            9,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(res.table.len(), battery.len());
+        // the winner's name is one of the battery's fitted names
+        let names: Vec<String> = battery.iter().map(|c| c.name()).collect();
+        assert!(names.contains(&res.best_name), "winner {}", res.best_name);
+        // every grid point reports through its FitReport name
+        for p in &res.table {
+            assert!(names.contains(&p.name));
+            assert!(p.cv_error.is_finite());
+        }
+    }
+
+    #[test]
+    fn empty_psis_uses_estimator_hyper_grid() {
+        let ds = synthetic_dataset(200, 6);
+        let pool = ThreadPool::new(2);
+        let res = grid_search(
+            &[EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))],
+            FeatureOrdering::Pearson,
+            &ds,
+            &[],
+            &[1e-3],
+            2,
+            11,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(res.table.len(), PSI_GRID.len());
+        assert!(
+            grid_search(&[], FeatureOrdering::Pearson, &ds, &[], &[1e-3], 2, 11, &pool).is_err()
+        );
     }
 
     #[test]
@@ -196,19 +300,12 @@ mod tests {
         // single-threaded search
         let ds = synthetic_dataset(300, 8);
         let pool = ThreadPool::new(2);
-        let base = grid_search(
-            &GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
-            FeatureOrdering::Pearson,
-            &ds,
-            &[0.05],
-            &[1e-3],
-            3,
-            7,
-            &pool,
-        )
-        .unwrap();
+        let est = [EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))];
+        let base =
+            grid_search(&est, FeatureOrdering::Pearson, &ds, &[0.05], &[1e-3], 3, 7, &pool)
+                .unwrap();
         let sharded = grid_search_sharded(
-            &GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            &est,
             FeatureOrdering::Pearson,
             &ds,
             &[0.05],

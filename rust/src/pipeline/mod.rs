@@ -1,101 +1,44 @@
 //! The classification pipeline of Algorithm 2: per-class generator
 //! construction → (FT) feature transform → ℓ1 linear SVM, plus the
 //! hyperparameter grid search (3-fold CV) and Table-3 style reporting.
+//!
+//! # Layering (store → backend → estimator → pipeline)
+//!
+//! This module sits at the top of the stack and is **algorithm-
+//! agnostic**: it consumes only the
+//! [`crate::estimator::VanishingIdealEstimator`] trait (built from a
+//! typed [`EstimatorConfig`]) and the [`crate::estimator::FittedModel`]
+//! objects it returns.  One generator method or another — OAVI variants,
+//! ABM, VCA, or any future constructor — changes nothing here:
+//!
+//! * the data plane ([`crate::backend::ColumnStore`]) owns evaluation
+//!   columns in row shards,
+//! * a [`ComputeBackend`] executes the streaming kernels over it
+//!   (native / sharded / PJRT),
+//! * an estimator fits per-class models through that backend,
+//! * this pipeline concatenates the per-class (FT) blocks and trains the
+//!   ℓ1 SVM on them.
+//!
+//! Persistence for trained pipelines is the unified envelope in
+//! [`crate::estimator::persist`].
 
 pub mod gridsearch;
-pub mod persist;
 pub mod report;
 
 use crate::backend::{ComputeBackend, NativeBackend};
-use crate::baselines::abm::{Abm, AbmConfig};
-use crate::baselines::vca::{Vca, VcaConfig, VcaModel};
 use crate::data::Dataset;
 use crate::error::{AviError, Result};
+use crate::estimator::{EstimatorConfig, FittedModel, VanishingIdealEstimator};
 use crate::linalg::dense::Matrix;
-use crate::oavi::{Oavi, OaviConfig};
 use crate::ordering::{order_features, FeatureOrdering};
-use crate::poly::poly::GeneratorSet;
 use crate::svm::linear::{LinearSvm, LinearSvmConfig};
 
-/// Which generator-constructing algorithm the pipeline uses.
-#[derive(Clone, Copy, Debug)]
-pub enum GeneratorMethod {
-    Oavi(OaviConfig),
-    Abm(AbmConfig),
-    Vca(VcaConfig),
-}
-
-impl GeneratorMethod {
-    /// The paper's method name (CGAVI-IHB, ABM, VCA, …).
-    pub fn name(&self) -> String {
-        match self {
-            GeneratorMethod::Oavi(cfg) => cfg.name(),
-            GeneratorMethod::Abm(_) => "ABM".into(),
-            GeneratorMethod::Vca(_) => "VCA".into(),
-        }
-    }
-
-    /// Same method with a different ψ (grid search).
-    pub fn with_psi(&self, psi: f64) -> GeneratorMethod {
-        match *self {
-            GeneratorMethod::Oavi(mut cfg) => {
-                cfg.psi = psi;
-                GeneratorMethod::Oavi(cfg)
-            }
-            GeneratorMethod::Abm(mut cfg) => {
-                cfg.psi = psi;
-                GeneratorMethod::Abm(cfg)
-            }
-            GeneratorMethod::Vca(mut cfg) => {
-                cfg.psi = psi;
-                GeneratorMethod::Vca(cfg)
-            }
-        }
-    }
-
-    /// Monomial-aware methods need the Pearson ordering; VCA is agnostic.
-    pub fn is_monomial_aware(&self) -> bool {
-        !matches!(self, GeneratorMethod::Vca(_))
-    }
-}
-
-/// Per-class fitted generator model.
-#[derive(Clone, Debug)]
-pub enum ClassModel {
-    MonomialAware(GeneratorSet),
-    Vca(VcaModel),
-}
-
-impl ClassModel {
-    pub fn n_generators(&self) -> usize {
-        match self {
-            ClassModel::MonomialAware(gs) => gs.generators.len(),
-            ClassModel::Vca(v) => v.n_generators(),
-        }
-    }
-
-    pub fn total_size(&self) -> usize {
-        match self {
-            ClassModel::MonomialAware(gs) => gs.total_size(),
-            ClassModel::Vca(v) => v.total_size(),
-        }
-    }
-
-    fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
-        match self {
-            ClassModel::MonomialAware(gs) => gs.transform_with(x, backend),
-            // VCA evaluates its polynomial DAG (no A·C+U form), so the
-            // backend choice does not apply to it
-            ClassModel::Vca(v) => v.transform(x),
-        }
-    }
-}
-
-/// The union-of-classes feature transformer (Algorithm 2 Lines 1–9).
+/// The union-of-classes feature transformer (Algorithm 2 Lines 1–9):
+/// one fitted model per class, any estimator.
 #[derive(Clone, Debug)]
 pub struct FittedTransformer {
     pub method_name: String,
-    pub per_class: Vec<ClassModel>,
+    pub per_class: Vec<Box<dyn FittedModel>>,
 }
 
 impl FittedTransformer {
@@ -137,16 +80,8 @@ impl FittedTransformer {
     pub fn avg_degree(&self) -> f64 {
         let (mut s, mut n) = (0.0, 0usize);
         for c in &self.per_class {
-            match c {
-                ClassModel::MonomialAware(gs) => {
-                    s += gs.avg_degree() * gs.generators.len() as f64;
-                    n += gs.generators.len();
-                }
-                ClassModel::Vca(v) => {
-                    s += v.avg_degree() * v.n_generators() as f64;
-                    n += v.n_generators();
-                }
-            }
+            s += c.avg_degree() * c.n_generators() as f64;
+            n += c.n_generators();
         }
         if n == 0 {
             0.0
@@ -155,26 +90,14 @@ impl FittedTransformer {
         }
     }
 
-    /// (SPAR) pooled across classes.
+    /// (SPAR) pooled across classes (numerators/denominators pooled
+    /// rather than averaging ratios).
     pub fn sparsity(&self) -> f64 {
-        // pool numerators/denominators rather than averaging ratios
-        let mut num = 0.0;
-        let mut den = 0.0;
+        let (mut num, mut den) = (0.0, 0.0);
         for c in &self.per_class {
-            match c {
-                ClassModel::MonomialAware(gs) => {
-                    for g in &gs.generators {
-                        num += g.n_zero_coeffs() as f64;
-                        den += g.n_coeffs() as f64;
-                    }
-                }
-                ClassModel::Vca(v) => {
-                    // VCA's SPAR is already a pooled ratio; weight by its size
-                    let ge = v.n_generators().max(1) as f64;
-                    num += v.sparsity() * ge;
-                    den += ge;
-                }
-            }
+            let (z, t) = c.sparsity_pool();
+            num += z;
+            den += t;
         }
         if den == 0.0 {
             0.0
@@ -184,9 +107,10 @@ impl FittedTransformer {
     }
 }
 
-/// Fit the per-class generator models (Algorithm 2 Lines 1–5).
+/// Fit the per-class models (Algorithm 2 Lines 1–5) through the
+/// estimator trait — the single fit surface for every generator method.
 pub fn fit_transformer(
-    method: &GeneratorMethod,
+    estimator: &dyn VanishingIdealEstimator,
     train: &Dataset,
     backend: &dyn ComputeBackend,
 ) -> Result<FittedTransformer> {
@@ -196,24 +120,20 @@ pub fn fit_transformer(
         if xk.rows() == 0 {
             return Err(AviError::Data(format!("class {k} has no samples")));
         }
-        let model = match method {
-            GeneratorMethod::Oavi(cfg) => ClassModel::MonomialAware(
-                Oavi::new(*cfg).fit_with_backend(&xk, backend)?.generator_set(),
-            ),
-            GeneratorMethod::Abm(cfg) => ClassModel::MonomialAware(
-                Abm::new(*cfg).fit_with_backend(&xk, backend)?.generator_set(),
-            ),
-            GeneratorMethod::Vca(cfg) => ClassModel::Vca(Vca::new(*cfg).fit(&xk)?),
-        };
-        per_class.push(model);
+        per_class.push(estimator.fit(&xk, backend)?);
     }
-    Ok(FittedTransformer { method_name: method.name(), per_class })
+    // the method name travels on the FitReport, not on a config enum
+    let method_name = per_class
+        .first()
+        .map(|m| m.report().name().to_string())
+        .unwrap_or_else(|| estimator.name());
+    Ok(FittedTransformer { method_name, per_class })
 }
 
 /// Full pipeline configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineConfig {
-    pub method: GeneratorMethod,
+    pub estimator: EstimatorConfig,
     pub svm: LinearSvmConfig,
     pub ordering: FeatureOrdering,
 }
@@ -258,14 +178,16 @@ pub fn train_pipeline_with_backend(
     train: &Dataset,
     backend: &dyn ComputeBackend,
 ) -> Result<PipelineModel> {
-    let ordering = if cfg.method.is_monomial_aware() {
+    cfg.estimator.validate()?;
+    let estimator = cfg.estimator.build();
+    let ordering = if estimator.is_monomial_aware() {
         cfg.ordering
     } else {
         FeatureOrdering::Native // VCA is data-driven already (§5)
     };
     let perm = order_features(&train.x, ordering);
     let ordered = train.permute_features(&perm);
-    let transformer = fit_transformer(&cfg.method, &ordered, backend)?;
+    let transformer = fit_transformer(estimator.as_ref(), &ordered, backend)?;
     let feats = transformer.transform_with(&ordered.x, backend);
     let svm = LinearSvm::fit(&feats, &ordered.y, ordered.n_classes, cfg.svm)?;
     Ok(PipelineModel { perm, transformer, svm, n_classes: train.n_classes })
@@ -285,6 +207,7 @@ fn permute_cols(x: &Matrix, perm: &[usize]) -> Matrix {
 mod tests {
     use super::*;
     use crate::data::synthetic::synthetic_dataset;
+    use crate::oavi::OaviConfig;
 
     fn small_synth() -> Dataset {
         synthetic_dataset(600, 9)
@@ -295,7 +218,7 @@ mod tests {
         let ds = small_synth();
         let split = crate::data::splits::train_test_split(&ds, 0.6, 1);
         let cfg = PipelineConfig {
-            method: GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005)),
+            estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.005)),
             svm: LinearSvmConfig::default(),
             ordering: FeatureOrdering::Pearson,
         };
@@ -306,32 +229,28 @@ mod tests {
     }
 
     #[test]
-    fn all_methods_run_end_to_end() {
+    fn all_estimators_run_end_to_end() {
         let ds = small_synth().head(300);
         let split = crate::data::splits::train_test_split(&ds, 0.6, 2);
-        for method in [
-            GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
-            GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.01)),
-            GeneratorMethod::Abm(AbmConfig::new(0.01)),
-            GeneratorMethod::Vca(VcaConfig::new(0.01)),
-        ] {
+        for estimator in EstimatorConfig::battery(0.01) {
             let cfg = PipelineConfig {
-                method,
+                estimator,
                 svm: LinearSvmConfig::default(),
                 ordering: FeatureOrdering::Pearson,
             };
             let model = train_pipeline(&cfg, &split.train).unwrap();
             let err = model.error_on(&split.test);
-            assert!(err <= 0.5, "{}: error {err}", method.name());
+            assert!(err <= 0.5, "{}: error {err}", estimator.name());
             assert!(model.transformer.total_size() > 0);
+            assert_eq!(model.transformer.method_name, estimator.name());
         }
     }
 
     #[test]
     fn transform_concatenates_class_blocks() {
         let ds = small_synth().head(200);
-        let method = GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01));
-        let t = fit_transformer(&method, &ds, &NativeBackend).unwrap();
+        let est = EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01));
+        let t = fit_transformer(est.build().as_ref(), &ds, &NativeBackend).unwrap();
         let feats = t.transform(&ds.x);
         assert_eq!(feats.cols(), t.n_generators());
         assert_eq!(feats.rows(), 200);
@@ -339,26 +258,21 @@ mod tests {
     }
 
     #[test]
-    fn with_psi_rewrites_psi_everywhere() {
-        let m = GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.1)).with_psi(0.02);
-        match m {
-            GeneratorMethod::Oavi(cfg) => assert_eq!(cfg.psi, 0.02),
-            _ => unreachable!(),
-        }
-        let m = GeneratorMethod::Vca(VcaConfig::new(0.1)).with_psi(0.3);
-        match m {
-            GeneratorMethod::Vca(cfg) => assert_eq!(cfg.psi, 0.3),
-            _ => unreachable!(),
-        }
-    }
-
-    #[test]
     fn stats_are_finite_and_consistent() {
         let ds = small_synth().head(300);
-        let method = GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.01));
-        let t = fit_transformer(&method, &ds, &NativeBackend).unwrap();
+        let est = EstimatorConfig::Oavi(OaviConfig::bpcgavi_wihb(0.01));
+        let t = fit_transformer(est.build().as_ref(), &ds, &NativeBackend).unwrap();
         assert!(t.avg_degree() >= 1.0);
         assert!((0.0..=1.0).contains(&t.sparsity()));
         assert!(t.total_size() >= t.n_generators());
+    }
+
+    #[test]
+    fn cloned_transformer_transforms_identically() {
+        let ds = small_synth().head(150);
+        let est = EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01));
+        let t = fit_transformer(est.build().as_ref(), &ds, &NativeBackend).unwrap();
+        let t2 = t.clone();
+        assert_eq!(t.transform(&ds.x).data(), t2.transform(&ds.x).data());
     }
 }

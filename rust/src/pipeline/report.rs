@@ -1,15 +1,17 @@
 //! Table-3 style experiment cells: (method × dataset) → test error,
 //! hyperparameter-optimization time, test time, |G|+|O|, degree, SPAR —
 //! averaged over random 60/40 splits, with 3-fold CV inside each split
-//! (paper §6.2 protocol).
+//! (paper §6.2 protocol).  Generator methods are addressed through the
+//! estimator layer, so a cell is algorithm-agnostic.
 
 use crate::coordinator::pool::ThreadPool;
 use crate::data::splits::train_test_split;
 use crate::data::Dataset;
 use crate::error::Result;
+use crate::estimator::EstimatorConfig;
 use crate::ordering::FeatureOrdering;
 use crate::pipeline::gridsearch::{grid_search, grid_search_kernel_svm};
-use crate::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use crate::pipeline::{train_pipeline, PipelineConfig};
 use crate::svm::kernel::PolyKernelSvm;
 use crate::svm::linear::LinearSvmConfig;
 use crate::svm::metrics::error_rate;
@@ -19,8 +21,8 @@ use crate::util::{mean, std_dev};
 /// A Table-3 column entry: generator method + SVM, or the kernel baseline.
 #[derive(Clone, Copy, Debug)]
 pub enum Method {
-    /// generator-constructing method + linear SVM (OAVI family, ABM, VCA).
-    Generator(GeneratorMethod),
+    /// estimator (OAVI family, ABM, VCA) + linear SVM.
+    Estimator(EstimatorConfig),
     /// polynomial-kernel SVM baseline.
     KernelSvm,
 }
@@ -28,7 +30,7 @@ pub enum Method {
 impl Method {
     pub fn name(&self) -> String {
         match self {
-            Method::Generator(g) => format!("{}+SVM", g.name()),
+            Method::Estimator(e) => format!("{}+SVM", e.name()),
             Method::KernelSvm => "SVM".into(),
         }
     }
@@ -96,10 +98,10 @@ pub fn run_cell(
     for split_i in 0..protocol.n_splits {
         let split = train_test_split(ds, protocol.train_frac, protocol.seed + split_i as u64);
         match method {
-            Method::Generator(gen) => {
+            Method::Estimator(est) => {
                 let hyper_timer = Timer::start();
                 let gs = grid_search(
-                    &gen,
+                    std::slice::from_ref(&est),
                     protocol.ordering,
                     &split.train,
                     protocol.psis,
@@ -110,7 +112,7 @@ pub fn run_cell(
                 )?;
                 // refit on the whole training split with the best combo
                 let cfg = PipelineConfig {
-                    method: gen.with_psi(gs.best_psi),
+                    estimator: gs.best,
                     svm: LinearSvmConfig { lambda: gs.best_lambda, ..Default::default() },
                     ordering: protocol.ordering,
                 };
@@ -204,7 +206,7 @@ mod tests {
         };
         let pool = ThreadPool::new(2);
         let cell = run_cell(
-            Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01))),
+            Method::Estimator(EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))),
             &ds,
             &protocol,
             &pool,

@@ -1,0 +1,128 @@
+//! Estimator-trait conformance: every registered estimator (OAVI
+//! variants, ABM, VCA) must pass the same contract through the unified
+//! surface — fit → transform → persist round-trip — under both the
+//! native and the sharded backend.  This is the acceptance gate of the
+//! estimator-layer redesign: a new constructor that implements
+//! `VanishingIdealEstimator` + `FittedModel` inherits this suite by
+//! being added to `EstimatorConfig`.
+
+use avi_scale::backend::{ComputeBackend, NativeBackend, ShardedBackend};
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::estimator::persist::{
+    load_model, model_from_json, model_to_json, pipeline_from_json, pipeline_to_json,
+    save_model,
+};
+use avi_scale::estimator::EstimatorConfig;
+use avi_scale::linalg::dense::Matrix;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{train_pipeline_with_backend, PipelineConfig};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+fn bits(m: &Matrix) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+fn backends() -> Vec<(&'static str, Box<dyn ComputeBackend>)> {
+    vec![
+        ("native", Box::new(NativeBackend)),
+        ("sharded", Box::new(ShardedBackend::with_min_rows(3, 64))),
+    ]
+}
+
+/// Every method name resolves, fits under both backends, transforms with
+/// a consistent shape, and survives a JSON round-trip with a bitwise-
+/// identical transform.
+#[test]
+fn every_estimator_conforms_under_every_backend() {
+    let ds = synthetic_dataset(600, 41);
+    let x = ds.class_matrix(0);
+    let z = ds.class_matrix(1);
+    for name in EstimatorConfig::known_methods() {
+        // ψ loose enough that every variant (cold-start solvers included)
+        // certifies vanishing generators on the noisy quadric data
+        let cfg = EstimatorConfig::parse(name, 0.05).unwrap();
+        for (bname, backend) in backends() {
+            let model = cfg
+                .fit(&x, backend.as_ref())
+                .unwrap_or_else(|e| panic!("{name}/{bname}: fit failed: {e}"));
+            let report = model.report();
+            assert_eq!(report.name(), cfg.name(), "{name}/{bname}: report name");
+            assert!(report.wall_secs > 0.0, "{name}/{bname}: FitReport has no wall-clock");
+            assert!(model.n_generators() > 0, "{name}/{bname}: nothing vanished");
+            assert!(model.total_size() >= model.n_generators());
+
+            // transform: shape + non-negativity (these are |g(z)| blocks)
+            let t = model.transform_with(&z, backend.as_ref());
+            assert_eq!(t.rows(), z.rows(), "{name}/{bname}");
+            assert_eq!(t.cols(), model.n_generators(), "{name}/{bname}");
+            assert!(t.data().iter().all(|v| *v >= 0.0), "{name}/{bname}: negative |g|");
+
+            // persist round-trip: bitwise-equal transform on a fixed set
+            let json = model_to_json(model.as_ref());
+            let back = model_from_json(&json)
+                .unwrap_or_else(|e| panic!("{name}/{bname}: reload failed: {e}"));
+            assert_eq!(back.report().name(), cfg.name());
+            assert_eq!(back.n_generators(), model.n_generators());
+            assert_eq!(back.total_size(), model.total_size());
+            let tb = back.transform_with(&z, backend.as_ref());
+            assert_eq!(bits(&t), bits(&tb), "{name}/{bname}: reloaded transform differs");
+        }
+    }
+}
+
+/// Whole-pipeline persistence through the same envelope: every estimator
+/// (including VCA, which the old path rejected) predicts identically
+/// after save → load.
+#[test]
+fn pipeline_envelope_roundtrips_every_estimator() {
+    let ds = synthetic_dataset(400, 43);
+    let probe = synthetic_dataset(60, 44);
+    for est in EstimatorConfig::battery(0.01) {
+        let cfg = PipelineConfig {
+            estimator: est,
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        let model = train_pipeline_with_backend(&cfg, &ds, &NativeBackend)
+            .unwrap_or_else(|e| panic!("{}: {e}", est.name()));
+        let json = pipeline_to_json(&model);
+        let back = pipeline_from_json(&json).unwrap_or_else(|e| panic!("{}: {e}", est.name()));
+        assert_eq!(back.transformer.method_name, est.name());
+        assert_eq!(back.perm, model.perm);
+        assert_eq!(back.transformer.total_size(), model.transformer.total_size());
+        assert_eq!(
+            back.predict(&probe.x),
+            model.predict(&probe.x),
+            "{}: predictions diverge after round-trip",
+            est.name()
+        );
+    }
+}
+
+/// File-level round-trip and cross-backend serving equivalence: a model
+/// fitted natively, persisted, reloaded, and transformed through the
+/// sharded backend must agree with the in-memory native transform.
+#[test]
+fn persisted_models_serve_identically_across_backends() {
+    let ds = synthetic_dataset(500, 47);
+    let x = ds.class_matrix(0);
+    let z = ds.class_matrix(1);
+    let dir = std::env::temp_dir().join("avi_scale_conformance");
+    for est in EstimatorConfig::battery(0.005) {
+        let model = est.fit(&x, &NativeBackend).unwrap();
+        let path = dir.join(format!("{}.json", est.name().to_lowercase()));
+        save_model(model.as_ref(), &path).unwrap();
+        let back = load_model(&path).unwrap();
+        let reference = model.transform_with(&z, &NativeBackend);
+        // small m ⇒ sharded backends fall back to single-shard stores,
+        // which the data-plane contract makes bit-identical to native
+        let sharded = ShardedBackend::new(4);
+        let served = back.transform_with(&z, &sharded);
+        assert_eq!(
+            bits(&reference),
+            bits(&served),
+            "{}: persisted+sharded transform differs",
+            est.name()
+        );
+    }
+}

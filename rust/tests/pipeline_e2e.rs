@@ -1,25 +1,24 @@
 //! End-to-end pipeline integration: Algorithm 2 on the paper's datasets
-//! (scaled down), across all generator methods, including CV grid search
-//! and the serving path — the cross-module composition tests.
+//! (scaled down), across all estimators, including CV grid search and
+//! the serving path — the cross-module composition tests.
 
 use std::sync::Arc;
 
-use avi_scale::baselines::abm::AbmConfig;
-use avi_scale::baselines::vca::VcaConfig;
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::coordinator::service::{BatchPolicy, TransformService};
 use avi_scale::data::splits::train_test_split;
 use avi_scale::data::{load_registry_dataset, synthetic::synthetic_dataset};
+use avi_scale::estimator::EstimatorConfig;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::ordering::FeatureOrdering;
 use avi_scale::pipeline::gridsearch::grid_search;
 use avi_scale::pipeline::report::{run_cell, Method, Protocol};
-use avi_scale::pipeline::{train_pipeline, GeneratorMethod, PipelineConfig};
+use avi_scale::pipeline::{train_pipeline, PipelineConfig};
 use avi_scale::svm::linear::LinearSvmConfig;
 
-fn default_cfg(method: GeneratorMethod) -> PipelineConfig {
+fn default_cfg(estimator: EstimatorConfig) -> PipelineConfig {
     PipelineConfig {
-        method,
+        estimator,
         svm: LinearSvmConfig::default(),
         ordering: FeatureOrdering::Pearson,
     }
@@ -32,7 +31,7 @@ fn synthetic_separates_well_with_cgavi_ihb() {
     let ds = synthetic_dataset(3000, 1);
     let split = train_test_split(&ds, 0.6, 0);
     let model = train_pipeline(
-        &default_cfg(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.005))),
+        &default_cfg(EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.005))),
         &split.train,
     )
     .unwrap();
@@ -41,23 +40,18 @@ fn synthetic_separates_well_with_cgavi_ihb() {
 }
 
 #[test]
-fn every_registry_dataset_trains_every_method() {
+fn every_registry_dataset_trains_every_estimator() {
     for name in ["bank", "htru", "seeds", "spam"] {
         let ds = load_registry_dataset(name, 0.04, 7).unwrap();
         let split = train_test_split(&ds, 0.6, 1);
-        for method in [
-            GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01)),
-            GeneratorMethod::Oavi(OaviConfig::bpcgavi_wihb(0.01)),
-            GeneratorMethod::Abm(AbmConfig::new(0.01)),
-            GeneratorMethod::Vca(VcaConfig::new(0.01)),
-        ] {
-            let model = train_pipeline(&default_cfg(method), &split.train)
-                .unwrap_or_else(|e| panic!("{name}/{}: {e}", method.name()));
+        for estimator in EstimatorConfig::battery(0.01) {
+            let model = train_pipeline(&default_cfg(estimator), &split.train)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", estimator.name()));
             let err = model.error_on(&split.test);
             assert!(
                 err <= 0.55,
                 "{name}/{}: error {err} worse than chance",
-                method.name()
+                estimator.name()
             );
         }
     }
@@ -68,9 +62,9 @@ fn grid_search_plus_refit_beats_worst_grid_point() {
     let ds = load_registry_dataset("bank", 0.25, 3).unwrap();
     let split = train_test_split(&ds, 0.6, 2);
     let pool = ThreadPool::new(2);
-    let method = GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01));
+    let estimator = EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01));
     let gs = grid_search(
-        &method,
+        std::slice::from_ref(&estimator),
         FeatureOrdering::Pearson,
         &split.train,
         &[0.05, 0.005],
@@ -80,16 +74,53 @@ fn grid_search_plus_refit_beats_worst_grid_point() {
         &pool,
     )
     .unwrap();
-    let worst = gs.table.iter().map(|t| t.2).fold(0.0f64, f64::max);
+    let worst = gs.table.iter().map(|t| t.cv_error).fold(0.0f64, f64::max);
     assert!(gs.best_cv_error <= worst);
-    // refit with the winner generalizes
+    assert_eq!(gs.best_name, "CGAVI-IHB");
+    // refit with the winner generalizes (the winning config carries ψ)
     let cfg = PipelineConfig {
-        method: method.with_psi(gs.best_psi),
+        estimator: gs.best,
         svm: LinearSvmConfig { lambda: gs.best_lambda, ..Default::default() },
         ordering: FeatureOrdering::Pearson,
     };
     let model = train_pipeline(&cfg, &split.train).unwrap();
     assert!(model.error_on(&split.test) < 0.2, "bank should be near-separable");
+}
+
+#[test]
+fn mixed_method_grid_search_selects_one_winner_on_registry_data() {
+    // the estimator layer's payoff: one CV search racing OAVI, ABM, and
+    // VCA on the same folds, winner reported through FitReport.name()
+    let ds = load_registry_dataset("seeds", 1.0, 21).unwrap();
+    let split = train_test_split(&ds, 0.6, 6);
+    let pool = ThreadPool::new(2);
+    let battery = EstimatorConfig::battery(0.01);
+    let gs = grid_search(
+        &battery,
+        FeatureOrdering::Pearson,
+        &split.train,
+        &[0.01],
+        &[1e-3],
+        2,
+        13,
+        &pool,
+    )
+    .unwrap();
+    assert_eq!(gs.table.len(), battery.len());
+    let names: Vec<String> = battery.iter().map(|c| c.name()).collect();
+    assert!(names.contains(&gs.best_name), "winner {}", gs.best_name);
+    // the winning config refits end-to-end
+    let model = train_pipeline(
+        &PipelineConfig {
+            estimator: gs.best,
+            svm: LinearSvmConfig { lambda: gs.best_lambda, ..Default::default() },
+            ordering: FeatureOrdering::Pearson,
+        },
+        &split.train,
+    )
+    .unwrap();
+    assert_eq!(model.transformer.method_name, gs.best_name);
+    assert!(model.error_on(&split.test) <= 0.5);
 }
 
 #[test]
@@ -104,7 +135,7 @@ fn table3_cell_protocol_runs_reduced() {
     };
     let pool = ThreadPool::new(2);
     let cell = run_cell(
-        Method::Generator(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01))),
+        Method::Estimator(EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))),
         &ds,
         &protocol,
         &pool,
@@ -120,7 +151,7 @@ fn serving_path_agrees_with_batch_path_on_registry_data() {
     let split = train_test_split(&ds, 0.6, 3);
     let model = Arc::new(
         train_pipeline(
-            &default_cfg(GeneratorMethod::Oavi(OaviConfig::cgavi_ihb(0.01))),
+            &default_cfg(EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))),
             &split.train,
         )
         .unwrap(),

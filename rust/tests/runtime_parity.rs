@@ -15,11 +15,40 @@ use std::path::Path;
 use std::sync::Arc;
 
 use avi_scale::backend::{ColumnStore, ComputeBackend, NativeBackend, ShardedBackend};
+use avi_scale::baselines::abm::{Abm, AbmConfig};
+use avi_scale::baselines::vca::{Vca, VcaConfig};
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::linalg::dense::Matrix;
 use avi_scale::oavi::{Oavi, OaviConfig};
 use avi_scale::runtime::{PjrtRuntime, XlaBackend};
 use avi_scale::util::rng::Rng;
+
+/// Adapter pinning the store shard count so two *execution strategies*
+/// (sequential native vs thread-pool sharded) can be compared on
+/// byte-identical store layouts — the precondition of the bit-for-bit
+/// contract.  Kernels delegate to the wrapped backend untouched.
+struct PinnedShards<'a> {
+    inner: &'a dyn ComputeBackend,
+    shards: usize,
+}
+
+impl ComputeBackend for PinnedShards<'_> {
+    fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
+        self.inner.gram_stats(cols, b_col)
+    }
+
+    fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
+        self.inner.transform_abs(cols, c, u)
+    }
+
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+
+    fn preferred_shards(&self, _m: usize) -> usize {
+        self.shards
+    }
+}
 
 fn runtime() -> Option<Arc<PjrtRuntime>> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -160,6 +189,88 @@ fn oavi_fit_through_sharded_backend_matches_native() {
         assert!((a.mse - b.mse).abs() < 1e-9, "mse {} vs {}", a.mse, b.mse);
         for (ca, cb) in a.coeffs.iter().zip(b.coeffs.iter()) {
             assert!((ca - cb).abs() < 1e-7, "coeff {ca} vs {cb}");
+        }
+    }
+}
+
+#[test]
+fn abm_fit_bitwise_parity_native_vs_sharded_per_shard_count() {
+    // the baselines satellite: for a FIXED store shard count, a full ABM
+    // fit through ShardedBackend must match NativeBackend bit for bit
+    // (same per-shard kernels, same in-order reduction)
+    let ds = synthetic_dataset(4000, 17);
+    let x = ds.class_matrix(0);
+    let sharded = ShardedBackend::new(4);
+    for shards in [1usize, 3, 4] {
+        let native_pin = PinnedShards { inner: &NativeBackend, shards };
+        let sharded_pin = PinnedShards { inner: &sharded, shards };
+        let a = Abm::new(AbmConfig::new(0.01)).fit_with_backend(&x, &native_pin).unwrap();
+        let b = Abm::new(AbmConfig::new(0.01)).fit_with_backend(&x, &sharded_pin).unwrap();
+        assert_eq!(a.o_terms.len(), b.o_terms.len(), "|O| diverges at shards={shards}");
+        assert_eq!(a.generators.len(), b.generators.len());
+        for (ga, gb) in a.generators.iter().zip(b.generators.iter()) {
+            assert_eq!(ga.leading, gb.leading);
+            assert_eq!(ga.mse.to_bits(), gb.mse.to_bits(), "mse bits at shards={shards}");
+            for (ca, cb) in ga.coeffs.iter().zip(gb.coeffs.iter()) {
+                assert_eq!(ca.to_bits(), cb.to_bits(), "coeff bits at shards={shards}");
+            }
+        }
+        // the (FT) transform must also agree bitwise
+        let ta = a.generator_set().transform_with(&x, &native_pin);
+        let tb = b.generator_set().transform_with(&x, &sharded_pin);
+        for (va, vb) in ta.data().iter().zip(tb.data().iter()) {
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
+    }
+}
+
+#[test]
+fn vca_fit_bitwise_parity_native_vs_sharded_per_shard_count() {
+    // same contract for VCA now that its projections + candidate Gram go
+    // through ComputeBackend::gram_stats
+    let ds = synthetic_dataset(3000, 19);
+    let x = ds.class_matrix(1);
+    let sharded = ShardedBackend::new(3);
+    for shards in [1usize, 2, 4] {
+        let native_pin = PinnedShards { inner: &NativeBackend, shards };
+        let sharded_pin = PinnedShards { inner: &sharded, shards };
+        let a = Vca::new(VcaConfig::new(0.005)).fit_with_backend(&x, &native_pin).unwrap();
+        let b = Vca::new(VcaConfig::new(0.005)).fit_with_backend(&x, &sharded_pin).unwrap();
+        assert_eq!(a.n_generators(), b.n_generators(), "|V| diverges at shards={shards}");
+        assert_eq!(a.total_size(), b.total_size());
+        let ta = a.transform_with(&x, &native_pin);
+        let tb = b.transform_with(&x, &sharded_pin);
+        assert_eq!(ta.cols(), tb.cols());
+        for (va, vb) in ta.data().iter().zip(tb.data().iter()) {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "VCA transform bits diverge at shards={shards}: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn oavi_fit_bitwise_parity_native_vs_sharded_per_shard_count() {
+    // the same pinned-shards contract through the OAVI driver (the
+    // approximate cross-shard-count check below predates this one)
+    let ds = synthetic_dataset(2500, 23);
+    let x = ds.class_matrix(0);
+    let sharded = ShardedBackend::new(4);
+    for shards in [2usize, 5] {
+        let native_pin = PinnedShards { inner: &NativeBackend, shards };
+        let sharded_pin = PinnedShards { inner: &sharded, shards };
+        let cfg = OaviConfig::cgavi_ihb(0.005);
+        let a = Oavi::new(cfg).fit_with_backend(&x, &native_pin).unwrap();
+        let b = Oavi::new(cfg).fit_with_backend(&x, &sharded_pin).unwrap();
+        assert_eq!(a.o_terms.len(), b.o_terms.len());
+        assert_eq!(a.generators.len(), b.generators.len());
+        for (ga, gb) in a.generators.iter().zip(b.generators.iter()) {
+            assert_eq!(ga.mse.to_bits(), gb.mse.to_bits());
+            for (ca, cb) in ga.coeffs.iter().zip(gb.coeffs.iter()) {
+                assert_eq!(ca.to_bits(), cb.to_bits());
+            }
         }
     }
 }
