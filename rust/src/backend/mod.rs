@@ -7,7 +7,7 @@
 //!    term; the dominant training cost), and
 //! 2. **transform_abs** — the (FT) feature map `|A·C + U|` (test time).
 //!
-//! # Layering (store → backend → driver)
+//! # Layering (store → backend → driver, over one persistent pool)
 //!
 //! * [`ColumnStore`] (`store.rs`) owns the evaluation columns in
 //!   contiguous **row-sharded** blocks and is the only column currency
@@ -19,13 +19,45 @@
 //! * [`ComputeBackend`] (this file) is the execution strategy over a
 //!   store.  [`NativeBackend`] reduces the shards sequentially and is the
 //!   correctness reference; [`ShardedBackend`] (`sharded.rs`) maps shards
-//!   onto a [`crate::coordinator::pool::ThreadPool`] and reduces partials
-//!   in shard order — bit-identical to native for a fixed shard count,
+//!   onto the **persistent** [`crate::coordinator::pool::ThreadPool`]
+//!   (workers spawned once at pool construction, jobs over an MPMC
+//!   queue — no per-call spawn/join) and reduces partials in shard
+//!   order — bit-identical to native for a fixed shard count,
 //!   wall-clock ≈ linear in m / workers.
 //! * Drivers ([`crate::oavi::Oavi`], [`crate::baselines::abm::Abm`], the
 //!   pipeline transform) ask the backend for its
 //!   [`ComputeBackend::preferred_shards`] when building stores, so the
 //!   intra-fit parallelism knob travels with the backend, not the config.
+//!
+//! # Pool lifecycle, budget split, adaptive threshold
+//!
+//! One [`crate::coordinator::pool::ThreadPool`] per process-level entry
+//! point (CLI `--workers`, grid search, serving) is the intended shape;
+//! everything below it shares the pool through a cheaply clonable
+//! [`crate::coordinator::pool::PoolHandle`]:
+//!
+//! * **Lifecycle** — workers live from `ThreadPool::new` until drop
+//!   (drain + join).  A backend built with [`ShardedBackend::new`] owns
+//!   a private pool for standalone use; one built with
+//!   [`ShardedBackend::with_handle`] borrows the shared queue and spawns
+//!   nothing.
+//! * **Budget split** — two-level parallelism composes the outer job
+//!   axis (grid points, per-class fits) with the inner shard axis on the
+//!   same workers: `PoolHandle::budget_split(outer_jobs)` yields
+//!   `(outer, inner)` with `outer × inner ≤ workers`, and each outer job
+//!   builds its backend with the `inner` budget.  The budget acts
+//!   through **store sizing** (`preferred_shards` caps at it); the
+//!   kernels submit one job per store shard, so an externally sized
+//!   store can enqueue more jobs than the budget — excess jobs queue on
+//!   the shared workers rather than spawning threads.  Nested submission
+//!   is deadlock-free because a submitter executes its own queued jobs
+//!   in place (work stealing).
+//! * **Adaptive threshold** — the old hard-coded `MIN_WORK_PER_SHARD`
+//!   constant is replaced by `PoolHandle::adaptive_min_work()`,
+//!   calibrated once per pool (measured job hand-off cost over the live
+//!   queue vs. multiply-add throughput, clamped to `[2^12, 2^20]`).
+//!   Below it `ShardedBackend` takes the sequential path — invisible in
+//!   results, since both paths are bit-identical.
 //!
 //! # The `!Send` trait vs `Send` shard workers
 //!
@@ -35,7 +67,8 @@
 //! backend per job — grid search, per-class fits) or **below** it (shard
 //! workers inside `ShardedBackend` see only `&[f64]` slices and the
 //! plain-data store, both `Sync`).  Nothing ever shares a backend across
-//! threads.
+//! threads — only `PoolHandle`s cross threads, and each job constructs
+//! its own backend around one.
 //!
 //! # Where PJRT fits
 //!
@@ -109,6 +142,44 @@ impl ComputeBackend for NativeBackend {
     }
 }
 
+/// Adapter pinning [`ComputeBackend::preferred_shards`] to a fixed value
+/// while delegating both kernels untouched.
+///
+/// Two *execution strategies* (sequential native vs pool-sharded) are
+/// bit-identical only on byte-identical store layouts; pinning the shard
+/// count is how parity tests and reproducibility-sensitive callers (the
+/// two-level grid search's `pin_store_shards` knob) guarantee that
+/// precondition regardless of each backend's own sizing policy.
+pub struct PinnedShards {
+    inner: Box<dyn ComputeBackend>,
+    shards: usize,
+}
+
+impl PinnedShards {
+    /// Pin `inner`'s store sizing to `shards` (clamped to ≥ 1).
+    pub fn new(inner: Box<dyn ComputeBackend>, shards: usize) -> Self {
+        PinnedShards { inner, shards: shards.max(1) }
+    }
+}
+
+impl ComputeBackend for PinnedShards {
+    fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
+        self.inner.gram_stats(cols, b_col)
+    }
+
+    fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
+        self.inner.transform_abs(cols, c, u)
+    }
+
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+
+    fn preferred_shards(&self, _m: usize) -> usize {
+        self.shards
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +245,21 @@ mod tests {
     fn backend_name_and_default_shards() {
         assert_eq!(NativeBackend.name(), "native");
         assert_eq!(NativeBackend.preferred_shards(1_000_000), 1);
+    }
+
+    #[test]
+    fn pinned_shards_delegates_kernels_and_pins_sizing() {
+        let pinned = PinnedShards::new(Box::new(NativeBackend), 5);
+        assert_eq!(pinned.preferred_shards(10), 5);
+        assert_eq!(pinned.preferred_shards(1_000_000), 5);
+        assert_eq!(pinned.name(), "pinned");
+        assert_eq!(PinnedShards::new(Box::new(NativeBackend), 0).preferred_shards(7), 1);
+        let cols = vec![vec![1.0, 2.0, 3.0], vec![0.5, -1.0, 2.0]];
+        let b = vec![1.0, 1.0, 1.0];
+        let store = ColumnStore::from_cols(&cols, 2);
+        let (atb_p, btb_p) = pinned.gram_stats(&store, &b);
+        let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
+        assert_eq!(atb_p, atb_n);
+        assert_eq!(btb_p, btb_n);
     }
 }

@@ -1,5 +1,6 @@
 //! Map-reduce compute backend: the two streaming kernels fan out one job
-//! per [`ColumnStore`] shard onto a [`ThreadPool`], then reduce partials
+//! per [`ColumnStore`] shard onto the persistent
+//! [`crate::coordinator::pool::ThreadPool`], then reduce partials
 //! **in shard order**.
 //!
 //! Determinism contract: for a fixed store shard count the result is a
@@ -12,6 +13,17 @@
 //! `NativeBackend` bit-for-bit on any store (shards = 1 included), which
 //! `rust/tests/runtime_parity.rs` and the property tests below enforce.
 //!
+//! Two ways to get a backend:
+//!
+//! * [`ShardedBackend::new`] owns a private pool (standalone use, tests,
+//!   benches) — workers are spawned once and live for the backend's
+//!   lifetime, not per call.
+//! * [`ShardedBackend::with_handle`] shares an existing pool through a
+//!   [`PoolHandle`] — the two-level configuration, where outer jobs
+//!   (grid points, per-class fits) and these inner shard kernels draw
+//!   from one worker budget.  Nested submission is deadlock-free (the
+//!   pool's helping loop runs a submitter's own jobs in place).
+//!
 //! The `ComputeBackend` trait itself stays `!Send` (PJRT handles are
 //! `Rc`-based); the shard workers only ever see `&[f64]` slices and the
 //! plain-data [`ColumnStore`], both `Sync`, so the pool fan-out lives
@@ -21,7 +33,7 @@ use crate::backend::store::{
     gram_partial, gram_stats_seq, transform_abs_seq, transform_block, ColumnStore,
 };
 use crate::backend::{ComputeBackend, NativeBackend};
-use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::pool::{PoolHandle, ThreadPool};
 use crate::linalg::dense::Matrix;
 
 /// Default shard floor for training fits: below this many rows per
@@ -33,32 +45,77 @@ pub const MIN_ROWS_PER_SHARD: usize = 4096;
 
 /// Intra-fit parallel backend (map-reduce over row shards).
 pub struct ShardedBackend {
-    pool: ThreadPool,
+    /// Present when this backend spawned its own pool; keeps the workers
+    /// alive exactly as long as the backend.  `None` in the shared
+    /// (two-level) configuration.
+    _owned: Option<ThreadPool>,
+    pool: PoolHandle,
+    /// Inner-axis worker budget.  It shapes **store sizing**
+    /// ([`ComputeBackend::preferred_shards`] caps at this value) and
+    /// gates the sequential fallback (`inner_workers == 1`); the kernel
+    /// fan-out itself always submits one job per *store* shard, so a
+    /// store sized elsewhere (pinned parity tests, foreign drivers) can
+    /// enqueue more jobs than the budget — they queue, they don't spawn
+    /// threads.
+    inner_workers: usize,
     min_rows_per_shard: usize,
+    /// The per-shard work threshold, copied out of the pool's one-time
+    /// calibration at construction (or overridden by
+    /// [`ShardedBackend::with_min_work`]).  A plain field — the kernel
+    /// hot path must not take the pool's calibration mutex per call.
+    min_work: usize,
 }
 
 impl ShardedBackend {
-    /// Backend with `workers` shard-worker threads (clamped to ≥ 1) and
-    /// the default [`MIN_ROWS_PER_SHARD`] floor.
+    /// Backend owning a fresh pool with `workers` shard-worker threads
+    /// (clamped to ≥ 1) and the default [`MIN_ROWS_PER_SHARD`] floor.
     pub fn new(workers: usize) -> Self {
         Self::with_min_rows(workers, MIN_ROWS_PER_SHARD)
     }
 
-    /// Backend with an explicit shard floor — the knob callers with
-    /// lighter- or heavier-than-training per-row work use to decide
-    /// when sharding starts paying off.
+    /// [`ShardedBackend::new`] with an explicit shard floor — the knob
+    /// callers with lighter- or heavier-than-training per-row work use
+    /// to decide when sharding starts paying off.
     pub fn with_min_rows(workers: usize, min_rows_per_shard: usize) -> Self {
+        let pool = ThreadPool::new(workers);
+        let handle = pool.handle();
+        let inner_workers = pool.workers();
+        let min_work = handle.adaptive_min_work();
         ShardedBackend {
-            pool: ThreadPool::new(workers),
+            _owned: Some(pool),
+            pool: handle,
+            inner_workers,
             min_rows_per_shard: min_rows_per_shard.max(1),
+            min_work,
         }
     }
 
     /// Backend sized to the machine (available parallelism − 1).
     pub fn default_parallel() -> Self {
+        let pool = ThreadPool::default_size();
+        let handle = pool.handle();
+        let inner_workers = pool.workers();
+        let min_work = handle.adaptive_min_work();
         ShardedBackend {
-            pool: ThreadPool::default_size(),
+            _owned: Some(pool),
+            pool: handle,
+            inner_workers,
             min_rows_per_shard: MIN_ROWS_PER_SHARD,
+            min_work,
+        }
+    }
+
+    /// Backend drawing from a **shared** pool: `inner_workers` is this
+    /// backend's slice of the worker budget (usually the `inner` half of
+    /// [`PoolHandle::budget_split`]), not the pool's total size.
+    pub fn with_handle(handle: PoolHandle, inner_workers: usize, min_rows: usize) -> Self {
+        let min_work = handle.adaptive_min_work();
+        ShardedBackend {
+            _owned: None,
+            pool: handle,
+            inner_workers: inner_workers.max(1),
+            min_rows_per_shard: min_rows.max(1),
+            min_work,
         }
     }
 
@@ -78,25 +135,52 @@ impl ShardedBackend {
         }
     }
 
-    /// Worker-thread count.
+    /// [`ShardedBackend::boxed_for`] over a shared pool: sharded when the
+    /// inner budget exceeds 1, native otherwise.
+    pub fn boxed_with_handle(
+        handle: PoolHandle,
+        inner_workers: usize,
+        min_rows: usize,
+    ) -> Box<dyn ComputeBackend> {
+        if inner_workers > 1 {
+            Box::new(ShardedBackend::with_handle(handle, inner_workers, min_rows))
+        } else {
+            Box::new(NativeBackend)
+        }
+    }
+
+    /// Override the calibrated dispatch threshold (tests/benches: pin the
+    /// parallel or sequential path deterministically; 0 forces parallel).
+    pub fn with_min_work(mut self, min_work: usize) -> Self {
+        self.min_work = min_work;
+        self
+    }
+
+    /// Inner-axis worker budget.
     pub fn workers(&self) -> usize {
-        self.pool.workers()
+        self.inner_workers
+    }
+
+    /// The per-shard multiply-add count below which this backend takes
+    /// the (bit-identical) sequential path — the pool's calibrated
+    /// [`PoolHandle::adaptive_min_work`] copied at construction, unless
+    /// overridden via [`ShardedBackend::with_min_work`].
+    pub fn min_work_threshold(&self) -> usize {
+        self.min_work
     }
 }
-
-/// Per-shard multiply-add count below which the scoped-thread spawn
-/// (`ThreadPool` creates and joins workers per call — tens of µs) costs
-/// more than it buys.  Falling back to the sequential path is free of
-/// determinism concerns: both paths produce identical bits, so the
-/// switch is invisible in results.  A persistent channel-fed pool would
-/// remove the spawn cost entirely — tracked in ROADMAP.md.
-const MIN_WORK_PER_SHARD: usize = 256 * 1024;
 
 impl ComputeBackend for ShardedBackend {
     fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
         let n = cols.n_shards();
-        let work_per_shard = cols.len().max(1) * (cols.rows() / n.max(1));
-        if n == 1 || self.pool.workers() == 1 || work_per_shard < MIN_WORK_PER_SHARD {
+        if n == 1 || self.inner_workers == 1 {
+            return gram_stats_seq(cols, b_col);
+        }
+        // Falling back below the threshold is free of determinism
+        // concerns: both paths produce identical bits, so the switch is
+        // invisible in results.
+        let work_per_shard = cols.len().max(1) * (cols.rows() / n);
+        if work_per_shard < self.min_work_threshold() {
             return gram_stats_seq(cols, b_col);
         }
         let ids: Vec<usize> = (0..n).collect();
@@ -116,8 +200,11 @@ impl ComputeBackend for ShardedBackend {
 
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
         let n = cols.n_shards();
-        let work_per_shard = cols.len().max(1) * u.cols().max(1) * (cols.rows() / n.max(1));
-        if n == 1 || self.pool.workers() == 1 || work_per_shard < MIN_WORK_PER_SHARD {
+        if n == 1 || self.inner_workers == 1 {
+            return transform_abs_seq(cols, c, u);
+        }
+        let work_per_shard = cols.len().max(1) * u.cols().max(1) * (cols.rows() / n);
+        if work_per_shard < self.min_work_threshold() {
             return transform_abs_seq(cols, c, u);
         }
         let ids: Vec<usize> = (0..n).collect();
@@ -137,10 +224,11 @@ impl ComputeBackend for ShardedBackend {
     }
 
     fn preferred_shards(&self, m: usize) -> usize {
-        // one shard per worker, but never shard below the hand-off floor —
-        // small inputs stay single-shard and bit-identical to NativeBackend
+        // one shard per inner-budget worker, but never shard below the
+        // hand-off floor — small inputs stay single-shard and
+        // bit-identical to NativeBackend
         let cap = (m / self.min_rows_per_shard).max(1);
-        self.pool.workers().min(cap)
+        self.inner_workers.min(cap)
     }
 }
 
@@ -164,12 +252,12 @@ mod tests {
         // shard counts from the issue checklist, uneven m including m < shards
         property(12, |rng| {
             let ell = 1 + rng.below(6);
+            let sharded = ShardedBackend::new(4);
             for &k in &[1usize, 2, 3, 7] {
                 for &m in &[1usize, 3, 5, 7, 8, 41, 137] {
                     let cols = random_cols(rng, m, ell);
                     let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
                     let store = ColumnStore::from_cols(&cols, k);
-                    let sharded = ShardedBackend::new(4);
                     let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
                     let (atb_s, btb_s) = sharded.gram_stats(&store, &b);
                     if bits(&atb_n) != bits(&atb_s) || btb_n.to_bits() != btb_s.to_bits() {
@@ -182,10 +270,34 @@ mod tests {
     }
 
     #[test]
+    fn forced_parallel_path_is_bitwise_identical_on_tiny_inputs() {
+        // min_work 0 pins the pool fan-out even where the adaptive
+        // threshold would fall back — the parallel path itself must be
+        // bit-identical, not just the fallback
+        property(8, |rng| {
+            let forced = ShardedBackend::new(3).with_min_work(0);
+            for &k in &[2usize, 3, 5] {
+                for &m in &[2usize, 7, 23, 64] {
+                    let cols = random_cols(rng, m, 3);
+                    let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+                    let store = ColumnStore::from_cols(&cols, k);
+                    let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
+                    let (atb_s, btb_s) = forced.gram_stats(&store, &b);
+                    if bits(&atb_n) != bits(&atb_s) || btb_n.to_bits() != btb_s.to_bits() {
+                        return Err(format!("forced-parallel mismatch at m={m} shards={k}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn transform_abs_matches_native_across_shard_counts() {
         property(12, |rng| {
             let ell = 1 + rng.below(4);
             let g = 1 + rng.below(4);
+            let sharded = ShardedBackend::new(3);
             for &k in &[1usize, 2, 3, 7] {
                 for &m in &[1usize, 3, 6, 7, 40] {
                     let cols = random_cols(rng, m, ell);
@@ -202,7 +314,6 @@ mod tests {
                             u.set(i, j, rng.normal());
                         }
                     }
-                    let sharded = ShardedBackend::new(3);
                     let tn = NativeBackend.transform_abs(&store, &c, &u);
                     let ts = sharded.transform_abs(&store, &c, &u);
                     for (a, b) in tn.data().iter().zip(ts.data().iter()) {
@@ -224,7 +335,7 @@ mod tests {
         let cols = random_cols(&mut rng, 500, 5);
         let b: Vec<f64> = (0..500).map(|_| rng.normal()).collect();
         let store = ColumnStore::from_cols(&cols, 7);
-        let sharded = ShardedBackend::new(4);
+        let sharded = ShardedBackend::new(4).with_min_work(0); // force the pool path
         let (atb0, btb0) = sharded.gram_stats(&store, &b);
         for _ in 0..5 {
             let (atb, btb) = sharded.gram_stats(&store, &b);
@@ -254,5 +365,44 @@ mod tests {
         assert_eq!(ShardedBackend::boxed_for(4).name(), "sharded");
         assert_eq!(ShardedBackend::boxed_with_min_rows(0, 64).name(), "native");
         assert_eq!(ShardedBackend::boxed_with_min_rows(2, 64).name(), "sharded");
+    }
+
+    #[test]
+    fn shared_handle_backends_draw_from_one_pool() {
+        let pool = ThreadPool::new(4);
+        let (outer, inner) = pool.handle().budget_split(2);
+        assert_eq!((outer, inner), (2, 2));
+        let a = ShardedBackend::with_handle(pool.handle(), inner, 64).with_min_work(0);
+        let b = ShardedBackend::with_handle(pool.handle(), inner, 64).with_min_work(0);
+        assert_eq!(a.workers(), 2);
+        assert_eq!(
+            ShardedBackend::boxed_with_handle(pool.handle(), 1, 64).name(),
+            "native"
+        );
+        assert_eq!(
+            ShardedBackend::boxed_with_handle(pool.handle(), 3, 64).name(),
+            "sharded"
+        );
+        // both backends compute correctly over the shared queue
+        let mut rng = Rng::new(11);
+        let cols = random_cols(&mut rng, 200, 4);
+        let v: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        let store = ColumnStore::from_cols(&cols, 3);
+        let (atb_a, btb_a) = a.gram_stats(&store, &v);
+        let (atb_b, btb_b) = b.gram_stats(&store, &v);
+        let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &v);
+        assert_eq!(bits(&atb_a), bits(&atb_n));
+        assert_eq!(bits(&atb_b), bits(&atb_n));
+        assert_eq!(btb_a.to_bits(), btb_n.to_bits());
+        assert_eq!(btb_b.to_bits(), btb_n.to_bits());
+    }
+
+    #[test]
+    fn min_work_threshold_prefers_override() {
+        let be = ShardedBackend::new(2).with_min_work(123);
+        assert_eq!(be.min_work_threshold(), 123);
+        let be = ShardedBackend::new(2);
+        let v = be.min_work_threshold();
+        assert!((1usize << 12..=1usize << 20).contains(&v), "calibrated threshold {v}");
     }
 }

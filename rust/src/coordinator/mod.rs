@@ -1,5 +1,7 @@
-//! L3 coordinator: thread-pool job scheduling for per-class / per-fold /
-//! per-grid-point fits, and a serving-style batched transform service.
+//! L3 coordinator: the persistent work-stealing thread pool behind both
+//! parallelism levels (per-class / per-fold / per-grid-point jobs above
+//! the backend trait, shard kernels below it), and a serving-style
+//! batched transform service.
 //!
 //! The paper's contribution is algorithmic, so the coordinator is a thin
 //! but real runtime layer (per the architecture contract): it owns worker
@@ -10,6 +12,6 @@ pub mod pool;
 pub mod router;
 pub mod service;
 
-pub use pool::ThreadPool;
+pub use pool::{PoolHandle, ThreadPool};
 pub use router::ModelRouter;
 pub use service::{ServeMetrics, TransformService};

@@ -1,21 +1,462 @@
-//! A small scoped thread pool (tokio/rayon are unavailable offline; the
-//! std::thread::scope pattern is all the paper's workloads need).
+//! Persistent work-stealing thread pool — the coordinator's job engine.
 //!
-//! Jobs are `FnOnce() -> T`; results come back **in submission order**
-//! regardless of completion order — the invariant the coordinator property
-//! tests pin down (every job runs exactly once, order preserved).
+//! The PR-1 pool spawned and joined scoped threads on **every call**
+//! (tens of µs per `gram_stats`), which forced `ShardedBackend` behind a
+//! large hard-coded work threshold and left small-batch serving traffic
+//! single-threaded.  This pool spawns its workers **once** at
+//! construction and feeds them jobs over an MPMC queue
+//! (`Mutex<VecDeque>` + `Condvar`; tokio/rayon/crossbeam are unavailable
+//! offline):
+//!
+//! * **In-submission-order results** — [`ThreadPool::run_all`] /
+//!   [`PoolHandle::try_run_all`] return results indexed by submission
+//!   position regardless of completion order: the deterministic-reduction
+//!   contract the data plane and `rust/tests/pool_concurrency.rs` pin.
+//! * **Work stealing / helping** — the submitting thread does not idle
+//!   while its batch runs: it pops *its own batch's* queued jobs and
+//!   executes them in place.  This is also what makes **nested
+//!   submission** (a job submitting a sub-batch through a
+//!   [`PoolHandle`]) deadlock-free: even with every worker busy running
+//!   outer jobs, each nested submitter drains its own inner jobs itself.
+//! * **Panic containment** — each job runs under `catch_unwind`; a
+//!   panicking job poisons only its own result slot
+//!   ([`PoolHandle::try_run_all`] reports it as `Err(message)`), the
+//!   remaining jobs complete, and the workers survive.
+//! * **Graceful shutdown** — dropping the [`ThreadPool`] drains queued
+//!   jobs, then joins every worker.  [`PoolHandle`]s that outlive the
+//!   pool degrade gracefully: their submissions execute inline on the
+//!   submitting thread via the helping loop.
+//!
+//! [`PoolHandle`] (cheaply clonable, `Send + Sync`) is the sharing
+//! surface for **two-level parallelism**: grid-search / per-class fit
+//! jobs (outer axis) and `ShardedBackend` shard kernels (inner axis)
+//! draw from one pool.  [`PoolHandle::budget_split`] divides the worker
+//! budget (`outer × inner ≤ workers`) and
+//! [`PoolHandle::adaptive_min_work`] is the calibrated dispatch-overhead
+//! threshold (measured per pool: job hand-off cost vs. multiply-add
+//! throughput) below which handing a shard to a worker cannot pay.
 
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
 
-/// Fixed-size scoped thread pool.
-pub struct ThreadPool {
+/// A submission-order job: runs once on some thread, yields a `T`.
+pub type Job<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
+
+/// Type-erased queue entry (lifetime erased — see `extend_task_lifetime`).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Clamp range for the calibrated per-shard work threshold, in
+/// multiply-add units.  The floor keeps degenerate measurements from
+/// sharding trivial inputs; the ceiling keeps a noisy calibration from
+/// re-serializing genuinely large shards (the old hard-coded constant
+/// was 256·1024).
+const ADAPTIVE_MIN_WORK_FLOOR: usize = 1 << 12;
+const ADAPTIVE_MIN_WORK_CEIL: usize = 1 << 20;
+
+struct QueueState {
+    /// `(batch token, task)` in FIFO order across all batches.
+    tasks: VecDeque<(u64, Task)>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    task_ready: Condvar,
+    next_batch: AtomicU64,
+    live_workers: AtomicUsize,
     workers: usize,
+    /// memoized [`PoolHandle::adaptive_min_work`] (calibrated once per pool).
+    min_work: Mutex<Option<usize>>,
+}
+
+/// Per-batch result collection: slots in submission order + completion
+/// count, guarded by one mutex so the waiter cannot miss the last
+/// completion (the classic condvar pattern).
+struct Batch<T> {
+    slots: Mutex<BatchSlots<T>>,
+    done_cv: Condvar,
+}
+
+struct BatchSlots<T> {
+    results: Vec<Option<Result<T, String>>>,
+    completed: usize,
+}
+
+impl<T> Batch<T> {
+    fn complete(&self, idx: usize, out: Result<T, String>) {
+        let mut s = self.slots.lock().expect("pool batch slots");
+        debug_assert!(s.results[idx].is_none(), "job {idx} completed twice");
+        s.results[idx] = Some(out);
+        s.completed += 1;
+        if s.completed == s.results.len() {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked (non-string payload)".to_string()
+    }
+}
+
+/// Extend a task's lifetime so it can sit in the `'static` worker queue.
+///
+/// # Safety
+/// The caller must not return until the task has been executed (or
+/// dropped) — `try_run_all` guarantees this by blocking until every slot
+/// of its batch is complete, so no borrow captured by the task can be
+/// outlived by the task itself.
+unsafe fn extend_task_lifetime<'env>(task: Box<dyn FnOnce() + Send + 'env>) -> Task {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task)
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut st = shared.state.lock().expect("pool queue");
+            loop {
+                if let Some((_, task)) = st.tasks.pop_front() {
+                    break Some(task);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.task_ready.wait(st).expect("pool queue wait");
+            }
+        };
+        match task {
+            Some(task) => task(), // panic-contained inside the task wrapper
+            None => {
+                shared.live_workers.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
+        }
+    }
+}
+
+/// Machine-level multiply-add throughput (ns per fused multiply-add),
+/// measured once per process — it is a hardware property, not a pool
+/// property, so every pool shares the sample.
+fn madd_ns_per_op() -> f64 {
+    static MADD_NS: Mutex<Option<f64>> = Mutex::new(None);
+    let mut cached = MADD_NS.lock().expect("madd calibration");
+    if let Some(v) = *cached {
+        return v;
+    }
+    const ITERS: usize = 200_000;
+    let t = Instant::now();
+    let mut acc = 0.0f64;
+    let mut x = 1.000_000_1f64;
+    for _ in 0..ITERS {
+        acc += x * 1.000_000_3;
+        x *= 0.999_999_9;
+    }
+    let mut ns = t.elapsed().as_nanos() as f64 / ITERS as f64;
+    // keep the loop observable so the optimizer cannot elide it
+    if !acc.is_finite() {
+        ns += 1.0;
+    }
+    let v = ns.max(0.05);
+    *cached = Some(v);
+    v
+}
+
+/// Cheaply clonable, `Send + Sync` handle onto a [`ThreadPool`]'s queue —
+/// the object that grid-search jobs, per-class fits, and
+/// `ShardedBackend`s share so both parallelism levels draw from one
+/// worker budget.
+#[derive(Clone)]
+pub struct PoolHandle {
+    shared: Arc<Shared>,
+}
+
+impl PoolHandle {
+    /// Worker-thread count the pool was built with.
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Workers currently alive (0 after the owning pool is dropped).
+    pub fn live_workers(&self) -> usize {
+        self.shared.live_workers.load(Ordering::SeqCst)
+    }
+
+    /// Split the worker budget between `outer_jobs` outer jobs and the
+    /// per-job inner (shard) axis: `(outer, inner)` with
+    /// `outer × inner ≤ workers` and both ≥ 1.  Few outer jobs on a wide
+    /// pool get a wide inner budget; more outer jobs than workers get
+    /// `inner = 1`.
+    pub fn budget_split(&self, outer_jobs: usize) -> (usize, usize) {
+        let w = self.workers().max(1);
+        let outer = outer_jobs.clamp(1, w);
+        let inner = (w / outer).max(1);
+        (outer, inner)
+    }
+
+    /// Run all jobs, returning results in submission order; a panicking
+    /// job yields `Err(panic message)` in its own slot while every other
+    /// job still runs and the workers survive.
+    pub fn try_run_all<'env, T: Send + 'env>(
+        &self,
+        jobs: Vec<Job<'env, T>>,
+    ) -> Vec<Result<T, String>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 {
+            // single job: no dispatch, same containment semantics
+            let job = jobs.into_iter().next().expect("len checked");
+            return vec![catch_unwind(AssertUnwindSafe(job)).map_err(panic_message)];
+        }
+        let batch: Arc<Batch<T>> = Arc::new(Batch {
+            slots: Mutex::new(BatchSlots {
+                results: (0..n).map(|_| None).collect(),
+                completed: 0,
+            }),
+            done_cv: Condvar::new(),
+        });
+        let token = self.shared.next_batch.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().expect("pool queue");
+            for (idx, job) in jobs.into_iter().enumerate() {
+                let b = Arc::clone(&batch);
+                let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    let out = catch_unwind(AssertUnwindSafe(job)).map_err(panic_message);
+                    b.complete(idx, out);
+                });
+                // SAFETY: this function blocks below until every slot of
+                // `batch` is complete, i.e. until every task has run, so
+                // the 'env borrows cannot dangle while a task is alive.
+                st.tasks.push_back((token, unsafe { extend_task_lifetime(task) }));
+            }
+        }
+        self.shared.task_ready.notify_all();
+        // Helping loop: execute this batch's still-queued jobs on the
+        // submitting thread.  Guarantees progress even with zero free
+        // workers (nested submission, dropped pool) — the deadlock-freedom
+        // property `tests/pool_concurrency.rs` pins.
+        self.drain_own_batch(token);
+        // Wait for jobs stolen by workers; completion is signalled under
+        // the slots mutex, so the last wakeup cannot be missed.
+        let mut slots = batch.slots.lock().expect("pool batch slots");
+        while slots.completed < n {
+            slots = batch.done_cv.wait(slots).expect("pool batch wait");
+        }
+        let results = std::mem::take(&mut slots.results);
+        drop(slots);
+        results
+            .into_iter()
+            .map(|r| r.expect("pool: job dropped without completing"))
+            .collect()
+    }
+
+    /// Execute every queued task belonging to `token` on the calling
+    /// thread — the work-stealing half of the pool, shared by the
+    /// `try_run_all` helping loop and the calibration fallback.
+    ///
+    /// Steals in chunks of up to `STEAL_CHUNK` per lock acquisition so
+    /// interleaved batches don't degenerate into a scan-per-task
+    /// quadratic under the global queue lock, while workers can still
+    /// take the tasks left behind.  LIFO back-stealing is fine — results
+    /// land in submission-order slots regardless of execution order.
+    fn drain_own_batch(&self, token: u64) {
+        /// Per-lock steal bound: large enough to amortize a queue sweep,
+        /// small enough that workers freed mid-batch still find work.
+        const STEAL_CHUNK: usize = 32;
+        loop {
+            let mut stolen: Vec<Task> = Vec::new();
+            {
+                let mut st = self.shared.state.lock().expect("pool queue");
+                // O(1) fast path: the draining batch was usually pushed
+                // most recently, so its tasks sit at the back (workers
+                // pop from the front)
+                while stolen.len() < STEAL_CHUNK {
+                    let back_is_ours = matches!(st.tasks.back(), Some((t, _)) if *t == token);
+                    if !back_is_ours {
+                        break;
+                    }
+                    if let Some((_, task)) = st.tasks.pop_back() {
+                        stolen.push(task);
+                    }
+                }
+                if stolen.is_empty() && st.tasks.iter().any(|(t, _)| *t == token) {
+                    // interleaved batches: sweep own tasks out in ONE
+                    // pass instead of a scan-per-task
+                    let mut rest = VecDeque::with_capacity(st.tasks.len());
+                    for (t, task) in st.tasks.drain(..) {
+                        if t == token && stolen.len() < STEAL_CHUNK {
+                            stolen.push(task);
+                        } else {
+                            rest.push_back((t, task));
+                        }
+                    }
+                    st.tasks = rest;
+                }
+            }
+            if stolen.is_empty() {
+                return;
+            }
+            for task in stolen {
+                task();
+            }
+        }
+    }
+
+    /// [`PoolHandle::try_run_all`] that re-raises the first contained
+    /// panic on the submitting thread (after every job has finished).
+    pub fn run_all<'env, T: Send + 'env>(&self, jobs: Vec<Job<'env, T>>) -> Vec<T> {
+        self.try_run_all(jobs)
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(msg) => panic!("pool job panicked: {msg}"),
+            })
+            .collect()
+    }
+
+    /// Map a slice through a function in parallel (convenience wrapper,
+    /// submission order preserved).
+    pub fn map<I: Sync, T: Send>(&self, items: &[I], f: impl Fn(&I) -> T + Sync) -> Vec<T> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let fr = &f;
+        let jobs: Vec<Job<'_, T>> =
+            items.iter().map(|item| Box::new(move || fr(item)) as Job<'_, T>).collect();
+        self.run_all(jobs)
+    }
+
+    /// The calibrated per-shard work threshold (in multiply-add units)
+    /// below which dispatching a shard to this pool costs more than the
+    /// arithmetic it parallelizes.  Measured once per pool — per-job
+    /// hand-off time over the live queue vs. the machine's multiply-add
+    /// throughput — then memoized; clamped to
+    /// `[2^12, 2^20]` so a noisy sample cannot produce a degenerate
+    /// threshold.  Replaces PR 1's hard-coded `MIN_WORK_PER_SHARD`.
+    pub fn adaptive_min_work(&self) -> usize {
+        let mut cached = self.shared.min_work.lock().expect("pool calibration");
+        if let Some(v) = *cached {
+            return v;
+        }
+        let v = self.calibrate_min_work();
+        *cached = Some(v);
+        v
+    }
+
+    /// Dispatch `jobs` no-op tasks and wait for **workers** to run them,
+    /// WITHOUT the helping loop — `try_run_all` would let the submitting
+    /// thread drain its own batch in ~100 ns/job and the calibration
+    /// would measure that fast path instead of the cross-thread hand-off
+    /// (push → condvar wakeup → pop → complete → notify) that a real
+    /// shard job pays.  Falls back to draining inline only if the
+    /// workers are gone or saturated (bounded wait, no hang).  Public
+    /// for benches/diagnostics that want to time the true hand-off.
+    pub fn dispatch_to_workers(&self, jobs: usize) {
+        let batch: Arc<Batch<()>> = Arc::new(Batch {
+            slots: Mutex::new(BatchSlots {
+                results: (0..jobs).map(|_| None).collect(),
+                completed: 0,
+            }),
+            done_cv: Condvar::new(),
+        });
+        let token = self.shared.next_batch.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().expect("pool queue");
+            for idx in 0..jobs {
+                let b = Arc::clone(&batch);
+                // 'static closure: no transmute needed on this path
+                let task: Task = Box::new(move || b.complete(idx, Ok(())));
+                st.tasks.push_back((token, task));
+            }
+        }
+        self.shared.task_ready.notify_all();
+        let mut slots = batch.slots.lock().expect("pool batch slots");
+        while slots.completed < jobs {
+            // 10 ms is orders of magnitude above a healthy wakeup, so the
+            // timeout only fires when the workers are gone or saturated
+            let (guard, timeout) = batch
+                .done_cv
+                .wait_timeout(slots, std::time::Duration::from_millis(10))
+                .expect("pool batch wait");
+            slots = guard;
+            if timeout.timed_out() && slots.completed < jobs {
+                // workers gone or saturated: drain our own tasks inline
+                drop(slots);
+                self.drain_own_batch(token);
+                slots = batch.slots.lock().expect("pool batch slots");
+            }
+        }
+    }
+
+    fn calibrate_min_work(&self) -> usize {
+        if self.live_workers() == 0 {
+            // no workers to hand off to (pool already dropped): every
+            // submission runs inline, so the cheapest threshold applies
+            return ADAPTIVE_MIN_WORK_FLOOR;
+        }
+        const ROUNDS: usize = 4;
+        const JOBS_PER_ROUND: usize = 16;
+        // warm-up round: first wakeups bill thread-start latency
+        self.dispatch_to_workers(JOBS_PER_ROUND);
+        let t = Instant::now();
+        for _ in 0..ROUNDS {
+            self.dispatch_to_workers(JOBS_PER_ROUND);
+        }
+        let dispatch_ns = t.elapsed().as_nanos() as f64 / (ROUNDS * JOBS_PER_ROUND) as f64;
+        // a shard pays off once its multiply-adds dwarf the hand-off; the
+        // 2× margin covers reduction + cache effects the model ignores
+        let per_shard = (2.0 * dispatch_ns / madd_ns_per_op()) as usize;
+        per_shard.clamp(ADAPTIVE_MIN_WORK_FLOOR, ADAPTIVE_MIN_WORK_CEIL)
+    }
+}
+
+/// Persistent fixed-size thread pool.  Workers are spawned once here and
+/// joined on drop; all submission goes through the queue shared with
+/// every [`PoolHandle`].
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    joins: Vec<JoinHandle<()>>,
 }
 
 impl ThreadPool {
-    /// `workers` ≥ 1 (clamped).
+    /// Spawn `workers` long-lived workers (clamped to ≥ 1).
     pub fn new(workers: usize) -> Self {
-        ThreadPool { workers: workers.max(1) }
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { tasks: VecDeque::new(), shutdown: false }),
+            task_ready: Condvar::new(),
+            next_batch: AtomicU64::new(0),
+            live_workers: AtomicUsize::new(workers),
+            workers,
+            min_work: Mutex::new(None),
+        });
+        let joins = (0..workers)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("avi-pool-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        let pool = ThreadPool { shared, joins };
+        // Calibrate the dispatch threshold EAGERLY, while the pool is
+        // guaranteed idle: a lazy calibration under load (every worker
+        // busy with outer jobs) would measure wait_timeout stalls
+        // instead of hand-off cost and memoize a uselessly high
+        // threshold for the pool's whole lifetime.
+        pool.adaptive_min_work();
+        pool
     }
 
     /// Reasonable default: available parallelism − 1, at least 1.
@@ -24,72 +465,52 @@ impl ThreadPool {
         ThreadPool::new(n.saturating_sub(1).max(1))
     }
 
+    /// Worker-thread count.
     pub fn workers(&self) -> usize {
-        self.workers
+        self.shared.workers
     }
 
-    /// Run all jobs, returning results in submission order.
-    pub fn run_all<T: Send>(&self, jobs: Vec<Box<dyn FnOnce() -> T + Send>>) -> Vec<T> {
-        let n = jobs.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        // single worker or single job: run inline (no thread overhead)
-        if self.workers == 1 || n == 1 {
-            return jobs.into_iter().map(|j| j()).collect();
-        }
-        let queue: Mutex<Vec<(usize, Box<dyn FnOnce() -> T + Send>)>> =
-            Mutex::new(jobs.into_iter().enumerate().rev().collect());
-        let results: Mutex<Vec<Option<T>>> =
-            Mutex::new((0..n).map(|_| None).collect());
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(n) {
-                scope.spawn(|| loop {
-                    let job = queue.lock().expect("queue poisoned").pop();
-                    match job {
-                        Some((idx, f)) => {
-                            let out = f();
-                            results.lock().expect("results poisoned")[idx] = Some(out);
-                        }
-                        None => break,
-                    }
-                });
-            }
-        });
-        results
-            .into_inner()
-            .expect("results poisoned")
-            .into_iter()
-            .map(|r| r.expect("job dropped without result"))
-            .collect()
+    /// A clonable, `Send + Sync` handle sharing this pool's queue.
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle { shared: Arc::clone(&self.shared) }
     }
 
-    /// Map a slice through a function in parallel (convenience wrapper).
+    /// See [`PoolHandle::run_all`].
+    pub fn run_all<'env, T: Send + 'env>(&self, jobs: Vec<Job<'env, T>>) -> Vec<T> {
+        self.handle().run_all(jobs)
+    }
+
+    /// See [`PoolHandle::try_run_all`].
+    pub fn try_run_all<'env, T: Send + 'env>(
+        &self,
+        jobs: Vec<Job<'env, T>>,
+    ) -> Vec<Result<T, String>> {
+        self.handle().try_run_all(jobs)
+    }
+
+    /// See [`PoolHandle::map`].
     pub fn map<I: Sync, T: Send>(&self, items: &[I], f: impl Fn(&I) -> T + Sync) -> Vec<T> {
-        if items.is_empty() {
-            return Vec::new();
+        self.handle().map(items, f)
+    }
+
+    /// See [`PoolHandle::adaptive_min_work`].
+    pub fn adaptive_min_work(&self) -> usize {
+        self.handle().adaptive_min_work()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            // poison-proof: a worker cannot poison this lock (user code
+            // runs under catch_unwind), but stay robust anyway
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
         }
-        let n = items.len();
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(n) {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let out = f(&items[i]);
-                    results.lock().expect("poisoned")[i] = Some(out);
-                });
-            }
-        });
-        results
-            .into_inner()
-            .expect("poisoned")
-            .into_iter()
-            .map(|r| r.expect("missing result"))
-            .collect()
+        self.shared.task_ready.notify_all();
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
     }
 }
 
@@ -101,13 +522,13 @@ mod tests {
     #[test]
     fn results_in_submission_order() {
         let pool = ThreadPool::new(4);
-        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..64usize)
+        let jobs: Vec<Job<'static, usize>> = (0..64usize)
             .map(|i| {
                 Box::new(move || {
                     // stagger completion order
                     std::thread::sleep(std::time::Duration::from_micros((64 - i) as u64));
                     i * i
-                }) as Box<dyn FnOnce() -> usize + Send>
+                }) as Job<'static, usize>
             })
             .collect();
         let out = pool.run_all(jobs);
@@ -115,10 +536,9 @@ mod tests {
     }
 
     #[test]
-    fn single_worker_runs_inline() {
+    fn single_worker_pool_completes_batches() {
         let pool = ThreadPool::new(1);
-        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> =
-            vec![Box::new(|| 1), Box::new(|| 2)];
+        let jobs: Vec<Job<'static, u32>> = vec![Box::new(|| 1), Box::new(|| 2)];
         assert_eq!(pool.run_all(jobs), vec![1, 2]);
     }
 
@@ -130,11 +550,12 @@ mod tests {
     }
 
     #[test]
-    fn map_matches_serial() {
+    fn map_matches_serial_and_borrows_locals() {
         let pool = ThreadPool::new(3);
         let items: Vec<f64> = (0..100).map(|i| i as f64).collect();
-        let par = pool.map(&items, |x| x * 2.0);
-        let ser: Vec<f64> = items.iter().map(|x| x * 2.0).collect();
+        let offset = 1.5; // borrowed by the closure: non-'static jobs work
+        let par = pool.map(&items, |x| x * 2.0 + offset);
+        let ser: Vec<f64> = items.iter().map(|x| x * 2.0 + offset).collect();
         assert_eq!(par, ser);
     }
 
@@ -143,19 +564,19 @@ mod tests {
         property(10, |rng| {
             let n = rng.below(40) + 1;
             let workers = rng.below(6) + 1;
-            let counter = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let counter = std::sync::Arc::new(AtomicUsize::new(0));
             let pool = ThreadPool::new(workers);
-            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..n)
+            let jobs: Vec<Job<'static, usize>> = (0..n)
                 .map(|i| {
                     let c = counter.clone();
                     Box::new(move || {
-                        c.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        c.fetch_add(1, Ordering::SeqCst);
                         i
-                    }) as Box<dyn FnOnce() -> usize + Send>
+                    }) as Job<'static, usize>
                 })
                 .collect();
             let out = pool.run_all(jobs);
-            if counter.load(std::sync::atomic::Ordering::SeqCst) != n {
+            if counter.load(Ordering::SeqCst) != n {
                 return Err("some job ran != 1 times".into());
             }
             if out != (0..n).collect::<Vec<usize>>() {
@@ -163,5 +584,66 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn panic_poisons_only_its_slot() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Job<'static, u32>> = vec![
+            Box::new(|| 10),
+            Box::new(|| panic!("boom-42")),
+            Box::new(|| 30),
+        ];
+        let out = pool.try_run_all(jobs);
+        assert_eq!(out[0].as_ref().unwrap(), &10);
+        assert!(out[1].as_ref().unwrap_err().contains("boom-42"));
+        assert_eq!(out[2].as_ref().unwrap(), &30);
+        // workers survive: the pool is still usable
+        let more: Vec<Job<'static, u32>> = vec![Box::new(|| 7), Box::new(|| 8)];
+        assert_eq!(pool.run_all(more), vec![7, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool job panicked")]
+    fn run_all_reraises_contained_panic() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Job<'static, u32>> =
+            vec![Box::new(|| 1), Box::new(|| panic!("surface me")), Box::new(|| 3)];
+        let _ = pool.run_all(jobs);
+    }
+
+    #[test]
+    fn handle_outlives_pool_gracefully() {
+        let pool = ThreadPool::new(2);
+        let handle = pool.handle();
+        drop(pool);
+        assert_eq!(handle.live_workers(), 0);
+        // submissions now execute inline via the helping loop
+        let jobs: Vec<Job<'static, u32>> = vec![Box::new(|| 5), Box::new(|| 6)];
+        assert_eq!(handle.run_all(jobs), vec![5, 6]);
+    }
+
+    #[test]
+    fn budget_split_never_oversubscribes() {
+        let pool = ThreadPool::new(8);
+        let h = pool.handle();
+        for jobs in [1usize, 2, 3, 7, 8, 9, 100] {
+            let (outer, inner) = h.budget_split(jobs);
+            assert!(outer >= 1 && inner >= 1, "jobs={jobs}");
+            assert!(outer * inner <= 8, "jobs={jobs}: {outer}×{inner}");
+            assert!(outer <= jobs.max(1), "jobs={jobs}");
+        }
+        assert_eq!(h.budget_split(2), (2, 4));
+        assert_eq!(h.budget_split(0), (1, 8));
+        assert_eq!(ThreadPool::new(1).handle().budget_split(5), (1, 1));
+    }
+
+    #[test]
+    fn adaptive_min_work_is_clamped_and_memoized() {
+        let pool = ThreadPool::new(2);
+        let v = pool.adaptive_min_work();
+        assert!((ADAPTIVE_MIN_WORK_FLOOR..=ADAPTIVE_MIN_WORK_CEIL).contains(&v));
+        assert_eq!(pool.adaptive_min_work(), v, "memoized value must be stable");
+        assert_eq!(pool.handle().adaptive_min_work(), v);
     }
 }

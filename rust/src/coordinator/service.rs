@@ -14,6 +14,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::backend::{ComputeBackend, ShardedBackend};
+use crate::coordinator::pool::PoolHandle;
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::pipeline::PipelineModel;
@@ -80,15 +81,11 @@ impl TransformService {
         Self::start_sharded(model, policy, 1)
     }
 
-    /// [`TransformService::start`] with an intra-batch parallelism knob:
-    /// the batcher runs the (FT) transform through a [`ShardedBackend`]
-    /// with `intra_workers` shard workers, on top of the request-level
-    /// batching.  Sharding engages for batches of at least
-    /// 2 × [`SERVE_MIN_ROWS_PER_SHARD`] rows — size
-    /// [`BatchPolicy::max_batch`] at least that large (the default 256
-    /// cap keeps every batch sequential) for the knob to matter.  The
-    /// backend is constructed inside the batcher thread — the
-    /// `ComputeBackend` trait is `!Send` by design.
+    /// Deprecated alias for [`TransformService::start_pooled`] that owns
+    /// a private worker pool: the batcher runs the (FT) transform through
+    /// a [`ShardedBackend`] with `intra_workers` shard workers, on top of
+    /// the request-level batching.  Kept for the PR-1 call sites; new
+    /// code shares the process pool via `start_pooled`.
     pub fn start_sharded(
         model: Arc<PipelineModel>,
         policy: BatchPolicy,
@@ -103,6 +100,39 @@ impl TransformService {
         let handle = std::thread::spawn(move || {
             let backend =
                 ShardedBackend::boxed_with_min_rows(intra_workers, SERVE_MIN_ROWS_PER_SHARD);
+            batcher_loop(model, rx, policy, stop_c, metrics_c, backend.as_ref())
+        });
+        TransformService { tx, handle: Some(handle), stop, metrics, n_features }
+    }
+
+    /// [`TransformService::start`] drawing shard workers from a
+    /// **shared** pool: the batcher's (FT) transform fans shards onto
+    /// `pool` with an `inner_workers` budget, so serving composes with
+    /// whatever else (grid search, per-class refits) the process runs on
+    /// the same workers.  The persistent pool's cheap dispatch means the
+    /// serving shard floor ([`SERVE_MIN_ROWS_PER_SHARD`]) — not thread
+    /// spawn cost — is what gates small batches now.  The backend itself
+    /// is still constructed inside the batcher thread (the
+    /// `ComputeBackend` trait is `!Send` by design); only the `Send +
+    /// Sync` [`PoolHandle`] crosses.
+    pub fn start_pooled(
+        model: Arc<PipelineModel>,
+        policy: BatchPolicy,
+        pool: PoolHandle,
+        inner_workers: usize,
+    ) -> Self {
+        let (tx, rx) = channel::<Request>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(ServeMetrics::default());
+        let n_features = model.perm.len();
+        let stop_c = stop.clone();
+        let metrics_c = metrics.clone();
+        let handle = std::thread::spawn(move || {
+            let backend = ShardedBackend::boxed_with_handle(
+                pool,
+                inner_workers,
+                SERVE_MIN_ROWS_PER_SHARD,
+            );
             batcher_loop(model, rx, policy, stop_c, metrics_c, backend.as_ref())
         });
         TransformService { tx, handle: Some(handle), stop, metrics, n_features }
@@ -320,6 +350,30 @@ mod tests {
         let online: Vec<usize> = responses.iter().map(|r| r.label).collect();
         assert_eq!(online, offline);
         svc.shutdown();
+    }
+
+    #[test]
+    fn pooled_service_matches_offline_path() {
+        use crate::coordinator::pool::ThreadPool;
+        let model = trained_model();
+        let ds = synthetic_dataset(52, 26);
+        let offline = model.predict(&ds.x);
+        let pool = ThreadPool::new(3);
+        let svc = TransformService::start_pooled(
+            model.clone(),
+            BatchPolicy::default(),
+            pool.handle(),
+            pool.workers(),
+        );
+        let rows: Vec<Vec<f64>> = (0..52).map(|i| ds.x.row(i).to_vec()).collect();
+        let responses = svc.predict_many(rows).unwrap();
+        let online: Vec<usize> = responses.iter().map(|r| r.label).collect();
+        assert_eq!(online, offline);
+        svc.shutdown();
+        // the shared pool survives the service and stays usable
+        let jobs: Vec<crate::coordinator::pool::Job<'static, u32>> =
+            vec![Box::new(|| 1), Box::new(|| 2)];
+        assert_eq!(pool.run_all(jobs), vec![1, 2]);
     }
 
     #[test]

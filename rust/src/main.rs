@@ -24,7 +24,7 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use avi_scale::backend::{ComputeBackend, NativeBackend, ShardedBackend};
+use avi_scale::backend::{ComputeBackend, NativeBackend};
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::coordinator::service::{latency_percentiles, BatchPolicy, TransformService};
 use avi_scale::data::{load_registry_dataset, REGISTRY};
@@ -32,7 +32,10 @@ use avi_scale::error::Result;
 use avi_scale::estimator::EstimatorConfig;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::ordering::FeatureOrdering;
-use avi_scale::pipeline::{fit_transformer, train_pipeline_with_backend, PipelineConfig};
+use avi_scale::pipeline::{
+    fit_transformer, fit_transformer_pooled, train_pipeline_pooled, train_pipeline_with_backend,
+    PipelineConfig,
+};
 use avi_scale::runtime::{PjrtRuntime, XlaBackend};
 use avi_scale::svm::linear::LinearSvmConfig;
 use avi_scale::util::sci;
@@ -89,11 +92,18 @@ OPTIONS:
   --psi <f64>            vanishing parameter        (default 0.005)
   --scale <f64>          dataset size multiplier    (default 0.05)
   --seed <u64>           RNG seed                   (default 42)
-  --backend <native|xla|sharded>  compute backend   (default native)
-  --shards <n>           intra-fit shard workers (sharded backend; n>1
-                         with --backend native also selects sharded)
+  --backend <native|xla|sharded>  compute backend   (default native: the
+                         sequential reference, bit-identical everywhere)
+  --workers <n>          size of the one persistent worker pool the whole
+                         command shares: per-class fit / grid-point jobs
+                         (outer axis) and ShardedBackend shard kernels
+                         (inner axis) split this budget.  n>1 opts into
+                         the pooled data plane (as does --backend sharded,
+                         which without a count sizes the pool to the
+                         machine: available parallelism - 1)
+  --shards <n>           DEPRECATED alias for --workers (the old intra-fit
+                         knob; --workers wins when both are given)
   --ordering <pearson|reverse|native>               (default pearson)
-  --workers <n>          thread-pool size           (default auto)
   --requests <n>         serve demo request count   (default 2000)
 ";
 
@@ -135,21 +145,52 @@ fn ordering_for(name: &str) -> FeatureOrdering {
     }
 }
 
-fn backend_for(opts: &HashMap<String, String>) -> Result<Box<dyn ComputeBackend>> {
-    let shards = opt_usize(opts, "shards", 0);
-    match opts.get("backend").map(|s| s.as_str()).unwrap_or("native") {
-        "xla" => {
-            let rt = Arc::new(PjrtRuntime::load_default()?);
-            Ok(Box::new(XlaBackend::new(rt)))
+/// The one persistent pool a command shares across both parallelism
+/// levels.  `--workers N` sizes it; the old `--shards` knob survives as
+/// a deprecated alias.
+fn pool_for(opts: &HashMap<String, String>) -> ThreadPool {
+    let workers = opt_usize(opts, "workers", 0);
+    let legacy = opt_usize(opts, "shards", 0);
+    let n = if workers > 0 {
+        workers
+    } else {
+        if legacy > 0 {
+            eprintln!("note: --shards is deprecated; use --workers {legacy}");
         }
-        "sharded" => Ok(Box::new(if shards > 0 {
-            ShardedBackend::new(shards)
-        } else {
-            ShardedBackend::default_parallel()
-        })),
-        _ if shards > 1 => Ok(ShardedBackend::boxed_for(shards)),
-        _ => Ok(Box::new(NativeBackend)),
+        legacy
+    };
+    if n == 0 {
+        ThreadPool::default_size()
+    } else {
+        ThreadPool::new(n)
     }
+}
+
+fn use_xla(opts: &HashMap<String, String>) -> bool {
+    opts.get("backend").map(|s| s.as_str()) == Some("xla")
+}
+
+/// Whether the user opted into the parallel data plane.  The default
+/// stays the sequential `NativeBackend` reference: its results are
+/// bit-identical on every machine, whereas sharded results are
+/// deterministic only *per shard count* (which tracks the worker
+/// budget).  Parallelism must be an explicit choice, exactly as in the
+/// pre-pool CLI.
+fn parallel_requested(opts: &HashMap<String, String>) -> bool {
+    opts.get("backend").map(|s| s.as_str()) == Some("sharded")
+        || opt_usize(opts, "workers", 0) > 1
+        || opt_usize(opts, "shards", 0) > 1
+}
+
+fn xla_backend(opts: &HashMap<String, String>) -> Result<Box<dyn ComputeBackend>> {
+    if opt_usize(opts, "workers", 0) > 0 || opt_usize(opts, "shards", 0) > 0 {
+        eprintln!(
+            "note: --workers/--shards are ignored with --backend xla \
+             (PJRT handles are thread-pinned; the XLA path runs sequentially)"
+        );
+    }
+    let rt = Arc::new(PjrtRuntime::load_default()?);
+    Ok(Box::new(XlaBackend::new(rt)))
 }
 
 fn load(opts: &HashMap<String, String>) -> Result<avi_scale::data::Dataset> {
@@ -184,13 +225,27 @@ fn cmd_fit(opts: &HashMap<String, String>) -> Result<()> {
     let ds = load(opts)?;
     let psi = opt_f64(opts, "psi", 0.005);
     let estimator = estimator_for(opts, psi)?;
-    let backend = backend_for(opts)?;
     let ordering = ordering_for(opts.get("ordering").map(|s| s.as_str()).unwrap_or("pearson"));
-    let est = estimator.build();
     let perm = avi_scale::ordering::order_features(&ds.x, ordering);
     let ordered = ds.permute_features(&perm);
     let t0 = std::time::Instant::now();
-    let transformer = fit_transformer(est.as_ref(), &ordered, backend.as_ref())?;
+    let (transformer, backend_name) = if use_xla(opts) {
+        let backend = xla_backend(opts)?;
+        let est = estimator.build();
+        (fit_transformer(est.as_ref(), &ordered, backend.as_ref())?, backend.name().to_string())
+    } else if parallel_requested(opts) {
+        // two-level: per-class fits (outer) × shard kernels (inner) over
+        // the one shared pool
+        let pool = pool_for(opts);
+        (
+            fit_transformer_pooled(&estimator, &ordered, &pool.handle())?,
+            format!("pooled({} workers)", pool.workers()),
+        )
+    } else {
+        // default: the sequential reference — bit-identical everywhere
+        let est = estimator.build();
+        (fit_transformer(est.as_ref(), &ordered, &NativeBackend)?, "native".to_string())
+    };
     let secs = t0.elapsed().as_secs_f64();
     println!("method    = {}", transformer.method_name);
     println!(
@@ -200,7 +255,7 @@ fn cmd_fit(opts: &HashMap<String, String>) -> Result<()> {
         ds.n_features(),
         ds.n_classes
     );
-    println!("backend   = {}", backend.name());
+    println!("backend   = {backend_name}");
     println!("fit time  = {}s", sci(secs));
     let wall: f64 = transformer.per_class.iter().map(|c| c.report().wall_secs).sum();
     println!("fit wall  = {}s (Σ per-class FitReport)", sci(wall));
@@ -215,12 +270,19 @@ fn cmd_pipeline(opts: &HashMap<String, String>) -> Result<()> {
     let ds = load(opts)?;
     let psi = opt_f64(opts, "psi", 0.005);
     let estimator = estimator_for(opts, psi)?;
-    let backend = backend_for(opts)?;
     let ordering = ordering_for(opts.get("ordering").map(|s| s.as_str()).unwrap_or("pearson"));
     let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
     let cfg = PipelineConfig { estimator, svm: LinearSvmConfig::default(), ordering };
     let t0 = std::time::Instant::now();
-    let model = train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?;
+    let model = if use_xla(opts) {
+        let backend = xla_backend(opts)?;
+        train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?
+    } else if parallel_requested(opts) {
+        let pool = pool_for(opts);
+        train_pipeline_pooled(&cfg, &split.train, &pool)?
+    } else {
+        avi_scale::pipeline::train_pipeline(&cfg, &split.train)?
+    };
     let train_secs = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
     let err = model.error_on(&split.test);
@@ -263,19 +325,33 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     let ds = load(opts)?;
     let psi = opt_f64(opts, "psi", 0.005);
     let estimator = estimator_for(opts, psi)?;
-    let backend = backend_for(opts)?;
     let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
     let cfg = PipelineConfig {
         estimator,
         svm: LinearSvmConfig::default(),
         ordering: FeatureOrdering::Pearson,
     };
-    let model = Arc::new(train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?);
-    let svc = TransformService::start_sharded(
-        model,
-        BatchPolicy::default(),
-        opt_usize(opts, "shards", 1),
-    );
+    // `_pool` keeps the shared workers alive for the service's lifetime
+    // (dropped, and joined, after `svc.shutdown()` at the end of the fn)
+    let (svc, _pool) = if use_xla(opts) {
+        let backend = xla_backend(opts)?;
+        let model = Arc::new(train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?);
+        (TransformService::start(model, BatchPolicy::default()), None)
+    } else if parallel_requested(opts) {
+        // serving draws its shard workers from the same pool that trained
+        let pool = pool_for(opts);
+        let model = Arc::new(train_pipeline_pooled(&cfg, &split.train, &pool)?);
+        let svc = TransformService::start_pooled(
+            model,
+            BatchPolicy::default(),
+            pool.handle(),
+            pool.workers(),
+        );
+        (svc, Some(pool))
+    } else {
+        let model = Arc::new(avi_scale::pipeline::train_pipeline(&cfg, &split.train)?);
+        (TransformService::start(model, BatchPolicy::default()), None)
+    };
     let n_req = opt_usize(opts, "requests", 2000).min(split.test.len().max(1) * 50);
     let rows: Vec<Vec<f64>> = (0..n_req)
         .map(|i| split.test.x.row(i % split.test.len()).to_vec())
@@ -306,8 +382,7 @@ fn cmd_bound(opts: &HashMap<String, String>) -> Result<()> {
         cfg.theorem_degree(),
         cfg.size_bound(ds.n_features())
     );
-    let workers = opt_usize(opts, "workers", 0);
-    let pool = if workers == 0 { ThreadPool::default_size() } else { ThreadPool::new(workers) };
+    let pool = pool_for(opts);
     let sizes: Vec<usize> = pool.map(&(0..ds.n_classes).collect::<Vec<_>>(), |&k| {
         let xk = ds.class_matrix(k);
         avi_scale::oavi::Oavi::new(cfg).fit(&xk).map(|m| m.total_size()).unwrap_or(0)

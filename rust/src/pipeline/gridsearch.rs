@@ -4,8 +4,15 @@
 //! search can race CGAVI-IHB against ABM and VCA (mixed-method model
 //! selection) with one deduplicated loop instead of per-algorithm
 //! near-duplicates.
+//!
+//! Parallelism is **two-level** over one persistent pool: grid-point
+//! jobs are the outer axis and each job's `ShardedBackend` shard kernels
+//! are the inner axis, both drawing from the same
+//! [`crate::coordinator::pool::PoolHandle`] with the worker budget split
+//! once (`outer × inner ≤ workers`, see [`GridParallelism`]).
 
-use crate::backend::ShardedBackend;
+use crate::backend::sharded::MIN_ROWS_PER_SHARD;
+use crate::backend::{ComputeBackend, PinnedShards, ShardedBackend};
 use crate::coordinator::pool::ThreadPool;
 use crate::data::splits::kfold_indices;
 use crate::data::Dataset;
@@ -55,6 +62,28 @@ pub struct GridSearchResult {
     pub table: Vec<GridPoint>,
 }
 
+/// How a grid search spends the pool's worker budget across the two
+/// parallelism levels (outer grid-point jobs × inner shard kernels).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GridParallelism {
+    /// Inner (shard) worker budget each grid-point job fits through.
+    /// `0` = automatic: [`crate::coordinator::pool::PoolHandle::budget_split`]
+    /// over the realized grid size, so `outer × inner ≤ workers`.
+    /// `1` = native single-threaded fits (the [`grid_search`] default).
+    pub intra_workers: usize,
+    /// Pin every fit's [`crate::backend::ColumnStore`] shard count
+    /// (reproducibility/parity knob — results are deterministic per
+    /// shard count, so pinning makes runs comparable across backends).
+    pub pin_store_shards: Option<usize>,
+}
+
+impl GridParallelism {
+    /// Automatic budget split (`outer × inner ≤ workers`), no pinning.
+    pub fn auto() -> Self {
+        GridParallelism { intra_workers: 0, pin_store_shards: None }
+    }
+}
+
 /// Cross-validated grid search over estimator × ψ × λ with a linear SVM.
 /// `pool` parallelizes grid points across worker threads (single-threaded
 /// within each fit).  An empty `psis` slice means "each estimator's own
@@ -70,13 +99,14 @@ pub fn grid_search(
     seed: u64,
     pool: &ThreadPool,
 ) -> Result<GridSearchResult> {
-    grid_search_sharded(estimators, ordering, train, psis, lambdas, folds, seed, pool, 1)
+    let par = GridParallelism { intra_workers: 1, pin_store_shards: None };
+    grid_search_two_level(estimators, ordering, train, psis, lambdas, folds, seed, pool, par)
 }
 
-/// [`grid_search`] with an **intra-fit** parallelism knob on top of the
-/// job-level pool: each grid-point job fits through a [`ShardedBackend`]
-/// with `intra_shards` workers.  Use it when the grid is smaller than the
-/// machine (few grid points, many cores) — the two levels multiply.
+/// Deprecated alias for [`grid_search_two_level`] with an explicit
+/// `intra_shards` inner budget and no shard pinning — kept for the PR-1
+/// call sites; new code should pass a [`GridParallelism`] (or use
+/// [`GridParallelism::auto`] for the budget split).
 #[allow(clippy::too_many_arguments)]
 pub fn grid_search_sharded(
     estimators: &[EstimatorConfig],
@@ -89,6 +119,27 @@ pub fn grid_search_sharded(
     pool: &ThreadPool,
     intra_shards: usize,
 ) -> Result<GridSearchResult> {
+    let par = GridParallelism { intra_workers: intra_shards.max(1), pin_store_shards: None };
+    grid_search_two_level(estimators, ordering, train, psis, lambdas, folds, seed, pool, par)
+}
+
+/// Two-level grid search: grid-point jobs (outer axis) and each job's
+/// [`ShardedBackend`] shard kernels (inner axis) draw from the **same**
+/// pool via shared [`crate::coordinator::pool::PoolHandle`]s — no
+/// per-job pool construction, and the worker budget is split once
+/// (`outer × inner ≤ workers`) instead of oversubscribing.
+#[allow(clippy::too_many_arguments)]
+pub fn grid_search_two_level(
+    estimators: &[EstimatorConfig],
+    ordering: FeatureOrdering,
+    train: &Dataset,
+    psis: &[f64],
+    lambdas: &[f64],
+    folds: usize,
+    seed: u64,
+    pool: &ThreadPool,
+    par: GridParallelism,
+) -> Result<GridSearchResult> {
     if estimators.is_empty() {
         return Err(AviError::Config("grid_search: no estimators given".into()));
     }
@@ -100,8 +151,8 @@ pub fn grid_search_sharded(
         .map(|(tr, va)| (train.subset(tr), train.subset(va)))
         .collect();
 
-    // one job per (estimator, psi, lambda): CV error averaged over folds
-    let mut jobs: Vec<Box<dyn FnOnce() -> GridPoint + Send>> = Vec::new();
+    // materialize the grid first so the budget split sees its true size
+    let mut points: Vec<(EstimatorConfig, f64, f64)> = Vec::new();
     for &base in estimators {
         let psi_grid: Vec<f64> = if psis.is_empty() {
             base.build().hyper_grid().to_vec()
@@ -110,45 +161,61 @@ pub fn grid_search_sharded(
         };
         for psi in psi_grid {
             for &lambda in lambdas {
-                let estimator = base.with_psi(psi);
-                let fold_data = fold_data.clone();
-                jobs.push(Box::new(move || {
-                    // one backend per job: the ComputeBackend trait is
-                    // !Send, so each worker constructs its own
-                    let backend = ShardedBackend::boxed_for(intra_shards);
-                    let mut errs = Vec::with_capacity(fold_data.len());
-                    let mut fitted_name: Option<String> = None;
-                    for (tr, va) in &fold_data {
-                        let cfg = PipelineConfig {
-                            estimator,
-                            svm: LinearSvmConfig { lambda, ..Default::default() },
-                            ordering,
-                        };
-                        match train_pipeline_with_backend(&cfg, tr, backend.as_ref()) {
-                            Ok(model) => {
-                                if fitted_name.is_none() {
-                                    // FitReport name, surfaced via the
-                                    // transformer
-                                    fitted_name = Some(model.transformer.method_name.clone());
-                                }
-                                errs.push(model.error_on(va));
-                            }
-                            Err(_) => errs.push(1.0), // failed config = worst error
-                        }
-                    }
-                    GridPoint {
-                        name: fitted_name.unwrap_or_else(|| estimator.name()),
-                        estimator,
-                        psi,
-                        lambda,
-                        cv_error: crate::util::mean(&errs),
-                    }
-                }));
+                points.push((base.with_psi(psi), psi, lambda));
             }
         }
     }
-    if jobs.is_empty() {
+    if points.is_empty() {
         return Err(AviError::Config("grid_search: empty ψ/λ grid".into()));
+    }
+    let handle = pool.handle();
+    let intra = if par.intra_workers == 0 {
+        handle.budget_split(points.len()).1
+    } else {
+        par.intra_workers
+    };
+    let pin = par.pin_store_shards;
+
+    // one job per (estimator, psi, lambda): CV error averaged over folds
+    let mut jobs: Vec<Box<dyn FnOnce() -> GridPoint + Send>> = Vec::new();
+    for (estimator, psi, lambda) in points {
+        let fold_data = fold_data.clone();
+        let handle = handle.clone();
+        jobs.push(Box::new(move || {
+            // one backend per job: the ComputeBackend trait is !Send, so
+            // each job constructs its own around the shared pool handle
+            let backend = ShardedBackend::boxed_with_handle(handle, intra, MIN_ROWS_PER_SHARD);
+            let backend: Box<dyn ComputeBackend> = match pin {
+                Some(shards) => Box::new(PinnedShards::new(backend, shards)),
+                None => backend,
+            };
+            let mut errs = Vec::with_capacity(fold_data.len());
+            let mut fitted_name: Option<String> = None;
+            for (tr, va) in &fold_data {
+                let cfg = PipelineConfig {
+                    estimator,
+                    svm: LinearSvmConfig { lambda, ..Default::default() },
+                    ordering,
+                };
+                match train_pipeline_with_backend(&cfg, tr, backend.as_ref()) {
+                    Ok(model) => {
+                        if fitted_name.is_none() {
+                            // FitReport name, surfaced via the transformer
+                            fitted_name = Some(model.transformer.method_name.clone());
+                        }
+                        errs.push(model.error_on(va));
+                    }
+                    Err(_) => errs.push(1.0), // failed config = worst error
+                }
+            }
+            GridPoint {
+                name: fitted_name.unwrap_or_else(|| estimator.name()),
+                estimator,
+                psi,
+                lambda,
+                cv_error: crate::util::mean(&errs),
+            }
+        }));
     }
     let table = pool.run_all(jobs);
 
@@ -318,6 +385,63 @@ mod tests {
         .unwrap();
         assert_eq!(base.table.len(), sharded.table.len());
         assert_eq!(base.best_cv_error, sharded.best_cv_error);
+    }
+
+    #[test]
+    fn two_level_auto_budget_matches_explicit_grid() {
+        let ds = synthetic_dataset(300, 12);
+        let pool = ThreadPool::new(4);
+        let est = [EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))];
+        let base =
+            grid_search(&est, FeatureOrdering::Pearson, &ds, &[0.05, 0.01], &[1e-3], 2, 3, &pool)
+                .unwrap();
+        let auto = grid_search_two_level(
+            &est,
+            FeatureOrdering::Pearson,
+            &ds,
+            &[0.05, 0.01],
+            &[1e-3],
+            2,
+            3,
+            &pool,
+            GridParallelism::auto(),
+        )
+        .unwrap();
+        // small folds ⇒ preferred_shards = 1 ⇒ same arithmetic even when
+        // the auto split hands each job an inner budget > 1
+        assert_eq!(base.table.len(), auto.table.len());
+        for (a, b) in base.table.iter().zip(auto.table.iter()) {
+            assert_eq!(a.cv_error, b.cv_error);
+            assert_eq!(a.name, b.name);
+        }
+        assert_eq!(base.best_cv_error, auto.best_cv_error);
+    }
+
+    #[test]
+    fn pinned_store_shards_is_deterministic_across_worker_budgets() {
+        let ds = synthetic_dataset(240, 13);
+        let pool = ThreadPool::new(3);
+        let est = [EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))];
+        let run = |intra: usize| {
+            grid_search_two_level(
+                &est,
+                FeatureOrdering::Pearson,
+                &ds,
+                &[0.05],
+                &[1e-3],
+                2,
+                5,
+                &pool,
+                GridParallelism { intra_workers: intra, pin_store_shards: Some(3) },
+            )
+            .unwrap()
+        };
+        let a = run(1);
+        let b = run(2);
+        assert_eq!(a.table.len(), b.table.len());
+        for (pa, pb) in a.table.iter().zip(b.table.iter()) {
+            assert_eq!(pa.cv_error.to_bits(), pb.cv_error.to_bits());
+        }
     }
 
     #[test]

@@ -25,7 +25,9 @@
 pub mod gridsearch;
 pub mod report;
 
-use crate::backend::{ComputeBackend, NativeBackend};
+use crate::backend::sharded::MIN_ROWS_PER_SHARD;
+use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend};
+use crate::coordinator::pool::{Job, PoolHandle, ThreadPool};
 use crate::data::Dataset;
 use crate::error::{AviError, Result};
 use crate::estimator::{EstimatorConfig, FittedModel, VanishingIdealEstimator};
@@ -130,6 +132,57 @@ pub fn fit_transformer(
     Ok(FittedTransformer { method_name, per_class })
 }
 
+/// [`fit_transformer`] with **two-level parallelism** over a shared
+/// pool: the per-class fits are outer jobs and each job's
+/// [`ShardedBackend`] shard kernels are the inner axis, the worker
+/// budget split once via
+/// [`crate::coordinator::pool::PoolHandle::budget_split`]
+/// (`outer × inner ≤ workers`).  The `ComputeBackend` trait is `!Send`,
+/// so each class job builds its own backend around the handle; fitted
+/// models come back in class order (`FittedModel: Send`), so the result
+/// is identical to the sequential fit through a backend with the same
+/// shard sizing.
+pub fn fit_transformer_pooled(
+    config: &EstimatorConfig,
+    train: &Dataset,
+    pool: &PoolHandle,
+) -> Result<FittedTransformer> {
+    config.validate()?;
+    let n_classes = train.n_classes;
+    let (_, inner) = pool.budget_split(n_classes);
+    let cfg = *config;
+    let jobs: Vec<Job<'_, Result<Box<dyn FittedModel>>>> = (0..n_classes)
+        .map(|k| {
+            let handle = pool.clone();
+            Box::new(move || {
+                let xk = train.class_matrix(k);
+                if xk.rows() == 0 {
+                    return Err(AviError::Data(format!("class {k} has no samples")));
+                }
+                let backend =
+                    ShardedBackend::boxed_with_handle(handle, inner, MIN_ROWS_PER_SHARD);
+                cfg.build().fit(&xk, backend.as_ref())
+            }) as Job<'_, Result<Box<dyn FittedModel>>>
+        })
+        .collect();
+    let mut per_class = Vec::with_capacity(n_classes);
+    for result in pool.try_run_all(jobs) {
+        match result {
+            Ok(fit) => per_class.push(fit?),
+            Err(panic_msg) => {
+                return Err(AviError::Coordinator(format!(
+                    "per-class fit job panicked: {panic_msg}"
+                )))
+            }
+        }
+    }
+    let method_name = per_class
+        .first()
+        .map(|m| m.report().name().to_string())
+        .unwrap_or_else(|| config.name());
+    Ok(FittedTransformer { method_name, per_class })
+}
+
 /// Full pipeline configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineConfig {
@@ -189,6 +242,33 @@ pub fn train_pipeline_with_backend(
     let ordered = train.permute_features(&perm);
     let transformer = fit_transformer(estimator.as_ref(), &ordered, backend)?;
     let feats = transformer.transform_with(&ordered.x, backend);
+    let svm = LinearSvm::fit(&feats, &ordered.y, ordered.n_classes, cfg.svm)?;
+    Ok(PipelineModel { perm, transformer, svm, n_classes: train.n_classes })
+}
+
+/// Train the full pipeline with two-level parallelism over `pool`:
+/// per-class fits as outer jobs, shard kernels as the inner axis (see
+/// [`fit_transformer_pooled`]), and the final (FT) transform sharded
+/// across the whole worker budget.
+pub fn train_pipeline_pooled(
+    cfg: &PipelineConfig,
+    train: &Dataset,
+    pool: &ThreadPool,
+) -> Result<PipelineModel> {
+    cfg.estimator.validate()?;
+    let ordering = if cfg.estimator.is_monomial_aware() {
+        cfg.ordering
+    } else {
+        FeatureOrdering::Native // VCA is data-driven already (§5)
+    };
+    let perm = order_features(&train.x, ordering);
+    let ordered = train.permute_features(&perm);
+    let handle = pool.handle();
+    let transformer = fit_transformer_pooled(&cfg.estimator, &ordered, &handle)?;
+    // the final transform is a single job: give it the full inner budget
+    let backend =
+        ShardedBackend::boxed_with_handle(handle, pool.workers(), MIN_ROWS_PER_SHARD);
+    let feats = transformer.transform_with(&ordered.x, backend.as_ref());
     let svm = LinearSvm::fit(&feats, &ordered.y, ordered.n_classes, cfg.svm)?;
     Ok(PipelineModel { perm, transformer, svm, n_classes: train.n_classes })
 }
@@ -265,6 +345,38 @@ mod tests {
         assert!(t.avg_degree() >= 1.0);
         assert!((0.0..=1.0).contains(&t.sparsity()));
         assert!(t.total_size() >= t.n_generators());
+    }
+
+    #[test]
+    fn pooled_per_class_fit_matches_sequential_on_small_data() {
+        // small m ⇒ preferred_shards = 1 on every backend ⇒ the pooled
+        // two-level fit is arithmetically identical to the native one
+        let ds = small_synth().head(300);
+        let cfg = PipelineConfig {
+            estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        let seq = train_pipeline(&cfg, &ds).unwrap();
+        let pool = ThreadPool::new(4);
+        let par = train_pipeline_pooled(&cfg, &ds, &pool).unwrap();
+        assert_eq!(seq.perm, par.perm);
+        assert_eq!(seq.transformer.method_name, par.transformer.method_name);
+        assert_eq!(seq.transformer.n_generators(), par.transformer.n_generators());
+        assert_eq!(seq.predict(&ds.x), par.predict(&ds.x));
+    }
+
+    #[test]
+    fn pooled_fit_transformer_reports_empty_class() {
+        let mut ds = small_synth().head(100);
+        ds.n_classes += 1; // last class has no samples
+        let pool = ThreadPool::new(2);
+        let err = fit_transformer_pooled(
+            &EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            &ds,
+            &pool.handle(),
+        );
+        assert!(err.is_err());
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Concurrency property suite for the persistent work-stealing pool —
+//! the contract ISSUE 3 pins:
+//!
+//! * every job runs exactly once, results in submission order, under
+//!   randomized job durations;
+//! * nested submission (inner jobs submitted from inside outer jobs over
+//!   a shared [`PoolHandle`]) does not deadlock, even with more nested
+//!   batches than workers;
+//! * a panic in one job surfaces as an `Err` in that job's slot while
+//!   the remaining jobs complete and the workers survive;
+//! * dropping the pool drains queued jobs and joins all workers;
+//! * the adaptive-threshold fallback and the forced pool fan-out are
+//!   both bit-identical to [`NativeBackend`].
+//!
+//! `scripts/verify.sh` runs this binary twice — `RUST_TEST_THREADS=1`
+//! (serial, stable schedules) and the default multi-thread mode — so
+//! scheduling-order bugs reproduce under both regimes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use avi_scale::backend::{ColumnStore, ComputeBackend, NativeBackend, ShardedBackend};
+use avi_scale::coordinator::pool::{Job, PoolHandle, ThreadPool};
+use avi_scale::util::proptest::property;
+use avi_scale::util::rng::Rng;
+
+/// Run `f` on a helper thread and fail the test (instead of hanging CI)
+/// if it has not finished within `secs`.
+fn with_deadline<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("pool operation deadlocked or timed out")
+}
+
+#[test]
+fn every_job_runs_exactly_once_in_submission_order_under_random_durations() {
+    property(8, |rng| {
+        let n = 1 + rng.below(50);
+        let workers = 1 + rng.below(5);
+        let durations: Vec<u64> = (0..n).map(|_| rng.below(300) as u64).collect();
+        let counters: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        let pool = ThreadPool::new(workers);
+        let jobs: Vec<Job<'static, usize>> = (0..n)
+            .map(|i| {
+                let c = Arc::clone(&counters);
+                let us = durations[i];
+                Box::new(move || {
+                    std::thread::sleep(Duration::from_micros(us));
+                    c[i].fetch_add(1, Ordering::SeqCst);
+                    i * 3 + 1
+                }) as Job<'static, usize>
+            })
+            .collect();
+        let out = pool.run_all(jobs);
+        for (i, c) in counters.iter().enumerate() {
+            let runs = c.load(Ordering::SeqCst);
+            if runs != 1 {
+                return Err(format!("job {i} ran {runs} times (workers {workers})"));
+            }
+        }
+        let expect: Vec<usize> = (0..n).map(|i| i * 3 + 1).collect();
+        if out != expect {
+            return Err(format!("order not preserved (n {n}, workers {workers})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nested_submission_does_not_deadlock() {
+    // more outer jobs than workers, each submitting an inner batch over
+    // the same shared handle: without the helping loop this wedges on a
+    // 2-worker pool
+    let total: usize = with_deadline(60, || {
+        let pool = ThreadPool::new(2);
+        let handle = pool.handle();
+        let outer_jobs: Vec<Job<'static, usize>> = (0..6usize)
+            .map(|o| {
+                let h: PoolHandle = handle.clone();
+                Box::new(move || {
+                    let inner_jobs: Vec<Job<'static, usize>> = (0..8usize)
+                        .map(|i| Box::new(move || o * 100 + i) as Job<'static, usize>)
+                        .collect();
+                    h.run_all(inner_jobs).into_iter().sum::<usize>()
+                }) as Job<'static, usize>
+            })
+            .collect();
+        let sums = pool.run_all(outer_jobs);
+        assert_eq!(sums.len(), 6);
+        for (o, s) in sums.iter().enumerate() {
+            assert_eq!(*s, o * 800 + 28, "outer {o} inner sum");
+        }
+        sums.into_iter().sum()
+    });
+    assert_eq!(total, (0..6).map(|o| o * 800 + 28).sum::<usize>());
+}
+
+#[test]
+fn doubly_nested_submission_does_not_deadlock() {
+    // three levels of 2-job batches on a single worker: only the helping
+    // loop can make progress, which is exactly what this pins
+    let v: usize = with_deadline(60, || {
+        let pool = ThreadPool::new(1);
+        let handle = pool.handle();
+        let outer: Vec<Job<'static, usize>> = (0..2usize)
+            .map(|o| {
+                let h1 = handle.clone();
+                Box::new(move || {
+                    let mid: Vec<Job<'static, usize>> = (0..2usize)
+                        .map(|m| {
+                            let h2 = h1.clone();
+                            Box::new(move || {
+                                let inner: Vec<Job<'static, usize>> = (0..2usize)
+                                    .map(|i| {
+                                        Box::new(move || o * 100 + m * 10 + i)
+                                            as Job<'static, usize>
+                                    })
+                                    .collect();
+                                h2.run_all(inner).into_iter().sum::<usize>()
+                            }) as Job<'static, usize>
+                        })
+                        .collect();
+                    h1.run_all(mid).into_iter().sum::<usize>()
+                }) as Job<'static, usize>
+            })
+            .collect();
+        pool.run_all(outer).into_iter().sum()
+    });
+    // Σ over o,m,i of (100o + 10m + i) = 400·1 + 40·1 + 2·2 = 444
+    assert_eq!(v, 444);
+}
+
+#[test]
+fn panic_in_one_job_surfaces_as_error_while_rest_complete() {
+    let pool = ThreadPool::new(3);
+    let completed = Arc::new(AtomicUsize::new(0));
+    let jobs: Vec<Job<'static, usize>> = (0..20usize)
+        .map(|i| {
+            let c = Arc::clone(&completed);
+            Box::new(move || {
+                if i == 7 {
+                    panic!("intentional test panic in job {i}");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+                i
+            }) as Job<'static, usize>
+        })
+        .collect();
+    let out = pool.try_run_all(jobs);
+    assert_eq!(out.len(), 20);
+    assert_eq!(completed.load(Ordering::SeqCst), 19, "remaining jobs must complete");
+    for (i, r) in out.iter().enumerate() {
+        if i == 7 {
+            let msg = r.as_ref().expect_err("slot 7 must be poisoned");
+            assert!(msg.contains("intentional test panic"), "unexpected message {msg}");
+        } else {
+            assert_eq!(*r.as_ref().expect("non-panicking slot"), i);
+        }
+    }
+    // workers survived: the same pool still serves batches in order
+    let again: Vec<usize> =
+        pool.run_all((0..10usize).map(|i| Box::new(move || i) as Job<'static, usize>).collect());
+    assert_eq!(again, (0..10).collect::<Vec<usize>>());
+}
+
+#[test]
+fn drop_joins_all_workers_and_drains_in_flight_batches() {
+    let pool = ThreadPool::new(3);
+    let handle = pool.handle();
+    assert_eq!(handle.live_workers(), 3);
+    let counter = Arc::new(AtomicUsize::new(0));
+    let c = Arc::clone(&counter);
+    let h = handle.clone();
+    // a concurrent submitter keeps a slow batch in flight while we drop
+    let submitter = std::thread::spawn(move || {
+        let jobs: Vec<Job<'static, usize>> = (0..24usize)
+            .map(|i| {
+                let c = Arc::clone(&c);
+                Box::new(move || {
+                    std::thread::sleep(Duration::from_millis(2));
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i
+                }) as Job<'static, usize>
+            })
+            .collect();
+        h.run_all(jobs)
+    });
+    std::thread::sleep(Duration::from_millis(5));
+    drop(pool); // graceful: drains the queue, then joins every worker
+    assert_eq!(handle.live_workers(), 0, "drop must join all workers");
+    let out = submitter.join().expect("submitter thread");
+    assert_eq!(out, (0..24).collect::<Vec<usize>>());
+    assert_eq!(counter.load(Ordering::SeqCst), 24, "no job may be dropped on shutdown");
+    // a handle outliving the pool still completes work (inline helping)
+    let late: Vec<usize> =
+        handle.run_all((0..5usize).map(|i| Box::new(move || i * i) as Job<'static, usize>).collect());
+    assert_eq!(late, vec![0, 1, 4, 9, 16]);
+}
+
+#[test]
+fn stress_10k_tiny_jobs_through_2_worker_pool() {
+    // ISSUE 3 satellite: 10k tiny jobs, 2 workers — exactly-once,
+    // submission order, no starvation
+    let out: Vec<usize> = with_deadline(120, || {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<Job<'static, usize>> = (0..10_000usize)
+            .map(|i| {
+                let c = Arc::clone(&counter);
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i.wrapping_mul(2654435761)
+                }) as Job<'static, usize>
+            })
+            .collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 10_000);
+        out
+    });
+    let expect: Vec<usize> = (0..10_000usize).map(|i| i.wrapping_mul(2654435761)).collect();
+    assert_eq!(out, expect);
+}
+
+#[test]
+fn sixty_four_shard_gram_stats_below_threshold_is_bitwise_native() {
+    // ISSUE 3 satellite: m = 100 over 64 shards is far below any work
+    // threshold — the adaptive fallback path must stay bit-identical to
+    // NativeBackend (and the forced pool path must match it too)
+    let mut rng = Rng::new(77);
+    let m = 100usize;
+    let ell = 5usize;
+    let cols: Vec<Vec<f64>> =
+        (0..ell).map(|_| (0..m).map(|_| rng.normal()).collect()).collect();
+    let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let store = ColumnStore::from_cols(&cols, 64);
+    assert_eq!(store.n_shards(), 64);
+    let (atb_n, btb_n) = NativeBackend.gram_stats(&store, &b);
+
+    let sharded = ShardedBackend::new(4);
+    assert!(
+        ell * (m / 64) < sharded.min_work_threshold(),
+        "test must exercise the fallback path"
+    );
+    let (atb_s, btb_s) = sharded.gram_stats(&store, &b);
+    assert_eq!(btb_n.to_bits(), btb_s.to_bits(), "fallback btb bits diverge");
+    for (j, (a, s)) in atb_n.iter().zip(atb_s.iter()).enumerate() {
+        assert_eq!(a.to_bits(), s.to_bits(), "fallback atb[{j}] bits diverge");
+    }
+
+    let forced = ShardedBackend::new(4).with_min_work(0);
+    let (atb_f, btb_f) = forced.gram_stats(&store, &b);
+    assert_eq!(btb_n.to_bits(), btb_f.to_bits(), "forced-parallel btb bits diverge");
+    for (j, (a, s)) in atb_n.iter().zip(atb_f.iter()).enumerate() {
+        assert_eq!(a.to_bits(), s.to_bits(), "forced-parallel atb[{j}] bits diverge");
+    }
+}
+
+#[test]
+fn map_through_handle_preserves_order_under_contention() {
+    let pool = ThreadPool::new(4);
+    let handle = pool.handle();
+    let items: Vec<usize> = (0..2000).collect();
+    // two threads map concurrently over the same pool
+    let h2 = handle.clone();
+    let items2 = items.clone();
+    let t = std::thread::spawn(move || h2.map(&items2, |&i| i + 1));
+    let a = handle.map(&items, |&i| i * 2);
+    let b = t.join().expect("mapper thread");
+    assert_eq!(a, items.iter().map(|&i| i * 2).collect::<Vec<usize>>());
+    assert_eq!(b, items.iter().map(|&i| i + 1).collect::<Vec<usize>>());
+}

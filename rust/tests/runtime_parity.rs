@@ -14,41 +14,27 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use avi_scale::backend::{ColumnStore, ComputeBackend, NativeBackend, ShardedBackend};
+use avi_scale::backend::{
+    ColumnStore, ComputeBackend, NativeBackend, PinnedShards, ShardedBackend,
+};
 use avi_scale::baselines::abm::{Abm, AbmConfig};
 use avi_scale::baselines::vca::{Vca, VcaConfig};
+use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::estimator::EstimatorConfig;
 use avi_scale::linalg::dense::Matrix;
 use avi_scale::oavi::{Oavi, OaviConfig};
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::gridsearch::{grid_search_two_level, GridParallelism};
+use avi_scale::pipeline::{train_pipeline, train_pipeline_pooled, PipelineConfig};
 use avi_scale::runtime::{PjrtRuntime, XlaBackend};
+use avi_scale::svm::linear::LinearSvmConfig;
 use avi_scale::util::rng::Rng;
 
-/// Adapter pinning the store shard count so two *execution strategies*
-/// (sequential native vs thread-pool sharded) can be compared on
-/// byte-identical store layouts — the precondition of the bit-for-bit
-/// contract.  Kernels delegate to the wrapped backend untouched.
-struct PinnedShards<'a> {
-    inner: &'a dyn ComputeBackend,
-    shards: usize,
-}
-
-impl ComputeBackend for PinnedShards<'_> {
-    fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
-        self.inner.gram_stats(cols, b_col)
-    }
-
-    fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
-        self.inner.transform_abs(cols, c, u)
-    }
-
-    fn name(&self) -> &'static str {
-        "pinned"
-    }
-
-    fn preferred_shards(&self, _m: usize) -> usize {
-        self.shards
-    }
-}
+// `backend::PinnedShards` pins the store shard count so two *execution
+// strategies* (sequential native vs pool-sharded) are compared on
+// byte-identical store layouts — the precondition of the bit-for-bit
+// contract.
 
 fn runtime() -> Option<Arc<PjrtRuntime>> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -200,10 +186,9 @@ fn abm_fit_bitwise_parity_native_vs_sharded_per_shard_count() {
     // (same per-shard kernels, same in-order reduction)
     let ds = synthetic_dataset(4000, 17);
     let x = ds.class_matrix(0);
-    let sharded = ShardedBackend::new(4);
     for shards in [1usize, 3, 4] {
-        let native_pin = PinnedShards { inner: &NativeBackend, shards };
-        let sharded_pin = PinnedShards { inner: &sharded, shards };
+        let native_pin = PinnedShards::new(Box::new(NativeBackend), shards);
+        let sharded_pin = PinnedShards::new(Box::new(ShardedBackend::new(4)), shards);
         let a = Abm::new(AbmConfig::new(0.01)).fit_with_backend(&x, &native_pin).unwrap();
         let b = Abm::new(AbmConfig::new(0.01)).fit_with_backend(&x, &sharded_pin).unwrap();
         assert_eq!(a.o_terms.len(), b.o_terms.len(), "|O| diverges at shards={shards}");
@@ -230,10 +215,9 @@ fn vca_fit_bitwise_parity_native_vs_sharded_per_shard_count() {
     // through ComputeBackend::gram_stats
     let ds = synthetic_dataset(3000, 19);
     let x = ds.class_matrix(1);
-    let sharded = ShardedBackend::new(3);
     for shards in [1usize, 2, 4] {
-        let native_pin = PinnedShards { inner: &NativeBackend, shards };
-        let sharded_pin = PinnedShards { inner: &sharded, shards };
+        let native_pin = PinnedShards::new(Box::new(NativeBackend), shards);
+        let sharded_pin = PinnedShards::new(Box::new(ShardedBackend::new(3)), shards);
         let a = Vca::new(VcaConfig::new(0.005)).fit_with_backend(&x, &native_pin).unwrap();
         let b = Vca::new(VcaConfig::new(0.005)).fit_with_backend(&x, &sharded_pin).unwrap();
         assert_eq!(a.n_generators(), b.n_generators(), "|V| diverges at shards={shards}");
@@ -257,10 +241,9 @@ fn oavi_fit_bitwise_parity_native_vs_sharded_per_shard_count() {
     // approximate cross-shard-count check below predates this one)
     let ds = synthetic_dataset(2500, 23);
     let x = ds.class_matrix(0);
-    let sharded = ShardedBackend::new(4);
     for shards in [2usize, 5] {
-        let native_pin = PinnedShards { inner: &NativeBackend, shards };
-        let sharded_pin = PinnedShards { inner: &sharded, shards };
+        let native_pin = PinnedShards::new(Box::new(NativeBackend), shards);
+        let sharded_pin = PinnedShards::new(Box::new(ShardedBackend::new(4)), shards);
         let cfg = OaviConfig::cgavi_ihb(0.005);
         let a = Oavi::new(cfg).fit_with_backend(&x, &native_pin).unwrap();
         let b = Oavi::new(cfg).fit_with_backend(&x, &sharded_pin).unwrap();
@@ -273,6 +256,89 @@ fn oavi_fit_bitwise_parity_native_vs_sharded_per_shard_count() {
             }
         }
     }
+}
+
+#[test]
+fn two_level_grid_search_bitwise_equals_all_native() {
+    // ISSUE 3 satellite: sharded grid search (outer jobs) each fitting
+    // through a sharded backend (inner shards) must be bitwise equal to
+    // the all-native run for the pinned (outer, inner, shards) triple —
+    // here (3 pool workers, inner budget 2, 4 store shards).
+    let ds = synthetic_dataset(1200, 31);
+    let est = [EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))];
+    let psis = [0.05, 0.01];
+    let lambdas = [1e-3];
+
+    let pool_par = ThreadPool::new(3);
+    let two_level = grid_search_two_level(
+        &est,
+        FeatureOrdering::Pearson,
+        &ds,
+        &psis,
+        &lambdas,
+        3,
+        7,
+        &pool_par,
+        GridParallelism { intra_workers: 2, pin_store_shards: Some(4) },
+    )
+    .unwrap();
+
+    let pool_seq = ThreadPool::new(1);
+    let all_native = grid_search_two_level(
+        &est,
+        FeatureOrdering::Pearson,
+        &ds,
+        &psis,
+        &lambdas,
+        3,
+        7,
+        &pool_seq,
+        GridParallelism { intra_workers: 1, pin_store_shards: Some(4) },
+    )
+    .unwrap();
+
+    assert_eq!(two_level.table.len(), all_native.table.len());
+    for (a, b) in two_level.table.iter().zip(all_native.table.iter()) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.psi.to_bits(), b.psi.to_bits());
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+        assert_eq!(
+            a.cv_error.to_bits(),
+            b.cv_error.to_bits(),
+            "cv error bits diverge at psi={} lambda={}",
+            a.psi,
+            a.lambda
+        );
+    }
+    assert_eq!(two_level.best_psi.to_bits(), all_native.best_psi.to_bits());
+    assert_eq!(two_level.best_lambda.to_bits(), all_native.best_lambda.to_bits());
+    assert_eq!(two_level.best_cv_error.to_bits(), all_native.best_cv_error.to_bits());
+    assert_eq!(two_level.best_name, all_native.best_name);
+}
+
+#[test]
+fn pooled_per_class_pipeline_bitwise_matches_native_on_single_shard_stores() {
+    // per-class fits as outer pool jobs: with m below the shard floor
+    // every store is single-shard, so the pooled two-level pipeline must
+    // reproduce the sequential native pipeline exactly
+    let ds = synthetic_dataset(800, 29);
+    let cfg = PipelineConfig {
+        estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01)),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    let seq = train_pipeline(&cfg, &ds).unwrap();
+    let pool = ThreadPool::new(4);
+    let par = train_pipeline_pooled(&cfg, &ds, &pool).unwrap();
+    assert_eq!(seq.perm, par.perm);
+    assert_eq!(seq.transformer.n_generators(), par.transformer.n_generators());
+    let probe = synthetic_dataset(120, 30);
+    let fa = seq.transformer.transform(&probe.x);
+    let fb = par.transformer.transform(&probe.x);
+    for (a, b) in fa.data().iter().zip(fb.data().iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "pooled (FT) features diverge");
+    }
+    assert_eq!(seq.predict(&probe.x), par.predict(&probe.x));
 }
 
 // ---------------------------------------------------------------------

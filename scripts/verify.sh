@@ -30,7 +30,7 @@ CLIPPY_LOG=$(mktemp)
 cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
 # every rustc diagnostic carries a "--> path:line:col" span line; match
 # spans inside the strict modules regardless of header distance
-STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|benches/micro_backend_scaling|tests/runtime_parity|tests/estimator_conformance)'
+STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/pool|benches/micro_backend_scaling|tests/runtime_parity|tests/estimator_conformance|tests/pool_concurrency)'
 if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
   echo "FAIL: clippy findings in strict modules:"
   grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
@@ -43,6 +43,19 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== concurrency suite: serial + multi-thread schedules =="
+# The pool/two-level tests are scheduling-sensitive; run them under two
+# regimes so interleaving bugs reproduce: RUST_TEST_THREADS=1 keeps
+# sibling tests from perturbing the pool's schedules (the
+# thread-sanitizer-friendly profile), the default mode adds cross-test
+# contention on the same cores.
+RUST_TEST_THREADS=1 cargo test --release --test pool_concurrency -q
+cargo test --release --test pool_concurrency -q
+RUST_TEST_THREADS=1 cargo test --release --test runtime_parity -q two_level
+cargo test --release --test runtime_parity -q two_level
+RUST_TEST_THREADS=1 cargo test --release --test runtime_parity -q pooled_per_class
+cargo test --release --test runtime_parity -q pooled_per_class
+
 echo "== CLI smoke: every estimator by name =="
 BIN=target/release/avi-scale
 SMOKE="--dataset synthetic --scale 0.0005 --seed 7 --psi 0.01"
@@ -50,8 +63,12 @@ for method in cgavi-ihb bpcgavi-wihb abm vca; do
   echo "-- fit --method $method"
   "$BIN" fit $SMOKE --method "$method"
 done
-echo "-- fit --method abm --backend sharded --shards 4"
+echo "-- fit --method abm --backend sharded --shards 4 (deprecated alias)"
 "$BIN" fit $SMOKE --method abm --backend sharded --shards 4
+echo "-- fit --method abm --workers 4 (two-level pool)"
+"$BIN" fit $SMOKE --method abm --workers 4
+echo "-- pipeline --method cgavi-ihb --workers 3"
+"$BIN" pipeline $SMOKE --method cgavi-ihb --workers 3
 echo "-- pipeline save/load round-trip (unified envelope, VCA included)"
 SMOKE_DIR=$(mktemp -d)
 for method in cgavi-ihb vca; do
