@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use avi_scale::coordinator::service::{latency_percentiles, BatchPolicy, TransformService};
+use avi_scale::coordinator::service::{latency_percentiles, ServeConfig, TransformService};
 use avi_scale::data::splits::train_test_split;
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::oavi::OaviConfig;
@@ -30,7 +30,7 @@ fn main() -> avi_scale::Result<()> {
     let model = Arc::new(train_pipeline(&cfg, &split.train)?);
     println!("model trained: {} features, test rows available: {}", model.transformer.n_generators(), split.test.len());
 
-    let svc = TransformService::start(model, BatchPolicy::default());
+    let svc = TransformService::start(model, ServeConfig::default());
     let rows: Vec<Vec<f64>> = (0..n_req)
         .map(|i| split.test.x.row(i % split.test.len()).to_vec())
         .collect();
@@ -45,10 +45,8 @@ fn main() -> avi_scale::Result<()> {
                 match row {
                     Some(r) => {
                         let resp = svc.predict_blocking(r).expect("predict");
-                        latencies
-                            .lock()
-                            .unwrap()
-                            .push(resp.latency.as_secs_f64() * 1e6);
+                        let lat = resp.queue_latency + resp.compute_latency;
+                        latencies.lock().unwrap().push(lat.as_secs_f64() * 1e6);
                     }
                     None => break,
                 }

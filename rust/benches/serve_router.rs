@@ -1,0 +1,73 @@
+//! Serving control-plane bench: throughput/latency of the router under a
+//! weighted A/B split with a shadow route, reported as the same
+//! `RouterReport` JSON the CLI emits (AVI_BENCH_REQUESTS to grow).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use avi_scale::coordinator::registry::ModelRegistry;
+use avi_scale::coordinator::router::ModelRouter;
+use avi_scale::coordinator::service::{latency_percentiles, ServeConfig, ServeRequest};
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::estimator::EstimatorConfig;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{train_pipeline, PipelineConfig};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+fn main() {
+    let n_req: usize = std::env::var("AVI_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5_000);
+    let ds = synthetic_dataset(4_000, 9);
+    let train = |method: &str, psi: f64| {
+        let cfg = PipelineConfig {
+            estimator: EstimatorConfig::parse(method, psi).unwrap(),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        Arc::new(train_pipeline(&cfg, &ds).unwrap())
+    };
+    let mut registry = ModelRegistry::new();
+    registry.insert("m", "v1", train("cgavi-ihb", 0.01));
+    registry.insert("m", "v2", train("bpcgavi-wihb", 0.01));
+    registry.insert("m", "cand", train("abm", 0.01));
+
+    // the bench enqueues the whole request set before waiting, so size
+    // the admission queue to hold it (the default 1024 bound would
+    // correctly reject the overflow — measured separately)
+    let cfg = ServeConfig::new().queue_capacity(n_req);
+    let router = ModelRouter::new();
+    router
+        .register_ab(
+            &registry,
+            "m",
+            &[("v1".into(), 70), ("v2".into(), 30)],
+            42,
+            &cfg,
+        )
+        .unwrap();
+    router
+        .set_shadow("m", "cand", registry.resolve("m", "cand").unwrap(), cfg.clone())
+        .unwrap();
+
+    let rows: Vec<Vec<f64>> = (0..n_req).map(|i| ds.x.row(i % ds.len()).to_vec()).collect();
+    let t0 = Instant::now();
+    let pendings: Vec<_> = rows
+        .into_iter()
+        .map(|row| router.enqueue("m", ServeRequest::row(row)).unwrap())
+        .collect();
+    let mut lat_us = Vec::with_capacity(n_req);
+    for p in pendings {
+        let ans = p.wait().answer().expect("answered");
+        lat_us.push((ans.queue_latency + ans.compute_latency).as_secs_f64() * 1e6);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (p50, p95, p99) = latency_percentiles(lat_us);
+    println!("requests    = {n_req}");
+    println!("throughput  = {:.0} req/s", n_req as f64 / wall);
+    println!("latency p50 = {p50:.0}us  p95 = {p95:.0}us  p99 = {p99:.0}us");
+    let report = router.report();
+    assert_eq!(report.total_requests, n_req as u64, "router lost traffic");
+    println!("{}", report.to_json());
+}

@@ -1,7 +1,48 @@
-//! L3 coordinator: the persistent work-stealing thread pool behind both
-//! parallelism levels (per-class / per-fold / per-grid-point jobs above
-//! the backend trait, shard kernels below it), and a serving-style
-//! batched transform service.
+//! L3 coordinator: the serving **control plane** plus the persistent
+//! work-stealing thread pool behind both training parallelism levels.
+//!
+//! # Control-plane layering (registry → router → service → backend)
+//!
+//! The serving path is four tiers, each consuming only the one below:
+//!
+//! * **Registry** — [`registry::ModelRegistry`]: fitted pipelines
+//!   addressable as `key@version`, loaded from the unified persistence
+//!   envelope ([`crate::estimator::persist`]) by path, bytes, or
+//!   manifest.  The source of truth for *what can be served*; corrupt
+//!   envelopes and manifests naming missing files fail with typed
+//!   errors, never panics.
+//! * **Router** — [`router::ModelRouter`]: traffic policy over
+//!   registered versions.  Weighted A/B splits with deterministic seeded
+//!   assignment, shadow routes (mirrored traffic, replies discarded,
+//!   latency recorded), atomic hot-swap/rollback that lets the old
+//!   version drain its in-flight requests, and per-route load reports
+//!   exported as one [`router::RouterReport`] JSON document.
+//! * **Service** — [`service::TransformService`]: one batcher thread per
+//!   served version speaking the typed [`service::ServeRequest`] →
+//!   [`service::ServeReply`] protocol (single row or row batch, optional
+//!   per-request deadline; answers carry per-class scores, the
+//!   `key@version` stamp, and a queue/compute latency split).  Admission
+//!   control is a bounded queue: a full queue or an expired deadline
+//!   answers a typed [`service::RejectReason`] instead of blocking or
+//!   dropping.
+//! * **Backend** — [`crate::backend::ComputeBackend`]: the (FT)
+//!   transform executes on the sequential native reference, a private
+//!   shard pool, or shard workers drawn from the shared process pool.
+//!
+//! Everything is constructed through one builder-style
+//! [`service::ServeConfig`] (backend choice, batch policy, queue bound,
+//! stamp) — the single `TransformService::start(model, cfg)` constructor
+//! replaced the old `start` / `start_sharded` / `start_pooled` trio.
+//!
+//! # The pool
+//!
+//! [`pool::ThreadPool`] / [`pool::PoolHandle`] is the persistent
+//! work-stealing pool behind both training parallelism levels
+//! (per-class / per-fold / per-grid-point jobs above the backend trait,
+//! shard kernels below it) and, through
+//! [`service::ServeBackend::Pooled`], the serving shard axis — so
+//! serving composes with whatever else the process runs on the same
+//! workers.
 //!
 //! The paper's contribution is algorithmic, so the coordinator is a thin
 //! but real runtime layer (per the architecture contract): it owns worker
@@ -9,9 +50,14 @@
 //! here.
 
 pub mod pool;
+pub mod registry;
 pub mod router;
 pub mod service;
 
 pub use pool::{PoolHandle, ThreadPool};
-pub use router::ModelRouter;
-pub use service::{ServeMetrics, TransformService};
+pub use registry::ModelRegistry;
+pub use router::{ModelRouter, RouterReport};
+pub use service::{
+    BatchPolicy, RejectReason, ServeAnswer, ServeConfig, ServeMetrics, ServeReply, ServeRequest,
+    TransformService,
+};

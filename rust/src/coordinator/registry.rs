@@ -1,0 +1,449 @@
+//! The serving **registry** tier: fitted pipelines addressable as
+//! `key@version`, loaded from the unified persistence envelope
+//! ([`crate::estimator::persist`]) by path, by bytes, or by manifest.
+//!
+//! The registry is the control plane's source of truth for *what can be
+//! served*; the [`crate::coordinator::router::ModelRouter`] decides *who
+//! serves which traffic* (weighted A/B arms, shadows) and builds one
+//! [`crate::coordinator::service::TransformService`] per registered
+//! version.  Versions are kept in **insertion order** and the most
+//! recently registered version of a key is its `latest` — so hot-swap is
+//! "register the new version", and rollback is "register the old version
+//! again" (both leave every previously handed-out `Arc` alive until its
+//! in-flight requests drain).
+//!
+//! Every failure path is a typed [`AviError::Registry`] (malformed
+//! `key@version` specs, manifests naming missing files) or the persist
+//! layer's typed envelope errors (unknown format/version/kind) wrapped
+//! with the registry context — corrupt inputs never panic.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::{AviError, Result};
+use crate::estimator::persist;
+use crate::pipeline::PipelineModel;
+
+/// Manifest envelope format tag.
+pub const FORMAT_MANIFEST: &str = "avi-scale-registry";
+/// Current manifest version (bump on breaking changes).
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Version the bare-key form of a spec resolves to.
+pub const DEFAULT_VERSION: &str = "v1";
+
+/// Versions of one key, insertion-ordered (last = latest).
+#[derive(Clone, Debug, Default)]
+struct KeyEntry {
+    versions: Vec<(String, Arc<PipelineModel>)>,
+}
+
+/// A versioned collection of fitted pipelines keyed `key@version`.
+#[derive(Clone, Debug, Default)]
+pub struct ModelRegistry {
+    keys: HashMap<String, KeyEntry>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of registered (key, version) pairs.
+    pub fn len(&self) -> usize {
+        self.keys.values().map(|e| e.versions.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Registered keys (sorted, deterministic).
+    pub fn keys(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.keys.keys().cloned().collect();
+        k.sort();
+        k
+    }
+
+    /// Versions of `key` in registration order (last = latest).
+    pub fn versions(&self, key: &str) -> Vec<String> {
+        self.keys
+            .get(key)
+            .map(|e| e.versions.iter().map(|(v, _)| v.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Register an in-memory pipeline under `key@version`.  Re-inserting
+    /// an existing version replaces its model and promotes it to latest
+    /// (which is exactly a rollback when the version is an older one).
+    pub fn insert(
+        &mut self,
+        key: impl Into<String>,
+        version: impl Into<String>,
+        model: Arc<PipelineModel>,
+    ) {
+        let (key, version) = (key.into(), version.into());
+        let entry = self.keys.entry(key).or_default();
+        entry.versions.retain(|(v, _)| *v != version);
+        entry.versions.push((version, model));
+    }
+
+    /// Load a pipeline from the persistence envelope at `path` and
+    /// register it.  Missing files and corrupt envelopes surface as
+    /// typed registry errors.
+    pub fn load_path(
+        &mut self,
+        key: impl Into<String>,
+        version: impl Into<String>,
+        path: &Path,
+    ) -> Result<Arc<PipelineModel>> {
+        let (key, version) = (key.into(), version.into());
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            AviError::Registry(format!("{key}@{version}: cannot read {}: {e}", path.display()))
+        })?;
+        self.load_bytes(key, version, &text)
+    }
+
+    /// Parse a pipeline envelope from `text` and register it.
+    pub fn load_bytes(
+        &mut self,
+        key: impl Into<String>,
+        version: impl Into<String>,
+        text: &str,
+    ) -> Result<Arc<PipelineModel>> {
+        let (key, version) = (key.into(), version.into());
+        let model = persist::pipeline_from_json(text)
+            .map(Arc::new)
+            .map_err(|e| AviError::Registry(format!("{key}@{version}: {e}")))?;
+        self.insert(key, version, model.clone());
+        Ok(model)
+    }
+
+    /// The model registered under `key@version`.
+    pub fn get(&self, key: &str, version: &str) -> Option<Arc<PipelineModel>> {
+        self.keys
+            .get(key)?
+            .versions
+            .iter()
+            .find(|(v, _)| v == version)
+            .map(|(_, m)| m.clone())
+    }
+
+    /// [`ModelRegistry::get`] with a typed error naming the miss.
+    pub fn resolve(&self, key: &str, version: &str) -> Result<Arc<PipelineModel>> {
+        self.get(key, version).ok_or_else(|| {
+            AviError::Registry(format!(
+                "unknown model '{key}@{version}' (registered: {})",
+                self.describe()
+            ))
+        })
+    }
+
+    /// Latest (most recently registered) version of `key`.
+    pub fn latest(&self, key: &str) -> Option<(String, Arc<PipelineModel>)> {
+        self.keys
+            .get(key)?
+            .versions
+            .last()
+            .map(|(v, m)| (v.clone(), m.clone()))
+    }
+
+    /// Drop one version (in-flight `Arc`s stay alive).  Returns whether
+    /// it existed.
+    pub fn remove(&mut self, key: &str, version: &str) -> bool {
+        let Some(entry) = self.keys.get_mut(key) else { return false };
+        let before = entry.versions.len();
+        entry.versions.retain(|(v, _)| v != version);
+        let removed = entry.versions.len() != before;
+        if entry.versions.is_empty() {
+            self.keys.remove(key);
+        }
+        removed
+    }
+
+    fn describe(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for key in self.keys() {
+            for v in self.versions(&key) {
+                parts.push(format!("{key}@{v}"));
+            }
+        }
+        if parts.is_empty() {
+            "none".into()
+        } else {
+            parts.join(", ")
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Manifest
+    // -----------------------------------------------------------------
+
+    /// Load every model a manifest file names, resolving relative paths
+    /// against the manifest's directory.  Returns the `(key, version)`
+    /// pairs registered, in manifest order.
+    pub fn load_manifest(&mut self, path: &Path) -> Result<Vec<(String, String)>> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            AviError::Registry(format!("cannot read manifest {}: {e}", path.display()))
+        })?;
+        let base = path.parent().map(Path::to_path_buf).unwrap_or_default();
+        self.load_manifest_str(&text, &base)
+    }
+
+    /// [`ModelRegistry::load_manifest`] over in-memory text.
+    pub fn load_manifest_str(&mut self, text: &str, base: &Path) -> Result<Vec<(String, String)>> {
+        let format = persist::extract_str(text, "\"format\":")
+            .map_err(|_| AviError::Registry("manifest: missing envelope header".into()))?;
+        if format != FORMAT_MANIFEST {
+            return Err(AviError::Registry(format!(
+                "manifest: format '{format}', expected '{FORMAT_MANIFEST}'"
+            )));
+        }
+        let version = persist::extract_f64(text, "\"version\":")
+            .map_err(|e| AviError::Registry(format!("manifest: {e}")))?
+            as u64;
+        if version != MANIFEST_VERSION {
+            return Err(AviError::Registry(format!(
+                "manifest: unsupported version {version} (supported: {MANIFEST_VERSION})"
+            )));
+        }
+        let models_src = persist::extract_array(text, "\"models\":")
+            .map_err(|e| AviError::Registry(format!("manifest: {e}")))?;
+        // load everything before registering anything, so a failure
+        // mid-manifest cannot leave the registry half-updated
+        let mut staged: Vec<(String, String, Arc<PipelineModel>)> = Vec::new();
+        for obj in persist::split_objects(&models_src) {
+            let key = persist::extract_str(obj, "\"key\":")
+                .map_err(|e| AviError::Registry(format!("manifest entry: {e}")))?;
+            let version = persist::extract_str(obj, "\"version\":")
+                .map_err(|e| AviError::Registry(format!("manifest entry: {e}")))?;
+            let rel = persist::extract_str(obj, "\"path\":")
+                .map_err(|e| AviError::Registry(format!("manifest entry: {e}")))?;
+            let mut full = PathBuf::from(&rel);
+            if full.is_relative() {
+                full = base.join(full);
+            }
+            let doc = std::fs::read_to_string(&full).map_err(|e| {
+                AviError::Registry(format!(
+                    "{key}@{version}: cannot read {}: {e}",
+                    full.display()
+                ))
+            })?;
+            let model = persist::pipeline_from_json(&doc)
+                .map(Arc::new)
+                .map_err(|e| AviError::Registry(format!("{key}@{version}: {e}")))?;
+            staged.push((key, version, model));
+        }
+        if staged.is_empty() {
+            return Err(AviError::Registry("manifest: no models listed".into()));
+        }
+        let mut loaded = Vec::with_capacity(staged.len());
+        for (key, version, model) in staged {
+            self.insert(&key, &version, model);
+            loaded.push((key, version));
+        }
+        Ok(loaded)
+    }
+
+    /// Serialize a manifest document for `(key, version, path)` entries.
+    pub fn manifest_json(entries: &[(String, String, String)]) -> String {
+        use crate::util::json_escape;
+        let mut out = format!(
+            "{{\n\"format\": \"{FORMAT_MANIFEST}\",\n\"version\": {MANIFEST_VERSION},\n\"models\": [\n"
+        );
+        for (i, (key, version, path)) in entries.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "{{\"key\": \"{}\", \"version\": \"{}\", \"path\": \"{}\"}}",
+                json_escape(key),
+                json_escape(version),
+                json_escape(path)
+            ));
+        }
+        out.push_str("\n]\n}\n");
+        out
+    }
+}
+
+/// Parse a `key@version` spec (`key` alone resolves to
+/// [`DEFAULT_VERSION`]).  Rejects empty parts, a second `@`, and
+/// characters that would collide with the CLI spec/report syntax
+/// (quotes, backslashes, `=`/`,`/`:` delimiters, whitespace, control
+/// characters) with a typed error.
+pub fn parse_spec(spec: &str) -> Result<(String, String)> {
+    let (key, version) = match spec.split_once('@') {
+        Some((k, v)) => (k, v),
+        None => (spec, DEFAULT_VERSION),
+    };
+    let bad_part = |s: &str| {
+        s.is_empty()
+            || s.chars().any(|c| {
+                c.is_whitespace()
+                    || c.is_control()
+                    || matches!(c, '@' | '"' | '\\' | '=' | ',' | ':')
+            })
+    };
+    if bad_part(key) || bad_part(version) {
+        return Err(AviError::Registry(format!(
+            "malformed model spec '{spec}' (expected key or key@version; keys and \
+             versions may not contain whitespace or @ \" \\ = , :)"
+        )));
+    }
+    Ok((key.to_string(), version.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::estimator::EstimatorConfig;
+    use crate::oavi::OaviConfig;
+    use crate::ordering::FeatureOrdering;
+    use crate::pipeline::{train_pipeline, PipelineConfig};
+    use crate::svm::linear::LinearSvmConfig;
+
+    fn model(psi: f64, seed: u64) -> Arc<PipelineModel> {
+        let ds = synthetic_dataset(250, seed);
+        let cfg = PipelineConfig {
+            estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(psi)),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        Arc::new(train_pipeline(&cfg, &ds).unwrap())
+    }
+
+    #[test]
+    fn insert_get_latest_and_rollback_ordering() {
+        let mut reg = ModelRegistry::new();
+        let m1 = model(0.01, 1);
+        let m2 = model(0.05, 2);
+        reg.insert("champ", "v1", m1.clone());
+        reg.insert("champ", "v2", m2.clone());
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.versions("champ"), vec!["v1", "v2"]);
+        assert_eq!(reg.latest("champ").unwrap().0, "v2");
+        assert!(Arc::ptr_eq(&reg.get("champ", "v1").unwrap(), &m1));
+        // rollback: re-registering v1 promotes it back to latest
+        reg.insert("champ", "v1", m1.clone());
+        assert_eq!(reg.latest("champ").unwrap().0, "v1");
+        assert_eq!(reg.len(), 2, "rollback must not duplicate the version");
+        assert!(reg.remove("champ", "v2"));
+        assert!(!reg.remove("champ", "v2"));
+        assert_eq!(reg.versions("champ"), vec!["v1"]);
+    }
+
+    #[test]
+    fn resolve_names_the_miss_with_a_typed_error() {
+        let mut reg = ModelRegistry::new();
+        reg.insert("champ", "v1", model(0.01, 3));
+        assert!(reg.resolve("champ", "v1").is_ok());
+        let err = reg.resolve("champ", "v9").unwrap_err();
+        assert!(matches!(err, AviError::Registry(_)), "{err}");
+        assert!(err.to_string().contains("champ@v9"), "{err}");
+        assert!(err.to_string().contains("champ@v1"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_envelopes_are_rejected_not_panicked() {
+        let m = model(0.01, 4);
+        let json = persist::pipeline_to_json(&m);
+        let mut reg = ModelRegistry::new();
+        // unknown envelope version
+        let v99 = json.replace("\"version\": 1", "\"version\": 99");
+        let err = reg.load_bytes("k", "v1", &v99).unwrap_err();
+        assert!(matches!(err, AviError::Registry(_)), "{err}");
+        // unknown payload kind
+        let bad_kind = json.replace(persist::KIND_GENERATOR_SET, "alien-kind");
+        assert!(reg.load_bytes("k", "v1", &bad_kind).is_err());
+        // unknown format
+        let bad_fmt = json.replace(persist::FORMAT_PIPELINE, "mystery");
+        assert!(reg.load_bytes("k", "v1", &bad_fmt).is_err());
+        assert!(reg.load_bytes("k", "v1", "not json").is_err());
+        assert!(reg.is_empty(), "rejected loads must not register anything");
+        // the pristine envelope still loads
+        assert!(reg.load_bytes("k", "v1", &json).is_ok());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn load_path_missing_file_is_a_typed_error() {
+        let mut reg = ModelRegistry::new();
+        let err = reg
+            .load_path("k", "v1", Path::new("/nonexistent/avi/model.json"))
+            .unwrap_err();
+        assert!(matches!(err, AviError::Registry(_)), "{err}");
+        assert!(err.to_string().contains("model.json"), "{err}");
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_missing_file_rejection() {
+        let dir = std::env::temp_dir().join("avi_scale_registry_manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m1 = model(0.01, 5);
+        let m2 = model(0.05, 6);
+        persist::save(&m1, &dir.join("a.json")).unwrap();
+        persist::save(&m2, &dir.join("b.json")).unwrap();
+        let manifest = ModelRegistry::manifest_json(&[
+            ("champ".into(), "v1".into(), "a.json".into()),
+            ("champ".into(), "v2".into(), "b.json".into()),
+        ]);
+        let mpath = dir.join("manifest.json");
+        std::fs::write(&mpath, &manifest).unwrap();
+
+        let mut reg = ModelRegistry::new();
+        let loaded = reg.load_manifest(&mpath).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(reg.versions("champ"), vec!["v1", "v2"]);
+
+        // manifest naming a missing file: typed error naming the file,
+        // and the load is atomic — nothing from the manifest registers
+        let broken = ModelRegistry::manifest_json(&[
+            ("champ".into(), "v1".into(), "a.json".into()),
+            ("champ".into(), "v3".into(), "gone.json".into()),
+        ]);
+        std::fs::write(&mpath, &broken).unwrap();
+        let mut reg2 = ModelRegistry::new();
+        let err = reg2.load_manifest(&mpath).unwrap_err();
+        assert!(matches!(err, AviError::Registry(_)), "{err}");
+        assert!(err.to_string().contains("gone.json"), "{err}");
+        assert!(reg2.is_empty(), "failed manifest load must not half-register");
+
+        // unsupported manifest version / format
+        let mut reg3 = ModelRegistry::new();
+        let v9 = manifest.replace("\"version\": 1", "\"version\": 9");
+        assert!(reg3.load_manifest_str(&v9, &dir).is_err());
+        let badfmt = manifest.replace(FORMAT_MANIFEST, "mystery");
+        assert!(reg3.load_manifest_str(&badfmt, &dir).is_err());
+        assert!(reg3.load_manifest_str("{}", &dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(parse_spec("champ").unwrap(), ("champ".into(), "v1".into()));
+        assert_eq!(parse_spec("champ@v7").unwrap(), ("champ".into(), "v7".into()));
+        assert!(parse_spec("").is_err());
+        assert!(parse_spec("@v1").is_err());
+        assert!(parse_spec("k@").is_err());
+        assert!(parse_spec("k@v@x").is_err());
+        // delimiter/JSON-hostile characters are rejected up front
+        for bad in ["a b", "a\"b", "a\\b", "a=b", "a,b", "a:b", "k@v 1"] {
+            assert!(parse_spec(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn manifest_json_escapes_hostile_strings() {
+        let doc = ModelRegistry::manifest_json(&[(
+            "k\"ey".into(),
+            "v\\1".into(),
+            "dir/a.json".into(),
+        )]);
+        assert!(doc.contains("k\\\"ey"), "{doc}");
+        assert!(doc.contains("v\\\\1"), "{doc}");
+    }
+}

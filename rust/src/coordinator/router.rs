@@ -1,124 +1,600 @@
-//! Multi-model router: the vLLM-router-shaped piece of the coordinator.
+//! The serving **router** tier: traffic policies over registered model
+//! versions.
 //!
 //! Production deployments serve *several* fitted pipelines at once (one
 //! per dataset / ψ working point / estimator / A-B arm — the estimator
 //! layer makes OAVI, ABM, and VCA routes interchangeable).  The router
-//! owns one
-//! [`TransformService`] per registered model, routes each request by
-//! model key, and load-reports per model.  Routing invariants (pinned by
-//! the property tests below):
+//! owns one [`TransformService`] per (key, version) arm and decides who
+//! serves each request:
+//!
+//! * **Weighted A/B splits** across versions of a key, with
+//!   deterministic seeded assignment (`splitmix64(seed, seq)` over a
+//!   per-key submission counter) so a replayed request sequence lands on
+//!   the same arms.
+//! * **Shadow routes**: traffic mirrored to one extra version whose
+//!   replies are discarded — its latency and load are still recorded in
+//!   its own metrics, so a candidate can be soak-tested on production
+//!   traffic without affecting a single primary reply.
+//! * **Hot swap / rollback**: [`ModelRouter::register`] atomically
+//!   replaces a live route; requests already admitted to the old
+//!   version still get replies stamped with the old version (the old
+//!   service drains before it drops), and re-registering an older
+//!   version is a rollback.
+//! * **Per-route load reports**: request/reject counts, batch-size and
+//!   latency histograms for every live and retired arm, exported as one
+//!   [`RouterReport`] (JSON via [`RouterReport::to_json`]) the bench
+//!   layer can consume.
+//!
+//! Routing invariants (pinned by the property tests below and
+//! `tests/serve_control_plane.rs`):
 //!
 //! 1. every accepted request is answered exactly once,
-//! 2. a request is only ever served by the model it named,
+//! 2. a request is only ever served by the key it named (and stamped
+//!    with the version that served it),
 //! 3. unknown keys are rejected synchronously (no silent drops),
-//! 4. per-model FIFO: two requests from one client to one model come
-//!    back in submission order (batching never reorders within a batch).
+//! 4. per-model FIFO: two requests from one client to one key come back
+//!    in submission order (batching never reorders within a batch),
+//! 5. shadow traffic never changes a primary reply.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 
-use crate::coordinator::service::{BatchPolicy, Response, TransformService};
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::service::{
+    Histogram, Pending, ServeAnswer, ServeConfig, ServeMetrics, ServeReply, ServeRequest,
+    TransformService, BATCH_BUCKETS, LATENCY_BUCKETS_US,
+};
 use crate::error::{AviError, Result};
 use crate::pipeline::PipelineModel;
+use crate::util::json_escape;
 
-/// Per-model routing entry.
-struct Route {
-    service: TransformService,
-    requests: AtomicU64,
+/// splitmix64 finalizer over (seed, sequence) — the deterministic arm
+/// assignment hash.
+fn mix(seed: u64, seq: u64) -> u64 {
+    let mut z = seed ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
-/// A keyed collection of serving pipelines.
+/// One weighted primary arm of a route.
+struct Arm {
+    version: String,
+    weight: u32,
+    service: Arc<TransformService>,
+}
+
+/// The mirrored (shadow) arm of a route.
+struct ShadowArm {
+    version: String,
+    service: Arc<TransformService>,
+    /// Requests mirrored so far (admitted or rejected by the shadow).
+    mirrored: AtomicU64,
+}
+
+/// Immutable-per-generation route state; hot swap replaces the whole
+/// `Arc` so in-flight requests keep the generation that admitted them.
+struct RouteState {
+    seed: u64,
+    /// Per-key assignment counter.  Shared (`Arc`) across generations
+    /// that keep the same arms (adding a shadow), so no sequence number
+    /// is ever handed out twice and replays stay deterministic.
+    seq: Arc<AtomicU64>,
+    arms: Vec<Arm>,
+    total_weight: u64,
+    shadow: Option<ShadowArm>,
+}
+
+impl RouteState {
+    /// Deterministic weighted arm choice for the next request.
+    fn pick(&self) -> &Arm {
+        if self.arms.len() == 1 {
+            return &self.arms[0];
+        }
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let mut r = mix(self.seed, seq) % self.total_weight;
+        for arm in &self.arms {
+            if u64::from(arm.weight) > r {
+                return arm;
+            }
+            r -= u64::from(arm.weight);
+        }
+        self.arms.last().expect("non-empty arms")
+    }
+}
+
+/// A reply still in flight through the router.  Holds the route
+/// generation that admitted the request, so a hot swap cannot tear down
+/// the serving version before this reply resolves.
+pub struct RouterPending {
+    reply: Pending,
+    _route: Arc<RouteState>,
+}
+
+impl RouterPending {
+    /// Block until the reply arrives.
+    pub fn wait(self) -> ServeReply {
+        self.reply.wait()
+    }
+}
+
+/// Metrics of an arm that was hot-swapped out — kept so
+/// [`RouterReport`] totals stay cumulative across swaps.
+struct RetiredArm {
+    version: String,
+    role: &'static str,
+    metrics: Arc<ServeMetrics>,
+}
+
+/// Live `Arc`s retained per key before the oldest fold into accumulators
+/// (a just-retired arm may still flush in-flight requests; by the time
+/// this many further swaps have happened it has long drained).
+const MAX_RETIRED_PER_KEY: usize = 8;
+
+/// Retired arms of one key: a bounded window of live metric `Arc`s plus
+/// per-(version, role) fold-in accumulators, so unbounded swap/rollback
+/// cycles cost O(versions) memory instead of O(swaps).
+#[derive(Default)]
+struct RetiredSet {
+    recent: VecDeque<RetiredArm>,
+    folded: Vec<RetiredArm>,
+}
+
+impl RetiredSet {
+    fn push(&mut self, arm: RetiredArm) {
+        self.recent.push_back(arm);
+        while self.recent.len() > MAX_RETIRED_PER_KEY {
+            // only fold arms that can no longer receive increments: the
+            // service and its batcher each hold a metrics Arc clone
+            // until the generation fully drains, so strong_count == 1
+            // means the counters are final.  A still-draining arm stays
+            // in the window (bounded by actual in-flight work).
+            let Some(pos) = self
+                .recent
+                .iter()
+                .position(|a| Arc::strong_count(&a.metrics) == 1)
+            else {
+                break;
+            };
+            let old = self.recent.remove(pos).expect("position valid");
+            let slot = match self
+                .folded
+                .iter()
+                .position(|f| f.version == old.version && f.role == old.role)
+            {
+                Some(i) => &self.folded[i],
+                None => {
+                    self.folded.push(RetiredArm {
+                        version: old.version.clone(),
+                        role: old.role,
+                        metrics: Arc::new(ServeMetrics::default()),
+                    });
+                    self.folded.last().expect("just pushed")
+                }
+            };
+            slot.metrics.absorb(&old.metrics);
+        }
+    }
+}
+
+/// A keyed collection of serving routes with traffic policies.
+#[derive(Default)]
 pub struct ModelRouter {
-    routes: HashMap<String, Route>,
+    routes: RwLock<HashMap<String, Arc<RouteState>>>,
+    retired: Mutex<HashMap<String, RetiredSet>>,
 }
 
 impl ModelRouter {
     pub fn new() -> Self {
-        ModelRouter { routes: HashMap::new() }
+        Self::default()
     }
 
-    /// Register a fitted pipeline under `key` (replaces an existing
-    /// route with the same key; the old service drains on drop).
+    /// Register (or hot-swap) `key` with a single version taking all
+    /// traffic.  The previous generation, if any, keeps serving its
+    /// in-flight requests and its metrics are retained for the report.
     pub fn register(
-        &mut self,
+        &self,
         key: impl Into<String>,
+        version: impl Into<String>,
         model: Arc<PipelineModel>,
-        policy: BatchPolicy,
+        cfg: ServeConfig,
     ) {
-        let service = TransformService::start(model, policy);
-        self.routes
-            .insert(key.into(), Route { service, requests: AtomicU64::new(0) });
+        let (key, version) = (key.into(), version.into());
+        self.register_split(&key, vec![(version, model, 100)], 0, &cfg)
+            .expect("single-arm register cannot fail");
     }
 
-    /// Number of registered models.
+    /// Register (or hot-swap) `key` with weighted A/B arms
+    /// `(version, model, weight)`.  Assignment is deterministic for a
+    /// fixed `seed` and submission order.  Clears any shadow set on the
+    /// previous generation (set it again via [`ModelRouter::set_shadow`]).
+    pub fn register_split(
+        &self,
+        key: &str,
+        arms: Vec<(String, Arc<PipelineModel>, u32)>,
+        seed: u64,
+        cfg: &ServeConfig,
+    ) -> Result<()> {
+        if arms.is_empty() {
+            return Err(AviError::Registry(format!("route '{key}': no arms")));
+        }
+        let total_weight: u64 = arms.iter().map(|(_, _, w)| u64::from(*w)).sum();
+        if total_weight == 0 {
+            return Err(AviError::Registry(format!("route '{key}': all weights are zero")));
+        }
+        let arms: Vec<Arm> = arms
+            .into_iter()
+            .filter(|(_, _, w)| *w > 0)
+            .map(|(version, model, weight)| {
+                let service = Arc::new(TransformService::start(
+                    model,
+                    cfg.clone().stamp(key, &version),
+                ));
+                Arm { version, weight, service }
+            })
+            .collect();
+        let state = Arc::new(RouteState {
+            seed,
+            seq: Arc::new(AtomicU64::new(0)),
+            arms,
+            total_weight,
+            shadow: None,
+        });
+        let old = self.routes.write().expect("routes").insert(key.to_string(), state);
+        self.retire(key, old);
+        Ok(())
+    }
+
+    /// Register every key's latest version from a registry under one
+    /// serve configuration.
+    pub fn from_registry(registry: &ModelRegistry, cfg: &ServeConfig) -> Self {
+        let router = ModelRouter::new();
+        for key in registry.keys() {
+            if let Some((version, model)) = registry.latest(&key) {
+                router.register(key, version, model, cfg.clone());
+            }
+        }
+        router
+    }
+
+    /// Register (or hot-swap) `key` as a weighted split across registry
+    /// versions `(version, weight)`.
+    pub fn register_ab(
+        &self,
+        registry: &ModelRegistry,
+        key: &str,
+        split: &[(String, u32)],
+        seed: u64,
+        cfg: &ServeConfig,
+    ) -> Result<()> {
+        let arms = split
+            .iter()
+            .map(|(version, weight)| {
+                registry.resolve(key, version).map(|m| (version.clone(), m, *weight))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.register_split(key, arms, seed, cfg)
+    }
+
+    /// Mirror `key`'s traffic to `version` as a shadow: every request is
+    /// also enqueued there, the reply is discarded, and the shadow's own
+    /// metrics record its latency and load.  Fails on unknown keys.
+    pub fn set_shadow(
+        &self,
+        key: &str,
+        version: impl Into<String>,
+        model: Arc<PipelineModel>,
+        cfg: ServeConfig,
+    ) -> Result<()> {
+        let version = version.into();
+        let mut routes = self.routes.write().expect("routes");
+        let old = routes
+            .get(key)
+            .ok_or_else(|| AviError::Registry(format!("unknown route '{key}'")))?;
+        let service = Arc::new(TransformService::start(
+            model,
+            cfg.stamp(key, &version),
+        ));
+        // rebuild the state sharing the live arms and the assignment
+        // counter itself, so adding a shadow is not a traffic-visible
+        // swap and no sequence number is handed out twice
+        let state = Arc::new(RouteState {
+            seed: old.seed,
+            seq: old.seq.clone(),
+            arms: old
+                .arms
+                .iter()
+                .map(|a| Arm {
+                    version: a.version.clone(),
+                    weight: a.weight,
+                    service: a.service.clone(),
+                })
+                .collect(),
+            total_weight: old.total_weight,
+            shadow: Some(ShadowArm { version, service, mirrored: AtomicU64::new(0) }),
+        });
+        let old = routes.insert(key.to_string(), state);
+        drop(routes);
+        // primaries are shared with the new generation; only a replaced
+        // shadow's metrics need retiring
+        if let Some(old) = old {
+            if let Some(sh) = &old.shadow {
+                self.retired.lock().expect("retired").entry(key.to_string()).or_default().push(
+                    RetiredArm {
+                        version: sh.version.clone(),
+                        role: "retired-shadow",
+                        metrics: sh.service.metrics.clone(),
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn retire(&self, key: &str, old: Option<Arc<RouteState>>) {
+        let Some(old) = old else { return };
+        let mut retired = self.retired.lock().expect("retired");
+        let slot = retired.entry(key.to_string()).or_default();
+        for arm in &old.arms {
+            slot.push(RetiredArm {
+                version: arm.version.clone(),
+                role: "retired",
+                metrics: arm.service.metrics.clone(),
+            });
+        }
+        if let Some(sh) = &old.shadow {
+            slot.push(RetiredArm {
+                version: sh.version.clone(),
+                role: "retired-shadow",
+                metrics: sh.service.metrics.clone(),
+            });
+        }
+        // dropping `old` here only tears the services down once the last
+        // in-flight RouterPending releases its generation Arc
+    }
+
+    /// Number of registered keys.
     pub fn len(&self) -> usize {
-        self.routes.len()
+        self.routes.read().expect("routes").len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.routes.is_empty()
+        self.len() == 0
     }
 
     /// Registered keys (sorted, deterministic).
     pub fn keys(&self) -> Vec<String> {
-        let mut k: Vec<String> = self.routes.keys().cloned().collect();
+        let mut k: Vec<String> =
+            self.routes.read().expect("routes").keys().cloned().collect();
         k.sort();
         k
     }
 
-    /// Route one request to the named model (blocking).
-    pub fn predict(&self, key: &str, row: Vec<f64>) -> Result<Response> {
+    /// Admit one request to `key` without waiting for the answer.
+    /// Unknown keys fail synchronously; shadow traffic is mirrored
+    /// before the primary admission and can never affect it.
+    pub fn enqueue(&self, key: &str, req: ServeRequest) -> Result<RouterPending> {
         let route = self
             .routes
+            .read()
+            .expect("routes")
             .get(key)
-            .ok_or_else(|| AviError::Coordinator(format!("unknown model '{key}'")))?;
-        route.requests.fetch_add(1, Ordering::Relaxed);
-        route.service.predict_blocking(row)
+            .cloned()
+            .ok_or_else(|| AviError::Registry(format!("unknown route '{key}'")))?;
+        if let Some(shadow) = &route.shadow {
+            shadow.mirrored.fetch_add(1, Ordering::Relaxed);
+            // reply discarded; the shadow service still records latency
+            // and load in its own metrics
+            drop(shadow.service.enqueue(req.clone()));
+        }
+        let arm = route.pick();
+        let reply = arm.service.enqueue(req);
+        Ok(RouterPending { reply, _route: route })
     }
 
-    /// Route a batch of (key, row) pairs; results come back in input
-    /// order.  Rows for the same model are submitted together so the
-    /// per-model batcher can coalesce them.
-    pub fn predict_batch(&self, items: Vec<(String, Vec<f64>)>) -> Result<Vec<Response>> {
-        // group by key, remembering original positions
-        let mut by_key: HashMap<&str, Vec<(usize, Vec<f64>)>> = HashMap::new();
-        for (i, (key, row)) in items.iter().enumerate() {
-            by_key.entry(key.as_str()).or_default().push((i, row.clone()));
-        }
-        let mut out: Vec<Option<Response>> = vec![None; items.len()];
-        for (key, group) in by_key {
-            let route = self
-                .routes
-                .get(key)
-                .ok_or_else(|| AviError::Coordinator(format!("unknown model '{key}'")))?;
-            route
-                .requests
-                .fetch_add(group.len() as u64, Ordering::Relaxed);
-            let (idxs, rows): (Vec<usize>, Vec<Vec<f64>>) = group.into_iter().unzip();
-            let responses = route.service.predict_many(rows)?;
-            for (idx, resp) in idxs.into_iter().zip(responses) {
-                out[idx] = Some(resp);
+    /// Route one request to `key` and block for the reply.
+    pub fn submit(&self, key: &str, req: ServeRequest) -> Result<ServeReply> {
+        Ok(self.enqueue(key, req)?.wait())
+    }
+
+    /// Single-row convenience (rejections become typed errors).
+    pub fn predict(&self, key: &str, row: Vec<f64>) -> Result<ServeAnswer> {
+        self.submit(key, ServeRequest::row(row))?.answer()
+    }
+
+    /// Route a batch of (key, row) pairs; answers come back in input
+    /// order.  All requests are admitted before any reply is awaited, so
+    /// each key's batcher can coalesce them.
+    pub fn predict_batch(&self, items: Vec<(String, Vec<f64>)>) -> Result<Vec<ServeAnswer>> {
+        {
+            let routes = self.routes.read().expect("routes");
+            for (key, _) in &items {
+                if !routes.contains_key(key.as_str()) {
+                    return Err(AviError::Registry(format!("unknown route '{key}'")));
+                }
             }
         }
-        Ok(out.into_iter().map(|r| r.expect("answered")).collect())
+        let pendings = items
+            .into_iter()
+            .map(|(key, row)| self.enqueue(&key, ServeRequest::row(row)))
+            .collect::<Result<Vec<_>>>()?;
+        pendings.into_iter().map(|p| p.wait().answer()).collect()
     }
 
-    /// (key, requests-served) load report.
-    pub fn load_report(&self) -> Vec<(String, u64)> {
-        let mut report: Vec<(String, u64)> = self
-            .routes
-            .iter()
-            .map(|(k, r)| (k.clone(), r.requests.load(Ordering::Relaxed)))
-            .collect();
-        report.sort();
-        report
+    /// Snapshot every live and retired arm into one load report.
+    pub fn report(&self) -> RouterReport {
+        let mut routes: Vec<RouteLoad> = Vec::new();
+        {
+            let map = self.routes.read().expect("routes");
+            for (key, state) in map.iter() {
+                for arm in &state.arms {
+                    routes.push(RouteLoad::snapshot(
+                        key,
+                        &arm.version,
+                        "primary",
+                        arm.weight,
+                        &arm.service.metrics,
+                        0,
+                    ));
+                }
+                if let Some(sh) = &state.shadow {
+                    routes.push(RouteLoad::snapshot(
+                        key,
+                        &sh.version,
+                        "shadow",
+                        0,
+                        &sh.service.metrics,
+                        sh.mirrored.load(Ordering::Relaxed),
+                    ));
+                }
+            }
+        }
+        {
+            // aggregate retired arms per (version, role): repeated swaps
+            // of the same version report as one cumulative row
+            let retired = self.retired.lock().expect("retired");
+            for (key, set) in retired.iter() {
+                let mut groups: Vec<(String, &'static str, ServeMetrics)> = Vec::new();
+                for arm in set.recent.iter().chain(set.folded.iter()) {
+                    let idx = match groups
+                        .iter()
+                        .position(|(v, r, _)| *v == arm.version && *r == arm.role)
+                    {
+                        Some(i) => i,
+                        None => {
+                            groups.push((arm.version.clone(), arm.role, ServeMetrics::default()));
+                            groups.len() - 1
+                        }
+                    };
+                    groups[idx].2.absorb(&arm.metrics);
+                }
+                for (version, role, metrics) in &groups {
+                    routes.push(RouteLoad::snapshot(key, version, role, 0, metrics, 0));
+                }
+            }
+        }
+        routes.sort_by(|a, b| {
+            (&a.key, &a.version, a.role).cmp(&(&b.key, &b.version, b.role))
+        });
+        let primary = |r: &&RouteLoad| r.role == "primary" || r.role == "retired";
+        let total_requests =
+            routes.iter().filter(primary).map(|r| r.requests + r.rejected).sum();
+        let total_rejected = routes.iter().filter(primary).map(|r| r.rejected).sum();
+        RouterReport { routes, total_requests, total_rejected }
     }
 }
 
-impl Default for ModelRouter {
-    fn default() -> Self {
-        Self::new()
+// ---------------------------------------------------------------------
+// Load reports
+// ---------------------------------------------------------------------
+
+/// One arm's load snapshot.
+#[derive(Clone, Debug)]
+pub struct RouteLoad {
+    pub key: String,
+    pub version: String,
+    /// `primary`, `shadow`, `retired`, or `retired-shadow`.
+    pub role: &'static str,
+    /// A/B weight (0 for shadow/retired arms).
+    pub weight: u32,
+    /// Requests answered.
+    pub requests: u64,
+    /// Feature rows served.
+    pub rows: u64,
+    /// Requests rejected (queue full + deadline + shape).
+    pub rejected: u64,
+    /// Requests mirrored to this arm (shadow arms only).
+    pub mirrored: u64,
+    pub batches: u64,
+    pub max_batch: u64,
+    pub mean_queue_us: f64,
+    pub mean_compute_us: f64,
+    /// Flush-size histogram counts ([`BATCH_BUCKETS`] + overflow).
+    pub batch_rows_hist: Vec<u64>,
+    /// Latency histogram counts ([`LATENCY_BUCKETS_US`] + overflow).
+    pub latency_us_hist: Vec<u64>,
+}
+
+impl RouteLoad {
+    fn snapshot(
+        key: &str,
+        version: &str,
+        role: &'static str,
+        weight: u32,
+        m: &ServeMetrics,
+        mirrored: u64,
+    ) -> Self {
+        let requests = m.requests.load(Ordering::Relaxed);
+        let div = requests.max(1) as f64;
+        RouteLoad {
+            key: key.to_string(),
+            version: version.to_string(),
+            role,
+            weight,
+            requests,
+            rows: m.rows.load(Ordering::Relaxed),
+            rejected: m.rejected(),
+            mirrored,
+            batches: m.batches.load(Ordering::Relaxed),
+            max_batch: m.max_batch.load(Ordering::Relaxed),
+            mean_queue_us: m.queue_us.load(Ordering::Relaxed) as f64 / div,
+            mean_compute_us: m.compute_us.load(Ordering::Relaxed) as f64 / div,
+            batch_rows_hist: m.batch_rows_hist.snapshot(),
+            latency_us_hist: m.latency_us_hist.snapshot(),
+        }
+    }
+}
+
+/// The router's exportable load report: one entry per live/retired arm
+/// plus totals over primary traffic (shadow arms report separately and
+/// never count toward totals).
+#[derive(Clone, Debug)]
+pub struct RouterReport {
+    pub routes: Vec<RouteLoad>,
+    /// Requests submitted to primary arms (answered + rejected).
+    pub total_requests: u64,
+    /// Requests rejected by primary arms.
+    pub total_rejected: u64,
+}
+
+impl RouterReport {
+    /// One JSON document the bench layer consumes.
+    pub fn to_json(&self) -> String {
+        let hist_json = Histogram::json_parts;
+        let mut out = String::from("{\n\"routes\": [\n");
+        for (i, r) in self.routes.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "{{\"key\": \"{}\", \"version\": \"{}\", \"role\": \"{}\", \
+                 \"weight\": {}, \"requests\": {}, \"rows\": {}, \"rejected\": {}, \
+                 \"mirrored\": {}, \"batches\": {}, \"max_batch\": {}, \
+                 \"mean_queue_us\": {:.1}, \"mean_compute_us\": {:.1}, \
+                 \"batch_rows\": {}, \"latency_us\": {}}}",
+                json_escape(&r.key),
+                json_escape(&r.version),
+                r.role,
+                r.weight,
+                r.requests,
+                r.rows,
+                r.rejected,
+                r.mirrored,
+                r.batches,
+                r.max_batch,
+                r.mean_queue_us,
+                r.mean_compute_us,
+                hist_json(BATCH_BUCKETS, &r.batch_rows_hist),
+                hist_json(LATENCY_BUCKETS_US, &r.latency_us_hist),
+            ));
+        }
+        out.push_str(&format!(
+            "\n],\n\"total_requests\": {},\n\"total_rejected\": {}\n}}\n",
+            self.total_requests, self.total_rejected
+        ));
+        out
     }
 }
 
@@ -131,6 +607,7 @@ mod tests {
     use crate::ordering::FeatureOrdering;
     use crate::pipeline::{train_pipeline, PipelineConfig};
     use crate::svm::linear::LinearSvmConfig;
+    use std::time::{Duration, Instant};
 
     fn model(psi: f64, seed: u64) -> Arc<PipelineModel> {
         let ds = synthetic_dataset(300, seed);
@@ -148,7 +625,7 @@ mod tests {
         // behind one router — the serving shape the estimator layer
         // enables (each route's model is a trait-object transformer)
         let ds = synthetic_dataset(240, 9);
-        let mut r = ModelRouter::new();
+        let r = ModelRouter::new();
         for est in EstimatorConfig::battery(0.01) {
             let cfg = PipelineConfig {
                 estimator: est,
@@ -156,19 +633,21 @@ mod tests {
                 ordering: FeatureOrdering::Pearson,
             };
             let m = Arc::new(train_pipeline(&cfg, &ds).unwrap());
-            r.register(est.name(), m, BatchPolicy::default());
+            r.register(est.name(), "v1", m, ServeConfig::default());
         }
         assert_eq!(r.len(), 4);
         let row = ds.x.row(0).to_vec();
         for key in r.keys() {
-            assert!(r.predict(&key, row.clone()).is_ok(), "route {key}");
+            let ans = r.predict(&key, row.clone()).unwrap();
+            assert_eq!(ans.model_key, key);
+            assert_eq!(ans.model_version, "v1");
         }
     }
 
     fn router() -> ModelRouter {
-        let mut r = ModelRouter::new();
-        r.register("tight", model(0.001, 1), BatchPolicy::default());
-        r.register("loose", model(0.05, 2), BatchPolicy::default());
+        let r = ModelRouter::new();
+        r.register("tight", "v1", model(0.001, 1), ServeConfig::default());
+        r.register("loose", "v1", model(0.05, 2), ServeConfig::default());
         r
     }
 
@@ -180,7 +659,8 @@ mod tests {
         let ds = synthetic_dataset(10, 3);
         let row = ds.x.row(0).to_vec();
         assert!(r.predict("tight", row.clone()).is_ok());
-        assert!(r.predict("nope", row).is_err());
+        let err = r.predict("nope", row).unwrap_err();
+        assert!(matches!(err, AviError::Registry(_)), "{err}");
     }
 
     #[test]
@@ -194,26 +674,195 @@ mod tests {
                 (key.to_string(), ds.x.row(i).to_vec())
             })
             .collect();
-        let responses = r.predict_batch(items).unwrap();
-        assert_eq!(responses.len(), 40);
+        let answers = r.predict_batch(items).unwrap();
+        assert_eq!(answers.len(), 40);
+        for (i, ans) in answers.iter().enumerate() {
+            let expect = if i % 2 == 0 { "tight" } else { "loose" };
+            assert_eq!(ans.model_key, expect, "answer {i} from wrong model");
+        }
         // per-model answers match direct submission
         let direct_tight = r.predict("tight", ds.x.row(0).to_vec()).unwrap();
-        assert_eq!(responses[0].label, direct_tight.label);
-        let report = r.load_report();
+        assert_eq!(answers[0].label(), direct_tight.label());
+        let report = r.report();
         // 20 batch + 1 direct for tight; 20 for loose
-        assert_eq!(report[0], ("loose".to_string(), 20));
-        assert_eq!(report[1], ("tight".to_string(), 21));
+        assert_eq!(report.total_requests, 41);
+        let by_key = |k: &str| {
+            report
+                .routes
+                .iter()
+                .filter(|r| r.key == k)
+                .map(|r| r.requests)
+                .sum::<u64>()
+        };
+        assert_eq!(by_key("loose"), 20);
+        assert_eq!(by_key("tight"), 21);
     }
 
     #[test]
     fn replacing_a_route_keeps_serving() {
-        let mut r = router();
+        let r = router();
         let ds = synthetic_dataset(10, 5);
         let row = ds.x.row(0).to_vec();
         let before = r.predict("tight", row.clone()).unwrap();
-        r.register("tight", model(0.001, 1), BatchPolicy::default());
+        assert_eq!(before.model_version, "v1");
+        r.register("tight", "v2", model(0.001, 1), ServeConfig::default());
         let after = r.predict("tight", row).unwrap();
-        assert_eq!(before.label, after.label); // same training → same model
+        assert_eq!(after.model_version, "v2");
+        assert_eq!(before.label(), after.label()); // same training → same model
+        // the retired arm's traffic still counts in the report
+        let report = r.report();
+        assert_eq!(report.total_requests, 2);
+        assert!(report.routes.iter().any(|l| l.role == "retired" && l.requests == 1));
+    }
+
+    #[test]
+    fn in_flight_request_is_answered_by_the_old_version() {
+        let r = ModelRouter::new();
+        let ds = synthetic_dataset(10, 6);
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let held = ServeConfig { hold_gate: Some(gate.clone()), ..ServeConfig::default() };
+        r.register("m", "v1", model(0.01, 1), held);
+        // admitted to v1, not yet served
+        let pending = r.enqueue("m", ServeRequest::row(ds.x.row(0).to_vec())).unwrap();
+        // hot swap while the request is in flight
+        r.register("m", "v2", model(0.01, 1), ServeConfig::default());
+        let fresh = r.predict("m", ds.x.row(1).to_vec()).unwrap();
+        assert_eq!(fresh.model_version, "v2");
+        // release the old batcher: the in-flight request must be answered
+        // by (and stamped with) the version that admitted it
+        gate.store(false, std::sync::atomic::Ordering::SeqCst);
+        let ans = pending.wait().answer().unwrap();
+        assert_eq!(ans.model_version, "v1");
+        assert_eq!(r.report().total_requests, 2);
+    }
+
+    #[test]
+    fn weighted_ab_assignment_is_deterministic_for_a_fixed_seed() {
+        let ds = synthetic_dataset(64, 7);
+        let make = |seed: u64| {
+            let r = ModelRouter::new();
+            r.register_split(
+                "m",
+                vec![
+                    ("v1".into(), model(0.01, 1), 70),
+                    ("v2".into(), model(0.05, 2), 30),
+                ],
+                seed,
+                &ServeConfig::default(),
+            )
+            .unwrap();
+            r
+        };
+        let assignment = |r: &ModelRouter| -> Vec<String> {
+            (0..64)
+                .map(|i| r.predict("m", ds.x.row(i).to_vec()).unwrap().model_version)
+                .collect()
+        };
+        let a = assignment(&make(42));
+        let b = assignment(&make(42));
+        assert_eq!(a, b, "same seed must replay identically");
+        let n1 = a.iter().filter(|v| *v == "v1").count();
+        assert!(n1 > 32 && n1 < 64, "70/30 split landed {n1}/64 on v1");
+        // a different seed produces a different (but internally valid)
+        // assignment sequence
+        let c = assignment(&make(43));
+        assert_ne!(a, c, "different seeds should reshuffle assignment");
+        // every reply still came from a registered arm
+        assert!(c.iter().all(|v| v == "v1" || v == "v2"));
+    }
+
+    #[test]
+    fn zero_weight_and_empty_splits_are_rejected() {
+        let r = ModelRouter::new();
+        assert!(r.register_split("m", vec![], 0, &ServeConfig::default()).is_err());
+        let err = r
+            .register_split(
+                "m",
+                vec![("v1".into(), model(0.01, 1), 0)],
+                0,
+                &ServeConfig::default(),
+            )
+            .unwrap_err();
+        assert!(matches!(err, AviError::Registry(_)), "{err}");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn shadow_routes_never_affect_primary_replies() {
+        let ds = synthetic_dataset(48, 8);
+        let rows: Vec<Vec<f64>> = (0..48).map(|i| ds.x.row(i).to_vec()).collect();
+
+        // reference: primary only
+        let plain = ModelRouter::new();
+        plain.register("m", "v1", model(0.01, 1), ServeConfig::default());
+        let want: Vec<usize> =
+            rows.iter().map(|r| plain.predict("m", r.clone()).unwrap().label()).collect();
+
+        // same primary + a very different shadow model
+        let shadowed = ModelRouter::new();
+        shadowed.register("m", "v1", model(0.01, 1), ServeConfig::default());
+        shadowed
+            .set_shadow("m", "cand", model(0.05, 2), ServeConfig::default())
+            .unwrap();
+        let got: Vec<ServeAnswer> =
+            rows.iter().map(|r| shadowed.predict("m", r.clone()).unwrap()).collect();
+        assert_eq!(got.iter().map(ServeAnswer::label).collect::<Vec<_>>(), want);
+        assert!(got.iter().all(|a| a.model_version == "v1"));
+
+        // the shadow saw the traffic and recorded its own load
+        let report = shadowed.report();
+        let shadow = report.routes.iter().find(|l| l.role == "shadow").unwrap();
+        assert_eq!(shadow.version, "cand");
+        assert_eq!(shadow.mirrored, 48);
+        // shadow replies are discarded but its service still answers and
+        // records latency; wait briefly for the async flushes to land
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_secs(5) {
+            let l = shadowed.report();
+            let s = l.routes.iter().find(|l| l.role == "shadow").unwrap().clone();
+            if s.requests + s.rejected >= 48 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let l = shadowed.report();
+        let s = l.routes.iter().find(|l| l.role == "shadow").unwrap().clone();
+        assert!(s.requests + s.rejected >= 48, "shadow served {}", s.requests);
+        // shadow traffic never counts toward primary totals
+        assert_eq!(l.total_requests, 48);
+        // unknown key can't take a shadow
+        assert!(shadowed
+            .set_shadow("nope", "x", model(0.05, 2), ServeConfig::default())
+            .is_err());
+    }
+
+    #[test]
+    fn repeated_swaps_fold_into_one_cumulative_retired_row() {
+        let r = ModelRouter::new();
+        let m = model(0.01, 1);
+        let ds = synthetic_dataset(8, 11);
+        r.register("m", "v1", m.clone(), ServeConfig::default());
+        // 12 swap cycles of the same version: more than the retained
+        // window, so the fold-in accumulator path runs too
+        for _ in 0..12 {
+            r.predict("m", ds.x.row(0).to_vec()).unwrap();
+            r.register("m", "v1", m.clone(), ServeConfig::default());
+        }
+        let report = r.report();
+        let retired: Vec<_> =
+            report.routes.iter().filter(|l| l.role == "retired").collect();
+        assert_eq!(retired.len(), 1, "same-version swaps must aggregate: {:#?}", report.routes);
+        assert_eq!(retired[0].requests, 12);
+        assert_eq!(report.total_requests, 12);
+    }
+
+    #[test]
+    fn report_json_escapes_hostile_keys() {
+        let r = ModelRouter::new();
+        r.register("k\"ey", "v\\1", model(0.01, 1), ServeConfig::default());
+        let json = r.report().to_json();
+        assert!(json.contains("k\\\"ey"), "{json}");
+        assert!(json.contains("v\\\\1"), "{json}");
     }
 
     #[test]
@@ -230,14 +879,32 @@ mod tests {
                     for i in 0..16 {
                         let key = if (t + i) % 2 == 0 { "tight" } else { "loose" };
                         let row = ds.x.row((t * 16 + i) % 64).to_vec();
-                        r.predict(key, row).unwrap();
+                        let ans = r.predict(key, row).unwrap();
+                        assert_eq!(ans.model_key, key);
                         answered.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
                     }
                 });
             }
         });
         assert_eq!(answered.load(std::sync::atomic::Ordering::SeqCst), 64);
-        let total: u64 = r.load_report().iter().map(|(_, n)| n).sum();
-        assert_eq!(total, 64);
+        assert_eq!(r.report().total_requests, 64);
+    }
+
+    #[test]
+    fn report_json_is_well_formed_enough_for_the_bench_layer() {
+        let r = router();
+        let ds = synthetic_dataset(8, 10);
+        for i in 0..8 {
+            r.predict("tight", ds.x.row(i).to_vec()).unwrap();
+        }
+        let json = r.report().to_json();
+        assert!(json.contains("\"total_requests\": 8"), "{json}");
+        assert!(json.contains("\"key\": \"tight\""), "{json}");
+        assert!(json.contains("\"latency_us\""), "{json}");
+        assert!(json.contains("\"+inf\""), "{json}");
+        // counts in the report survive a JSON round-trip through the
+        // persist helpers the bench layer uses
+        let total = crate::estimator::persist::extract_f64(&json, "\"total_requests\":").unwrap();
+        assert_eq!(total as u64, 8);
     }
 }

@@ -1,70 +1,381 @@
-//! Serving-style transform service: clients submit feature rows, a
-//! batcher thread groups them (vLLM-router style — size- or
-//! deadline-triggered), runs the (FT) transform + SVM through the fitted
-//! pipeline, and answers each request exactly once.
+//! The serving **service** tier: one batcher thread per served model
+//! version, fed by a bounded request queue, answering the typed
+//! [`ServeRequest`] → [`ServeReply`] protocol.
 //!
-//! This is the request path the architecture contract cares about: the
-//! pipeline model wraps AOT PJRT executables (or the native backend) and
-//! no Python is anywhere near it.
+//! Layering (control plane, top down): **registry → router → service →
+//! backend**.  The [`crate::coordinator::registry::ModelRegistry`] owns
+//! fitted pipelines by `key@version`, the
+//! [`crate::coordinator::router::ModelRouter`] assigns traffic across
+//! versions, and each (key, version) arm is one [`TransformService`]: a
+//! batcher thread (vLLM-router style continuous batching) that groups
+//! whatever requests are pending, runs the (FT) transform + SVM through
+//! the fitted pipeline on the configured [`ServeBackend`], and answers
+//! every admitted request exactly once.
+//!
+//! Everything is constructed through one builder-style [`ServeConfig`]
+//! (backend choice, batch policy, queue bound, `key@version` stamp) —
+//! the single constructor [`TransformService::start`] replaced the old
+//! `start` / `start_sharded` / `start_pooled` trio.
+//!
+//! Admission control: the queue is a bounded `sync_channel`; a full
+//! queue answers [`RejectReason::QueueFull`] synchronously instead of
+//! blocking the client or growing without bound, and requests whose
+//! [`ServeRequest::deadline`] has expired are rejected at dequeue time
+//! ([`RejectReason::DeadlineExpired`]) instead of burning compute on an
+//! answer nobody is waiting for.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::backend::{ComputeBackend, ShardedBackend};
+use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend};
 use crate::coordinator::pool::PoolHandle;
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::pipeline::PipelineModel;
 
-/// One inference request: a feature row + a oneshot response channel.
-struct Request {
-    row: Vec<f64>,
-    enqueued: Instant,
-    respond: Sender<Response>,
-}
+// ---------------------------------------------------------------------
+// Typed request/response protocol
+// ---------------------------------------------------------------------
 
-/// The answer to a request.
+/// What a request carries: one feature row or a batch of rows.  A batch
+/// is one protocol unit — it is admitted, batched, and answered as a
+/// whole (never split across flushes), so per-model FIFO holds for
+/// batches exactly as for rows.
 #[derive(Clone, Debug)]
-pub struct Response {
+pub enum ServePayload {
+    Row(Vec<f64>),
+    Batch(Vec<Vec<f64>>),
+}
+
+/// One typed inference request.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub payload: ServePayload,
+    /// Maximum time the request may wait in the queue; expired requests
+    /// are rejected at dequeue instead of served late.
+    pub deadline: Option<Duration>,
+}
+
+impl ServeRequest {
+    /// Single-row request.
+    pub fn row(row: Vec<f64>) -> Self {
+        ServeRequest { payload: ServePayload::Row(row), deadline: None }
+    }
+
+    /// Row-batch request (answered as one unit).
+    pub fn batch(rows: Vec<Vec<f64>>) -> Self {
+        ServeRequest { payload: ServePayload::Batch(rows), deadline: None }
+    }
+
+    /// Attach a per-request queue deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Number of feature rows this request carries.
+    pub fn n_rows(&self) -> usize {
+        match &self.payload {
+            ServePayload::Row(_) => 1,
+            ServePayload::Batch(rows) => rows.len(),
+        }
+    }
+
+    fn rows(&self) -> &[Vec<f64>] {
+        match &self.payload {
+            ServePayload::Row(row) => std::slice::from_ref(row),
+            ServePayload::Batch(rows) => rows,
+        }
+    }
+}
+
+/// One row's prediction: the label plus the per-class decision scores it
+/// was derived from (binary models expose the single one-vs-rest score).
+#[derive(Clone, Debug)]
+pub struct Prediction {
     pub label: usize,
-    /// end-to-end latency as observed by the service.
-    pub latency: Duration,
-    /// how many requests shared the batch.
-    pub batch_size: usize,
+    pub scores: Vec<f64>,
 }
 
-/// Service counters.
-#[derive(Debug, Default)]
+/// A successful answer: one [`Prediction`] per request row, stamped with
+/// the model that served it and the latency split.
+#[derive(Clone, Debug)]
+pub struct ServeAnswer {
+    pub predictions: Vec<Prediction>,
+    /// Registry key of the model that served this request.
+    pub model_key: String,
+    /// Registry version of the model that served this request.
+    pub model_version: String,
+    /// Time spent waiting in the queue (enqueue → flush start).
+    pub queue_latency: Duration,
+    /// Time spent in the (FT) transform + SVM for the flush that served
+    /// this request (shared across the flush's requests).
+    pub compute_latency: Duration,
+    /// How many rows shared the flush.
+    pub batch_rows: usize,
+}
+
+impl ServeAnswer {
+    /// First (or only) row's label — the single-row convenience.
+    pub fn label(&self) -> usize {
+        self.predictions[0].label
+    }
+}
+
+/// Why a request was turned away without being served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue was full at admission.
+    QueueFull { capacity: usize },
+    /// The request's deadline expired before it was dequeued.
+    DeadlineExpired { waited: Duration },
+    /// A row's feature length does not match the model (or the batch was
+    /// empty).
+    BadShape { got: usize, want: usize },
+    /// The service has shut down.
+    Stopped,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { capacity } => {
+                write!(f, "queue full (capacity {capacity})")
+            }
+            RejectReason::DeadlineExpired { waited } => {
+                write!(f, "deadline expired after {:.1}ms in queue", waited.as_secs_f64() * 1e3)
+            }
+            RejectReason::BadShape { got, want } => {
+                write!(f, "bad shape: {got} features, model wants {want}")
+            }
+            RejectReason::Stopped => write!(f, "service stopped"),
+        }
+    }
+}
+
+/// The answer to a [`ServeRequest`]: served, or rejected with a typed
+/// reason.  Every admitted request receives exactly one reply.
+#[derive(Clone, Debug)]
+pub enum ServeReply {
+    Answered(ServeAnswer),
+    Rejected(RejectReason),
+}
+
+impl ServeReply {
+    /// Borrow the answer if the request was served.
+    pub fn as_answer(&self) -> Option<&ServeAnswer> {
+        match self {
+            ServeReply::Answered(a) => Some(a),
+            ServeReply::Rejected(_) => None,
+        }
+    }
+
+    /// Unwrap into an answer, converting a rejection into a typed error.
+    pub fn answer(self) -> Result<ServeAnswer> {
+        match self {
+            ServeReply::Answered(a) => Ok(a),
+            ServeReply::Rejected(r) => Err(AviError::Coordinator(format!("rejected: {r}"))),
+        }
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, ServeReply::Rejected(_))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Histograms + metrics
+// ---------------------------------------------------------------------
+
+/// End-to-end latency buckets (µs, `le` upper bounds + overflow).
+pub const LATENCY_BUCKETS_US: &[u64] =
+    &[100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 1_000_000];
+
+/// Flush batch-size buckets (rows, `le` upper bounds + overflow).
+pub const BATCH_BUCKETS: &[u64] = &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// Lock-free fixed-bucket histogram (`le` semantics, last bucket is the
+/// overflow), snapshotted into the [`RouterReport`] JSON.
+///
+/// [`RouterReport`]: crate::coordinator::router::RouterReport
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [u64],
+    counts: Vec<AtomicU64>,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [u64]) -> Self {
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, counts }
+    }
+
+    /// Count `v` in the first bucket with bound ≥ v (overflow otherwise).
+    pub fn record(&self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Upper bounds (the final overflow bucket is implicit).
+    pub fn bounds(&self) -> &'static [u64] {
+        self.bounds
+    }
+
+    /// Current per-bucket counts (bounds + one overflow slot).
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.snapshot().iter().sum()
+    }
+
+    /// Add another histogram's counts into this one (same bounds).
+    pub fn absorb(&self, other: &Histogram) {
+        debug_assert_eq!(self.bounds, other.bounds);
+        for (slot, count) in self.counts.iter().zip(other.snapshot()) {
+            slot.fetch_add(count, Ordering::Relaxed);
+        }
+    }
+
+    /// `{"le": [...], "counts": [...]}` with `"+inf"` as the last bound —
+    /// the one histogram serialization, shared with the router's report.
+    pub fn json_parts(bounds: &[u64], counts: &[u64]) -> String {
+        let les: Vec<String> = bounds
+            .iter()
+            .map(|b| b.to_string())
+            .chain(std::iter::once("\"+inf\"".to_string()))
+            .collect();
+        let cs: Vec<String> = counts.iter().map(|c| c.to_string()).collect();
+        format!("{{\"le\": [{}], \"counts\": [{}]}}", les.join(","), cs.join(","))
+    }
+
+    /// [`Histogram::json_parts`] over this histogram's current state.
+    pub fn to_json(&self) -> String {
+        Self::json_parts(self.bounds, &self.snapshot())
+    }
+}
+
+/// Per-service counters — one set per (key, version) arm, aggregated by
+/// the router into its [`RouterReport`].
+///
+/// [`RouterReport`]: crate::coordinator::router::RouterReport
+#[derive(Debug)]
 pub struct ServeMetrics {
+    /// Requests answered (protocol units, not rows).
     pub requests: AtomicU64,
+    /// Feature rows served.
+    pub rows: AtomicU64,
+    /// Flushes executed.
     pub batches: AtomicU64,
+    /// Largest flush, in rows.
     pub max_batch: AtomicU64,
+    /// Admission rejections: queue full.
+    pub rejected_full: AtomicU64,
+    /// Dequeue rejections: deadline expired.
+    pub rejected_deadline: AtomicU64,
+    /// Admission rejections: feature-length mismatch / empty batch.
+    pub rejected_shape: AtomicU64,
+    /// Σ queue latency over answered requests (µs) — mean = /requests.
+    pub queue_us: AtomicU64,
+    /// Σ compute latency over answered requests (µs).
+    pub compute_us: AtomicU64,
+    /// Flush-size histogram (rows).
+    pub batch_rows_hist: Histogram,
+    /// End-to-end latency histogram over answered requests (µs).
+    pub latency_us_hist: Histogram,
 }
 
-/// Batched transform/predict service over a fitted pipeline.
-pub struct TransformService {
-    tx: Sender<Request>,
-    handle: Option<JoinHandle<()>>,
-    stop: Arc<AtomicBool>,
-    pub metrics: Arc<ServeMetrics>,
-    n_features: usize,
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            requests: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+            rejected_shape: AtomicU64::new(0),
+            queue_us: AtomicU64::new(0),
+            compute_us: AtomicU64::new(0),
+            batch_rows_hist: Histogram::new(BATCH_BUCKETS),
+            latency_us_hist: Histogram::new(LATENCY_BUCKETS_US),
+        }
+    }
 }
 
-/// Shard floor for serving batches: per-row transform work (ℓ·g fused
-/// multiply-adds across every class block) is much heavier than the
-/// training dot products, so sharding pays off at smaller row counts
-/// than training's `MIN_ROWS_PER_SHARD`.
-pub const SERVE_MIN_ROWS_PER_SHARD: usize = 1024;
+impl ServeMetrics {
+    /// Total rejections across all reasons.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full.load(Ordering::Relaxed)
+            + self.rejected_deadline.load(Ordering::Relaxed)
+            + self.rejected_shape.load(Ordering::Relaxed)
+    }
+
+    /// Add another metrics set into this one — the router folds retired
+    /// arms' metrics into bounded accumulators with this.
+    pub fn absorb(&self, other: &ServeMetrics) {
+        let add = |into: &AtomicU64, from: &AtomicU64| {
+            into.fetch_add(from.load(Ordering::Relaxed), Ordering::Relaxed);
+        };
+        add(&self.requests, &other.requests);
+        add(&self.rows, &other.rows);
+        add(&self.batches, &other.batches);
+        add(&self.rejected_full, &other.rejected_full);
+        add(&self.rejected_deadline, &other.rejected_deadline);
+        add(&self.rejected_shape, &other.rejected_shape);
+        add(&self.queue_us, &other.queue_us);
+        add(&self.compute_us, &other.compute_us);
+        self.max_batch
+            .fetch_max(other.max_batch.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.batch_rows_hist.absorb(&other.batch_rows_hist);
+        self.latency_us_hist.absorb(&other.latency_us_hist);
+    }
+}
+
+// ---------------------------------------------------------------------
+// ServeConfig
+// ---------------------------------------------------------------------
+
+/// Which compute backend the batcher runs the (FT) transform through.
+/// The `ComputeBackend` trait itself is `!Send` by design, so only this
+/// `Send` description crosses into the batcher thread, which constructs
+/// the backend locally.
+#[derive(Clone)]
+pub enum ServeBackend {
+    /// Sequential reference — bit-identical everywhere.
+    Native,
+    /// Private shard pool with `workers` threads.
+    Sharded { workers: usize },
+    /// Shard workers drawn from a **shared** process pool with an
+    /// `inner_workers` budget, so serving composes with training load.
+    Pooled { handle: PoolHandle, inner_workers: usize },
+}
+
+impl std::fmt::Debug for ServeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeBackend::Native => write!(f, "Native"),
+            ServeBackend::Sharded { workers } => write!(f, "Sharded({workers})"),
+            ServeBackend::Pooled { inner_workers, .. } => write!(f, "Pooled({inner_workers})"),
+        }
+    }
+}
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// flush when this many requests are pending…
+    /// flush when this many rows are pending…
     pub max_batch: usize,
-    /// …or when the oldest pending request has waited this long.
+    /// …and this is the idle recv pacing: how long the batcher blocks
+    /// for the next request before re-checking `stop` (continuous
+    /// batching flushes whatever accumulated as soon as the queue
+    /// drains, so arrivals are never delayed by this — but shutdown can
+    /// lag by up to one interval).
     pub max_wait: Duration,
 }
 
@@ -74,106 +385,272 @@ impl Default for BatchPolicy {
     }
 }
 
-impl TransformService {
-    /// Spawn the batcher thread over a trained pipeline (single-threaded
-    /// transform — the seed behavior).
-    pub fn start(model: Arc<PipelineModel>, policy: BatchPolicy) -> Self {
-        Self::start_sharded(model, policy, 1)
-    }
+/// Default bound on the per-service request queue.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 1024;
 
-    /// Deprecated alias for [`TransformService::start_pooled`] that owns
-    /// a private worker pool: the batcher runs the (FT) transform through
-    /// a [`ShardedBackend`] with `intra_workers` shard workers, on top of
-    /// the request-level batching.  Kept for the PR-1 call sites; new
-    /// code shares the process pool via `start_pooled`.
-    pub fn start_sharded(
-        model: Arc<PipelineModel>,
-        policy: BatchPolicy,
-        intra_workers: usize,
-    ) -> Self {
-        let (tx, rx) = channel::<Request>();
-        let stop = Arc::new(AtomicBool::new(false));
-        let metrics = Arc::new(ServeMetrics::default());
-        let n_features = model.perm.len();
-        let stop_c = stop.clone();
-        let metrics_c = metrics.clone();
-        let handle = std::thread::spawn(move || {
-            let backend =
-                ShardedBackend::boxed_with_min_rows(intra_workers, SERVE_MIN_ROWS_PER_SHARD);
-            batcher_loop(model, rx, policy, stop_c, metrics_c, backend.as_ref())
-        });
-        TransformService { tx, handle: Some(handle), stop, metrics, n_features }
-    }
+/// Shard floor for serving batches: per-row transform work (ℓ·g fused
+/// multiply-adds across every class block) is much heavier than the
+/// training dot products, so sharding pays off at smaller row counts
+/// than training's `MIN_ROWS_PER_SHARD`.
+pub const SERVE_MIN_ROWS_PER_SHARD: usize = 1024;
 
-    /// [`TransformService::start`] drawing shard workers from a
-    /// **shared** pool: the batcher's (FT) transform fans shards onto
-    /// `pool` with an `inner_workers` budget, so serving composes with
-    /// whatever else (grid search, per-class refits) the process runs on
-    /// the same workers.  The persistent pool's cheap dispatch means the
-    /// serving shard floor ([`SERVE_MIN_ROWS_PER_SHARD`]) — not thread
-    /// spawn cost — is what gates small batches now.  The backend itself
-    /// is still constructed inside the batcher thread (the
-    /// `ComputeBackend` trait is `!Send` by design); only the `Send +
-    /// Sync` [`PoolHandle`] crosses.
-    pub fn start_pooled(
-        model: Arc<PipelineModel>,
-        policy: BatchPolicy,
-        pool: PoolHandle,
-        inner_workers: usize,
-    ) -> Self {
-        let (tx, rx) = channel::<Request>();
-        let stop = Arc::new(AtomicBool::new(false));
-        let metrics = Arc::new(ServeMetrics::default());
-        let n_features = model.perm.len();
-        let stop_c = stop.clone();
-        let metrics_c = metrics.clone();
-        let handle = std::thread::spawn(move || {
-            let backend = ShardedBackend::boxed_with_handle(
-                pool,
-                inner_workers,
-                SERVE_MIN_ROWS_PER_SHARD,
-            );
-            batcher_loop(model, rx, policy, stop_c, metrics_c, backend.as_ref())
-        });
-        TransformService { tx, handle: Some(handle), stop, metrics, n_features }
-    }
+/// Builder-style construction surface for the whole serving path: the
+/// backend choice, batching policy, queue bound, and the `key@version`
+/// stamp replies carry.  [`TransformService::start`] consumes it — the
+/// one constructor that replaced `start` / `start_sharded` /
+/// `start_pooled`.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub backend: ServeBackend,
+    pub policy: BatchPolicy,
+    /// Bounded queue capacity; admission past it rejects synchronously.
+    pub queue_capacity: usize,
+    /// Registry key stamped onto every answer.
+    pub key: String,
+    /// Registry version stamped onto every answer.
+    pub version: String,
+    /// Test hook: while `true`, the batcher sleeps without draining the
+    /// queue, making admission control deterministic to exercise.
+    #[doc(hidden)]
+    pub hold_gate: Option<Arc<AtomicBool>>,
+}
 
-    /// Submit a row; blocks until the prediction arrives.
-    pub fn predict_blocking(&self, row: Vec<f64>) -> Result<Response> {
-        if row.len() != self.n_features {
-            return Err(AviError::Coordinator(format!(
-                "feature length {} != {}",
-                row.len(),
-                self.n_features
-            )));
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            backend: ServeBackend::Native,
+            policy: BatchPolicy::default(),
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            key: "default".into(),
+            version: "v1".into(),
+            hold_gate: None,
         }
-        let (rtx, rrx) = channel();
-        self.tx
-            .send(Request { row, enqueued: Instant::now(), respond: rtx })
-            .map_err(|_| AviError::Coordinator("service stopped".into()))?;
-        rrx.recv().map_err(|_| AviError::Coordinator("response dropped".into()))
+    }
+}
+
+impl ServeConfig {
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    /// Fire-and-collect helper used by the demo/benches: submit many rows
-    /// from this thread, return all responses.
-    pub fn predict_many(&self, rows: Vec<Vec<f64>>) -> Result<Vec<Response>> {
-        let mut rxs = Vec::with_capacity(rows.len());
+    /// Sequential reference backend (the default).
+    pub fn native(mut self) -> Self {
+        self.backend = ServeBackend::Native;
+        self
+    }
+
+    /// Private shard pool with `workers` threads.
+    pub fn sharded(mut self, workers: usize) -> Self {
+        self.backend = ServeBackend::Sharded { workers };
+        self
+    }
+
+    /// Draw shard workers from a shared pool with an `inner_workers`
+    /// budget.
+    pub fn pooled(mut self, handle: PoolHandle, inner_workers: usize) -> Self {
+        self.backend = ServeBackend::Pooled { handle, inner_workers };
+        self
+    }
+
+    /// Batching policy.
+    pub fn batch(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Bound the request queue (0 is clamped to 1).
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity.max(1);
+        self
+    }
+
+    /// `key@version` stamp replies carry (the router sets this when it
+    /// builds arms from the registry).
+    pub fn stamp(mut self, key: impl Into<String>, version: impl Into<String>) -> Self {
+        self.key = key.into();
+        self.version = version.into();
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// The service
+// ---------------------------------------------------------------------
+
+/// One queued request: rows + deadline + the oneshot reply channel.
+struct Request {
+    req: ServeRequest,
+    enqueued: Instant,
+    respond: Sender<ServeReply>,
+}
+
+/// A reply that may already be available (synchronous rejection) or
+/// still in flight.  [`Pending::wait`] blocks until it resolves.
+pub enum Pending {
+    Ready(ServeReply),
+    Waiting(Receiver<ServeReply>),
+}
+
+impl Pending {
+    /// Block until the reply arrives (a dropped service answers
+    /// [`RejectReason::Stopped`] rather than hanging).
+    pub fn wait(self) -> ServeReply {
+        match self {
+            Pending::Ready(reply) => reply,
+            Pending::Waiting(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| ServeReply::Rejected(RejectReason::Stopped)),
+        }
+    }
+}
+
+/// Batched transform/predict service over one fitted pipeline version.
+pub struct TransformService {
+    tx: SyncSender<Request>,
+    handle: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    pub metrics: Arc<ServeMetrics>,
+    n_features: usize,
+    queue_capacity: usize,
+    key: String,
+    version: String,
+}
+
+impl TransformService {
+    /// Spawn the batcher thread over a trained pipeline — the single
+    /// constructor for every backend / queueing / batching combination.
+    pub fn start(model: Arc<PipelineModel>, cfg: ServeConfig) -> Self {
+        let ServeConfig { backend, policy, queue_capacity, key, version, hold_gate } = cfg;
+        let queue_capacity = queue_capacity.max(1);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(queue_capacity);
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(ServeMetrics::default());
+        let n_features = model.perm.len();
+        let stop_c = stop.clone();
+        let metrics_c = metrics.clone();
+        let stamp = (key.clone(), version.clone());
+        let handle = std::thread::spawn(move || {
+            // the backend is constructed inside the batcher thread: the
+            // ComputeBackend trait is !Send by design, only the Send
+            // ServeBackend description crosses
+            let backend: Box<dyn ComputeBackend> = match backend {
+                ServeBackend::Native => Box::new(NativeBackend),
+                ServeBackend::Sharded { workers } => {
+                    ShardedBackend::boxed_with_min_rows(workers, SERVE_MIN_ROWS_PER_SHARD)
+                }
+                ServeBackend::Pooled { handle, inner_workers } => {
+                    ShardedBackend::boxed_with_handle(
+                        handle,
+                        inner_workers,
+                        SERVE_MIN_ROWS_PER_SHARD,
+                    )
+                }
+            };
+            if let Some(gate) = hold_gate {
+                // stop must still end the spin, or dropping a gated
+                // service would join a thread that never exits
+                while gate.load(Ordering::SeqCst) && !stop_c.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+            batcher_loop(model, rx, policy, stop_c, metrics_c, backend.as_ref(), &stamp)
+        });
+        TransformService {
+            tx,
+            handle: Some(handle),
+            stop,
+            metrics,
+            n_features,
+            queue_capacity,
+            key,
+            version,
+        }
+    }
+
+    /// Registry key this service answers under.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Registry version this service answers under.
+    pub fn version(&self) -> &str {
+        &self.version
+    }
+
+    /// Feature length the model expects.
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Admit a request without waiting for the answer.  Shape errors and
+    /// a full queue resolve synchronously ([`Pending::Ready`]); admitted
+    /// requests resolve when the batcher answers.
+    pub fn enqueue(&self, req: ServeRequest) -> Pending {
+        let rows = req.rows();
+        if rows.is_empty() {
+            self.metrics.rejected_shape.fetch_add(1, Ordering::Relaxed);
+            return Pending::Ready(ServeReply::Rejected(RejectReason::BadShape {
+                got: 0,
+                want: self.n_features,
+            }));
+        }
         for row in rows {
             if row.len() != self.n_features {
-                return Err(AviError::Coordinator("bad feature length".into()));
+                self.metrics.rejected_shape.fetch_add(1, Ordering::Relaxed);
+                return Pending::Ready(ServeReply::Rejected(RejectReason::BadShape {
+                    got: row.len(),
+                    want: self.n_features,
+                }));
             }
-            let (rtx, rrx) = channel();
-            self.tx
-                .send(Request { row, enqueued: Instant::now(), respond: rtx })
-                .map_err(|_| AviError::Coordinator("service stopped".into()))?;
-            rxs.push(rrx);
         }
-        rxs.into_iter()
-            .map(|rx| rx.recv().map_err(|_| AviError::Coordinator("response dropped".into())))
-            .collect()
+        let (rtx, rrx) = channel();
+        match self.tx.try_send(Request { req, enqueued: Instant::now(), respond: rtx }) {
+            Ok(()) => Pending::Waiting(rrx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected_full.fetch_add(1, Ordering::Relaxed);
+                Pending::Ready(ServeReply::Rejected(RejectReason::QueueFull {
+                    capacity: self.queue_capacity,
+                }))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Pending::Ready(ServeReply::Rejected(RejectReason::Stopped))
+            }
+        }
     }
 
-    /// Graceful shutdown (drains pending requests first).
+    /// Submit a request and block for its reply.
+    pub fn submit(&self, req: ServeRequest) -> ServeReply {
+        self.enqueue(req).wait()
+    }
+
+    /// Single-row convenience: submit and unwrap (rejections become
+    /// typed errors).
+    pub fn predict_blocking(&self, row: Vec<f64>) -> Result<ServeAnswer> {
+        self.submit(ServeRequest::row(row)).answer()
+    }
+
+    /// Fire-and-collect helper used by the demo/benches: submit many
+    /// single-row requests from this thread, answers in submission order.
+    /// Keeps at most `queue_capacity` requests in flight so its own
+    /// traffic can never trip the bounded queue's admission control.
+    pub fn predict_many(&self, rows: Vec<Vec<f64>>) -> Result<Vec<ServeAnswer>> {
+        let mut out = Vec::with_capacity(rows.len());
+        let mut pendings: Vec<Pending> = Vec::with_capacity(self.queue_capacity);
+        for row in rows {
+            pendings.push(self.enqueue(ServeRequest::row(row)));
+            if pendings.len() == self.queue_capacity {
+                for p in pendings.drain(..) {
+                    out.push(p.wait().answer()?);
+                }
+            }
+        }
+        for p in pendings {
+            out.push(p.wait().answer()?);
+        }
+        Ok(out)
+    }
+
+    /// Graceful shutdown (drains and answers pending requests first).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.handle.take() {
@@ -198,21 +675,24 @@ fn batcher_loop(
     stop: Arc<AtomicBool>,
     metrics: Arc<ServeMetrics>,
     backend: &dyn ComputeBackend,
+    stamp: &(String, String),
 ) {
     let mut pending: Vec<Request> = Vec::new();
+    let mut pending_rows = 0usize;
     loop {
         // drain whatever is available without blocking
         loop {
             match rx.try_recv() {
                 Ok(req) => {
+                    pending_rows += req.req.n_rows();
                     pending.push(req);
-                    if pending.len() >= policy.max_batch {
+                    if pending_rows >= policy.max_batch {
                         break;
                     }
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
-                    flush(&model, &mut pending, &metrics, backend);
+                    flush(&model, &mut pending, &metrics, backend, stamp);
                     return;
                 }
             }
@@ -224,22 +704,30 @@ fn batcher_loop(
         // added latency (p50 was pinned at the deadline).  `max_wait`
         // remains as the recv_timeout pacing below.
         if !pending.is_empty() {
-            flush(&model, &mut pending, &metrics, backend);
+            pending_rows = 0;
+            flush(&model, &mut pending, &metrics, backend, stamp);
             continue;
         }
         if stop.load(Ordering::SeqCst) {
-            flush(&model, &mut pending, &metrics, backend);
+            // drain everything still queued so a request in flight on a
+            // hot-swapped-out version still gets its (old-version) reply
+            while let Ok(req) = rx.try_recv() {
+                pending.push(req);
+            }
+            flush(&model, &mut pending, &metrics, backend, stamp);
             return;
         }
-        if pending.is_empty() {
-            // block briefly for the next request
-            match rx.recv_timeout(Duration::from_millis(1)) {
-                Ok(req) => pending.push(req),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+        // block for the next request, up to the configured pacing
+        match rx.recv_timeout(policy.max_wait) {
+            Ok(req) => {
+                pending_rows += req.req.n_rows();
+                pending.push(req);
             }
-        } else {
-            std::thread::yield_now();
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                flush(&model, &mut pending, &metrics, backend, stamp);
+                return;
+            }
         }
     }
 }
@@ -249,24 +737,68 @@ fn flush(
     pending: &mut Vec<Request>,
     metrics: &ServeMetrics,
     backend: &dyn ComputeBackend,
+    stamp: &(String, String),
 ) {
     if pending.is_empty() {
         return;
     }
+    let flush_start = Instant::now();
     let batch: Vec<Request> = std::mem::take(pending);
-    let rows: Vec<Vec<f64>> = batch.iter().map(|r| r.row.clone()).collect();
+    // deadline check at dequeue: expired requests are rejected before
+    // any compute is spent on them
+    let mut alive: Vec<Request> = Vec::with_capacity(batch.len());
+    for req in batch {
+        if let Some(deadline) = req.req.deadline {
+            let waited = flush_start.saturating_duration_since(req.enqueued);
+            if waited > deadline {
+                metrics.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+                let _ = req
+                    .respond
+                    .send(ServeReply::Rejected(RejectReason::DeadlineExpired { waited }));
+                continue;
+            }
+        }
+        alive.push(req);
+    }
+    if alive.is_empty() {
+        return;
+    }
+    let rows: Vec<Vec<f64>> =
+        alive.iter().flat_map(|r| r.req.rows().iter().cloned()).collect();
+    let n_rows = rows.len();
     let x = Matrix::from_rows(&rows).expect("uniform rows");
-    let labels = model.predict_with_backend(&x, backend);
-    let bsz = batch.len();
-    metrics.requests.fetch_add(bsz as u64, Ordering::Relaxed);
+    let t_compute = Instant::now();
+    let (labels, scores) = model.predict_scores_with_backend(&x, backend);
+    let compute = t_compute.elapsed();
+    metrics.requests.fetch_add(alive.len() as u64, Ordering::Relaxed);
+    metrics.rows.fetch_add(n_rows as u64, Ordering::Relaxed);
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics.max_batch.fetch_max(bsz as u64, Ordering::Relaxed);
-    for (req, label) in batch.into_iter().zip(labels.into_iter()) {
-        let _ = req.respond.send(Response {
-            label,
-            latency: req.enqueued.elapsed(),
-            batch_size: bsz,
-        });
+    metrics.max_batch.fetch_max(n_rows as u64, Ordering::Relaxed);
+    metrics.batch_rows_hist.record(n_rows as u64);
+    metrics.compute_us.fetch_add(
+        compute.as_micros() as u64 * alive.len() as u64,
+        Ordering::Relaxed,
+    );
+    let mut off = 0usize;
+    for req in alive {
+        let k = req.req.n_rows();
+        let predictions = (off..off + k)
+            .map(|i| Prediction { label: labels[i], scores: scores[i].clone() })
+            .collect();
+        off += k;
+        let queue_latency = flush_start.saturating_duration_since(req.enqueued);
+        metrics.queue_us.fetch_add(queue_latency.as_micros() as u64, Ordering::Relaxed);
+        metrics
+            .latency_us_hist
+            .record(req.enqueued.elapsed().as_micros() as u64);
+        let _ = req.respond.send(ServeReply::Answered(ServeAnswer {
+            predictions,
+            model_key: stamp.0.clone(),
+            model_version: stamp.1.clone(),
+            queue_latency,
+            compute_latency: compute,
+            batch_rows: n_rows,
+        }));
     }
 }
 
@@ -294,7 +826,7 @@ pub fn stress(service: &TransformService, rows: Vec<Vec<f64>>, threads: usize) -
                 match row {
                     Some(r) => {
                         let resp = svc.predict_blocking(r).expect("predict");
-                        out.lock().unwrap().push(resp.label);
+                        out.lock().unwrap().push(resp.label());
                     }
                     None => break,
                 }
@@ -329,45 +861,79 @@ mod tests {
         let model = trained_model();
         let ds = synthetic_dataset(64, 22);
         let offline = model.predict(&ds.x);
-        let svc = TransformService::start(model.clone(), BatchPolicy::default());
+        let svc = TransformService::start(model.clone(), ServeConfig::default());
         let rows: Vec<Vec<f64>> = (0..64).map(|i| ds.x.row(i).to_vec()).collect();
         let responses = svc.predict_many(rows).unwrap();
-        let online: Vec<usize> = responses.iter().map(|r| r.label).collect();
+        let online: Vec<usize> = responses.iter().map(|r| r.label()).collect();
         assert_eq!(online, offline);
         assert!(svc.metrics.requests.load(Ordering::Relaxed) == 64);
         assert!(svc.metrics.batches.load(Ordering::Relaxed) >= 1);
+        assert_eq!(svc.metrics.batch_rows_hist.total(),
+                   svc.metrics.batches.load(Ordering::Relaxed));
         svc.shutdown();
     }
 
     #[test]
-    fn sharded_service_matches_offline_path() {
+    fn replies_carry_stamp_scores_and_latency_split() {
+        let model = trained_model();
+        let ds = synthetic_dataset(8, 23);
+        let svc = TransformService::start(
+            model.clone(),
+            ServeConfig::new().stamp("champ", "v7"),
+        );
+        let ans = svc.predict_blocking(ds.x.row(0).to_vec()).unwrap();
+        assert_eq!(ans.model_key, "champ");
+        assert_eq!(ans.model_version, "v7");
+        assert_eq!(ans.predictions.len(), 1);
+        // scores agree with the offline decision path bit-for-bit
+        let (labels, scores) =
+            model.predict_scores_with_backend(&ds.x, &crate::backend::NativeBackend);
+        assert_eq!(ans.label(), labels[0]);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&ans.predictions[0].scores), bits(&scores[0]));
+        assert!(ans.compute_latency > Duration::ZERO);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batch_payload_is_answered_as_one_unit() {
+        let model = trained_model();
+        let ds = synthetic_dataset(20, 24);
+        let offline = model.predict(&ds.x);
+        let svc = TransformService::start(model, ServeConfig::default());
+        let rows: Vec<Vec<f64>> = (0..20).map(|i| ds.x.row(i).to_vec()).collect();
+        let reply = svc.submit(ServeRequest::batch(rows));
+        let ans = reply.answer().unwrap();
+        assert_eq!(ans.predictions.len(), 20);
+        let labels: Vec<usize> = ans.predictions.iter().map(|p| p.label).collect();
+        assert_eq!(labels, offline);
+        assert_eq!(svc.metrics.rows.load(Ordering::Relaxed), 20);
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_and_pooled_configs_match_offline_path() {
+        use crate::coordinator::pool::ThreadPool;
         let model = trained_model();
         let ds = synthetic_dataset(48, 25);
         let offline = model.predict(&ds.x);
-        let svc = TransformService::start_sharded(model.clone(), BatchPolicy::default(), 3);
-        let rows: Vec<Vec<f64>> = (0..48).map(|i| ds.x.row(i).to_vec()).collect();
-        let responses = svc.predict_many(rows).unwrap();
-        let online: Vec<usize> = responses.iter().map(|r| r.label).collect();
+        let rows = |n: usize| -> Vec<Vec<f64>> {
+            (0..n).map(|i| ds.x.row(i).to_vec()).collect()
+        };
+        let svc = TransformService::start(model.clone(), ServeConfig::new().sharded(3));
+        let online: Vec<usize> =
+            svc.predict_many(rows(48)).unwrap().iter().map(|r| r.label()).collect();
         assert_eq!(online, offline);
         svc.shutdown();
-    }
 
-    #[test]
-    fn pooled_service_matches_offline_path() {
-        use crate::coordinator::pool::ThreadPool;
-        let model = trained_model();
-        let ds = synthetic_dataset(52, 26);
-        let offline = model.predict(&ds.x);
         let pool = ThreadPool::new(3);
-        let svc = TransformService::start_pooled(
+        let svc = TransformService::start(
             model.clone(),
-            BatchPolicy::default(),
-            pool.handle(),
-            pool.workers(),
+            ServeConfig::new().pooled(pool.handle(), pool.workers()),
         );
-        let rows: Vec<Vec<f64>> = (0..52).map(|i| ds.x.row(i).to_vec()).collect();
-        let responses = svc.predict_many(rows).unwrap();
-        let online: Vec<usize> = responses.iter().map(|r| r.label).collect();
+        let online: Vec<usize> =
+            svc.predict_many(rows(48)).unwrap().iter().map(|r| r.label()).collect();
         assert_eq!(online, offline);
         svc.shutdown();
         // the shared pool survives the service and stays usable
@@ -380,12 +946,12 @@ mod tests {
     fn batches_respect_cap() {
         let model = trained_model();
         let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) };
-        let svc = TransformService::start(model, policy);
+        let svc = TransformService::start(model, ServeConfig::new().batch(policy));
         let ds = synthetic_dataset(40, 23);
         let rows: Vec<Vec<f64>> = (0..40).map(|i| ds.x.row(i).to_vec()).collect();
         let responses = svc.predict_many(rows).unwrap();
         for r in &responses {
-            assert!(r.batch_size <= 8, "batch {}", r.batch_size);
+            assert!(r.batch_rows <= 8, "batch {}", r.batch_rows);
         }
         assert!(svc.metrics.max_batch.load(Ordering::Relaxed) <= 8);
         svc.shutdown();
@@ -394,7 +960,7 @@ mod tests {
     #[test]
     fn concurrent_clients_all_answered() {
         let model = trained_model();
-        let svc = TransformService::start(model, BatchPolicy::default());
+        let svc = TransformService::start(model, ServeConfig::default());
         let ds = synthetic_dataset(60, 24);
         let rows: Vec<Vec<f64>> = (0..60).map(|i| ds.x.row(i).to_vec()).collect();
         let labels = stress(&svc, rows, 4);
@@ -404,11 +970,92 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_feature_length() {
+    fn rejects_bad_feature_length_synchronously() {
         let model = trained_model();
-        let svc = TransformService::start(model, BatchPolicy::default());
+        let svc = TransformService::start(model, ServeConfig::default());
+        let reply = svc.submit(ServeRequest::row(vec![0.0; 99]));
+        match reply {
+            ServeReply::Rejected(RejectReason::BadShape { got: 99, .. }) => {}
+            other => panic!("expected BadShape, got {other:?}"),
+        }
+        assert!(svc.submit(ServeRequest::batch(vec![])).is_rejected());
         assert!(svc.predict_blocking(vec![0.0; 99]).is_err());
+        assert_eq!(svc.metrics.rejected_shape.load(Ordering::Relaxed), 3);
         svc.shutdown();
+    }
+
+    #[test]
+    fn bounded_queue_rejects_instead_of_blocking_or_dropping() {
+        let model = trained_model();
+        let ds = synthetic_dataset(10, 26);
+        let gate = Arc::new(AtomicBool::new(true));
+        let svc = TransformService::start(model, ServeConfig {
+            queue_capacity: 2,
+            hold_gate: Some(gate.clone()),
+            ..ServeConfig::default()
+        });
+        // batcher is held: exactly `capacity` admissions, then sync rejects
+        let row = || ds.x.row(0).to_vec();
+        let p1 = svc.enqueue(ServeRequest::row(row()));
+        let p2 = svc.enqueue(ServeRequest::row(row()));
+        let t0 = Instant::now();
+        let p3 = svc.enqueue(ServeRequest::row(row()));
+        assert!(t0.elapsed() < Duration::from_millis(100), "rejection must not block");
+        match p3 {
+            Pending::Ready(ServeReply::Rejected(RejectReason::QueueFull { capacity: 2 })) => {}
+            _ => panic!("expected synchronous QueueFull"),
+        }
+        assert_eq!(svc.metrics.rejected_full.load(Ordering::Relaxed), 1);
+        // release the batcher: the two admitted requests are answered
+        gate.store(false, Ordering::SeqCst);
+        assert!(p1.wait().answer().is_ok());
+        assert!(p2.wait().answer().is_ok());
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadlines_reject_at_dequeue() {
+        let model = trained_model();
+        let ds = synthetic_dataset(10, 27);
+        let gate = Arc::new(AtomicBool::new(true));
+        let svc = TransformService::start(model, ServeConfig {
+            hold_gate: Some(gate.clone()),
+            ..ServeConfig::default()
+        });
+        let expired = svc.enqueue(
+            ServeRequest::row(ds.x.row(0).to_vec()).with_deadline(Duration::from_millis(1)),
+        );
+        let patient = svc.enqueue(
+            ServeRequest::row(ds.x.row(1).to_vec()).with_deadline(Duration::from_secs(60)),
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        gate.store(false, Ordering::SeqCst);
+        match expired.wait() {
+            ServeReply::Rejected(RejectReason::DeadlineExpired { waited }) => {
+                assert!(waited >= Duration::from_millis(1));
+            }
+            other => panic!("expected DeadlineExpired, got {other:?}"),
+        }
+        assert!(patient.wait().answer().is_ok());
+        assert_eq!(svc.metrics.rejected_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_queued_requests() {
+        let model = trained_model();
+        let ds = synthetic_dataset(10, 28);
+        let gate = Arc::new(AtomicBool::new(true));
+        let svc = TransformService::start(model, ServeConfig {
+            hold_gate: Some(gate.clone()),
+            ..ServeConfig::default()
+        });
+        let p = svc.enqueue(ServeRequest::row(ds.x.row(0).to_vec()));
+        gate.store(false, Ordering::SeqCst);
+        svc.shutdown(); // drain + join: the queued request must be answered
+        assert!(p.wait().answer().is_ok());
     }
 
     #[test]
@@ -418,5 +1065,19 @@ mod tests {
         assert_eq!(p95, 100.0);
         assert_eq!(p99, 100.0);
         assert_eq!(latency_percentiles(vec![]), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn histogram_buckets_and_json() {
+        let h = Histogram::new(&[10, 100]);
+        h.record(5);
+        h.record(10);
+        h.record(50);
+        h.record(1000);
+        assert_eq!(h.snapshot(), vec![2, 1, 1]);
+        assert_eq!(h.total(), 4);
+        let json = h.to_json();
+        assert!(json.contains("\"+inf\""), "{json}");
+        assert!(json.contains("[2,1,1]"), "{json}");
     }
 }

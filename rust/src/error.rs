@@ -33,6 +33,10 @@ pub enum AviError {
     /// Coordinator/service failure (channel closed, worker panicked).
     Coordinator(String),
 
+    /// Model-registry failure (unknown key/version, malformed spec,
+    /// manifest naming a missing file).
+    Registry(String),
+
     /// IO.
     Io(std::io::Error),
 }
@@ -49,6 +53,7 @@ impl fmt::Display for AviError {
             AviError::Data(m) => write!(f, "data error: {m}"),
             AviError::Runtime(m) => write!(f, "runtime error: {m}"),
             AviError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            AviError::Registry(m) => write!(f, "registry error: {m}"),
             AviError::Io(e) => write!(f, "io error: {e}"),
         }
     }

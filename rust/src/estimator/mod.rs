@@ -45,6 +45,45 @@ use crate::util::timer::Timer;
 /// point) — [`VanishingIdealEstimator::hyper_grid`]'s default answer.
 pub const PSI_GRID: &[f64] = &[0.05, 0.01, 0.005, 0.001];
 
+/// ψ grid for VCA: its tolerance acts on singular values of the
+/// projected candidate block rather than per-term MSE, so useful working
+/// points sit coarser than the OAVI/ABM range.
+pub const VCA_PSI_GRID: &[f64] = &[0.1, 0.05, 0.01, 0.005];
+
+/// Default SVM ℓ1 grid (paper §6.2) — estimators can override it per
+/// method through [`VanishingIdealEstimator::hyper_grid`].
+pub const LAMBDA_GRID: &[f64] = &[1e-2, 1e-3, 1e-4];
+
+/// λ grid for WIHB variants: their generators already carry sparse
+/// coefficient vectors (§4.4.3), so the SVM needs less ℓ1 pressure and
+/// the useful range shifts one decade down.
+pub const WIHB_LAMBDA_GRID: &[f64] = &[1e-3, 1e-4, 1e-5];
+
+/// τ grid for the ℓ1-constrained OAVI variants (CCOP radius τ−1; the
+/// paper's working point is 1000).
+pub const TAU_GRID: &[f64] = &[500.0, 1000.0, 2000.0];
+
+/// The hyperparameter ranges one estimator wants cross-validated: the
+/// ψ axis joined by per-method λ and (where the method is
+/// ℓ1-constrained) τ axes — the typed answer of
+/// [`VanishingIdealEstimator::hyper_grid`], consumed by
+/// [`crate::pipeline::gridsearch::grid_search`].
+#[derive(Clone, Copy, Debug)]
+pub struct HyperGrid {
+    /// Vanishing-parameter grid.
+    pub psis: &'static [f64],
+    /// SVM ℓ1 grid (used when the caller does not pin λ explicitly).
+    pub lambdas: &'static [f64],
+    /// ℓ1-bound grid; empty when τ does not apply to the method.
+    pub taus: &'static [f64],
+}
+
+impl Default for HyperGrid {
+    fn default() -> Self {
+        HyperGrid { psis: PSI_GRID, lambdas: LAMBDA_GRID, taus: &[] }
+    }
+}
+
 /// Unified fit diagnostics — the cross-estimator superset of the OAVI
 /// driver's [`FitStats`].
 #[derive(Clone, Debug, Default)]
@@ -137,9 +176,10 @@ pub trait VanishingIdealEstimator {
         true
     }
 
-    /// The ψ grid this estimator wants cross-validated (paper §6.2).
-    fn hyper_grid(&self) -> &'static [f64] {
-        PSI_GRID
+    /// The hyperparameter grids this estimator wants cross-validated
+    /// (paper §6.2): ψ plus per-method λ and τ ranges.
+    fn hyper_grid(&self) -> HyperGrid {
+        HyperGrid::default()
     }
 
     /// Fit one class's data (m×n, expected in [0,1]) through `backend`.
@@ -250,6 +290,22 @@ impl VanishingIdealEstimator for Oavi {
         self.config().name()
     }
 
+    fn hyper_grid(&self) -> HyperGrid {
+        let cfg = self.config();
+        HyperGrid {
+            psis: PSI_GRID,
+            // WIHB's re-solved generators are already sparse, so the SVM
+            // wants less ℓ1 pressure
+            lambdas: if cfg.ihb == crate::oavi::IhbMode::Wihb {
+                WIHB_LAMBDA_GRID
+            } else {
+                LAMBDA_GRID
+            },
+            // τ only exists for the ℓ1-constrained (CCOP) variants
+            taus: if cfg.constrained { TAU_GRID } else { &[] },
+        }
+    }
+
     fn fit(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Result<Box<dyn FittedModel>> {
         let timer = Timer::start();
         let model = self.fit_with_backend(x, backend)?;
@@ -290,6 +346,10 @@ impl VanishingIdealEstimator for Vca {
 
     fn is_monomial_aware(&self) -> bool {
         false
+    }
+
+    fn hyper_grid(&self) -> HyperGrid {
+        HyperGrid { psis: VCA_PSI_GRID, ..HyperGrid::default() }
     }
 
     fn fit(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Result<Box<dyn FittedModel>> {
@@ -342,6 +402,26 @@ impl EstimatorConfig {
             EstimatorConfig::Oavi(cfg) => cfg.psi = psi,
             EstimatorConfig::Abm(cfg) => cfg.psi = psi,
             EstimatorConfig::Vca(cfg) => cfg.psi = psi,
+        }
+        out
+    }
+
+    /// The ℓ1 bound τ, when the method has one (constrained OAVI only).
+    pub fn tau(&self) -> Option<f64> {
+        match self {
+            EstimatorConfig::Oavi(cfg) if cfg.constrained => Some(cfg.tau),
+            _ => None,
+        }
+    }
+
+    /// Same method with a different τ (grid search); a no-op for methods
+    /// without an ℓ1 bound.
+    pub fn with_tau(&self, tau: f64) -> EstimatorConfig {
+        let mut out = *self;
+        if let EstimatorConfig::Oavi(cfg) = &mut out {
+            if cfg.constrained {
+                cfg.tau = tau;
+            }
         }
         out
     }
@@ -531,9 +611,43 @@ mod tests {
             assert_eq!(cfg.psi(), 0.01);
             let est = cfg.build();
             assert!(!est.name().is_empty());
-            assert!(!est.hyper_grid().is_empty());
+            let grid = est.hyper_grid();
+            assert!(!grid.psis.is_empty());
+            assert!(!grid.lambdas.is_empty());
         }
         assert!(EstimatorConfig::parse("nope", 0.01).is_err());
+    }
+
+    #[test]
+    fn hyper_grids_are_estimator_aware() {
+        let grid = |name: &str| EstimatorConfig::parse(name, 0.01).unwrap().build().hyper_grid();
+        // constrained OAVI variants sweep τ; unconstrained ones have none
+        assert_eq!(grid("cgavi-ihb").taus, TAU_GRID);
+        assert_eq!(grid("bpcgavi").taus, TAU_GRID);
+        assert!(grid("agdavi-ihb").taus.is_empty());
+        // WIHB's sparse generators shift the λ range down a decade
+        assert_eq!(grid("bpcgavi-wihb").lambdas, WIHB_LAMBDA_GRID);
+        assert_eq!(grid("cgavi-ihb").lambdas, LAMBDA_GRID);
+        // VCA's ψ acts on singular values → its own coarser range
+        assert_eq!(grid("vca").psis, VCA_PSI_GRID);
+        assert!(grid("vca").taus.is_empty());
+        // ABM keeps the defaults
+        assert_eq!(grid("abm").psis, PSI_GRID);
+        assert_eq!(grid("abm").lambdas, LAMBDA_GRID);
+        assert!(grid("abm").taus.is_empty());
+    }
+
+    #[test]
+    fn with_tau_applies_only_to_constrained_methods() {
+        let cg = EstimatorConfig::parse("cgavi-ihb", 0.01).unwrap();
+        assert_eq!(cg.tau(), Some(1000.0));
+        assert_eq!(cg.with_tau(500.0).tau(), Some(500.0));
+        assert_eq!(cg.with_tau(500.0).name(), cg.name());
+        for name in ["agdavi-ihb", "abm", "vca"] {
+            let cfg = EstimatorConfig::parse(name, 0.01).unwrap();
+            assert_eq!(cfg.tau(), None, "{name}");
+            assert_eq!(cfg.with_tau(500.0).tau(), None, "{name}");
+        }
     }
 
     #[test]

@@ -413,7 +413,7 @@ fn check_header(text: &str, expected_format: &str) -> Result<()> {
     Ok(())
 }
 
-fn extract_str(text: &str, key: &str) -> Result<String> {
+pub(crate) fn extract_str(text: &str, key: &str) -> Result<String> {
     let pos = text
         .find(key)
         .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
@@ -427,7 +427,7 @@ fn extract_str(text: &str, key: &str) -> Result<String> {
     Ok(rest[q1 + 1..q1 + 1 + q2].to_string())
 }
 
-fn extract_f64(text: &str, key: &str) -> Result<f64> {
+pub(crate) fn extract_f64(text: &str, key: &str) -> Result<f64> {
     let pos = text
         .find(key)
         .ok_or_else(|| AviError::Data(format!("persist: missing {key}")))?;
@@ -440,7 +440,7 @@ fn extract_f64(text: &str, key: &str) -> Result<f64> {
 }
 
 /// Contents of the depth-matched `[…]` array after `key`.
-fn extract_array(text: &str, key: &str) -> Result<String> {
+pub(crate) fn extract_array(text: &str, key: &str) -> Result<String> {
     extract_delimited(text, key, '[', ']')
 }
 
@@ -474,7 +474,7 @@ fn extract_delimited(text: &str, key: &str, open: char, close: char) -> Result<S
 
 /// Split an array body into its top-level `{…}` objects (depth-matched;
 /// the format emits no braces inside strings).
-fn split_objects(src: &str) -> Vec<&str> {
+pub(crate) fn split_objects(src: &str) -> Vec<&str> {
     let mut out = Vec::new();
     let mut depth = 0usize;
     let mut start = 0usize;

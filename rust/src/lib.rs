@@ -33,9 +33,14 @@
 //!   pipelines) through one versioned envelope.
 //! * **Pipeline & serving** — [`pipeline`] (Algorithm 2: per-class fits
 //!   → (FT) transform → ℓ1 SVM, mixed-method grid search, Table-3
-//!   reporting) and [`coordinator`] (batched transform service, multi-
-//!   model router) are estimator-agnostic: they hold trait objects and
-//!   never branch on the algorithm.
+//!   reporting) and the [`coordinator`] serving control plane
+//!   (**registry → router → service → backend**: versioned
+//!   [`coordinator::ModelRegistry`], weighted-A/B + shadow
+//!   [`coordinator::ModelRouter`], batched
+//!   [`coordinator::TransformService`] speaking the typed
+//!   `ServeRequest`/`ServeReply` protocol, all built through one
+//!   [`coordinator::ServeConfig`]) are estimator-agnostic: they hold
+//!   trait objects and never branch on the algorithm.
 //!
 //! Numeric hot spots (Gram updates, IHB solve/append, the (FT)
 //! transform) are authored in JAX + Pallas and AOT-lowered to

@@ -26,7 +26,11 @@ use std::sync::Arc;
 
 use avi_scale::backend::{ComputeBackend, NativeBackend};
 use avi_scale::coordinator::pool::ThreadPool;
-use avi_scale::coordinator::service::{latency_percentiles, BatchPolicy, TransformService};
+use avi_scale::coordinator::registry::{parse_spec, ModelRegistry};
+use avi_scale::coordinator::router::ModelRouter;
+use avi_scale::coordinator::service::{
+    latency_percentiles, ServeConfig, ServeRequest, DEFAULT_QUEUE_CAPACITY,
+};
 use avi_scale::data::{load_registry_dataset, REGISTRY};
 use avi_scale::error::Result;
 use avi_scale::estimator::EstimatorConfig;
@@ -83,7 +87,11 @@ COMMANDS:
               (--save <path> persists the trained pipeline as JSON)
   predict     load a saved pipeline (--model <path>) and evaluate it on a
               dataset's test split
-  serve       batched transform service demo (latency/throughput)
+  serve       serving control plane demo: registry → router → service.
+              Without --model it trains one pipeline from --dataset and
+              serves it as default@v1; with --model it loads saved
+              pipelines into the registry and routes traffic across them.
+              Prints latency/throughput plus the RouterReport JSON.
   bound       Theorem 4.3 bound vs empirical |G|+|O|
 
 OPTIONS:
@@ -102,9 +110,29 @@ OPTIONS:
                          which without a count sizes the pool to the
                          machine: available parallelism - 1)
   --shards <n>           DEPRECATED alias for --workers (the old intra-fit
-                         knob; --workers wins when both are given)
+                         knob; --workers wins when both are given).
+                         NOTE the PR-3 semantics drift: the value now
+                         sizes the ONE shared worker pool and is
+                         budget-split across per-class fit jobs
+                         (outer × inner ≤ workers), so e.g. --shards 4 on
+                         a 2-class fit gives each class inner=2 — a
+                         different store shard count (hence different
+                         bits) than the old per-fit ShardedBackend(4)
   --ordering <pearson|reverse|native>               (default pearson)
-  --requests <n>         serve demo request count   (default 2000)
+
+SERVE OPTIONS:
+  --requests <n>         request count              (default 2000)
+  --model <specs>        comma-separated key[@version]=path registry
+                         entries (paths from `pipeline --save`); traffic
+                         goes to the --ab key, else the first key
+  --ab <key:v1=70,v2=30> weighted A/B split across versions of one key
+                         (deterministic assignment, seeded by --seed)
+  --shadow <key:ver>     mirror the key's traffic to one extra version
+                         (replies discarded, latency recorded)
+  --queue <n>            bounded per-route queue; overflow rejects
+                         synchronously (default: fits the demo traffic,
+                         max(requests, 1024))
+  --deadline-ms <n>      per-request queue deadline (default none)
 ";
 
 fn parse(args: &[String]) -> Option<(String, HashMap<String, String>)> {
@@ -321,55 +349,160 @@ fn cmd_predict(opts: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--ab key:v1=70,v2=30` into `(key, [(version, weight)])`.
+fn parse_ab(spec: &str) -> Result<(String, Vec<(String, u32)>)> {
+    let (key, arms_src) = spec
+        .split_once(':')
+        .ok_or_else(|| avi_scale::AviError::Config(format!("--ab '{spec}': expected key:v=w,…")))?;
+    let mut arms = Vec::new();
+    for part in arms_src.split(',') {
+        let (version, weight) = part.split_once('=').ok_or_else(|| {
+            avi_scale::AviError::Config(format!("--ab arm '{part}': expected version=weight"))
+        })?;
+        let weight: u32 = weight.parse().map_err(|_| {
+            avi_scale::AviError::Config(format!("--ab arm '{part}': weight not a number"))
+        })?;
+        arms.push((version.to_string(), weight));
+    }
+    Ok((key.to_string(), arms))
+}
+
 fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
-    let ds = load(opts)?;
-    let psi = opt_f64(opts, "psi", 0.005);
-    let estimator = estimator_for(opts, psi)?;
-    let split = avi_scale::data::splits::train_test_split(&ds, 0.6, opt_u64(opts, "seed", 42));
-    let cfg = PipelineConfig {
-        estimator,
-        svm: LinearSvmConfig::default(),
-        ordering: FeatureOrdering::Pearson,
-    };
-    // `_pool` keeps the shared workers alive for the service's lifetime
-    // (dropped, and joined, after `svc.shutdown()` at the end of the fn)
-    let (svc, _pool) = if use_xla(opts) {
-        let backend = xla_backend(opts)?;
-        let model = Arc::new(train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?);
-        (TransformService::start(model, BatchPolicy::default()), None)
-    } else if parallel_requested(opts) {
-        // serving draws its shard workers from the same pool that trained
-        let pool = pool_for(opts);
-        let model = Arc::new(train_pipeline_pooled(&cfg, &split.train, &pool)?);
-        let svc = TransformService::start_pooled(
-            model,
-            BatchPolicy::default(),
-            pool.handle(),
-            pool.workers(),
+    if opts.contains_key("shards") {
+        eprintln!(
+            "warning: --shards is deprecated; use --workers N.  Since the pooled \
+             data plane (PR 3), the value sizes the ONE shared worker pool and is \
+             budget-split across per-class fit jobs (outer × inner ≤ workers), so \
+             e.g. --shards 4 on a 2-class fit gives each class inner=2 — a \
+             different store shard count (hence different bits) than the old \
+             per-fit ShardedBackend(4)."
         );
-        (svc, Some(pool))
+    }
+    let seed = opt_u64(opts, "seed", 42);
+    let ds = load(opts)?;
+    let split = avi_scale::data::splits::train_test_split(&ds, 0.6, seed);
+
+    // serve configuration: backend choice + queue bound, one surface.
+    // The demo enqueues its whole request set before waiting, so unless
+    // the user bounds the queue explicitly (--queue exercises admission
+    // control), size it to hold the demo traffic.
+    let n_req_hint = opt_usize(opts, "requests", 2000);
+    let mut serve_cfg = ServeConfig::new().queue_capacity(
+        opt_usize(opts, "queue", n_req_hint.max(DEFAULT_QUEUE_CAPACITY)),
+    );
+    // `_pool` keeps the shared workers alive for the router's lifetime
+    // (dropped, and joined, after the services shut down on router drop)
+    let mut _pool: Option<ThreadPool> = None;
+    if !use_xla(opts) && parallel_requested(opts) {
+        let pool = pool_for(opts);
+        serve_cfg = serve_cfg.pooled(pool.handle(), pool.workers());
+        _pool = Some(pool);
+    }
+
+    // registry: saved pipelines via --model, else train from the dataset
+    let mut registry = ModelRegistry::new();
+    if let Some(specs) = opts.get("model") {
+        for spec in specs.split(',') {
+            let (kv, path) = spec.split_once('=').ok_or_else(|| {
+                avi_scale::AviError::Config(format!(
+                    "--model '{spec}': expected key[@version]=path"
+                ))
+            })?;
+            let (key, version) = parse_spec(kv)?;
+            registry.load_path(&key, &version, std::path::Path::new(path))?;
+            println!("loaded      = {key}@{version} from {path}");
+        }
     } else {
-        let model = Arc::new(avi_scale::pipeline::train_pipeline(&cfg, &split.train)?);
-        (TransformService::start(model, BatchPolicy::default()), None)
-    };
+        let psi = opt_f64(opts, "psi", 0.005);
+        let estimator = estimator_for(opts, psi)?;
+        let cfg = PipelineConfig {
+            estimator,
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        let model = if use_xla(opts) {
+            let backend = xla_backend(opts)?;
+            Arc::new(train_pipeline_with_backend(&cfg, &split.train, backend.as_ref())?)
+        } else if let Some(pool) = &_pool {
+            // serving draws its shard workers from the same pool that trained
+            Arc::new(train_pipeline_pooled(&cfg, &split.train, pool)?)
+        } else {
+            Arc::new(avi_scale::pipeline::train_pipeline(&cfg, &split.train)?)
+        };
+        registry.insert("default", "v1", model);
+    }
+
+    // router: the --ab key gets its weighted split, every other key its
+    // latest version (registering the A/B key twice would leave a
+    // throwaway retired row in the report)
+    let ab = opts.get("ab").map(|s| parse_ab(s)).transpose()?;
+    let router = ModelRouter::new();
+    for key in registry.keys() {
+        if ab.as_ref().is_some_and(|(k, _)| *k == key) {
+            continue;
+        }
+        if let Some((version, model)) = registry.latest(&key) {
+            router.register(key, version, model, serve_cfg.clone());
+        }
+    }
+    let mut target_key = registry.keys().first().cloned().unwrap_or_default();
+    if let Some((key, arms)) = ab {
+        router.register_ab(&registry, &key, &arms, seed, &serve_cfg)?;
+        println!(
+            "ab split    = {key}: {}",
+            arms.iter().map(|(v, w)| format!("{v}={w}")).collect::<Vec<_>>().join(",")
+        );
+        target_key = key;
+    }
+    if let Some(shadow) = opts.get("shadow") {
+        let (key, version) = match shadow.split_once(':') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (target_key.clone(), shadow.clone()),
+        };
+        let model = registry.resolve(&key, &version)?;
+        router.set_shadow(&key, &version, model, serve_cfg.clone())?;
+        println!("shadow      = {key}:{version}");
+    }
+
+    // drive traffic from the dataset's test split
     let n_req = opt_usize(opts, "requests", 2000).min(split.test.len().max(1) * 50);
-    let rows: Vec<Vec<f64>> = (0..n_req)
-        .map(|i| split.test.x.row(i % split.test.len()).to_vec())
-        .collect();
+    let deadline_ms = opt_u64(opts, "deadline-ms", 0);
     let t0 = std::time::Instant::now();
-    let responses = svc.predict_many(rows)?;
+    let pendings = (0..n_req)
+        .map(|i| {
+            let mut req = ServeRequest::row(split.test.x.row(i % split.test.len()).to_vec());
+            if deadline_ms > 0 {
+                req = req.with_deadline(std::time::Duration::from_millis(deadline_ms));
+            }
+            router.enqueue(&target_key, req)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut lat_us: Vec<f64> = Vec::with_capacity(n_req);
+    let mut by_version: HashMap<String, usize> = HashMap::new();
+    let mut rejected = 0usize;
+    for pending in pendings {
+        match pending.wait() {
+            avi_scale::coordinator::ServeReply::Answered(ans) => {
+                lat_us.push((ans.queue_latency + ans.compute_latency).as_secs_f64() * 1e6);
+                *by_version.entry(ans.model_version).or_default() += 1;
+            }
+            avi_scale::coordinator::ServeReply::Rejected(_) => rejected += 1,
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
-    let lat_us: Vec<f64> = responses.iter().map(|r| r.latency.as_secs_f64() * 1e6).collect();
     let (p50, p95, p99) = latency_percentiles(lat_us);
-    println!("requests    = {n_req}");
+    println!("requests    = {n_req} (route {target_key}, {rejected} rejected)");
+    let mut versions: Vec<(String, usize)> = by_version.into_iter().collect();
+    versions.sort();
+    for (version, count) in versions {
+        println!("served      = {version}: {count}");
+    }
     println!("throughput  = {:.0} req/s", n_req as f64 / wall);
     println!("latency p50 = {p50:.0}us  p95 = {p95:.0}us  p99 = {p99:.0}us");
-    println!(
-        "batches     = {} (max batch {})",
-        svc.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
-        svc.metrics.max_batch.load(std::sync::atomic::Ordering::Relaxed)
-    );
-    svc.shutdown();
+    let report = router.report();
+    println!("router.total_requests = {}", report.total_requests);
+    println!("router.total_rejected = {}", report.total_rejected);
+    println!("{}", report.to_json());
     Ok(())
 }
 

@@ -1,9 +1,13 @@
 //! Hyperparameter grid search with k-fold CV (paper §6.2: 3-fold CV over
 //! the vanishing parameter ψ and the SVM's ℓ1 coefficient), over **any
-//! set of estimators**: the grid is estimator × ψ × λ, so a single
+//! set of estimators**: the grid is estimator × ψ × τ × λ, so a single
 //! search can race CGAVI-IHB against ABM and VCA (mixed-method model
 //! selection) with one deduplicated loop instead of per-algorithm
-//! near-duplicates.
+//! near-duplicates.  Grids are **estimator-aware**: an empty `psis` /
+//! `lambdas` argument means "each estimator's own
+//! [`crate::estimator::HyperGrid`]" (per-method ψ and λ ranges, with the
+//! τ axis joining for the ℓ1-constrained OAVI variants), while explicit
+//! grids reproduce the classic shared sweep with τ pinned.
 //!
 //! Parallelism is **two-level** over one persistent pool: grid-point
 //! jobs are the outer axis and each job's `ShardedBackend` shard kernels
@@ -25,13 +29,10 @@ use crate::svm::linear::LinearSvmConfig;
 use crate::svm::metrics::error_rate;
 use crate::util::timer::Timer;
 
-/// Default ψ grid — re-exported from the estimator layer, where
-/// [`crate::estimator::VanishingIdealEstimator::hyper_grid`] defaults
-/// to it.
-pub use crate::estimator::PSI_GRID;
-
-/// Default SVM ℓ1 grid.
-pub const LAMBDA_GRID: &[f64] = &[1e-2, 1e-3, 1e-4];
+/// Default ψ and λ grids — re-exported from the estimator layer, where
+/// [`crate::estimator::VanishingIdealEstimator::hyper_grid`] defaults to
+/// them (and overrides them per method).
+pub use crate::estimator::{LAMBDA_GRID, PSI_GRID};
 
 /// One evaluated grid point.
 #[derive(Clone, Debug)]
@@ -41,6 +42,9 @@ pub struct GridPoint {
     pub name: String,
     pub estimator: EstimatorConfig,
     pub psi: f64,
+    /// ℓ1 bound swept for constrained methods in per-method grid mode
+    /// (`None` when τ stayed at the config default / does not apply).
+    pub tau: Option<f64>,
     pub lambda: f64,
     pub cv_error: f64,
 }
@@ -48,11 +52,12 @@ pub struct GridPoint {
 /// Result of a grid search.
 #[derive(Clone, Debug)]
 pub struct GridSearchResult {
-    /// Winning estimator config with the best ψ already applied.
+    /// Winning estimator config with the best ψ (and τ) already applied.
     pub best: EstimatorConfig,
     /// The winner's fitted method name (via `FitReport::name()`).
     pub best_name: String,
     pub best_psi: f64,
+    pub best_tau: Option<f64>,
     pub best_lambda: f64,
     pub best_cv_error: f64,
     /// wall-clock of the whole search (Table 3 "Time hyper.", together
@@ -151,17 +156,32 @@ pub fn grid_search_two_level(
         .map(|(tr, va)| (train.subset(tr), train.subset(va)))
         .collect();
 
-    // materialize the grid first so the budget split sees its true size
-    let mut points: Vec<(EstimatorConfig, f64, f64)> = Vec::new();
+    // materialize the grid first so the budget split sees its true size.
+    // Empty `psis` / `lambdas` mean "each estimator's own hyper_grid()":
+    // per-method ψ and λ ranges, with the τ axis joining for the
+    // ℓ1-constrained methods (an explicit ψ grid reproduces the classic
+    // estimator × ψ × λ sweep with τ pinned at the config value).
+    let mut points: Vec<(EstimatorConfig, f64, Option<f64>, f64)> = Vec::new();
     for &base in estimators {
-        let psi_grid: Vec<f64> = if psis.is_empty() {
-            base.build().hyper_grid().to_vec()
+        let grid = base.build().hyper_grid();
+        let psi_grid: Vec<f64> =
+            if psis.is_empty() { grid.psis.to_vec() } else { psis.to_vec() };
+        let lambda_grid: Vec<f64> =
+            if lambdas.is_empty() { grid.lambdas.to_vec() } else { lambdas.to_vec() };
+        let tau_grid: Vec<Option<f64>> = if psis.is_empty() && !grid.taus.is_empty() {
+            grid.taus.iter().map(|&t| Some(t)).collect()
         } else {
-            psis.to_vec()
+            vec![None]
         };
-        for psi in psi_grid {
-            for &lambda in lambdas {
-                points.push((base.with_psi(psi), psi, lambda));
+        for &psi in &psi_grid {
+            for &tau in &tau_grid {
+                for &lambda in &lambda_grid {
+                    let mut cfg = base.with_psi(psi);
+                    if let Some(t) = tau {
+                        cfg = cfg.with_tau(t);
+                    }
+                    points.push((cfg, psi, tau, lambda));
+                }
             }
         }
     }
@@ -178,7 +198,7 @@ pub fn grid_search_two_level(
 
     // one job per (estimator, psi, lambda): CV error averaged over folds
     let mut jobs: Vec<Box<dyn FnOnce() -> GridPoint + Send>> = Vec::new();
-    for (estimator, psi, lambda) in points {
+    for (estimator, psi, tau, lambda) in points {
         let fold_data = fold_data.clone();
         let handle = handle.clone();
         jobs.push(Box::new(move || {
@@ -212,6 +232,7 @@ pub fn grid_search_two_level(
                 name: fitted_name.unwrap_or_else(|| estimator.name()),
                 estimator,
                 psi,
+                tau,
                 lambda,
                 cv_error: crate::util::mean(&errs),
             }
@@ -230,6 +251,7 @@ pub fn grid_search_two_level(
         best: best.estimator,
         best_name: best.name.clone(),
         best_psi: best.psi,
+        best_tau: best.tau,
         best_lambda: best.lambda,
         best_cv_error: best.cv_error,
         search_secs: timer.secs(),
@@ -341,7 +363,8 @@ mod tests {
     }
 
     #[test]
-    fn empty_psis_uses_estimator_hyper_grid() {
+    fn empty_psis_uses_estimator_hyper_grid_with_tau_axis() {
+        use crate::estimator::TAU_GRID;
         let ds = synthetic_dataset(200, 6);
         let pool = ThreadPool::new(2);
         let res = grid_search(
@@ -355,10 +378,90 @@ mod tests {
             &pool,
         )
         .unwrap();
-        assert_eq!(res.table.len(), PSI_GRID.len());
+        // CGAVI-IHB is ℓ1-constrained, so per-method mode sweeps ψ × τ
+        assert_eq!(res.table.len(), PSI_GRID.len() * TAU_GRID.len());
+        assert!(res.table.iter().all(|p| p.tau.is_some()));
+        assert_eq!(res.best_tau, res.table.iter().find(|p| p.cv_error == res.best_cv_error).unwrap().tau);
+        // the winning config carries the swept τ
+        assert_eq!(res.best.tau(), res.best_tau);
         assert!(
             grid_search(&[], FeatureOrdering::Pearson, &ds, &[], &[1e-3], 2, 11, &pool).is_err()
         );
+    }
+
+    #[test]
+    fn explicit_psi_grid_pins_tau_at_the_config_default() {
+        let ds = synthetic_dataset(200, 14);
+        let pool = ThreadPool::new(2);
+        let res = grid_search(
+            &[EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01))],
+            FeatureOrdering::Pearson,
+            &ds,
+            &[0.05, 0.005],
+            &[1e-3],
+            2,
+            11,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(res.table.len(), 2, "explicit ψ grid must not sweep τ");
+        assert!(res.table.iter().all(|p| p.tau.is_none()));
+        assert_eq!(res.best.tau(), Some(1000.0));
+    }
+
+    #[test]
+    fn empty_lambdas_use_per_method_lambda_grid() {
+        use crate::baselines::abm::AbmConfig;
+        let ds = synthetic_dataset(200, 15);
+        let pool = ThreadPool::new(2);
+        // ABM: no τ axis, default λ grid
+        let res = grid_search(
+            &[EstimatorConfig::Abm(AbmConfig::new(0.01))],
+            FeatureOrdering::Pearson,
+            &ds,
+            &[0.01],
+            &[],
+            2,
+            11,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(res.table.len(), LAMBDA_GRID.len());
+        assert!(res.table.iter().all(|p| p.tau.is_none()));
+        // WIHB overrides the λ range
+        let res = grid_search(
+            &[EstimatorConfig::Oavi(OaviConfig::bpcgavi_wihb(0.01))],
+            FeatureOrdering::Pearson,
+            &ds,
+            &[0.01],
+            &[],
+            2,
+            11,
+            &pool,
+        )
+        .unwrap();
+        let lambdas: Vec<f64> = res.table.iter().map(|p| p.lambda).collect();
+        assert_eq!(lambdas, crate::estimator::WIHB_LAMBDA_GRID.to_vec());
+    }
+
+    #[test]
+    fn vca_per_method_psi_grid_applies() {
+        use crate::baselines::vca::VcaConfig;
+        let ds = synthetic_dataset(150, 16);
+        let pool = ThreadPool::new(2);
+        let res = grid_search(
+            &[EstimatorConfig::Vca(VcaConfig::new(0.01))],
+            FeatureOrdering::Pearson,
+            &ds,
+            &[],
+            &[1e-3],
+            2,
+            11,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(res.table.len(), crate::estimator::VCA_PSI_GRID.len());
+        assert!(res.table.iter().all(|p| p.tau.is_none()));
     }
 
     #[test]

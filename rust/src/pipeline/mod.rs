@@ -214,6 +214,23 @@ impl PipelineModel {
         self.svm.predict(&feats)
     }
 
+    /// Labels **and** per-class decision scores through an explicit
+    /// backend — the serving protocol's reply payload.  Labels are
+    /// derived from the same decision vectors via
+    /// [`LinearSvm::label_from_decision`], so the two can never disagree
+    /// with [`PipelineModel::predict_with_backend`].
+    pub fn predict_scores_with_backend(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+    ) -> (Vec<usize>, Vec<Vec<f64>>) {
+        let xp = permute_cols(x, &self.perm);
+        let feats = self.transformer.transform_with(&xp, backend);
+        let scores = self.svm.decision(&feats);
+        let labels = scores.iter().map(|d| self.svm.label_from_decision(d)).collect();
+        (labels, scores)
+    }
+
     /// Classification error on a dataset.
     pub fn error_on(&self, ds: &Dataset) -> f64 {
         crate::svm::metrics::error_rate(&self.predict(&ds.x), &ds.y)

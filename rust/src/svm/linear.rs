@@ -74,9 +74,16 @@ impl LinearSvm {
             .collect()
     }
 
-    /// Predicted class for one row.
-    pub fn predict_row(&self, row: &[f64]) -> usize {
-        let d = self.decision_row(row);
+    /// Decision values for all rows (m × heads) — the per-class scores
+    /// the serving protocol exposes alongside labels.
+    pub fn decision(&self, x: &Matrix) -> Vec<Vec<f64>> {
+        (0..x.rows()).map(|i| self.decision_row(x.row(i))).collect()
+    }
+
+    /// Label implied by a decision vector — the one argmax/threshold rule
+    /// shared by the offline predict path and the serving protocol, so
+    /// scores and labels can never disagree.
+    pub fn label_from_decision(&self, d: &[f64]) -> usize {
         if self.n_classes == 2 {
             usize::from(d[0] >= 0.0)
         } else {
@@ -86,6 +93,11 @@ impl LinearSvm {
                 .map(|(i, _)| i)
                 .unwrap()
         }
+    }
+
+    /// Predicted class for one row.
+    pub fn predict_row(&self, row: &[f64]) -> usize {
+        self.label_from_decision(&self.decision_row(row))
     }
 
     /// Predict all rows.

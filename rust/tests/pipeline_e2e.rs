@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use avi_scale::coordinator::pool::ThreadPool;
-use avi_scale::coordinator::service::{BatchPolicy, TransformService};
+use avi_scale::coordinator::service::{ServeConfig, TransformService};
 use avi_scale::data::splits::train_test_split;
 use avi_scale::data::{load_registry_dataset, synthetic::synthetic_dataset};
 use avi_scale::estimator::EstimatorConfig;
@@ -157,11 +157,11 @@ fn serving_path_agrees_with_batch_path_on_registry_data() {
         .unwrap(),
     );
     let offline = model.predict(&split.test.x);
-    let svc = TransformService::start(model.clone(), BatchPolicy::default());
+    let svc = TransformService::start(model.clone(), ServeConfig::default());
     let rows: Vec<Vec<f64>> =
         (0..split.test.len()).map(|i| split.test.x.row(i).to_vec()).collect();
     let online: Vec<usize> =
-        svc.predict_many(rows).unwrap().into_iter().map(|r| r.label).collect();
+        svc.predict_many(rows).unwrap().into_iter().map(|r| r.label()).collect();
     assert_eq!(online, offline);
     svc.shutdown();
 }

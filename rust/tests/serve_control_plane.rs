@@ -1,0 +1,223 @@
+//! Serving control-plane integration: registry → router → service →
+//! backend, across module boundaries.
+//!
+//! Pins the PR-4 acceptance contracts: a persisted pipeline served
+//! through the registry transforms **bit-identically** to the in-memory
+//! one on both native and sharded backends; weighted A/B replies always
+//! come from the arm that was assigned (correct-model, verified through
+//! scores); hot swap mid-traffic never drops or double-answers a
+//! request; and the `RouterReport` totals account for every submission.
+
+use std::sync::Arc;
+
+use avi_scale::coordinator::registry::ModelRegistry;
+use avi_scale::coordinator::router::ModelRouter;
+use avi_scale::coordinator::service::{ServeConfig, ServeRequest, TransformService};
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::estimator::{persist, EstimatorConfig};
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{train_pipeline, PipelineConfig, PipelineModel};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+fn trained(method: &str, psi: f64, seed: u64) -> Arc<PipelineModel> {
+    let ds = synthetic_dataset(300, seed);
+    let cfg = PipelineConfig {
+        estimator: EstimatorConfig::parse(method, psi).unwrap(),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    Arc::new(train_pipeline(&cfg, &ds).unwrap())
+}
+
+fn score_bits(svc: &TransformService, rows: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    let reply = svc.submit(ServeRequest::batch(rows.to_vec()));
+    reply
+        .answer()
+        .unwrap()
+        .predictions
+        .iter()
+        .map(|p| p.scores.iter().map(|s| s.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn registry_roundtrip_serves_bit_identically_on_both_backends() {
+    let dir = std::env::temp_dir().join("avi_scale_serve_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = synthetic_dataset(64, 31);
+    let rows: Vec<Vec<f64>> = (0..64).map(|i| ds.x.row(i).to_vec()).collect();
+    for method in ["cgavi-ihb", "vca"] {
+        let in_memory = trained(method, 0.01, 1);
+        let path = dir.join(format!("{method}.json"));
+        persist::save(&in_memory, &path).unwrap();
+        let mut registry = ModelRegistry::new();
+        let loaded = registry.load_path("m", "v1", &path).unwrap();
+        for cfg in [ServeConfig::new().native(), ServeConfig::new().sharded(3)] {
+            let svc_mem = TransformService::start(in_memory.clone(), cfg.clone());
+            let svc_reg = TransformService::start(loaded.clone(), cfg.clone());
+            let a = score_bits(&svc_mem, &rows);
+            let b = score_bits(&svc_reg, &rows);
+            assert_eq!(a, b, "{method}/{:?}: save→load→serve drifted bitwise", cfg.backend);
+            svc_mem.shutdown();
+            svc_reg.shutdown();
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_to_router_end_to_end() {
+    let dir = std::env::temp_dir().join("avi_scale_serve_manifest");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    persist::save(&trained("cgavi-ihb", 0.01, 2), &dir.join("a.json")).unwrap();
+    persist::save(&trained("abm", 0.01, 2), &dir.join("b.json")).unwrap();
+    let manifest = ModelRegistry::manifest_json(&[
+        ("m".into(), "v1".into(), "a.json".into()),
+        ("m".into(), "v2".into(), "b.json".into()),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+
+    let mut registry = ModelRegistry::new();
+    registry.load_manifest(&dir.join("manifest.json")).unwrap();
+    // latest (v2) serves by default; an A/B split reaches both
+    let router = ModelRouter::from_registry(&registry, &ServeConfig::default());
+    let ds = synthetic_dataset(8, 3);
+    let ans = router.predict("m", ds.x.row(0).to_vec()).unwrap();
+    assert_eq!(ans.model_version, "v2");
+    router
+        .register_ab(
+            &registry,
+            "m",
+            &[("v1".into(), 50), ("v2".into(), 50)],
+            7,
+            &ServeConfig::default(),
+        )
+        .unwrap();
+    let versions: Vec<String> = (0..16)
+        .map(|i| router.predict("m", ds.x.row(i % 8).to_vec()).unwrap().model_version)
+        .collect();
+    assert!(versions.iter().any(|v| v == "v1"));
+    assert!(versions.iter().any(|v| v == "v2"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ab_replies_come_from_the_assigned_arm_with_its_own_scores() {
+    // correct-model invariant, strengthened: the reply's scores must be
+    // the serving version's own decision values for that row
+    let v1 = trained("cgavi-ihb", 0.001, 4);
+    let v2 = trained("cgavi-ihb", 0.05, 5);
+    let router = ModelRouter::new();
+    router
+        .register_split(
+            "m",
+            vec![("v1".into(), v1.clone(), 50), ("v2".into(), v2.clone(), 50)],
+            11,
+            &ServeConfig::default(),
+        )
+        .unwrap();
+    let ds = synthetic_dataset(60, 6);
+    let native = avi_scale::backend::NativeBackend;
+    let (l1, s1) = v1.predict_scores_with_backend(&ds.x, &native);
+    let (l2, s2) = v2.predict_scores_with_backend(&ds.x, &native);
+    let mut seen = [0usize; 2];
+    for i in 0..60 {
+        let ans = router.predict("m", ds.x.row(i).to_vec()).unwrap();
+        let (labels, scores) = match ans.model_version.as_str() {
+            "v1" => (&l1, &s1),
+            "v2" => (&l2, &s2),
+            other => panic!("unknown version {other}"),
+        };
+        assert_eq!(ans.label(), labels[i], "row {i} label from wrong model");
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&ans.predictions[0].scores),
+            bits(&scores[i]),
+            "row {i} scores from wrong model"
+        );
+        seen[usize::from(ans.model_version == "v2")] += 1;
+    }
+    assert!(seen[0] > 0 && seen[1] > 0, "50/50 split never reached one arm: {seen:?}");
+    let report = router.report();
+    assert_eq!(report.total_requests, 60);
+    assert_eq!(report.total_rejected, 0);
+}
+
+#[test]
+fn hot_swap_mid_traffic_keeps_exactly_once_fifo_and_old_version_replies() {
+    // one model trained twice identically: labels are version-agnostic,
+    // so FIFO/correctness checks survive the swap boundary
+    let model = trained("cgavi-ihb", 0.01, 7);
+    let ds = synthetic_dataset(64, 8);
+    let offline = model.predict(&ds.x);
+    let router = Arc::new(ModelRouter::new());
+    router.register("m", "v1", model.clone(), ServeConfig::default());
+
+    let total = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        // four clients hammer the route with sequential (FIFO) requests
+        for t in 0..4usize {
+            let router = router.clone();
+            let ds = &ds;
+            let offline = &offline;
+            let total = &total;
+            scope.spawn(move || {
+                for i in 0..32usize {
+                    let row = (t * 16 + i) % 64;
+                    let ans = router.predict("m", ds.x.row(row).to_vec()).unwrap();
+                    assert_eq!(ans.model_key, "m");
+                    assert_eq!(
+                        ans.label(),
+                        offline[row],
+                        "client {t} request {i} served wrong"
+                    );
+                    total.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }
+            });
+        }
+        // meanwhile: three hot swaps and a rollback
+        let router2 = router.clone();
+        let model = model.clone();
+        scope.spawn(move || {
+            for (_, version) in (0..4usize).zip(["v2", "v3", "v4", "v1"]) {
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                router2.register("m", version, model.clone(), ServeConfig::default());
+            }
+        });
+    });
+    assert_eq!(total.load(std::sync::atomic::Ordering::SeqCst), 128);
+    // every submission is accounted for across live + retired arms
+    let report = router.report();
+    assert_eq!(report.total_requests, 128, "report lost traffic across swaps:\n{:#?}", report.routes);
+    assert_eq!(report.total_rejected, 0);
+    // the report still parses as one JSON document
+    let json = report.to_json();
+    assert!(json.contains("\"total_requests\": 128"), "{json}");
+}
+
+#[test]
+fn fifo_holds_within_one_key_across_a_swap() {
+    let model = trained("cgavi-ihb", 0.01, 9);
+    let ds = synthetic_dataset(40, 10);
+    let offline = model.predict(&ds.x);
+    let router = ModelRouter::new();
+    router.register("m", "v1", model.clone(), ServeConfig::default());
+    // enqueue 40 ordered requests, swapping the route half-way through
+    let mut pendings = Vec::new();
+    for i in 0..40 {
+        if i == 20 {
+            router.register("m", "v2", model.clone(), ServeConfig::default());
+        }
+        pendings.push(router.enqueue("m", ServeRequest::row(ds.x.row(i).to_vec())).unwrap());
+    }
+    let answers: Vec<_> = pendings.into_iter().map(|p| p.wait().answer().unwrap()).collect();
+    // in-order, exactly once, each served by the generation that admitted it
+    for (i, ans) in answers.iter().enumerate() {
+        assert_eq!(ans.label(), offline[i], "answer {i} out of order or wrong");
+        let expect = if i < 20 { "v1" } else { "v2" };
+        assert_eq!(ans.model_version, expect, "answer {i} wrong generation");
+    }
+    assert_eq!(router.report().total_requests, 40);
+}

@@ -30,7 +30,7 @@ CLIPPY_LOG=$(mktemp)
 cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
 # every rustc diagnostic carries a "--> path:line:col" span line; match
 # spans inside the strict modules regardless of header distance
-STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/pool|benches/micro_backend_scaling|tests/runtime_parity|tests/estimator_conformance|tests/pool_concurrency)'
+STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|benches/micro_backend_scaling|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/pool_concurrency|tests/serve_control_plane)'
 if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
   echo "FAIL: clippy findings in strict modules:"
   grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
@@ -75,6 +75,34 @@ for method in cgavi-ihb vca; do
   "$BIN" pipeline $SMOKE --method "$method" --save "$SMOKE_DIR/$method.json"
   "$BIN" predict $SMOKE --model "$SMOKE_DIR/$method.json"
 done
+
+echo "-- serve control plane: A/B split over two saved pipelines + shadow"
+"$BIN" pipeline $SMOKE --method cgavi-ihb --save "$SMOKE_DIR/champ.json"
+"$BIN" pipeline $SMOKE --method abm --save "$SMOKE_DIR/challenger.json"
+SERVE_OUT=$("$BIN" serve $SMOKE \
+  --model "m@v1=$SMOKE_DIR/champ.json,m@v2=$SMOKE_DIR/challenger.json" \
+  --ab "m:v1=70,v2=30" --shadow "m:v2" --requests 300)
+# print the human-readable summary, stop before the JSON document
+echo "$SERVE_OUT" | sed -n '/^{/q;p'
+# the RouterReport must account for every submitted request, and the
+# demo path must actually serve them (totals count rejects too, so a
+# fully-rejecting regression would otherwise still pass)
+echo "$SERVE_OUT" | grep -q '^router.total_requests = 300$' || {
+  echo "FAIL: RouterReport totals != requests submitted"
+  echo "$SERVE_OUT"
+  exit 1
+}
+echo "$SERVE_OUT" | grep -q '^router.total_rejected = 0$' || {
+  echo "FAIL: serve smoke rejected requests"
+  echo "$SERVE_OUT"
+  exit 1
+}
+echo "-- serve --shards deprecation warning"
+SHARDS_WARN=$("$BIN" serve $SMOKE --requests 50 --shards 2 2>&1 >/dev/null)
+echo "$SHARDS_WARN" | grep -qi "deprecated" || {
+  echo "FAIL: serve --shards must print a deprecation warning"
+  exit 1
+}
 rm -rf "$SMOKE_DIR"
 
 echo "verify.sh: all gates passed"
