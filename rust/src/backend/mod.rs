@@ -1,11 +1,24 @@
 //! The data plane: sharded column storage + streaming compute backends
 //! for the O(m·ℓ) hot path.
 //!
-//! OAVI touches the full data set only through two kernels:
+//! OAVI touches the full data set only through three kernels:
 //!
-//! 1. **gram_stats** — `(Aᵀb, bᵀb)` for a candidate column b (per border
-//!    term; the dominant training cost), and
-//! 2. **transform_abs** — the (FT) feature map `|A·C + U|` (test time).
+//! 1. **gram_panel** — the **primary training kernel**: one
+//!    [`CandidatePanel`] holds every degree-d border candidate, and a
+//!    single pass per degree produces the ℓ×k store-vs-panel block plus
+//!    the k×k panel cross-Gram upper triangle ([`PanelStats`]).  The
+//!    drivers then walk the candidates in DegLex order resolving the
+//!    within-degree dependence from the cached cross entries — O(1) per
+//!    (accepted, later-candidate) pair, no extra data pass.  Panels are
+//!    chunked under a memory budget ([`CandidatePanel::budget_cols`]),
+//!    and the whole pass is **bitwise identical** to the legacy
+//!    per-candidate flow below because every Gram entry shares one
+//!    per-entry dot discipline (see `store.rs`).
+//! 2. **gram_stats** — `(Aᵀb, bᵀb)` for a single candidate column b:
+//!    the legacy per-candidate kernel, still the right shape for
+//!    serving-time queries and kept as the bitwise reference the panel
+//!    parity suite compares against.
+//! 3. **transform_abs** — the (FT) feature map `|A·C + U|` (test time).
 //!
 //! # Layering (store → backend → driver, over one persistent pool)
 //!
@@ -82,9 +95,9 @@ pub mod sharded;
 pub mod store;
 
 pub use sharded::ShardedBackend;
-pub use store::ColumnStore;
+pub use store::{CandidatePanel, ColumnStore, PanelRecipe, PanelStats};
 
-use crate::backend::store::{gram_stats_seq, transform_abs_seq};
+use crate::backend::store::{gram_panel_seq, gram_stats_seq, transform_abs_seq};
 use crate::linalg::dense::Matrix;
 
 /// Streaming compute abstraction over the per-sample hot loops.
@@ -94,6 +107,21 @@ use crate::linalg::dense::Matrix;
 pub trait ComputeBackend {
     /// `(Aᵀb, bᵀb)` where A's columns live in `cols` and b is `b_col`.
     fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64);
+
+    /// Degree-batched panel kernel: the ℓ×k block `⟨store_j, panel_c⟩`
+    /// plus (when `want_cross`) the k×k panel cross-Gram upper triangle,
+    /// reduced in shard order.  The default is the sequential reference
+    /// reduction; parallel backends may tile `(shard × candidate range)`
+    /// but must reproduce its bits exactly (per-entry dot discipline +
+    /// shard-order accumulation).
+    fn gram_panel(
+        &self,
+        cols: &ColumnStore,
+        panel: &CandidatePanel,
+        want_cross: bool,
+    ) -> PanelStats {
+        gram_panel_seq(cols, panel, want_cross)
+    }
 
     /// `|A·C + U|` where A is m×ℓ (the store), C is ℓ×g, U is m×g.
     /// Row-major output m×g.
@@ -165,6 +193,17 @@ impl PinnedShards {
 impl ComputeBackend for PinnedShards {
     fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
         self.inner.gram_stats(cols, b_col)
+    }
+
+    fn gram_panel(
+        &self,
+        cols: &ColumnStore,
+        panel: &CandidatePanel,
+        want_cross: bool,
+    ) -> PanelStats {
+        // delegate (NOT the trait default): pinned-sharded parity runs
+        // must exercise the inner backend's tiled panel path
+        self.inner.gram_panel(cols, panel, want_cross)
     }
 
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
@@ -245,6 +284,32 @@ mod tests {
     fn backend_name_and_default_shards() {
         assert_eq!(NativeBackend.name(), "native");
         assert_eq!(NativeBackend.preferred_shards(1_000_000), 1);
+    }
+
+    #[test]
+    fn gram_panel_default_matches_per_candidate_gram_stats() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let m = 60;
+        let cols: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..m).map(|_| rng.normal()).collect()).collect();
+        let store = ColumnStore::from_cols(&cols, 3);
+        let cands: Vec<Vec<f64>> =
+            (0..5).map(|_| (0..m).map(|_| rng.normal()).collect()).collect();
+        let mut panel = CandidatePanel::new_like(&store);
+        for c in &cands {
+            panel.push_col(c);
+        }
+        let ps = NativeBackend.gram_panel(&store, &panel, true);
+        for (c, cand) in cands.iter().enumerate() {
+            let (atb, btb) = NativeBackend.gram_stats(&store, cand);
+            assert_eq!(atb, ps.atb_col(c));
+            assert_eq!(btb.to_bits(), ps.btb(c).to_bits());
+        }
+        // pinned adapter delegates the panel kernel too
+        let pinned = PinnedShards::new(Box::new(NativeBackend), 3);
+        let pp = pinned.gram_panel(&store, &panel, true);
+        assert_eq!(pp.atb_col(2), ps.atb_col(2));
+        assert_eq!(pp.cross_at(1, 3).to_bits(), ps.cross_at(1, 3).to_bits());
     }
 
     #[test]

@@ -29,8 +29,11 @@
 //! plain-data [`ColumnStore`], both `Sync`, so the pool fan-out lives
 //! entirely below the trait boundary.
 
+use std::ops::Range;
+
 use crate::backend::store::{
-    gram_partial, gram_stats_seq, transform_abs_seq, transform_block, ColumnStore,
+    gram_panel_partial, gram_panel_seq, gram_partial, gram_stats_seq, panel_cross_partial,
+    transform_abs_seq, transform_block, CandidatePanel, ColumnStore, PanelStats,
 };
 use crate::backend::{ComputeBackend, NativeBackend};
 use crate::coordinator::pool::{PoolHandle, ThreadPool};
@@ -198,6 +201,71 @@ impl ComputeBackend for ShardedBackend {
         (atb, btb)
     }
 
+    fn gram_panel(
+        &self,
+        cols: &ColumnStore,
+        panel: &CandidatePanel,
+        want_cross: bool,
+    ) -> PanelStats {
+        let n = cols.n_shards();
+        let ell = cols.len();
+        let k = panel.len();
+        if n == 1 || self.inner_workers == 1 || k == 0 {
+            return gram_panel_seq(cols, panel, want_cross);
+        }
+        // cross work averages (k+1)/2 columns per candidate
+        let cross_cols = if want_cross { (k + 1) / 2 } else { 0 };
+        let work_per_shard = (ell + cross_cols).max(1) * k * (cols.rows() / n);
+        if work_per_shard < self.min_work_threshold() {
+            return gram_panel_seq(cols, panel, want_cross);
+        }
+        // ONE pool dispatch per panel pass: shard × candidate-range tiles
+        // submitted shard-major, so the in-order reduction below
+        // accumulates every entry's per-shard partials in ascending shard
+        // order — bit-identical to gram_panel_seq
+        const PANEL_TILE_COLS: usize = 32;
+        let mut tiles: Vec<(usize, Range<usize>)> = Vec::new();
+        for s in 0..n {
+            let mut c0 = 0usize;
+            while c0 < k {
+                let c1 = (c0 + PANEL_TILE_COLS).min(k);
+                tiles.push((s, c0..c1));
+                c0 = c1;
+            }
+        }
+        let parts = self.pool.map(&tiles, |(s, cr)| {
+            let a = gram_panel_partial(cols, panel, *s, cr.clone());
+            let c = if want_cross {
+                panel_cross_partial(panel, *s, cr.clone())
+            } else {
+                Vec::new()
+            };
+            (a, c)
+        });
+        let mut atb = vec![0.0f64; ell * k];
+        let mut cross = vec![0.0f64; if want_cross { k * (k + 1) / 2 } else { 0 }];
+        for ((_, cr), (pa, pc)) in tiles.iter().zip(parts.iter()) {
+            for (ci, c) in cr.clone().enumerate() {
+                let dst = &mut atb[c * ell..(c + 1) * ell];
+                for (d, v) in dst.iter_mut().zip(pa[ci * ell..(ci + 1) * ell].iter()) {
+                    *d += *v;
+                }
+            }
+            if want_cross {
+                let mut off = 0usize;
+                for c in cr.clone() {
+                    let base = c * (c + 1) / 2;
+                    let dst = &mut cross[base..base + c + 1];
+                    for (d, v) in dst.iter_mut().zip(pc[off..off + c + 1].iter()) {
+                        *d += *v;
+                    }
+                    off += c + 1;
+                }
+            }
+        }
+        PanelStats::new(ell, k, atb, cross)
+    }
+
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
         let n = cols.n_shards();
         if n == 1 || self.inner_workers == 1 {
@@ -290,6 +358,79 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn gram_panel_forced_parallel_is_bitwise_identical_to_seq() {
+        // forces the shard×candidate tile fan-out (min_work 0) across
+        // shard counts and candidate counts straddling the 32-col tile
+        property(8, |rng| {
+            let forced = ShardedBackend::new(3).with_min_work(0);
+            for &shards in &[2usize, 3, 5] {
+                for &k in &[1usize, 2, 7, 33] {
+                    let m = 1 + rng.below(60);
+                    let ell = 1 + rng.below(4);
+                    let cols = random_cols(rng, m, ell);
+                    let store = ColumnStore::from_cols(&cols, shards);
+                    let mut panel = CandidatePanel::new_like(&store);
+                    for _ in 0..k {
+                        let c: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+                        panel.push_col(&c);
+                    }
+                    for want_cross in [true, false] {
+                        let seq = gram_panel_seq(&store, &panel, want_cross);
+                        let par = forced.gram_panel(&store, &panel, want_cross);
+                        for c in 0..k {
+                            if bits(seq.atb_col(c)) != bits(par.atb_col(c)) {
+                                return Err(format!(
+                                    "panel atb diverges at shards={shards} k={k} c={c}"
+                                ));
+                            }
+                        }
+                        if want_cross {
+                            for c in 0..k {
+                                for i in 0..=c {
+                                    if seq.cross_at(i, c).to_bits()
+                                        != par.cross_at(i, c).to_bits()
+                                    {
+                                        return Err(format!(
+                                            "cross diverges at shards={shards} ({i},{c})"
+                                        ));
+                                    }
+                                }
+                            }
+                        } else if par.has_cross() {
+                            return Err("unexpected cross block".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_panel_issues_one_dispatch_per_call() {
+        let pool = ThreadPool::new(4);
+        let be = ShardedBackend::with_handle(pool.handle(), 4, 1).with_min_work(0);
+        let mut rng = Rng::new(13);
+        let cols = random_cols(&mut rng, 300, 4);
+        let store = ColumnStore::from_cols(&cols, 4);
+        let mut panel = CandidatePanel::new_like(&store);
+        for _ in 0..40 {
+            let c: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+            panel.push_col(&c);
+        }
+        let before = pool.handle().batches_dispatched();
+        let _ = be.gram_panel(&store, &panel, true);
+        let one = pool.handle().batches_dispatched();
+        assert_eq!(one - before, 1, "panel pass must be one pool dispatch");
+        // the per-candidate loop over the same work is 40 dispatches
+        for c in 0..panel.len() {
+            let _ = be.gram_stats(&store, &panel.col(c));
+        }
+        let many = pool.handle().batches_dispatched();
+        assert_eq!(many - one, 40);
     }
 
     #[test]

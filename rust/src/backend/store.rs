@@ -1,5 +1,5 @@
-//! Row-sharded column store — the single column currency of the data
-//! plane.
+//! Row-sharded column store + candidate panels — the column currency of
+//! the data plane.
 //!
 //! Every layer that touches evaluation columns (the OAVI driver, the
 //! streaming backends, the (FT) transform, Pearson ordering, ABM/VCA)
@@ -9,13 +9,34 @@
 //! (amortized O(m), no per-column `Vec` allocation) and every kernel can
 //! operate on plain `&[f64]` shard slices.
 //!
-//! The two hot kernels live here as **per-shard free functions**
-//! ([`gram_partial`], [`transform_block`]) shared verbatim by
-//! [`crate::backend::NativeBackend`] (sequential over shards) and
-//! [`crate::backend::ShardedBackend`] (thread-pool map over shards with a
-//! deterministic in-order reduction).  Because both backends run the same
-//! per-shard code and reduce partials in the same shard order, their
-//! results are **bit-for-bit identical** for any fixed shard count — the
+//! # Kernel inventory (per-shard free functions)
+//!
+//! * [`gram_panel_partial`] / [`panel_cross_partial`] — the **primary
+//!   training kernels** since the degree-batched refactor: one
+//!   [`CandidatePanel`] holds every degree-d border candidate (filled
+//!   from its parent columns in one pass, [`CandidatePanel::from_recipes`]),
+//!   and the ℓ×k store-vs-panel block plus the k×k panel cross-Gram
+//!   upper triangle replace |∂d| separate BLAS-1 sweeps with one
+//!   BLAS-3-shaped pass per degree.
+//! * [`gram_partial`] — the legacy per-candidate `(Aᵀb, bᵀb)` map side,
+//!   still used by serving-time single-column queries and kept as the
+//!   bitwise reference for the panel path.
+//! * [`transform_block`] — the (FT) `|A·C + U|` map side (test time).
+//!
+//! All Gram-type kernels share **one per-entry dot discipline**: every
+//! output entry is bitwise equal to [`crate::linalg::dot`] of the two
+//! column slices involved (the blocked variants only share passes over
+//! the right-hand column — see `dot4`'s contract).  That makes each
+//! entry's bits independent of which kernel, blocking factor, or batch
+//! boundary produced it, which is what lets the panel path reproduce the
+//! legacy per-candidate path bit for bit.
+//!
+//! The kernels are shared verbatim by [`crate::backend::NativeBackend`]
+//! (sequential over shards) and [`crate::backend::ShardedBackend`]
+//! (thread-pool map over shard×panel tiles with a deterministic in-order
+//! reduction).  Because both backends run the same per-shard code and
+//! reduce partials in the same shard order, their results are
+//! **bit-for-bit identical** for any fixed shard count — the
 //! reproducibility contract `rust/tests/runtime_parity.rs` pins down.
 
 use std::ops::Range;
@@ -185,6 +206,22 @@ impl ColumnStore {
         acc
     }
 
+    /// Append candidate column `c` of a [`CandidatePanel`] built over
+    /// this store's row partition — shard-to-shard copies, no full-length
+    /// staging buffer.  Values (hence result bits) are identical to
+    /// materializing the panel column and calling [`ColumnStore::push_col`].
+    pub fn push_col_from_panel(&mut self, panel: &CandidatePanel, c: usize) {
+        debug_assert_eq!(panel.m, self.m, "push_col_from_panel: row mismatch");
+        debug_assert_eq!(
+            panel.offsets, self.offsets,
+            "push_col_from_panel: panel/store partitions must match"
+        );
+        for (s, shard) in self.shards.iter_mut().enumerate() {
+            shard.data.extend_from_slice(panel.col_shard(c, s));
+        }
+        self.n_cols += 1;
+    }
+
     /// Mean of column `j` (Pearson ordering helper).
     pub fn col_mean(&self, j: usize) -> f64 {
         if self.m == 0 {
@@ -198,52 +235,376 @@ impl ColumnStore {
     }
 }
 
-/// Per-shard `(Aᵀb, bᵀb)` partial — the map side of gram_stats.
+/// Recipe for one border-term candidate column:
+/// `panel[:, c] = store[:, parent] ⊙ x[:, var]` (Theorem 4.2 — one
+/// multiply per sample from the parent's evaluation column).
+#[derive(Clone, Copy, Debug)]
+pub struct PanelRecipe {
+    /// Store column index of the parent term `u / x_var`.
+    pub parent: usize,
+    /// Variable index such that `u = parent · x_var`.
+    pub var: usize,
+}
+
+/// A degree-batch of candidate columns sharing a [`ColumnStore`]'s row
+/// partition: the m×k right-hand side of the panel kernels.
 ///
-/// Perf pass #2 (EXPERIMENTS.md §Perf) preserved per shard: past the
-/// last-level-cache scale, four columns share each pass over the
-/// (cache-missing) b slice so b traffic drops 4×; for cache-resident
-/// shards the simple vectorized dot is faster.  Sharding itself pushes
-/// most shards under the threshold — exactly the cache win row-sharding
-/// is after.
-pub fn gram_partial(store: &ColumnStore, s: usize, b_full: &[f64]) -> (Vec<f64>, f64) {
-    let bs = &b_full[store.shard_range(s)];
-    let ell = store.len();
-    let rows = bs.len();
-    let mut atb = vec![0.0f64; ell];
-    const BLOCK_THRESHOLD_BYTES: usize = 4 << 20; // ~LLC slice
-    if rows * std::mem::size_of::<f64>() < BLOCK_THRESHOLD_BYTES {
-        for (j, a) in atb.iter_mut().enumerate() {
-            *a = dot(store.col_shard(j, s), bs);
+/// Shards mirror the parent store's offsets exactly, so every panel
+/// kernel pairs `store.col_shard(j, s)` with `panel.col_shard(c, s)`
+/// slices of equal length — the precondition [`gram_panel_partial`]
+/// asserts.  Built either from border recipes (OAVI/ABM: one pass over
+/// the parent columns evaluates the whole degree-d border) or by pushing
+/// full-length columns (VCA's candidate/projection batches).
+#[derive(Clone, Debug)]
+pub struct CandidatePanel {
+    m: usize,
+    k: usize,
+    offsets: Vec<usize>,
+    shards: Vec<Shard>,
+}
+
+impl CandidatePanel {
+    /// Empty panel over `store`'s exact row partition.
+    pub fn new_like(store: &ColumnStore) -> Self {
+        CandidatePanel {
+            m: store.m,
+            k: 0,
+            offsets: store.offsets.clone(),
+            shards: store
+                .shards
+                .iter()
+                .map(|sh| Shard { rows: sh.rows, data: Vec::new() })
+                .collect(),
         }
-        return (atb, dot(bs, bs));
+    }
+
+    /// Evaluate every recipe into a fresh panel in **one pass per
+    /// shard**: each shard block stays hot while all k candidates read
+    /// their parent columns from it.  The per-sample arithmetic
+    /// (`parent[i] · x[i, var]`) is exactly
+    /// [`ColumnStore::fill_product`]'s, so panel columns are bitwise
+    /// identical to the legacy per-candidate evaluation buffers.
+    pub fn from_recipes(store: &ColumnStore, x: &Matrix, recipes: &[PanelRecipe]) -> Self {
+        let mut panel = Self::new_like(store);
+        let k = recipes.len();
+        for (s, shard) in panel.shards.iter_mut().enumerate() {
+            shard.data.resize(shard.rows * k, 0.0);
+            let start = panel.offsets[s];
+            for (c, r) in recipes.iter().enumerate() {
+                let p = store.col_shard(r.parent, s);
+                let dst = &mut shard.data[c * shard.rows..(c + 1) * shard.rows];
+                for (i, d) in dst.iter_mut().enumerate() {
+                    *d = p[i] * x.get(start + i, r.var);
+                }
+            }
+        }
+        panel.k = k;
+        panel
+    }
+
+    /// Append one full-length candidate column (VCA batches; benches).
+    pub fn push_col(&mut self, col: &[f64]) {
+        debug_assert_eq!(col.len(), self.m, "panel push_col: length mismatch");
+        for (s, shard) in self.shards.iter_mut().enumerate() {
+            let range = self.offsets[s]..self.offsets[s + 1];
+            shard.data.extend_from_slice(&col[range]);
+        }
+        self.k += 1;
+    }
+
+    /// Number of candidate columns k.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.k == 0
+    }
+
+    /// Number of rows m.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Global row range owned by shard `s` (mirrors the parent store).
+    #[inline]
+    pub fn shard_range(&self, s: usize) -> Range<usize> {
+        self.offsets[s]..self.offsets[s + 1]
+    }
+
+    /// Candidate `c`'s contiguous slice within shard `s`.
+    #[inline]
+    pub fn col_shard(&self, c: usize, s: usize) -> &[f64] {
+        let shard = &self.shards[s];
+        &shard.data[c * shard.rows..(c + 1) * shard.rows]
+    }
+
+    /// Materialize candidate `c` as one contiguous vector (Schur-guard
+    /// rebuilds, PJRT packing).
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.m);
+        for s in 0..self.n_shards() {
+            out.extend_from_slice(self.col_shard(c, s));
+        }
+        out
+    }
+
+    /// Same row partition as `store`?  (Precondition of every panel
+    /// kernel.)
+    pub fn partition_matches(&self, store: &ColumnStore) -> bool {
+        self.offsets == store.offsets
+    }
+
+    /// Clamp a configured per-chunk column budget so one panel never
+    /// exceeds ~256 MB regardless of m (the `m × |∂d|` blow-up guard at
+    /// m ≫ 1e5): `min(requested, 256MB / (8·m))`, floored at 1.
+    pub fn budget_cols(requested: usize, m: usize) -> usize {
+        const PANEL_BUDGET_BYTES: usize = 256 << 20;
+        let mem_cap = (PANEL_BUDGET_BYTES / (8 * m.max(1))).max(1);
+        requested.max(1).min(mem_cap)
+    }
+}
+
+/// Reduced result of one degree-batched panel pass:
+/// the ℓ×k store-vs-panel block plus (optionally) the k×k panel
+/// cross-Gram upper triangle, both accumulated in shard order.
+///
+/// Layouts: `atb` is candidate-major (`atb[c·ℓ + j] = ⟨store_j, panel_c⟩`,
+/// so [`PanelStats::atb_col`] is the candidate's ready-to-use `Aᵀb`
+/// prefix); `cross` packs the upper triangle candidate-major
+/// (`cross[c(c+1)/2 + i] = ⟨panel_i, panel_c⟩` for `i ≤ c`, diagonal =
+/// `bᵀb`).  The cross entries are what lets the driver resolve the
+/// within-degree dependence in O(1) per (accepted, later-candidate)
+/// pair: when candidate i joins O, later candidates extend their `Aᵀb`
+/// with `cross_at(i, c)` instead of re-touching the data.
+#[derive(Clone, Debug)]
+pub struct PanelStats {
+    ell: usize,
+    k: usize,
+    atb: Vec<f64>,
+    cross: Vec<f64>,
+}
+
+impl PanelStats {
+    /// Assemble from reduced blocks (backends only).
+    pub fn new(ell: usize, k: usize, atb: Vec<f64>, cross: Vec<f64>) -> Self {
+        debug_assert_eq!(atb.len(), ell * k);
+        debug_assert!(cross.is_empty() || cross.len() == k * (k + 1) / 2);
+        PanelStats { ell, k, atb, cross }
+    }
+
+    /// Store width ℓ the block was computed against.
+    #[inline]
+    pub fn ell(&self) -> usize {
+        self.ell
+    }
+
+    /// Number of candidates k.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Whether the cross-Gram triangle was computed.
+    #[inline]
+    pub fn has_cross(&self) -> bool {
+        !self.cross.is_empty()
+    }
+
+    /// `⟨store_j, panel_c⟩` for all j — candidate c's `Aᵀb` over the
+    /// store columns present when the panel was filled.
+    #[inline]
+    pub fn atb_col(&self, c: usize) -> &[f64] {
+        &self.atb[c * self.ell..(c + 1) * self.ell]
+    }
+
+    /// Cached cross-Gram entry `⟨panel_i, panel_c⟩`, `i ≤ c`.
+    #[inline]
+    pub fn cross_at(&self, i: usize, c: usize) -> f64 {
+        debug_assert!(i <= c, "cross_at: upper triangle only ({i} > {c})");
+        self.cross[c * (c + 1) / 2 + i]
+    }
+
+    /// `bᵀb` of candidate c (the cross diagonal).
+    #[inline]
+    pub fn btb(&self, c: usize) -> f64 {
+        self.cross_at(c, c)
+    }
+}
+
+/// Four dots sharing one pass over `b`: returns
+/// `[dot(c0,b), dot(c1,b), dot(c2,b), dot(c3,b)]`, each entry **bitwise
+/// equal** to [`crate::linalg::dot`] of that column with `b`.
+///
+/// This is the blocked building brick of the per-entry dot discipline:
+/// every column keeps `dot`'s four lane accumulators, lane-combine
+/// order, and sequential tail, so the result bits are independent of the
+/// blocking — only the (cache-missing past the LLC) pass over `b` is
+/// shared, cutting b traffic 4×.  Perf pass #2 (EXPERIMENTS.md §Perf)
+/// originally used free-form per-column accumulators here; the panel
+/// refactor pinned the lanes to `dot`'s schedule so blocked and
+/// unblocked entries agree bit for bit (the property the panel path's
+/// bitwise contract rests on).
+fn dot4(c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64], b: &[f64]) -> [f64; 4] {
+    let n = b.len();
+    let chunks = n / 4;
+    // l[col][lane] — each column's four dot lanes
+    let mut l = [[0.0f64; 4]; 4];
+    for i in 0..chunks {
+        let j = i * 4;
+        let (b0, b1, b2, b3) = (b[j], b[j + 1], b[j + 2], b[j + 3]);
+        l[0][0] += c0[j] * b0;
+        l[0][1] += c0[j + 1] * b1;
+        l[0][2] += c0[j + 2] * b2;
+        l[0][3] += c0[j + 3] * b3;
+        l[1][0] += c1[j] * b0;
+        l[1][1] += c1[j + 1] * b1;
+        l[1][2] += c1[j + 2] * b2;
+        l[1][3] += c1[j + 3] * b3;
+        l[2][0] += c2[j] * b0;
+        l[2][1] += c2[j + 1] * b1;
+        l[2][2] += c2[j + 2] * b2;
+        l[2][3] += c2[j + 3] * b3;
+        l[3][0] += c3[j] * b0;
+        l[3][1] += c3[j + 1] * b1;
+        l[3][2] += c3[j + 2] * b2;
+        l[3][3] += c3[j + 3] * b3;
+    }
+    let mut out = [
+        (l[0][0] + l[0][1]) + (l[0][2] + l[0][3]),
+        (l[1][0] + l[1][1]) + (l[1][2] + l[1][3]),
+        (l[2][0] + l[2][1]) + (l[2][2] + l[2][3]),
+        (l[3][0] + l[3][1]) + (l[3][2] + l[3][3]),
+    ];
+    for j in chunks * 4..n {
+        out[0] += c0[j] * b[j];
+        out[1] += c1[j] * b[j];
+        out[2] += c2[j] * b[j];
+        out[3] += c3[j] * b[j];
+    }
+    out
+}
+
+/// `out[j] = ⟨column j, bs⟩` for `n_cols` columns provided by `col`,
+/// every entry bitwise equal to [`crate::linalg::dot`] — the one
+/// Gram-entry code path shared by [`gram_partial`],
+/// [`gram_panel_partial`], and [`panel_cross_partial`].  Past the LLC
+/// scale, four columns share each pass over `bs` via [`dot4`]; for
+/// cache-resident shards the plain per-column dot is faster.  The
+/// branch affects wall-clock only — both sides produce identical bits.
+fn dots_into<'a, F: Fn(usize) -> &'a [f64]>(col: F, n_cols: usize, bs: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(out.len(), n_cols);
+    const BLOCK_THRESHOLD_BYTES: usize = 4 << 20; // ~LLC slice
+    if bs.len() * std::mem::size_of::<f64>() < BLOCK_THRESHOLD_BYTES {
+        for (j, a) in out.iter_mut().enumerate() {
+            *a = dot(col(j), bs);
+        }
+        return;
     }
     let mut j = 0;
-    while j + 4 <= ell {
-        let (c0, c1, c2, c3) = (
-            store.col_shard(j, s),
-            store.col_shard(j + 1, s),
-            store.col_shard(j + 2, s),
-            store.col_shard(j + 3, s),
-        );
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-        for (i, &bi) in bs.iter().enumerate() {
-            s0 += c0[i] * bi;
-            s1 += c1[i] * bi;
-            s2 += c2[i] * bi;
-            s3 += c3[i] * bi;
-        }
-        atb[j] = s0;
-        atb[j + 1] = s1;
-        atb[j + 2] = s2;
-        atb[j + 3] = s3;
+    while j + 4 <= n_cols {
+        let d = dot4(col(j), col(j + 1), col(j + 2), col(j + 3), bs);
+        out[j..j + 4].copy_from_slice(&d);
         j += 4;
     }
-    while j < ell {
-        atb[j] = dot(store.col_shard(j, s), bs);
+    while j < n_cols {
+        out[j] = dot(col(j), bs);
         j += 1;
     }
+}
+
+/// Per-shard `(Aᵀb, bᵀb)` partial — the map side of gram_stats (the
+/// legacy per-candidate kernel; serving-time single-column queries and
+/// the bitwise reference path still use it).  Per-entry dot discipline
+/// via [`dots_into`].
+pub fn gram_partial(store: &ColumnStore, s: usize, b_full: &[f64]) -> (Vec<f64>, f64) {
+    let bs = &b_full[store.shard_range(s)];
+    let mut atb = vec![0.0f64; store.len()];
+    dots_into(|j| store.col_shard(j, s), store.len(), bs, &mut atb);
     (atb, dot(bs, bs))
+}
+
+/// Per-shard store-vs-panel block for the candidate range `cr` — the map
+/// side of [`gram_panel_seq`] and the primary training kernel.
+///
+/// Output is candidate-major: `out[(c − cr.start)·ℓ + j] =
+/// ⟨store_j, panel_c⟩` in shard `s`, every entry bitwise-dot
+/// ([`dots_into`]).  The shard's column block is streamed once per
+/// candidate with 4-column b-pass sharing past the LLC; tiling over
+/// `(shard, candidate range)` is the parallel backends' job.
+pub fn gram_panel_partial(
+    store: &ColumnStore,
+    panel: &CandidatePanel,
+    s: usize,
+    cr: Range<usize>,
+) -> Vec<f64> {
+    debug_assert!(panel.partition_matches(store), "panel/store partitions must match");
+    let ell = store.len();
+    let mut out = vec![0.0f64; ell * cr.len()];
+    if ell == 0 {
+        return out;
+    }
+    for (ci, c) in cr.enumerate() {
+        let bs = panel.col_shard(c, s);
+        dots_into(|j| store.col_shard(j, s), ell, bs, &mut out[ci * ell..(ci + 1) * ell]);
+    }
+    out
+}
+
+/// Per-shard panel cross-Gram upper triangle for the candidate range
+/// `cr`: for each `c ∈ cr`, the `c + 1` entries `⟨panel_i, panel_c⟩`
+/// (`i ≤ c`), packed candidate-major in `cr` order.  Per-entry
+/// bitwise-dot, so a cross entry carries exactly the bits the legacy
+/// path would have produced by pushing candidate `i` into the store and
+/// re-running `gram_partial` for candidate `c`.
+pub fn panel_cross_partial(panel: &CandidatePanel, s: usize, cr: Range<usize>) -> Vec<f64> {
+    let total: usize = cr.clone().map(|c| c + 1).sum();
+    let mut out = vec![0.0f64; total];
+    let mut base = 0usize;
+    for c in cr {
+        let bs = panel.col_shard(c, s);
+        dots_into(|i| panel.col_shard(i, s), c + 1, bs, &mut out[base..base + c + 1]);
+        base += c + 1;
+    }
+    out
+}
+
+/// Sequential in-shard-order reduction of the panel kernels — the exact
+/// reduction every backend must reproduce (bit-reproducibility anchor,
+/// like [`gram_stats_seq`] for the single-column kernel).  With
+/// `want_cross = false` the k×k triangle is skipped (VCA's projection
+/// batches need only the store-vs-panel block).
+pub fn gram_panel_seq(
+    store: &ColumnStore,
+    panel: &CandidatePanel,
+    want_cross: bool,
+) -> PanelStats {
+    debug_assert!(panel.partition_matches(store), "panel/store partitions must match");
+    let ell = store.len();
+    let k = panel.len();
+    let mut atb = vec![0.0f64; ell * k];
+    let mut cross = vec![0.0f64; if want_cross { k * (k + 1) / 2 } else { 0 }];
+    for s in 0..store.n_shards() {
+        let pa = gram_panel_partial(store, panel, s, 0..k);
+        for (a, p) in atb.iter_mut().zip(pa.iter()) {
+            *a += *p;
+        }
+        if want_cross {
+            let pc = panel_cross_partial(panel, s, 0..k);
+            for (a, p) in cross.iter_mut().zip(pc.iter()) {
+                *a += *p;
+            }
+        }
+    }
+    PanelStats::new(ell, k, atb, cross)
 }
 
 /// Per-shard `|A_s·C + U_s|` written into a caller-owned row-major
@@ -455,6 +816,149 @@ mod tests {
             all_close(&atb, &expect, 1e-10, "atb")?;
             crate::util::proptest::close(btb, dot(&b, &b), 1e-10, "btb")
         });
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn dot4_is_bitwise_equal_to_four_dots() {
+        property(24, |rng| {
+            // lengths straddling the 4-chunk boundary, incl. 0..3 tails
+            let n = rng.below(70);
+            let cols: Vec<Vec<f64>> =
+                (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let d = dot4(&cols[0], &cols[1], &cols[2], &cols[3], &b);
+            for (j, dj) in d.iter().enumerate() {
+                if dj.to_bits() != dot(&cols[j], &b).to_bits() {
+                    return Err(format!("dot4 lane {j} diverges at n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn panel_from_recipes_matches_fill_product_bitwise() {
+        property(16, |rng| {
+            let m = 1 + rng.below(60);
+            let shards = 1 + rng.below(5);
+            let n = 1 + rng.below(3);
+            let mut x = Matrix::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    x.set(i, j, rng.uniform());
+                }
+            }
+            let cols = random_cols(rng, m, 2);
+            let store = ColumnStore::from_cols(&cols, shards);
+            let recipes: Vec<PanelRecipe> = (0..4)
+                .map(|_| PanelRecipe { parent: rng.below(2), var: rng.below(n) })
+                .collect();
+            let panel = CandidatePanel::from_recipes(&store, &x, &recipes);
+            if panel.len() != 4 || !panel.partition_matches(&store) {
+                return Err("panel shape mismatch".into());
+            }
+            let mut buf = vec![0.0f64; m];
+            for (c, r) in recipes.iter().enumerate() {
+                store.fill_product(r.parent, &x, r.var, &mut buf);
+                if bits(&panel.col(c)) != bits(&buf) {
+                    return Err(format!("panel col {c} diverges from fill_product"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn push_col_from_panel_matches_push_col_bitwise() {
+        let mut rng = Rng::new(23);
+        let m = 37;
+        let cols = random_cols(&mut rng, m, 2);
+        for shards in [1usize, 3, 5] {
+            let base = ColumnStore::from_cols(&cols, shards);
+            let cand: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let mut panel = CandidatePanel::new_like(&base);
+            panel.push_col(&cand);
+            let mut via_panel = base.clone();
+            via_panel.push_col_from_panel(&panel, 0);
+            let mut via_buf = base.clone();
+            via_buf.push_col(&cand);
+            assert_eq!(via_panel.len(), via_buf.len());
+            for s in 0..via_panel.n_shards() {
+                assert_eq!(bits(via_panel.col_shard(2, s)), bits(via_buf.col_shard(2, s)));
+            }
+        }
+    }
+
+    #[test]
+    fn gram_panel_seq_matches_per_candidate_gram_stats_bitwise() {
+        property(20, |rng| {
+            let m = rng.below(80);
+            let shards = 1 + rng.below(6);
+            let ell = 1 + rng.below(5);
+            let k = 1 + rng.below(6);
+            let cols = random_cols(rng, m, ell);
+            let store = ColumnStore::from_cols(&cols, shards);
+            let cands = random_cols(rng, m, k);
+            let mut panel = CandidatePanel::new_like(&store);
+            for c in &cands {
+                panel.push_col(c);
+            }
+            let ps = gram_panel_seq(&store, &panel, true);
+            if ps.ell() != ell || ps.k() != k || !ps.has_cross() {
+                return Err("panel stats shape mismatch".into());
+            }
+            for (c, cand) in cands.iter().enumerate() {
+                let (atb, btb) = gram_stats_seq(&store, cand);
+                if bits(&atb) != bits(ps.atb_col(c)) {
+                    return Err(format!("atb col {c} diverges (shards {shards})"));
+                }
+                if btb.to_bits() != ps.btb(c).to_bits() {
+                    return Err(format!("btb {c} diverges (shards {shards})"));
+                }
+            }
+            // cross entry (i, c) must equal the legacy flow: push candidate
+            // i into the store, then gram_stats of candidate c sees it as
+            // its last atb entry
+            for c in 0..k {
+                for i in 0..c {
+                    let mut grown = store.clone();
+                    grown.push_col(&cands[i]);
+                    let (atb, _) = gram_stats_seq(&grown, &cands[c]);
+                    if atb[ell].to_bits() != ps.cross_at(i, c).to_bits() {
+                        return Err(format!("cross ({i},{c}) diverges (shards {shards})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_panel_seq_without_cross_skips_triangle() {
+        let mut rng = Rng::new(31);
+        let cols = random_cols(&mut rng, 40, 3);
+        let store = ColumnStore::from_cols(&cols, 2);
+        let mut panel = CandidatePanel::new_like(&store);
+        let cand: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        panel.push_col(&cand);
+        let ps = gram_panel_seq(&store, &panel, false);
+        assert!(!ps.has_cross());
+        let (atb, _) = gram_stats_seq(&store, &cand);
+        assert_eq!(bits(&atb), bits(ps.atb_col(0)));
+    }
+
+    #[test]
+    fn panel_budget_clamps_to_memory_cap() {
+        // small m: the configured budget wins
+        assert_eq!(CandidatePanel::budget_cols(128, 1_000), 128);
+        // huge m: the 256MB cap wins (256MB / 8 bytes / m rows)
+        assert_eq!(CandidatePanel::budget_cols(512, 1 << 20), (256 << 20) / (8 << 20));
+        // floors at 1 column even for absurd m
+        assert_eq!(CandidatePanel::budget_cols(0, usize::MAX / 16), 1);
     }
 
     #[test]

@@ -10,8 +10,14 @@
 //! term joins O.  Note ABM's criterion normalizes by ‖v‖₂ = 1, *not*
 //! LTC = 1 — the paper's Remark 4.4 uses exactly this to transfer the
 //! Theorem 4.3 bound to ABM.
+//!
+//! Data flow: ABM rides OAVI's degree-batched candidate panels — one
+//! `gram_panel` pass per (degree, chunk) supplies every bordered-Gram
+//! column, with the within-degree dependence resolved from the cached
+//! panel cross entries (bitwise identical to the per-candidate
+//! reference, [`Abm::fit_with_backend_per_candidate`]).
 
-use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
+use crate::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend, PanelRecipe};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::linalg::eigen::smallest_eigenpair;
@@ -31,11 +37,20 @@ pub struct AbmConfig {
     /// |LTC| below this rejects the polynomial as spurious (the leading
     /// coefficient is numerically zero ⇒ rescaling to LTC = 1 explodes).
     pub ltc_floor: f64,
+    /// Column cap per candidate-panel chunk (see
+    /// `OaviConfig::panel_budget_cols` — same semantics, bitwise-neutral).
+    pub panel_budget_cols: usize,
 }
 
 impl AbmConfig {
     pub fn new(psi: f64) -> Self {
-        AbmConfig { psi, max_degree: 12, max_o_terms: 5_000, ltc_floor: 1e-10 }
+        AbmConfig {
+            psi,
+            max_degree: 12,
+            max_o_terms: 5_000,
+            ltc_floor: 1e-10,
+            panel_budget_cols: 512,
+        }
     }
 }
 
@@ -76,13 +91,34 @@ impl Abm {
         self.fit_with_backend(x, &NativeBackend)
     }
 
-    /// Fit with an explicit streaming backend — ABM shares OAVI's
-    /// gram_stats kernel (the O(mℓ) bordered-Gram column), so it shards
-    /// and accelerates the same way.
+    /// Fit with an explicit streaming backend through the degree-batched
+    /// candidate-panel path (the default) — ABM shares OAVI's
+    /// `gram_panel` kernel (the O(mℓk) bordered-Gram batch), so it
+    /// shards and accelerates the same way.
     pub fn fit_with_backend(
         &self,
         x: &Matrix,
         backend: &dyn ComputeBackend,
+    ) -> Result<AbmModel> {
+        self.fit_impl(x, backend, true)
+    }
+
+    /// Legacy correctness reference: one `gram_stats` pass per border
+    /// term.  Bitwise identical to [`Abm::fit_with_backend`] (pinned in
+    /// `tests/runtime_parity.rs`).
+    pub fn fit_with_backend_per_candidate(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+    ) -> Result<AbmModel> {
+        self.fit_impl(x, backend, false)
+    }
+
+    fn fit_impl(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+        panels: bool,
     ) -> Result<AbmModel> {
         let cfg = self.config;
         let m = x.rows();
@@ -95,56 +131,130 @@ impl Abm {
         let mut gram = GramState::new_ones_b_only(m);
         let mut generators = Vec::new();
         let mut stats = FitStats::default();
-        let mut b_col = vec![0.0f64; m];
 
-        'degrees: for d in 1..=cfg.max_degree {
-            let border = compute_border(&o, d);
-            if border.is_empty() {
-                break;
-            }
-            stats.degree_reached = d;
-            for bt in border {
-                cols.fill_product(bt.parent, x, bt.var, &mut b_col);
-                let (atb, btb) = backend.gram_stats(&cols, &b_col);
-                stats.oracle_calls += 1;
-                let ell = gram.len();
-
-                // bordered Gram [A b]ᵀ[A b]
-                let mut bt_gram = Matrix::zeros(ell + 1, ell + 1);
-                for i in 0..ell {
-                    bt_gram.row_mut(i)[..ell].copy_from_slice(&gram.b().row(i)[..ell]);
-                    bt_gram.set(i, ell, atb[i]);
-                    bt_gram.set(ell, i, atb[i]);
+        if panels {
+            let budget = CandidatePanel::budget_cols(cfg.panel_budget_cols, m);
+            let mut atb_buf: Vec<f64> = Vec::new();
+            'degrees: for d in 1..=cfg.max_degree {
+                let border = compute_border(&o, d);
+                if border.is_empty() {
+                    break;
                 }
-                bt_gram.set(ell, ell, btb);
-
-                let (lam, v) = smallest_eigenpair(&bt_gram)?;
-                let unit_mse = lam.max(0.0) / m as f64;
-                let ltc = v[ell];
-
-                if unit_mse <= cfg.psi && ltc.abs() >= cfg.ltc_floor {
-                    // rescale to LTC = 1 (paper Definition 2.2) for the
-                    // shared Generator representation
-                    let coeffs: Vec<f64> = v[..ell].iter().map(|c| c / ltc).collect();
-                    let mse = unit_mse / (ltc * ltc);
-                    generators.push(Generator {
-                        coeffs,
-                        leading: bt.term,
-                        leading_parent: bt.parent,
-                        leading_var: bt.var,
-                        mse,
-                    });
-                } else {
-                    gram.append(&atb, btb)?;
-                    cols.push_col(&b_col); // copy into shard blocks; buffer reused
-                    o.push_product(bt.parent, bt.var)?;
-                    if o.len() >= cfg.max_o_terms {
-                        break 'degrees;
+                stats.degree_reached = d;
+                let mut start = 0usize;
+                while start < border.len() {
+                    let end = (start + budget).min(border.len());
+                    let chunk = &border[start..end];
+                    let recipes: Vec<PanelRecipe> = chunk
+                        .iter()
+                        .map(|bt| PanelRecipe { parent: bt.parent, var: bt.var })
+                        .collect();
+                    let panel = CandidatePanel::from_recipes(&cols, x, &recipes);
+                    let pstats = backend.gram_panel(&cols, &panel, true);
+                    stats.panel_passes += 1;
+                    stats.panel_cols += chunk.len();
+                    let mut accepted: Vec<usize> = Vec::new();
+                    for (ci, bt) in chunk.iter().enumerate() {
+                        atb_buf.clear();
+                        atb_buf.extend_from_slice(pstats.atb_col(ci));
+                        for &ai in &accepted {
+                            atb_buf.push(pstats.cross_at(ai, ci));
+                        }
+                        stats.cross_cache_hits += accepted.len();
+                        let btb = pstats.btb(ci);
+                        stats.oracle_calls += 1;
+                        match self.eigen_step(&gram, &atb_buf, btb, m)? {
+                            Some((coeffs, mse)) => generators.push(Generator {
+                                coeffs,
+                                leading: bt.term.clone(),
+                                leading_parent: bt.parent,
+                                leading_var: bt.var,
+                                mse,
+                            }),
+                            None => {
+                                gram.append(&atb_buf, btb)?;
+                                cols.push_col_from_panel(&panel, ci);
+                                o.push_product(bt.parent, bt.var)?;
+                                accepted.push(ci);
+                                if o.len() >= cfg.max_o_terms {
+                                    break 'degrees;
+                                }
+                            }
+                        }
+                    }
+                    start = end;
+                }
+            }
+        } else {
+            let mut b_col = vec![0.0f64; m];
+            'degrees_legacy: for d in 1..=cfg.max_degree {
+                let border = compute_border(&o, d);
+                if border.is_empty() {
+                    break;
+                }
+                stats.degree_reached = d;
+                for bt in &border {
+                    cols.fill_product(bt.parent, x, bt.var, &mut b_col);
+                    let (atb, btb) = backend.gram_stats(&cols, &b_col);
+                    stats.oracle_calls += 1;
+                    match self.eigen_step(&gram, &atb, btb, m)? {
+                        Some((coeffs, mse)) => generators.push(Generator {
+                            coeffs,
+                            leading: bt.term.clone(),
+                            leading_parent: bt.parent,
+                            leading_var: bt.var,
+                            mse,
+                        }),
+                        None => {
+                            gram.append(&atb, btb)?;
+                            cols.push_col(&b_col); // copy into shard blocks
+                            o.push_product(bt.parent, bt.var)?;
+                            if o.len() >= cfg.max_o_terms {
+                                break 'degrees_legacy;
+                            }
+                        }
                     }
                 }
             }
         }
         Ok(AbmModel { generators, o_terms: o, stats })
+    }
+
+    /// The §6.1 decision: eigendecompose the bordered Gram `[A b]ᵀ[A b]`
+    /// (assembled from the maintained B plus the cached `Aᵀb`/`bᵀb`) and
+    /// return `Some((coeffs, mse))` when the smallest singular direction
+    /// vanishes with a usable leading coefficient, `None` when the term
+    /// belongs in O.
+    fn eigen_step(
+        &self,
+        gram: &GramState,
+        atb: &[f64],
+        btb: f64,
+        m: usize,
+    ) -> Result<Option<(Vec<f64>, f64)>> {
+        let cfg = &self.config;
+        let ell = gram.len();
+        // bordered Gram [A b]ᵀ[A b]
+        let mut bt_gram = Matrix::zeros(ell + 1, ell + 1);
+        for i in 0..ell {
+            bt_gram.row_mut(i)[..ell].copy_from_slice(&gram.b().row(i)[..ell]);
+            bt_gram.set(i, ell, atb[i]);
+            bt_gram.set(ell, i, atb[i]);
+        }
+        bt_gram.set(ell, ell, btb);
+
+        let (lam, v) = smallest_eigenpair(&bt_gram)?;
+        let unit_mse = lam.max(0.0) / m as f64;
+        let ltc = v[ell];
+
+        if unit_mse <= cfg.psi && ltc.abs() >= cfg.ltc_floor {
+            // rescale to LTC = 1 (paper Definition 2.2) for the shared
+            // Generator representation
+            let coeffs: Vec<f64> = v[..ell].iter().map(|c| c / ltc).collect();
+            Ok(Some((coeffs, unit_mse / (ltc * ltc))))
+        } else {
+            Ok(None)
+        }
     }
 }
 

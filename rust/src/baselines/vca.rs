@@ -10,21 +10,34 @@
 //! they can be evaluated on unseen data (transform/test time).
 //!
 //! Backend-generic like OAVI/ABM: the two O(m·k) hot spots — projecting
-//! candidates against span(F) and the candidate Gram — are `Aᵀb` shapes,
-//! so they run through [`ComputeBackend::gram_stats`] over
-//! [`ColumnStore`]s sized by [`ComputeBackend::preferred_shards`].
-//! Results are deterministic per shard count, and native ↔ sharded are
-//! bit-identical for a fixed shard count (the data-plane contract pinned
-//! by `rust/tests/runtime_parity.rs`).
+//! candidates against span(F) and the candidate Gram — are panel shapes,
+//! so they run through [`ComputeBackend::gram_panel`] batches over
+//! [`ColumnStore`]s sized by [`ComputeBackend::preferred_shards`]:
+//! projections as chunked store-vs-panel blocks against the orthonormal
+//! F basis (one backend call per chunk instead of one per candidate),
+//! and the per-degree candidate Gram as ONE panel cross-Gram pass whose
+//! upper triangle is mirrored (the per-shard kernels are
+//! elementwise-commutative, so the mirror is bitwise exact).  The
+//! pre-panel per-candidate flow survives as
+//! [`Vca::fit_with_backend_per_candidate`] and is pinned bitwise equal
+//! in `rust/tests/runtime_parity.rs`.  Results are deterministic per
+//! shard count, and native ↔ sharded are bit-identical for a fixed
+//! shard count (the data-plane contract).
 //!
 //! The spurious-vanishing problem the paper discusses (§1.2, Table 3's
 //! spam row) is inherent to this normalization and intentionally left in.
 
-use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
+use crate::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::linalg::eigen::sym_eig;
 use crate::oavi::driver::FitStats;
+
+/// Candidate columns per projection-panel chunk: bounds the transient
+/// m×chunk panel copy while keeping per-chunk backend calls rare.
+/// Chunking is bitwise-neutral (each candidate's projection weights are
+/// an independent panel column).
+const VCA_PANEL_CHUNK: usize = 512;
 
 /// One node of the polynomial DAG.
 #[derive(Clone, Debug)]
@@ -269,12 +282,32 @@ impl Vca {
 
     /// Fit with an explicit streaming backend: candidate projections and
     /// the per-degree candidate Gram run through
-    /// [`ComputeBackend::gram_stats`], so `--backend sharded` accelerates
-    /// VCA the same way it accelerates OAVI/ABM.
+    /// [`ComputeBackend::gram_panel`] batches, so `--backend sharded`
+    /// accelerates VCA the same way it accelerates OAVI/ABM.
     pub fn fit_with_backend(
         &self,
         x: &Matrix,
         backend: &dyn ComputeBackend,
+    ) -> Result<VcaModel> {
+        self.fit_impl(x, backend, true)
+    }
+
+    /// Legacy correctness reference: one `gram_stats` call per candidate
+    /// projection and per candidate-Gram row.  Bitwise identical to
+    /// [`Vca::fit_with_backend`] (pinned in `tests/runtime_parity.rs`).
+    pub fn fit_with_backend_per_candidate(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+    ) -> Result<VcaModel> {
+        self.fit_impl(x, backend, false)
+    }
+
+    fn fit_impl(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+        panels: bool,
     ) -> Result<VcaModel> {
         let cfg = self.config;
         let m = x.rows();
@@ -363,13 +396,17 @@ impl Vca {
             stats.degree_reached = d;
             stats.oracle_calls += 1; // one eigendecomposition per degree
 
-            // ---- project against span(F): the weight vector ⟨cand, f_k⟩
-            // over the whole basis is one gram_stats call (Aᵀb with
-            // A = the orthonormal-basis store) — the backend hot spot
-            let mut proj_ids: Vec<usize> = Vec::with_capacity(cands.len());
-            let mut proj_store = ColumnStore::new(m, n_shards);
-            for &c in &cands {
-                let (ws, _btb) = backend.gram_stats(&f_store, &evals[c]);
+            // ---- project against span(F): the weight vectors ⟨cand, f_k⟩
+            // over the whole basis are store-vs-panel blocks (A = the
+            // orthonormal-basis store) — the backend hot spot.  Panel
+            // path: one gram_panel call per candidate chunk; legacy
+            // path: one gram_stats call per candidate.
+            fn project(
+                c: usize,
+                ws: &[f64],
+                f_basis: &[usize],
+                evals: &[Vec<f64>],
+            ) -> (Vec<(f64, usize)>, Vec<f64>) {
                 let mut terms = vec![(1.0, c)];
                 let mut ev = evals[c].clone();
                 for (&f, &w) in f_basis.iter().zip(ws.iter()) {
@@ -380,26 +417,83 @@ impl Vca {
                         }
                     }
                 }
-                proj_store.push_col(&ev);
-                let id = push(
-                    &mut nodes,
-                    &mut degrees,
-                    &mut evals,
-                    VcaNode::LinComb(terms),
-                    d,
-                    ev,
-                );
-                proj_ids.push(id);
+                (terms, ev)
+            }
+            let mut proj_ids: Vec<usize> = Vec::with_capacity(cands.len());
+            // projected columns mirror into a CandidatePanel (panel path:
+            // feeds the one cross-Gram pass) or a ColumnStore (legacy
+            // path: feeds the per-candidate Gram rows)
+            let mut proj_panel = CandidatePanel::new_like(&f_store);
+            let mut proj_store = ColumnStore::new(m, n_shards);
+            if panels {
+                // same memory clamp as OAVI/ABM: never let the transient
+                // m×chunk panel copy exceed the ~256MB budget at large m
+                let chunk_cols = CandidatePanel::budget_cols(VCA_PANEL_CHUNK, m);
+                for chunk in cands.chunks(chunk_cols) {
+                    let mut cand_panel = CandidatePanel::new_like(&f_store);
+                    for &c in chunk {
+                        cand_panel.push_col(&evals[c]);
+                    }
+                    // projections need no cross block — skip the k×k triangle
+                    let ws_all = backend.gram_panel(&f_store, &cand_panel, false);
+                    stats.panel_passes += 1;
+                    stats.panel_cols += chunk.len();
+                    for (idx, &c) in chunk.iter().enumerate() {
+                        let (terms, ev) = project(c, ws_all.atb_col(idx), &f_basis, &evals);
+                        proj_panel.push_col(&ev);
+                        let id = push(
+                            &mut nodes,
+                            &mut degrees,
+                            &mut evals,
+                            VcaNode::LinComb(terms),
+                            d,
+                            ev,
+                        );
+                        proj_ids.push(id);
+                    }
+                }
+            } else {
+                for &c in &cands {
+                    let (ws, _btb) = backend.gram_stats(&f_store, &evals[c]);
+                    let (terms, ev) = project(c, &ws, &f_basis, &evals);
+                    proj_store.push_col(&ev);
+                    let id = push(
+                        &mut nodes,
+                        &mut degrees,
+                        &mut evals,
+                        VcaNode::LinComb(terms),
+                        d,
+                        ev,
+                    );
+                    proj_ids.push(id);
+                }
             }
 
-            // ---- eigendecompose the candidate Gram, one backend-executed
-            // Aᵀb per row (rows are exactly symmetric: the per-shard
-            // kernels are elementwise-commutative in their two operands)
+            // ---- eigendecompose the candidate Gram.  Panel path: ONE
+            // cross-Gram pass over the projection panel, upper triangle
+            // mirrored (the per-shard kernels are elementwise-commutative
+            // in their two operands, so the mirror carries exactly the
+            // bits the legacy per-row computation produces — at half the
+            // FLOPs and one backend call instead of k).
             let k = proj_ids.len();
             let mut gram = Matrix::zeros(k, k);
-            for (i, &pid) in proj_ids.iter().enumerate() {
-                let (row, _btb) = backend.gram_stats(&proj_store, &evals[pid]);
-                gram.row_mut(i).copy_from_slice(&row);
+            if panels {
+                let empty = ColumnStore::new(m, n_shards);
+                let ps = backend.gram_panel(&empty, &proj_panel, true);
+                stats.panel_passes += 1;
+                stats.panel_cols += k;
+                for i in 0..k {
+                    for j in i..k {
+                        let v = ps.cross_at(i, j);
+                        gram.set(i, j, v);
+                        gram.set(j, i, v);
+                    }
+                }
+            } else {
+                for (i, &pid) in proj_ids.iter().enumerate() {
+                    let (row, _btb) = backend.gram_stats(&proj_store, &evals[pid]);
+                    gram.row_mut(i).copy_from_slice(&row);
+                }
             }
             let eig = sym_eig(&gram, 40)?;
 

@@ -190,6 +190,17 @@ impl PoolHandle {
         self.shared.live_workers.load(Ordering::SeqCst)
     }
 
+    /// Multi-job batches dispatched through this pool so far (single-job
+    /// submissions run inline on the caller and are not counted; the
+    /// one-time calibration's hand-off probes are).  The panel data
+    /// plane's "one dispatch per (degree, panel chunk)" contract is
+    /// asserted against deltas of this counter in
+    /// `tests/runtime_parity.rs` and reported by
+    /// `benches/micro_gram_panel.rs`.
+    pub fn batches_dispatched(&self) -> u64 {
+        self.shared.next_batch.load(Ordering::Relaxed)
+    }
+
     /// Split the worker budget between `outer_jobs` outer jobs and the
     /// per-job inner (shard) axis: `(outer, inner)` with
     /// `outer × inner ≤ workers` and both ≥ 1.  Few outer jobs on a wide
@@ -496,6 +507,11 @@ impl ThreadPool {
     /// See [`PoolHandle::adaptive_min_work`].
     pub fn adaptive_min_work(&self) -> usize {
         self.handle().adaptive_min_work()
+    }
+
+    /// See [`PoolHandle::batches_dispatched`].
+    pub fn batches_dispatched(&self) -> u64 {
+        self.handle().batches_dispatched()
     }
 }
 

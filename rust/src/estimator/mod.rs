@@ -111,6 +111,38 @@ impl FitReport {
     pub fn total_size(&self) -> usize {
         self.n_generators + self.n_order_terms
     }
+
+    /// One-line JSON document of the report — sizes, wall-clock, and the
+    /// raw [`FitStats`] counters (incl. the Table-3 panel attribution:
+    /// `panel_passes`/`panel_cols`/`cross_cache_hits`, plus AGD
+    /// `warm_starts`), consumed by the CLI and the benches.
+    pub fn to_json(&self) -> String {
+        let s = &self.stats;
+        format!(
+            "{{\"name\":\"{}\",\"n_generators\":{},\"n_order_terms\":{},\
+             \"wall_secs\":{:?},\"oracle_calls\":{},\"ihb_solves\":{},\
+             \"solver_runs\":{},\"solver_iters\":{},\"warm_starts\":{},\
+             \"wihb_resolves\":{},\"gram_rebuilds\":{},\
+             \"inf_disabled_ihb\":{},\"degree_reached\":{},\
+             \"panel_passes\":{},\"panel_cols\":{},\"cross_cache_hits\":{}}}",
+            crate::util::json_escape(&self.name),
+            self.n_generators,
+            self.n_order_terms,
+            self.wall_secs,
+            s.oracle_calls,
+            s.ihb_solves,
+            s.solver_runs,
+            s.solver_iters,
+            s.warm_starts,
+            s.wihb_resolves,
+            s.gram_rebuilds,
+            s.inf_disabled_ihb,
+            s.degree_reached,
+            s.panel_passes,
+            s.panel_cols,
+            s.cross_cache_hits,
+        )
+    }
 }
 
 /// A fitted vanishing-ideal model: the per-class (FT) feature-block
@@ -602,6 +634,28 @@ mod tests {
             assert!(report.wall_secs > 0.0, "{}: no wall-clock", cfg.name());
             assert_eq!(report.total_size(), model.total_size());
         }
+    }
+
+    #[test]
+    fn fit_report_json_carries_panel_counters() {
+        let x = parabola(120, 5);
+        let model =
+            EstimatorConfig::parse("cgavi-ihb", 0.005).unwrap().fit(&x, &NativeBackend).unwrap();
+        let json = model.report().to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
+        for key in [
+            "\"name\":\"CGAVI-IHB\"",
+            "\"panel_passes\":",
+            "\"panel_cols\":",
+            "\"cross_cache_hits\":",
+            "\"warm_starts\":",
+            "\"oracle_calls\":",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        // the default fit runs through panels, so the counters are live
+        assert!(model.report().stats.panel_passes > 0);
+        assert_eq!(model.report().stats.panel_cols, model.report().stats.oracle_calls);
     }
 
     #[test]

@@ -5,9 +5,14 @@
 //! OAVI appends one column `b = u(X)` to the evaluation matrix `A`
 //! whenever a border term u joins `O`.  [`GramState::append`] performs the
 //! O(ℓ²) block-inverse update of Theorem 4.9 (the O(mℓ) part — computing
-//! `Aᵀb`/`bᵀb` — lives in the streaming backend, not here).  A failed
+//! `Aᵀb`/`bᵀb` — lives in the streaming backend, not here).  Under the
+//! degree-batched panel flow the trailing entries of that `Aᵀb` vector
+//! are served from the cached panel cross-Gram
+//! (`backend::PanelStats::cross_at`) rather than a data pass: the append
+//! consumes the same numbers either way, so the maintained `(B, N)` is
+//! bitwise independent of how the driver batched the degree.  A failed
 //! Schur guard signals numerical rank deficiency; callers recover with
-//! [`GramState::rebuild`] (Cholesky + jitter).
+//! [`GramState::rebuild_inverse`] / a store rebuild (Cholesky + jitter).
 
 use crate::backend::store::ColumnStore;
 use crate::error::{AviError, Result};

@@ -291,6 +291,14 @@ fn cmd_fit(opts: &HashMap<String, String>) -> Result<()> {
     println!("|G|       = {}", transformer.n_generators());
     println!("avg deg   = {:.2}", transformer.avg_degree());
     println!("SPAR      = {:.2}", transformer.sparsity());
+    let agg = transformer.aggregate_stats();
+    println!(
+        "panels    = {} passes / {} cols, cross-cache hits = {}, warm starts = {}",
+        agg.panel_passes, agg.panel_cols, agg.cross_cache_hits, agg.warm_starts
+    );
+    for (k, c) in transformer.per_class.iter().enumerate() {
+        println!("report[{k}] = {}", c.report().to_json());
+    }
     Ok(())
 }
 
@@ -326,6 +334,11 @@ fn cmd_pipeline(opts: &HashMap<String, String>) -> Result<()> {
     println!("test time   = {}s", sci(test_secs));
     println!("test error  = {:.2}%", err * 100.0);
     println!("|G|+|O|     = {}", model.transformer.total_size());
+    let agg = model.transformer.aggregate_stats();
+    println!(
+        "panels      = {} passes / {} cols, cross-cache hits = {}, warm starts = {}",
+        agg.panel_passes, agg.panel_cols, agg.cross_cache_hits, agg.warm_starts
+    );
     if let Some(path) = opts.get("save") {
         avi_scale::estimator::persist::save(&model, std::path::Path::new(path))?;
         println!("saved       = {path}");

@@ -43,6 +43,14 @@ pub struct OaviConfig {
     pub max_degree: u32,
     /// Safety cap on |O| (memory guard for adversarial data).
     pub max_o_terms: usize,
+    /// Column cap per candidate-panel chunk: each degree-d border is
+    /// processed in chunks of at most this many candidates through one
+    /// `gram_panel` pass (clamped to ≥ 1, and further capped by a ~256MB
+    /// memory bound at large m — see
+    /// `backend::CandidatePanel::budget_cols`).  Chunking changes
+    /// dispatch granularity only; results are bitwise identical for any
+    /// value.
+    pub panel_budget_cols: usize,
 }
 
 impl OaviConfig {
@@ -57,6 +65,7 @@ impl OaviConfig {
             max_solver_iters: 10_000,
             max_degree: 12,
             max_o_terms: 5_000,
+            panel_budget_cols: 512,
         }
     }
 

@@ -1,27 +1,47 @@
-//! OAVI driver — Algorithm 1 with the §4 scalability machinery.
+//! OAVI driver — Algorithm 1 with the §4 scalability machinery, on a
+//! **degree-batched candidate panel** data flow.
 //!
-//! Per border term u (DegLex order within each degree-d border):
+//! Per degree d, the driver fills one [`crate::backend::CandidatePanel`]
+//! with every `∂_d O` border column (evaluated from the parent columns
+//! in one pass), makes **one** [`crate::backend::ComputeBackend::gram_panel`]
+//! call per panel chunk (the ℓ×k store block + the k×k cross-Gram upper
+//! triangle — one pool dispatch per chunk on the sharded backend instead
+//! of one per candidate), and then walks the candidates in DegLex order:
 //!
-//! 1. **stats** (O(mℓ), streaming backend): `b = u(X)` from the parent
-//!    column, then `(Aᵀb, bᵀb)`.
+//! 1. **stats**: candidate c's `Aᵀb` is its cached panel column plus —
+//!    for every earlier candidate of this chunk that joined O — the
+//!    cached cross entry `C[i, c]`, appended in O(1) per pair with no
+//!    data pass; `bᵀb` is the cross diagonal.
 //! 2. **oracle**: with IHB, the closed form `c = −(AᵀA)^{-1}Aᵀb` plus
 //!    residual decides vanishing in O(ℓ²); otherwise the configured
-//!    Frank–Wolfe/AGD solver runs (with ψ-certificates for early exit).
+//!    Frank–Wolfe/AGD solver runs (with ψ-certificates for early exit;
+//!    the unconstrained AGD path warm-starts from the previous oracle
+//!    solution).
 //! 3. **accept** → generator with LTC = 1 (WIHB: re-solve with BPCG from
-//!    a vertex for sparsity); **reject** → u joins O and the inverse Gram
-//!    is appended via Theorem 4.9.
+//!    a vertex for sparsity); **reject** → u joins O: the inverse Gram
+//!    is appended via Theorem 4.9 **consuming the same cached cross
+//!    entries**, and the panel column is copied into the store
+//!    shard-to-shard.
+//!
+//! Panels are chunked under `panel_budget_cols` (plus a ~256MB memory
+//! cap) so `m × |∂d|` never blows up at m ≫ 1e5.  The pre-panel flow —
+//! one `gram_stats` pass per border term — is kept as
+//! [`Oavi::fit_with_backend_per_candidate`]: because every Gram entry in
+//! both flows shares the per-entry dot discipline of
+//! `backend/store.rs`, the two paths produce **bitwise identical**
+//! models (pinned in `tests/runtime_parity.rs`).
 //!
 //! The (INF) guard (§4.4.3): if the closed-form solution leaves the
 //! ℓ1-ball, IHB is disabled for the remainder of the fit (the paper's
 //! "approach 2", which preserves the generalization bounds).
 
-use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
+use crate::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend, PanelRecipe};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::linalg::gram::GramState;
 use crate::linalg::norm1;
 use crate::oavi::config::{IhbMode, OaviConfig};
-use crate::poly::border::compute_border;
+use crate::poly::border::{compute_border, BorderTerm};
 use crate::poly::eval::TermSet;
 use crate::poly::poly::{Generator, GeneratorSet};
 use crate::solvers::{GramProblem, SolverKind, SolverParams, Termination};
@@ -40,6 +60,10 @@ pub struct FitStats {
     pub solver_runs: usize,
     /// Total solver iterations.
     pub solver_iters: usize,
+    /// Solver runs warm-started from the previous oracle solution
+    /// (unconstrained AGD path — the paper's IHB idea applied to the
+    /// post-(INF)/no-inverse regime).
+    pub warm_starts: usize,
     /// WIHB sparse re-solves.
     pub wihb_resolves: usize,
     /// Theorem 4.9 appends that failed the Schur guard and fell back to a
@@ -49,6 +73,14 @@ pub struct FitStats {
     pub inf_disabled_ihb: bool,
     /// Final border degree processed.
     pub degree_reached: u32,
+    /// `gram_panel` passes (one per (degree, panel chunk); 0 on the
+    /// legacy per-candidate path).
+    pub panel_passes: usize,
+    /// Candidate columns evaluated through panels (Σ chunk widths).
+    pub panel_cols: usize,
+    /// `Aᵀb` entries served from the cached panel cross-Gram instead of
+    /// a data pass (one per (accepted, later-candidate) pair per chunk).
+    pub cross_cache_hits: usize,
 }
 
 /// Fitted OAVI output `(G, O)` plus diagnostics.
@@ -58,6 +90,10 @@ pub struct OaviModel {
     pub o_terms: TermSet,
     pub config: OaviConfig,
     pub stats: FitStats,
+    /// Final maintained Gram state `(B, N)` over the O columns — exposed
+    /// so the panel parity suite can pin the inverse bitwise; `N` is the
+    /// stale 1×1 seed when the config ran without inverse tracking.
+    pub final_gram: GramState,
 }
 
 impl OaviModel {
@@ -91,11 +127,33 @@ impl Oavi {
         self.fit_with_backend(x, &NativeBackend)
     }
 
-    /// Fit with an explicit backend (native or PJRT).
+    /// Fit with an explicit backend (native, sharded, or PJRT) through
+    /// the degree-batched candidate-panel path — the default.
     pub fn fit_with_backend(
         &self,
         x: &Matrix,
         backend: &dyn ComputeBackend,
+    ) -> Result<OaviModel> {
+        self.fit_impl(x, backend, true)
+    }
+
+    /// Legacy correctness reference: one `gram_stats` pass per border
+    /// term (the pre-panel data flow).  Bitwise identical to
+    /// [`Oavi::fit_with_backend`] — the contract `tests/runtime_parity.rs`
+    /// pins and `benches/micro_gram_panel.rs` measures against.
+    pub fn fit_with_backend_per_candidate(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+    ) -> Result<OaviModel> {
+        self.fit_impl(x, backend, false)
+    }
+
+    fn fit_impl(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+        panels: bool,
     ) -> Result<OaviModel> {
         let cfg = self.config;
         cfg.validate()?;
@@ -124,72 +182,177 @@ impl Oavi {
             radius,
             psi: Some(cfg.psi),
         };
+        // previous oracle solution for the unconstrained AGD warm start
+        let mut agd_warm: Option<Vec<f64>> = None;
 
-        // Perf pass #4, tightened by the ColumnStore refactor: ONE
-        // candidate buffer for the whole fit.  Accepting a term into O
-        // copies the buffer into the store's shard blocks (amortized
-        // append) and reuses it — no allocation on either oracle outcome.
-        let mut cand_buf = vec![0.0f64; m];
-        'degrees: for d in 1..=cfg.max_degree {
-            let border = compute_border(&o, d);
-            if border.is_empty() {
-                break;
-            }
-            stats.degree_reached = d;
-            for bt in border {
-                // candidate column b = parent(X) ⊙ x_var  — O(m)
-                cols.fill_product(bt.parent, x, bt.var, &mut cand_buf);
-                // streaming stats — O(mℓ), the training hot spot
-                let (atb, btb) = backend.gram_stats(&cols, &cand_buf);
-                stats.oracle_calls += 1;
-
-                let (coeffs, mse) = self.oracle(
-                    &mut gram,
-                    &atb,
-                    btb,
-                    m,
-                    &mut ihb_active,
-                    &solver_params,
-                    &mut stats,
-                );
-
-                if mse <= cfg.psi {
-                    // (ψ,1)-approximately vanishing generator found
-                    let coeffs = if cfg.ihb == IhbMode::Wihb {
-                        self.wihb_resolve(&gram, &atb, btb, m, &solver_params, coeffs, &mut stats)
-                    } else {
-                        coeffs
-                    };
-                    generators.push(Generator {
-                        coeffs,
-                        leading: bt.term,
-                        leading_parent: bt.parent,
-                        leading_var: bt.var,
-                        mse,
-                    });
-                } else {
-                    // u joins O: append column + Theorem 4.9 inverse update
-                    match gram.append(&atb, btb) {
-                        Ok(()) => {}
-                        Err(AviError::SchurNotPositive(_)) => {
-                            // numerically dependent column: rebuild from
-                            // scratch with jitter (keeps OAVI running on
-                            // adversarial/duplicated data)
-                            stats.gram_rebuilds += 1;
-                            gram = GramState::from_store_with_candidate(&cols, &cand_buf)?;
+        if panels {
+            let budget = CandidatePanel::budget_cols(cfg.panel_budget_cols, m);
+            // one reused Aᵀb buffer: panel block prefix + cached cross tail
+            let mut atb_buf: Vec<f64> = Vec::new();
+            'degrees: for d in 1..=cfg.max_degree {
+                let border = compute_border(&o, d);
+                if border.is_empty() {
+                    break;
+                }
+                stats.degree_reached = d;
+                let mut start = 0usize;
+                while start < border.len() {
+                    let end = (start + budget).min(border.len());
+                    let chunk = &border[start..end];
+                    // evaluate the whole chunk from its parent columns in
+                    // one pass, then ONE panel-Gram call for the chunk
+                    let recipes: Vec<PanelRecipe> = chunk
+                        .iter()
+                        .map(|bt| PanelRecipe { parent: bt.parent, var: bt.var })
+                        .collect();
+                    let panel = CandidatePanel::from_recipes(&cols, x, &recipes);
+                    let pstats = backend.gram_panel(&cols, &panel, true);
+                    stats.panel_passes += 1;
+                    stats.panel_cols += chunk.len();
+                    // panel indices (in this chunk) that joined O, in
+                    // acceptance order = store column order
+                    let mut accepted: Vec<usize> = Vec::new();
+                    for (ci, bt) in chunk.iter().enumerate() {
+                        // within-degree dependence resolved incrementally:
+                        // the store block is cached, each accepted earlier
+                        // candidate contributes its cross-Gram entry in O(1)
+                        atb_buf.clear();
+                        atb_buf.extend_from_slice(pstats.atb_col(ci));
+                        for &ai in &accepted {
+                            atb_buf.push(pstats.cross_at(ai, ci));
                         }
-                        Err(e) => return Err(e),
+                        stats.cross_cache_hits += accepted.len();
+                        let btb = pstats.btb(ci);
+                        stats.oracle_calls += 1;
+                        let outcome = self.candidate_step(
+                            bt,
+                            &atb_buf,
+                            btb,
+                            &|| panel.col(ci),
+                            &cols,
+                            &mut gram,
+                            &mut ihb_active,
+                            &solver_params,
+                            &mut stats,
+                            &mut agd_warm,
+                        )?;
+                        match outcome {
+                            Some(generator) => generators.push(generator),
+                            None => {
+                                cols.push_col_from_panel(&panel, ci);
+                                o.push_product(bt.parent, bt.var)?;
+                                accepted.push(ci);
+                                if o.len() >= cfg.max_o_terms {
+                                    break 'degrees;
+                                }
+                            }
+                        }
                     }
-                    cols.push_col(&cand_buf);
-                    o.push_product(bt.parent, bt.var)?;
-                    if o.len() >= cfg.max_o_terms {
-                        break 'degrees;
+                    start = end;
+                }
+            }
+        } else {
+            // Perf pass #4, tightened by the ColumnStore refactor: ONE
+            // candidate buffer for the whole fit.  Accepting a term into O
+            // copies the buffer into the store's shard blocks (amortized
+            // append) and reuses it — no allocation on either outcome.
+            let mut cand_buf = vec![0.0f64; m];
+            'degrees_legacy: for d in 1..=cfg.max_degree {
+                let border = compute_border(&o, d);
+                if border.is_empty() {
+                    break;
+                }
+                stats.degree_reached = d;
+                for bt in &border {
+                    // candidate column b = parent(X) ⊙ x_var  — O(m)
+                    cols.fill_product(bt.parent, x, bt.var, &mut cand_buf);
+                    // streaming stats — O(mℓ) per candidate (the cost the
+                    // panel path batches away)
+                    let (atb, btb) = backend.gram_stats(&cols, &cand_buf);
+                    stats.oracle_calls += 1;
+                    let outcome = self.candidate_step(
+                        bt,
+                        &atb,
+                        btb,
+                        &|| cand_buf.clone(),
+                        &cols,
+                        &mut gram,
+                        &mut ihb_active,
+                        &solver_params,
+                        &mut stats,
+                        &mut agd_warm,
+                    )?;
+                    match outcome {
+                        Some(generator) => generators.push(generator),
+                        None => {
+                            cols.push_col(&cand_buf);
+                            o.push_product(bt.parent, bt.var)?;
+                            if o.len() >= cfg.max_o_terms {
+                                break 'degrees_legacy;
+                            }
+                        }
                     }
                 }
             }
         }
 
-        Ok(OaviModel { generators, o_terms: o, config: cfg, stats })
+        Ok(OaviModel { generators, o_terms: o, config: cfg, stats, final_gram: gram })
+    }
+
+    /// One candidate: oracle → `Some(generator)` (vanishing) or `None`
+    /// (the term belongs in O; `gram` has been extended via Theorem 4.9,
+    /// consuming the caller's cached `Aᵀb`/`bᵀb`).  `cand` lazily
+    /// materializes the full candidate column — touched only on the rare
+    /// Schur-guard rebuild, so the panel path never pays a per-candidate
+    /// O(m) copy.
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_step(
+        &self,
+        bt: &BorderTerm,
+        atb: &[f64],
+        btb: f64,
+        cand: &dyn Fn() -> Vec<f64>,
+        cols: &ColumnStore,
+        gram: &mut GramState,
+        ihb_active: &mut bool,
+        params: &SolverParams,
+        stats: &mut FitStats,
+        agd_warm: &mut Option<Vec<f64>>,
+    ) -> Result<Option<Generator>> {
+        let cfg = &self.config;
+        let m = gram.samples();
+        let (coeffs, mse) =
+            self.oracle(gram, atb, btb, m, ihb_active, params, stats, agd_warm);
+        if mse <= cfg.psi {
+            // (ψ,1)-approximately vanishing generator found
+            let coeffs = if cfg.ihb == IhbMode::Wihb {
+                self.wihb_resolve(gram, atb, btb, m, params, coeffs, stats)
+            } else {
+                coeffs
+            };
+            Ok(Some(Generator {
+                coeffs,
+                leading: bt.term.clone(),
+                leading_parent: bt.parent,
+                leading_var: bt.var,
+                mse,
+            }))
+        } else {
+            // u joins O: Theorem 4.9 inverse append from the cached stats
+            match gram.append(atb, btb) {
+                Ok(()) => {}
+                Err(AviError::SchurNotPositive(_)) => {
+                    // numerically dependent column: rebuild from scratch
+                    // with jitter (keeps OAVI running on adversarial /
+                    // duplicated data)
+                    stats.gram_rebuilds += 1;
+                    let cand_col = cand();
+                    *gram = GramState::from_store_with_candidate(cols, &cand_col)?;
+                }
+                Err(e) => return Err(e),
+            }
+            Ok(None)
+        }
     }
 
     /// One oracle call: returns `(coeffs, MSE)` for the candidate term.
@@ -203,6 +366,7 @@ impl Oavi {
         ihb_active: &mut bool,
         params: &SolverParams,
         stats: &mut FitStats,
+        agd_warm: &mut Option<Vec<f64>>,
     ) -> (Vec<f64>, f64) {
         let cfg = &self.config;
         if *ihb_active {
@@ -219,11 +383,30 @@ impl Oavi {
                 return (c, mse);
             }
         }
-        // full solver run (cold start)
         let p = GramProblem { b: gram.b(), atb, btb, m };
-        let res = cfg.solver.solve(&p, params);
+        // Warm start (ISSUE 5 satellite): the paper's IHB is "hand the
+        // oracle a strong starting point".  The unconstrained AGD path
+        // has no feasibility requirement on y0, so the previous oracle
+        // solution (zero-padded to the grown dimension) is always a
+        // legal warm start; the constrained FW variants keep the cold
+        // start — after (INF) the last point may lie outside the ℓ1
+        // ball, which is exactly why IHB was disabled.
+        let warm_agd = cfg.solver == SolverKind::Agd && !cfg.constrained;
+        let res = match (warm_agd, agd_warm.as_ref()) {
+            (true, Some(prev)) => {
+                let mut y0 = vec![0.0f64; p.dim()];
+                let len = prev.len().min(y0.len());
+                y0[..len].copy_from_slice(&prev[..len]);
+                stats.warm_starts += 1;
+                cfg.solver.solve_warm(&p, params, &y0)
+            }
+            _ => cfg.solver.solve(&p, params),
+        };
         stats.solver_runs += 1;
         stats.solver_iters += res.iters;
+        if warm_agd {
+            *agd_warm = Some(res.y.clone());
+        }
         (res.y, res.f)
     }
 
@@ -434,6 +617,66 @@ mod tests {
     fn empty_data_errors() {
         let x = Matrix::zeros(0, 3);
         assert!(Oavi::new(OaviConfig::cgavi_ihb(0.01)).fit(&x).is_err());
+    }
+
+    #[test]
+    fn panel_counters_attribute_the_default_path() {
+        let x = parabola_data(120, 17);
+        let model = Oavi::new(OaviConfig::cgavi_ihb(0.005)).fit(&x).unwrap();
+        // every oracle call went through a panel, one pass per (degree, chunk)
+        assert!(model.stats.panel_passes > 0);
+        assert_eq!(model.stats.panel_cols, model.stats.oracle_calls);
+        assert!(model.stats.panel_passes >= model.stats.degree_reached as usize);
+        // the legacy reference path reports zero panel work
+        let legacy = Oavi::new(OaviConfig::cgavi_ihb(0.005))
+            .fit_with_backend_per_candidate(&x, &NativeBackend)
+            .unwrap();
+        assert_eq!(legacy.stats.panel_passes, 0);
+        assert_eq!(legacy.stats.panel_cols, 0);
+        assert_eq!(legacy.stats.cross_cache_hits, 0);
+        assert_eq!(legacy.generators.len(), model.generators.len());
+    }
+
+    #[test]
+    fn tiny_panel_budget_is_bitwise_equal_to_default() {
+        let x = parabola_data(90, 19);
+        let mut tiny = OaviConfig::cgavi_ihb(0.01);
+        tiny.panel_budget_cols = 1; // every chunk is a single candidate
+        let a = Oavi::new(OaviConfig::cgavi_ihb(0.01)).fit(&x).unwrap();
+        let b = Oavi::new(tiny).fit(&x).unwrap();
+        assert_eq!(a.o_terms.len(), b.o_terms.len());
+        assert_eq!(a.generators.len(), b.generators.len());
+        for (ga, gb) in a.generators.iter().zip(b.generators.iter()) {
+            assert_eq!(ga.mse.to_bits(), gb.mse.to_bits());
+            for (ca, cb) in ga.coeffs.iter().zip(gb.coeffs.iter()) {
+                assert_eq!(ca.to_bits(), cb.to_bits());
+            }
+        }
+        // single-candidate chunks never cache-hit; multi-candidate may
+        assert_eq!(b.stats.cross_cache_hits, 0);
+        assert!(b.stats.panel_passes >= a.stats.panel_passes);
+    }
+
+    #[test]
+    fn unconstrained_agd_warm_starts_from_previous_solution() {
+        let mut rng = Rng::new(29);
+        let mut x = Matrix::zeros(80, 2);
+        for i in 0..80 {
+            for j in 0..2 {
+                x.set(i, j, rng.uniform());
+            }
+        }
+        let model = Oavi::new(OaviConfig::agdavi(0.01)).fit(&x).unwrap();
+        assert!(model.stats.solver_runs > 1, "need several AGD runs");
+        // every run after the first is warm-started
+        assert_eq!(model.stats.warm_starts, model.stats.solver_runs - 1);
+        // generators must still vanish on the training data
+        for (gi, mse) in model.generator_set().mse_on(&x).iter().enumerate() {
+            assert!(*mse <= 0.01 * (1.0 + 1e-6) + 1e-10, "generator {gi}: {mse}");
+        }
+        // constrained variants keep the cold start
+        let cg = Oavi::new(OaviConfig::cgavi(0.01)).fit(&x).unwrap();
+        assert_eq!(cg.stats.warm_starts, 0);
     }
 
     #[test]

@@ -92,6 +92,30 @@ impl FittedTransformer {
         }
     }
 
+    /// Sum of the per-class raw fit counters — the pipeline-level view
+    /// of the Table-3 attribution stats (panel passes/cols, cross-cache
+    /// hits, AGD warm starts, solver work).  Counters add across
+    /// classes; `inf_disabled_ihb` ORs; `degree_reached` takes the max.
+    pub fn aggregate_stats(&self) -> crate::oavi::FitStats {
+        let mut out = crate::oavi::FitStats::default();
+        for c in &self.per_class {
+            let s = &c.report().stats;
+            out.oracle_calls += s.oracle_calls;
+            out.ihb_solves += s.ihb_solves;
+            out.solver_runs += s.solver_runs;
+            out.solver_iters += s.solver_iters;
+            out.warm_starts += s.warm_starts;
+            out.wihb_resolves += s.wihb_resolves;
+            out.gram_rebuilds += s.gram_rebuilds;
+            out.inf_disabled_ihb |= s.inf_disabled_ihb;
+            out.degree_reached = out.degree_reached.max(s.degree_reached);
+            out.panel_passes += s.panel_passes;
+            out.panel_cols += s.panel_cols;
+            out.cross_cache_hits += s.cross_cache_hits;
+        }
+        out
+    }
+
     /// (SPAR) pooled across classes (numerators/denominators pooled
     /// rather than averaging ratios).
     pub fn sparsity(&self) -> f64 {

@@ -11,7 +11,8 @@
 
 use std::sync::Arc;
 
-use crate::backend::{ColumnStore, ComputeBackend, NativeBackend};
+use crate::backend::store::{gram_panel_seq, panel_cross_partial};
+use crate::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend, PanelStats};
 use crate::linalg::dense::Matrix;
 use crate::runtime::PjrtRuntime;
 
@@ -73,6 +74,41 @@ impl ComputeBackend for XlaBackend {
             }
         }
         (atb, btb)
+    }
+
+    fn gram_panel(
+        &self,
+        cols: &ColumnStore,
+        panel: &CandidatePanel,
+        want_cross: bool,
+    ) -> PanelStats {
+        let ell = cols.len();
+        let k = panel.len();
+        if self.rt.gram_artifact_for(ell).is_none() {
+            // beyond every artifact width: exact native panel path
+            return gram_panel_seq(cols, panel, want_cross);
+        }
+        // Store-vs-panel block through the AOT gram artifact, one tiled
+        // pass per panel column (gram_stats falls back natively on any
+        // tile error).  The k×k cross triangle stays on the exact f64
+        // native kernel: its entries feed the Theorem 4.9 inverse append,
+        // where f32 rounding would accumulate into the maintained N.
+        let mut atb = Vec::with_capacity(ell * k);
+        for c in 0..k {
+            let b = panel.col(c);
+            let (a, _btb) = self.gram_stats(cols, &b);
+            atb.extend_from_slice(&a);
+        }
+        let mut cross = vec![0.0f64; if want_cross { k * (k + 1) / 2 } else { 0 }];
+        if want_cross {
+            for s in 0..panel.n_shards() {
+                let pc = panel_cross_partial(panel, s, 0..k);
+                for (a, p) in cross.iter_mut().zip(pc.iter()) {
+                    *a += *p;
+                }
+            }
+        }
+        PanelStats::new(ell, k, atb, cross)
     }
 
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {

@@ -17,13 +17,14 @@ use std::sync::Arc;
 use avi_scale::backend::{
     ColumnStore, ComputeBackend, NativeBackend, PinnedShards, ShardedBackend,
 };
-use avi_scale::baselines::abm::{Abm, AbmConfig};
+use avi_scale::baselines::abm::{Abm, AbmConfig, AbmModel};
 use avi_scale::baselines::vca::{Vca, VcaConfig};
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::estimator::EstimatorConfig;
 use avi_scale::linalg::dense::Matrix;
-use avi_scale::oavi::{Oavi, OaviConfig};
+use avi_scale::oavi::{Oavi, OaviConfig, OaviModel};
+use avi_scale::util::proptest::property;
 use avi_scale::ordering::FeatureOrdering;
 use avi_scale::pipeline::gridsearch::{grid_search_two_level, GridParallelism};
 use avi_scale::pipeline::{train_pipeline, train_pipeline_pooled, PipelineConfig};
@@ -339,6 +340,232 @@ fn pooled_per_class_pipeline_bitwise_matches_native_on_single_shard_stores() {
         assert_eq!(a.to_bits(), b.to_bits(), "pooled (FT) features diverge");
     }
     assert_eq!(seq.predict(&probe.x), par.predict(&probe.x));
+}
+
+// ---------------------------------------------------------------------
+// degree-batched panels ↔ legacy per-candidate (ISSUE 5)
+// ---------------------------------------------------------------------
+
+/// Bitwise model equality: generators (leading term, coeff bits, mse
+/// bits), O terms, and the final maintained inverse-Gram `(B, N)`.
+fn assert_oavi_models_bitwise(a: &OaviModel, b: &OaviModel, ctx: &str) -> Result<(), String> {
+    if a.o_terms.len() != b.o_terms.len() {
+        return Err(format!("{ctx}: |O| {} vs {}", a.o_terms.len(), b.o_terms.len()));
+    }
+    if a.o_terms.terms() != b.o_terms.terms() {
+        return Err(format!("{ctx}: O terms diverge"));
+    }
+    if a.generators.len() != b.generators.len() {
+        return Err(format!("{ctx}: |G| {} vs {}", a.generators.len(), b.generators.len()));
+    }
+    for (gi, (ga, gb)) in a.generators.iter().zip(b.generators.iter()).enumerate() {
+        if ga.leading != gb.leading {
+            return Err(format!("{ctx}: generator {gi} leading term diverges"));
+        }
+        if ga.mse.to_bits() != gb.mse.to_bits() {
+            return Err(format!("{ctx}: generator {gi} mse bits diverge"));
+        }
+        if ga.coeffs.len() != gb.coeffs.len() {
+            return Err(format!("{ctx}: generator {gi} coeff arity diverges"));
+        }
+        for (j, (ca, cb)) in ga.coeffs.iter().zip(gb.coeffs.iter()).enumerate() {
+            if ca.to_bits() != cb.to_bits() {
+                return Err(format!("{ctx}: generator {gi} coeff {j}: {ca} vs {cb}"));
+            }
+        }
+    }
+    for (name, ma, mb) in [
+        ("B", a.final_gram.b(), b.final_gram.b()),
+        ("N", a.final_gram.n_inv(), b.final_gram.n_inv()),
+    ] {
+        if ma.rows() != mb.rows() {
+            return Err(format!("{ctx}: {name} shape diverges"));
+        }
+        for (va, vb) in ma.data().iter().zip(mb.data().iter()) {
+            if va.to_bits() != vb.to_bits() {
+                return Err(format!("{ctx}: {name} bits diverge ({va} vs {vb})"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn assert_abm_models_bitwise(a: &AbmModel, b: &AbmModel, ctx: &str) -> Result<(), String> {
+    if a.o_terms.len() != b.o_terms.len() || a.o_terms.terms() != b.o_terms.terms() {
+        return Err(format!("{ctx}: O diverges"));
+    }
+    if a.generators.len() != b.generators.len() {
+        return Err(format!("{ctx}: |G| diverges"));
+    }
+    for (gi, (ga, gb)) in a.generators.iter().zip(b.generators.iter()).enumerate() {
+        if ga.leading != gb.leading || ga.mse.to_bits() != gb.mse.to_bits() {
+            return Err(format!("{ctx}: generator {gi} diverges"));
+        }
+        for (ca, cb) in ga.coeffs.iter().zip(gb.coeffs.iter()) {
+            if ca.to_bits() != cb.to_bits() {
+                return Err(format!("{ctx}: generator {gi} coeff bits diverge"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn oavi_panel_path_bitwise_equals_per_candidate_path() {
+    // the ISSUE 5 tentpole contract: random data × random ψ × IHB/WIHB,
+    // legacy per-candidate flow vs degree-batched panel flow, native AND
+    // pool-sharded execution on pinned store layouts — generators, O
+    // terms, and the maintained inverse Gram must agree bit for bit
+    property(5, |rng| {
+        let m = 120 + rng.below(180);
+        let n = 2 + rng.below(2);
+        let mut x = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                x.set(i, j, rng.uniform());
+            }
+        }
+        let psi = [0.05, 0.01, 0.002][rng.below(3)];
+        for shards in [1usize, 3] {
+            for cfg in [OaviConfig::cgavi_ihb(psi), OaviConfig::bpcgavi_wihb(psi)] {
+                let native_pin = PinnedShards::new(Box::new(NativeBackend), shards);
+                // min_work 0 forces the pool fan-out even at these sizes
+                let sharded_pin = PinnedShards::new(
+                    Box::new(ShardedBackend::new(3).with_min_work(0)),
+                    shards,
+                );
+                let legacy = Oavi::new(cfg)
+                    .fit_with_backend_per_candidate(&x, &native_pin)
+                    .map_err(|e| e.to_string())?;
+                let panel_native =
+                    Oavi::new(cfg).fit_with_backend(&x, &native_pin).map_err(|e| e.to_string())?;
+                let panel_sharded = Oavi::new(cfg)
+                    .fit_with_backend(&x, &sharded_pin)
+                    .map_err(|e| e.to_string())?;
+                let ctx = format!("{} psi={psi} shards={shards}", cfg.name());
+                assert_oavi_models_bitwise(&legacy, &panel_native, &format!("{ctx} native"))?;
+                assert_oavi_models_bitwise(&legacy, &panel_sharded, &format!("{ctx} sharded"))?;
+                if panel_native.stats.panel_cols != panel_native.stats.oracle_calls {
+                    return Err(format!("{ctx}: panel_cols != oracle_calls"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn oavi_chunked_panel_bitwise_equals_per_candidate() {
+    // panel_budget_cols below the border width forces multi-chunk
+    // degrees; chunking must stay invisible in the bits
+    let ds = synthetic_dataset(900, 37);
+    let x = ds.class_matrix(0);
+    let mut chunked = OaviConfig::cgavi_ihb(0.01);
+    chunked.panel_budget_cols = 2;
+    let legacy = Oavi::new(OaviConfig::cgavi_ihb(0.01))
+        .fit_with_backend_per_candidate(&x, &NativeBackend)
+        .unwrap();
+    for shards in [1usize, 4] {
+        let native_pin = PinnedShards::new(Box::new(NativeBackend), shards);
+        let sharded_pin =
+            PinnedShards::new(Box::new(ShardedBackend::new(4).with_min_work(0)), shards);
+        let a = Oavi::new(chunked).fit_with_backend(&x, &native_pin).unwrap();
+        let b = Oavi::new(chunked).fit_with_backend(&x, &sharded_pin).unwrap();
+        assert_oavi_models_bitwise(&legacy, &a, &format!("chunked native shards={shards}"))
+            .unwrap();
+        assert_oavi_models_bitwise(&legacy, &b, &format!("chunked sharded shards={shards}"))
+            .unwrap();
+        // the degree-1 border alone is 3 wide (n = 3 features), so a
+        // 2-column budget must have split at least one degree
+        assert!(
+            a.stats.panel_passes > a.stats.degree_reached as usize,
+            "budget 2 must force multi-chunk degrees ({} passes, degree {})",
+            a.stats.panel_passes,
+            a.stats.degree_reached
+        );
+    }
+}
+
+#[test]
+fn abm_panel_path_bitwise_equals_per_candidate_path() {
+    let ds = synthetic_dataset(2000, 17);
+    let x = ds.class_matrix(0);
+    for shards in [1usize, 3] {
+        let native_pin = PinnedShards::new(Box::new(NativeBackend), shards);
+        let sharded_pin =
+            PinnedShards::new(Box::new(ShardedBackend::new(3).with_min_work(0)), shards);
+        let legacy = Abm::new(AbmConfig::new(0.01))
+            .fit_with_backend_per_candidate(&x, &native_pin)
+            .unwrap();
+        let a = Abm::new(AbmConfig::new(0.01)).fit_with_backend(&x, &native_pin).unwrap();
+        let b = Abm::new(AbmConfig::new(0.01)).fit_with_backend(&x, &sharded_pin).unwrap();
+        assert_abm_models_bitwise(&legacy, &a, &format!("abm native shards={shards}")).unwrap();
+        assert_abm_models_bitwise(&legacy, &b, &format!("abm sharded shards={shards}")).unwrap();
+        assert!(a.stats.panel_passes > 0);
+        assert_eq!(legacy.stats.panel_passes, 0);
+    }
+}
+
+#[test]
+fn vca_panel_path_bitwise_equals_per_candidate_path() {
+    let ds = synthetic_dataset(1500, 19);
+    let x = ds.class_matrix(1);
+    for shards in [1usize, 2] {
+        let native_pin = PinnedShards::new(Box::new(NativeBackend), shards);
+        let sharded_pin =
+            PinnedShards::new(Box::new(ShardedBackend::new(3).with_min_work(0)), shards);
+        let legacy = Vca::new(VcaConfig::new(0.005))
+            .fit_with_backend_per_candidate(&x, &native_pin)
+            .unwrap();
+        for (label, backend) in
+            [("native", &native_pin as &dyn ComputeBackend), ("sharded", &sharded_pin)]
+        {
+            let panel =
+                Vca::new(VcaConfig::new(0.005)).fit_with_backend(&x, backend).unwrap();
+            assert_eq!(legacy.n_generators(), panel.n_generators(), "{label} |V|");
+            assert_eq!(legacy.total_size(), panel.total_size(), "{label} size");
+            let ta = legacy.transform_with(&x, &native_pin);
+            let tb = panel.transform_with(&x, backend);
+            assert_eq!(ta.cols(), tb.cols());
+            for (va, vb) in ta.data().iter().zip(tb.data().iter()) {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "VCA {label} transform bits diverge at shards={shards}"
+                );
+            }
+            for (ma, mb) in legacy.mse_on(&x).iter().zip(panel.mse_on(&x).iter()) {
+                assert_eq!(ma.to_bits(), mb.to_bits(), "{label} mse bits");
+            }
+            assert!(panel.stats.panel_passes > 0, "{label}");
+        }
+    }
+}
+
+#[test]
+fn sharded_panel_fit_issues_one_dispatch_per_degree_chunk() {
+    // the ISSUE 5 acceptance bar: ≤ 1 pool dispatch per (degree, panel
+    // chunk) on the sharded backend — asserted exactly via the pool's
+    // batch counter (the per-candidate flow would pay one per oracle call)
+    let ds = synthetic_dataset(2400, 41);
+    let x = ds.class_matrix(0);
+    let pool = ThreadPool::new(4);
+    let backend = ShardedBackend::with_handle(pool.handle(), 4, 64).with_min_work(0);
+    let pinned = PinnedShards::new(Box::new(backend), 4);
+    let before = pool.handle().batches_dispatched();
+    let model = Oavi::new(OaviConfig::cgavi_ihb(0.01)).fit_with_backend(&x, &pinned).unwrap();
+    let after = pool.handle().batches_dispatched();
+    assert!(model.stats.panel_passes > 0);
+    assert_eq!(
+        after - before,
+        model.stats.panel_passes as u64,
+        "panel fit must dispatch exactly once per (degree, chunk)"
+    );
+    assert!(
+        (after - before) < model.stats.oracle_calls as u64,
+        "batching must beat one dispatch per oracle call ({} calls)",
+        model.stats.oracle_calls
+    );
 }
 
 // ---------------------------------------------------------------------

@@ -30,7 +30,7 @@ CLIPPY_LOG=$(mktemp)
 cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
 # every rustc diagnostic carries a "--> path:line:col" span line; match
 # spans inside the strict modules regardless of header distance
-STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|benches/micro_backend_scaling|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/pool_concurrency|tests/serve_control_plane)'
+STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|benches/micro_backend_scaling|benches/micro_gram_panel|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/pool_concurrency|tests/serve_control_plane)'
 if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
   echo "FAIL: clippy findings in strict modules:"
   grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
@@ -55,6 +55,10 @@ RUST_TEST_THREADS=1 cargo test --release --test runtime_parity -q two_level
 cargo test --release --test runtime_parity -q two_level
 RUST_TEST_THREADS=1 cargo test --release --test runtime_parity -q pooled_per_class
 cargo test --release --test runtime_parity -q pooled_per_class
+# panel parity (ISSUE 5): the degree-batched path must be bitwise equal
+# to the legacy per-candidate path under both scheduling regimes
+RUST_TEST_THREADS=1 cargo test --release --test runtime_parity -q panel
+cargo test --release --test runtime_parity -q panel
 
 echo "== CLI smoke: every estimator by name =="
 BIN=target/release/avi-scale
@@ -65,6 +69,17 @@ for method in cgavi-ihb bpcgavi-wihb abm vca; do
 done
 echo "-- fit --method abm --backend sharded --shards 4 (deprecated alias)"
 "$BIN" fit $SMOKE --method abm --backend sharded --shards 4
+echo "-- fit --backend sharded at panel-engaging scale (ISSUE 5 smoke)"
+# scale 0.01 of the 2M synthetic set → ~10k rows/class: stores shard and
+# the degree-batched panels drive the sharded gram_panel kernel; the
+# panel counters printed by cmd_fit must be live
+PANEL_OUT=$("$BIN" fit --dataset synthetic --scale 0.01 --seed 7 --psi 0.005 \
+  --method cgavi-ihb --backend sharded --workers 4)
+echo "$PANEL_OUT"
+echo "$PANEL_OUT" | grep -q 'panels    = [1-9]' || {
+  echo "FAIL: sharded panel smoke reported zero panel passes"
+  exit 1
+}
 echo "-- fit --method abm --workers 4 (two-level pool)"
 "$BIN" fit $SMOKE --method abm --workers 4
 echo "-- pipeline --method cgavi-ihb --workers 3"
