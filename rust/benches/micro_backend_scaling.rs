@@ -15,10 +15,12 @@
 //! exactly when the `sharded` column shows ≥ 2× over `native` at
 //! m = 1e6, shards = 4 on a multi-core host (ISSUE 1 acceptance bar).
 //! Results are asserted bit-identical before timing so a perf reading
-//! can never come from divergent arithmetic.
+//! can never come from divergent arithmetic.  Every cell also lands in
+//! `target/bench_results/BENCH_backend_scaling.json` for
+//! `scripts/bench_gate.sh` to diff across commits.
 
 use avi_scale::backend::{ColumnStore, ComputeBackend, NativeBackend, ShardedBackend};
-use avi_scale::bench::{report_figure, Bencher, Series};
+use avi_scale::bench::{report_figure, BenchJson, Bencher, Series};
 use avi_scale::coordinator::pool::{Job, ThreadPool};
 use avi_scale::linalg::dense::Matrix;
 use avi_scale::util::rng::Rng;
@@ -32,7 +34,7 @@ fn scoped_spawn_noop(jobs: usize) {
     });
 }
 
-fn dispatch_overhead_bench(bencher: &Bencher) {
+fn dispatch_overhead_bench(bencher: &Bencher, json: &mut BenchJson) {
     println!("-- dispatch overhead (per call, 4 no-op jobs) --");
     let pool = ThreadPool::new(4);
     let handle = pool.handle();
@@ -63,6 +65,10 @@ fn dispatch_overhead_bench(bencher: &Bencher) {
         pool.adaptive_min_work(),
         256 * 1024
     );
+    json.ns("dispatch_scoped", scoped.median_s);
+    json.ns("dispatch_handoff", handoff.median_s);
+    json.ns("dispatch_inline", inline.median_s);
+    json.int("adaptive_min_work", pool.adaptive_min_work() as u64);
     let mut series = Series::new("dispatch_ns".to_string());
     series.push_obs(0.0, &[scoped.median_s]);
     series.push_obs(1.0, &[handoff.median_s]);
@@ -70,7 +76,7 @@ fn dispatch_overhead_bench(bencher: &Bencher) {
     report_figure("micro_dispatch_overhead", "impl(0=scoped,1=handoff,2=inline)", &[series]);
 }
 
-fn small_batch_transform_bench(bencher: &Bencher, rng: &mut Rng) {
+fn small_batch_transform_bench(bencher: &Bencher, rng: &mut Rng, json: &mut BenchJson) {
     // serving-sized batch: m = 1k, 4 shards, 4-worker pool
     let (m, ell, g, k) = (1000usize, 16usize, 8usize, 4usize);
     println!("-- small-batch transform (m={m}, ell={ell}, g={g}, shards={k}) --");
@@ -115,6 +121,10 @@ fn small_batch_transform_bench(bencher: &Bencher, rng: &mut Rng) {
     let native = bencher.run("small_tr_native", || NativeBackend.transform_abs(&store, &c, &u));
     let policy = bencher.run("small_tr_sharded", || sharded.transform_abs(&store, &c, &u));
     let parallel = bencher.run("small_tr_forced", || forced.transform_abs(&store, &c, &u));
+    json.ns("small_tr_native", native.median_s);
+    json.ns("small_tr_sharded", policy.median_s);
+    json.ns("small_tr_forced", parallel.median_s);
+    json.int("small_tr_parallel_engaged", engaged as u64);
     println!(
         "parallel engaged = {engaged} (work/shard {work_per_shard} vs threshold {threshold})"
     );
@@ -134,9 +144,10 @@ fn main() {
     let mut rng = Rng::new(23);
     let ell = 16usize;
     let g = 8usize;
+    let mut json = BenchJson::new("backend_scaling");
 
-    dispatch_overhead_bench(&bencher);
-    small_batch_transform_bench(&bencher, &mut rng);
+    dispatch_overhead_bench(&bencher, &mut json);
+    small_batch_transform_bench(&bencher, &mut rng, &mut json);
 
     let mut gram_series: Vec<Series> = Vec::new();
     let mut tr_series: Vec<Series> = Vec::new();
@@ -195,6 +206,10 @@ fn main() {
             gram_shard.push_obs(k as f64, &[gs.median_s]);
             tr_native.push_obs(k as f64, &[tn.median_s]);
             tr_shard.push_obs(k as f64, &[ts.median_s]);
+            json.ns(&format!("gram_native_m{m}_s{k}"), gn.median_s);
+            json.ns(&format!("gram_sharded_m{m}_s{k}"), gs.median_s);
+            json.ns(&format!("tr_native_m{m}_s{k}"), tn.median_s);
+            json.ns(&format!("tr_sharded_m{m}_s{k}"), ts.median_s);
         }
         gram_series.push(gram_native);
         gram_series.push(gram_shard);
@@ -203,4 +218,7 @@ fn main() {
     }
     report_figure("micro_backend_scaling_gram", "shards", &gram_series);
     report_figure("micro_backend_scaling_transform", "shards", &tr_series);
+    if let Err(e) = json.write() {
+        eprintln!("(bench json write failed: {e})");
+    }
 }

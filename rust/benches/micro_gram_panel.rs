@@ -1,7 +1,8 @@
 //! Micro: degree-batched candidate panels vs the per-candidate
-//! `gram_stats` loop (ISSUE 5 acceptance gates).
+//! `gram_stats` loop (ISSUE 5 acceptance gates), plus the ISSUE 6
+//! row-tiled/wide-lane kernel A/B and the exact-vs-fast error budget.
 //!
-//! Two layers of measurement:
+//! Measurement layers:
 //!
 //! * **kernel** — per-call timing of k per-candidate `gram_stats` passes
 //!   vs one `gram_panel` pass over the same store/panel, m ∈
@@ -12,15 +13,26 @@
 //!   `panel(no-cross)` column is FLOP-identical to the per-candidate
 //!   loop; `panel(+cross)` additionally buys the k×k cross-Gram cache
 //!   that the driver's within-degree walk consumes.
+//! * **tiled A/B** — the scalar per-candidate panel kernel vs the
+//!   row-tiled wide-lane micro-kernel on the SAME store/panel, pinned
+//!   through the `set_block_threshold_bytes` override hook (usize::MAX
+//!   forces the scalar path, 1 forces the tiled path), bitwise-gated
+//!   before timing.  Acceptance bar: tiled ≥ scalar at m ∈ {1e4, 1e5}.
+//! * **fast budget** — max |Δ| of the opt-in f32 fast panel vs the f64
+//!   reference, reported next to the 1e-3 budget the driver asserts.
 //! * **end-to-end** — a full sharded OAVI fit through the panel path vs
 //!   the legacy per-candidate path, with the dispatch totals that
 //!   attribute the win.
 //!
-//! Acceptance bar: the panel kernel beats the per-candidate loop on the
-//! sharded backend at m ≥ 1e4 (dispatch amortization + shared b-passes).
+//! Every cell lands in `target/bench_results/BENCH_micro_gram_panel.json`
+//! for `scripts/bench_gate.sh` to diff across commits.
 
-use avi_scale::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend, ShardedBackend};
-use avi_scale::bench::Bencher;
+use avi_scale::backend::store::{set_block_threshold_bytes, BLOCK_THRESHOLD_DEFAULT};
+use avi_scale::backend::{
+    CandidatePanel, ColumnStore, ComputeBackend, CrossMode, NativeBackend, NumericsMode,
+    ShardedBackend,
+};
+use avi_scale::bench::{BenchJson, Bencher};
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::oavi::{Oavi, OaviConfig};
@@ -31,7 +43,7 @@ fn bits(v: &[f64]) -> Vec<u64> {
     v.iter().map(|x| x.to_bits()).collect()
 }
 
-fn kernel_bench(bencher: &Bencher, pool: &ThreadPool) {
+fn kernel_bench(bencher: &Bencher, pool: &ThreadPool, json: &mut BenchJson) {
     println!("-- kernel: k per-candidate gram_stats vs one gram_panel --");
     println!(
         "{:>8} {:>6} {:>4} | {:>12} {:>14} {:>14} {:>8} | {:>12} {:>14} {:>8} | {:>10}",
@@ -63,13 +75,13 @@ fn kernel_bench(bencher: &Bencher, pool: &ThreadPool) {
         let sharded = ShardedBackend::with_handle(pool.handle(), 4, 64).with_min_work(0);
 
         // bitwise gate: panel path must reproduce the per-candidate bits
-        let ps = native.gram_panel(&store, &panel, true);
+        let ps = native.gram_panel(&store, &panel, CrossMode::Eager, NumericsMode::Exact);
         for (c, cand) in cands.iter().enumerate() {
             let (atb, btb) = native.gram_stats(&store, cand);
             assert_eq!(bits(&atb), bits(ps.atb_col(c)), "atb bits diverge at m={m} c={c}");
             assert_eq!(btb.to_bits(), ps.btb(c).to_bits(), "btb bits diverge at m={m} c={c}");
         }
-        let pss = sharded.gram_panel(&store, &panel, true);
+        let pss = sharded.gram_panel(&store, &panel, CrossMode::Eager, NumericsMode::Exact);
         for c in 0..k {
             assert_eq!(bits(ps.atb_col(c)), bits(pss.atb_col(c)));
             for i in 0..=c {
@@ -83,10 +95,22 @@ fn kernel_bench(bencher: &Bencher, pool: &ThreadPool) {
                 std::hint::black_box(native.gram_stats(&store, cand));
             }
         });
-        let t_pn_n = bencher
-            .run(&id("gram_panel_native"), || std::hint::black_box(native.gram_panel(&store, &panel, false)));
-        let t_px_n = bencher
-            .run(&id("gram_panelx_native"), || std::hint::black_box(native.gram_panel(&store, &panel, true)));
+        let t_pn_n = bencher.run(&id("gram_panel_native"), || {
+            std::hint::black_box(native.gram_panel(
+                &store,
+                &panel,
+                CrossMode::Skip,
+                NumericsMode::Exact,
+            ))
+        });
+        let t_px_n = bencher.run(&id("gram_panelx_native"), || {
+            std::hint::black_box(native.gram_panel(
+                &store,
+                &panel,
+                CrossMode::Eager,
+                NumericsMode::Exact,
+            ))
+        });
         let d0 = pool.handle().batches_dispatched();
         let t_pc_s = bencher.run(&id("gram_percand_sharded"), || {
             for cand in &cands {
@@ -94,10 +118,23 @@ fn kernel_bench(bencher: &Bencher, pool: &ThreadPool) {
             }
         });
         let d1 = pool.handle().batches_dispatched();
-        let t_pn_s = bencher
-            .run(&id("gram_panel_sharded"), || std::hint::black_box(sharded.gram_panel(&store, &panel, false)));
+        let t_pn_s = bencher.run(&id("gram_panel_sharded"), || {
+            std::hint::black_box(sharded.gram_panel(
+                &store,
+                &panel,
+                CrossMode::Skip,
+                NumericsMode::Exact,
+            ))
+        });
         let d2 = pool.handle().batches_dispatched();
         let runs = (bencher.warmup + bencher.iters) as u64;
+        json.ns(&id("percand_native"), t_pc_n.median_s);
+        json.ns(&id("panel_native"), t_pn_n.median_s);
+        json.ns(&id("panelx_native"), t_px_n.median_s);
+        json.ns(&id("percand_sharded"), t_pc_s.median_s);
+        json.ns(&id("panel_sharded"), t_pn_s.median_s);
+        json.int(&format!("dispatches_percand_m{m}"), (d1 - d0) / runs);
+        json.int(&format!("dispatches_panel_m{m}"), (d2 - d1) / runs);
         println!(
             "{:>8} {:>6} {:>4} | {:>12.0} {:>14.0} {:>14.0} {:>7.2}x | {:>12.0} {:>14.0} {:>7.2}x | {:>4} vs {:>2}",
             m,
@@ -125,7 +162,121 @@ fn kernel_bench(bencher: &Bencher, pool: &ThreadPool) {
     }
 }
 
-fn fit_bench(pool: &ThreadPool) {
+/// Scalar vs row-tiled/wide-lane panel kernel on identical inputs,
+/// pinned through the block-threshold override hook (ISSUE 6 acceptance
+/// A/B).  Both paths are bitwise-gated against each other before any
+/// timing, so the speedup can never come from divergent arithmetic.
+fn tiled_ab_bench(bencher: &Bencher, json: &mut BenchJson) {
+    println!("-- tiled A/B: scalar panel kernel vs row-tiled wide-lane micro-kernel --");
+    println!(
+        "{:>8} {:>6} {:>4} | {:>12} {:>12} {:>8}",
+        "m", "ell", "k", "scalar_ns", "tiled_ns", "speedup"
+    );
+    for &m in &[10_000usize, 100_000] {
+        let (ell, k) = (24usize, 32usize);
+        let mut rng = Rng::new(31 + m as u64);
+        let cols: Vec<Vec<f64>> =
+            (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        // single shard: the whole m-row pass goes through one kernel call,
+        // the regime where the row tiling works hardest
+        let store = ColumnStore::from_cols(&cols, 1);
+        let mut panel = CandidatePanel::new_like(&store);
+        for _ in 0..k {
+            let c: Vec<f64> = (0..m).map(|_| rng.uniform() - 0.5).collect();
+            panel.push_col(&c);
+        }
+        let native = NativeBackend;
+
+        // bitwise gate between the two pinned paths
+        set_block_threshold_bytes(usize::MAX); // scalar per-candidate kernel
+        let ps_scalar = native.gram_panel(&store, &panel, CrossMode::Skip, NumericsMode::Exact);
+        set_block_threshold_bytes(1); // row-tiled wide-lane kernel
+        let ps_tiled = native.gram_panel(&store, &panel, CrossMode::Skip, NumericsMode::Exact);
+        for c in 0..k {
+            assert_eq!(
+                bits(ps_scalar.atb_col(c)),
+                bits(ps_tiled.atb_col(c)),
+                "tiled kernel bits diverge at m={m} c={c}"
+            );
+        }
+
+        set_block_threshold_bytes(usize::MAX);
+        let t_scalar = bencher.run(&format!("panel_scalar_m{m}"), || {
+            std::hint::black_box(native.gram_panel(
+                &store,
+                &panel,
+                CrossMode::Skip,
+                NumericsMode::Exact,
+            ))
+        });
+        set_block_threshold_bytes(1);
+        let t_tiled = bencher.run(&format!("panel_tiled_m{m}"), || {
+            std::hint::black_box(native.gram_panel(
+                &store,
+                &panel,
+                CrossMode::Skip,
+                NumericsMode::Exact,
+            ))
+        });
+        let speedup = t_scalar.median_s / t_tiled.median_s;
+        json.ns(&format!("panel_scalar_m{m}"), t_scalar.median_s);
+        json.ns(&format!("panel_tiled_m{m}"), t_tiled.median_s);
+        json.num(&format!("tiled_speedup_m{m}"), speedup);
+        println!(
+            "{:>8} {:>6} {:>4} | {:>12.0} {:>12.0} {:>7.2}x",
+            m,
+            ell,
+            k,
+            t_scalar.median_s * 1e9,
+            t_tiled.median_s * 1e9,
+            speedup
+        );
+        if speedup < 1.0 {
+            println!(
+                "WARN: tiled kernel slower than scalar at m={m} ({speedup:.2}x) — \
+                 acceptance bar is ≥ 1x at m ∈ {{1e4, 1e5}}"
+            );
+        }
+    }
+    // leave the process with the default threshold, not a bench pin
+    set_block_threshold_bytes(BLOCK_THRESHOLD_DEFAULT);
+}
+
+/// Exact-vs-fast error budget on the bench panel: the measured max |Δ|
+/// the driver would assert, persisted next to the timing cells.
+fn fast_budget_bench(json: &mut BenchJson) {
+    use avi_scale::backend::store::{gram_panel_fast_seq, gram_panel_seq};
+    println!("-- fast budget: f32 panel kernels vs the f64 reference --");
+    let m = 100_000usize;
+    let (ell, k) = (8usize, 8usize);
+    let mut rng = Rng::new(47);
+    let cols: Vec<Vec<f64>> = (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+    let store = ColumnStore::from_cols(&cols, 4);
+    let mut panel = CandidatePanel::new_like(&store);
+    for _ in 0..k {
+        let c: Vec<f64> = (0..m).map(|_| rng.uniform() - 0.5).collect();
+        panel.push_col(&c);
+    }
+    let exact = gram_panel_seq(&store, &panel, CrossMode::Lazy);
+    let fast = gram_panel_fast_seq(&store, &panel, CrossMode::Lazy);
+    let mut max_err = 0.0f64;
+    let mut scale = 0.0f64;
+    for c in 0..k {
+        for j in 0..ell {
+            scale = scale.max(exact.atb_col(c)[j].abs());
+            max_err = max_err.max((fast.atb_col(c)[j] - exact.atb_col(c)[j]).abs());
+        }
+        scale = scale.max(exact.btb(c).abs());
+        max_err = max_err.max((fast.btb(c) - exact.btb(c)).abs());
+    }
+    let budget = 1e-3 * scale.max(1.0);
+    json.num("fast_max_abs_err", max_err);
+    json.num("fast_err_budget", budget);
+    println!("m={m} ell={ell} k={k}: max|Δ| = {max_err:.3e}, budget = {budget:.3e}");
+    assert!(max_err <= budget, "fast panel kernels exceed the 1e-3 budget on benign data");
+}
+
+fn fit_bench(pool: &ThreadPool, json: &mut BenchJson) {
     println!("-- end-to-end: sharded OAVI fit, panel vs per-candidate --");
     let ds = synthetic_dataset(20_000, 11);
     let x = ds.class_matrix(0);
@@ -143,6 +294,12 @@ fn fit_bench(pool: &ThreadPool) {
     // same model, attributable speedup
     assert_eq!(legacy.generators.len(), panel.generators.len());
     assert_eq!(legacy.o_terms.len(), panel.o_terms.len());
+    json.ns("fit_percand", legacy_s);
+    json.ns("fit_panel", panel_s);
+    json.int("fit_percand_dispatches", d1 - d0);
+    json.int("fit_panel_dispatches", d2 - d1);
+    json.int("fit_panel_passes", panel.stats.panel_passes as u64);
+    json.int("fit_cross_cache_hits", panel.stats.cross_cache_hits as u64);
     println!(
         "per-candidate: {:.3}s ({} dispatches)   panel: {:.3}s ({} dispatches, {} passes, \
          {} cross-cache hits)   speedup {:.2}x",
@@ -160,6 +317,12 @@ fn main() {
     let bencher = Bencher::new(1, 5);
     let pool = ThreadPool::new(4);
     println!("== micro_gram_panel: degree-batched panels vs per-candidate loop ==");
-    kernel_bench(&bencher, &pool);
-    fit_bench(&pool);
+    let mut json = BenchJson::new("micro_gram_panel");
+    kernel_bench(&bencher, &pool, &mut json);
+    tiled_ab_bench(&bencher, &mut json);
+    fast_budget_bench(&mut json);
+    fit_bench(&pool, &mut json);
+    if let Err(e) = json.write() {
+        eprintln!("(bench json write failed: {e})");
+    }
 }

@@ -6,14 +6,23 @@
 //! 1. **gram_panel** — the **primary training kernel**: one
 //!    [`CandidatePanel`] holds every degree-d border candidate, and a
 //!    single pass per degree produces the ℓ×k store-vs-panel block plus
-//!    the k×k panel cross-Gram upper triangle ([`PanelStats`]).  The
-//!    drivers then walk the candidates in DegLex order resolving the
-//!    within-degree dependence from the cached cross entries — O(1) per
-//!    (accepted, later-candidate) pair, no extra data pass.  Panels are
-//!    chunked under a memory budget ([`CandidatePanel::budget_cols`]),
-//!    and the whole pass is **bitwise identical** to the legacy
-//!    per-candidate flow below because every Gram entry shares one
-//!    per-entry dot discipline (see `store.rs`).
+//!    the panel cross-Gram ([`PanelStats`]).  The cross part is
+//!    mode-selected ([`CrossMode`]): `Eager` materializes the full k×k
+//!    upper triangle in the pass, `Lazy` computes only the diagonal up
+//!    front and materializes row i on demand
+//!    (`PanelStats::ensure_cross_row`) when candidate i is *accepted* —
+//!    ψ-regimes where most candidates vanish skip the O(k²) triangle
+//!    they never read.  The drivers then walk the candidates in DegLex
+//!    order resolving the within-degree dependence from the cached cross
+//!    entries — O(1) per (accepted, later-candidate) pair, no extra data
+//!    pass.  Panels are chunked under a memory budget
+//!    ([`CandidatePanel::budget_cols`]), and the whole exact pass is
+//!    **bitwise identical** to the legacy per-candidate flow below
+//!    because every Gram entry shares one per-entry dot discipline (see
+//!    `store.rs`).  [`NumericsMode::Fast`] is the explicitly opt-in
+//!    exception: f32-accumulated `atb`/diagonal under a driver-measured
+//!    error budget (off-diagonal cross rows stay exact — they feed the
+//!    Theorem 4.9 inverse-Gram append).
 //! 2. **gram_stats** — `(Aᵀb, bᵀb)` for a single candidate column b:
 //!    the legacy per-candidate kernel, still the right shape for
 //!    serving-time queries and kept as the bitwise reference the panel
@@ -95,9 +104,9 @@ pub mod sharded;
 pub mod store;
 
 pub use sharded::ShardedBackend;
-pub use store::{CandidatePanel, ColumnStore, PanelRecipe, PanelStats};
+pub use store::{CandidatePanel, ColumnStore, CrossMode, NumericsMode, PanelRecipe, PanelStats};
 
-use crate::backend::store::{gram_panel_seq, gram_stats_seq, transform_abs_seq};
+use crate::backend::store::{gram_panel_fast_seq, gram_panel_seq, gram_stats_seq, transform_abs_seq};
 use crate::linalg::dense::Matrix;
 
 /// Streaming compute abstraction over the per-sample hot loops.
@@ -109,18 +118,25 @@ pub trait ComputeBackend {
     fn gram_stats(&self, cols: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64);
 
     /// Degree-batched panel kernel: the ℓ×k block `⟨store_j, panel_c⟩`
-    /// plus (when `want_cross`) the k×k panel cross-Gram upper triangle,
-    /// reduced in shard order.  The default is the sequential reference
-    /// reduction; parallel backends may tile `(shard × candidate range)`
-    /// but must reproduce its bits exactly (per-entry dot discipline +
-    /// shard-order accumulation).
+    /// plus the panel cross-Gram selected by `cross` (full upper
+    /// triangle, diagonal-only with lazy rows, or nothing), reduced in
+    /// shard order.  The default is the sequential reference reduction;
+    /// parallel backends may tile `(shard × candidate range)` but — in
+    /// [`NumericsMode::Exact`] — must reproduce its bits exactly
+    /// (per-entry dot discipline + shard-order accumulation).
+    /// [`NumericsMode::Fast`] has no bitwise contract; the driver
+    /// measures its error budget against the f64 reference.
     fn gram_panel(
         &self,
         cols: &ColumnStore,
         panel: &CandidatePanel,
-        want_cross: bool,
+        cross: CrossMode,
+        numerics: NumericsMode,
     ) -> PanelStats {
-        gram_panel_seq(cols, panel, want_cross)
+        match numerics {
+            NumericsMode::Exact => gram_panel_seq(cols, panel, cross),
+            NumericsMode::Fast => gram_panel_fast_seq(cols, panel, cross),
+        }
     }
 
     /// `|A·C + U|` where A is m×ℓ (the store), C is ℓ×g, U is m×g.
@@ -199,11 +215,12 @@ impl ComputeBackend for PinnedShards {
         &self,
         cols: &ColumnStore,
         panel: &CandidatePanel,
-        want_cross: bool,
+        cross: CrossMode,
+        numerics: NumericsMode,
     ) -> PanelStats {
         // delegate (NOT the trait default): pinned-sharded parity runs
         // must exercise the inner backend's tiled panel path
-        self.inner.gram_panel(cols, panel, want_cross)
+        self.inner.gram_panel(cols, panel, cross, numerics)
     }
 
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
@@ -299,7 +316,7 @@ mod tests {
         for c in &cands {
             panel.push_col(c);
         }
-        let ps = NativeBackend.gram_panel(&store, &panel, true);
+        let ps = NativeBackend.gram_panel(&store, &panel, CrossMode::Eager, NumericsMode::Exact);
         for (c, cand) in cands.iter().enumerate() {
             let (atb, btb) = NativeBackend.gram_stats(&store, cand);
             assert_eq!(atb, ps.atb_col(c));
@@ -307,7 +324,7 @@ mod tests {
         }
         // pinned adapter delegates the panel kernel too
         let pinned = PinnedShards::new(Box::new(NativeBackend), 3);
-        let pp = pinned.gram_panel(&store, &panel, true);
+        let pp = pinned.gram_panel(&store, &panel, CrossMode::Eager, NumericsMode::Exact);
         assert_eq!(pp.atb_col(2), ps.atb_col(2));
         assert_eq!(pp.cross_at(1, 3).to_bits(), ps.cross_at(1, 3).to_bits());
     }

@@ -32,8 +32,10 @@
 use std::ops::Range;
 
 use crate::backend::store::{
-    gram_panel_partial, gram_panel_seq, gram_partial, gram_stats_seq, panel_cross_partial,
-    transform_abs_seq, transform_block, CandidatePanel, ColumnStore, PanelStats,
+    gram_panel_fast_seq, gram_panel_partial, gram_panel_partial_fast, gram_panel_seq,
+    gram_partial, gram_stats_seq, panel_cross_partial, panel_diag_partial,
+    panel_diag_partial_fast, transform_abs_seq, transform_block, CandidatePanel, ColumnStore,
+    CrossMode, NumericsMode, PanelStats,
 };
 use crate::backend::{ComputeBackend, NativeBackend};
 use crate::coordinator::pool::{PoolHandle, ThreadPool};
@@ -205,24 +207,34 @@ impl ComputeBackend for ShardedBackend {
         &self,
         cols: &ColumnStore,
         panel: &CandidatePanel,
-        want_cross: bool,
+        cross: CrossMode,
+        numerics: NumericsMode,
     ) -> PanelStats {
         let n = cols.n_shards();
         let ell = cols.len();
         let k = panel.len();
+        let seq = |cols: &ColumnStore, panel: &CandidatePanel| match numerics {
+            NumericsMode::Exact => gram_panel_seq(cols, panel, cross),
+            NumericsMode::Fast => gram_panel_fast_seq(cols, panel, cross),
+        };
         if n == 1 || self.inner_workers == 1 || k == 0 {
-            return gram_panel_seq(cols, panel, want_cross);
+            return seq(cols, panel);
         }
-        // cross work averages (k+1)/2 columns per candidate
-        let cross_cols = if want_cross { (k + 1) / 2 } else { 0 };
+        // cross work: eager averages (k+1)/2 columns per candidate, lazy
+        // pays only the diagonal up front
+        let cross_cols = match cross {
+            CrossMode::Eager => (k + 1) / 2,
+            CrossMode::Lazy => 1,
+            CrossMode::Skip => 0,
+        };
         let work_per_shard = (ell + cross_cols).max(1) * k * (cols.rows() / n);
         if work_per_shard < self.min_work_threshold() {
-            return gram_panel_seq(cols, panel, want_cross);
+            return seq(cols, panel);
         }
         // ONE pool dispatch per panel pass: shard × candidate-range tiles
         // submitted shard-major, so the in-order reduction below
         // accumulates every entry's per-shard partials in ascending shard
-        // order — bit-identical to gram_panel_seq
+        // order — bit-identical to gram_panel_seq (in exact mode)
         const PANEL_TILE_COLS: usize = 32;
         let mut tiles: Vec<(usize, Range<usize>)> = Vec::new();
         for s in 0..n {
@@ -234,16 +246,27 @@ impl ComputeBackend for ShardedBackend {
             }
         }
         let parts = self.pool.map(&tiles, |(s, cr)| {
-            let a = gram_panel_partial(cols, panel, *s, cr.clone());
-            let c = if want_cross {
-                panel_cross_partial(panel, *s, cr.clone())
-            } else {
-                Vec::new()
+            let a = match numerics {
+                NumericsMode::Exact => gram_panel_partial(cols, panel, *s, cr.clone()),
+                NumericsMode::Fast => gram_panel_partial_fast(cols, panel, *s, cr.clone()),
+            };
+            // eager triangles stay exact even in fast mode: the
+            // off-diagonal entries feed the Theorem 4.9 append (see
+            // store.rs numerics contract)
+            let c = match cross {
+                CrossMode::Eager => panel_cross_partial(panel, *s, cr.clone()),
+                CrossMode::Lazy => match numerics {
+                    NumericsMode::Exact => panel_diag_partial(panel, *s, cr.clone()),
+                    NumericsMode::Fast => panel_diag_partial_fast(panel, *s, cr.clone()),
+                },
+                CrossMode::Skip => Vec::new(),
             };
             (a, c)
         });
         let mut atb = vec![0.0f64; ell * k];
-        let mut cross = vec![0.0f64; if want_cross { k * (k + 1) / 2 } else { 0 }];
+        let mut cross_buf =
+            vec![0.0f64; if cross == CrossMode::Eager { k * (k + 1) / 2 } else { 0 }];
+        let mut diag = vec![0.0f64; if cross == CrossMode::Lazy { k } else { 0 }];
         for ((_, cr), (pa, pc)) in tiles.iter().zip(parts.iter()) {
             for (ci, c) in cr.clone().enumerate() {
                 let dst = &mut atb[c * ell..(c + 1) * ell];
@@ -251,19 +274,30 @@ impl ComputeBackend for ShardedBackend {
                     *d += *v;
                 }
             }
-            if want_cross {
-                let mut off = 0usize;
-                for c in cr.clone() {
-                    let base = c * (c + 1) / 2;
-                    let dst = &mut cross[base..base + c + 1];
-                    for (d, v) in dst.iter_mut().zip(pc[off..off + c + 1].iter()) {
-                        *d += *v;
+            match cross {
+                CrossMode::Eager => {
+                    let mut off = 0usize;
+                    for c in cr.clone() {
+                        let base = c * (c + 1) / 2;
+                        let dst = &mut cross_buf[base..base + c + 1];
+                        for (d, v) in dst.iter_mut().zip(pc[off..off + c + 1].iter()) {
+                            *d += *v;
+                        }
+                        off += c + 1;
                     }
-                    off += c + 1;
                 }
+                CrossMode::Lazy => {
+                    for (ci, c) in cr.clone().enumerate() {
+                        diag[c] += pc[ci];
+                    }
+                }
+                CrossMode::Skip => {}
             }
         }
-        PanelStats::new(ell, k, atb, cross)
+        match cross {
+            CrossMode::Lazy => PanelStats::new_lazy(ell, k, atb, diag),
+            _ => PanelStats::new(ell, k, atb, cross_buf),
+        }
     }
 
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
@@ -377,9 +411,10 @@ mod tests {
                         let c: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
                         panel.push_col(&c);
                     }
-                    for want_cross in [true, false] {
-                        let seq = gram_panel_seq(&store, &panel, want_cross);
-                        let par = forced.gram_panel(&store, &panel, want_cross);
+                    for cross in [CrossMode::Eager, CrossMode::Lazy, CrossMode::Skip] {
+                        let seq = gram_panel_seq(&store, &panel, cross);
+                        let mut par =
+                            forced.gram_panel(&store, &panel, cross, NumericsMode::Exact);
                         for c in 0..k {
                             if bits(seq.atb_col(c)) != bits(par.atb_col(c)) {
                                 return Err(format!(
@@ -387,20 +422,53 @@ mod tests {
                                 ));
                             }
                         }
-                        if want_cross {
-                            for c in 0..k {
-                                for i in 0..=c {
-                                    if seq.cross_at(i, c).to_bits()
-                                        != par.cross_at(i, c).to_bits()
-                                    {
-                                        return Err(format!(
-                                            "cross diverges at shards={shards} ({i},{c})"
-                                        ));
+                        match cross {
+                            CrossMode::Eager => {
+                                for c in 0..k {
+                                    for i in 0..=c {
+                                        if seq.cross_at(i, c).to_bits()
+                                            != par.cross_at(i, c).to_bits()
+                                        {
+                                            return Err(format!(
+                                                "cross diverges at shards={shards} ({i},{c})"
+                                            ));
+                                        }
                                     }
                                 }
                             }
-                        } else if par.has_cross() {
-                            return Err("unexpected cross block".into());
+                            CrossMode::Lazy => {
+                                if !par.is_lazy() {
+                                    return Err("parallel lazy stats not lazy".into());
+                                }
+                                for c in 0..k {
+                                    if seq.btb(c).to_bits() != par.btb(c).to_bits() {
+                                        return Err(format!(
+                                            "lazy diag diverges at shards={shards} c={c}"
+                                        ));
+                                    }
+                                }
+                                // lazy rows materialize on the caller's
+                                // thread, bitwise equal to the seq rows
+                                let mut seq = seq;
+                                for i in 0..k {
+                                    seq.ensure_cross_row(&panel, i);
+                                    par.ensure_cross_row(&panel, i);
+                                    for c in i..k {
+                                        if seq.cross_at(i, c).to_bits()
+                                            != par.cross_at(i, c).to_bits()
+                                        {
+                                            return Err(format!(
+                                                "lazy row diverges at shards={shards} ({i},{c})"
+                                            ));
+                                        }
+                                    }
+                                }
+                            }
+                            CrossMode::Skip => {
+                                if par.has_cross() || par.is_lazy() {
+                                    return Err("unexpected cross block".into());
+                                }
+                            }
                         }
                     }
                 }
@@ -422,7 +490,7 @@ mod tests {
             panel.push_col(&c);
         }
         let before = pool.handle().batches_dispatched();
-        let _ = be.gram_panel(&store, &panel, true);
+        let _ = be.gram_panel(&store, &panel, CrossMode::Eager, NumericsMode::Exact);
         let one = pool.handle().batches_dispatched();
         assert_eq!(one - before, 1, "panel pass must be one pool dispatch");
         // the per-candidate loop over the same work is 40 dispatches

@@ -11,25 +11,56 @@
 //!
 //! # Kernel inventory (per-shard free functions)
 //!
-//! * [`gram_panel_partial`] / [`panel_cross_partial`] — the **primary
-//!   training kernels** since the degree-batched refactor: one
-//!   [`CandidatePanel`] holds every degree-d border candidate (filled
-//!   from its parent columns in one pass, [`CandidatePanel::from_recipes`]),
-//!   and the ℓ×k store-vs-panel block plus the k×k panel cross-Gram
-//!   upper triangle replace |∂d| separate BLAS-1 sweeps with one
-//!   BLAS-3-shaped pass per degree.
+//! * [`gram_panel_partial`] — the **primary training kernel**: the ℓ×k
+//!   store-vs-panel block for one shard.  One [`CandidatePanel`] holds
+//!   every degree-d border candidate (filled from its parent columns in
+//!   one pass, [`CandidatePanel::from_recipes`]); per shard the kernel
+//!   runtime-selects between a cache-resident per-candidate pass and the
+//!   **row-tiled micro-kernel** ([`gram_panel_partial_tiled`]): L1/L2-
+//!   sized row blocks with carried `[f64; 4]` dot lanes per (store col,
+//!   candidate) entry, streamed through the wide-lane `dotN` bricks of
+//!   [`crate::linalg::simd`] (8- or 4-column passes over each candidate
+//!   tile).  The switch point is the once-per-process calibrated
+//!   [`block_threshold_bytes`].
+//! * [`panel_cross_partial`] / [`panel_diag_partial`] — the k×k panel
+//!   cross-Gram upper triangle (eager mode) or just its diagonal (lazy
+//!   mode).  Under [`CrossMode::Lazy`] the off-diagonal rows are **not**
+//!   computed in the panel pass at all: [`PanelStats::ensure_cross_row`]
+//!   materializes row i on demand when candidate i is accepted into O,
+//!   so ψ-regimes where most candidates vanish skip the O(k²) triangle
+//!   they never read.
 //! * [`gram_partial`] — the legacy per-candidate `(Aᵀb, bᵀb)` map side,
 //!   still used by serving-time single-column queries and kept as the
 //!   bitwise reference for the panel path.
 //! * [`transform_block`] — the (FT) `|A·C + U|` map side (test time).
 //!
-//! All Gram-type kernels share **one per-entry dot discipline**: every
-//! output entry is bitwise equal to [`crate::linalg::dot`] of the two
-//! column slices involved (the blocked variants only share passes over
-//! the right-hand column — see `dot4`'s contract).  That makes each
-//! entry's bits independent of which kernel, blocking factor, or batch
-//! boundary produced it, which is what lets the panel path reproduce the
-//! legacy per-candidate path bit for bit.
+//! # Exact vs fast: the numerics contract
+//!
+//! All **exact** Gram kernels share **one per-entry dot discipline**:
+//! every output entry is bitwise equal to [`crate::linalg::dot`] of the
+//! two column slices involved.  The blocked/tiled variants only change
+//! *which passes are shared* — each entry keeps `dot`'s four-lane
+//! schedule (lanes carried across 4-multiple row tiles, combined
+//! `(s0+s1)+(s2+s3)`, sequential `n%4` tail; see `linalg::simd`) — so
+//! entry bits are independent of kernel choice, lane width, blocking
+//! factor, tile boundary, or batch boundary.  Laziness is equally
+//! transparent: a cross row materialized on demand runs the same
+//! per-shard dots in the same shard order as the eager triangle.  This
+//! is what lets the panel path reproduce the legacy per-candidate path
+//! bit for bit, and what makes the `BLOCK_THRESHOLD`/`dotN`/tile-size
+//! heuristics pure wall-clock knobs.
+//!
+//! The `*_fast` kernels ([`gram_panel_partial_fast`],
+//! [`panel_diag_partial_fast`], reduced by [`gram_panel_fast_seq`])
+//! implement the **opt-in** `NumericsMode::Fast` path: f32 accumulation
+//! within fixed row tiles, f64 carry across tiles
+//! ([`crate::linalg::simd::dot_fast`]).  They carry *no* bitwise
+//! contract — the OAVI driver measures their max |Δ| against the exact
+//! f64 reference on a sampled Gram sub-block and fails the fit if the
+//! configured error budget is exceeded.  Off-diagonal cross rows stay
+//! exact even in fast mode (they feed the Theorem 4.9 inverse append,
+//! where rounding would accumulate into the maintained N — same policy
+//! as the f32 PJRT path in `runtime/backend.rs`).
 //!
 //! The kernels are shared verbatim by [`crate::backend::NativeBackend`]
 //! (sequential over shards) and [`crate::backend::ShardedBackend`]
@@ -40,9 +71,55 @@
 //! reproducibility contract `rust/tests/runtime_parity.rs` pins down.
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 use crate::linalg::dense::Matrix;
 use crate::linalg::dot;
+use crate::linalg::simd;
+
+/// How much of the panel cross-Gram a [`gram_panel_seq`]-family call
+/// should produce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrossMode {
+    /// No cross data at all (VCA's projection batches read only the
+    /// store-vs-panel block).
+    Skip,
+    /// The full k×k upper triangle, computed in the panel pass.
+    Eager,
+    /// Only the diagonal (`bᵀb`, read for every candidate) in the panel
+    /// pass; off-diagonal rows materialize on demand via
+    /// [`PanelStats::ensure_cross_row`] when a candidate is accepted.
+    /// Bitwise identical to [`CrossMode::Eager`] for every entry that is
+    /// actually read (per-entry dot discipline + shard-order sums).
+    Lazy,
+}
+
+/// Numerics policy for the panel kernels.
+///
+/// `Exact` is the default everywhere and carries the bitwise per-entry
+/// dot contract.  `Fast` is **opt-in only** (config/CLI): f32 tile
+/// accumulation with f64 carry, guarded at fit time by a measured error
+/// budget against the f64 reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum NumericsMode {
+    /// Bitwise-reproducible f64 kernels (the default).
+    #[default]
+    Exact,
+    /// Mixed-precision kernels ([`crate::linalg::simd::dot_fast`]) for
+    /// the store-vs-panel block and the cross diagonal.
+    Fast,
+}
+
+impl NumericsMode {
+    /// Stable lowercase name (CLI parsing, JSON reports).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NumericsMode::Exact => "exact",
+            NumericsMode::Fast => "fast",
+        }
+    }
+}
 
 /// One contiguous row-range of every column, stored column-major.
 #[derive(Clone, Debug)]
@@ -385,20 +462,43 @@ impl CandidatePanel {
 /// within-degree dependence in O(1) per (accepted, later-candidate)
 /// pair: when candidate i joins O, later candidates extend their `Aᵀb`
 /// with `cross_at(i, c)` instead of re-touching the data.
+///
+/// Under [`CrossMode::Lazy`] the packed triangle is replaced by an
+/// eager `diag` (`bᵀb` is read for *every* candidate's oracle call)
+/// plus a row-on-demand cache: [`PanelStats::ensure_cross_row`]
+/// materializes row i (`⟨panel_i, panel_c⟩` for `c ≥ i`) only when
+/// candidate i is accepted into O.  Since only accepted candidates'
+/// rows are ever read by the driver, vanishing-heavy ψ-regimes skip the
+/// O(k²) triangle work entirely; every materialized entry is bitwise
+/// equal to its eager counterpart.
 #[derive(Clone, Debug)]
 pub struct PanelStats {
     ell: usize,
     k: usize,
     atb: Vec<f64>,
     cross: Vec<f64>,
+    /// Eager cross diagonal (lazy mode only; empty otherwise).
+    diag: Vec<f64>,
+    /// Lazy row cache: `rows[i][c - i] = ⟨panel_i, panel_c⟩` for
+    /// `c ∈ i..k`, filled by [`PanelStats::ensure_cross_row`].
+    rows: Vec<Option<Vec<f64>>>,
 }
 
 impl PanelStats {
-    /// Assemble from reduced blocks (backends only).
+    /// Assemble from reduced blocks (backends only): eager cross when
+    /// `cross` is the packed triangle, cross-free when it's empty.
     pub fn new(ell: usize, k: usize, atb: Vec<f64>, cross: Vec<f64>) -> Self {
         debug_assert_eq!(atb.len(), ell * k);
         debug_assert!(cross.is_empty() || cross.len() == k * (k + 1) / 2);
-        PanelStats { ell, k, atb, cross }
+        PanelStats { ell, k, atb, cross, diag: Vec::new(), rows: Vec::new() }
+    }
+
+    /// Assemble a lazy-cross result (backends only): eager diagonal,
+    /// off-diagonal rows on demand.
+    pub fn new_lazy(ell: usize, k: usize, atb: Vec<f64>, diag: Vec<f64>) -> Self {
+        debug_assert_eq!(atb.len(), ell * k);
+        debug_assert_eq!(diag.len(), k);
+        PanelStats { ell, k, atb, cross: Vec::new(), diag, rows: vec![None; k] }
     }
 
     /// Store width ℓ the block was computed against.
@@ -413,10 +513,17 @@ impl PanelStats {
         self.k
     }
 
-    /// Whether the cross-Gram triangle was computed.
+    /// Whether the full cross-Gram triangle was computed eagerly.
     #[inline]
     pub fn has_cross(&self) -> bool {
         !self.cross.is_empty()
+    }
+
+    /// Whether this is a lazy-cross result (eager diagonal, rows on
+    /// demand).
+    #[inline]
+    pub fn is_lazy(&self) -> bool {
+        self.cross.is_empty() && !self.diag.is_empty()
     }
 
     /// `⟨store_j, panel_c⟩` for all j — candidate c's `Aᵀb` over the
@@ -426,93 +533,198 @@ impl PanelStats {
         &self.atb[c * self.ell..(c + 1) * self.ell]
     }
 
-    /// Cached cross-Gram entry `⟨panel_i, panel_c⟩`, `i ≤ c`.
+    /// Cached cross-Gram entry `⟨panel_i, panel_c⟩`, `i ≤ c`.  In lazy
+    /// mode, off-diagonal reads require row i to have been materialized
+    /// by [`PanelStats::ensure_cross_row`] (the driver does so when it
+    /// accepts candidate i).
     #[inline]
     pub fn cross_at(&self, i: usize, c: usize) -> f64 {
         debug_assert!(i <= c, "cross_at: upper triangle only ({i} > {c})");
-        self.cross[c * (c + 1) / 2 + i]
+        if !self.cross.is_empty() {
+            return self.cross[c * (c + 1) / 2 + i];
+        }
+        if i == c {
+            return self.diag[c];
+        }
+        match &self.rows[i] {
+            Some(row) => row[c - i],
+            None => panic!("lazy cross row {i} read before ensure_cross_row"),
+        }
     }
 
-    /// `bᵀb` of candidate c (the cross diagonal).
+    /// `bᵀb` of candidate c (the cross diagonal — eager in every mode).
     #[inline]
     pub fn btb(&self, c: usize) -> f64 {
-        self.cross_at(c, c)
+        if !self.cross.is_empty() {
+            self.cross[c * (c + 1) / 2 + c]
+        } else {
+            self.diag[c]
+        }
+    }
+
+    /// Materialize lazy cross row `i` (`⟨panel_i, panel_c⟩` for
+    /// `c ∈ i..k`) if not already present.  No-op on eager results.
+    ///
+    /// Runs **sequentially** on the caller's thread: per shard, one
+    /// [`dots_into`] pass with `panel_i`'s shard slice as the shared
+    /// right-hand column, accumulated in ascending shard order — the
+    /// same per-entry dots in the same order as the eager triangle, so
+    /// materialized entries are bitwise identical to
+    /// [`CrossMode::Eager`]'s.  (Sequential is deliberate: a lazy row is
+    /// O((k−i)·m/shards) work per accepted candidate, and keeping it off
+    /// the pool preserves the one-dispatch-per-panel-pass contract.)
+    pub fn ensure_cross_row(&mut self, panel: &CandidatePanel, i: usize) {
+        if !self.cross.is_empty() {
+            return;
+        }
+        debug_assert!(
+            !self.diag.is_empty() || self.k == 0,
+            "ensure_cross_row on a Skip-mode PanelStats"
+        );
+        debug_assert_eq!(panel.len(), self.k, "panel/stats width mismatch");
+        if self.rows[i].is_some() {
+            return;
+        }
+        let span = self.k - i;
+        let mut row = vec![0.0f64; span];
+        let mut tmp = vec![0.0f64; span];
+        for s in 0..panel.n_shards() {
+            let bs = panel.col_shard(i, s);
+            dots_into(|w| panel.col_shard(i + w, s), span, bs, &mut tmp);
+            for (r, t) in row.iter_mut().zip(tmp.iter()) {
+                *r += *t;
+            }
+        }
+        self.rows[i] = Some(row);
     }
 }
 
-/// Four dots sharing one pass over `b`: returns
-/// `[dot(c0,b), dot(c1,b), dot(c2,b), dot(c3,b)]`, each entry **bitwise
-/// equal** to [`crate::linalg::dot`] of that column with `b`.
+/// Fallback block threshold when calibration is skipped or
+/// inconclusive: ~one LLC slice (the pre-calibration hard-coded value).
+pub const BLOCK_THRESHOLD_DEFAULT: usize = 4 << 20;
+
+/// Calibrated threshold clamp: below 1 MiB even L2-resident shards
+/// would take the blocked path for no gain; above 64 MiB no realistic
+/// LLC keeps a column resident anyway.
+const BLOCK_THRESHOLD_FLOOR: usize = 1 << 20;
+const BLOCK_THRESHOLD_CEIL: usize = 64 << 20;
+
+/// Once-per-process memoized threshold; 0 = not yet calibrated.
+static BLOCK_THRESHOLD: AtomicUsize = AtomicUsize::new(0);
+
+/// Test/bench override hook for [`block_threshold_bytes`]: pin the
+/// kernel-path selection deterministically (`1` forces the blocked/
+/// tiled kernels everywhere, `usize::MAX` forces the scalar per-column
+/// path, `0` clears the override so the next query re-calibrates).
+/// Process-global; safe to flip at any time because every path the
+/// threshold selects between is bitwise identical.
+pub fn set_block_threshold_bytes(bytes: usize) {
+    BLOCK_THRESHOLD.store(bytes, Ordering::Relaxed);
+}
+
+/// Column-bytes threshold above which the panel kernels switch from the
+/// cache-resident per-column pass to the blocked/tiled wide-lane
+/// kernels.
 ///
-/// This is the blocked building brick of the per-entry dot discipline:
-/// every column keeps `dot`'s four lane accumulators, lane-combine
-/// order, and sequential tail, so the result bits are independent of the
+/// Calibrated **once per process** on first query (the analogue of
+/// `PoolHandle::adaptive_min_work()` for the kernel layer, but lock-free
+/// on the hot path): streaming-dot throughput is probed at doubling
+/// buffer sizes and the threshold is the first size whose ns/element
+/// degrades ≥ 30% versus a cache-resident buffer — i.e. where passes
+/// actually start missing cache and b-pass sharing starts paying.
+/// Falls back to [`BLOCK_THRESHOLD_DEFAULT`] when no clear knee exists
+/// (huge LLC, noisy machine).  The selected value changes wall-clock
+/// only — every candidate path produces identical bits.
+pub fn block_threshold_bytes() -> usize {
+    let v = BLOCK_THRESHOLD.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let cal = calibrate_block_threshold();
+    // racing calibrators agree via CAS; a concurrent test override wins
+    let _ = BLOCK_THRESHOLD.compare_exchange(0, cal, Ordering::Relaxed, Ordering::Relaxed);
+    BLOCK_THRESHOLD.load(Ordering::Relaxed)
+}
+
+/// Median-free micro-probe: ns per element of a streaming dot over
+/// `elems`-element f64 buffers (best of 3 reps to shed scheduling
+/// noise).
+fn dot_ns_per_elem(elems: usize) -> f64 {
+    let a = vec![1.000_000_3f64; elems];
+    let b = vec![0.999_999_7f64; elems];
+    // enough reps that each probe is ≥ ~1M elements of work
+    let reps = ((1usize << 21) / elems.max(1)).max(1);
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let mut acc = 0.0f64;
+        for _ in 0..reps {
+            acc += dot(std::hint::black_box(&a), std::hint::black_box(&b));
+        }
+        std::hint::black_box(acc);
+        let ns = t0.elapsed().as_nanos() as f64 / (reps * elems.max(1)) as f64;
+        best = best.min(ns);
+    }
+    best
+}
+
+fn calibrate_block_threshold() -> usize {
+    // cache-resident baseline: 128 KiB per buffer
+    let resident = dot_ns_per_elem((1 << 17) / 8);
+    if !resident.is_finite() || resident <= 0.0 {
+        return BLOCK_THRESHOLD_DEFAULT;
+    }
+    for shift in 20..=24usize {
+        let bytes = 1usize << shift; // 1 MiB .. 16 MiB per buffer
+        if dot_ns_per_elem(bytes / 8) > resident * 1.3 {
+            return bytes.clamp(BLOCK_THRESHOLD_FLOOR, BLOCK_THRESHOLD_CEIL);
+        }
+    }
+    BLOCK_THRESHOLD_DEFAULT
+}
+
+/// Four dots sharing one pass over `b` — thin wrapper over the generic
+/// wide-lane brick [`crate::linalg::simd::dotn`], kept as the named
+/// 4-wide kernel (and its historical bitwise test anchor).  Every entry
+/// is bitwise equal to [`crate::linalg::dot`] of that column with `b`:
+/// each column keeps `dot`'s four lane accumulators, lane-combine order,
+/// and sequential tail, so the result bits are independent of the
 /// blocking — only the (cache-missing past the LLC) pass over `b` is
-/// shared, cutting b traffic 4×.  Perf pass #2 (EXPERIMENTS.md §Perf)
-/// originally used free-form per-column accumulators here; the panel
-/// refactor pinned the lanes to `dot`'s schedule so blocked and
-/// unblocked entries agree bit for bit (the property the panel path's
-/// bitwise contract rests on).
+/// shared, cutting b traffic 4×.
 fn dot4(c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64], b: &[f64]) -> [f64; 4] {
-    let n = b.len();
-    let chunks = n / 4;
-    // l[col][lane] — each column's four dot lanes
-    let mut l = [[0.0f64; 4]; 4];
-    for i in 0..chunks {
-        let j = i * 4;
-        let (b0, b1, b2, b3) = (b[j], b[j + 1], b[j + 2], b[j + 3]);
-        l[0][0] += c0[j] * b0;
-        l[0][1] += c0[j + 1] * b1;
-        l[0][2] += c0[j + 2] * b2;
-        l[0][3] += c0[j + 3] * b3;
-        l[1][0] += c1[j] * b0;
-        l[1][1] += c1[j + 1] * b1;
-        l[1][2] += c1[j + 2] * b2;
-        l[1][3] += c1[j + 3] * b3;
-        l[2][0] += c2[j] * b0;
-        l[2][1] += c2[j + 1] * b1;
-        l[2][2] += c2[j + 2] * b2;
-        l[2][3] += c2[j + 3] * b3;
-        l[3][0] += c3[j] * b0;
-        l[3][1] += c3[j + 1] * b1;
-        l[3][2] += c3[j + 2] * b2;
-        l[3][3] += c3[j + 3] * b3;
-    }
-    let mut out = [
-        (l[0][0] + l[0][1]) + (l[0][2] + l[0][3]),
-        (l[1][0] + l[1][1]) + (l[1][2] + l[1][3]),
-        (l[2][0] + l[2][1]) + (l[2][2] + l[2][3]),
-        (l[3][0] + l[3][1]) + (l[3][2] + l[3][3]),
-    ];
-    for j in chunks * 4..n {
-        out[0] += c0[j] * b[j];
-        out[1] += c1[j] * b[j];
-        out[2] += c2[j] * b[j];
-        out[3] += c3[j] * b[j];
-    }
-    out
+    simd::dotn(&[c0, c1, c2, c3], b)
 }
 
 /// `out[j] = ⟨column j, bs⟩` for `n_cols` columns provided by `col`,
 /// every entry bitwise equal to [`crate::linalg::dot`] — the one
 /// Gram-entry code path shared by [`gram_partial`],
-/// [`gram_panel_partial`], and [`panel_cross_partial`].  Past the LLC
-/// scale, four columns share each pass over `bs` via [`dot4`]; for
-/// cache-resident shards the plain per-column dot is faster.  The
-/// branch affects wall-clock only — both sides produce identical bits.
+/// [`gram_panel_partial`], [`panel_cross_partial`], and the lazy cross
+/// rows.  Past the calibrated [`block_threshold_bytes`] scale, columns
+/// share each pass over `bs` through the wide-lane `dotN` bricks —
+/// 8-wide once a column is ≥ 4× the threshold (the further past the LLC
+/// the stream, the more columns should amortize it), 4-wide in between;
+/// cache-resident shards keep the plain per-column dot.  The branch
+/// affects wall-clock only — all sides produce identical bits.
 fn dots_into<'a, F: Fn(usize) -> &'a [f64]>(col: F, n_cols: usize, bs: &[f64], out: &mut [f64]) {
     debug_assert_eq!(out.len(), n_cols);
-    const BLOCK_THRESHOLD_BYTES: usize = 4 << 20; // ~LLC slice
-    if bs.len() * std::mem::size_of::<f64>() < BLOCK_THRESHOLD_BYTES {
+    let bytes = bs.len() * std::mem::size_of::<f64>();
+    let threshold = block_threshold_bytes();
+    if bytes < threshold {
         for (j, a) in out.iter_mut().enumerate() {
             *a = dot(col(j), bs);
         }
         return;
     }
     let mut j = 0;
+    if bytes >= threshold.saturating_mul(4) {
+        while j + 8 <= n_cols {
+            let cols: [&[f64]; 8] = std::array::from_fn(|w| col(j + w));
+            out[j..j + 8].copy_from_slice(&simd::dotn(&cols, bs));
+            j += 8;
+        }
+    }
     while j + 4 <= n_cols {
-        let d = dot4(col(j), col(j + 1), col(j + 2), col(j + 3), bs);
-        out[j..j + 4].copy_from_slice(&d);
+        out[j..j + 4].copy_from_slice(&dot4(col(j), col(j + 1), col(j + 2), col(j + 3), bs));
         j += 4;
     }
     while j < n_cols {
@@ -532,15 +744,137 @@ pub fn gram_partial(store: &ColumnStore, s: usize, b_full: &[f64]) -> (Vec<f64>,
     (atb, dot(bs, bs))
 }
 
+/// Row-tile length (rows) of the tiled panel micro-kernel: a multiple
+/// of 4 (lane alignment) sized so one candidate tile (8 KiB) plus a few
+/// dozen store-column tiles stay L1/L2-resident while the lane state is
+/// carried in registers/L1.
+pub const PANEL_TILE_ROWS: usize = 1024;
+
+/// Candidate-block width of the tiled kernel: bounds the carried lane
+/// state at `ℓ × 16 × 32` bytes (L1-resident for training-sized ℓ) and
+/// is the reuse factor each store-column tile gets per row tile.
+const PANEL_TILE_CANDS: usize = 16;
+
 /// Per-shard store-vs-panel block for the candidate range `cr` — the map
 /// side of [`gram_panel_seq`] and the primary training kernel.
 ///
 /// Output is candidate-major: `out[(c − cr.start)·ℓ + j] =
-/// ⟨store_j, panel_c⟩` in shard `s`, every entry bitwise-dot
-/// ([`dots_into`]).  The shard's column block is streamed once per
-/// candidate with 4-column b-pass sharing past the LLC; tiling over
-/// `(shard, candidate range)` is the parallel backends' job.
+/// ⟨store_j, panel_c⟩` in shard `s`, every entry bitwise-dot.  Shards
+/// whose columns fit in cache stream once per candidate via
+/// [`dots_into`]; past [`block_threshold_bytes`] the row-tiled
+/// micro-kernel ([`gram_panel_partial_tiled`]) takes over.  Both sides
+/// produce identical bits — the switch is wall-clock only.
 pub fn gram_panel_partial(
+    store: &ColumnStore,
+    panel: &CandidatePanel,
+    s: usize,
+    cr: Range<usize>,
+) -> Vec<f64> {
+    debug_assert!(panel.partition_matches(store), "panel/store partitions must match");
+    let ell = store.len();
+    if ell == 0 || cr.is_empty() {
+        return vec![0.0f64; ell * cr.len()];
+    }
+    let rows = store.shard_range(s).len();
+    if rows * std::mem::size_of::<f64>() >= block_threshold_bytes() {
+        return gram_panel_partial_tiled(store, panel, s, cr, PANEL_TILE_ROWS);
+    }
+    let mut out = vec![0.0f64; ell * cr.len()];
+    for (ci, c) in cr.enumerate() {
+        let bs = panel.col_shard(c, s);
+        dots_into(|j| store.col_shard(j, s), ell, bs, &mut out[ci * ell..(ci + 1) * ell]);
+    }
+    out
+}
+
+/// The row-tiled panel micro-kernel: the same ℓ×|cr| block as
+/// [`gram_panel_partial`], computed in `tile_rows`-row blocks with
+/// carried dot lanes.
+///
+/// Loop structure: candidates are processed in [`PANEL_TILE_CANDS`]-wide
+/// blocks; within a block, row tiles advance over the shard, and within
+/// a (row tile, candidate) pair the store columns are swept through the
+/// wide-lane `dotN` bricks (8-wide, then 4-wide, then single-lane
+/// remainder).  Each (store col, candidate) entry owns a `[f64; 4]`
+/// lane accumulator carried across every tile; after the last tile the
+/// lanes are combined and the `< 4`-row shard tail is added
+/// sequentially — exactly [`crate::linalg::dot`]'s schedule per entry
+/// (see `linalg::simd`), so the output is **bitwise identical** to the
+/// untiled kernel for every `tile_rows` that is a positive multiple
+/// of 4.  The payoff is cache locality: per row tile, ℓ + 16 column
+/// tiles are touched for ℓ × 16 × `tile_rows` multiply-adds, instead of
+/// the untiled kernel's one full-shard stream per candidate.
+pub fn gram_panel_partial_tiled(
+    store: &ColumnStore,
+    panel: &CandidatePanel,
+    s: usize,
+    cr: Range<usize>,
+    tile_rows: usize,
+) -> Vec<f64> {
+    debug_assert!(panel.partition_matches(store), "panel/store partitions must match");
+    debug_assert!(tile_rows >= 4 && tile_rows % 4 == 0, "tile_rows must be a 4-multiple");
+    let ell = store.len();
+    let kc = cr.len();
+    let mut out = vec![0.0f64; ell * kc];
+    if ell == 0 || kc == 0 {
+        return out;
+    }
+    let rows = store.shard_range(s).len();
+    let full = rows & !3usize; // lane region; the < 4-row tail is sequential
+    let mut lanes: Vec<[f64; 4]> = Vec::new();
+    let mut cb0 = 0usize; // candidate-block start, relative to cr.start
+    while cb0 < kc {
+        let cb1 = (cb0 + PANEL_TILE_CANDS).min(kc);
+        let width = cb1 - cb0;
+        lanes.clear();
+        lanes.resize(ell * width, [0.0f64; 4]);
+        let mut t0 = 0usize;
+        while t0 < full {
+            let t1 = (t0 + tile_rows).min(full);
+            for w in 0..width {
+                let b = &panel.col_shard(cr.start + cb0 + w, s)[t0..t1];
+                let lrow = &mut lanes[w * ell..(w + 1) * ell];
+                let mut j = 0usize;
+                while j + 8 <= ell {
+                    let cols: [&[f64]; 8] =
+                        std::array::from_fn(|x| &store.col_shard(j + x, s)[t0..t1]);
+                    simd::dotn_update(&mut lrow[j..j + 8], &cols, b);
+                    j += 8;
+                }
+                while j + 4 <= ell {
+                    let cols: [&[f64]; 4] =
+                        std::array::from_fn(|x| &store.col_shard(j + x, s)[t0..t1]);
+                    simd::dotn_update(&mut lrow[j..j + 4], &cols, b);
+                    j += 4;
+                }
+                while j < ell {
+                    simd::lanes_update(&mut lrow[j], &store.col_shard(j, s)[t0..t1], b);
+                    j += 1;
+                }
+            }
+            t0 = t1;
+        }
+        for w in 0..width {
+            let btail = &panel.col_shard(cr.start + cb0 + w, s)[full..rows];
+            let dst = &mut out[(cb0 + w) * ell..(cb0 + w + 1) * ell];
+            for (j, d) in dst.iter_mut().enumerate() {
+                *d = simd::lanes_finish(
+                    lanes[w * ell + j],
+                    &store.col_shard(j, s)[full..rows],
+                    btail,
+                );
+            }
+        }
+        cb0 = cb1;
+    }
+    out
+}
+
+/// Fast-path (mixed-precision) variant of [`gram_panel_partial`]: every
+/// entry is [`crate::linalg::simd::dot_fast`] of the shard slices — f32
+/// tile accumulation, f64 carry.  **No bitwise contract**; reachable
+/// only through `NumericsMode::Fast`.
+pub fn gram_panel_partial_fast(
     store: &ColumnStore,
     panel: &CandidatePanel,
     s: usize,
@@ -554,7 +888,9 @@ pub fn gram_panel_partial(
     }
     for (ci, c) in cr.enumerate() {
         let bs = panel.col_shard(c, s);
-        dots_into(|j| store.col_shard(j, s), ell, bs, &mut out[ci * ell..(ci + 1) * ell]);
+        for (j, o) in out[ci * ell..(ci + 1) * ell].iter_mut().enumerate() {
+            *o = simd::dot_fast(store.col_shard(j, s), bs);
+        }
     }
     out
 }
@@ -577,34 +913,114 @@ pub fn panel_cross_partial(panel: &CandidatePanel, s: usize, cr: Range<usize>) -
     out
 }
 
+/// Per-shard cross-Gram **diagonal** for the candidate range `cr`:
+/// `out[c − cr.start] = ⟨panel_c, panel_c⟩` in shard `s`, per-entry
+/// bitwise-dot — the eager half of [`CrossMode::Lazy`] (`bᵀb` is read
+/// for every candidate's oracle call, so it never pays to defer it).
+pub fn panel_diag_partial(panel: &CandidatePanel, s: usize, cr: Range<usize>) -> Vec<f64> {
+    cr.map(|c| {
+        let bs = panel.col_shard(c, s);
+        dot(bs, bs)
+    })
+    .collect()
+}
+
+/// Fast-path variant of [`panel_diag_partial`]
+/// ([`crate::linalg::simd::dot_fast`]; no bitwise contract).
+pub fn panel_diag_partial_fast(panel: &CandidatePanel, s: usize, cr: Range<usize>) -> Vec<f64> {
+    cr.map(|c| {
+        let bs = panel.col_shard(c, s);
+        simd::dot_fast(bs, bs)
+    })
+    .collect()
+}
+
 /// Sequential in-shard-order reduction of the panel kernels — the exact
 /// reduction every backend must reproduce (bit-reproducibility anchor,
-/// like [`gram_stats_seq`] for the single-column kernel).  With
-/// `want_cross = false` the k×k triangle is skipped (VCA's projection
-/// batches need only the store-vs-panel block).
-pub fn gram_panel_seq(
-    store: &ColumnStore,
-    panel: &CandidatePanel,
-    want_cross: bool,
-) -> PanelStats {
+/// like [`gram_stats_seq`] for the single-column kernel).  The
+/// [`CrossMode`] selects how much of the k×k triangle rides the pass:
+/// all of it (`Eager`), just the diagonal with rows on demand (`Lazy`),
+/// or none (`Skip` — VCA's projection batches need only the
+/// store-vs-panel block).  Lazy and Eager agree bitwise on every entry
+/// that is ever read.
+pub fn gram_panel_seq(store: &ColumnStore, panel: &CandidatePanel, cross: CrossMode) -> PanelStats {
     debug_assert!(panel.partition_matches(store), "panel/store partitions must match");
     let ell = store.len();
     let k = panel.len();
     let mut atb = vec![0.0f64; ell * k];
-    let mut cross = vec![0.0f64; if want_cross { k * (k + 1) / 2 } else { 0 }];
+    let want_cross = cross == CrossMode::Eager;
+    let mut tri = vec![0.0f64; if want_cross { k * (k + 1) / 2 } else { 0 }];
+    let mut diag = vec![0.0f64; if cross == CrossMode::Lazy { k } else { 0 }];
     for s in 0..store.n_shards() {
         let pa = gram_panel_partial(store, panel, s, 0..k);
         for (a, p) in atb.iter_mut().zip(pa.iter()) {
             *a += *p;
         }
-        if want_cross {
-            let pc = panel_cross_partial(panel, s, 0..k);
-            for (a, p) in cross.iter_mut().zip(pc.iter()) {
-                *a += *p;
+        match cross {
+            CrossMode::Eager => {
+                let pc = panel_cross_partial(panel, s, 0..k);
+                for (a, p) in tri.iter_mut().zip(pc.iter()) {
+                    *a += *p;
+                }
             }
+            CrossMode::Lazy => {
+                let pd = panel_diag_partial(panel, s, 0..k);
+                for (a, p) in diag.iter_mut().zip(pd.iter()) {
+                    *a += *p;
+                }
+            }
+            CrossMode::Skip => {}
         }
     }
-    PanelStats::new(ell, k, atb, cross)
+    match cross {
+        CrossMode::Lazy => PanelStats::new_lazy(ell, k, atb, diag),
+        _ => PanelStats::new(ell, k, atb, tri),
+    }
+}
+
+/// Mixed-precision counterpart of [`gram_panel_seq`] — the
+/// `NumericsMode::Fast` reference reduction.  The store-vs-panel block
+/// and the cross diagonal run the f32-tile/f64-carry kernels; an
+/// `Eager` triangle stays on the exact kernels (off-diagonal cross
+/// entries feed the Theorem 4.9 inverse append — same policy as the
+/// PJRT f32 path).
+pub fn gram_panel_fast_seq(
+    store: &ColumnStore,
+    panel: &CandidatePanel,
+    cross: CrossMode,
+) -> PanelStats {
+    debug_assert!(panel.partition_matches(store), "panel/store partitions must match");
+    let ell = store.len();
+    let k = panel.len();
+    let mut atb = vec![0.0f64; ell * k];
+    let want_cross = cross == CrossMode::Eager;
+    let mut tri = vec![0.0f64; if want_cross { k * (k + 1) / 2 } else { 0 }];
+    let mut diag = vec![0.0f64; if cross == CrossMode::Lazy { k } else { 0 }];
+    for s in 0..store.n_shards() {
+        let pa = gram_panel_partial_fast(store, panel, s, 0..k);
+        for (a, p) in atb.iter_mut().zip(pa.iter()) {
+            *a += *p;
+        }
+        match cross {
+            CrossMode::Eager => {
+                let pc = panel_cross_partial(panel, s, 0..k);
+                for (a, p) in tri.iter_mut().zip(pc.iter()) {
+                    *a += *p;
+                }
+            }
+            CrossMode::Lazy => {
+                let pd = panel_diag_partial_fast(panel, s, 0..k);
+                for (a, p) in diag.iter_mut().zip(pd.iter()) {
+                    *a += *p;
+                }
+            }
+            CrossMode::Skip => {}
+        }
+    }
+    match cross {
+        CrossMode::Lazy => PanelStats::new_lazy(ell, k, atb, diag),
+        _ => PanelStats::new(ell, k, atb, tri),
+    }
 }
 
 /// Per-shard `|A_s·C + U_s|` written into a caller-owned row-major
@@ -907,7 +1323,7 @@ mod tests {
             for c in &cands {
                 panel.push_col(c);
             }
-            let ps = gram_panel_seq(&store, &panel, true);
+            let ps = gram_panel_seq(&store, &panel, CrossMode::Eager);
             if ps.ell() != ell || ps.k() != k || !ps.has_cross() {
                 return Err("panel stats shape mismatch".into());
             }
@@ -945,10 +1361,136 @@ mod tests {
         let mut panel = CandidatePanel::new_like(&store);
         let cand: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
         panel.push_col(&cand);
-        let ps = gram_panel_seq(&store, &panel, false);
+        let ps = gram_panel_seq(&store, &panel, CrossMode::Skip);
         assert!(!ps.has_cross());
+        assert!(!ps.is_lazy());
         let (atb, _) = gram_stats_seq(&store, &cand);
         assert_eq!(bits(&atb), bits(ps.atb_col(0)));
+    }
+
+    #[test]
+    fn lazy_cross_matches_eager_bitwise_after_ensure() {
+        property(16, |rng| {
+            let m = rng.below(90);
+            let shards = 1 + rng.below(5);
+            let ell = 1 + rng.below(4);
+            let k = 1 + rng.below(7);
+            let cols = random_cols(rng, m, ell);
+            let store = ColumnStore::from_cols(&cols, shards);
+            let mut panel = CandidatePanel::new_like(&store);
+            for c in &random_cols(rng, m, k) {
+                panel.push_col(c);
+            }
+            let eager = gram_panel_seq(&store, &panel, CrossMode::Eager);
+            let mut lazy = gram_panel_seq(&store, &panel, CrossMode::Lazy);
+            if !lazy.is_lazy() || lazy.has_cross() {
+                return Err("lazy stats shape mismatch".into());
+            }
+            for c in 0..k {
+                if bits(eager.atb_col(c)) != bits(lazy.atb_col(c)) {
+                    return Err(format!("lazy atb {c} diverges"));
+                }
+                // diagonal is eager in lazy mode — readable immediately
+                if eager.btb(c).to_bits() != lazy.btb(c).to_bits() {
+                    return Err(format!("lazy diag {c} diverges"));
+                }
+            }
+            for i in 0..k {
+                lazy.ensure_cross_row(&panel, i);
+                lazy.ensure_cross_row(&panel, i); // idempotent
+            }
+            for c in 0..k {
+                for i in 0..=c {
+                    if eager.cross_at(i, c).to_bits() != lazy.cross_at(i, c).to_bits() {
+                        return Err(format!("lazy cross ({i},{c}) diverges"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_panel_kernel_is_bitwise_equal_across_tile_sizes() {
+        property(12, |rng| {
+            // m deliberately NOT a multiple of the tile sizes below
+            let m = 1 + rng.below(150);
+            let shards = 1 + rng.below(4);
+            let ell = 1 + rng.below(12); // straddles the 8- and 4-wide bricks
+            let k = 1 + rng.below(20); // straddles the 16-candidate block
+            let cols = random_cols(rng, m, ell);
+            let store = ColumnStore::from_cols(&cols, shards);
+            let mut panel = CandidatePanel::new_like(&store);
+            for c in &random_cols(rng, m, k) {
+                panel.push_col(c);
+            }
+            for s in 0..store.n_shards() {
+                let reference: Vec<f64> = (0..k)
+                    .flat_map(|c| {
+                        (0..ell)
+                            .map(|j| dot(store.col_shard(j, s), panel.col_shard(c, s)))
+                            .collect::<Vec<f64>>()
+                    })
+                    .collect();
+                for tile in [4usize, 8, 12, 64, 1024] {
+                    let tiled = gram_panel_partial_tiled(&store, &panel, s, 0..k, tile);
+                    if bits(&tiled) != bits(&reference) {
+                        return Err(format!(
+                            "tiled kernel diverges at shard {s} tile {tile} (m={m})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_panel_kernels_stay_within_f32_error_on_benign_data() {
+        let mut rng = Rng::new(53);
+        let m = 5000;
+        let cols: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+        let store = ColumnStore::from_cols(&cols, 3);
+        let mut panel = CandidatePanel::new_like(&store);
+        for _ in 0..4 {
+            let c: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+            panel.push_col(&c);
+        }
+        let exact = gram_panel_seq(&store, &panel, CrossMode::Lazy);
+        let fast = gram_panel_fast_seq(&store, &panel, CrossMode::Lazy);
+        assert!(fast.is_lazy());
+        let mut scale = 1.0f64;
+        for c in 0..4 {
+            for j in 0..3 {
+                scale = scale.max(exact.atb_col(c)[j].abs());
+            }
+            scale = scale.max(exact.btb(c).abs());
+        }
+        for c in 0..4 {
+            for j in 0..3 {
+                let d = (fast.atb_col(c)[j] - exact.atb_col(c)[j]).abs();
+                assert!(d <= 1e-3 * scale, "fast atb ({j},{c}) off by {d}");
+            }
+            let d = (fast.btb(c) - exact.btb(c)).abs();
+            assert!(d <= 1e-3 * scale, "fast diag {c} off by {d}");
+        }
+    }
+
+    #[test]
+    fn block_threshold_override_and_calibration_bounds() {
+        // the override hook pins the value verbatim…
+        set_block_threshold_bytes(12345);
+        assert_eq!(block_threshold_bytes(), 12345);
+        // …and clearing it re-calibrates into the clamp (or the default)
+        set_block_threshold_bytes(0);
+        let v = block_threshold_bytes();
+        assert!(
+            (1usize << 20..=64 << 20).contains(&v) || v == BLOCK_THRESHOLD_DEFAULT,
+            "calibrated block threshold {v} outside clamp"
+        );
+        // leave the memoized value in place for sibling tests (any value
+        // is bit-safe; re-calibration is just wasted time)
     }
 
     #[test]

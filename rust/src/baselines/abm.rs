@@ -17,7 +17,10 @@
 //! panel cross entries (bitwise identical to the per-candidate
 //! reference, [`Abm::fit_with_backend_per_candidate`]).
 
-use crate::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend, PanelRecipe};
+use crate::backend::{
+    CandidatePanel, ColumnStore, ComputeBackend, CrossMode, NativeBackend, NumericsMode,
+    PanelRecipe,
+};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::linalg::eigen::smallest_eigenpair;
@@ -150,7 +153,11 @@ impl Abm {
                         .map(|bt| PanelRecipe { parent: bt.parent, var: bt.var })
                         .collect();
                     let panel = CandidatePanel::from_recipes(&cols, x, &recipes);
-                    let pstats = backend.gram_panel(&cols, &panel, true);
+                    // ABM reads cross entries for rejected candidates too
+                    // (bordered-Gram eigenproblems), so the eager triangle
+                    // is the right shape here; exact numerics always
+                    let pstats =
+                        backend.gram_panel(&cols, &panel, CrossMode::Eager, NumericsMode::Exact);
                     stats.panel_passes += 1;
                     stats.panel_cols += chunk.len();
                     let mut accepted: Vec<usize> = Vec::new();

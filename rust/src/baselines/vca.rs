@@ -27,7 +27,9 @@
 //! The spurious-vanishing problem the paper discusses (§1.2, Table 3's
 //! spam row) is inherent to this normalization and intentionally left in.
 
-use crate::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend};
+use crate::backend::{
+    CandidatePanel, ColumnStore, ComputeBackend, CrossMode, NativeBackend, NumericsMode,
+};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
 use crate::linalg::eigen::sym_eig;
@@ -435,7 +437,12 @@ impl Vca {
                         cand_panel.push_col(&evals[c]);
                     }
                     // projections need no cross block — skip the k×k triangle
-                    let ws_all = backend.gram_panel(&f_store, &cand_panel, false);
+                    let ws_all = backend.gram_panel(
+                        &f_store,
+                        &cand_panel,
+                        CrossMode::Skip,
+                        NumericsMode::Exact,
+                    );
                     stats.panel_passes += 1;
                     stats.panel_cols += chunk.len();
                     for (idx, &c) in chunk.iter().enumerate() {
@@ -479,7 +486,8 @@ impl Vca {
             let mut gram = Matrix::zeros(k, k);
             if panels {
                 let empty = ColumnStore::new(m, n_shards);
-                let ps = backend.gram_panel(&empty, &proj_panel, true);
+                let ps =
+                    backend.gram_panel(&empty, &proj_panel, CrossMode::Eager, NumericsMode::Exact);
                 stats.panel_passes += 1;
                 stats.panel_cols += k;
                 for i in 0..k {

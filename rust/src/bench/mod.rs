@@ -1,12 +1,16 @@
 //! Benchmark harness (criterion is unavailable in this offline
 //! environment; this is the crate's replacement).
 //!
-//! Two layers:
+//! Three layers:
 //! * [`Bencher`] — warmup + repeated timing of a closure, reporting
 //!   median/p10/p90 (and writing CSV rows under `target/bench_results/`).
 //! * [`Series`] — named (x, y±σ) curves for the paper's figures, printed
 //!   as aligned tables plus a crude ASCII log-plot so `cargo bench`
 //!   output is directly comparable to the paper.
+//! * [`BenchJson`] — the machine-readable perf trajectory: flat
+//!   key→value artifacts (`BENCH_<id>.json`) that
+//!   `scripts/bench_gate.sh` diffs across commits and fails on
+//!   regression.
 
 pub mod figures;
 
@@ -63,6 +67,60 @@ impl Bencher {
             p90_s: pick(0.9),
             iters: self.iters,
         }
+    }
+}
+
+/// Machine-readable bench artifact: flat key→value cells written as
+/// `target/bench_results/BENCH_<id>.json`, one `"key": value` pair per
+/// line so `scripts/bench_gate.sh` can parse and diff trajectories with
+/// plain sed/awk (the container has no jq).  Timing cells end in `_ns`
+/// by convention ([`BenchJson::ns`]); the regression gate compares only
+/// those keys.
+pub struct BenchJson {
+    id: String,
+    cells: Vec<(String, String)>,
+}
+
+impl BenchJson {
+    pub fn new(id: impl Into<String>) -> Self {
+        BenchJson { id: id.into(), cells: Vec::new() }
+    }
+
+    /// Raw numeric cell (counters, speedups, error magnitudes).
+    pub fn num(&mut self, key: &str, v: f64) {
+        self.cells.push((key.to_string(), format!("{v}")));
+    }
+
+    /// Integer cell (dispatch/panel counters).
+    pub fn int(&mut self, key: &str, v: u64) {
+        self.cells.push((key.to_string(), format!("{v}")));
+    }
+
+    /// String cell (kernel names, modes).
+    pub fn str_cell(&mut self, key: &str, v: &str) {
+        self.cells.push((key.to_string(), format!("\"{}\"", crate::util::json_escape(v))));
+    }
+
+    /// Timing cell: `secs` recorded as nanoseconds under `<key>_ns` —
+    /// the suffix the regression gate keys on.
+    pub fn ns(&mut self, key: &str, secs: f64) {
+        self.num(&format!("{key}_ns"), secs * 1e9);
+    }
+
+    /// Write `target/bench_results/BENCH_<id>.json` and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = PathBuf::from("target/bench_results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.id));
+        let mut body = String::from("{\n");
+        body.push_str(&format!("  \"bench_id\": \"{}\"", crate::util::json_escape(&self.id)));
+        for (k, v) in &self.cells {
+            body.push_str(&format!(",\n  \"{}\": {v}", crate::util::json_escape(k)));
+        }
+        body.push_str("\n}\n");
+        std::fs::write(&path, body)?;
+        println!("[json] {}", path.display());
+        Ok(path)
     }
 }
 
@@ -210,6 +268,24 @@ mod tests {
         assert_eq!(x, 10.0);
         assert_eq!(m, 2.0);
         assert!(sd > 0.9 && sd < 1.1);
+    }
+
+    #[test]
+    fn bench_json_writes_flat_gate_parsable_artifact() {
+        let mut j = BenchJson::new("unit_test_bench");
+        j.ns("kernel_m1000", 1.5e-3);
+        j.int("dispatches", 7);
+        j.num("speedup", 2.25);
+        j.str_cell("mode", "exact");
+        let path = j.write().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\n"), "{text}");
+        assert!(text.ends_with("}\n"), "{text}");
+        assert!(text.contains("\"bench_id\": \"unit_test_bench\""));
+        // the _ns convention the gate's sed parser keys on: one pair per line
+        assert!(text.contains("\"kernel_m1000_ns\": 1500000"), "{text}");
+        assert!(text.contains("\"dispatches\": 7"));
+        assert!(text.contains("\"mode\": \"exact\""));
     }
 
     #[test]

@@ -32,7 +32,7 @@
 
 pub mod persist;
 
-use crate::backend::{ComputeBackend, NativeBackend};
+use crate::backend::{ComputeBackend, NativeBackend, NumericsMode};
 use crate::baselines::abm::{Abm, AbmConfig};
 use crate::baselines::vca::{Vca, VcaConfig, VcaModel};
 use crate::error::{AviError, Result};
@@ -115,7 +115,8 @@ impl FitReport {
     /// One-line JSON document of the report — sizes, wall-clock, and the
     /// raw [`FitStats`] counters (incl. the Table-3 panel attribution:
     /// `panel_passes`/`panel_cols`/`cross_cache_hits`, plus AGD
-    /// `warm_starts`), consumed by the CLI and the benches.
+    /// `warm_starts` and the fast-numerics error budget), consumed by
+    /// the CLI and the benches.
     pub fn to_json(&self) -> String {
         let s = &self.stats;
         format!(
@@ -124,7 +125,9 @@ impl FitReport {
              \"solver_runs\":{},\"solver_iters\":{},\"warm_starts\":{},\
              \"wihb_resolves\":{},\"gram_rebuilds\":{},\
              \"inf_disabled_ihb\":{},\"degree_reached\":{},\
-             \"panel_passes\":{},\"panel_cols\":{},\"cross_cache_hits\":{}}}",
+             \"panel_passes\":{},\"panel_cols\":{},\"cross_cache_hits\":{},\
+             \"numerics\":\"{}\",\"fast_max_abs_err\":{:e},\
+             \"fast_err_budget\":{:e}}}",
             crate::util::json_escape(&self.name),
             self.n_generators,
             self.n_order_terms,
@@ -141,6 +144,9 @@ impl FitReport {
             s.panel_passes,
             s.panel_cols,
             s.cross_cache_hits,
+            s.numerics.as_str(),
+            s.fast_max_abs_err,
+            s.fast_err_budget,
         )
     }
 }
@@ -533,12 +539,21 @@ pub struct EstimatorBuilder {
     psi: f64,
     tau: Option<f64>,
     max_degree: Option<u32>,
+    numerics: Option<NumericsMode>,
+    fast_tol: Option<f64>,
 }
 
 impl EstimatorBuilder {
     /// Start from a method name (see [`EstimatorConfig::known_methods`]).
     pub fn new(method: impl Into<String>) -> Self {
-        EstimatorBuilder { method: method.into(), psi: 0.005, tau: None, max_degree: None }
+        EstimatorBuilder {
+            method: method.into(),
+            psi: 0.005,
+            tau: None,
+            max_degree: None,
+            numerics: None,
+            fast_tol: None,
+        }
     }
 
     /// Vanishing parameter ψ (default 0.005, the paper's working point).
@@ -556,6 +571,21 @@ impl EstimatorBuilder {
     /// Border-degree safety cap.
     pub fn max_degree(mut self, d: u32) -> Self {
         self.max_degree = Some(d);
+        self
+    }
+
+    /// Panel-kernel numerics (OAVI family only): `NumericsMode::Fast`
+    /// opts into the f32-accumulated panel kernels under the measured
+    /// error budget.  Rejected for ABM/VCA, whose panel reads (bordered
+    /// Gram eigenproblems, projections) stay on the exact path.
+    pub fn numerics(mut self, mode: NumericsMode) -> Self {
+        self.numerics = Some(mode);
+        self
+    }
+
+    /// Fast-mode error tolerance (see `OaviConfig::fast_tol`).
+    pub fn fast_tol(mut self, tol: f64) -> Self {
+        self.fast_tol = Some(tol);
         self
     }
 
@@ -586,13 +616,29 @@ impl EstimatorBuilder {
                 if let Some(d) = self.max_degree {
                     c.max_degree = d;
                 }
+                if let Some(n) = self.numerics {
+                    c.numerics = n;
+                }
+                if let Some(t) = self.fast_tol {
+                    c.fast_tol = t;
+                }
             }
             EstimatorConfig::Abm(c) => {
+                if self.numerics == Some(NumericsMode::Fast) {
+                    return Err(AviError::Config(
+                        "fast numerics is only supported by the OAVI family".into(),
+                    ));
+                }
                 if let Some(d) = self.max_degree {
                     c.max_degree = d;
                 }
             }
             EstimatorConfig::Vca(c) => {
+                if self.numerics == Some(NumericsMode::Fast) {
+                    return Err(AviError::Config(
+                        "fast numerics is only supported by the OAVI family".into(),
+                    ));
+                }
                 if let Some(d) = self.max_degree {
                     c.max_degree = d;
                 }
@@ -650,6 +696,9 @@ mod tests {
             "\"cross_cache_hits\":",
             "\"warm_starts\":",
             "\"oracle_calls\":",
+            "\"numerics\":\"exact\"",
+            "\"fast_max_abs_err\":",
+            "\"fast_err_budget\":",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
@@ -721,6 +770,30 @@ mod tests {
                 assert_eq!(c.max_degree, 3);
             }
             _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn builder_numerics_is_oavi_only() {
+        let cfg = EstimatorBuilder::new("cgavi-ihb")
+            .numerics(NumericsMode::Fast)
+            .fast_tol(1e-2)
+            .build()
+            .unwrap();
+        match cfg {
+            EstimatorConfig::Oavi(c) => {
+                assert_eq!(c.numerics, NumericsMode::Fast);
+                assert_eq!(c.fast_tol, 1e-2);
+            }
+            _ => unreachable!(),
+        }
+        for name in ["abm", "vca"] {
+            assert!(
+                EstimatorBuilder::new(name).numerics(NumericsMode::Fast).build().is_err(),
+                "{name} must reject fast numerics"
+            );
+            // exact is the default everywhere and always accepted
+            assert!(EstimatorBuilder::new(name).numerics(NumericsMode::Exact).build().is_ok());
         }
     }
 

@@ -2,14 +2,28 @@
 //!
 //! OAVI's oracle works on Gram matrices `B = AᵀA ∈ R^{ℓ×ℓ}` with ℓ ≤ a few
 //! hundred, plus streaming O(m·ℓ) products against the evaluation matrix.
-//! Everything here is sized for that regime: straightforward cache-friendly
-//! loops, no SIMD intrinsics (the compiler autovectorizes the inner dots),
-//! and numerically defensive factorizations.
+//! The small-ℓ factorization side stays straightforward cache-friendly
+//! loops with numerically defensive factorizations; the streaming O(m·ℓ)
+//! side has an explicit SIMD-shaped kernel layer in [`simd`]: wide-lane
+//! dot bricks (`dotN` — 4 or 8 columns sharing one pass over the
+//! right-hand column) and carried-lane row tiling, both written as
+//! unrolled f64x4-lane loops the compiler lowers to vector code.
+//!
+//! [`dot`] below is the **bitwise anchor** of that whole kernel family:
+//! its fixed schedule (four lane accumulators over the `n/4` chunks,
+//! lane combine `(s0+s1)+(s2+s3)`, sequential `n%4` tail) is reproduced
+//! per output entry by every exact kernel in `backend/store.rs`, so
+//! blocking, lane width, and row tiling change wall-clock only, never
+//! result bits.  The one deliberate exception is the opt-in
+//! mixed-precision path ([`simd::dot_fast`], `NumericsMode::Fast`),
+//! which trades the bitwise contract for f32 tile accumulation under a
+//! measured error budget.
 
 pub mod chol;
 pub mod dense;
 pub mod eigen;
 pub mod gram;
+pub mod simd;
 
 pub use chol::Cholesky;
 pub use dense::Matrix;

@@ -1,0 +1,237 @@
+//! Wide-lane dot-product bricks: the SIMD-shaped building blocks of the
+//! panel kernel family in `backend/store.rs`.
+//!
+//! Everything here is organized around one invariant, the **per-entry
+//! dot discipline**: every f64 result produced by these bricks is
+//! bitwise equal to [`crate::linalg::dot`] of the two slices involved.
+//! `dot` fixes a schedule — four lane accumulators over the `n/4`
+//! 4-element chunks, lane combine `(s0+s1)+(s2+s3)`, then a sequential
+//! `n%4` tail — and each brick reproduces exactly that schedule *per
+//! output entry*, no matter how many columns share a pass over the
+//! right-hand side ([`dotn`]) or how the row range is tiled
+//! ([`lanes_update`]/[`lanes_finish`] with carried lane state).  Width
+//! and tiling therefore change wall-clock only, never bits — the
+//! property the panel parity suite (`rust/tests/runtime_parity.rs`,
+//! `rust/tests/kernel_parity.rs`) pins down.
+//!
+//! Two degrees of freedom are exposed:
+//!
+//! * **Column width** — [`dotn`] computes N dots sharing one streaming
+//!   pass over `b` (N = 4 and N = 8 are the bricks `store::dots_into`
+//!   selects between by shard size).  Each of the N columns keeps its
+//!   own `[f64; 4]` lane state, so widening never perturbs a column's
+//!   bits; it only amortizes the (cache-missing past the LLC) `b`
+//!   traffic across more columns.
+//! * **Row tiling** — [`lanes_update`] advances a column's four lanes
+//!   over any 4-multiple row tile, and [`lanes_finish`] performs the
+//!   lane combine plus the final `< 4`-row sequential tail.  Because
+//!   tile boundaries fall on multiples of 4, element `g` lands in lane
+//!   `g % 4` in ascending-`g` order exactly as in the single-pass
+//!   `dot`, so carrying lanes across L1/L2-sized row blocks (the tiled
+//!   panel kernel) is bit-transparent.
+//!
+//! The opt-in **fast path** ([`dot_fast`]) deliberately breaks the
+//! discipline: products are accumulated in f32 within
+//! [`FAST_TILE_ROWS`]-row tiles (8 f32 lanes, freely reassociable) and
+//! carried across tiles in f64, bounding the accumulation error by
+//! O(`FAST_TILE_ROWS` · ε_f32) per tile independent of m.  It is only
+//! reachable through `NumericsMode::Fast`, which the driver guards with
+//! a measured error budget against the f64 reference.
+
+use std::array;
+
+/// Row-tile length for the f32 fast-path accumulation: error grows with
+/// the number of f32 additions per tile, so the tile bounds it at
+/// O(`FAST_TILE_ROWS` · ε_f32) regardless of total row count.
+pub const FAST_TILE_ROWS: usize = 4096;
+
+/// Advance one column's four dot lanes over a 4-multiple row tile.
+///
+/// `a.len() == b.len()` and `a.len() % 4 == 0`; element `j` of the tile
+/// accumulates into lane `j % 4`, matching [`crate::linalg::dot`]'s
+/// chunk loop.  Calling this over consecutive tiles `[0, t1), [t1, t2),
+/// …` (each boundary a multiple of 4) leaves `l` bitwise equal to the
+/// lane state of one un-tiled pass.
+#[inline]
+pub fn lanes_update(l: &mut [f64; 4], a: &[f64], b: &[f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % 4, 0, "lane tiles must be 4-multiples");
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        l[0] += a[j] * b[j];
+        l[1] += a[j + 1] * b[j + 1];
+        l[2] += a[j + 2] * b[j + 2];
+        l[3] += a[j + 3] * b[j + 3];
+    }
+}
+
+/// Combine four carried lanes and fold in the `< 4`-row sequential
+/// tail — exactly `dot`'s `(s0+s1)+(s2+s3)` + tail epilogue, so the
+/// result is bitwise [`crate::linalg::dot`] of the full (tiles + tail)
+/// row range.
+#[inline]
+pub fn lanes_finish(l: [f64; 4], a_tail: &[f64], b_tail: &[f64]) -> f64 {
+    debug_assert_eq!(a_tail.len(), b_tail.len());
+    debug_assert!(a_tail.len() < 4, "tail must be the n % 4 remainder");
+    let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+    for (x, y) in a_tail.iter().zip(b_tail.iter()) {
+        s += x * y;
+    }
+    s
+}
+
+/// Advance N columns' lane states over one 4-multiple row tile sharing
+/// a single pass over `b` — the generic wide brick behind `dot4`/`dot8`.
+///
+/// `lanes.len() == N`; each column's `[f64; 4]` evolves exactly as a
+/// solo [`lanes_update`] would (the width only interleaves independent
+/// accumulators), so per-column bits are width-invariant.
+#[inline]
+pub fn dotn_update<const N: usize>(lanes: &mut [[f64; 4]], cols: &[&[f64]; N], b: &[f64]) {
+    debug_assert_eq!(lanes.len(), N);
+    debug_assert_eq!(b.len() % 4, 0, "lane tiles must be 4-multiples");
+    let chunks = b.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let (b0, b1, b2, b3) = (b[j], b[j + 1], b[j + 2], b[j + 3]);
+        for (l, col) in lanes.iter_mut().zip(cols.iter()) {
+            debug_assert_eq!(col.len(), b.len());
+            l[0] += col[j] * b0;
+            l[1] += col[j + 1] * b1;
+            l[2] += col[j + 2] * b2;
+            l[3] += col[j + 3] * b3;
+        }
+    }
+}
+
+/// N dots sharing one pass over `b`: `out[w]` is bitwise equal to
+/// [`crate::linalg::dot`]`(cols[w], b)` for every width N.
+pub fn dotn<const N: usize>(cols: &[&[f64]; N], b: &[f64]) -> [f64; N] {
+    let n = b.len();
+    let full = n & !3usize;
+    let mut lanes = [[0.0f64; 4]; N];
+    let heads: [&[f64]; N] = array::from_fn(|w| &cols[w][..full]);
+    dotn_update(&mut lanes, &heads, &b[..full]);
+    array::from_fn(|w| lanes_finish(lanes[w], &cols[w][full..], &b[full..]))
+}
+
+/// One f32-accumulated row tile of the fast path: 8 f32 lanes over the
+/// `n/8` chunks, freely combined, sequential f32 tail.  No bitwise
+/// contract — callers carry the per-tile sums in f64 ([`dot_fast`]).
+#[inline]
+fn dot_fast_tile(a: &[f64], b: &[f64]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut l = [0.0f32; 8];
+    for i in 0..chunks {
+        let j = i * 8;
+        for (w, lw) in l.iter_mut().enumerate() {
+            *lw += (a[j + w] as f32) * (b[j + w] as f32);
+        }
+    }
+    let mut s = ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]));
+    for j in chunks * 8..n {
+        s += (a[j] as f32) * (b[j] as f32);
+    }
+    s
+}
+
+/// Mixed-precision dot: f32 accumulation within [`FAST_TILE_ROWS`]-row
+/// tiles, f64 carry across tiles.  The `NumericsMode::Fast` kernel
+/// brick — approximate by design, guarded at fit time by the driver's
+/// measured error budget against the exact f64 reference.
+pub fn dot_fast(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = 0.0f64;
+    let mut t0 = 0usize;
+    while t0 < n {
+        let t1 = (t0 + FAST_TILE_ROWS).min(n);
+        acc += f64::from(dot_fast_tile(&a[t0..t1], &b[t0..t1]));
+        t0 = t1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+    use crate::util::rng::Rng;
+
+    fn vecs(rng: &mut Rng, n: usize, count: usize) -> Vec<Vec<f64>> {
+        (0..count).map(|_| (0..n).map(|_| rng.normal()).collect()).collect()
+    }
+
+    #[test]
+    fn dotn_is_bitwise_dot_for_all_widths_and_tails() {
+        let mut rng = Rng::new(41);
+        // lengths straddling both the 4-chunk and 8-chunk boundaries
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 63, 64, 65, 66, 67, 257] {
+            let cols = vecs(&mut rng, n, 8);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let c2: [&[f64]; 2] = [&cols[0], &cols[1]];
+            let c4: [&[f64]; 4] = [&cols[0], &cols[1], &cols[2], &cols[3]];
+            let c8: [&[f64]; 8] = std::array::from_fn(|w| cols[w].as_slice());
+            let d2 = dotn(&c2, &b);
+            let d4 = dotn(&c4, &b);
+            let d8 = dotn(&c8, &b);
+            for (w, col) in cols.iter().enumerate() {
+                let want = dot(col, &b).to_bits();
+                if w < 2 {
+                    assert_eq!(d2[w].to_bits(), want, "dotn::<2> lane {w} at n={n}");
+                }
+                if w < 4 {
+                    assert_eq!(d4[w].to_bits(), want, "dotn::<4> lane {w} at n={n}");
+                }
+                assert_eq!(d8[w].to_bits(), want, "dotn::<8> lane {w} at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn carried_lanes_across_tiles_are_bitwise_dot() {
+        let mut rng = Rng::new(43);
+        for n in [0usize, 3, 4, 11, 12, 37, 64, 101, 130] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let full = n & !3usize;
+            // tile the lane region at several 4-multiple granularities,
+            // including tiles that don't divide the region evenly
+            for tile in [4usize, 8, 12, 20, 64] {
+                let mut l = [0.0f64; 4];
+                let mut t0 = 0usize;
+                while t0 < full {
+                    let t1 = (t0 + tile).min(full);
+                    lanes_update(&mut l, &a[t0..t1], &b[t0..t1]);
+                    t0 = t1;
+                }
+                let got = lanes_finish(l, &a[full..], &b[full..]);
+                assert_eq!(
+                    got.to_bits(),
+                    dot(&a, &b).to_bits(),
+                    "tiled lanes diverge at n={n} tile={tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_fast_is_close_on_benign_data() {
+        let mut rng = Rng::new(47);
+        let n = 3 * FAST_TILE_ROWS + 117; // several tiles + ragged tail
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let exact = dot(&a, &b);
+        let fast = dot_fast(&a, &b);
+        // uniform [0,1) products: |exact| ~ n/4; f32 tile accumulation
+        // keeps the relative error far below 1e-3
+        assert!(
+            (fast - exact).abs() <= 1e-3 * exact.abs().max(1.0),
+            "fast dot off by {} (exact {exact})",
+            (fast - exact).abs()
+        );
+    }
+}

@@ -32,8 +32,9 @@ use avi_scale::coordinator::service::{
     latency_percentiles, ServeConfig, ServeRequest, DEFAULT_QUEUE_CAPACITY,
 };
 use avi_scale::data::{load_registry_dataset, REGISTRY};
+use avi_scale::backend::NumericsMode;
 use avi_scale::error::Result;
-use avi_scale::estimator::EstimatorConfig;
+use avi_scale::estimator::{EstimatorBuilder, EstimatorConfig};
 use avi_scale::oavi::OaviConfig;
 use avi_scale::ordering::FeatureOrdering;
 use avi_scale::pipeline::{
@@ -119,6 +120,15 @@ OPTIONS:
                          different store shard count (hence different
                          bits) than the old per-fit ShardedBackend(4)
   --ordering <pearson|reverse|native>               (default pearson)
+  --numerics <exact|fast>  panel-kernel numerics    (default exact).
+                         'fast' (OAVI family only) opts into the
+                         f32-accumulated panel kernels; the fit measures
+                         max |Δ| vs the f64 reference on a sampled Gram
+                         sub-block, fails if it exceeds the budget, and
+                         reports both in the FitReport JSON
+                         (fast_max_abs_err / fast_err_budget)
+  --fast-tol <f64>       fast-mode error tolerance, relative to the
+                         largest sampled exact entry (default 1e-3)
 
 SERVE OPTIONS:
   --requests <n>         request count              (default 2000)
@@ -162,7 +172,25 @@ fn opt_usize(opts: &HashMap<String, String>, key: &str, default: usize) -> usize
 
 fn estimator_for(opts: &HashMap<String, String>, psi: f64) -> Result<EstimatorConfig> {
     let name = opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb");
-    EstimatorConfig::parse(name, psi)
+    let mut builder = EstimatorBuilder::new(name).psi(psi);
+    if let Some(mode) = opts.get("numerics") {
+        builder = builder.numerics(match mode.as_str() {
+            "exact" => NumericsMode::Exact,
+            "fast" => NumericsMode::Fast,
+            other => {
+                return Err(avi_scale::AviError::Config(format!(
+                    "--numerics must be exact|fast, got '{other}'"
+                )))
+            }
+        });
+    }
+    if let Some(tol) = opts.get("fast-tol") {
+        let tol: f64 = tol.parse().map_err(|_| {
+            avi_scale::AviError::Config(format!("--fast-tol '{tol}': not a number"))
+        })?;
+        builder = builder.fast_tol(tol);
+    }
+    builder.build()
 }
 
 fn ordering_for(name: &str) -> FeatureOrdering {

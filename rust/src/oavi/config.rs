@@ -1,5 +1,6 @@
 //! OAVI configuration: solver, IHB mode, vanishing parameter, safeguards.
 
+use crate::backend::NumericsMode;
 use crate::error::{AviError, Result};
 use crate::solvers::SolverKind;
 
@@ -51,6 +52,16 @@ pub struct OaviConfig {
     /// dispatch granularity only; results are bitwise identical for any
     /// value.
     pub panel_budget_cols: usize,
+    /// Panel-kernel numerics: [`NumericsMode::Exact`] (default, bitwise
+    /// per-entry dot discipline) or the explicitly opt-in
+    /// [`NumericsMode::Fast`] (f32-accumulated `Aᵀb`/diagonal under a
+    /// measured error budget — see `fast_tol`).
+    pub numerics: NumericsMode,
+    /// Fast-mode error tolerance, relative to the largest sampled exact
+    /// Gram entry: the driver measures max |Δ| between the fast and f64
+    /// panel stats on a sampled sub-block and fails the fit if it
+    /// exceeds `fast_tol · max(1, max|exact|)`.  Ignored in exact mode.
+    pub fast_tol: f64,
 }
 
 impl OaviConfig {
@@ -66,6 +77,8 @@ impl OaviConfig {
             max_degree: 12,
             max_o_terms: 5_000,
             panel_budget_cols: 512,
+            numerics: NumericsMode::Exact,
+            fast_tol: 1e-3,
         }
     }
 
@@ -149,6 +162,12 @@ impl OaviConfig {
         if self.constrained && self.solver == SolverKind::Agd {
             return Err(AviError::Config("AGD solves the unconstrained problem".into()));
         }
+        if self.fast_tol <= 0.0 || !self.fast_tol.is_finite() {
+            return Err(AviError::Config(format!(
+                "fast_tol must be > 0 and finite, got {}",
+                self.fast_tol
+            )));
+        }
         Ok(())
     }
 }
@@ -189,6 +208,10 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = OaviConfig::bpcgavi_wihb(0.01);
         cfg.solver = SolverKind::Cg;
+        assert!(cfg.validate().is_err());
+        let mut cfg = OaviConfig::cgavi_ihb(0.01);
+        cfg.numerics = NumericsMode::Fast;
+        cfg.fast_tol = 0.0;
         assert!(cfg.validate().is_err());
         assert!(OaviConfig::cgavi_ihb(0.01).validate().is_ok());
     }

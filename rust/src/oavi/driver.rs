@@ -35,9 +35,13 @@
 //! ℓ1-ball, IHB is disabled for the remainder of the fit (the paper's
 //! "approach 2", which preserves the generalization bounds).
 
-use crate::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend, PanelRecipe};
+use crate::backend::{
+    CandidatePanel, ColumnStore, ComputeBackend, CrossMode, NativeBackend, NumericsMode,
+    PanelRecipe, PanelStats,
+};
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
+use crate::linalg::dot;
 use crate::linalg::gram::GramState;
 use crate::linalg::norm1;
 use crate::oavi::config::{IhbMode, OaviConfig};
@@ -81,6 +85,15 @@ pub struct FitStats {
     /// `Aᵀb` entries served from the cached panel cross-Gram instead of
     /// a data pass (one per (accepted, later-candidate) pair per chunk).
     pub cross_cache_hits: usize,
+    /// Panel-kernel numerics this fit ran with.
+    pub numerics: NumericsMode,
+    /// Fast mode only: measured max |Δ| between the fast panel stats and
+    /// the exact f64 reference on the sampled Gram sub-block (0 in exact
+    /// mode).
+    pub fast_max_abs_err: f64,
+    /// Fast mode only: the error budget `fast_tol · max(1, max|exact|)`
+    /// the measurement was asserted against (0 in exact mode).
+    pub fast_err_budget: f64,
 }
 
 /// Fitted OAVI output `(G, O)` plus diagnostics.
@@ -106,6 +119,41 @@ impl OaviModel {
     pub fn total_size(&self) -> usize {
         self.generators.len() + self.o_terms.len()
     }
+}
+
+/// Measured fast-mode error sample: recompute a sampled sub-block of the
+/// first fast panel's Gram stats with the exact f64 kernels (same
+/// shard-order accumulation as `gram_panel_seq`) and return
+/// `(max |Δ|, max |exact|)`.  Sample = first `min(k, 4)` candidates ×
+/// first `min(ℓ, 8)` store columns plus the panel diagonal — the entries
+/// the oracle actually consumes.
+fn fast_error_sample(
+    cols: &ColumnStore,
+    panel: &CandidatePanel,
+    pstats: &PanelStats,
+) -> (f64, f64) {
+    let kk = panel.len().min(4);
+    let jj = cols.len().min(8);
+    let mut max_err = 0.0f64;
+    let mut scale = 0.0f64;
+    for c in 0..kk {
+        for j in 0..jj {
+            let mut exact = 0.0f64;
+            for s in 0..cols.n_shards() {
+                exact += dot(cols.col_shard(j, s), panel.col_shard(c, s));
+            }
+            scale = scale.max(exact.abs());
+            max_err = max_err.max((pstats.atb_col(c)[j] - exact).abs());
+        }
+        let mut exact_d = 0.0f64;
+        for s in 0..panel.n_shards() {
+            let bs = panel.col_shard(c, s);
+            exact_d += dot(bs, bs);
+        }
+        scale = scale.max(exact_d.abs());
+        max_err = max_err.max((pstats.btb(c) - exact_d).abs());
+    }
+    (max_err, scale)
 }
 
 /// The OAVI algorithm, generic over the streaming compute backend.
@@ -173,7 +221,7 @@ impl Oavi {
             GramState::new_ones(m)
         };
         let mut generators: Vec<Generator> = Vec::new();
-        let mut stats = FitStats::default();
+        let mut stats = FitStats { numerics: cfg.numerics, ..FitStats::default() };
         let mut ihb_active = cfg.ihb != IhbMode::None;
         let radius = cfg.radius();
         let solver_params = SolverParams {
@@ -206,9 +254,31 @@ impl Oavi {
                         .map(|bt| PanelRecipe { parent: bt.parent, var: bt.var })
                         .collect();
                     let panel = CandidatePanel::from_recipes(&cols, x, &recipes);
-                    let pstats = backend.gram_panel(&cols, &panel, true);
+                    // lazy cross: the O(k²) triangle is never computed up
+                    // front — accepted candidates materialize their row on
+                    // demand below, so ψ-regimes where most candidates
+                    // vanish skip the triangle entirely (bitwise identical
+                    // to the eager pass when rows ARE read)
+                    let mut pstats =
+                        backend.gram_panel(&cols, &panel, CrossMode::Lazy, cfg.numerics);
                     stats.panel_passes += 1;
                     stats.panel_cols += chunk.len();
+                    if cfg.numerics == NumericsMode::Fast && stats.panel_passes == 1 {
+                        // measured error budget (opt-in fast contract):
+                        // recompute a sampled Gram sub-block with the exact
+                        // f64 kernels and assert the deviation fits
+                        let (max_err, scale) = fast_error_sample(&cols, &panel, &pstats);
+                        let budget = cfg.fast_tol * scale.max(1.0);
+                        stats.fast_max_abs_err = max_err;
+                        stats.fast_err_budget = budget;
+                        if max_err > budget {
+                            return Err(AviError::Linalg(format!(
+                                "fast numerics error budget exceeded: \
+                                 max|Δ| = {max_err:.3e} > {budget:.3e} (fast_tol {})",
+                                cfg.fast_tol
+                            )));
+                        }
+                    }
                     // panel indices (in this chunk) that joined O, in
                     // acceptance order = store column order
                     let mut accepted: Vec<usize> = Vec::new();
@@ -241,6 +311,11 @@ impl Oavi {
                             None => {
                                 cols.push_col_from_panel(&panel, ci);
                                 o.push_product(bt.parent, bt.var)?;
+                                // materialize this candidate's cross row
+                                // (sequential, no pool dispatch): every
+                                // later candidate of the chunk reads it,
+                                // so no lazy work is ever wasted
+                                pstats.ensure_cross_row(&panel, ci);
                                 accepted.push(ci);
                                 if o.len() >= cfg.max_o_terms {
                                     break 'degrees;
@@ -677,6 +752,39 @@ mod tests {
         // constrained variants keep the cold start
         let cg = Oavi::new(OaviConfig::cgavi(0.01)).fit(&x).unwrap();
         assert_eq!(cg.stats.warm_starts, 0);
+    }
+
+    #[test]
+    fn fast_numerics_is_opt_in_and_reports_a_held_error_budget() {
+        let x = parabola_data(400, 23);
+        // exact fit: no budget machinery engaged
+        let exact = Oavi::new(OaviConfig::cgavi_ihb(0.005)).fit(&x).unwrap();
+        assert_eq!(exact.stats.numerics, NumericsMode::Exact);
+        assert_eq!(exact.stats.fast_err_budget, 0.0);
+        assert_eq!(exact.stats.fast_max_abs_err, 0.0);
+        // fast fit on benign [0,1] data: budget measured, held, reported
+        let mut cfg = OaviConfig::cgavi_ihb(0.005);
+        cfg.numerics = NumericsMode::Fast;
+        let fast = Oavi::new(cfg).fit(&x).unwrap();
+        assert_eq!(fast.stats.numerics, NumericsMode::Fast);
+        assert!(fast.stats.fast_err_budget > 0.0, "budget must be measured");
+        assert!(
+            fast.stats.fast_max_abs_err <= fast.stats.fast_err_budget,
+            "measured error {} exceeds budget {}",
+            fast.stats.fast_max_abs_err,
+            fast.stats.fast_err_budget
+        );
+        // an absurdly tight tolerance must fail the fit loudly, not
+        // silently degrade
+        let mut tight = OaviConfig::cgavi_ihb(0.005);
+        tight.numerics = NumericsMode::Fast;
+        tight.fast_tol = 1e-300;
+        match Oavi::new(tight).fit(&x) {
+            Err(AviError::Linalg(msg)) => {
+                assert!(msg.contains("error budget"), "unexpected message: {msg}")
+            }
+            other => panic!("expected budget violation, got {other:?}"),
+        }
     }
 
     #[test]

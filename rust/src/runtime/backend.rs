@@ -11,8 +11,13 @@
 
 use std::sync::Arc;
 
-use crate::backend::store::{gram_panel_seq, panel_cross_partial};
-use crate::backend::{CandidatePanel, ColumnStore, ComputeBackend, NativeBackend, PanelStats};
+use crate::backend::store::{
+    gram_panel_fast_seq, gram_panel_seq, panel_cross_partial, panel_diag_partial,
+};
+use crate::backend::{
+    CandidatePanel, ColumnStore, ComputeBackend, CrossMode, NativeBackend, NumericsMode,
+    PanelStats,
+};
 use crate::linalg::dense::Matrix;
 use crate::runtime::PjrtRuntime;
 
@@ -80,35 +85,55 @@ impl ComputeBackend for XlaBackend {
         &self,
         cols: &ColumnStore,
         panel: &CandidatePanel,
-        want_cross: bool,
+        cross: CrossMode,
+        numerics: NumericsMode,
     ) -> PanelStats {
         let ell = cols.len();
         let k = panel.len();
         if self.rt.gram_artifact_for(ell).is_none() {
-            // beyond every artifact width: exact native panel path
-            return gram_panel_seq(cols, panel, want_cross);
+            // beyond every artifact width: native panel path in the
+            // requested numerics mode
+            return match numerics {
+                NumericsMode::Exact => gram_panel_seq(cols, panel, cross),
+                NumericsMode::Fast => gram_panel_fast_seq(cols, panel, cross),
+            };
         }
         // Store-vs-panel block through the AOT gram artifact, one tiled
         // pass per panel column (gram_stats falls back natively on any
-        // tile error).  The k×k cross triangle stays on the exact f64
-        // native kernel: its entries feed the Theorem 4.9 inverse append,
-        // where f32 rounding would accumulate into the maintained N.
+        // tile error).  The artifact path already accumulates in f32, so
+        // NumericsMode::Fast adds nothing here and is ignored.  The k×k
+        // cross triangle / lazy diagonal stays on the exact f64 native
+        // kernel: its entries feed the Theorem 4.9 inverse append, where
+        // f32 rounding would accumulate into the maintained N.
         let mut atb = Vec::with_capacity(ell * k);
         for c in 0..k {
             let b = panel.col(c);
             let (a, _btb) = self.gram_stats(cols, &b);
             atb.extend_from_slice(&a);
         }
-        let mut cross = vec![0.0f64; if want_cross { k * (k + 1) / 2 } else { 0 }];
-        if want_cross {
-            for s in 0..panel.n_shards() {
-                let pc = panel_cross_partial(panel, s, 0..k);
-                for (a, p) in cross.iter_mut().zip(pc.iter()) {
-                    *a += *p;
+        match cross {
+            CrossMode::Eager => {
+                let mut cross_buf = vec![0.0f64; k * (k + 1) / 2];
+                for s in 0..panel.n_shards() {
+                    let pc = panel_cross_partial(panel, s, 0..k);
+                    for (a, p) in cross_buf.iter_mut().zip(pc.iter()) {
+                        *a += *p;
+                    }
                 }
+                PanelStats::new(ell, k, atb, cross_buf)
             }
+            CrossMode::Lazy => {
+                let mut diag = vec![0.0f64; k];
+                for s in 0..panel.n_shards() {
+                    let pd = panel_diag_partial(panel, s, 0..k);
+                    for (a, p) in diag.iter_mut().zip(pd.iter()) {
+                        *a += *p;
+                    }
+                }
+                PanelStats::new_lazy(ell, k, atb, diag)
+            }
+            CrossMode::Skip => PanelStats::new(ell, k, atb, Vec::new()),
         }
-        PanelStats::new(ell, k, atb, cross)
     }
 
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {

@@ -1,0 +1,340 @@
+//! Kernel parity — the ISSUE 6 contract suite for the row-tiled/
+//! wide-lane panel micro-kernels and the opt-in mixed-precision path:
+//!
+//! * **dotN ↔ dot**: the generic wide-lane brick must be bitwise equal
+//!   to [`avi_scale::linalg::dot`] per column for every lane width, for
+//!   lengths crossing every 4-lane boundary.
+//! * **tiled ↔ untiled**: [`gram_panel_partial_tiled`] must be bitwise
+//!   equal to the per-entry `dot` reference for every 4-multiple tile
+//!   size, shard counts that leave uneven/empty shards, and m that is
+//!   not a multiple of the tile.
+//! * **threshold paths**: the scalar and tiled kernel paths selected by
+//!   the `set_block_threshold_bytes` override hook must agree bitwise
+//!   through the public `gram_panel` entry point, native and sharded.
+//! * **lazy ↔ eager cross**: rows materialized on demand must carry the
+//!   same bits as the eager triangle, through the forced-parallel
+//!   sharded backend.
+//! * **fast budget**: the opt-in f32 path's reported error budget must
+//!   bound the true max deviation from the f64 reference, at the kernel
+//!   level and through a full fit.
+//!
+//! These tests intentionally run under both serial and default test
+//! threading in `scripts/verify.sh` — the sharded reduction and the
+//! process-global threshold hook must be order-independent.
+
+use std::sync::Mutex;
+
+use avi_scale::backend::store::{
+    gram_panel_fast_seq, gram_panel_partial, gram_panel_partial_tiled, gram_panel_seq,
+    set_block_threshold_bytes, BLOCK_THRESHOLD_DEFAULT,
+};
+use avi_scale::backend::{
+    CandidatePanel, ColumnStore, ComputeBackend, CrossMode, NativeBackend, NumericsMode,
+    ShardedBackend,
+};
+use avi_scale::linalg::{dot, simd};
+use avi_scale::oavi::{Oavi, OaviConfig};
+use avi_scale::util::proptest::property;
+use avi_scale::util::rng::Rng;
+
+/// Serializes tests that pin the process-global block threshold.  Every
+/// path the threshold selects between is bitwise identical, so races
+/// would not corrupt results — but pinning must be observable within a
+/// test for it to actually exercise the intended kernel.
+static THRESHOLD_LOCK: Mutex<()> = Mutex::new(());
+
+fn random_cols(rng: &mut Rng, m: usize, ell: usize) -> Vec<Vec<f64>> {
+    (0..ell).map(|_| (0..m).map(|_| rng.uniform() - 0.3).collect()).collect()
+}
+
+fn build_panel(store: &ColumnStore, rng: &mut Rng, k: usize) -> CandidatePanel {
+    let mut panel = CandidatePanel::new_like(store);
+    let m = store.rows();
+    for _ in 0..k {
+        let c: Vec<f64> = (0..m).map(|_| rng.uniform() - 0.5).collect();
+        panel.push_col(&c);
+    }
+    panel
+}
+
+// ---------------------------------------------------------------------
+// dotN ↔ dot
+// ---------------------------------------------------------------------
+
+#[test]
+fn dotn_is_bitwise_dot_for_all_lane_widths_and_boundary_lengths() {
+    property(60, |rng| {
+        // lengths straddling every n % 4 residue and the empty case
+        let n = (rng.uniform() * 70.0) as usize;
+        let cols: Vec<Vec<f64>> =
+            (0..8).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        let c2: [&[f64]; 2] = [&cols[0], &cols[1]];
+        let c4: [&[f64]; 4] = std::array::from_fn(|i| cols[i].as_slice());
+        let c8: [&[f64]; 8] = std::array::from_fn(|i| cols[i].as_slice());
+        let r2 = simd::dotn(&c2, &b);
+        let r4 = simd::dotn(&c4, &b);
+        let r8 = simd::dotn(&c8, &b);
+        for (w, got) in
+            r2.iter().chain(r4.iter()).chain(r8.iter()).enumerate()
+        {
+            let col = &cols[if w < 2 { w } else if w < 6 { w - 2 } else { w - 6 }];
+            let want = dot(col, &b);
+            if got.to_bits() != want.to_bits() {
+                return Err(format!("dotn diverged from dot at n={n} slot={w}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn carried_lanes_across_arbitrary_tile_splits_match_single_pass_dot() {
+    property(60, |rng| {
+        let n = 8 + (rng.uniform() * 120.0) as usize;
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let full = n & !3usize;
+        // random 4-multiple split points over the lane region
+        let mut lanes = [0.0f64; 4];
+        let mut t0 = 0usize;
+        while t0 < full {
+            let step = 4 * (1 + (rng.uniform() * 6.0) as usize);
+            let t1 = (t0 + step).min(full);
+            simd::lanes_update(&mut lanes, &a[t0..t1], &b[t0..t1]);
+            t0 = t1;
+        }
+        let got = simd::lanes_finish(lanes, &a[full..], &b[full..]);
+        let want = dot(&a, &b);
+        if got.to_bits() != want.to_bits() {
+            return Err(format!("carried lanes diverged at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// tiled ↔ untiled panel kernel
+// ---------------------------------------------------------------------
+
+#[test]
+fn tiled_panel_partial_is_bitwise_dot_for_all_tile_sizes_and_shards() {
+    property(40, |rng| {
+        let m = 1 + (rng.uniform() * 90.0) as usize; // deliberately not tile-aligned
+        let ell = 1 + (rng.uniform() * 11.0) as usize;
+        let k = 1 + (rng.uniform() * 19.0) as usize;
+        let shards = 1 + (rng.uniform() * 4.0) as usize; // may exceed m → empty shards
+        let cols = random_cols(rng, m, ell);
+        let store = ColumnStore::from_cols(&cols, shards);
+        let panel = build_panel(&store, rng, k);
+        for s in 0..store.n_shards() {
+            let untiled = gram_panel_partial(&store, &panel, s, 0..k);
+            for &tile_rows in &[4usize, 8, 12, 64, 1024] {
+                let tiled = gram_panel_partial_tiled(&store, &panel, s, 0..k, tile_rows);
+                for c in 0..k {
+                    for j in 0..ell {
+                        let want = dot(store.col_shard(j, s), panel.col_shard(c, s));
+                        let got = tiled[c * ell + j];
+                        if got.to_bits() != want.to_bits() {
+                            return Err(format!(
+                                "tiled != dot at m={m} shards={shards} s={s} tile={tile_rows} c={c} j={j}"
+                            ));
+                        }
+                        if got.to_bits() != untiled[c * ell + j].to_bits() {
+                            return Err(format!(
+                                "tiled != untiled at m={m} s={s} tile={tile_rows} c={c} j={j}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threshold_override_selects_bitwise_identical_paths_end_to_end() {
+    let _guard = THRESHOLD_LOCK.lock().unwrap();
+    let mut rng = Rng::new(97);
+    let (m, ell, k) = (2053usize, 9usize, 13usize);
+    let cols = random_cols(&mut rng, m, ell);
+    for &shards in &[1usize, 3] {
+        let store = ColumnStore::from_cols(&cols, shards);
+        let panel = build_panel(&store, &mut rng, k);
+        let sharded = ShardedBackend::new(4).with_min_work(0);
+
+        set_block_threshold_bytes(usize::MAX); // pin the scalar per-column kernel
+        let scalar = gram_panel_seq(&store, &panel, CrossMode::Eager);
+        let scalar_sh = sharded.gram_panel(&store, &panel, CrossMode::Eager, NumericsMode::Exact);
+        set_block_threshold_bytes(1); // pin the row-tiled wide-lane kernel
+        let tiled = gram_panel_seq(&store, &panel, CrossMode::Eager);
+        let tiled_sh = sharded.gram_panel(&store, &panel, CrossMode::Eager, NumericsMode::Exact);
+        set_block_threshold_bytes(BLOCK_THRESHOLD_DEFAULT);
+
+        for ps in [&scalar_sh, &tiled, &tiled_sh] {
+            for c in 0..k {
+                for (a, b) in scalar.atb_col(c).iter().zip(ps.atb_col(c).iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "atb path divergence at shards={shards}");
+                }
+                for i in 0..=c {
+                    assert_eq!(
+                        scalar.cross_at(i, c).to_bits(),
+                        ps.cross_at(i, c).to_bits(),
+                        "cross path divergence at shards={shards}"
+                    );
+                }
+            }
+        }
+        // and both pinned paths must reproduce the per-entry reference
+        let mut acc = dot(store.col_shard(0, 0), panel.col_shard(0, 0));
+        for s in 1..store.n_shards() {
+            acc += dot(store.col_shard(0, s), panel.col_shard(0, s));
+        }
+        assert_eq!(acc.to_bits(), scalar.atb_col(0)[0].to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// lazy ↔ eager cross rows
+// ---------------------------------------------------------------------
+
+#[test]
+fn lazy_cross_rows_match_eager_triangle_through_forced_parallel_backend() {
+    property(25, |rng| {
+        let m = 5 + (rng.uniform() * 400.0) as usize;
+        let ell = 1 + (rng.uniform() * 7.0) as usize;
+        let k = 2 + (rng.uniform() * 10.0) as usize;
+        let shards = 1 + (rng.uniform() * 3.0) as usize;
+        let cols = random_cols(rng, m, ell);
+        let store = ColumnStore::from_cols(&cols, shards);
+        let panel = build_panel(&store, rng, k);
+        let sharded = ShardedBackend::new(3).with_min_work(0);
+
+        let eager = sharded.gram_panel(&store, &panel, CrossMode::Eager, NumericsMode::Exact);
+        let mut lazy = sharded.gram_panel(&store, &panel, CrossMode::Lazy, NumericsMode::Exact);
+        if !lazy.is_lazy() {
+            return Err("Lazy mode did not produce a lazy PanelStats".into());
+        }
+        for c in 0..k {
+            if eager.btb(c).to_bits() != lazy.btb(c).to_bits() {
+                return Err(format!("lazy diag diverged at c={c}"));
+            }
+        }
+        for i in 0..k {
+            lazy.ensure_cross_row(&panel, i);
+            for c in i..k {
+                if eager.cross_at(i, c).to_bits() != lazy.cross_at(i, c).to_bits() {
+                    return Err(format!("lazy row diverged at ({i},{c})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// fast-mode error budget
+// ---------------------------------------------------------------------
+
+#[test]
+fn fast_kernel_budget_bounds_true_deviation_on_conditioned_gram() {
+    let mut rng = Rng::new(131);
+    let (m, ell, k) = (20_000usize, 6usize, 9usize);
+    // well-conditioned data: uniform in [0, 1), no cancellation
+    let cols: Vec<Vec<f64>> =
+        (0..ell).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+    let store = ColumnStore::from_cols(&cols, 3);
+    let panel = build_panel(&store, &mut rng, k);
+
+    let exact = gram_panel_seq(&store, &panel, CrossMode::Lazy);
+    let fast = gram_panel_fast_seq(&store, &panel, CrossMode::Lazy);
+    let mut max_err = 0.0f64;
+    let mut scale = 0.0f64;
+    for c in 0..k {
+        for j in 0..ell {
+            max_err = max_err.max((fast.atb_col(c)[j] - exact.atb_col(c)[j]).abs());
+            scale = scale.max(exact.atb_col(c)[j].abs());
+        }
+        max_err = max_err.max((fast.btb(c) - exact.btb(c)).abs());
+        scale = scale.max(exact.btb(c).abs());
+    }
+    // the driver's budget with the default fast_tol must hold here
+    let budget = 1e-3 * scale.max(1.0);
+    assert!(max_err > 0.0, "fast path suspiciously exact — is it routing to f64?");
+    assert!(
+        max_err <= budget,
+        "fast kernel error {max_err:.3e} exceeds the default budget {budget:.3e}"
+    );
+}
+
+#[test]
+fn fast_fit_reports_budget_that_bounds_its_own_error() {
+    // structured data with an exact vanishing ideal
+    let m = 600usize;
+    let mut rng = Rng::new(211);
+    let mut x = avi_scale::linalg::dense::Matrix::zeros(m, 2);
+    for i in 0..m {
+        let t = rng.uniform() * 2.0 - 1.0;
+        x.set(i, 0, t);
+        x.set(i, 1, t * t + 0.01 * rng.normal());
+    }
+
+    let exact_cfg = OaviConfig::cgavi_ihb(0.01);
+    let exact = Oavi::new(exact_cfg).fit(&x).unwrap();
+    assert_eq!(exact.stats.numerics, NumericsMode::Exact);
+    assert_eq!(exact.stats.fast_err_budget, 0.0, "exact fit must not sample a budget");
+
+    let mut fast_cfg = OaviConfig::cgavi_ihb(0.01);
+    fast_cfg.numerics = NumericsMode::Fast;
+    let fast = Oavi::new(fast_cfg).fit(&x).unwrap();
+    assert_eq!(fast.stats.numerics, NumericsMode::Fast);
+    assert!(fast.stats.fast_err_budget > 0.0, "fast fit must report a budget");
+    assert!(
+        fast.stats.fast_max_abs_err <= fast.stats.fast_err_budget,
+        "measured error {} exceeds reported budget {}",
+        fast.stats.fast_max_abs_err,
+        fast.stats.fast_err_budget
+    );
+
+    // fast is opt-in only: the default config never routes to f32
+    assert_eq!(OaviConfig::cgavi_ihb(0.01).numerics, NumericsMode::Exact);
+
+    // an unmeetable tolerance must fail the fit loudly, not degrade silently
+    let mut strict_cfg = OaviConfig::cgavi_ihb(0.01);
+    strict_cfg.numerics = NumericsMode::Fast;
+    strict_cfg.fast_tol = 1e-300;
+    let err = Oavi::new(strict_cfg).fit(&x);
+    assert!(err.is_err(), "1e-300 budget should be unmeetable in f32");
+    let msg = format!("{}", err.unwrap_err());
+    assert!(msg.contains("error budget"), "unexpected error: {msg}");
+}
+
+// ---------------------------------------------------------------------
+// exact fit invariance across kernel paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn exact_fit_is_bitwise_invariant_to_the_kernel_path_pin() {
+    let _guard = THRESHOLD_LOCK.lock().unwrap();
+    let ds = avi_scale::data::synthetic::synthetic_dataset(1500, 17);
+    let x = ds.class_matrix(0);
+    let cfg = OaviConfig::cgavi_ihb(0.01);
+    let backend = NativeBackend;
+
+    set_block_threshold_bytes(usize::MAX);
+    let scalar = Oavi::new(cfg).fit_with_backend(&x, &backend).unwrap();
+    set_block_threshold_bytes(1);
+    let tiled = Oavi::new(cfg).fit_with_backend(&x, &backend).unwrap();
+    set_block_threshold_bytes(BLOCK_THRESHOLD_DEFAULT);
+
+    assert_eq!(scalar.generators.len(), tiled.generators.len());
+    assert_eq!(scalar.o_terms.len(), tiled.o_terms.len());
+    for (g0, g1) in scalar.generators.iter().zip(tiled.generators.iter()) {
+        assert_eq!(g0.coeffs.len(), g1.coeffs.len());
+        for (a, b) in g0.coeffs.iter().zip(g1.coeffs.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "generator coeffs diverge across kernel paths");
+        }
+    }
+}

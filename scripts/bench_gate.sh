@@ -1,0 +1,86 @@
+#!/usr/bin/env bash
+# Perf trajectory gate (run from the repo root):
+#
+#   scripts/bench_gate.sh            # run the micro benches, then gate
+#   SKIP_RUN=1 scripts/bench_gate.sh # gate existing artifacts only
+#   TOLERANCE=25 scripts/bench_gate.sh
+#
+# The micro benches emit flat machine-readable artifacts
+# (rust/target/bench_results/BENCH_<id>.json, written by
+# `bench::BenchJson` as one `"key": value` pair per line).  This gate
+# diffs every `_ns` timing cell against the committed baseline under
+# bench/ and fails if any cell regressed by more than TOLERANCE percent
+# (default 15, the ISSUE 6 bar).  Non-timing cells (counters, error
+# budgets, speedups) are trajectory data, not gated.
+#
+# On pass, the fresh artifacts are copied over the baselines so the
+# committed trajectory advances with the commit that earned it.  A
+# missing baseline installs rather than fails (first run on a new
+# bench).  No jq in the container — sed/awk only.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BASELINE_DIR=bench
+FRESH_DIR=rust/target/bench_results
+TOLERANCE=${TOLERANCE:-15}
+BENCHES=(micro_gram_panel backend_scaling)
+
+if [[ "${SKIP_RUN:-0}" != "1" ]]; then
+  echo "== running micro benches =="
+  (cd rust && cargo bench --bench micro_gram_panel && cargo bench --bench micro_backend_scaling)
+fi
+
+mkdir -p "$BASELINE_DIR"
+
+# print "key value" lines for every numeric _ns cell of a BenchJson file
+ns_cells() {
+  sed -n 's/^[[:space:]]*"\([A-Za-z0-9_]*_ns\)":[[:space:]]*\([0-9][0-9.eE+-]*\),\{0,1\}$/\1 \2/p' "$1"
+}
+
+fail=0
+for id in "${BENCHES[@]}"; do
+  fresh="$FRESH_DIR/BENCH_$id.json"
+  base="$BASELINE_DIR/BENCH_$id.json"
+  if [[ ! -f "$fresh" ]]; then
+    echo "FAIL: $fresh missing — did the bench run and call BenchJson::write()?"
+    exit 1
+  fi
+  if [[ ! -f "$base" ]]; then
+    echo "== $id: no baseline, installing $base =="
+    cp "$fresh" "$base"
+    continue
+  fi
+  echo "== $id: diffing against $base (tolerance ${TOLERANCE}%) =="
+  # join baseline and fresh cells on key; gate only keys present in both
+  # so bench additions/removals never fail the gate by themselves
+  verdicts=$(
+    { ns_cells "$base" | sed 's/^/B /'; ns_cells "$fresh" | sed 's/^/F /'; } |
+      awk -v tol="$TOLERANCE" '
+        $1 == "B" { base[$2] = $3 }
+        $1 == "F" { fresh[$2] = $3 }
+        END {
+          for (k in fresh) {
+            if (!(k in base) || base[k] <= 0) continue
+            delta = (fresh[k] - base[k]) * 100.0 / base[k]
+            status = delta > tol ? "REGRESSED" : "ok"
+            printf "%-40s %14.0f -> %14.0f  %+7.1f%%  %s\n", k, base[k], fresh[k], delta, status
+          }
+        }' | sort
+  )
+  echo "$verdicts"
+  if echo "$verdicts" | grep -q 'REGRESSED$'; then
+    echo "FAIL: $id has timing cells regressed beyond ${TOLERANCE}%"
+    fail=1
+  fi
+done
+
+if [[ "$fail" != "0" ]]; then
+  echo "bench_gate.sh: regression detected — baselines left untouched"
+  exit 1
+fi
+
+# advance the committed trajectory
+for id in "${BENCHES[@]}"; do
+  cp "$FRESH_DIR/BENCH_$id.json" "$BASELINE_DIR/BENCH_$id.json"
+done
+echo "bench_gate.sh: all timing cells within ${TOLERANCE}% — baselines updated under $BASELINE_DIR/"

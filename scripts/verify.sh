@@ -30,7 +30,7 @@ CLIPPY_LOG=$(mktemp)
 cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
 # every rustc diagnostic carries a "--> path:line:col" span line; match
 # spans inside the strict modules regardless of header distance
-STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|benches/micro_backend_scaling|benches/micro_gram_panel|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/pool_concurrency|tests/serve_control_plane)'
+STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane)'
 if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
   echo "FAIL: clippy findings in strict modules:"
   grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
@@ -59,6 +59,12 @@ cargo test --release --test runtime_parity -q pooled_per_class
 # to the legacy per-candidate path under both scheduling regimes
 RUST_TEST_THREADS=1 cargo test --release --test runtime_parity -q panel
 cargo test --release --test runtime_parity -q panel
+# kernel parity (ISSUE 6): the row-tiled/wide-lane micro-kernels, the
+# block-threshold override hook, and the lazy cross rows are bitwise
+# contracts; the process-global threshold pin and the sharded reduction
+# must hold under both scheduling regimes
+RUST_TEST_THREADS=1 cargo test --release --test kernel_parity -q
+cargo test --release --test kernel_parity -q
 
 echo "== CLI smoke: every estimator by name =="
 BIN=target/release/avi-scale
@@ -78,6 +84,24 @@ PANEL_OUT=$("$BIN" fit --dataset synthetic --scale 0.01 --seed 7 --psi 0.005 \
 echo "$PANEL_OUT"
 echo "$PANEL_OUT" | grep -q 'panels    = [1-9]' || {
   echo "FAIL: sharded panel smoke reported zero panel passes"
+  exit 1
+}
+echo "-- fit --numerics fast (ISSUE 6 smoke: opt-in f32 path + error budget)"
+FAST_OUT=$("$BIN" fit $SMOKE --method cgavi-ihb --numerics fast)
+echo "$FAST_OUT"
+# the fit report JSON must carry the fast-mode fields: the mode itself
+# and the measured error budget the driver asserted at fit time
+echo "$FAST_OUT" | grep -q '"numerics":"fast"' || {
+  echo "FAIL: --numerics fast did not report numerics=fast in the fit report"
+  exit 1
+}
+echo "$FAST_OUT" | grep -q '"fast_max_abs_err":' || {
+  echo "FAIL: --numerics fast fit report is missing the error budget fields"
+  exit 1
+}
+# and exact mode must stay the default
+"$BIN" fit $SMOKE --method cgavi-ihb | grep -q '"numerics":"exact"' || {
+  echo "FAIL: default fit no longer reports numerics=exact"
   exit 1
 }
 echo "-- fit --method abm --workers 4 (two-level pool)"
