@@ -70,4 +70,27 @@ fn main() {
     let report = router.report();
     assert_eq!(report.total_requests, n_req as u64, "router lost traffic");
     println!("{}", report.to_json());
+
+    // machine-readable digest for the trajectory gate (ROADMAP 3a): the
+    // wall + latency cells ride the `_ns` convention the gate compares;
+    // the RouterReport counters ride as plain integer cells.
+    let mut json = avi_scale::bench::BenchJson::new("serve_router");
+    json.int("requests", n_req as u64);
+    json.num("throughput_req_s", n_req as f64 / wall);
+    json.ns("wall", wall);
+    json.ns("latency_p50", p50 / 1e6);
+    json.ns("latency_p95", p95 / 1e6);
+    json.ns("latency_p99", p99 / 1e6);
+    json.int("total_requests", report.total_requests);
+    json.int("total_rejected", report.total_rejected);
+    for r in &report.routes {
+        let tag = format!("route_{}_{}", r.role, r.version);
+        json.int(&format!("{tag}_requests"), r.requests);
+        json.int(&format!("{tag}_mirrored"), r.mirrored);
+        json.int(&format!("{tag}_batches"), r.batches);
+        json.int(&format!("{tag}_max_batch"), r.max_batch);
+        json.num(&format!("{tag}_mean_queue_us"), r.mean_queue_us);
+        json.num(&format!("{tag}_mean_compute_us"), r.mean_compute_us);
+    }
+    json.write().expect("write BENCH_serve_router.json");
 }

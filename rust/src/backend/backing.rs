@@ -1,0 +1,549 @@
+//! Pluggable shard backing for [`crate::backend::ColumnStore`]: where a
+//! shard's column block physically lives.
+//!
+//! Two implementations:
+//!
+//! * [`ShardBacking::Memory`] — the historical owned-`Vec<f64>` blocks.
+//!   Default, zero-overhead, bitwise-unchanged from before this layer
+//!   existed: leases borrow the block directly.
+//! * [`ShardBacking::Spill`] — each shard's block lives in an on-disk
+//!   [`crate::storage::segment::Segment`] (column-major little-endian
+//!   f64; one file per shard, so every block starts page-aligned).  A
+//!   bounded **resident pool** keeps recently-used blocks decoded in
+//!   RAM under a configurable byte budget with LRU eviction; loads,
+//!   reloads, evictions, and the peak resident footprint are counted.
+//!
+//! # Chunk-lease lifetime rules
+//!
+//! Kernels never hold raw `&[f64]` borrows into evictable blocks.
+//! Access goes through a [`ShardLease`] acquired per (shard, kernel
+//! pass):
+//!
+//! * a **memory** lease is a plain borrow of the shard's `Vec` — free;
+//! * a **spill** lease clones the block's `Arc`, *pinning* it: eviction
+//!   only drops the pool's reference, so an outstanding lease keeps its
+//!   block alive (and that block's bytes are charged to the pool until
+//!   every lease drops — hold leases for one kernel pass, not across
+//!   passes).
+//!
+//! Acquire the lease once per shard loop, not per column: each spill
+//! acquisition takes the pool lock and may touch disk.  Never hold a
+//! lease across a mutation of the same store (`push_col`) — appends
+//! widen the block, so the lease would see the pre-append width (the
+//! borrow checker enforces this for memory leases; spill leases get the
+//! same rule by convention).
+//!
+//! # Why the exact path stays bitwise identical
+//!
+//! The backing changes *where bytes live*, never what they are: the
+//! le-f64 encoding round-trips every bit pattern, and the kernels in
+//! `store.rs` run the identical per-entry dot discipline over the
+//! leased slices.  `tests/storage_parity.rs` pins this at fit level.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{AviError, Result};
+use crate::storage::segment::Segment;
+
+/// Where a [`crate::backend::ColumnStore`]'s shard blocks live.
+/// `Copy` so it rides inside [`crate::oavi::OaviConfig`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreMode {
+    /// Owned in-memory blocks (default; bitwise-identical legacy path).
+    Memory,
+    /// File-backed segments with an LRU resident pool capped at
+    /// `budget_bytes`.  The spill directory is an ephemeral per-process
+    /// temp dir, cleaned up when the store drops.
+    Spill {
+        /// Resident-pool byte budget.  Honored as a hard cap on the
+        /// pool's peak footprint whenever each individual block fits
+        /// within it (a single over-budget block still loads — the
+        /// alternative is refusing the fit).
+        budget_bytes: usize,
+    },
+}
+
+impl StoreMode {
+    /// Spill mode with a budget in MiB (CLI surface).
+    pub fn spill_mb(mb: usize) -> StoreMode {
+        StoreMode::Spill { budget_bytes: mb.saturating_mul(1 << 20).max(1) }
+    }
+
+    pub fn is_spill(&self) -> bool {
+        matches!(self, StoreMode::Spill { .. })
+    }
+
+    /// Stable name for reports/CLI (`mem` / `mmap`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StoreMode::Memory => "mem",
+            StoreMode::Spill { .. } => "mmap",
+        }
+    }
+}
+
+impl Default for StoreMode {
+    fn default() -> Self {
+        StoreMode::Memory
+    }
+}
+
+/// One shard's owned in-memory column block (column-major, `rows` per
+/// column).
+#[derive(Clone, Debug)]
+pub struct MemShard {
+    pub(crate) rows: usize,
+    pub(crate) data: Vec<f64>,
+}
+
+impl MemShard {
+    pub(crate) fn new(rows: usize) -> MemShard {
+        MemShard { rows, data: Vec::new() }
+    }
+}
+
+/// Read guard over one shard's column block for one kernel pass.
+///
+/// See the module docs for lifetime rules.  `col(j)` is the only read
+/// surface; it returns the same bits regardless of backing.
+pub enum ShardLease<'a> {
+    /// Borrowed in-memory block.
+    Mem { data: &'a [f64], rows: usize },
+    /// Pinned resident block (eviction can't free it while held).
+    Spill { block: Arc<Vec<f64>>, rows: usize },
+}
+
+impl ShardLease<'_> {
+    /// Column `j` of the leased block.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        match self {
+            ShardLease::Mem { data, rows } => &data[j * rows..(j + 1) * rows],
+            ShardLease::Spill { block, rows } => &block[j * rows..(j + 1) * rows],
+        }
+    }
+
+    /// Rows in this shard.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            ShardLease::Mem { rows, .. } => *rows,
+            ShardLease::Spill { rows, .. } => *rows,
+        }
+    }
+}
+
+/// Snapshot of a spill backing's activity counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackingCounters {
+    /// Disk→pool block loads (first loads + reloads).
+    pub loads: u64,
+    /// Loads of a block that had been resident before (evicted or
+    /// invalidated by an append since).
+    pub reloads: u64,
+    /// LRU evictions under budget pressure.
+    pub evictions: u64,
+    /// Bytes currently charged to the resident pool.
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes`.
+    pub peak_resident_bytes: u64,
+    /// Configured budget.
+    pub budget_bytes: u64,
+}
+
+/// LRU resident pool state (all under one mutex so evict-before-insert
+/// accounting is atomic — the peak-≤-budget invariant depends on it).
+#[derive(Debug, Default)]
+struct ResidentPool {
+    /// Per-shard resident block, `None` when spilled.
+    blocks: Vec<Option<Arc<Vec<f64>>>>,
+    /// Has shard `s` ever been loaded (distinguishes load vs reload)?
+    ever_loaded: Vec<bool>,
+    /// Shard ids, least-recently-used first.
+    lru: Vec<usize>,
+    /// Bytes held by `blocks` (pool's own references only).
+    resident_bytes: usize,
+    /// Reusable byte buffer for segment reads.
+    scratch: Vec<u8>,
+}
+
+impl ResidentPool {
+    fn touch(&mut self, s: usize) {
+        if let Some(pos) = self.lru.iter().position(|&x| x == s) {
+            self.lru.remove(pos);
+        }
+        self.lru.push(s);
+    }
+}
+
+static SPILL_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// File-backed shard storage: one segment per shard plus the bounded
+/// resident pool.  `Sync` (mutex + atomics + per-segment locks) so pool
+/// workers can lease concurrently; shared via `Arc` inside
+/// [`ShardBacking::Spill`], so cloning a spilled store shares segments
+/// (clone-then-append would corrupt the sibling — working stores are
+/// never cloned; manifest-opened stores are read-only).
+#[derive(Debug)]
+pub struct FileBacking {
+    dir: PathBuf,
+    /// Ephemeral spill dirs are removed on drop; manifest dirs are not.
+    ephemeral: bool,
+    /// Manifest-opened backings refuse appends (they would invalidate
+    /// the recorded checksums).
+    read_only: bool,
+    budget_bytes: usize,
+    /// Rows per shard (fixed at construction).
+    rows: Vec<usize>,
+    segs: Vec<Segment>,
+    pool: Mutex<ResidentPool>,
+    loads: AtomicU64,
+    reloads: AtomicU64,
+    evictions: AtomicU64,
+    peak_resident: AtomicU64,
+}
+
+impl FileBacking {
+    /// Create an ephemeral writable backing (working-store spill): fresh
+    /// per-process temp dir, one empty segment per shard.
+    pub fn create_ephemeral(shard_rows: &[usize], budget_bytes: usize) -> Result<FileBacking> {
+        let dir = std::env::temp_dir().join(format!(
+            "avi_spill_{}_{}",
+            std::process::id(),
+            SPILL_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        let mut segs = Vec::with_capacity(shard_rows.len());
+        for s in 0..shard_rows.len() {
+            segs.push(Segment::create(&dir.join(format!("seg_{s}.bin")))?);
+        }
+        Ok(Self::from_parts(dir, true, false, budget_bytes, shard_rows.to_vec(), segs))
+    }
+
+    /// Wrap already-opened segments (manifest path).  `read_only` stores
+    /// refuse appends.
+    pub fn from_segments(
+        dir: PathBuf,
+        shard_rows: Vec<usize>,
+        segs: Vec<Segment>,
+        budget_bytes: usize,
+        read_only: bool,
+    ) -> FileBacking {
+        Self::from_parts(dir, false, read_only, budget_bytes, shard_rows, segs)
+    }
+
+    fn from_parts(
+        dir: PathBuf,
+        ephemeral: bool,
+        read_only: bool,
+        budget_bytes: usize,
+        rows: Vec<usize>,
+        segs: Vec<Segment>,
+    ) -> FileBacking {
+        let n = rows.len();
+        FileBacking {
+            dir,
+            ephemeral,
+            read_only,
+            budget_bytes: budget_bytes.max(1),
+            rows,
+            segs,
+            pool: Mutex::new(ResidentPool {
+                blocks: vec![None; n],
+                ever_loaded: vec![false; n],
+                ..ResidentPool::default()
+            }),
+            loads: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            peak_resident: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn shard_rows(&self, s: usize) -> usize {
+        self.rows[s]
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Lease shard `s`'s block at the current store width `n_cols`,
+    /// loading (and evicting under budget) as needed.
+    ///
+    /// Panics on segment IO failure: open-time checksum verification
+    /// (manifest path) or our own writes (ephemeral path) make the
+    /// segments trustworthy, so a mid-fit read error is an environment
+    /// failure (disk pulled, tmp reaped) with no useful recovery —
+    /// consistent with how the memory backing treats allocation failure.
+    pub fn lease(&self, s: usize, n_cols: usize) -> ShardLease<'static> {
+        ShardLease::Spill { rows: self.rows[s], block: self.load_block(s, n_cols) }
+    }
+
+    fn load_block(&self, s: usize, n_cols: usize) -> Arc<Vec<f64>> {
+        let mut p = self.pool.lock().expect("resident pool lock poisoned");
+        if let Some(b) = &p.blocks[s] {
+            // resident hit — only valid at the current width (appends
+            // invalidate, so a cached block always matches n_cols)
+            debug_assert_eq!(b.len(), self.rows[s] * n_cols);
+            let b = b.clone();
+            p.touch(s);
+            return b;
+        }
+        let want = self.rows[s] * n_cols;
+        let incoming = want * 8;
+        // Evict-before-insert: drop LRU blocks (oldest first, skipping
+        // any pinned by outstanding leases) until the incoming block
+        // fits, so the pool's footprint never exceeds budget + 0.
+        let mut i = 0;
+        while p.resident_bytes + incoming > self.budget_bytes && i < p.lru.len() {
+            let victim = p.lru[i];
+            let evictable = match &p.blocks[victim] {
+                Some(b) => Arc::strong_count(b) == 1,
+                None => {
+                    p.lru.remove(i); // stale entry
+                    continue;
+                }
+            };
+            if evictable {
+                let freed = p.blocks[victim].take().map(|b| b.len() * 8).unwrap_or(0);
+                p.resident_bytes -= freed;
+                p.lru.remove(i);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            } else {
+                i += 1;
+            }
+        }
+        // Load (under the pool lock: keeps the accounting + insert
+        // atomic; resident hits above never touch disk or wait here
+        // beyond the lock hand-off).
+        let mut vals = Vec::new();
+        let ResidentPool { scratch, .. } = &mut *p;
+        self.segs[s]
+            .read_f64s_at(0, want, scratch, &mut vals)
+            .unwrap_or_else(|e| panic!("spill read failed on shard {s}: {e}"));
+        self.loads.fetch_add(1, Ordering::Relaxed);
+        if p.ever_loaded[s] {
+            self.reloads.fetch_add(1, Ordering::Relaxed);
+        }
+        p.ever_loaded[s] = true;
+        let block = Arc::new(vals);
+        p.blocks[s] = Some(block.clone());
+        p.resident_bytes += incoming;
+        p.touch(s);
+        self.peak_resident.fetch_max(p.resident_bytes as u64, Ordering::Relaxed);
+        block
+    }
+
+    /// Append one column slice to shard `s` (store width was
+    /// `n_cols_before`), invalidating the resident block so the next
+    /// lease reloads at the new width (counted as a reload).
+    ///
+    /// Panics on read-only backings and on IO failure (see [`Self::lease`]).
+    pub fn append_col(&self, s: usize, col: &[f64], n_cols_before: usize) {
+        assert!(
+            !self.read_only,
+            "append on a read-only manifest-backed store (derive columns into a working store)"
+        );
+        debug_assert_eq!(col.len(), self.rows[s]);
+        let off = (n_cols_before * self.rows[s] * 8) as u64;
+        self.segs[s]
+            .write_f64s_at(off, col)
+            .unwrap_or_else(|e| panic!("spill write failed on shard {s}: {e}"));
+        let mut p = self.pool.lock().expect("resident pool lock poisoned");
+        if let Some(b) = p.blocks[s].take() {
+            p.resident_bytes -= b.len() * 8;
+            if let Some(pos) = p.lru.iter().position(|&x| x == s) {
+                p.lru.remove(pos);
+            }
+        }
+    }
+
+    /// Activity counter snapshot.
+    pub fn counters(&self) -> BackingCounters {
+        let resident =
+            self.pool.lock().expect("resident pool lock poisoned").resident_bytes as u64;
+        BackingCounters {
+            loads: self.loads.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: resident,
+            peak_resident_bytes: self.peak_resident.load(Ordering::Relaxed),
+            budget_bytes: self.budget_bytes as u64,
+        }
+    }
+}
+
+impl Drop for FileBacking {
+    fn drop(&mut self) {
+        if self.ephemeral {
+            std::fs::remove_dir_all(&self.dir).ok();
+        }
+    }
+}
+
+/// The two physical homes for a store's shard blocks.  Cloning a
+/// memory backing deep-copies; cloning a spill backing shares the
+/// `Arc`'d segments + pool.
+#[derive(Clone, Debug)]
+pub enum ShardBacking {
+    Memory(Vec<MemShard>),
+    Spill(Arc<FileBacking>),
+}
+
+impl ShardBacking {
+    /// Build a backing for the given shard partition.
+    pub fn build(shard_rows: &[usize], mode: StoreMode) -> Result<ShardBacking> {
+        match mode {
+            StoreMode::Memory => {
+                Ok(ShardBacking::Memory(shard_rows.iter().map(|&r| MemShard::new(r)).collect()))
+            }
+            StoreMode::Spill { budget_bytes } => Ok(ShardBacking::Spill(Arc::new(
+                FileBacking::create_ephemeral(shard_rows, budget_bytes)?,
+            ))),
+        }
+    }
+
+    pub fn mode_str(&self) -> &'static str {
+        match self {
+            ShardBacking::Memory(_) => "mem",
+            ShardBacking::Spill(_) => "mmap",
+        }
+    }
+
+    /// Spill counters, if this backing spills.
+    pub fn counters(&self) -> Option<BackingCounters> {
+        match self {
+            ShardBacking::Memory(_) => None,
+            ShardBacking::Spill(fb) => Some(fb.counters()),
+        }
+    }
+}
+
+/// Validate a `StoreMode` (budget must be sane).
+pub fn validate_store_mode(mode: StoreMode) -> Result<()> {
+    if let StoreMode::Spill { budget_bytes } = mode {
+        if budget_bytes == 0 {
+            return Err(AviError::Config("spill budget_bytes must be > 0".into()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backing(rows: &[usize], budget: usize) -> FileBacking {
+        FileBacking::create_ephemeral(rows, budget).unwrap()
+    }
+
+    #[test]
+    fn store_mode_surface() {
+        assert_eq!(StoreMode::default(), StoreMode::Memory);
+        assert!(!StoreMode::Memory.is_spill());
+        assert_eq!(StoreMode::Memory.as_str(), "mem");
+        let s = StoreMode::spill_mb(2);
+        assert_eq!(s, StoreMode::Spill { budget_bytes: 2 << 20 });
+        assert!(s.is_spill());
+        assert_eq!(s.as_str(), "mmap");
+        assert!(validate_store_mode(StoreMode::Spill { budget_bytes: 0 }).is_err());
+        assert!(validate_store_mode(s).is_ok());
+    }
+
+    #[test]
+    fn append_lease_roundtrips_bitwise() {
+        let fb = backing(&[3, 2], 1 << 20);
+        let col = [1.5, f64::NAN, -0.0, 7.25, 1e-300];
+        fb.append_col(0, &col[..3], 0);
+        fb.append_col(1, &col[3..], 0);
+        let l0 = fb.lease(0, 1);
+        let l1 = fb.lease(1, 1);
+        assert_eq!(l0.rows(), 3);
+        for (a, b) in l0.col(0).iter().zip(&col[..3]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in l1.col(0).iter().zip(&col[3..]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let c = fb.counters();
+        assert_eq!(c.loads, 2);
+        assert_eq!(c.reloads, 0);
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.resident_bytes, 5 * 8);
+        assert_eq!(c.peak_resident_bytes, 5 * 8); // both blocks resident under budget
+    }
+
+    #[test]
+    fn lru_eviction_stays_under_budget_and_counts_reloads() {
+        // 4 shards × 8 rows × 1 col = 64 bytes/block; budget fits 2 blocks
+        let fb = backing(&[8, 8, 8, 8], 160);
+        for s in 0..4 {
+            let col: Vec<f64> = (0..8).map(|i| (s * 10 + i) as f64).collect();
+            fb.append_col(s, &col, 0);
+        }
+        // touch all shards twice; only 2 fit at once
+        for _round in 0..2 {
+            for s in 0..4 {
+                let l = fb.lease(s, 1);
+                assert_eq!(l.col(0)[0], (s * 10) as f64);
+            }
+        }
+        let c = fb.counters();
+        assert!(c.peak_resident_bytes <= c.budget_bytes, "{c:?}");
+        assert!(c.evictions > 0, "{c:?}");
+        assert!(c.reloads > 0, "{c:?}");
+        assert_eq!(c.loads, c.reloads + 4, "every shard loaded once + reloads: {c:?}");
+    }
+
+    #[test]
+    fn outstanding_lease_pins_block_across_eviction() {
+        // budget of exactly one block
+        let fb = backing(&[4, 4], 32);
+        fb.append_col(0, &[1.0, 2.0, 3.0, 4.0], 0);
+        fb.append_col(1, &[9.0, 8.0, 7.0, 6.0], 0);
+        let pinned = fb.lease(0, 1);
+        let other = fb.lease(1, 1); // forces shard 0 out of the pool
+        assert_eq!(pinned.col(0), &[1.0, 2.0, 3.0, 4.0]); // still readable
+        assert_eq!(other.col(0), &[9.0, 8.0, 7.0, 6.0]);
+    }
+
+    #[test]
+    fn append_invalidates_resident_block() {
+        let fb = backing(&[2], 1 << 20);
+        fb.append_col(0, &[1.0, 2.0], 0);
+        assert_eq!(fb.lease(0, 1).col(0), &[1.0, 2.0]);
+        fb.append_col(0, &[5.0, 6.0], 1);
+        let l = fb.lease(0, 2);
+        assert_eq!(l.col(0), &[1.0, 2.0]);
+        assert_eq!(l.col(1), &[5.0, 6.0]);
+        let c = fb.counters();
+        assert_eq!(c.reloads, 1, "{c:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "read-only")]
+    fn read_only_backing_refuses_append() {
+        let fb = backing(&[2], 1 << 20);
+        fb.append_col(0, &[1.0, 2.0], 0);
+        let dir = fb.dir().to_path_buf();
+        let seg = Segment::open(&dir.join("seg_0.bin")).unwrap();
+        let ro = FileBacking::from_segments(dir, vec![2], vec![seg], 1 << 20, true);
+        ro.append_col(0, &[3.0, 4.0], 1);
+    }
+
+    #[test]
+    fn ephemeral_dir_removed_on_drop() {
+        let fb = backing(&[2], 1 << 20);
+        let dir = fb.dir().to_path_buf();
+        assert!(dir.exists());
+        drop(fb);
+        assert!(!dir.exists());
+    }
+}

@@ -31,13 +31,29 @@
 //!
 //! # Layering (store → backend → driver, over one persistent pool)
 //!
+//! * [`ShardBacking`] (`backing.rs`) is the **physical layer under the
+//!   store**: where each shard's column block lives.  Memory backing
+//!   (owned `Vec<f64>`, the default — bitwise-unchanged legacy layout)
+//!   or spill backing ([`StoreMode::Spill`]: one on-disk segment per
+//!   shard plus an LRU resident pool under a byte budget, with
+//!   load/reload/eviction counters).  Kernels read blocks through a
+//!   per-(shard, pass) [`ShardLease`] — a free borrow on memory
+//!   backings, an `Arc` pin on spill backings, so eviction can never
+//!   invalidate a slice a kernel is reading.  **Lease lifetime rules:**
+//!   acquire once per shard loop, read columns via `lease.col(j)`, drop
+//!   before any `push_col` on the same store (appends widen the block),
+//!   never cache a lease across kernel passes (each pinned block is
+//!   charged against the resident budget while held).
 //! * [`ColumnStore`] (`store.rs`) owns the evaluation columns in
-//!   contiguous **row-sharded** blocks and is the only column currency
-//!   above `linalg`: the OAVI/ABM drivers append candidate columns into
-//!   it, `poly` evaluates term sets into it, `ordering` computes Pearson
-//!   statistics from it.  The per-shard kernels (`gram_partial`,
-//!   `transform_block`) live next to the store so every backend runs the
-//!   same per-shard code.
+//!   contiguous **row-sharded** blocks over a pluggable backing and is
+//!   the only column currency above `linalg`: the OAVI/ABM drivers
+//!   append candidate columns into it, `poly` evaluates term sets into
+//!   it, `ordering` computes Pearson statistics from it.  The per-shard
+//!   kernels (`gram_partial`, `transform_block`) live next to the store
+//!   so every backend runs the same per-shard code, and acquire their
+//!   leases internally — backends above them are backing-agnostic, and
+//!   the exact path stays bitwise identical across backings
+//!   (`rust/tests/storage_parity.rs`).
 //! * [`ComputeBackend`] (this file) is the execution strategy over a
 //!   store.  [`NativeBackend`] reduces the shards sequentially and is the
 //!   correctness reference; [`ShardedBackend`] (`sharded.rs`) maps shards
@@ -100,9 +116,11 @@
 //! tolerance — enforced by `rust/tests/runtime_parity.rs`, which also
 //! pins the native↔sharded bit-for-bit contract.
 
+pub mod backing;
 pub mod sharded;
 pub mod store;
 
+pub use backing::{BackingCounters, FileBacking, ShardBacking, ShardLease, StoreMode};
 pub use sharded::ShardedBackend;
 pub use store::{CandidatePanel, ColumnStore, CrossMode, NumericsMode, PanelRecipe, PanelStats};
 

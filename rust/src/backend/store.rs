@@ -69,11 +69,33 @@
 //! reduce partials in the same shard order, their results are
 //! **bit-for-bit identical** for any fixed shard count — the
 //! reproducibility contract `rust/tests/runtime_parity.rs` pins down.
+//!
+//! # Backing layer (where the bytes live)
+//!
+//! Since the out-of-core PR, a store's shard blocks live behind
+//! [`crate::backend::backing::ShardBacking`]: in-memory `Vec<f64>`
+//! blocks (the default — bitwise-unchanged legacy layout) or on-disk
+//! segments with an LRU resident pool
+//! ([`StoreMode::Spill`]).  Kernels read shard
+//! blocks through a per-(shard, pass) [`ShardLease`] — acquire it once
+//! at the top of the shard loop, call `lease.col(j)` inside, and drop
+//! it before mutating the store (full lifetime rules in
+//! `backend/backing.rs`).  [`ColumnStore::col_shard`] remains the
+//! direct-borrow accessor for memory-backed stores (all historical
+//! call sites and tests) and panics on spilled stores.  The exact path
+//! is **bitwise identical** across backings: leases hand the kernels
+//! the same f64 values, and the per-entry dot discipline above does the
+//! rest — `rust/tests/storage_parity.rs` pins this at fit level.
+//! [`CandidatePanel`]s stay memory-only: they are transient (one degree
+//! chunk, capped at ~256 MB by [`CandidatePanel::budget_cols`]), so
+//! spilling them would buy nothing.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
+use crate::backend::backing::{BackingCounters, ShardBacking, ShardLease, StoreMode};
+use crate::error::Result;
 use crate::linalg::dense::Matrix;
 use crate::linalg::dot;
 use crate::linalg::simd;
@@ -121,7 +143,9 @@ impl NumericsMode {
     }
 }
 
-/// One contiguous row-range of every column, stored column-major.
+/// One contiguous row-range of every column, stored column-major
+/// (in-memory panel shards; store shards live in
+/// [`crate::backend::backing::MemShard`] / segment files).
 #[derive(Clone, Debug)]
 struct Shard {
     /// rows owned by this shard (may be 0 when m < shard count).
@@ -130,42 +154,96 @@ struct Shard {
     data: Vec<f64>,
 }
 
-/// Row-sharded, append-only evaluation-column storage.
+/// Row-sharded, append-only evaluation-column storage over a pluggable
+/// [`ShardBacking`] (in-memory by default; spillable segments via
+/// [`StoreMode::Spill`]).
+///
+/// Cloning deep-copies a memory-backed store and *shares* a spilled
+/// store's segments (see `backend/backing.rs`).
 #[derive(Clone, Debug)]
 pub struct ColumnStore {
     m: usize,
     n_cols: usize,
     /// shard row offsets; `offsets[s]..offsets[s+1]` are shard s's rows.
     offsets: Vec<usize>,
-    shards: Vec<Shard>,
+    backing: ShardBacking,
+}
+
+/// Balanced contiguous partition of `m` rows into `n_shards` shards
+/// (clamped to ≥ 1): the offsets vector every store/panel shares.
+fn balanced_offsets(m: usize, n_shards: usize) -> Vec<usize> {
+    let n_shards = n_shards.max(1);
+    let base = m / n_shards;
+    let rem = m % n_shards;
+    let mut offsets = Vec::with_capacity(n_shards + 1);
+    offsets.push(0);
+    for s in 0..n_shards {
+        let rows = base + usize::from(s < rem);
+        offsets.push(offsets[s] + rows);
+    }
+    offsets
 }
 
 impl ColumnStore {
-    /// Empty store over `m` rows split into `n_shards` balanced contiguous
-    /// shards (clamped to ≥ 1; shards may own 0 rows when `m < n_shards`).
+    /// Empty memory-backed store over `m` rows split into `n_shards`
+    /// balanced contiguous shards (clamped to ≥ 1; shards may own 0 rows
+    /// when `m < n_shards`).
     pub fn new(m: usize, n_shards: usize) -> Self {
-        let n_shards = n_shards.max(1);
-        let base = m / n_shards;
-        let rem = m % n_shards;
-        let mut offsets = Vec::with_capacity(n_shards + 1);
-        offsets.push(0);
-        let mut shards = Vec::with_capacity(n_shards);
-        for s in 0..n_shards {
-            let rows = base + usize::from(s < rem);
-            offsets.push(offsets[s] + rows);
-            shards.push(Shard { rows, data: Vec::new() });
-        }
-        ColumnStore { m, n_cols: 0, offsets, shards }
+        Self::new_with_backing(m, n_shards, StoreMode::Memory)
+            .expect("memory backing is infallible")
+    }
+
+    /// Empty store with an explicit backing mode.  Spill mode creates an
+    /// ephemeral per-process segment directory (removed when the last
+    /// clone drops).
+    pub fn new_with_backing(m: usize, n_shards: usize, mode: StoreMode) -> Result<Self> {
+        let offsets = balanced_offsets(m, n_shards);
+        let shard_rows: Vec<usize> =
+            (0..offsets.len() - 1).map(|s| offsets[s + 1] - offsets[s]).collect();
+        let backing = ShardBacking::build(&shard_rows, mode)?;
+        Ok(ColumnStore { m, n_cols: 0, offsets, backing })
     }
 
     /// Store holding the single constant-1 column (OAVI Line 2: O = {𝟙}).
     pub fn with_ones(m: usize, n_shards: usize) -> Self {
-        let mut store = ColumnStore::new(m, n_shards);
-        for shard in &mut store.shards {
-            shard.data.resize(shard.rows, 1.0);
+        Self::with_ones_backed(m, n_shards, StoreMode::Memory)
+            .expect("memory backing is infallible")
+    }
+
+    /// [`ColumnStore::with_ones`] with an explicit backing mode — the
+    /// OAVI driver's construction point for spillable working stores.
+    pub fn with_ones_backed(m: usize, n_shards: usize, mode: StoreMode) -> Result<Self> {
+        let mut store = Self::new_with_backing(m, n_shards, mode)?;
+        match &mut store.backing {
+            ShardBacking::Memory(shards) => {
+                for shard in shards.iter_mut() {
+                    shard.data.resize(shard.rows, 1.0);
+                }
+            }
+            ShardBacking::Spill(fb) => {
+                let mut ones = Vec::new();
+                for s in 0..store.offsets.len() - 1 {
+                    let rows = store.offsets[s + 1] - store.offsets[s];
+                    ones.clear();
+                    ones.resize(rows, 1.0);
+                    fb.append_col(s, &ones, 0);
+                }
+            }
         }
         store.n_cols = 1;
-        store
+        Ok(store)
+    }
+
+    /// Assemble a store around an existing backing (the manifest-open
+    /// path in `crate::storage`; `offsets` must match the backing's
+    /// shard partition).
+    pub(crate) fn from_backing_parts(
+        m: usize,
+        n_cols: usize,
+        offsets: Vec<usize>,
+        backing: ShardBacking,
+    ) -> Self {
+        ColumnStore { m, n_cols, offsets, backing }
     }
 
     /// Build from explicit full-length columns (tests, benches, rebuilds).
@@ -213,7 +291,7 @@ impl ColumnStore {
     /// Number of row shards (fixed at construction).
     #[inline]
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.offsets.len() - 1
     }
 
     /// Global row range owned by shard `s`.
@@ -222,22 +300,75 @@ impl ColumnStore {
         self.offsets[s]..self.offsets[s + 1]
     }
 
-    /// Column `j`'s contiguous slice within shard `s`.
+    /// Backing mode name (`mem` / `mmap`) for reports.
+    pub fn mode_str(&self) -> &'static str {
+        self.backing.mode_str()
+    }
+
+    /// Is this store spilled to disk?
+    pub fn is_spilled(&self) -> bool {
+        matches!(self.backing, ShardBacking::Spill(_))
+    }
+
+    /// Spill-backing activity counters (`None` on memory stores).
+    pub fn backing_counters(&self) -> Option<BackingCounters> {
+        self.backing.counters()
+    }
+
+    /// Lease shard `s`'s column block for one kernel pass — the only
+    /// read surface that works on every backing.  Memory leases are free
+    /// borrows; spill leases pin the resident block (lifetime rules in
+    /// `backend/backing.rs`).  Acquire once per shard loop, not per
+    /// column.
+    #[inline]
+    pub fn lease(&self, s: usize) -> ShardLease<'_> {
+        match &self.backing {
+            ShardBacking::Memory(shards) => {
+                let sh = &shards[s];
+                ShardLease::Mem { data: &sh.data, rows: sh.rows }
+            }
+            ShardBacking::Spill(fb) => fb.lease(s, self.n_cols),
+        }
+    }
+
+    /// Column `j`'s contiguous slice within shard `s` — direct borrow,
+    /// **memory backing only** (the historical accessor; every borrowed
+    /// slice would dangle under eviction).  Spilled stores panic: go
+    /// through [`ColumnStore::lease`].
     #[inline]
     pub fn col_shard(&self, j: usize, s: usize) -> &[f64] {
-        let shard = &self.shards[s];
-        &shard.data[j * shard.rows..(j + 1) * shard.rows]
+        match &self.backing {
+            ShardBacking::Memory(shards) => {
+                let shard = &shards[s];
+                &shard.data[j * shard.rows..(j + 1) * shard.rows]
+            }
+            ShardBacking::Spill(_) => {
+                panic!("col_shard on a spilled store: acquire a ShardLease via lease(s)")
+            }
+        }
     }
 
     /// Append a full-length column by copying its row-ranges into the
     /// shard blocks.  The caller's buffer is untouched and reusable — this
     /// is the amortized-append contract the OAVI driver relies on (no
-    /// per-accepted-term `Vec` allocation).
+    /// per-accepted-term `Vec` allocation).  On spilled stores the slices
+    /// go straight to the segment files (the resident block is
+    /// invalidated; the next lease reloads at the new width).
     pub fn push_col(&mut self, col: &[f64]) {
         debug_assert_eq!(col.len(), self.m, "push_col: length mismatch");
-        for (s, shard) in self.shards.iter_mut().enumerate() {
-            let range = self.offsets[s]..self.offsets[s + 1];
-            shard.data.extend_from_slice(&col[range]);
+        match &mut self.backing {
+            ShardBacking::Memory(shards) => {
+                for (s, shard) in shards.iter_mut().enumerate() {
+                    let range = self.offsets[s]..self.offsets[s + 1];
+                    shard.data.extend_from_slice(&col[range]);
+                }
+            }
+            ShardBacking::Spill(fb) => {
+                for s in 0..self.offsets.len() - 1 {
+                    let range = self.offsets[s]..self.offsets[s + 1];
+                    fb.append_col(s, &col[range], self.n_cols);
+                }
+            }
         }
         self.n_cols += 1;
     }
@@ -246,7 +377,7 @@ impl ColumnStore {
     pub fn col(&self, j: usize) -> Vec<f64> {
         let mut out = Vec::with_capacity(self.m);
         for s in 0..self.n_shards() {
-            out.extend_from_slice(self.col_shard(j, s));
+            out.extend_from_slice(self.lease(s).col(j));
         }
         out
     }
@@ -257,7 +388,8 @@ impl ColumnStore {
     pub fn fill_product(&self, parent: usize, x: &Matrix, var: usize, out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.m, "fill_product: length mismatch");
         for s in 0..self.n_shards() {
-            let p = self.col_shard(parent, s);
+            let lease = self.lease(s);
+            let p = lease.col(parent);
             for (k, i) in self.shard_range(s).enumerate() {
                 out[i] = p[k] * x.get(i, var);
             }
@@ -268,7 +400,8 @@ impl ColumnStore {
     pub fn dot_cols(&self, i: usize, j: usize) -> f64 {
         let mut acc = 0.0;
         for s in 0..self.n_shards() {
-            acc += dot(self.col_shard(i, s), self.col_shard(j, s));
+            let lease = self.lease(s);
+            acc += dot(lease.col(i), lease.col(j));
         }
         acc
     }
@@ -278,7 +411,7 @@ impl ColumnStore {
         debug_assert_eq!(v.len(), self.m);
         let mut acc = 0.0;
         for s in 0..self.n_shards() {
-            acc += dot(self.col_shard(j, s), &v[self.shard_range(s)]);
+            acc += dot(self.lease(s).col(j), &v[self.shard_range(s)]);
         }
         acc
     }
@@ -293,8 +426,17 @@ impl ColumnStore {
             panel.offsets, self.offsets,
             "push_col_from_panel: panel/store partitions must match"
         );
-        for (s, shard) in self.shards.iter_mut().enumerate() {
-            shard.data.extend_from_slice(panel.col_shard(c, s));
+        match &mut self.backing {
+            ShardBacking::Memory(shards) => {
+                for (s, shard) in shards.iter_mut().enumerate() {
+                    shard.data.extend_from_slice(panel.col_shard(c, s));
+                }
+            }
+            ShardBacking::Spill(fb) => {
+                for s in 0..self.offsets.len() - 1 {
+                    fb.append_col(s, panel.col_shard(c, s), self.n_cols);
+                }
+            }
         }
         self.n_cols += 1;
     }
@@ -306,7 +448,7 @@ impl ColumnStore {
         }
         let mut acc = 0.0;
         for s in 0..self.n_shards() {
-            acc += self.col_shard(j, s).iter().sum::<f64>();
+            acc += self.lease(s).col(j).iter().sum::<f64>();
         }
         acc / self.m as f64
     }
@@ -341,18 +483,15 @@ pub struct CandidatePanel {
 }
 
 impl CandidatePanel {
-    /// Empty panel over `store`'s exact row partition.
+    /// Empty panel over `store`'s exact row partition.  Panels are
+    /// always memory-backed (transient, budget-capped) regardless of the
+    /// store's backing.
     pub fn new_like(store: &ColumnStore) -> Self {
-        CandidatePanel {
-            m: store.m,
-            k: 0,
-            offsets: store.offsets.clone(),
-            shards: store
-                .shards
-                .iter()
-                .map(|sh| Shard { rows: sh.rows, data: Vec::new() })
-                .collect(),
-        }
+        let offsets = store.offsets.clone();
+        let shards = (0..offsets.len() - 1)
+            .map(|s| Shard { rows: offsets[s + 1] - offsets[s], data: Vec::new() })
+            .collect();
+        CandidatePanel { m: store.m, k: 0, offsets, shards }
     }
 
     /// Evaluate every recipe into a fresh panel in **one pass per
@@ -367,8 +506,9 @@ impl CandidatePanel {
         for (s, shard) in panel.shards.iter_mut().enumerate() {
             shard.data.resize(shard.rows * k, 0.0);
             let start = panel.offsets[s];
+            let lease = store.lease(s);
             for (c, r) in recipes.iter().enumerate() {
-                let p = store.col_shard(r.parent, s);
+                let p = lease.col(r.parent);
                 let dst = &mut shard.data[c * shard.rows..(c + 1) * shard.rows];
                 for (i, d) in dst.iter_mut().enumerate() {
                     *d = p[i] * x.get(start + i, r.var);
@@ -740,7 +880,8 @@ fn dots_into<'a, F: Fn(usize) -> &'a [f64]>(col: F, n_cols: usize, bs: &[f64], o
 pub fn gram_partial(store: &ColumnStore, s: usize, b_full: &[f64]) -> (Vec<f64>, f64) {
     let bs = &b_full[store.shard_range(s)];
     let mut atb = vec![0.0f64; store.len()];
-    dots_into(|j| store.col_shard(j, s), store.len(), bs, &mut atb);
+    let lease = store.lease(s);
+    dots_into(|j| lease.col(j), store.len(), bs, &mut atb);
     (atb, dot(bs, bs))
 }
 
@@ -780,9 +921,10 @@ pub fn gram_panel_partial(
         return gram_panel_partial_tiled(store, panel, s, cr, PANEL_TILE_ROWS);
     }
     let mut out = vec![0.0f64; ell * cr.len()];
+    let lease = store.lease(s);
     for (ci, c) in cr.enumerate() {
         let bs = panel.col_shard(c, s);
-        dots_into(|j| store.col_shard(j, s), ell, bs, &mut out[ci * ell..(ci + 1) * ell]);
+        dots_into(|j| lease.col(j), ell, bs, &mut out[ci * ell..(ci + 1) * ell]);
     }
     out
 }
@@ -821,6 +963,7 @@ pub fn gram_panel_partial_tiled(
     }
     let rows = store.shard_range(s).len();
     let full = rows & !3usize; // lane region; the < 4-row tail is sequential
+    let lease = store.lease(s);
     let mut lanes: Vec<[f64; 4]> = Vec::new();
     let mut cb0 = 0usize; // candidate-block start, relative to cr.start
     while cb0 < kc {
@@ -837,18 +980,18 @@ pub fn gram_panel_partial_tiled(
                 let mut j = 0usize;
                 while j + 8 <= ell {
                     let cols: [&[f64]; 8] =
-                        std::array::from_fn(|x| &store.col_shard(j + x, s)[t0..t1]);
+                        std::array::from_fn(|x| &lease.col(j + x)[t0..t1]);
                     simd::dotn_update(&mut lrow[j..j + 8], &cols, b);
                     j += 8;
                 }
                 while j + 4 <= ell {
                     let cols: [&[f64]; 4] =
-                        std::array::from_fn(|x| &store.col_shard(j + x, s)[t0..t1]);
+                        std::array::from_fn(|x| &lease.col(j + x)[t0..t1]);
                     simd::dotn_update(&mut lrow[j..j + 4], &cols, b);
                     j += 4;
                 }
                 while j < ell {
-                    simd::lanes_update(&mut lrow[j], &store.col_shard(j, s)[t0..t1], b);
+                    simd::lanes_update(&mut lrow[j], &lease.col(j)[t0..t1], b);
                     j += 1;
                 }
             }
@@ -860,7 +1003,7 @@ pub fn gram_panel_partial_tiled(
             for (j, d) in dst.iter_mut().enumerate() {
                 *d = simd::lanes_finish(
                     lanes[w * ell + j],
-                    &store.col_shard(j, s)[full..rows],
+                    &lease.col(j)[full..rows],
                     btail,
                 );
             }
@@ -886,10 +1029,11 @@ pub fn gram_panel_partial_fast(
     if ell == 0 {
         return out;
     }
+    let lease = store.lease(s);
     for (ci, c) in cr.enumerate() {
         let bs = panel.col_shard(c, s);
         for (j, o) in out[ci * ell..(ci + 1) * ell].iter_mut().enumerate() {
-            *o = simd::dot_fast(store.col_shard(j, s), bs);
+            *o = simd::dot_fast(lease.col(j), bs);
         }
     }
     out
@@ -1051,6 +1195,7 @@ pub fn transform_block_into(
     for (k, i) in range.enumerate() {
         out[k * g..(k + 1) * g].copy_from_slice(u.row(i));
     }
+    let lease = store.lease(s);
     for j in 0..store.len() {
         let crow = c.row(j);
         // WIHB/BPCG deliberately produce sparse coefficient vectors (the
@@ -1062,7 +1207,7 @@ pub fn transform_block_into(
         if crow.iter().all(|&v| v == 0.0) {
             continue;
         }
-        let col = store.col_shard(j, s);
+        let col = lease.col(j);
         for (k, &a_ij) in col.iter().enumerate() {
             let orow = &mut out[k * g..(k + 1) * g];
             for (o, ck) in orow.iter_mut().zip(crow.iter()) {
@@ -1538,5 +1683,143 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Spilled twin of a memory store: same columns pushed in the same
+    /// order through the spill backing.
+    fn spilled_twin(cols: &[Vec<f64>], shards: usize, budget: usize) -> ColumnStore {
+        let m = cols.first().map(|c| c.len()).unwrap_or(0);
+        let mut st = ColumnStore::new_with_backing(
+            m,
+            shards,
+            StoreMode::Spill { budget_bytes: budget },
+        )
+        .unwrap();
+        for c in cols {
+            st.push_col(c);
+        }
+        st
+    }
+
+    #[test]
+    fn memory_lease_matches_col_shard_exactly() {
+        let mut rng = Rng::new(11);
+        let cols = random_cols(&mut rng, 37, 4);
+        let store = ColumnStore::from_cols(&cols, 3);
+        for s in 0..store.n_shards() {
+            let lease = store.lease(s);
+            assert_eq!(lease.rows(), store.shard_range(s).len());
+            for j in 0..store.len() {
+                assert_eq!(lease.col(j), store.col_shard(j, s));
+            }
+        }
+    }
+
+    #[test]
+    fn spilled_store_roundtrips_columns_bitwise() {
+        let mut rng = Rng::new(12);
+        let cols = random_cols(&mut rng, 41, 5);
+        let mem = ColumnStore::from_cols(&cols, 3);
+        let spill = spilled_twin(&cols, 3, 1 << 20);
+        assert!(spill.is_spilled());
+        assert_eq!(spill.mode_str(), "mmap");
+        assert_eq!(mem.mode_str(), "mem");
+        for j in 0..cols.len() {
+            assert_eq!(bits(&mem.col(j)), bits(&spill.col(j)));
+        }
+    }
+
+    #[test]
+    fn spilled_kernels_are_bitwise_equal_to_memory() {
+        let mut rng = Rng::new(13);
+        let m = 53;
+        let cols = random_cols(&mut rng, m, 4);
+        let mem = ColumnStore::from_cols(&cols, 3);
+        // budget below one block: every lease reloads from disk
+        let spill = spilled_twin(&cols, 3, 64);
+        let cands = random_cols(&mut rng, m, 5);
+        let (mut pm, mut ps) = (CandidatePanel::new_like(&mem), CandidatePanel::new_like(&spill));
+        for c in &cands {
+            pm.push_col(c);
+            ps.push_col(c);
+        }
+        for cross in [CrossMode::Eager, CrossMode::Lazy, CrossMode::Skip] {
+            let a = gram_panel_seq(&mem, &pm, cross);
+            let b = gram_panel_seq(&spill, &ps, cross);
+            for c in 0..cands.len() {
+                assert_eq!(bits(a.atb_col(c)), bits(b.atb_col(c)));
+                if cross != CrossMode::Skip {
+                    assert_eq!(a.btb(c).to_bits(), b.btb(c).to_bits());
+                }
+            }
+        }
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let (atb_m, btb_m) = gram_stats_seq(&mem, &b);
+        let (atb_s, btb_s) = gram_stats_seq(&spill, &b);
+        assert_eq!(bits(&atb_m), bits(&atb_s));
+        assert_eq!(btb_m.to_bits(), btb_s.to_bits());
+        assert_eq!(mem.dot_cols(0, 3).to_bits(), spill.dot_cols(0, 3).to_bits());
+        assert_eq!(mem.col_mean(2).to_bits(), spill.col_mean(2).to_bits());
+        let c = spill.backing_counters().unwrap();
+        assert!(c.reloads > 0, "tiny budget must force reloads: {c:?}");
+        let max_block = ((m + 2) / 3) * 4 * 8; // largest shard block exceeds the budget
+        assert!(c.peak_resident_bytes <= c.budget_bytes.max(max_block as u64));
+    }
+
+    #[test]
+    fn panel_from_recipes_reads_spilled_parents_bitwise() {
+        let mut rng = Rng::new(14);
+        let m = 29;
+        let n = 2;
+        let mut x = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                x.set(i, j, rng.uniform());
+            }
+        }
+        let cols = random_cols(&mut rng, m, 3);
+        let mem = ColumnStore::from_cols(&cols, 4);
+        let spill = spilled_twin(&cols, 4, 128);
+        let recipes =
+            vec![PanelRecipe { parent: 0, var: 1 }, PanelRecipe { parent: 2, var: 0 }];
+        let pm = CandidatePanel::from_recipes(&mem, &x, &recipes);
+        let ps = CandidatePanel::from_recipes(&spill, &x, &recipes);
+        for c in 0..recipes.len() {
+            assert_eq!(bits(&pm.col(c)), bits(&ps.col(c)));
+        }
+    }
+
+    #[test]
+    fn push_col_from_panel_appends_to_spilled_store_bitwise() {
+        let mut rng = Rng::new(15);
+        let m = 33;
+        let cols = random_cols(&mut rng, m, 2);
+        let mut mem = ColumnStore::from_cols(&cols, 3);
+        let mut spill = spilled_twin(&cols, 3, 1 << 20);
+        let cand: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let (mut pm, mut ps) = (CandidatePanel::new_like(&mem), CandidatePanel::new_like(&spill));
+        pm.push_col(&cand);
+        ps.push_col(&cand);
+        mem.push_col_from_panel(&pm, 0);
+        spill.push_col_from_panel(&ps, 0);
+        assert_eq!(mem.len(), spill.len());
+        assert_eq!(bits(&mem.col(2)), bits(&spill.col(2)));
+    }
+
+    #[test]
+    #[should_panic(expected = "col_shard on a spilled store")]
+    fn col_shard_panics_on_spilled_store() {
+        let spill = spilled_twin(&[vec![1.0, 2.0, 3.0]], 2, 1 << 20);
+        let _ = spill.col_shard(0, 0);
+    }
+
+    #[test]
+    fn with_ones_backed_spill_matches_memory() {
+        let mem = ColumnStore::with_ones(17, 4);
+        let spill =
+            ColumnStore::with_ones_backed(17, 4, StoreMode::Spill { budget_bytes: 1 << 20 })
+                .unwrap();
+        assert_eq!(spill.len(), 1);
+        assert_eq!(bits(&mem.col(0)), bits(&spill.col(0)));
     }
 }

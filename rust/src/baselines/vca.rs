@@ -200,7 +200,8 @@ impl VcaModel {
                 }
                 VcaNode::Product(a, b) => {
                     for s in 0..store.n_shards() {
-                        let (va, vb) = (store.col_shard(*a, s), store.col_shard(*b, s));
+                        let lease = store.lease(s);
+                        let (va, vb) = (lease.col(*a), lease.col(*b));
                         for (k, i) in store.shard_range(s).enumerate() {
                             buf[i] = va[k] * vb[k];
                         }
@@ -213,7 +214,8 @@ impl VcaModel {
                             continue;
                         }
                         for s in 0..store.n_shards() {
-                            let src = store.col_shard(*idx, s);
+                            let lease = store.lease(s);
+                            let src = lease.col(*idx);
                             for (k, i) in store.shard_range(s).enumerate() {
                                 buf[i] += w * src[k];
                             }
@@ -243,7 +245,8 @@ impl VcaModel {
         let mut out = Matrix::zeros(m, self.vanishing.len());
         for (gi, &nid) in self.vanishing.iter().enumerate() {
             for s in 0..store.n_shards() {
-                let col = store.col_shard(nid, s);
+                let lease = store.lease(s);
+                let col = lease.col(nid);
                 for (k, i) in store.shard_range(s).enumerate() {
                     out.set(i, gi, col[k].abs());
                 }

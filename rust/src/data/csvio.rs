@@ -3,6 +3,11 @@
 //! Format: numeric columns, label (integer) in the last column, optional
 //! header row (auto-detected).  Used as the optional real-UCI path and by
 //! the bench harness for result series.
+//!
+//! Parsing streams line-by-line through
+//! [`crate::storage::ingest::RowGroupReader`] — the same loop chunked
+//! ingestion uses — so the file is never held in memory whole and the
+//! two paths cannot drift on header/error semantics.
 
 use std::fs;
 use std::io::Write as _;
@@ -12,39 +17,34 @@ use crate::data::scaling::minmax_scale_in_place;
 use crate::data::Dataset;
 use crate::error::{AviError, Result};
 use crate::linalg::dense::Matrix;
+use crate::storage::ingest::RowGroupReader;
+
+/// Rows parsed per streaming step (bounds loader memory to one group
+/// plus the accumulated feature matrix).
+const LOAD_GROUP_ROWS: usize = 8_192;
 
 /// Load `<path>` as a dataset (label = last column, min-max scaled).
 pub fn load_csv_dataset(path: &Path, name: &str) -> Result<Dataset> {
-    let text = fs::read_to_string(path)?;
-    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut rdr = RowGroupReader::open(path, LOAD_GROUP_ROWS)?;
+    let mut feats: Vec<f64> = Vec::new();
     let mut labels: Vec<i64> = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
+    let mut buf = Vec::new();
+    loop {
+        let got = rdr.next_group(&mut buf)?;
+        if got == 0 {
+            break;
         }
-        let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
-        let parsed: std::result::Result<Vec<f64>, _> =
-            fields.iter().map(|f| f.parse::<f64>()).collect();
-        match parsed {
-            Ok(vals) if vals.len() >= 2 => {
-                let (label, feats) = vals.split_last().unwrap();
-                rows.push(feats.to_vec());
-                labels.push(label.round() as i64);
-            }
-            _ if lineno == 0 => continue, // header
-            _ => {
-                return Err(AviError::Data(format!(
-                    "{}: unparsable line {}",
-                    path.display(),
-                    lineno + 1
-                )))
-            }
+        let n = rdr.n_fields().expect("fields known after a non-empty group");
+        for r in 0..got {
+            let row = &buf[r * n..(r + 1) * n];
+            feats.extend_from_slice(&row[..n - 1]);
+            labels.push(row[n - 1].round() as i64);
         }
     }
-    if rows.is_empty() {
+    if labels.is_empty() {
         return Err(AviError::Data(format!("{}: no rows", path.display())));
     }
+    let n_feats = rdr.n_fields().unwrap() - 1;
     // remap labels to 0..k
     let mut uniq: Vec<i64> = labels.clone();
     uniq.sort_unstable();
@@ -53,7 +53,7 @@ pub fn load_csv_dataset(path: &Path, name: &str) -> Result<Dataset> {
         .iter()
         .map(|l| uniq.binary_search(l).unwrap())
         .collect();
-    let mut x = Matrix::from_rows(&rows)?;
+    let mut x = Matrix::from_flat(labels.len(), n_feats, feats)?;
     minmax_scale_in_place(&mut x);
     Dataset::new(name, x, y, uniq.len())
 }

@@ -37,6 +37,11 @@ pub enum AviError {
     /// manifest naming a missing file).
     Registry(String),
 
+    /// Storage-plane failure: corrupt or truncated shard segment,
+    /// checksum mismatch, malformed dataset manifest.  Raised *before*
+    /// any fit touches the data — a store that opens is trustworthy.
+    Storage(String),
+
     /// IO.
     Io(std::io::Error),
 }
@@ -54,6 +59,7 @@ impl fmt::Display for AviError {
             AviError::Runtime(m) => write!(f, "runtime error: {m}"),
             AviError::Coordinator(m) => write!(f, "coordinator error: {m}"),
             AviError::Registry(m) => write!(f, "registry error: {m}"),
+            AviError::Storage(m) => write!(f, "storage error: {m}"),
             AviError::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -90,5 +96,9 @@ mod tests {
         );
         let io: AviError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("io error"));
+        assert_eq!(
+            AviError::Storage("seg_0.bin checksum mismatch".into()).to_string(),
+            "storage error: seg_0.bin checksum mismatch"
+        );
     }
 }

@@ -32,7 +32,7 @@
 
 pub mod persist;
 
-use crate::backend::{ComputeBackend, NativeBackend, NumericsMode};
+use crate::backend::{ComputeBackend, NativeBackend, NumericsMode, StoreMode};
 use crate::baselines::abm::{Abm, AbmConfig};
 use crate::baselines::vca::{Vca, VcaConfig, VcaModel};
 use crate::error::{AviError, Result};
@@ -127,7 +127,9 @@ impl FitReport {
              \"inf_disabled_ihb\":{},\"degree_reached\":{},\
              \"panel_passes\":{},\"panel_cols\":{},\"cross_cache_hits\":{},\
              \"numerics\":\"{}\",\"fast_max_abs_err\":{:e},\
-             \"fast_err_budget\":{:e}}}",
+             \"fast_err_budget\":{:e},\"store\":\"{}\",\"store_loads\":{},\
+             \"store_reloads\":{},\"store_evictions\":{},\
+             \"store_peak_resident_bytes\":{}}}",
             crate::util::json_escape(&self.name),
             self.n_generators,
             self.n_order_terms,
@@ -147,6 +149,11 @@ impl FitReport {
             s.numerics.as_str(),
             s.fast_max_abs_err,
             s.fast_err_budget,
+            if s.store_spilled { "mmap" } else { "mem" },
+            s.store_loads,
+            s.store_reloads,
+            s.store_evictions,
+            s.store_peak_resident_bytes,
         )
     }
 }
@@ -541,6 +548,7 @@ pub struct EstimatorBuilder {
     max_degree: Option<u32>,
     numerics: Option<NumericsMode>,
     fast_tol: Option<f64>,
+    store: Option<StoreMode>,
 }
 
 impl EstimatorBuilder {
@@ -553,6 +561,7 @@ impl EstimatorBuilder {
             max_degree: None,
             numerics: None,
             fast_tol: None,
+            store: None,
         }
     }
 
@@ -589,6 +598,16 @@ impl EstimatorBuilder {
         self
     }
 
+    /// Working-store backing (OAVI family only): `StoreMode::Spill`
+    /// keeps evaluation columns in checksummed on-disk segments under a
+    /// resident-byte budget.  Exact-mode results are bitwise identical
+    /// to memory backing; rejected for ABM/VCA, whose fits materialize
+    /// full matrices anyway.
+    pub fn store(mut self, mode: StoreMode) -> Self {
+        self.store = Some(mode);
+        self
+    }
+
     /// Resolve the name and produce a validated config.
     pub fn build(self) -> Result<EstimatorConfig> {
         let psi = self.psi;
@@ -622,11 +641,19 @@ impl EstimatorBuilder {
                 if let Some(t) = self.fast_tol {
                     c.fast_tol = t;
                 }
+                if let Some(s) = self.store {
+                    c.store = s;
+                }
             }
             EstimatorConfig::Abm(c) => {
                 if self.numerics == Some(NumericsMode::Fast) {
                     return Err(AviError::Config(
                         "fast numerics is only supported by the OAVI family".into(),
+                    ));
+                }
+                if self.store.map(|s| s.is_spill()) == Some(true) {
+                    return Err(AviError::Config(
+                        "spill-backed stores are only supported by the OAVI family".into(),
                     ));
                 }
                 if let Some(d) = self.max_degree {
@@ -637,6 +664,11 @@ impl EstimatorBuilder {
                 if self.numerics == Some(NumericsMode::Fast) {
                     return Err(AviError::Config(
                         "fast numerics is only supported by the OAVI family".into(),
+                    ));
+                }
+                if self.store.map(|s| s.is_spill()) == Some(true) {
+                    return Err(AviError::Config(
+                        "spill-backed stores are only supported by the OAVI family".into(),
                     ));
                 }
                 if let Some(d) = self.max_degree {
@@ -699,6 +731,9 @@ mod tests {
             "\"numerics\":\"exact\"",
             "\"fast_max_abs_err\":",
             "\"fast_err_budget\":",
+            "\"store\":\"mem\"",
+            "\"store_evictions\":",
+            "\"store_peak_resident_bytes\":",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
@@ -794,6 +829,25 @@ mod tests {
             );
             // exact is the default everywhere and always accepted
             assert!(EstimatorBuilder::new(name).numerics(NumericsMode::Exact).build().is_ok());
+        }
+    }
+
+    #[test]
+    fn builder_store_mode_is_oavi_only() {
+        let cfg = EstimatorBuilder::new("cgavi-ihb")
+            .store(StoreMode::spill_mb(16))
+            .build()
+            .unwrap();
+        match cfg {
+            EstimatorConfig::Oavi(c) => assert!(c.store.is_spill()),
+            _ => unreachable!(),
+        }
+        for name in ["abm", "vca"] {
+            assert!(
+                EstimatorBuilder::new(name).store(StoreMode::spill_mb(16)).build().is_err(),
+                "{name} must reject spill stores"
+            );
+            assert!(EstimatorBuilder::new(name).store(StoreMode::Memory).build().is_ok());
         }
     }
 

@@ -17,6 +17,11 @@
 //!   evaluation store, the only column currency above `linalg`.  The
 //!   per-shard kernels (`gram_partial`, `transform_block`) live next to
 //!   it so every execution strategy runs identical per-shard code.
+//!   Shard blocks live behind a pluggable [`backend::ShardBacking`]
+//!   (in-memory by default, or spilled to checksummed on-disk segments
+//!   under an LRU resident-byte budget — [`backend::StoreMode`]); the
+//!   [`storage`] module adds chunked CSV ingestion into manifest-backed
+//!   dataset directories for the m ≫ RAM regime.
 //! * **Backend** — [`backend::ComputeBackend`]: the execution strategy
 //!   over a store.  [`backend::NativeBackend`] (sequential reference),
 //!   [`backend::ShardedBackend`] (thread-pool map-reduce, bit-identical
@@ -78,6 +83,7 @@ pub mod pipeline;
 pub mod poly;
 pub mod runtime;
 pub mod solvers;
+pub mod storage;
 pub mod svm;
 pub mod util;
 

@@ -9,22 +9,26 @@
 //! Subcommands (hand-rolled parser; clap is unavailable offline):
 //!
 //! ```text
-//! avi-scale datasets                      # Table 2: the dataset registry
+//! avi-scale dataset <action> [opts]       # out-of-core data plane:
+//!                                         #   ingest | inspect | stats | split | list
 //! avi-scale fit      [opts]               # fit one OAVI/ABM/VCA model per class
 //! avi-scale pipeline [opts]               # full Algorithm-2 train/test run
 //! avi-scale serve    [opts]               # batched transform service demo
 //! avi-scale bound    [opts]               # Theorem 4.3 bound vs empirical
 //! ```
 //!
-//! Common options: `--dataset <name>` `--method <name>` `--psi <f>`
-//! `--scale <f>` `--seed <u64>` `--backend native|xla` `--ordering
-//! pearson|reverse|native` `--workers <n>`.
+//! Common options: `--dataset <name>` `--data <dir>` `--method <name>`
+//! `--psi <f>` `--scale <f>` `--seed <u64>` `--backend native|xla`
+//! `--ordering pearson|reverse|native` `--workers <n>`
+//! `--store mem|mmap` `--mem-budget-mb <n>`.
+//!
+//! `datasets` survives as an alias for `dataset list`.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use avi_scale::backend::{ComputeBackend, NativeBackend};
+use avi_scale::backend::{ComputeBackend, NativeBackend, StoreMode};
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::coordinator::registry::{parse_spec, ModelRegistry};
 use avi_scale::coordinator::router::ModelRouter;
@@ -42,23 +46,43 @@ use avi_scale::pipeline::{
     PipelineConfig,
 };
 use avi_scale::runtime::{PjrtRuntime, XlaBackend};
+use avi_scale::storage::{
+    ingest_csv, verify_segments, DatasetManifest, IngestOptions, DEFAULT_ROWS_PER_SHARD,
+};
 use avi_scale::svm::linear::LinearSvmConfig;
 use avi_scale::util::sci;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let Some((cmd, opts)) = parse(&args) else {
+    let Some(first) = args.first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    // `dataset <action>` takes one positional action before the --key
+    // value pairs; every other command is options-only
+    let (cmd, rest) = if first == "dataset" {
+        let action = args.get(1).map(|s| s.as_str()).unwrap_or("list");
+        (format!("dataset {action}"), &args[2.min(args.len())..])
+    } else {
+        (first.clone(), &args[1..])
+    };
+    let Some(opts) = parse_opts(rest) else {
         eprintln!("{USAGE}");
         return ExitCode::from(2);
     };
     let run = match cmd.as_str() {
-        "datasets" => cmd_datasets(&opts),
+        // `datasets` is the pre-dataset-family alias for `dataset list`
+        "datasets" | "dataset list" => cmd_dataset_list(&opts),
+        "dataset ingest" => cmd_dataset_ingest(&opts),
+        "dataset inspect" => cmd_dataset_inspect(&opts),
+        "dataset stats" => cmd_dataset_stats(&opts),
+        "dataset split" => cmd_dataset_split(&opts),
         "fit" => cmd_fit(&opts),
         "pipeline" => cmd_pipeline(&opts),
         "predict" => cmd_predict(&opts),
         "serve" => cmd_serve(&opts),
         "bound" => cmd_bound(&opts),
-        "help" | "--help" | "-h" => {
+        "help" | "--help" | "-h" | "dataset help" => {
             println!("{USAGE}");
             Ok(())
         }
@@ -82,7 +106,16 @@ avi-scale — Approximate Vanishing Ideal computations at scale
 USAGE: avi-scale <command> [--key value]...
 
 COMMANDS:
-  datasets    print the Table-2 dataset registry
+  dataset     out-of-core data plane (manifest-backed shard directories):
+                dataset list                    the Table-2 registry (alias: datasets)
+                dataset ingest  --csv <f> --out <dir> [--name <s>]
+                                [--rows-per-shard <n>]
+                                stream a CSV into checksummed shard segments
+                                (single pass; peak memory = one row-group)
+                dataset inspect --data <dir>    manifest + per-segment checksums
+                dataset stats   --data <dir>    streaming per-column min/max/mean
+                dataset split   --data <dir> --out-train <dir> --out-test <dir>
+                                [--test-frac <f>] [--seed <n>]
   fit         fit generator models per class; print |G|+|O|, degree, SPAR
   pipeline    Algorithm-2 train/test run with a 60/40 split
               (--save <path> persists the trained pipeline as JSON)
@@ -97,6 +130,16 @@ COMMANDS:
 
 OPTIONS:
   --dataset <bank|credit|htru|seeds|skin|spam|synthetic>   (default synthetic)
+  --data <dir>           load an ingested dataset directory (from `dataset
+                         ingest`) instead of the registry; segments are
+                         checksum-verified before use
+  --store <mem|mmap>     OAVI working-store backing (default mem).  mmap
+                         spills evaluation columns to checksummed on-disk
+                         segments under an LRU resident-byte budget; exact
+                         results are bitwise identical to mem for any
+                         fixed shard count
+  --mem-budget-mb <n>    resident-byte budget for mmap stores and --data
+                         loading (default 256)
   --method  <cgavi-ihb|agdavi-ihb|bpcgavi-wihb|bpcgavi|pcgavi|cgavi|abm|vca>
   --psi <f64>            vanishing parameter        (default 0.005)
   --scale <f64>          dataset size multiplier    (default 0.05)
@@ -145,17 +188,16 @@ SERVE OPTIONS:
   --deadline-ms <n>      per-request queue deadline (default none)
 ";
 
-fn parse(args: &[String]) -> Option<(String, HashMap<String, String>)> {
-    let cmd = args.first()?.clone();
+fn parse_opts(args: &[String]) -> Option<HashMap<String, String>> {
     let mut opts = HashMap::new();
-    let mut i = 1;
+    let mut i = 0;
     while i < args.len() {
         let k = args[i].strip_prefix("--")?.to_string();
         let v = args.get(i + 1)?.clone();
         opts.insert(k, v);
         i += 2;
     }
-    Some((cmd, opts))
+    Some(opts)
 }
 
 fn opt_f64(opts: &HashMap<String, String>, key: &str, default: f64) -> f64 {
@@ -170,9 +212,27 @@ fn opt_usize(opts: &HashMap<String, String>, key: &str, default: usize) -> usize
     opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// `--store mem|mmap` (+ `--mem-budget-mb`) → a [`StoreMode`].
+fn store_mode_for(opts: &HashMap<String, String>) -> Result<Option<StoreMode>> {
+    let Some(mode) = opts.get("store") else {
+        return Ok(None);
+    };
+    let budget_mb = opt_usize(opts, "mem-budget-mb", 256);
+    match mode.as_str() {
+        "mem" => Ok(Some(StoreMode::Memory)),
+        "mmap" => Ok(Some(StoreMode::spill_mb(budget_mb))),
+        other => Err(avi_scale::AviError::Config(format!(
+            "--store must be mem|mmap, got '{other}'"
+        ))),
+    }
+}
+
 fn estimator_for(opts: &HashMap<String, String>, psi: f64) -> Result<EstimatorConfig> {
     let name = opts.get("method").map(|s| s.as_str()).unwrap_or("cgavi-ihb");
     let mut builder = EstimatorBuilder::new(name).psi(psi);
+    if let Some(mode) = store_mode_for(opts)? {
+        builder = builder.store(mode);
+    }
     if let Some(mode) = opts.get("numerics") {
         builder = builder.numerics(match mode.as_str() {
             "exact" => NumericsMode::Exact,
@@ -250,13 +310,113 @@ fn xla_backend(opts: &HashMap<String, String>) -> Result<Box<dyn ComputeBackend>
 }
 
 fn load(opts: &HashMap<String, String>) -> Result<avi_scale::data::Dataset> {
+    // an ingested dataset directory wins over the simulated registry
+    if let Some(dir) = opts.get("data") {
+        return avi_scale::storage::open_dataset(
+            std::path::Path::new(dir),
+            opt_usize(opts, "mem-budget-mb", 0) << 20,
+        );
+    }
     let name = opts.get("dataset").map(|s| s.as_str()).unwrap_or("synthetic");
     let scale = opt_f64(opts, "scale", 0.05);
     let seed = opt_u64(opts, "seed", 42);
     load_registry_dataset(name, scale, seed)
 }
 
-fn cmd_datasets(_opts: &HashMap<String, String>) -> Result<()> {
+/// `--data <dir>` as a path, required by the dataset actions.
+fn data_dir(opts: &HashMap<String, String>) -> Result<std::path::PathBuf> {
+    opts.get("data").map(std::path::PathBuf::from).ok_or_else(|| {
+        avi_scale::AviError::Config("this action needs --data <dir> (from `dataset ingest`)".into())
+    })
+}
+
+fn cmd_dataset_ingest(opts: &HashMap<String, String>) -> Result<()> {
+    let csv = opts
+        .get("csv")
+        .ok_or_else(|| avi_scale::AviError::Config("dataset ingest needs --csv <path>".into()))?;
+    let out = opts
+        .get("out")
+        .ok_or_else(|| avi_scale::AviError::Config("dataset ingest needs --out <dir>".into()))?;
+    let ingest_opts = IngestOptions {
+        name: opts.get("name").cloned().unwrap_or_else(|| "ingested".into()),
+        rows_per_shard: opt_usize(opts, "rows-per-shard", DEFAULT_ROWS_PER_SHARD),
+    };
+    let t0 = std::time::Instant::now();
+    let man = ingest_csv(std::path::Path::new(csv), std::path::Path::new(out), &ingest_opts)?;
+    println!("ingested    = {} ({} rows x {} cols)", man.name, man.rows, man.cols);
+    println!("segments    = {} (<= {} rows each)", man.segments.len(), ingest_opts.rows_per_shard);
+    println!("labels      = {:?}", man.labels_uniq);
+    println!("out         = {out}");
+    println!("ingest time = {}s", sci(t0.elapsed().as_secs_f64()));
+    Ok(())
+}
+
+fn cmd_dataset_inspect(opts: &HashMap<String, String>) -> Result<()> {
+    let dir = data_dir(opts)?;
+    let man = DatasetManifest::load(&dir)?;
+    verify_segments(&dir, &man)?;
+    println!("name     = {}", man.name);
+    println!("rows     = {}", man.rows);
+    println!("cols     = {} ({} features + label)", man.cols, man.n_features());
+    println!("labels   = {:?}", man.labels_uniq);
+    println!("segments = {}", man.segments.len());
+    for seg in &man.segments {
+        println!(
+            "  {:<14} rows={:<8} bytes={:<12} fnv1a64={:016x}",
+            seg.file, seg.rows, seg.bytes, seg.checksum
+        );
+    }
+    println!("verify   = ok (every segment checksum matches the manifest)");
+    Ok(())
+}
+
+fn cmd_dataset_stats(opts: &HashMap<String, String>) -> Result<()> {
+    let dir = data_dir(opts)?;
+    let budget = opt_usize(opts, "mem-budget-mb", 0) << 20;
+    let (man, store) = avi_scale::storage::open_store(&dir, budget)?;
+    let stats = avi_scale::storage::column_stats(&store);
+    println!("dataset  = {} ({} rows, {} shards)", man.name, man.rows, store.n_shards());
+    for (j, st) in stats.iter().enumerate() {
+        let tag = if j + 1 == man.cols { "label" } else { "feat " };
+        println!(
+            "col {j:<4} [{tag}] min={} max={} mean={}",
+            sci(st.min),
+            sci(st.max),
+            sci(st.mean)
+        );
+    }
+    if let Some(c) = store.backing_counters() {
+        println!(
+            "store    = {} loads, peak resident {} B (budget {} B)",
+            c.loads, c.peak_resident_bytes, c.budget_bytes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dataset_split(opts: &HashMap<String, String>) -> Result<()> {
+    let dir = data_dir(opts)?;
+    let out_train = opts.get("out-train").ok_or_else(|| {
+        avi_scale::AviError::Config("dataset split needs --out-train <dir>".into())
+    })?;
+    let out_test = opts.get("out-test").ok_or_else(|| {
+        avi_scale::AviError::Config("dataset split needs --out-test <dir>".into())
+    })?;
+    let frac = opt_f64(opts, "test-frac", 0.4);
+    let seed = opt_u64(opts, "seed", 42);
+    let (tr, te) = avi_scale::storage::split_dataset(
+        &dir,
+        std::path::Path::new(out_train),
+        std::path::Path::new(out_test),
+        frac,
+        seed,
+    )?;
+    println!("train       = {} ({} rows) -> {out_train}", tr.name, tr.rows);
+    println!("test        = {} ({} rows) -> {out_test}", te.name, te.rows);
+    Ok(())
+}
+
+fn cmd_dataset_list(_opts: &HashMap<String, String>) -> Result<()> {
     println!(
         "{:<11} {:>9} {:>9} {:>8}   (Table 2; simulated — DESIGN.md §5)",
         "dataset", "#samples", "#features", "classes"

@@ -1,6 +1,7 @@
 //! OAVI configuration: solver, IHB mode, vanishing parameter, safeguards.
 
-use crate::backend::NumericsMode;
+use crate::backend::backing::validate_store_mode;
+use crate::backend::{NumericsMode, StoreMode};
 use crate::error::{AviError, Result};
 use crate::solvers::SolverKind;
 
@@ -62,6 +63,11 @@ pub struct OaviConfig {
     /// panel stats on a sampled sub-block and fails the fit if it
     /// exceeds `fast_tol · max(1, max|exact|)`.  Ignored in exact mode.
     pub fast_tol: f64,
+    /// Working-store backing: [`StoreMode::Memory`] (default) or
+    /// [`StoreMode::Spill`] — evaluation columns in checksummed on-disk
+    /// segments under an LRU resident-byte budget.  Exact-mode results
+    /// are bitwise identical either way for any fixed shard count.
+    pub store: StoreMode,
 }
 
 impl OaviConfig {
@@ -79,6 +85,7 @@ impl OaviConfig {
             panel_budget_cols: 512,
             numerics: NumericsMode::Exact,
             fast_tol: 1e-3,
+            store: StoreMode::Memory,
         }
     }
 
@@ -168,6 +175,7 @@ impl OaviConfig {
                 self.fast_tol
             )));
         }
+        validate_store_mode(self.store)?;
         Ok(())
     }
 }
@@ -213,6 +221,11 @@ mod tests {
         cfg.numerics = NumericsMode::Fast;
         cfg.fast_tol = 0.0;
         assert!(cfg.validate().is_err());
+        let mut cfg = OaviConfig::cgavi_ihb(0.01);
+        cfg.store = StoreMode::Spill { budget_bytes: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.store = StoreMode::spill_mb(64);
+        assert!(cfg.validate().is_ok());
         assert!(OaviConfig::cgavi_ihb(0.01).validate().is_ok());
     }
 }

@@ -94,6 +94,17 @@ pub struct FitStats {
     /// Fast mode only: the error budget `fast_tol · max(1, max|exact|)`
     /// the measurement was asserted against (0 in exact mode).
     pub fast_err_budget: f64,
+    /// Did the working store spill to disk ([`crate::backend::StoreMode::Spill`])?
+    pub store_spilled: bool,
+    /// Spill mode only: shard-block loads from segments (0 in memory mode).
+    pub store_loads: u64,
+    /// Spill mode only: loads of previously-resident blocks (evicted or
+    /// invalidated by append, then needed again).
+    pub store_reloads: u64,
+    /// Spill mode only: LRU evictions under the resident-byte budget.
+    pub store_evictions: u64,
+    /// Spill mode only: high-water mark of resident shard bytes.
+    pub store_peak_resident_bytes: u64,
 }
 
 /// Fitted OAVI output `(G, O)` plus diagnostics.
@@ -140,7 +151,10 @@ fn fast_error_sample(
         for j in 0..jj {
             let mut exact = 0.0f64;
             for s in 0..cols.n_shards() {
-                exact += dot(cols.col_shard(j, s), panel.col_shard(c, s));
+                // lease per shard: works for spilled stores too (the
+                // sample is tiny, so re-acquisition cost is noise)
+                let lease = cols.lease(s);
+                exact += dot(lease.col(j), panel.col_shard(c, s));
             }
             scale = scale.max(exact.abs());
             max_err = max_err.max((pstats.atb_col(c)[j] - exact).abs());
@@ -213,8 +227,10 @@ impl Oavi {
 
         let mut o = TermSet::with_one(n);
         // the store's shard count is the backend's intra-fit parallelism
-        // knob; results are deterministic for a fixed shard count
-        let mut cols = ColumnStore::with_ones(m, backend.preferred_shards(m));
+        // knob; results are deterministic for a fixed shard count, and
+        // (exact mode) bitwise identical across backing modes
+        let mut cols =
+            ColumnStore::with_ones_backed(m, backend.preferred_shards(m), cfg.store)?;
         let mut gram = if cfg.ihb == IhbMode::None {
             GramState::new_ones_b_only(m)
         } else {
@@ -371,6 +387,13 @@ impl Oavi {
             }
         }
 
+        stats.store_spilled = cols.is_spilled();
+        if let Some(c) = cols.backing_counters() {
+            stats.store_loads = c.loads;
+            stats.store_reloads = c.reloads;
+            stats.store_evictions = c.evictions;
+            stats.store_peak_resident_bytes = c.peak_resident_bytes;
+        }
         Ok(OaviModel { generators, o_terms: o, config: cfg, stats, final_gram: gram })
     }
 
@@ -784,6 +807,29 @@ mod tests {
                 assert!(msg.contains("error budget"), "unexpected message: {msg}")
             }
             other => panic!("expected budget violation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spilled_store_fit_is_bitwise_equal_to_memory() {
+        use crate::backend::StoreMode;
+        let x = parabola_data(120, 31);
+        let mem = Oavi::new(OaviConfig::cgavi_ihb(0.005)).fit(&x).unwrap();
+        let mut cfg = OaviConfig::cgavi_ihb(0.005);
+        // tiny budget: every lease reloads, exercising evict/reload paths
+        cfg.store = StoreMode::Spill { budget_bytes: 4096 };
+        let spill = Oavi::new(cfg).fit(&x).unwrap();
+        assert!(spill.stats.store_spilled);
+        assert!(!mem.stats.store_spilled);
+        assert!(spill.stats.store_loads > 0);
+        assert_eq!(mem.o_terms.len(), spill.o_terms.len());
+        assert_eq!(mem.generators.len(), spill.generators.len());
+        for (ga, gb) in mem.generators.iter().zip(&spill.generators) {
+            assert_eq!(ga.leading, gb.leading);
+            assert_eq!(ga.mse.to_bits(), gb.mse.to_bits());
+            for (ca, cb) in ga.coeffs.iter().zip(&gb.coeffs) {
+                assert_eq!(ca.to_bits(), cb.to_bits());
+            }
         }
     }
 

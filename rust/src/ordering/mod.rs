@@ -49,7 +49,8 @@ pub fn pearson_cols(store: &ColumnStore, i: usize, j: usize) -> f64 {
     let mb = store.col_mean(j);
     let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
     for s in 0..store.n_shards() {
-        let (ci, cj) = (store.col_shard(i, s), store.col_shard(j, s));
+        let lease = store.lease(s);
+        let (ci, cj) = (lease.col(i), lease.col(j));
         for (x, y) in ci.iter().zip(cj.iter()) {
             let dx = x - ma;
             let dy = y - mb;

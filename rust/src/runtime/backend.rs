@@ -50,6 +50,8 @@ impl ComputeBackend for XlaBackend {
         for s in 0..cols.n_shards() {
             let range = cols.shard_range(s);
             let rows = range.len();
+            // one lease per shard: pins a spilled block across the tiles
+            let lease = cols.lease(s);
             let mut row = 0usize;
             while row < rows {
                 let take = (rows - row).min(m_tile);
@@ -58,7 +60,7 @@ impl ComputeBackend for XlaBackend {
                 a_tile.iter_mut().for_each(|v| *v = 0.0);
                 b_tile.iter_mut().for_each(|v| *v = 0.0);
                 for j in 0..ell {
-                    let col = cols.col_shard(j, s);
+                    let col = lease.col(j);
                     for i in 0..take {
                         a_tile[i * l_pad + j] = col[row + i] as f32;
                     }
@@ -156,13 +158,15 @@ impl ComputeBackend for XlaBackend {
         for s in 0..cols.n_shards() {
             let range = cols.shard_range(s);
             let rows = range.len();
+            // one lease per shard: pins a spilled block across the tiles
+            let lease = cols.lease(s);
             let mut row = 0usize;
             while row < rows {
                 let take = (rows - row).min(m_tile);
                 a_tile.iter_mut().for_each(|v| *v = 0.0);
                 u_tile.iter_mut().for_each(|v| *v = 0.0);
                 for j in 0..ell {
-                    let col = cols.col_shard(j, s);
+                    let col = lease.col(j);
                     for i in 0..take {
                         a_tile[i * l_pad + j] = col[row + i] as f32;
                     }

@@ -1,0 +1,381 @@
+//! Chunked ingestion: stream CSV row-groups straight into shard
+//! segments without ever materializing the full m×n matrix.
+//!
+//! Two pieces:
+//!
+//! * [`RowGroupReader`] — the `BufRead` line-streaming CSV loop, shared
+//!   with [`crate::data::csvio::load_csv_dataset`]: one reusable line
+//!   buffer, typed per-line errors with 1-based line numbers, header
+//!   auto-detection (an unparsable *first* line is skipped, matching
+//!   the historical loader).  Yields row-major groups of at most
+//!   `group_rows` rows, so peak ingest memory is one group buffer —
+//!   independent of m.
+//! * [`SegmentSink`] — the write side: accumulates rows, and flushes
+//!   each full group as one shard segment (column-major transpose →
+//!   le-bytes → FNV-1a checksum → `seg_<s>.bin`), tracking per-column
+//!   min/max and the raw label set along the way.  `finish` writes the
+//!   checksummed [`DatasetManifest`].
+//!
+//! Each row-group becomes one shard, which is what makes ingestion
+//! single-pass: the shard partition is discovered as rows stream by, no
+//! up-front row count needed.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use crate::error::{AviError, Result};
+use crate::storage::manifest::{DatasetManifest, SegmentMeta};
+use crate::storage::segment::{f64s_to_le, Fnv64};
+
+/// Default rows per group/shard: 64k rows × n cols × 8 B keeps the
+/// transpose buffer in the tens of MB for realistic widths.
+pub const DEFAULT_ROWS_PER_SHARD: usize = 65_536;
+
+/// Streaming CSV reader yielding row-major groups of parsed rows.
+pub struct RowGroupReader<R: BufRead> {
+    reader: R,
+    /// Display name for error messages (the file path).
+    source: String,
+    /// 0-based index of the next line to read.
+    lineno: usize,
+    /// Field count fixed by the first accepted row.
+    n_fields: Option<usize>,
+    group_rows: usize,
+    line: String,
+    done: bool,
+}
+
+impl RowGroupReader<BufReader<File>> {
+    /// Open a CSV file for streaming.
+    pub fn open(path: &Path, group_rows: usize) -> Result<Self> {
+        let file = File::open(path)?;
+        Ok(Self::from_reader(BufReader::new(file), &path.display().to_string(), group_rows))
+    }
+}
+
+impl<R: BufRead> RowGroupReader<R> {
+    /// Stream from any `BufRead` (tests; in-memory sources).
+    pub fn from_reader(reader: R, source: &str, group_rows: usize) -> Self {
+        RowGroupReader {
+            reader,
+            source: source.to_string(),
+            lineno: 0,
+            n_fields: None,
+            group_rows: group_rows.max(1),
+            line: String::new(),
+            done: false,
+        }
+    }
+
+    /// Field count per row (known after the first accepted row).
+    pub fn n_fields(&self) -> Option<usize> {
+        self.n_fields
+    }
+
+    /// Read the next group into `buf` (cleared first; row-major,
+    /// `n_fields` values per row).  Returns the number of rows read —
+    /// 0 at end of input.
+    pub fn next_group(&mut self, buf: &mut Vec<f64>) -> Result<usize> {
+        buf.clear();
+        let mut got = 0usize;
+        while got < self.group_rows && !self.done {
+            self.line.clear();
+            if self.reader.read_line(&mut self.line)? == 0 {
+                self.done = true;
+                break;
+            }
+            let lineno = self.lineno;
+            self.lineno += 1;
+            let line = self.line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let before = buf.len();
+            let mut fields = 0usize;
+            let mut bad = false;
+            for f in line.split(',') {
+                match f.trim().parse::<f64>() {
+                    Ok(v) => {
+                        buf.push(v);
+                        fields += 1;
+                    }
+                    Err(_) => {
+                        bad = true;
+                        break;
+                    }
+                }
+            }
+            // a row needs features + label; a 1-field line is treated
+            // like a parse failure (header if first, error otherwise) —
+            // same contract as the historical whole-file loader
+            if bad || fields < 2 {
+                buf.truncate(before);
+                if lineno == 0 {
+                    continue; // header row
+                }
+                return Err(AviError::Data(format!(
+                    "{}: unparsable line {}",
+                    self.source,
+                    lineno + 1
+                )));
+            }
+            match self.n_fields {
+                None => self.n_fields = Some(fields),
+                Some(n) if n != fields => {
+                    return Err(AviError::Data(format!(
+                        "{}: line {}: expected {} fields, got {}",
+                        self.source,
+                        lineno + 1,
+                        n,
+                        fields
+                    )));
+                }
+                Some(_) => {}
+            }
+            got += 1;
+        }
+        Ok(got)
+    }
+}
+
+/// Write side of ingestion: rows in, checksummed shard segments +
+/// manifest out.
+pub struct SegmentSink {
+    out_dir: PathBuf,
+    rows_per_shard: usize,
+    n_fields: Option<usize>,
+    /// Pending rows, row-major.
+    pending: Vec<f64>,
+    pending_rows: usize,
+    total_rows: usize,
+    segments: Vec<SegmentMeta>,
+    col_min: Vec<f64>,
+    col_max: Vec<f64>,
+    /// Raw (rounded) labels seen in the last column.
+    labels: Vec<i64>,
+    /// Reusable transpose + encode buffers.
+    colmaj: Vec<f64>,
+    bytes: Vec<u8>,
+}
+
+impl SegmentSink {
+    /// Start a sink writing into `out_dir` (created if missing).
+    pub fn create(out_dir: &Path, rows_per_shard: usize) -> Result<SegmentSink> {
+        std::fs::create_dir_all(out_dir)?;
+        Ok(SegmentSink {
+            out_dir: out_dir.to_path_buf(),
+            rows_per_shard: rows_per_shard.max(1),
+            n_fields: None,
+            pending: Vec::new(),
+            pending_rows: 0,
+            total_rows: 0,
+            segments: Vec::new(),
+            col_min: Vec::new(),
+            col_max: Vec::new(),
+            labels: Vec::new(),
+            colmaj: Vec::new(),
+            bytes: Vec::new(),
+        })
+    }
+
+    /// Append one row (label = last value), flushing a segment when the
+    /// group fills.
+    pub fn push_row(&mut self, row: &[f64]) -> Result<()> {
+        match self.n_fields {
+            None => {
+                if row.len() < 2 {
+                    return Err(AviError::Data(
+                        "ingest: rows need >= 2 columns (features + label)".into(),
+                    ));
+                }
+                self.n_fields = Some(row.len());
+                self.col_min = vec![f64::INFINITY; row.len()];
+                self.col_max = vec![f64::NEG_INFINITY; row.len()];
+            }
+            Some(n) if n != row.len() => {
+                return Err(AviError::Data(format!(
+                    "ingest: row width changed from {n} to {}",
+                    row.len()
+                )));
+            }
+            Some(_) => {}
+        }
+        for (j, &v) in row.iter().enumerate() {
+            self.col_min[j] = self.col_min[j].min(v);
+            self.col_max[j] = self.col_max[j].max(v);
+        }
+        self.labels.push(row[row.len() - 1].round() as i64);
+        self.pending.extend_from_slice(row);
+        self.pending_rows += 1;
+        self.total_rows += 1;
+        if self.pending_rows == self.rows_per_shard {
+            self.flush_group()?;
+        }
+        Ok(())
+    }
+
+    /// Transpose the pending row-major group to column-major, checksum,
+    /// and write it as the next shard segment.
+    fn flush_group(&mut self) -> Result<()> {
+        if self.pending_rows == 0 {
+            return Ok(());
+        }
+        let n = self.n_fields.expect("rows before flush");
+        let rows = self.pending_rows;
+        self.colmaj.clear();
+        self.colmaj.resize(rows * n, 0.0);
+        for i in 0..rows {
+            for j in 0..n {
+                self.colmaj[j * rows + i] = self.pending[i * n + j];
+            }
+        }
+        f64s_to_le(&self.colmaj, &mut self.bytes);
+        let mut h = Fnv64::new();
+        h.update(&self.bytes);
+        let file = format!("seg_{}.bin", self.segments.len());
+        std::fs::write(self.out_dir.join(&file), &self.bytes)?;
+        self.segments.push(SegmentMeta {
+            file,
+            rows,
+            bytes: self.bytes.len() as u64,
+            checksum: h.finish(),
+        });
+        self.pending.clear();
+        self.pending_rows = 0;
+        Ok(())
+    }
+
+    /// Flush the tail group and write `manifest.json`.  Errors when no
+    /// rows were pushed.
+    pub fn finish(mut self, name: &str) -> Result<DatasetManifest> {
+        self.flush_group()?;
+        if self.total_rows == 0 {
+            return Err(AviError::Data(format!("ingest '{name}': no rows")));
+        }
+        let mut uniq = self.labels.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let manifest = DatasetManifest {
+            name: name.to_string(),
+            rows: self.total_rows,
+            cols: self.n_fields.unwrap(),
+            labels_uniq: uniq,
+            col_min: self.col_min,
+            col_max: self.col_max,
+            segments: self.segments,
+        };
+        manifest.save(&self.out_dir)?;
+        Ok(manifest)
+    }
+}
+
+/// Ingestion knobs (CLI surface).
+#[derive(Clone, Debug)]
+pub struct IngestOptions {
+    /// Dataset name recorded in the manifest.
+    pub name: String,
+    /// Rows per shard segment (= per row-group).
+    pub rows_per_shard: usize,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions { name: "ingested".into(), rows_per_shard: DEFAULT_ROWS_PER_SHARD }
+    }
+}
+
+/// Stream `csv` (label = last column) into a manifest-backed dataset
+/// directory.  Single pass; peak memory is one row-group.
+pub fn ingest_csv(csv: &Path, out_dir: &Path, opts: &IngestOptions) -> Result<DatasetManifest> {
+    let mut rdr = RowGroupReader::open(csv, opts.rows_per_shard)?;
+    let mut sink = SegmentSink::create(out_dir, opts.rows_per_shard)?;
+    let mut buf = Vec::new();
+    loop {
+        let got = rdr.next_group(&mut buf)?;
+        if got == 0 {
+            break;
+        }
+        let n = rdr.n_fields().expect("fields known after a non-empty group");
+        for r in 0..got {
+            sink.push_row(&buf[r * n..(r + 1) * n])?;
+        }
+    }
+    sink.finish(&opts.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn row_group_reader_streams_groups_and_skips_header() {
+        let src = "a,b,label\n1,2,0\n3,4,1\n\n5,6,0\n";
+        let mut rdr = RowGroupReader::from_reader(Cursor::new(src), "mem", 2);
+        let mut buf = Vec::new();
+        assert_eq!(rdr.next_group(&mut buf).unwrap(), 2);
+        assert_eq!(buf, vec![1.0, 2.0, 0.0, 3.0, 4.0, 1.0]);
+        assert_eq!(rdr.n_fields(), Some(3));
+        assert_eq!(rdr.next_group(&mut buf).unwrap(), 1);
+        assert_eq!(buf, vec![5.0, 6.0, 0.0]);
+        assert_eq!(rdr.next_group(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn row_group_reader_reports_line_numbers() {
+        let src = "h,h,h\n1,2,0\nbad,row,here\n";
+        let mut rdr = RowGroupReader::from_reader(Cursor::new(src), "mem", 8);
+        let mut buf = Vec::new();
+        let err = rdr.next_group(&mut buf).unwrap_err();
+        assert_eq!(err.to_string(), "data error: mem: unparsable line 3");
+        let src = "1,2,0\n3,4\n";
+        let mut rdr = RowGroupReader::from_reader(Cursor::new(src), "mem", 8);
+        let err = rdr.next_group(&mut buf).unwrap_err();
+        assert!(err.to_string().contains("line 2: expected 3 fields, got 2"), "{err}");
+    }
+
+    #[test]
+    fn ingest_partitions_rows_into_segments() {
+        let dir = std::env::temp_dir().join(format!("avi_ingest_test_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let csv = dir.join("toy.csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut body = String::from("x0,x1,label\n");
+        for i in 0..7 {
+            body.push_str(&format!("{}.5,{},{}\n", i, i * 2, i % 2));
+        }
+        std::fs::write(&csv, body).unwrap();
+        let out = dir.join("ds");
+        let man = ingest_csv(
+            &csv,
+            &out,
+            &IngestOptions { name: "toy".into(), rows_per_shard: 3 },
+        )
+        .unwrap();
+        assert_eq!(man.rows, 7);
+        assert_eq!(man.cols, 3);
+        assert_eq!(man.shard_rows(), vec![3, 3, 1]);
+        assert_eq!(man.labels_uniq, vec![0, 1]);
+        assert_eq!(man.col_min[0], 0.5);
+        assert_eq!(man.col_max[1], 12.0);
+        for seg in &man.segments {
+            let len = std::fs::metadata(out.join(&seg.file)).unwrap().len();
+            assert_eq!(len, (seg.rows * man.cols * 8) as u64);
+            assert_eq!(len, seg.bytes);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ingest_rejects_empty_input() {
+        let dir = std::env::temp_dir().join(format!("avi_ingest_empty_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("empty.csv");
+        std::fs::write(&csv, "just,a,header\n").unwrap();
+        let err = ingest_csv(&csv, &dir.join("ds"), &IngestOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("no rows"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,310 @@
+//! The checksummed on-disk dataset manifest (`manifest.json`).
+//!
+//! Records everything needed to reopen an ingested dataset without
+//! rescanning it: row count, column count (label = last column), the
+//! shard partition (each segment's row count, in order), per-segment
+//! byte sizes + FNV-1a-64 checksums, the sorted unique raw labels, and
+//! per-column raw min/max (for `dataset inspect`/`stats` display — the
+//! scaled load path recomputes them from data so scaling stays bitwise
+//! identical to the direct CSV loader).
+//!
+//! Hand-rolled JSON, same discipline as `estimator::persist` (no serde
+//! in the offline container): a versioned envelope, `{:?}`-formatted
+//! floats (shortest round-trip — parse returns identical bits), and
+//! checksums as fixed-width hex strings (u64 doesn't survive an f64
+//! number cell).  Corruption of the manifest itself surfaces as a typed
+//! [`AviError::Storage`] at open.
+
+use std::path::Path;
+
+use crate::error::{AviError, Result};
+use crate::estimator::persist::{extract_array, extract_f64, extract_str, split_objects};
+use crate::util::json_escape;
+
+/// Envelope header of every dataset manifest.
+pub const DATASET_FORMAT: &str = "avi-scale.dataset";
+/// Manifest schema version.
+pub const DATASET_VERSION: u64 = 1;
+
+/// One shard segment's identity + integrity record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentMeta {
+    /// File name relative to the dataset directory.
+    pub file: String,
+    /// Rows in this shard.
+    pub rows: usize,
+    /// Expected file size in bytes (`rows × cols × 8`).
+    pub bytes: u64,
+    /// FNV-1a-64 of the file contents.
+    pub checksum: u64,
+}
+
+/// The dataset directory's self-description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetManifest {
+    pub name: String,
+    /// Total rows m across all segments.
+    pub rows: usize,
+    /// Columns per row, label included (= features + 1).
+    pub cols: usize,
+    /// Sorted unique raw labels (last column, rounded to integer).
+    pub labels_uniq: Vec<i64>,
+    /// Raw per-column minima (display/stats only).
+    pub col_min: Vec<f64>,
+    /// Raw per-column maxima (display/stats only).
+    pub col_max: Vec<f64>,
+    /// Shard segments in shard order.
+    pub segments: Vec<SegmentMeta>,
+}
+
+impl DatasetManifest {
+    /// The shard partition: rows per segment, in order.
+    pub fn shard_rows(&self) -> Vec<usize> {
+        self.segments.iter().map(|s| s.rows).collect()
+    }
+
+    /// Feature count (columns minus the label).
+    pub fn n_features(&self) -> usize {
+        self.cols.saturating_sub(1)
+    }
+
+    /// Serialize (one segment object per line — greppable, like every
+    /// other artifact in this crate).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"format\": \"{DATASET_FORMAT}\",\n"));
+        s.push_str(&format!("  \"version\": {DATASET_VERSION},\n"));
+        s.push_str(&format!("  \"name\": \"{}\",\n", json_escape(&self.name)));
+        s.push_str(&format!("  \"rows\": {},\n", self.rows));
+        s.push_str(&format!("  \"cols\": {},\n", self.cols));
+        s.push_str(&format!("  \"labels_uniq\": [{}],\n", join_i64(&self.labels_uniq)));
+        s.push_str(&format!("  \"col_min\": [{}],\n", join_f64(&self.col_min)));
+        s.push_str(&format!("  \"col_max\": [{}],\n", join_f64(&self.col_max)));
+        s.push_str("  \"segments\": [\n");
+        for (i, seg) in self.segments.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"file\": \"{}\", \"rows\": {}, \"bytes\": {}, \"checksum\": \"{:016x}\"}}{}\n",
+                json_escape(&seg.file),
+                seg.rows,
+                seg.bytes,
+                seg.checksum,
+                if i + 1 < self.segments.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse, validating the envelope and internal consistency.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let storage_err = |m: String| AviError::Storage(m);
+        let format = extract_str(text, "\"format\":")
+            .map_err(|_| storage_err("manifest: missing format header".into()))?;
+        if format != DATASET_FORMAT {
+            return Err(storage_err(format!(
+                "manifest: format '{format}', expected '{DATASET_FORMAT}'"
+            )));
+        }
+        let version = extract_f64(text, "\"version\":")? as u64;
+        if version != DATASET_VERSION {
+            return Err(storage_err(format!(
+                "manifest: unsupported version {version} (supported: {DATASET_VERSION})"
+            )));
+        }
+        let name = extract_str(text, "\"name\":")?;
+        let rows = extract_f64(text, "\"rows\":")? as usize;
+        let cols = extract_f64(text, "\"cols\":")? as usize;
+        let labels_uniq = parse_i64_list(&extract_array(text, "\"labels_uniq\":")?)?;
+        let col_min = parse_f64_list(&extract_array(text, "\"col_min\":")?)?;
+        let col_max = parse_f64_list(&extract_array(text, "\"col_max\":")?)?;
+        let mut segments = Vec::new();
+        for obj in split_objects(&extract_array(text, "\"segments\":")?) {
+            let checksum_hex = extract_str(obj, "\"checksum\":")?;
+            let checksum = u64::from_str_radix(&checksum_hex, 16).map_err(|e| {
+                storage_err(format!("manifest: bad checksum '{checksum_hex}': {e}"))
+            })?;
+            segments.push(SegmentMeta {
+                file: extract_str(obj, "\"file\":")?,
+                rows: extract_f64(obj, "\"rows\":")? as usize,
+                bytes: extract_f64(obj, "\"bytes\":")? as u64,
+                checksum,
+            });
+        }
+        let man =
+            DatasetManifest { name, rows, cols, labels_uniq, col_min, col_max, segments };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Internal-consistency checks (before any segment is touched).
+    fn validate(&self) -> Result<()> {
+        if self.cols < 2 {
+            return Err(AviError::Storage(format!(
+                "manifest '{}': need >= 2 columns, got {}",
+                self.name, self.cols
+            )));
+        }
+        if self.segments.is_empty() {
+            return Err(AviError::Storage(format!("manifest '{}': no segments", self.name)));
+        }
+        let seg_rows: usize = self.segments.iter().map(|s| s.rows).sum();
+        if seg_rows != self.rows {
+            return Err(AviError::Storage(format!(
+                "manifest '{}': segment rows sum to {seg_rows}, manifest says {}",
+                self.name, self.rows
+            )));
+        }
+        for seg in &self.segments {
+            let want = (seg.rows * self.cols * 8) as u64;
+            if seg.bytes != want {
+                return Err(AviError::Storage(format!(
+                    "manifest '{}': segment {} records {} bytes, geometry implies {want}",
+                    self.name, seg.file, seg.bytes
+                )));
+            }
+        }
+        if self.col_min.len() != self.cols || self.col_max.len() != self.cols {
+            return Err(AviError::Storage(format!(
+                "manifest '{}': col stats length mismatch",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Write `manifest.json` into `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("manifest.json"), self.to_json())?;
+        Ok(())
+    }
+
+    /// Read and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            AviError::Storage(format!("no dataset manifest at {}: {e}", path.display()))
+        })?;
+        Self::from_json(&text)
+    }
+}
+
+fn join_i64(vals: &[i64]) -> String {
+    vals.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+}
+
+fn join_f64(vals: &[f64]) -> String {
+    vals.iter().map(|v| format!("{v:?}")).collect::<Vec<_>>().join(", ")
+}
+
+fn parse_f64_list(src: &str) -> Result<Vec<f64>> {
+    if src.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    src.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<f64>()
+                .map_err(|e| AviError::Storage(format!("manifest: number list: {e}")))
+        })
+        .collect()
+}
+
+fn parse_i64_list(src: &str) -> Result<Vec<i64>> {
+    if src.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    src.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<i64>()
+                .map_err(|e| AviError::Storage(format!("manifest: label list: {e}")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DatasetManifest {
+        DatasetManifest {
+            name: "toy".into(),
+            rows: 5,
+            cols: 3,
+            labels_uniq: vec![-1, 0, 4],
+            col_min: vec![0.1, -2.5, 0.0],
+            col_max: vec![0.9, 3.25, 4.0],
+            segments: vec![
+                SegmentMeta { file: "seg_0.bin".into(), rows: 3, bytes: 72, checksum: 0xdead_beef },
+                SegmentMeta {
+                    file: "seg_1.bin".into(),
+                    rows: 2,
+                    bytes: 48,
+                    checksum: u64::MAX, // must survive the codec (not an f64)
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_including_u64_checksums() {
+        let man = sample();
+        let back = DatasetManifest::from_json(&man.to_json()).unwrap();
+        assert_eq!(man, back);
+        assert_eq!(back.shard_rows(), vec![3, 2]);
+        assert_eq!(back.n_features(), 2);
+    }
+
+    #[test]
+    fn float_stats_roundtrip_bitwise() {
+        let mut man = sample();
+        man.col_min = vec![0.1 + 0.2, f64::MIN_POSITIVE, -0.0];
+        man.col_max = vec![1.0 / 3.0, 1e308, 2.0_f64.powi(-40)];
+        let back = DatasetManifest::from_json(&man.to_json()).unwrap();
+        for (a, b) in man.col_min.iter().zip(&back.col_min) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in man.col_max.iter().zip(&back.col_max) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_header_and_inconsistencies() {
+        let man = sample();
+        let wrong = man.to_json().replace(DATASET_FORMAT, "something.else");
+        assert!(matches!(
+            DatasetManifest::from_json(&wrong),
+            Err(AviError::Storage(_))
+        ));
+        let mut bad_rows = sample();
+        bad_rows.rows = 99;
+        assert!(matches!(
+            DatasetManifest::from_json(&bad_rows.to_json()),
+            Err(AviError::Storage(_))
+        ));
+        let mut bad_bytes = sample();
+        bad_bytes.segments[0].bytes = 7;
+        assert!(matches!(
+            DatasetManifest::from_json(&bad_bytes.to_json()),
+            Err(AviError::Storage(_))
+        ));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("avi_manifest_test_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let man = sample();
+        man.save(&dir).unwrap();
+        let back = DatasetManifest::load(&dir).unwrap();
+        assert_eq!(man, back);
+        assert!(matches!(
+            DatasetManifest::load(&dir.join("missing")),
+            Err(AviError::Storage(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

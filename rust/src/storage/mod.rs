@@ -1,0 +1,383 @@
+//! Out-of-core dataset storage: manifest-backed shard-segment
+//! directories, chunked CSV ingestion, and the open path that turns a
+//! dataset directory into a spill-capable [`ColumnStore`].
+//!
+//! Layering (bottom up):
+//!
+//! * [`segment`] — raw per-shard segment files: column-major le-f64
+//!   blocks, positioned reads into reusable buffers, FNV-1a-64
+//!   checksumming.  Knows nothing about datasets.
+//! * [`manifest`] — the checksummed `manifest.json` describing a
+//!   dataset directory: rows, columns, shard partition, per-segment
+//!   byte sizes + checksums.
+//! * [`ingest`] — single-pass chunked CSV ingestion: `RowGroupReader`
+//!   (the shared `BufRead` line-streaming loop) feeding `SegmentSink`
+//!   (one row-group → one checksummed shard segment).  Peak memory is
+//!   one row-group, independent of m.
+//! * this module — the trust boundary: [`verify_segments`] checks
+//!   existence, geometry, and checksums of every segment and refuses
+//!   corrupt data with a typed [`AviError::Storage`] *before* any fit
+//!   touches it; [`open_store`] then wraps the verified segments in a
+//!   read-only [`FileBacking`] under a resident-byte budget.  A store
+//!   that opens is trustworthy — that is what licenses the backing to
+//!   panic on mid-fit IO errors.
+//!
+//! The le-f64 codec round-trips every bit pattern and the per-shard
+//! kernels are backing-agnostic, so an exact-mode fit over an opened
+//! store is bitwise identical to the same fit over an in-memory store
+//! with the same shard partition.
+
+pub mod ingest;
+pub mod manifest;
+pub mod segment;
+
+use std::path::Path;
+
+use crate::backend::{ColumnStore, FileBacking, ShardBacking};
+use crate::data::scaling::minmax_scale_in_place;
+use crate::data::Dataset;
+use crate::error::{AviError, Result};
+use crate::linalg::dense::Matrix;
+use crate::util::rng::Rng;
+
+pub use ingest::{ingest_csv, IngestOptions, RowGroupReader, SegmentSink, DEFAULT_ROWS_PER_SHARD};
+pub use manifest::{DatasetManifest, SegmentMeta, DATASET_FORMAT, DATASET_VERSION};
+pub use segment::{checksum_file, Segment};
+
+use std::sync::Arc;
+
+/// Default resident budget when the caller gives none: 256 MiB.
+pub const DEFAULT_BUDGET_BYTES: usize = 256 << 20;
+
+/// Verify every segment of `man` under `dir`: the file must exist, its
+/// length must match both the recorded byte count and the manifest
+/// geometry, and its FNV-1a-64 checksum must match the recorded one.
+///
+/// Any mismatch is a typed [`AviError::Storage`] naming the segment —
+/// raised before any fit touches the data.
+pub fn verify_segments(dir: &Path, man: &DatasetManifest) -> Result<()> {
+    for seg in &man.segments {
+        let path = dir.join(&seg.file);
+        let len = std::fs::metadata(&path)
+            .map_err(|e| {
+                AviError::Storage(format!("segment {} missing under {}: {e}", seg.file, dir.display()))
+            })?
+            .len();
+        if len != seg.bytes {
+            return Err(AviError::Storage(format!(
+                "segment {}: {len} bytes on disk, manifest records {}",
+                seg.file, seg.bytes
+            )));
+        }
+        let sum = checksum_file(&path)?;
+        if sum != seg.checksum {
+            return Err(AviError::Storage(format!(
+                "segment {}: checksum {sum:016x} != manifest {:016x} (corrupt or tampered)",
+                seg.file, seg.checksum
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Open a dataset directory as a read-only spill-backed [`ColumnStore`]
+/// (columns = features + label, in manifest order) after verifying
+/// every segment checksum.  `budget_bytes` bounds resident shard bytes;
+/// 0 means [`DEFAULT_BUDGET_BYTES`].
+pub fn open_store(dir: &Path, budget_bytes: usize) -> Result<(DatasetManifest, ColumnStore)> {
+    let man = DatasetManifest::load(dir)?;
+    verify_segments(dir, &man)?;
+    let shard_rows = man.shard_rows();
+    let mut segs = Vec::with_capacity(man.segments.len());
+    for seg in &man.segments {
+        segs.push(Segment::open(&dir.join(&seg.file))?);
+    }
+    let budget = if budget_bytes == 0 { DEFAULT_BUDGET_BYTES } else { budget_bytes };
+    let backing = ShardBacking::Spill(Arc::new(FileBacking::from_segments(
+        dir.to_path_buf(),
+        shard_rows.clone(),
+        segs,
+        budget,
+        true,
+    )));
+    let mut offsets = Vec::with_capacity(shard_rows.len() + 1);
+    offsets.push(0usize);
+    for r in &shard_rows {
+        offsets.push(offsets.last().unwrap() + r);
+    }
+    let store = ColumnStore::from_backing_parts(man.rows, man.cols, offsets, backing);
+    Ok((man, store))
+}
+
+impl ColumnStore {
+    /// Open a manifest-backed dataset directory as a read-only store —
+    /// see [`open_store`].
+    pub fn open_manifest(dir: &Path, budget_bytes: usize) -> Result<(DatasetManifest, ColumnStore)> {
+        open_store(dir, budget_bytes)
+    }
+}
+
+/// Load a dataset directory as an in-RAM [`Dataset`] (min-max scaled,
+/// labels remapped to `0..k`), streaming shard-by-shard under
+/// `budget_bytes`.
+///
+/// Runs the identical remap + [`minmax_scale_in_place`] path as
+/// [`crate::data::csvio::load_csv_dataset`], and raw values round-trip
+/// the le-f64 segment codec bitwise — so the result is bitwise equal to
+/// loading the original CSV directly.
+pub fn open_dataset(dir: &Path, budget_bytes: usize) -> Result<Dataset> {
+    let (man, store) = open_store(dir, budget_bytes)?;
+    let feats = man.n_features();
+    let mut data = vec![0.0f64; man.rows * feats];
+    let mut labels = vec![0i64; man.rows];
+    for s in 0..store.n_shards() {
+        let range = store.shard_range(s);
+        let lease = store.lease(s);
+        for j in 0..feats {
+            let col = lease.col(j);
+            for (i, &v) in col.iter().enumerate() {
+                data[(range.start + i) * feats + j] = v;
+            }
+        }
+        for (i, &v) in lease.col(feats).iter().enumerate() {
+            labels[range.start + i] = v.round() as i64;
+        }
+    }
+    let mut uniq = labels.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let y: Vec<usize> = labels.iter().map(|l| uniq.binary_search(l).unwrap()).collect();
+    let mut x = Matrix::from_flat(man.rows, feats, data)?;
+    minmax_scale_in_place(&mut x);
+    Dataset::new(&man.name, x, y, uniq.len())
+}
+
+/// Streaming per-column statistics over a store (raw, unscaled values).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ColStats {
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+/// Per-column min/max/mean, computed shard-outer so a spilled store
+/// loads each shard block exactly once per call.
+pub fn column_stats(store: &ColumnStore) -> Vec<ColStats> {
+    let n = store.len();
+    let m = store.rows();
+    let mut stats = vec![
+        ColStats { min: f64::INFINITY, max: f64::NEG_INFINITY, mean: 0.0 };
+        n
+    ];
+    for s in 0..store.n_shards() {
+        let lease = store.lease(s);
+        for (j, st) in stats.iter_mut().enumerate() {
+            for &v in lease.col(j) {
+                st.min = st.min.min(v);
+                st.max = st.max.max(v);
+                st.mean += v;
+            }
+        }
+    }
+    if m > 0 {
+        for st in &mut stats {
+            st.mean /= m as f64;
+        }
+    }
+    stats
+}
+
+/// Split a dataset directory into train/test dataset directories by a
+/// per-row Bernoulli draw (`uniform() < test_frac`, seeded — stable
+/// across runs).  Streams shard-by-shard; rows keep their raw values.
+pub fn split_dataset(
+    dir: &Path,
+    out_train: &Path,
+    out_test: &Path,
+    test_frac: f64,
+    seed: u64,
+) -> Result<(DatasetManifest, DatasetManifest)> {
+    if !(0.0..1.0).contains(&test_frac) || test_frac <= 0.0 {
+        return Err(AviError::Storage(format!(
+            "split: test fraction must be in (0, 1), got {test_frac}"
+        )));
+    }
+    let (man, store) = open_store(dir, DEFAULT_BUDGET_BYTES)?;
+    let group = man.segments.iter().map(|s| s.rows).max().unwrap_or(1);
+    let mut train = SegmentSink::create(out_train, group)?;
+    let mut test = SegmentSink::create(out_test, group)?;
+    let mut rng = Rng::new(seed);
+    let mut row = vec![0.0f64; man.cols];
+    for s in 0..store.n_shards() {
+        let rows = store.shard_range(s).len();
+        let lease = store.lease(s);
+        for i in 0..rows {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = lease.col(j)[i];
+            }
+            if rng.uniform() < test_frac {
+                test.push_row(&row)?;
+            } else {
+                train.push_row(&row)?;
+            }
+        }
+    }
+    let man_train = train.finish(&format!("{}_train", man.name))?;
+    let man_test = test.finish(&format!("{}_test", man.name))?;
+    Ok((man_train, man_test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csvio::load_csv_dataset;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("avi_storage_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_toy_csv(dir: &Path, rows: usize) -> std::path::PathBuf {
+        let csv = dir.join("toy.csv");
+        let mut body = String::from("x0,x1,x2,label\n");
+        for i in 0..rows {
+            // non-trivial fractions so bitwise comparisons mean something
+            body.push_str(&format!(
+                "{},{},{},{}\n",
+                i as f64 / 7.0,
+                (i * i) as f64 / 3.0,
+                1.0 - i as f64 / 11.0,
+                i % 3
+            ));
+        }
+        std::fs::write(&csv, body).unwrap();
+        csv
+    }
+
+    #[test]
+    fn open_dataset_is_bitwise_equal_to_csv_loader() {
+        let dir = tmp("roundtrip");
+        let csv = write_toy_csv(&dir, 23);
+        let ds_direct = load_csv_dataset(&csv, "toy").unwrap();
+        let out = dir.join("ds");
+        ingest_csv(&csv, &out, &IngestOptions { name: "toy".into(), rows_per_shard: 5 }).unwrap();
+        let ds_store = open_dataset(&out, 0).unwrap();
+        assert_eq!(ds_direct.len(), ds_store.len());
+        assert_eq!(ds_direct.y, ds_store.y);
+        assert_eq!(ds_direct.n_classes, ds_store.n_classes);
+        for (a, b) in ds_direct.x.data().iter().zip(ds_store.x.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_segment_is_refused_before_any_read() {
+        let dir = tmp("corrupt");
+        let csv = write_toy_csv(&dir, 12);
+        let out = dir.join("ds");
+        let man =
+            ingest_csv(&csv, &out, &IngestOptions { name: "toy".into(), rows_per_shard: 4 }).unwrap();
+        // flip one byte in the middle segment
+        let victim = out.join(&man.segments[1].file);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes[8] ^= 0x01;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = open_store(&out, 0).unwrap_err();
+        match err {
+            AviError::Storage(m) => {
+                assert!(m.contains("seg_1.bin"), "error should name the segment: {m}");
+                assert!(m.contains("checksum"), "{m}");
+            }
+            other => panic!("expected Storage error, got {other:?}"),
+        }
+        // restore seg_1, then truncation is also refused with the segment named
+        bytes[8] ^= 0x01;
+        std::fs::write(&victim, &bytes).unwrap();
+        let seg0 = out.join(&man.segments[0].file);
+        let full = std::fs::read(&seg0).unwrap();
+        std::fs::write(&seg0, &full[..full.len() - 8]).unwrap();
+        let err = open_store(&out, 0).unwrap_err();
+        assert!(matches!(&err, AviError::Storage(m) if m.contains("seg_0.bin")), "{err:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_store_exposes_columns_and_counters() {
+        let dir = tmp("open");
+        let csv = write_toy_csv(&dir, 10);
+        let out = dir.join("ds");
+        ingest_csv(&csv, &out, &IngestOptions { name: "toy".into(), rows_per_shard: 4 }).unwrap();
+        let (man, store) = ColumnStore::open_manifest(&out, 0).unwrap();
+        assert_eq!(store.rows(), 10);
+        assert_eq!(store.len(), man.cols);
+        assert_eq!(store.n_shards(), 3);
+        assert!(store.is_spilled());
+        assert_eq!(store.mode_str(), "mmap");
+        // column 0 of shard 1 starts at global row 4
+        let lease = store.lease(1);
+        assert_eq!(lease.col(0)[0], 4.0 / 7.0);
+        drop(lease);
+        let c = store.backing_counters().unwrap();
+        assert!(c.loads >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn column_stats_stream_matches_manifest_extrema() {
+        let dir = tmp("stats");
+        let csv = write_toy_csv(&dir, 9);
+        let out = dir.join("ds");
+        let man =
+            ingest_csv(&csv, &out, &IngestOptions { name: "toy".into(), rows_per_shard: 2 }).unwrap();
+        let (_, store) = open_store(&out, 0).unwrap();
+        let stats = column_stats(&store);
+        assert_eq!(stats.len(), man.cols);
+        for j in 0..man.cols {
+            assert_eq!(stats[j].min, man.col_min[j]);
+            assert_eq!(stats[j].max, man.col_max[j]);
+        }
+        let mean0: f64 = (0..9).map(|i| i as f64 / 7.0).sum::<f64>() / 9.0;
+        assert!((stats[0].mean - mean0).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn split_partitions_every_row_exactly_once() {
+        let dir = tmp("split");
+        let csv = write_toy_csv(&dir, 40);
+        let out = dir.join("ds");
+        let man =
+            ingest_csv(&csv, &out, &IngestOptions { name: "toy".into(), rows_per_shard: 16 }).unwrap();
+        let (tr, te) =
+            split_dataset(&out, &dir.join("train"), &dir.join("test"), 0.3, 7).unwrap();
+        assert_eq!(tr.rows + te.rows, man.rows);
+        assert!(tr.rows > 0 && te.rows > 0);
+        assert_eq!(tr.cols, man.cols);
+        // both outputs reopen cleanly (checksums valid)
+        open_store(&dir.join("train"), 0).unwrap();
+        open_store(&dir.join("test"), 0).unwrap();
+        // deterministic across runs
+        let (tr2, _) =
+            split_dataset(&out, &dir.join("train2"), &dir.join("test2"), 0.3, 7).unwrap();
+        assert_eq!(tr.rows, tr2.rows);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn split_rejects_degenerate_fractions() {
+        let dir = tmp("splitbad");
+        let csv = write_toy_csv(&dir, 4);
+        let out = dir.join("ds");
+        ingest_csv(&csv, &out, &IngestOptions::default()).unwrap();
+        for bad in [0.0, 1.0, -0.2, 1.5] {
+            assert!(matches!(
+                split_dataset(&out, &dir.join("a"), &dir.join("b"), bad, 1),
+                Err(AviError::Storage(_))
+            ));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,236 @@
+//! On-disk shard segments: the byte-level substrate of the file-backed
+//! store.
+//!
+//! One segment file holds one shard's column block in **column-major**
+//! little-endian `f64` layout: column `j` of an `rows × n_cols` block
+//! lives at byte offset `j · rows · 8`.  Because every shard gets its
+//! own file, each block starts page-aligned at offset 0; columns inside
+//! it are 8-byte aligned.  The encoding is bitwise-lossless
+//! (`f64::to_le_bytes` / `from_le_bytes` round-trip every bit pattern,
+//! NaNs included), which is what makes the file-backed store's exact
+//! path *bitwise identical* to the in-memory store: the kernels see the
+//! same `f64` values, only the bytes' residence differs.
+//!
+//! Concurrency: reads and writes go through a per-segment `Mutex<File>`
+//! (seek + read/write under the lock).  A segment maps 1:1 to a shard
+//! and the resident pool serializes loads per shard anyway, so the lock
+//! is uncontended across shards — pool workers touching *different*
+//! shards never share a segment lock.
+//!
+//! Integrity: segments are checksummed with FNV-1a 64 (streamed, no
+//! allocation proportional to file size).  The dataset manifest records
+//! the expected checksum; [`crate::storage`] refuses mismatches with a
+//! typed [`crate::error::AviError::Storage`] before any fit runs.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Streaming FNV-1a 64-bit hasher (the container has no hash crates;
+/// FNV-1a is 6 lines and good enough for corruption detection, which is
+/// the only job here — this is not a cryptographic integrity claim).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Self {
+        Fnv64 { h: Self::OFFSET }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.h;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(Self::PRIME);
+        }
+        self.h = h;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+/// Encode `vals` as little-endian bytes into `out` (cleared first).
+pub fn f64s_to_le(vals: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Decode little-endian bytes into `out` (cleared first).  `bytes.len()`
+/// must be a multiple of 8.
+pub fn le_to_f64s(bytes: &[u8], out: &mut Vec<f64>) {
+    debug_assert_eq!(bytes.len() % 8, 0);
+    out.clear();
+    out.reserve(bytes.len() / 8);
+    for chunk in bytes.chunks_exact(8) {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(chunk);
+        out.push(f64::from_le_bytes(b));
+    }
+}
+
+/// One shard's on-disk column block.
+#[derive(Debug)]
+pub struct Segment {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl Segment {
+    /// Create (truncating) a writable segment.
+    pub fn create(path: &Path) -> std::io::Result<Segment> {
+        let file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
+        Ok(Segment { path: path.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    /// Open an existing segment read-only.
+    pub fn open(path: &Path) -> std::io::Result<Segment> {
+        let file = OpenOptions::new().read(true).open(path)?;
+        Ok(Segment { path: path.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read `count` f64s starting at `byte_off` into `out` (cleared
+    /// first).  Short files surface as `UnexpectedEof`.
+    pub fn read_f64s_at(
+        &self,
+        byte_off: u64,
+        count: usize,
+        scratch: &mut Vec<u8>,
+        out: &mut Vec<f64>,
+    ) -> std::io::Result<()> {
+        scratch.clear();
+        scratch.resize(count * 8, 0);
+        {
+            let mut f = self.file.lock().expect("segment lock poisoned");
+            f.seek(SeekFrom::Start(byte_off))?;
+            f.read_exact(scratch)?;
+        }
+        le_to_f64s(scratch, out);
+        Ok(())
+    }
+
+    /// Write `vals` at `byte_off` (overwriting or appending).
+    pub fn write_f64s_at(&self, byte_off: u64, vals: &[f64]) -> std::io::Result<()> {
+        let mut bytes = Vec::new();
+        f64s_to_le(vals, &mut bytes);
+        let mut f = self.file.lock().expect("segment lock poisoned");
+        f.seek(SeekFrom::Start(byte_off))?;
+        f.write_all(&bytes)?;
+        f.flush()
+    }
+
+    /// File length in bytes.
+    pub fn len_bytes(&self) -> std::io::Result<u64> {
+        let f = self.file.lock().expect("segment lock poisoned");
+        Ok(f.metadata()?.len())
+    }
+}
+
+/// Checksum a whole file with a bounded (64 KiB) buffer.
+pub fn checksum_file(path: &Path) -> std::io::Result<u64> {
+    let mut f = File::open(path)?;
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut h = Fnv64::new();
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        h.update(&buf[..n]);
+    }
+    Ok(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("avi_seg_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // standard FNV-1a test vectors
+        let mut h = Fnv64::new();
+        assert_eq!(h.finish(), 0xcbf29ce484222325);
+        h.update(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        let mut h2 = Fnv64::new();
+        h2.update(b"foobar");
+        assert_eq!(h2.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn le_roundtrip_is_bitwise_nan_included() {
+        let vals = [1.5, -0.0, f64::NAN, f64::INFINITY, 3.141592653589793, f64::MIN_POSITIVE];
+        let mut bytes = Vec::new();
+        f64s_to_le(&vals, &mut bytes);
+        let mut back = Vec::new();
+        le_to_f64s(&bytes, &mut back);
+        assert_eq!(vals.len(), back.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn segment_write_read_roundtrips_columns() {
+        let path = tmp("roundtrip.bin");
+        let seg = Segment::create(&path).unwrap();
+        let rows = 7;
+        let col0: Vec<f64> = (0..rows).map(|i| i as f64 * 0.25).collect();
+        let col1: Vec<f64> = (0..rows).map(|i| -(i as f64)).collect();
+        seg.write_f64s_at(0, &col0).unwrap();
+        seg.write_f64s_at((rows * 8) as u64, &col1).unwrap();
+        let (mut scratch, mut out) = (Vec::new(), Vec::new());
+        seg.read_f64s_at((rows * 8) as u64, rows, &mut scratch, &mut out).unwrap();
+        assert_eq!(out, col1);
+        seg.read_f64s_at(0, rows, &mut scratch, &mut out).unwrap();
+        assert_eq!(out, col0);
+        assert_eq!(seg.len_bytes().unwrap(), (2 * rows * 8) as u64);
+        // streamed file checksum == streamed in-memory checksum
+        let mut bytes = Vec::new();
+        f64s_to_le(&col0, &mut bytes);
+        let mut h = Fnv64::new();
+        h.update(&bytes);
+        f64s_to_le(&col1, &mut bytes);
+        h.update(&bytes);
+        assert_eq!(checksum_file(&path).unwrap(), h.finish());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn short_read_is_unexpected_eof() {
+        let path = tmp("short.bin");
+        let seg = Segment::create(&path).unwrap();
+        seg.write_f64s_at(0, &[1.0, 2.0]).unwrap();
+        let (mut scratch, mut out) = (Vec::new(), Vec::new());
+        let err = seg.read_f64s_at(0, 5, &mut scratch, &mut out).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -23,11 +23,12 @@ cd "$(dirname "$0")/.."
 BASELINE_DIR=bench
 FRESH_DIR=rust/target/bench_results
 TOLERANCE=${TOLERANCE:-15}
-BENCHES=(micro_gram_panel backend_scaling)
+BENCHES=(micro_gram_panel backend_scaling serve_router)
 
 if [[ "${SKIP_RUN:-0}" != "1" ]]; then
   echo "== running micro benches =="
-  (cd rust && cargo bench --bench micro_gram_panel && cargo bench --bench micro_backend_scaling)
+  (cd rust && cargo bench --bench micro_gram_panel && cargo bench --bench micro_backend_scaling \
+    && cargo bench --bench serve_router)
 fi
 
 mkdir -p "$BASELINE_DIR"
@@ -60,7 +61,12 @@ for id in "${BENCHES[@]}"; do
         $1 == "F" { fresh[$2] = $3 }
         END {
           for (k in fresh) {
-            if (!(k in base) || base[k] <= 0) continue
+            if (!(k in base) || base[k] <= 0) {
+              # new timing cell with no committed baseline: visible but
+              # not gated (it installs on the pass-time baseline copy)
+              printf "%-40s %14s -> %14.0f  %7s  WARN: no baseline (skipped)\n", k, "-", fresh[k], "-"
+              continue
+            }
             delta = (fresh[k] - base[k]) * 100.0 / base[k]
             status = delta > tol ? "REGRESSED" : "ok"
             printf "%-40s %14.0f -> %14.0f  %+7.1f%%  %s\n", k, base[k], fresh[k], delta, status

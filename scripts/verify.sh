@@ -30,7 +30,7 @@ CLIPPY_LOG=$(mktemp)
 cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
 # every rustc diagnostic carries a "--> path:line:col" span line; match
 # spans inside the strict modules regardless of header distance
-STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane)'
+STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|src/storage/|src/data/csvio|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane|tests/storage_parity)'
 if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
   echo "FAIL: clippy findings in strict modules:"
   grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
@@ -65,6 +65,12 @@ cargo test --release --test runtime_parity -q panel
 # must hold under both scheduling regimes
 RUST_TEST_THREADS=1 cargo test --release --test kernel_parity -q
 cargo test --release --test kernel_parity -q
+# storage parity (ISSUE 7): spill-backed fits must be bitwise equal to
+# in-memory, the resident pool must honor its byte budget, and corrupt
+# segments must be refused; serial mode keeps temp-dir IO quiet, the
+# default mode adds cross-test disk/pool contention
+RUST_TEST_THREADS=1 cargo test --release --test storage_parity -q
+cargo test --release --test storage_parity -q
 
 echo "== CLI smoke: every estimator by name =="
 BIN=target/release/avi-scale
@@ -142,6 +148,50 @@ echo "$SHARDS_WARN" | grep -qi "deprecated" || {
   echo "FAIL: serve --shards must print a deprecation warning"
   exit 1
 }
+
+echo "-- dataset plane: ingest -> inspect -> stats -> split -> fit --store mmap (ISSUE 7 smoke)"
+DATA_CSV="$SMOKE_DIR/toy.csv"
+{
+  echo "f0,f1,f2,label"
+  awk 'BEGIN { for (i = 0; i < 900; i++)
+    printf "%.6f,%.6f,%.6f,%d\n", i/900.0, ((i*i)%97)/97.0, 1-i/1800.0, i%2 }'
+} > "$DATA_CSV"
+"$BIN" dataset ingest --csv "$DATA_CSV" --out "$SMOKE_DIR/ds" --name toy --rows-per-shard 128
+"$BIN" dataset inspect --data "$SMOKE_DIR/ds" | grep -q '^verify   = ok' || {
+  echo "FAIL: dataset inspect did not verify the ingested segments"
+  exit 1
+}
+# a 1 MiB budget forces the resident pool to work, and stats must agree
+# regardless (shard-outer streaming scan)
+"$BIN" dataset stats --data "$SMOKE_DIR/ds" --mem-budget-mb 1 | grep -q '^store    = ' || {
+  echo "FAIL: dataset stats did not report backing counters for a spill store"
+  exit 1
+}
+"$BIN" dataset split --data "$SMOKE_DIR/ds" --out-train "$SMOKE_DIR/ds-tr" \
+  --out-test "$SMOKE_DIR/ds-te" --test-frac 0.3 --seed 7
+"$BIN" dataset inspect --data "$SMOKE_DIR/ds-tr" >/dev/null
+"$BIN" dataset inspect --data "$SMOKE_DIR/ds-te" >/dev/null
+# fit from the ingested directory, in-memory vs spill-backed: the exact
+# path is a bitwise contract, so the model-shape lines must be identical
+MEM_FIT=$("$BIN" fit --data "$SMOKE_DIR/ds" --psi 0.01 --method cgavi-ihb)
+MMAP_FIT=$("$BIN" fit --data "$SMOKE_DIR/ds" --psi 0.01 --method cgavi-ihb \
+  --store mmap --mem-budget-mb 1)
+echo "$MMAP_FIT"
+echo "$MEM_FIT" | grep -q '"store":"mem"' || {
+  echo "FAIL: default fit no longer reports store=mem"
+  exit 1
+}
+echo "$MMAP_FIT" | grep -q '"store":"mmap"' || {
+  echo "FAIL: --store mmap fit did not report store=mmap"
+  exit 1
+}
+MEM_SHAPE=$(echo "$MEM_FIT" | grep -E '^\|G\||^avg deg|^SPAR')
+MMAP_SHAPE=$(echo "$MMAP_FIT" | grep -E '^\|G\||^avg deg|^SPAR')
+if [[ "$MEM_SHAPE" != "$MMAP_SHAPE" ]]; then
+  echo "FAIL: spill-backed fit diverged from the in-memory fit:"
+  diff <(echo "$MEM_SHAPE") <(echo "$MMAP_SHAPE") || true
+  exit 1
+fi
 rm -rf "$SMOKE_DIR"
 
 echo "verify.sh: all gates passed"
