@@ -58,7 +58,7 @@ impl Bencher {
             std::hint::black_box(f());
             times.push(t.secs());
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(f64::total_cmp);
         let pick = |q: f64| times[((times.len() - 1) as f64 * q).round() as usize];
         BenchStat {
             name: name.to_string(),

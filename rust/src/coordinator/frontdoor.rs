@@ -1,0 +1,725 @@
+//! The serving **front door**: a std-only TCP server speaking the
+//! framed [`crate::coordinator::wire`] protocol over the
+//! [`ModelRouter`].
+//!
+//! Design: thread-per-connection with a bounded handler count.  The
+//! accept loop runs on its own thread; each connection gets a handler
+//! thread that reads frames in lockstep (one request, one reply).  The
+//! concurrency story stays the same as in-process serving — handlers
+//! funnel into each route's bounded-queue batcher — the front door only
+//! adds the protections a network edge needs:
+//!
+//! * **Rate limiting** — an optional per-route token bucket checked
+//!   *before* admission, so a hot client is turned away with a typed
+//!   `rate_limited` rejection instead of starving the queue.
+//! * **Deadlines** — per-connection read/write timeouts; a silent peer
+//!   is reaped (counted in `timed_out`), never waited on forever.
+//! * **Frame caps** — oversized frames are rejected from the header
+//!   alone with a typed `oversized` error frame; the payload is never
+//!   allocated.
+//! * **Graceful shutdown** — a `Shutdown` frame (or
+//!   [`FrontDoor::shutdown`]) stops the accept loop, joins every
+//!   handler, and lets in-flight requests drain through the router's
+//!   existing drain path before the final report is cut.
+//!
+//! Every failure mode ends in a typed frame or a closed socket — the
+//! front door never panics a worker and never leaves a peer hanging.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::ModelRouter;
+use crate::coordinator::wire::{
+    self, FrameKind, WireFault, WireStats, DEFAULT_MAX_FRAME_BYTES,
+};
+use crate::error::{AviError, Result};
+
+// ---------------------------------------------------------------------
+// Rate limiting
+// ---------------------------------------------------------------------
+
+/// Token-bucket parameters: `burst` tokens cap, refilled at `per_sec`.
+/// `per_sec = 0` never refills — handy for deterministic tests and for
+/// hard request quotas.
+#[derive(Clone, Copy, Debug)]
+pub struct RateLimit {
+    pub per_sec: f64,
+    pub burst: f64,
+}
+
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Per-route token buckets.  One bucket per route key, created on first
+/// sight; the map only ever holds as many entries as there are routes
+/// named by clients.
+pub struct RateLimiter {
+    limit: RateLimit,
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+}
+
+impl RateLimiter {
+    pub fn new(limit: RateLimit) -> RateLimiter {
+        RateLimiter { limit, buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Take one token for `route`; `false` means rate-limited.
+    pub fn try_acquire(&self, route: &str) -> bool {
+        let now = Instant::now();
+        // bucket state is self-healing (recomputed from `last` each
+        // call), so a poisoned lock is safe to recover
+        let mut buckets =
+            self.buckets.lock().unwrap_or_else(PoisonError::into_inner);
+        let b = buckets.entry(route.to_string()).or_insert(TokenBucket {
+            tokens: self.limit.burst,
+            last: now,
+        });
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.last = now;
+        b.tokens = (b.tokens + dt * self.limit.per_sec).min(self.limit.burst);
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire metrics (atomic mirror of WireStats)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct WireMetrics {
+    connections: AtomicU64,
+    accepted: AtomicU64,
+    rejected_limit: AtomicU64,
+    rejected_route: AtomicU64,
+    timed_out: AtomicU64,
+    malformed: AtomicU64,
+    oversized: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl WireMetrics {
+    fn snapshot(&self) -> WireStats {
+        WireStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected_limit: self.rejected_limit.load(Ordering::Relaxed),
+            rejected_route: self.rejected_route.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
+            malformed: self.malformed.load(Ordering::Relaxed),
+            oversized: self.oversized.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------
+
+/// Front-door knobs (CLI surface of `serve --listen`).
+#[derive(Clone, Debug)]
+pub struct FrontDoorConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`FrontDoor::local_addr`]).
+    pub addr: String,
+    /// Per-connection read deadline (a silent peer is reaped after this).
+    pub read_timeout: Duration,
+    /// Per-connection write deadline.
+    pub write_timeout: Duration,
+    /// Payload cap; larger frames get a typed `oversized` error.
+    pub max_frame_bytes: usize,
+    /// Optional per-route token bucket.
+    pub rate_limit: Option<RateLimit>,
+    /// Handler-thread cap; connections beyond it get a `busy` error.
+    pub max_connections: usize,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> Self {
+        FrontDoorConfig {
+            addr: "127.0.0.1:0".into(),
+            read_timeout: Duration::from_millis(5_000),
+            write_timeout: Duration::from_millis(5_000),
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            rate_limit: None,
+            max_connections: 256,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+struct Shared {
+    router: Arc<ModelRouter>,
+    metrics: WireMetrics,
+    limiter: Option<RateLimiter>,
+    stop: AtomicBool,
+    /// (flag, condvar): set + notified when a peer requests shutdown.
+    shutdown: (Mutex<bool>, Condvar),
+    read_timeout: Duration,
+    write_timeout: Duration,
+    max_frame_bytes: usize,
+}
+
+/// A running front door.  Dropping it without [`FrontDoor::shutdown`]
+/// stops the server but discards the final report.
+pub struct FrontDoor {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl FrontDoor {
+    /// Bind and start serving `router` — returns once the listener is
+    /// live (the bound address is [`FrontDoor::local_addr`]).
+    pub fn start(router: Arc<ModelRouter>, cfg: FrontDoorConfig) -> Result<FrontDoor> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| AviError::Net(format!("bind {}: {e}", cfg.addr)))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| AviError::Net(format!("local_addr: {e}")))?;
+        let shared = Arc::new(Shared {
+            router,
+            metrics: WireMetrics::default(),
+            limiter: cfg.rate_limit.map(RateLimiter::new),
+            stop: AtomicBool::new(false),
+            shutdown: (Mutex::new(false), Condvar::new()),
+            read_timeout: cfg.read_timeout,
+            write_timeout: cfg.write_timeout,
+            max_frame_bytes: cfg.max_frame_bytes,
+        });
+        let accept_shared = shared.clone();
+        let max_connections = cfg.max_connections.max(1);
+        let accept_handle = std::thread::spawn(move || {
+            accept_loop(&listener, &accept_shared, max_connections)
+        });
+        Ok(FrontDoor { shared, local_addr, accept_handle: Some(accept_handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Block until a peer sends a `Shutdown` frame (or
+    /// [`FrontDoor::shutdown`] is called from another thread).
+    pub fn wait_shutdown(&self) {
+        let (flag, cv) = &self.shared.shutdown;
+        let mut requested = flag.lock().unwrap_or_else(PoisonError::into_inner);
+        while !*requested {
+            requested = cv
+                .wait(requested)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Wire counters so far.
+    pub fn wire_stats(&self) -> WireStats {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Stop accepting, join every handler (in-flight requests drain
+    /// through the router), and cut the final report with the wire
+    /// counters attached.
+    pub fn shutdown(mut self) -> crate::coordinator::router::RouterReport {
+        self.stop_and_join();
+        let mut report = self.shared.router.report();
+        report.wire = Some(self.shared.metrics.snapshot());
+        report
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        signal_shutdown(&self.shared);
+        // the accept loop blocks in accept(); poke it with a throwaway
+        // connection so it observes the stop flag
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FrontDoor {
+    fn drop(&mut self) {
+        if self.accept_handle.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+fn signal_shutdown(shared: &Shared) {
+    let (flag, cv) = &shared.shutdown;
+    *flag.lock().unwrap_or_else(PoisonError::into_inner) = true;
+    cv.notify_all();
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>, max_connections: usize) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            // the shutdown poke (or a raced client); close and leave
+            drop(stream);
+            break;
+        }
+        shared.metrics.connections.fetch_add(1, Ordering::Relaxed);
+        handlers.retain(|h| !h.is_finished());
+        if handlers.len() >= max_connections {
+            // typed busy error, then close — never a silent drop
+            let mut stream = stream;
+            let _ = stream.set_write_timeout(Some(shared.write_timeout));
+            let payload = wire::encode_wire_error(
+                "busy",
+                &format!("connection limit {max_connections} reached"),
+            );
+            if let Ok(n) = wire::write_frame(&mut stream, FrameKind::Error, &payload) {
+                shared.metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+            }
+            continue;
+        }
+        let conn_shared = shared.clone();
+        handlers.push(std::thread::spawn(move || handle_conn(stream, &conn_shared)));
+    }
+    // graceful drain: every handler finishes its in-flight request (the
+    // router's batcher answers it) before the front door reports
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Send a frame, counting bytes; `false` means the connection is dead.
+fn send(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    kind: FrameKind,
+    payload: &[u8],
+) -> bool {
+    match wire::write_frame(stream, kind, payload) {
+        Ok(n) => {
+            shared.metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(shared.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.write_timeout));
+    loop {
+        let frame = match wire::read_frame(&mut stream, shared.max_frame_bytes) {
+            Ok(frame) => frame,
+            Err(WireFault::Eof) => break,
+            Err(WireFault::Timeout) => {
+                // during shutdown the reap is expected — only count
+                // peers that actually went silent on a live server
+                if !shared.stop.load(Ordering::SeqCst) {
+                    shared.metrics.timed_out.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
+            }
+            Err(WireFault::Oversized { got, max }) => {
+                shared.metrics.oversized.fetch_add(1, Ordering::Relaxed);
+                let payload = wire::encode_wire_error(
+                    "oversized",
+                    &format!("{got} bytes (cap {max})"),
+                );
+                send(&mut stream, shared, FrameKind::Error, &payload);
+                break; // unread payload bytes follow; resync is impossible
+            }
+            Err(WireFault::Version { got }) => {
+                shared.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                let payload = wire::encode_wire_error(
+                    "bad_version",
+                    &format!("got {got}, speaking {}", wire::WIRE_VERSION),
+                );
+                send(&mut stream, shared, FrameKind::Error, &payload);
+                break;
+            }
+            Err(WireFault::Malformed(m)) => {
+                shared.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                let payload = wire::encode_wire_error("malformed", &m);
+                send(&mut stream, shared, FrameKind::Error, &payload);
+                break; // byte stream is out of sync past a bad header
+            }
+            Err(WireFault::Io(_)) => break,
+        };
+        shared.metrics.bytes_in.fetch_add(frame.wire_len(), Ordering::Relaxed);
+        match frame.kind {
+            FrameKind::Request => {
+                // a bad payload inside a well-framed request keeps the
+                // stream in sync — answer the error and keep serving
+                let (route, req) = match wire::decode_request(&frame.payload) {
+                    Ok(parts) => parts,
+                    Err(fault) => {
+                        shared.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                        let payload =
+                            wire::encode_wire_error("malformed", &fault.to_string());
+                        if !send(&mut stream, shared, FrameKind::Error, &payload) {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                let payload = answer_request(shared, &route, req);
+                if !send(&mut stream, shared, FrameKind::Reply, &payload) {
+                    break;
+                }
+            }
+            FrameKind::Shutdown => {
+                shared.stop.store(true, Ordering::SeqCst);
+                signal_shutdown(shared);
+                let ack = wire::encode_rejection("stopped", "shutting down");
+                send(&mut stream, shared, FrameKind::Reply, &ack);
+                break;
+            }
+            FrameKind::Reply | FrameKind::Error => {
+                shared.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                let payload = wire::encode_wire_error(
+                    "malformed",
+                    "unexpected reply/error frame from client",
+                );
+                send(&mut stream, shared, FrameKind::Error, &payload);
+                break;
+            }
+        }
+    }
+}
+
+/// Rate-limit gate → router admission → encoded reply payload.
+fn answer_request(
+    shared: &Shared,
+    route: &str,
+    req: crate::coordinator::service::ServeRequest,
+) -> Vec<u8> {
+    if let Some(limiter) = &shared.limiter {
+        if !limiter.try_acquire(route) {
+            shared.metrics.rejected_limit.fetch_add(1, Ordering::Relaxed);
+            return wire::encode_rejection("rate_limited", &format!("route '{route}'"));
+        }
+    }
+    match shared.router.enqueue(route, req) {
+        Ok(pending) => {
+            // wait() resolves through the service's existing reply path:
+            // admitted requests drain even across shutdown
+            let reply = pending.wait();
+            shared.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+            wire::encode_reply(&reply)
+        }
+        Err(e) => {
+            shared.metrics.rejected_route.fetch_add(1, Ordering::Relaxed);
+            wire::encode_rejection("unknown_route", &e.to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::ModelRegistry;
+    use crate::coordinator::service::{ServeConfig, ServeRequest};
+    use crate::coordinator::wire::{WireClient, WireOutcome};
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::estimator::EstimatorConfig;
+    use crate::oavi::OaviConfig;
+    use crate::ordering::FeatureOrdering;
+    use crate::pipeline::{train_pipeline, PipelineConfig, PipelineModel};
+    use crate::svm::linear::LinearSvmConfig;
+
+    fn trained_model(seed: u64) -> Arc<PipelineModel> {
+        let ds = synthetic_dataset(300, seed);
+        let cfg = PipelineConfig {
+            estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01)),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        Arc::new(train_pipeline(&cfg, &ds).unwrap())
+    }
+
+    fn served_router(seed: u64) -> Arc<ModelRouter> {
+        let mut registry = ModelRegistry::new();
+        registry.insert("m", "v1", trained_model(seed));
+        Arc::new(ModelRouter::from_registry(&registry, &ServeConfig::default()))
+    }
+
+    fn start(cfg: FrontDoorConfig, seed: u64) -> FrontDoor {
+        FrontDoor::start(served_router(seed), cfg).unwrap()
+    }
+
+    #[test]
+    fn network_scores_are_bitwise_identical_to_in_process() {
+        let model = trained_model(31);
+        let mut registry = ModelRegistry::new();
+        registry.insert("m", "v1", model.clone());
+        let router =
+            Arc::new(ModelRouter::from_registry(&registry, &ServeConfig::default()));
+        let fd = FrontDoor::start(router.clone(), FrontDoorConfig::default()).unwrap();
+
+        let ds = synthetic_dataset(16, 32);
+        let rows: Vec<Vec<f64>> = (0..16).map(|i| ds.x.row(i).to_vec()).collect();
+        let reference = router
+            .submit("m", ServeRequest::batch(rows.clone()))
+            .unwrap()
+            .answer()
+            .unwrap();
+
+        let mut client =
+            WireClient::connect(&fd.local_addr().to_string()).unwrap();
+        let answer = client
+            .request("m", &ServeRequest::batch(rows))
+            .unwrap()
+            .answer()
+            .unwrap();
+        assert_eq!(answer.key, "m");
+        assert_eq!(answer.version, "v1");
+        assert_eq!(answer.predictions.len(), 16);
+        for (a, b) in answer.predictions.iter().zip(&reference.predictions) {
+            assert_eq!(a.label, b.label);
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.scores), bits(&b.scores));
+        }
+        let report = fd.shutdown();
+        let wire = report.wire.expect("wire stats attached");
+        assert_eq!(wire.accepted, 1);
+        assert!(wire.bytes_in > 0 && wire.bytes_out > 0);
+    }
+
+    #[test]
+    fn rate_limit_rejects_typed_and_recovers_nothing_at_rate_zero() {
+        // burst 2, no refill: exactly two requests pass, forever
+        let cfg = FrontDoorConfig {
+            rate_limit: Some(RateLimit { per_sec: 0.0, burst: 2.0 }),
+            ..FrontDoorConfig::default()
+        };
+        let fd = start(cfg, 33);
+        let ds = synthetic_dataset(8, 34);
+        let mut client =
+            WireClient::connect(&fd.local_addr().to_string()).unwrap();
+        let row = || ServeRequest::row(ds.x.row(0).to_vec());
+        assert!(client.request("m", &row()).unwrap().answer().is_ok());
+        assert!(client.request("m", &row()).unwrap().answer().is_ok());
+        for _ in 0..3 {
+            match client.request("m", &row()).unwrap() {
+                WireOutcome::Rejected { reason, .. } => {
+                    assert_eq!(reason, "rate_limited")
+                }
+                other => panic!("expected rate_limited, got {other:?}"),
+            }
+        }
+        let report = fd.shutdown();
+        let wire = report.wire.unwrap();
+        assert_eq!(wire.accepted, 2);
+        assert_eq!(wire.rejected_limit, 3);
+    }
+
+    #[test]
+    fn token_bucket_refills_at_rate() {
+        let limiter = RateLimiter::new(RateLimit { per_sec: 1000.0, burst: 1.0 });
+        assert!(limiter.try_acquire("r"));
+        assert!(!limiter.try_acquire("r"));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(limiter.try_acquire("r"), "bucket should refill at 1000/s");
+        // buckets are per-route
+        assert!(limiter.try_acquire("other"));
+    }
+
+    #[test]
+    fn unknown_route_and_nan_rows_reject_without_killing_the_server() {
+        let fd = start(FrontDoorConfig::default(), 35);
+        let ds = synthetic_dataset(8, 36);
+        let mut client =
+            WireClient::connect(&fd.local_addr().to_string()).unwrap();
+        match client
+            .request("nope", &ServeRequest::row(ds.x.row(0).to_vec()))
+            .unwrap()
+        {
+            WireOutcome::Rejected { reason, .. } => assert_eq!(reason, "unknown_route"),
+            other => panic!("{other:?}"),
+        }
+        let mut bad = ds.x.row(0).to_vec();
+        bad[0] = f64::NAN;
+        match client.request("m", &ServeRequest::row(bad)).unwrap() {
+            WireOutcome::Rejected { reason, detail } => {
+                assert_eq!(reason, "non_finite");
+                assert!(detail.contains("col 0"), "{detail}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // same connection still serves clean rows
+        assert!(client
+            .request("m", &ServeRequest::row(ds.x.row(1).to_vec()))
+            .unwrap()
+            .answer()
+            .is_ok());
+        let report = fd.shutdown();
+        let wire = report.wire.unwrap();
+        assert_eq!(wire.rejected_route, 1);
+        assert_eq!(wire.accepted, 2); // NaN reject is an answered admission
+    }
+
+    #[test]
+    fn malformed_and_oversized_frames_get_typed_errors() {
+        use std::io::{Read, Write};
+        let cfg = FrontDoorConfig {
+            max_frame_bytes: 256,
+            ..FrontDoorConfig::default()
+        };
+        let fd = start(cfg, 37);
+        let addr = fd.local_addr().to_string();
+
+        // raw garbage: typed malformed error, then close — never a hang
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        raw.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let frame = wire::read_frame(&mut raw, 1 << 16).unwrap();
+        assert_eq!(frame.kind, FrameKind::Error);
+        assert_eq!(wire::decode_wire_error(&frame.payload).0, "malformed");
+        let mut rest = Vec::new();
+        raw.read_to_end(&mut rest).unwrap(); // server closed
+        assert!(rest.is_empty());
+
+        // oversized: rejected from the header, typed error, close
+        let mut big = TcpStream::connect(&addr).unwrap();
+        big.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        wire::write_frame(&mut big, FrameKind::Request, &[b'x'; 4096]).unwrap();
+        let frame = wire::read_frame(&mut big, 1 << 16).unwrap();
+        assert_eq!(frame.kind, FrameKind::Error);
+        assert_eq!(wire::decode_wire_error(&frame.payload).0, "oversized");
+
+        // well-framed junk payload: error reply, connection stays usable
+        let ds = synthetic_dataset(8, 38);
+        let mut mixed = WireClient::connect(&addr).unwrap();
+        {
+            // reach inside: send a valid frame with a junk payload
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            wire::write_frame(&mut s, FrameKind::Request, b"{\"nope\":1}").unwrap();
+            let frame = wire::read_frame(&mut s, 1 << 16).unwrap();
+            assert_eq!(frame.kind, FrameKind::Error);
+            // the same connection still answers a valid request
+            let payload =
+                wire::encode_request("m", &ServeRequest::row(ds.x.row(0).to_vec()));
+            wire::write_frame(&mut s, FrameKind::Request, &payload).unwrap();
+            let frame = wire::read_frame(&mut s, 1 << 16).unwrap();
+            assert_eq!(frame.kind, FrameKind::Reply);
+        }
+        assert!(mixed
+            .request("m", &ServeRequest::row(ds.x.row(1).to_vec()))
+            .unwrap()
+            .answer()
+            .is_ok());
+
+        let report = fd.shutdown();
+        let wire_stats = report.wire.unwrap();
+        assert!(wire_stats.malformed >= 2, "{wire_stats:?}");
+        assert_eq!(wire_stats.oversized, 1);
+    }
+
+    #[test]
+    fn silent_peer_is_reaped_by_read_timeout() {
+        let cfg = FrontDoorConfig {
+            read_timeout: Duration::from_millis(50),
+            ..FrontDoorConfig::default()
+        };
+        let fd = start(cfg, 39);
+        let stream = TcpStream::connect(fd.local_addr()).unwrap();
+        // say nothing; the server must reap us rather than wait forever
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while fd.wire_stats().timed_out == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        drop(stream);
+        let report = fd.shutdown();
+        assert_eq!(report.wire.unwrap().timed_out, 1);
+    }
+
+    #[test]
+    fn deadline_expired_propagates_over_the_wire() {
+        let fd = start(FrontDoorConfig::default(), 40);
+        let ds = synthetic_dataset(8, 41);
+        let mut client =
+            WireClient::connect(&fd.local_addr().to_string()).unwrap();
+        // deadline 0: any queue wait exceeds it → deterministic expiry
+        let req = ServeRequest::row(ds.x.row(0).to_vec())
+            .with_deadline(Duration::ZERO);
+        match client.request("m", &req).unwrap() {
+            WireOutcome::Rejected { reason, .. } => {
+                assert_eq!(reason, "deadline_expired")
+            }
+            other => panic!("expected deadline_expired, got {other:?}"),
+        }
+        fd.shutdown();
+    }
+
+    #[test]
+    fn shutdown_frame_drains_in_flight_requests() {
+        let fd = start(FrontDoorConfig::default(), 42);
+        let addr = fd.local_addr().to_string();
+        let ds = synthetic_dataset(64, 43);
+        let rows: Vec<Vec<f64>> = (0..64).map(|i| ds.x.row(i).to_vec()).collect();
+        // conn A is established (one answered warm-up) before B races a
+        // shutdown against A's big in-flight batch
+        let mut a = WireClient::connect(&addr).unwrap();
+        assert!(a
+            .request("m", &ServeRequest::row(ds.x.row(0).to_vec()))
+            .unwrap()
+            .answer()
+            .is_ok());
+        let in_flight = std::thread::spawn(move || {
+            a.request("m", &ServeRequest::batch(rows)).unwrap().answer()
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let b = WireClient::connect(&addr).unwrap();
+        b.shutdown_server().unwrap();
+        fd.wait_shutdown(); // returns because B's frame signalled it
+        let answer = in_flight.join().unwrap().expect("in-flight batch answered");
+        assert_eq!(answer.predictions.len(), 64);
+        let report = fd.shutdown();
+        let wire = report.wire.unwrap();
+        assert_eq!(wire.accepted, 2);
+        // the reaped-during-shutdown poke is not a client timeout
+        assert_eq!(wire.timed_out, 0);
+    }
+
+    #[test]
+    fn connection_cap_answers_busy() {
+        let cfg = FrontDoorConfig {
+            max_connections: 1,
+            ..FrontDoorConfig::default()
+        };
+        let fd = start(cfg, 44);
+        let addr = fd.local_addr().to_string();
+        let hold = TcpStream::connect(&addr).unwrap(); // occupies the only slot
+        let mut second = TcpStream::connect(&addr).unwrap();
+        second.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let frame = wire::read_frame(&mut second, 1 << 16).unwrap();
+        assert_eq!(frame.kind, FrameKind::Error);
+        assert_eq!(wire::decode_wire_error(&frame.payload).0, "busy");
+        drop(hold);
+        fd.shutdown();
+    }
+}

@@ -1,9 +1,27 @@
 //! L3 coordinator: the serving **control plane** plus the persistent
 //! work-stealing thread pool behind both training parallelism levels.
 //!
-//! # Control-plane layering (registry → router → service → backend)
+//! # Control-plane layering (front door → registry → router → service → backend)
 //!
-//! The serving path is four tiers, each consuming only the one below:
+//! The serving path is five tiers, each consuming only the one below:
+//!
+//! * **Front door** — [`frontdoor::FrontDoor`]: the std-only network
+//!   edge, a thread-per-connection TCP server speaking the framed
+//!   [`wire`] protocol (12-byte header — magic `AVIW`, version, kind,
+//!   u32-LE length — followed by a JSON payload; see the [`wire`]
+//!   module docs for the frame layout, version gate, error codes, and
+//!   rejection codes).  It adds what a network edge needs and nothing
+//!   else: per-route token-bucket rate limits checked *before*
+//!   admission, per-connection read/write deadlines, a max-frame cap
+//!   enforced from the header alone, typed error frames for every
+//!   protocol fault (never a panic, never a hung socket), per-tenant
+//!   namespacing as plain `tenant/key` registry keys
+//!   ([`registry::namespaced`]), graceful shutdown that drains
+//!   in-flight requests through the router, and wire counters
+//!   ([`wire::WireStats`]) folded into the [`router::RouterReport`]
+//!   JSON.  The network path is **bitwise identical** to in-process
+//!   serving: scores travel as `{:?}`-formatted (shortest-round-trip)
+//!   floats.
 //!
 //! * **Registry** — [`registry::ModelRegistry`]: fitted pipelines
 //!   addressable as `key@version`, loaded from the unified persistence
@@ -49,11 +67,14 @@
 //! lifecycles, request routing, batching, and metrics — Python never runs
 //! here.
 
+pub mod frontdoor;
 pub mod pool;
 pub mod registry;
 pub mod router;
 pub mod service;
+pub mod wire;
 
+pub use frontdoor::{FrontDoor, FrontDoorConfig, RateLimit};
 pub use pool::{PoolHandle, ThreadPool};
 pub use registry::ModelRegistry;
 pub use router::{ModelRouter, RouterReport};
@@ -61,3 +82,4 @@ pub use service::{
     BatchPolicy, RejectReason, ServeAnswer, ServeConfig, ServeMetrics, ServeReply, ServeRequest,
     TransformService,
 };
+pub use wire::{WireClient, WireOutcome, WireStats};

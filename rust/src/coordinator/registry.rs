@@ -295,6 +295,29 @@ pub fn parse_spec(spec: &str) -> Result<(String, String)> {
     Ok((key.to_string(), version.to_string()))
 }
 
+/// Prefix a registry key with a tenant namespace: `tenant/key`.  `/` is
+/// deliberately legal in [`parse_spec`] keys, so namespaced keys flow
+/// through the registry, router, and wire protocol as plain keys — the
+/// whole multi-tenant story is a naming convention, not a parallel
+/// lookup path.  An empty tenant is the un-namespaced key.
+pub fn namespaced(tenant: &str, key: &str) -> String {
+    if tenant.is_empty() {
+        key.to_string()
+    } else {
+        format!("{tenant}/{key}")
+    }
+}
+
+/// Split a possibly-namespaced key into `(tenant, bare_key)`.  Only the
+/// **first** `/` separates the tenant, so keys may themselves contain
+/// `/` below the namespace.
+pub fn split_namespace(key: &str) -> (Option<&str>, &str) {
+    match key.split_once('/') {
+        Some((tenant, bare)) if !tenant.is_empty() => (Some(tenant), bare),
+        _ => (None, key),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -434,6 +457,28 @@ mod tests {
         for bad in ["a b", "a\"b", "a\\b", "a=b", "a,b", "a:b", "k@v 1"] {
             assert!(parse_spec(bad).is_err(), "{bad:?} should be rejected");
         }
+    }
+
+    #[test]
+    fn tenant_namespacing_round_trips_through_plain_keys() {
+        assert_eq!(namespaced("acme", "champ"), "acme/champ");
+        assert_eq!(namespaced("", "champ"), "champ");
+        assert_eq!(split_namespace("acme/champ"), (Some("acme"), "champ"));
+        assert_eq!(split_namespace("champ"), (None, "champ"));
+        // only the first '/' is the namespace boundary
+        assert_eq!(split_namespace("acme/models/champ"), (Some("acme"), "models/champ"));
+        assert_eq!(split_namespace("/champ"), (None, "/champ"));
+        // namespaced keys are valid specs end to end
+        let (key, version) = parse_spec(&format!("{}@v2", namespaced("acme", "champ"))).unwrap();
+        assert_eq!(key, "acme/champ");
+        assert_eq!(version, "v2");
+        // and resolve as ordinary registry keys
+        let mut reg = ModelRegistry::new();
+        reg.insert(namespaced("acme", "m"), "v1", model(0.01, 11));
+        reg.insert(namespaced("globex", "m"), "v1", model(0.05, 12));
+        assert!(reg.get("acme/m", "v1").is_some());
+        assert!(reg.get("globex/m", "v1").is_some());
+        assert!(reg.get("m", "v1").is_none(), "tenants must not leak into the bare key");
     }
 
     #[test]

@@ -482,7 +482,9 @@ impl ModelRouter {
         let total_requests =
             routes.iter().filter(primary).map(|r| r.requests + r.rejected).sum();
         let total_rejected = routes.iter().filter(primary).map(|r| r.rejected).sum();
-        RouterReport { routes, total_requests, total_rejected }
+        // wire counters exist only when a front door serves this router;
+        // it attaches them after snapshotting (FrontDoor::shutdown)
+        RouterReport { routes, total_requests, total_rejected, wire: None }
     }
 }
 
@@ -557,6 +559,10 @@ pub struct RouterReport {
     pub total_requests: u64,
     /// Requests rejected by primary arms.
     pub total_rejected: u64,
+    /// Wire-level counters when the router is served by a
+    /// [`crate::coordinator::frontdoor::FrontDoor`]; `None` for
+    /// in-process serving.
+    pub wire: Option<crate::coordinator::wire::WireStats>,
 }
 
 impl RouterReport {
@@ -591,9 +597,13 @@ impl RouterReport {
             ));
         }
         out.push_str(&format!(
-            "\n],\n\"total_requests\": {},\n\"total_rejected\": {}\n}}\n",
+            "\n],\n\"total_requests\": {},\n\"total_rejected\": {}",
             self.total_requests, self.total_rejected
         ));
+        if let Some(wire) = &self.wire {
+            out.push_str(&format!(",\n\"wire\": {}", wire.to_json()));
+        }
+        out.push_str("\n}\n");
         out
     }
 }
@@ -906,5 +916,22 @@ mod tests {
         // persist helpers the bench layer uses
         let total = crate::estimator::persist::extract_f64(&json, "\"total_requests\":").unwrap();
         assert_eq!(total as u64, 8);
+    }
+
+    #[test]
+    fn report_json_emits_wire_block_only_when_served_over_the_network() {
+        let r = router();
+        let mut report = r.report();
+        assert!(report.wire.is_none());
+        assert!(!report.to_json().contains("\"wire\""));
+        report.wire = Some(crate::coordinator::wire::WireStats {
+            accepted: 5,
+            bytes_in: 123,
+            ..Default::default()
+        });
+        let json = report.to_json();
+        assert!(json.contains("\"wire\": {\"connections\": 0, \"accepted\": 5"), "{json}");
+        assert!(json.contains("\"bytes_in\": 123"), "{json}");
+        assert!(json.trim_end().ends_with('}'), "{json}");
     }
 }

@@ -135,6 +135,10 @@ pub enum RejectReason {
     /// A row's feature length does not match the model (or the batch was
     /// empty).
     BadShape { got: usize, want: usize },
+    /// A row carries a NaN or infinity — rejected at admission so a
+    /// poisoned value can never reach the transform (where it would
+    /// propagate through every score in the flush) or panic a worker.
+    NonFinite { row: usize, col: usize },
     /// The service has shut down.
     Stopped,
 }
@@ -150,6 +154,9 @@ impl std::fmt::Display for RejectReason {
             }
             RejectReason::BadShape { got, want } => {
                 write!(f, "bad shape: {got} features, model wants {want}")
+            }
+            RejectReason::NonFinite { row, col } => {
+                write!(f, "non-finite value at row {row}, col {col}")
             }
             RejectReason::Stopped => write!(f, "service stopped"),
         }
@@ -280,6 +287,8 @@ pub struct ServeMetrics {
     pub rejected_deadline: AtomicU64,
     /// Admission rejections: feature-length mismatch / empty batch.
     pub rejected_shape: AtomicU64,
+    /// Admission rejections: NaN/∞ in a feature row.
+    pub rejected_value: AtomicU64,
     /// Σ queue latency over answered requests (µs) — mean = /requests.
     pub queue_us: AtomicU64,
     /// Σ compute latency over answered requests (µs).
@@ -300,6 +309,7 @@ impl Default for ServeMetrics {
             rejected_full: AtomicU64::new(0),
             rejected_deadline: AtomicU64::new(0),
             rejected_shape: AtomicU64::new(0),
+            rejected_value: AtomicU64::new(0),
             queue_us: AtomicU64::new(0),
             compute_us: AtomicU64::new(0),
             batch_rows_hist: Histogram::new(BATCH_BUCKETS),
@@ -314,6 +324,7 @@ impl ServeMetrics {
         self.rejected_full.load(Ordering::Relaxed)
             + self.rejected_deadline.load(Ordering::Relaxed)
             + self.rejected_shape.load(Ordering::Relaxed)
+            + self.rejected_value.load(Ordering::Relaxed)
     }
 
     /// Add another metrics set into this one — the router folds retired
@@ -328,6 +339,7 @@ impl ServeMetrics {
         add(&self.rejected_full, &other.rejected_full);
         add(&self.rejected_deadline, &other.rejected_deadline);
         add(&self.rejected_shape, &other.rejected_shape);
+        add(&self.rejected_value, &other.rejected_value);
         add(&self.queue_us, &other.queue_us);
         add(&self.compute_us, &other.compute_us);
         self.max_batch
@@ -594,12 +606,22 @@ impl TransformService {
                 want: self.n_features,
             }));
         }
-        for row in rows {
+        for (i, row) in rows.iter().enumerate() {
             if row.len() != self.n_features {
                 self.metrics.rejected_shape.fetch_add(1, Ordering::Relaxed);
                 return Pending::Ready(ServeReply::Rejected(RejectReason::BadShape {
                     got: row.len(),
                     want: self.n_features,
+                }));
+            }
+            // NaN/∞ gate at admission: a non-finite value would poison
+            // every score in the flush it shares (and historically could
+            // panic NaN-unsafe comparisons downstream)
+            if let Some(j) = row.iter().position(|v| !v.is_finite()) {
+                self.metrics.rejected_value.fetch_add(1, Ordering::Relaxed);
+                return Pending::Ready(ServeReply::Rejected(RejectReason::NonFinite {
+                    row: i,
+                    col: j,
                 }));
             }
         }
@@ -807,7 +829,7 @@ pub fn latency_percentiles(mut lat_us: Vec<f64>) -> (f64, f64, f64) {
     if lat_us.is_empty() {
         return (0.0, 0.0, 0.0);
     }
-    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat_us.sort_by(f64::total_cmp);
     let pick = |q: f64| lat_us[((lat_us.len() - 1) as f64 * q).round() as usize];
     (pick(0.5), pick(0.95), pick(0.99))
 }
@@ -981,6 +1003,38 @@ mod tests {
         assert!(svc.submit(ServeRequest::batch(vec![])).is_rejected());
         assert!(svc.predict_blocking(vec![0.0; 99]).is_err());
         assert_eq!(svc.metrics.rejected_shape.load(Ordering::Relaxed), 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn non_finite_rows_reject_without_poisoning_the_service() {
+        let model = trained_model();
+        let ds = synthetic_dataset(10, 29);
+        let n = model.perm.len();
+        let svc = TransformService::start(model, ServeConfig::default());
+        for (poison, col) in [(f64::NAN, 0), (f64::INFINITY, n - 1), (f64::NEG_INFINITY, 1)] {
+            let mut row = ds.x.row(0).to_vec();
+            row[col] = poison;
+            match svc.submit(ServeRequest::row(row)) {
+                ServeReply::Rejected(RejectReason::NonFinite { row: 0, col: c }) => {
+                    assert_eq!(c, col);
+                }
+                other => panic!("expected NonFinite, got {other:?}"),
+            }
+        }
+        // a batch reports the offending (row, col) pair
+        let mut bad = ds.x.row(1).to_vec();
+        bad[2] = f64::NAN;
+        let batch = vec![ds.x.row(0).to_vec(), bad];
+        match svc.submit(ServeRequest::batch(batch)) {
+            ServeReply::Rejected(RejectReason::NonFinite { row: 1, col: 2 }) => {}
+            other => panic!("expected NonFinite at (1,2), got {other:?}"),
+        }
+        assert_eq!(svc.metrics.rejected_value.load(Ordering::Relaxed), 4);
+        assert_eq!(svc.metrics.rejected(), 4);
+        // the service keeps serving clean rows after every rejection
+        let ans = svc.predict_blocking(ds.x.row(0).to_vec()).unwrap();
+        assert!(ans.predictions[0].scores.iter().all(|s| s.is_finite()));
         svc.shutdown();
     }
 

@@ -1,0 +1,872 @@
+//! The serving **wire protocol**: length-prefixed frames carrying the
+//! typed [`ServeRequest`] → [`ServeReply`] protocol over a byte stream.
+//!
+//! ## Frame layout
+//!
+//! Every frame is a fixed 12-byte header followed by a JSON payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "AVIW"
+//! 4       1     protocol version (currently 1)
+//! 5       1     frame kind (1 request, 2 reply, 3 error, 4 shutdown)
+//! 6       2     reserved (zero)
+//! 8       4     payload length, u32 little-endian
+//! 12      len   UTF-8 JSON payload
+//! ```
+//!
+//! The header is validated *before* the payload is read: a bad magic or
+//! unknown kind is [`WireFault::Malformed`], a version mismatch is
+//! [`WireFault::Version`], and a length beyond the receiver's cap is
+//! [`WireFault::Oversized`] — all surfaced without allocating the
+//! payload, so an adversarial length can never balloon memory.
+//!
+//! ## Payloads
+//!
+//! * request — `{"kind":"row"|"batch","route":"key","deadline_ms":N,`
+//!   `"rows":[[...]]}` (`deadline_ms` optional).
+//! * reply (ok) — `{"status":"ok","key":..,"version":..,"batch_rows":N,`
+//!   `"queue_us":N,"compute_us":N,"predictions":[{"label":N,`
+//!   `"scores":[...]}]}`.
+//! * reply (rejected) — `{"status":"rejected","reason":"<code>",`
+//!   `"detail":".."}` with codes `queue_full`, `deadline_expired`,
+//!   `bad_shape`, `non_finite`, `stopped`, `rate_limited`,
+//!   `unknown_route`.
+//! * error — `{"error":"malformed"|"oversized"|"bad_version"|`
+//!   `"internal"|"busy","detail":".."}` — protocol-level faults; the
+//!   server closes the connection after sending one.
+//!
+//! Scores are serialized with Rust's `{:?}` float formatting (shortest
+//! round-trip) and parsed with `f64::from_str`, which reproduces every
+//! bit pattern — the network path is **bitwise identical** to calling
+//! the in-process [`TransformService`].
+//!
+//! [`TransformService`]: crate::coordinator::service::TransformService
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::service::{
+    Prediction, RejectReason, ServePayload, ServeReply, ServeRequest,
+};
+use crate::error::{AviError, Result};
+use crate::util::json_escape;
+
+/// Frame magic: every frame starts with these four bytes.
+pub const MAGIC: [u8; 4] = *b"AVIW";
+
+/// Current protocol version; the server rejects any other.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Header size in bytes (magic + version + kind + reserved + length).
+pub const HEADER_LEN: usize = 12;
+
+/// Default payload cap: 1 MiB ≈ 16k rows of 8 features — far above any
+/// sane request, far below a memory-exhaustion vector.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// What a frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    Request = 1,
+    Reply = 2,
+    Error = 3,
+    Shutdown = 4,
+}
+
+impl FrameKind {
+    fn from_u8(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Request),
+            2 => Some(FrameKind::Reply),
+            3 => Some(FrameKind::Error),
+            4 => Some(FrameKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Total bytes this frame occupied on the wire.
+    pub fn wire_len(&self) -> u64 {
+        (HEADER_LEN + self.payload.len()) as u64
+    }
+}
+
+/// Why a frame could not be read.  Every variant maps to a defined
+/// behaviour — a typed error frame, a counter, or a closed connection —
+/// never a panic and never a hung peer.
+#[derive(Debug)]
+pub enum WireFault {
+    /// Bad magic, unknown kind, truncated bytes, or unparsable payload.
+    Malformed(String),
+    /// Declared payload length beyond the receiver's cap.
+    Oversized { got: usize, max: usize },
+    /// Protocol version this endpoint does not speak.
+    Version { got: u8 },
+    /// Clean end-of-stream at a frame boundary (peer closed).
+    Eof,
+    /// The read/write deadline expired mid-frame.
+    Timeout,
+    /// Any other I/O failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireFault::Malformed(m) => write!(f, "malformed frame: {m}"),
+            WireFault::Oversized { got, max } => {
+                write!(f, "frame too large: {got} bytes (cap {max})")
+            }
+            WireFault::Version { got } => {
+                write!(f, "unsupported protocol version {got} (speaking {WIRE_VERSION})")
+            }
+            WireFault::Eof => write!(f, "connection closed"),
+            WireFault::Timeout => write!(f, "connection timed out"),
+            WireFault::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl From<WireFault> for AviError {
+    fn from(fault: WireFault) -> Self {
+        AviError::Net(fault.to_string())
+    }
+}
+
+fn classify_io(e: std::io::Error) -> WireFault {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => WireFault::Timeout,
+        std::io::ErrorKind::UnexpectedEof => {
+            WireFault::Malformed("truncated frame".into())
+        }
+        _ => WireFault::Io(e),
+    }
+}
+
+/// Read one frame, enforcing `max_payload`.  A clean close at a frame
+/// boundary is [`WireFault::Eof`]; a close mid-frame is `Malformed`.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    max_payload: usize,
+) -> std::result::Result<Frame, WireFault> {
+    let mut header = [0u8; HEADER_LEN];
+    // first byte read separately so a peer closing between frames is a
+    // clean Eof, not a truncation error
+    match r.read_exact(&mut header[..1]) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Err(WireFault::Eof)
+        }
+        Err(e) => return Err(classify_io(e)),
+    }
+    r.read_exact(&mut header[1..]).map_err(classify_io)?;
+    if header[..4] != MAGIC {
+        return Err(WireFault::Malformed(format!("bad magic {:02x?}", &header[..4])));
+    }
+    if header[4] != WIRE_VERSION {
+        return Err(WireFault::Version { got: header[4] });
+    }
+    let kind = FrameKind::from_u8(header[5])
+        .ok_or_else(|| WireFault::Malformed(format!("unknown frame kind {}", header[5])))?;
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    if len > max_payload {
+        return Err(WireFault::Oversized { got: len, max: max_payload });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(classify_io)?;
+    Ok(Frame { kind, payload })
+}
+
+/// Write one frame; returns the bytes put on the wire.
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    payload: &[u8],
+) -> std::io::Result<u64> {
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = WIRE_VERSION;
+    header[5] = kind as u8;
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok((HEADER_LEN + payload.len()) as u64)
+}
+
+// ---------------------------------------------------------------------
+// Payload codecs
+// ---------------------------------------------------------------------
+
+/// `{:?}` float formatting: Rust's shortest-round-trip representation,
+/// the same convention the persist layer relies on for bitwise fidelity.
+fn fmt_f64(v: f64) -> String {
+    format!("{v:?}")
+}
+
+fn fmt_rows(rows: &[Vec<f64>]) -> String {
+    let lists: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let vals: Vec<String> = r.iter().map(|&v| fmt_f64(v)).collect();
+            format!("[{}]", vals.join(","))
+        })
+        .collect();
+    format!("[{}]", lists.join(","))
+}
+
+/// Encode a routed request payload.
+pub fn encode_request(route: &str, req: &ServeRequest) -> Vec<u8> {
+    let (kind, rows): (&str, &[Vec<f64>]) = match &req.payload {
+        ServePayload::Row(row) => ("row", std::slice::from_ref(row)),
+        ServePayload::Batch(rows) => ("batch", rows),
+    };
+    let deadline = match req.deadline {
+        Some(d) => format!(",\"deadline_ms\":{}", d.as_millis()),
+        None => String::new(),
+    };
+    format!(
+        "{{\"kind\":\"{kind}\",\"route\":\"{}\"{deadline},\"rows\":{}}}",
+        json_escape(route),
+        fmt_rows(rows)
+    )
+    .into_bytes()
+}
+
+/// Decode a request payload into its route and typed request.
+pub fn decode_request(
+    payload: &[u8],
+) -> std::result::Result<(String, ServeRequest), WireFault> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| WireFault::Malformed("request payload is not UTF-8".into()))?;
+    let kind = get_str(text, "kind")?;
+    let route = get_str(text, "route")?;
+    let rows = get_rows(text, "rows")?;
+    let payload = match kind.as_str() {
+        "row" => {
+            if rows.len() != 1 {
+                return Err(WireFault::Malformed(format!(
+                    "row request carries {} rows",
+                    rows.len()
+                )));
+            }
+            ServePayload::Row(rows.into_iter().next().unwrap_or_default())
+        }
+        "batch" => ServePayload::Batch(rows),
+        other => {
+            return Err(WireFault::Malformed(format!("unknown request kind '{other}'")))
+        }
+    };
+    let deadline = opt_u64(text, "deadline_ms")?.map(Duration::from_millis);
+    Ok((route, ServeRequest { payload, deadline }))
+}
+
+/// Stable wire code for a service rejection.
+pub fn reject_code(r: &RejectReason) -> &'static str {
+    match r {
+        RejectReason::QueueFull { .. } => "queue_full",
+        RejectReason::DeadlineExpired { .. } => "deadline_expired",
+        RejectReason::BadShape { .. } => "bad_shape",
+        RejectReason::NonFinite { .. } => "non_finite",
+        RejectReason::Stopped => "stopped",
+    }
+}
+
+/// Encode a service reply (answered or rejected).
+pub fn encode_reply(reply: &ServeReply) -> Vec<u8> {
+    match reply {
+        ServeReply::Answered(a) => {
+            let preds: Vec<String> = a
+                .predictions
+                .iter()
+                .map(|p| {
+                    let scores: Vec<String> =
+                        p.scores.iter().map(|&s| fmt_f64(s)).collect();
+                    format!(
+                        "{{\"label\":{},\"scores\":[{}]}}",
+                        p.label,
+                        scores.join(",")
+                    )
+                })
+                .collect();
+            format!(
+                "{{\"status\":\"ok\",\"key\":\"{}\",\"version\":\"{}\",\
+                 \"batch_rows\":{},\"queue_us\":{},\"compute_us\":{},\
+                 \"predictions\":[{}]}}",
+                json_escape(&a.model_key),
+                json_escape(&a.model_version),
+                a.batch_rows,
+                a.queue_latency.as_micros(),
+                a.compute_latency.as_micros(),
+                preds.join(",")
+            )
+            .into_bytes()
+        }
+        ServeReply::Rejected(r) => encode_rejection(reject_code(r), &r.to_string()),
+    }
+}
+
+/// Encode a rejection the wire layer itself produced (`rate_limited`,
+/// `unknown_route`) or a service rejection by code.
+pub fn encode_rejection(code: &str, detail: &str) -> Vec<u8> {
+    format!(
+        "{{\"status\":\"rejected\",\"reason\":\"{}\",\"detail\":\"{}\"}}",
+        json_escape(code),
+        json_escape(detail)
+    )
+    .into_bytes()
+}
+
+/// A successful network answer (mirror of
+/// [`crate::coordinator::service::ServeAnswer`] minus live `Duration`s).
+#[derive(Clone, Debug)]
+pub struct WireAnswer {
+    pub key: String,
+    pub version: String,
+    pub batch_rows: usize,
+    pub queue_us: u64,
+    pub compute_us: u64,
+    pub predictions: Vec<Prediction>,
+}
+
+/// What a request frame came back as.
+#[derive(Clone, Debug)]
+pub enum WireOutcome {
+    Answered(WireAnswer),
+    Rejected { reason: String, detail: String },
+}
+
+impl WireOutcome {
+    pub fn answer(self) -> Result<WireAnswer> {
+        match self {
+            WireOutcome::Answered(a) => Ok(a),
+            WireOutcome::Rejected { reason, detail } => {
+                Err(AviError::Coordinator(format!("rejected ({reason}): {detail}")))
+            }
+        }
+    }
+}
+
+/// Decode a reply payload.
+pub fn decode_reply(payload: &[u8]) -> std::result::Result<WireOutcome, WireFault> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| WireFault::Malformed("reply payload is not UTF-8".into()))?;
+    match get_str(text, "status")?.as_str() {
+        "ok" => {
+            let preds_src = get_array(text, "predictions")?;
+            let mut predictions = Vec::new();
+            for obj in split_objects(&preds_src) {
+                let label = get_u64(obj, "label")? as usize;
+                let scores_src = get_array(obj, "scores")?;
+                let scores = parse_f64_list(&scores_src)?;
+                predictions.push(Prediction { label, scores });
+            }
+            Ok(WireOutcome::Answered(WireAnswer {
+                key: get_str(text, "key")?,
+                version: get_str(text, "version")?,
+                batch_rows: get_u64(text, "batch_rows")? as usize,
+                queue_us: get_u64(text, "queue_us")?,
+                compute_us: get_u64(text, "compute_us")?,
+                predictions,
+            }))
+        }
+        "rejected" => Ok(WireOutcome::Rejected {
+            reason: get_str(text, "reason")?,
+            detail: get_str(text, "detail").unwrap_or_default(),
+        }),
+        other => Err(WireFault::Malformed(format!("unknown reply status '{other}'"))),
+    }
+}
+
+/// Encode a protocol-level error payload.
+pub fn encode_wire_error(code: &str, detail: &str) -> Vec<u8> {
+    format!(
+        "{{\"error\":\"{}\",\"detail\":\"{}\"}}",
+        json_escape(code),
+        json_escape(detail)
+    )
+    .into_bytes()
+}
+
+/// Decode a protocol-level error payload into (code, detail); tolerant
+/// of garbage (both default to empty).
+pub fn decode_wire_error(payload: &[u8]) -> (String, String) {
+    let text = std::str::from_utf8(payload).unwrap_or("");
+    (
+        get_str(text, "error").unwrap_or_default(),
+        get_str(text, "detail").unwrap_or_default(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Wire-level counters
+// ---------------------------------------------------------------------
+
+/// Snapshot of the front door's wire counters, embedded in
+/// [`RouterReport::to_json`] under `"wire"`.  Lives here (not in the
+/// front door) so the router can carry it without depending on the
+/// server layer above it.
+///
+/// [`RouterReport::to_json`]: crate::coordinator::router::RouterReport::to_json
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// TCP connections accepted.
+    pub connections: u64,
+    /// Request frames answered by the router (any [`ServeReply`]).
+    pub accepted: u64,
+    /// Request frames turned away by a route's token bucket.
+    pub rejected_limit: u64,
+    /// Request frames naming a route the router does not serve.
+    pub rejected_route: u64,
+    /// Connections reaped by the read deadline.
+    pub timed_out: u64,
+    /// Frames with bad magic/kind/version or unparsable payloads.
+    pub malformed: u64,
+    /// Frames whose declared length exceeded the cap.
+    pub oversized: u64,
+    /// Bytes read off the wire (complete frames).
+    pub bytes_in: u64,
+    /// Bytes written to the wire.
+    pub bytes_out: u64,
+}
+
+impl WireStats {
+    /// One JSON object, same flat style as the rest of the report.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"connections\": {}, \"accepted\": {}, \"rejected_limit\": {}, \
+             \"rejected_route\": {}, \"timed_out\": {}, \"malformed\": {}, \
+             \"oversized\": {}, \"bytes_in\": {}, \"bytes_out\": {}}}",
+            self.connections,
+            self.accepted,
+            self.rejected_limit,
+            self.rejected_route,
+            self.timed_out,
+            self.malformed,
+            self.oversized,
+            self.bytes_in,
+            self.bytes_out
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------
+
+/// Blocking client for the framed protocol — one TCP connection,
+/// request/reply in lockstep.
+pub struct WireClient {
+    stream: TcpStream,
+    max_frame: usize,
+}
+
+impl WireClient {
+    /// Connect to a front door.
+    pub fn connect(addr: &str) -> Result<WireClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| AviError::Net(format!("connect {addr}: {e}")))?;
+        Ok(WireClient { stream, max_frame: DEFAULT_MAX_FRAME_BYTES })
+    }
+
+    /// Set read/write deadlines on the connection.
+    pub fn with_timeouts(
+        self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<WireClient> {
+        self.stream
+            .set_read_timeout(read)
+            .and_then(|()| self.stream.set_write_timeout(write))
+            .map_err(|e| AviError::Net(format!("set timeouts: {e}")))?;
+        Ok(self)
+    }
+
+    /// Raise/lower the reply-size cap.
+    pub fn max_frame(mut self, bytes: usize) -> WireClient {
+        self.max_frame = bytes;
+        self
+    }
+
+    /// Send one request and block for its outcome.  Rejections (rate
+    /// limits included) come back as [`WireOutcome::Rejected`];
+    /// protocol-level error frames surface as typed [`AviError::Net`].
+    pub fn request(&mut self, route: &str, req: &ServeRequest) -> Result<WireOutcome> {
+        let payload = encode_request(route, req);
+        write_frame(&mut self.stream, FrameKind::Request, &payload)
+            .map_err(|e| AviError::Net(format!("send request: {e}")))?;
+        let frame = read_frame(&mut self.stream, self.max_frame)?;
+        match frame.kind {
+            FrameKind::Reply => Ok(decode_reply(&frame.payload)?),
+            FrameKind::Error => {
+                let (code, detail) = decode_wire_error(&frame.payload);
+                Err(AviError::Net(format!("server error ({code}): {detail}")))
+            }
+            other => Err(AviError::Net(format!("unexpected frame kind {other:?}"))),
+        }
+    }
+
+    /// Ask the server to shut down gracefully; consumes the client.
+    pub fn shutdown_server(mut self) -> Result<()> {
+        write_frame(&mut self.stream, FrameKind::Shutdown, b"{}")
+            .map_err(|e| AviError::Net(format!("send shutdown: {e}")))?;
+        // best effort: wait for the ack so the caller knows the server
+        // heard us, but a racing close is not an error
+        let _ = read_frame(&mut self.stream, self.max_frame);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON readers (wire payloads only — flat objects, nested
+// numeric arrays, no objects-in-strings; the container has no serde)
+// ---------------------------------------------------------------------
+
+fn after_key<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\"");
+    let pos = text.find(&pat)?;
+    let rest = text[pos + pat.len()..].trim_start();
+    Some(rest.strip_prefix(':')?.trim_start())
+}
+
+fn get_str(text: &str, key: &str) -> std::result::Result<String, WireFault> {
+    let rest = after_key(text, key)
+        .ok_or_else(|| WireFault::Malformed(format!("missing \"{key}\"")))?;
+    let rest = rest
+        .strip_prefix('"')
+        .ok_or_else(|| WireFault::Malformed(format!("\"{key}\" is not a string")))?;
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Ok(out),
+            '\\' => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('r') => out.push('\r'),
+                Some('t') => out.push('\t'),
+                Some('u') => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    let cp = u32::from_str_radix(&hex, 16).map_err(|_| {
+                        WireFault::Malformed(format!("bad \\u escape in \"{key}\""))
+                    })?;
+                    out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                }
+                Some(e) => out.push(e),
+                None => {
+                    return Err(WireFault::Malformed(format!(
+                        "unterminated escape in \"{key}\""
+                    )))
+                }
+            },
+            c => out.push(c),
+        }
+    }
+    Err(WireFault::Malformed(format!("unterminated string for \"{key}\"")))
+}
+
+fn get_u64(text: &str, key: &str) -> std::result::Result<u64, WireFault> {
+    let rest = after_key(text, key)
+        .ok_or_else(|| WireFault::Malformed(format!("missing \"{key}\"")))?;
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end]
+        .parse::<u64>()
+        .map_err(|_| WireFault::Malformed(format!("\"{key}\" is not an integer")))
+}
+
+fn opt_u64(text: &str, key: &str) -> std::result::Result<Option<u64>, WireFault> {
+    if after_key(text, key).is_none() {
+        return Ok(None);
+    }
+    get_u64(text, key).map(Some)
+}
+
+/// Contents of the depth-matched `[…]` after `"key":` (brackets
+/// stripped).
+fn get_array(text: &str, key: &str) -> std::result::Result<String, WireFault> {
+    let rest = after_key(text, key)
+        .ok_or_else(|| WireFault::Malformed(format!("missing \"{key}\"")))?;
+    if !rest.starts_with('[') {
+        return Err(WireFault::Malformed(format!("\"{key}\" is not an array")));
+    }
+    let mut depth = 0usize;
+    for (i, ch) in rest.char_indices() {
+        match ch {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(rest[1..i].to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(WireFault::Malformed(format!("unbalanced array for \"{key}\"")))
+}
+
+/// Top-level `{…}` objects of an array body.
+fn split_objects(src: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in src.char_indices() {
+        match ch {
+            '{' => {
+                if depth == 0 {
+                    start = i;
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    out.push(&src[start..i + 1]);
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn parse_f64_list(src: &str) -> std::result::Result<Vec<f64>, WireFault> {
+    if src.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    src.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<f64>()
+                .map_err(|e| WireFault::Malformed(format!("bad float '{}': {e}", t.trim())))
+        })
+        .collect()
+}
+
+fn get_rows(text: &str, key: &str) -> std::result::Result<Vec<Vec<f64>>, WireFault> {
+    let body = get_array(text, key)?;
+    let mut out = Vec::new();
+    let mut rest = body.as_str();
+    while let Some(start) = rest.find('[') {
+        let end = rest[start..]
+            .find(']')
+            .ok_or_else(|| WireFault::Malformed(format!("unbalanced rows in \"{key}\"")))?
+            + start;
+        out.push(parse_f64_list(&rest[start + 1..end])?);
+        rest = &rest[end + 1..];
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServeAnswer;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, FrameKind::Request, b"{\"x\":1}").unwrap();
+        assert_eq!(n, (HEADER_LEN + 7) as u64);
+        let frame = read_frame(&mut Cursor::new(&buf), DEFAULT_MAX_FRAME_BYTES).unwrap();
+        assert_eq!(frame.kind, FrameKind::Request);
+        assert_eq!(frame.payload, b"{\"x\":1}");
+        assert_eq!(frame.wire_len(), n);
+    }
+
+    #[test]
+    fn clean_close_is_eof_truncation_is_malformed() {
+        let fault = read_frame(&mut Cursor::new(&[][..]), 64).unwrap_err();
+        assert!(matches!(fault, WireFault::Eof), "{fault:?}");
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Reply, b"12345678").unwrap();
+        buf.truncate(buf.len() - 3);
+        let fault = read_frame(&mut Cursor::new(&buf), 64).unwrap_err();
+        assert!(matches!(fault, WireFault::Malformed(_)), "{fault:?}");
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Request, b"{}").unwrap();
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        let fault = read_frame(&mut Cursor::new(&bad), 64).unwrap_err();
+        assert!(matches!(fault, WireFault::Malformed(_)), "{fault:?}");
+        let mut bad = buf.clone();
+        bad[4] = 9;
+        let fault = read_frame(&mut Cursor::new(&bad), 64).unwrap_err();
+        assert!(matches!(fault, WireFault::Version { got: 9 }), "{fault:?}");
+        let mut bad = buf;
+        bad[5] = 200;
+        let fault = read_frame(&mut Cursor::new(&bad), 64).unwrap_err();
+        assert!(matches!(fault, WireFault::Malformed(_)), "{fault:?}");
+    }
+
+    #[test]
+    fn oversized_rejects_on_header_before_allocating() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Request, &[b' '; 100]).unwrap();
+        let fault = read_frame(&mut Cursor::new(&buf), 64).unwrap_err();
+        match fault {
+            WireFault::Oversized { got: 100, max: 64 } => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // a declared length with no bytes behind it still rejects on the
+        // header alone
+        let mut lying = Vec::new();
+        write_frame(&mut lying, FrameKind::Request, b"").unwrap();
+        lying[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let fault = read_frame(&mut Cursor::new(&lying), 1 << 20).unwrap_err();
+        assert!(matches!(fault, WireFault::Oversized { .. }), "{fault:?}");
+    }
+
+    #[test]
+    fn request_codec_roundtrips_bitwise() {
+        let rows = vec![
+            vec![1.5, -0.0, f64::MIN_POSITIVE, 0.1 + 0.2],
+            vec![f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 3.141592653589793],
+        ];
+        let req = ServeRequest::batch(rows.clone())
+            .with_deadline(Duration::from_millis(250));
+        let payload = encode_request("tenant-a/model", &req);
+        let (route, back) = decode_request(&payload).unwrap();
+        assert_eq!(route, "tenant-a/model");
+        assert_eq!(back.deadline, Some(Duration::from_millis(250)));
+        match back.payload {
+            ServePayload::Batch(got) => {
+                for (a, b) in rows.iter().flatten().zip(got.iter().flatten()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("expected batch, got {other:?}"),
+        }
+        // single-row kind survives
+        let (_, back) =
+            decode_request(&encode_request("m", &ServeRequest::row(vec![1.0]))).unwrap();
+        assert!(matches!(back.payload, ServePayload::Row(_)));
+        assert_eq!(back.deadline, None);
+    }
+
+    #[test]
+    fn reply_codec_roundtrips_bitwise() {
+        let answer = ServeAnswer {
+            predictions: vec![
+                Prediction { label: 2, scores: vec![0.1 + 0.2, -1.5e-300] },
+                Prediction { label: 0, scores: vec![f64::MAX, f64::MIN] },
+            ],
+            model_key: "m".into(),
+            model_version: "v1".into(),
+            queue_latency: Duration::from_micros(12),
+            compute_latency: Duration::from_micros(345),
+            batch_rows: 2,
+        };
+        let payload = encode_reply(&ServeReply::Answered(answer));
+        let out = decode_reply(&payload).unwrap();
+        match out {
+            WireOutcome::Answered(a) => {
+                assert_eq!(a.key, "m");
+                assert_eq!(a.version, "v1");
+                assert_eq!(a.batch_rows, 2);
+                assert_eq!(a.queue_us, 12);
+                assert_eq!(a.compute_us, 345);
+                assert_eq!(a.predictions.len(), 2);
+                assert_eq!(a.predictions[0].label, 2);
+                assert_eq!(a.predictions[0].scores[0].to_bits(), (0.1 + 0.2).to_bits());
+                assert_eq!(a.predictions[1].scores[0].to_bits(), f64::MAX.to_bits());
+            }
+            other => panic!("expected answer, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejection_codec_carries_code_and_detail() {
+        let reply =
+            ServeReply::Rejected(RejectReason::NonFinite { row: 3, col: 7 });
+        let payload = encode_reply(&reply);
+        match decode_reply(&payload).unwrap() {
+            WireOutcome::Rejected { reason, detail } => {
+                assert_eq!(reason, "non_finite");
+                assert!(detail.contains("row 3"), "{detail}");
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        match decode_reply(&encode_rejection("rate_limited", "route 'm'")).unwrap() {
+            WireOutcome::Rejected { reason, .. } => assert_eq!(reason, "rate_limited"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_error_codec() {
+        let payload = encode_wire_error("oversized", "got 9999");
+        let (code, detail) = decode_wire_error(&payload);
+        assert_eq!(code, "oversized");
+        assert_eq!(detail, "got 9999");
+        assert_eq!(decode_wire_error(b"garbage").0, "");
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_not_panics() {
+        for bad in [
+            &b"not json at all"[..],
+            b"{\"route\":\"m\"}",
+            b"{\"kind\":\"row\",\"route\":\"m\",\"rows\":[[1],[2]]}",
+            b"{\"kind\":\"warp\",\"route\":\"m\",\"rows\":[[1]]}",
+            b"{\"kind\":\"row\",\"route\":\"m\",\"rows\":[[oops]]}",
+            b"\xff\xfe",
+        ] {
+            let err = decode_request(bad).unwrap_err();
+            assert!(matches!(err, WireFault::Malformed(_)), "{err:?}");
+        }
+    }
+
+    #[test]
+    fn wire_stats_json_has_every_counter() {
+        let stats = WireStats {
+            connections: 1,
+            accepted: 2,
+            rejected_limit: 3,
+            rejected_route: 4,
+            timed_out: 5,
+            malformed: 6,
+            oversized: 7,
+            bytes_in: 8,
+            bytes_out: 9,
+        };
+        let json = stats.to_json();
+        for cell in [
+            "\"connections\": 1",
+            "\"accepted\": 2",
+            "\"rejected_limit\": 3",
+            "\"rejected_route\": 4",
+            "\"timed_out\": 5",
+            "\"malformed\": 6",
+            "\"oversized\": 7",
+            "\"bytes_in\": 8",
+            "\"bytes_out\": 9",
+        ] {
+            assert!(json.contains(cell), "{json}");
+        }
+    }
+
+    #[test]
+    fn fault_display_and_error_mapping() {
+        let e: AviError = WireFault::Oversized { got: 10, max: 5 }.into();
+        assert!(e.to_string().contains("frame too large"), "{e}");
+        assert!(WireFault::Version { got: 3 }.to_string().contains("version 3"));
+        assert!(WireFault::Eof.to_string().contains("closed"));
+    }
+}

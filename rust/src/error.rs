@@ -42,6 +42,15 @@ pub enum AviError {
     /// any fit touches the data — a store that opens is trustworthy.
     Storage(String),
 
+    /// Network front-door failure: bind/connect errors, malformed or
+    /// oversized wire frames, protocol-version mismatches, connection
+    /// timeouts.  Always a typed reply or a closed socket — never a
+    /// panic, never a hung peer.
+    Net(String),
+
+    /// A per-route token bucket turned the request away; retry later.
+    RateLimited(String),
+
     /// IO.
     Io(std::io::Error),
 }
@@ -60,6 +69,8 @@ impl fmt::Display for AviError {
             AviError::Coordinator(m) => write!(f, "coordinator error: {m}"),
             AviError::Registry(m) => write!(f, "registry error: {m}"),
             AviError::Storage(m) => write!(f, "storage error: {m}"),
+            AviError::Net(m) => write!(f, "network error: {m}"),
+            AviError::RateLimited(m) => write!(f, "rate limited: {m}"),
             AviError::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -96,6 +107,14 @@ mod tests {
         );
         let io: AviError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("io error"));
+        assert_eq!(
+            AviError::Net("frame too large".into()).to_string(),
+            "network error: frame too large"
+        );
+        assert_eq!(
+            AviError::RateLimited("route 'm'".into()).to_string(),
+            "rate limited: route 'm'"
+        );
         assert_eq!(
             AviError::Storage("seg_0.bin checksum mismatch".into()).to_string(),
             "storage error: seg_0.bin checksum mismatch"

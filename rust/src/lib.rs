@@ -39,9 +39,11 @@
 //! * **Pipeline & serving** — [`pipeline`] (Algorithm 2: per-class fits
 //!   → (FT) transform → ℓ1 SVM, mixed-method grid search, Table-3
 //!   reporting) and the [`coordinator`] serving control plane
-//!   (**registry → router → service → backend**: versioned
-//!   [`coordinator::ModelRegistry`], weighted-A/B + shadow
-//!   [`coordinator::ModelRouter`], batched
+//!   (**front door → registry → router → service → backend**: the
+//!   std-only TCP [`coordinator::FrontDoor`] speaking the framed
+//!   [`coordinator::wire`] protocol with rate limits, deadlines, and
+//!   typed error frames; versioned [`coordinator::ModelRegistry`],
+//!   weighted-A/B + shadow [`coordinator::ModelRouter`], batched
 //!   [`coordinator::TransformService`] speaking the typed
 //!   `ServeRequest`/`ServeReply` protocol, all built through one
 //!   [`coordinator::ServeConfig`]) are estimator-agnostic: they hold

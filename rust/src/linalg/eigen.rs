@@ -95,7 +95,7 @@ pub fn sym_eig(a: &Matrix, max_sweeps: usize) -> Result<SymEig> {
     // extract + sort ascending
     let mut idx: Vec<usize> = (0..n).collect();
     let diag: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
-    idx.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    idx.sort_by(|&i, &j| diag[i].total_cmp(&diag[j]));
     let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
     let mut vectors = Matrix::zeros(n, n);
     for (new_j, &old_j) in idx.iter().enumerate() {

@@ -13,7 +13,8 @@
 //!                                         #   ingest | inspect | stats | split | list
 //! avi-scale fit      [opts]               # fit one OAVI/ABM/VCA model per class
 //! avi-scale pipeline [opts]               # full Algorithm-2 train/test run
-//! avi-scale serve    [opts]               # batched transform service demo
+//! avi-scale serve    [opts]               # batched transform service demo,
+//!                                         #   or a TCP front door via --listen
 //! avi-scale bound    [opts]               # Theorem 4.3 bound vs empirical
 //! ```
 //!
@@ -29,8 +30,9 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use avi_scale::backend::{ComputeBackend, NativeBackend, StoreMode};
+use avi_scale::coordinator::frontdoor::{FrontDoor, FrontDoorConfig, RateLimit};
 use avi_scale::coordinator::pool::ThreadPool;
-use avi_scale::coordinator::registry::{parse_spec, ModelRegistry};
+use avi_scale::coordinator::registry::{namespaced, parse_spec, ModelRegistry};
 use avi_scale::coordinator::router::ModelRouter;
 use avi_scale::coordinator::service::{
     latency_percentiles, ServeConfig, ServeRequest, DEFAULT_QUEUE_CAPACITY,
@@ -121,11 +123,14 @@ COMMANDS:
               (--save <path> persists the trained pipeline as JSON)
   predict     load a saved pipeline (--model <path>) and evaluate it on a
               dataset's test split
-  serve       serving control plane demo: registry → router → service.
-              Without --model it trains one pipeline from --dataset and
-              serves it as default@v1; with --model it loads saved
-              pipelines into the registry and routes traffic across them.
-              Prints latency/throughput plus the RouterReport JSON.
+  serve       serving control plane: front door → registry → router →
+              service.  Without --model it trains one pipeline from
+              --dataset and serves it as default@v1; with --model it
+              loads saved pipelines into the registry and routes traffic
+              across them.  By default it drives an in-process demo and
+              prints latency/throughput plus the RouterReport JSON;
+              --listen <addr> binds the framed TCP wire protocol instead
+              and serves until a Shutdown frame arrives.
   bound       Theorem 4.3 bound vs empirical |G|+|O|
 
 OPTIONS:
@@ -186,6 +191,31 @@ SERVE OPTIONS:
                          synchronously (default: fits the demo traffic,
                          max(requests, 1024))
   --deadline-ms <n>      per-request queue deadline (default none)
+  --listen <addr>        serve over TCP instead of the in-process demo:
+                         bind the framed wire protocol (AVIW frames,
+                         JSON payloads — docs/wire-protocol.md) on
+                         <addr> (port 0 picks an ephemeral port, printed
+                         as `listening = ip:port`), then block until a
+                         Shutdown frame arrives; prints wire counters
+                         plus the RouterReport JSON on exit.  Network
+                         scores are bitwise identical to in-process
+                         serving.
+  --tenant <name>        prefix every registry key as `name/key`
+                         (per-tenant namespacing; clients route to the
+                         prefixed key)
+  --rate-limit <r>       per-route token bucket: r tokens/sec (0 = never
+                         refill — whatever --burst grants is all a route
+                         ever gets); over-limit requests get a typed
+                         `rate_limited` rejection (default: unlimited)
+  --burst <b>            token-bucket burst capacity (default max(r, 1))
+  --read-timeout-ms <n>  per-connection read deadline; a silent peer is
+                         reaped, never waited on forever (default 5000)
+  --write-timeout-ms <n> per-connection write deadline (default 5000)
+  --max-frame-kb <n>     frame payload cap; larger frames are rejected
+                         from the header alone with a typed `oversized`
+                         error (default 1024)
+  --max-conns <n>        handler-thread cap; connections beyond it get a
+                         typed `busy` error frame (default 256)
 ";
 
 fn parse_opts(args: &[String]) -> Option<HashMap<String, String>> {
@@ -600,7 +630,11 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         _pool = Some(pool);
     }
 
-    // registry: saved pipelines via --model, else train from the dataset
+    // registry: saved pipelines via --model, else train from the dataset.
+    // --tenant prefixes every key (`tenant/key`): multi-tenancy is a
+    // naming convention over plain registry keys, not a parallel lookup
+    // path — see `registry::namespaced`.
+    let tenant = opts.get("tenant").map(|s| s.as_str()).unwrap_or("");
     let mut registry = ModelRegistry::new();
     if let Some(specs) = opts.get("model") {
         for spec in specs.split(',') {
@@ -610,6 +644,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
                 ))
             })?;
             let (key, version) = parse_spec(kv)?;
+            let key = namespaced(tenant, &key);
             registry.load_path(&key, &version, std::path::Path::new(path))?;
             println!("loaded      = {key}@{version} from {path}");
         }
@@ -630,7 +665,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         } else {
             Arc::new(avi_scale::pipeline::train_pipeline(&cfg, &split.train)?)
         };
-        registry.insert("default", "v1", model);
+        registry.insert(namespaced(tenant, "default"), "v1", model);
     }
 
     // router: the --ab key gets its weighted split, every other key its
@@ -663,6 +698,57 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         let model = registry.resolve(&key, &version)?;
         router.set_shadow(&key, &version, model, serve_cfg.clone())?;
         println!("shadow      = {key}:{version}");
+    }
+
+    // --listen: hand the configured router to the network front door and
+    // block until a client sends a Shutdown frame (or the process is
+    // killed).  The demo traffic loop below is the in-process
+    // alternative; the two paths serve bitwise-identical scores.
+    if let Some(addr) = opts.get("listen") {
+        let rate_limit = opts
+            .get("rate-limit")
+            .map(|rate| {
+                let per_sec: f64 = rate.parse().map_err(|_| {
+                    avi_scale::AviError::Config(format!("--rate-limit '{rate}': not a number"))
+                })?;
+                Ok(RateLimit { per_sec, burst: opt_f64(opts, "burst", per_sec.max(1.0)) })
+            })
+            .transpose()?;
+        let fd_cfg = FrontDoorConfig {
+            addr: addr.clone(),
+            read_timeout: std::time::Duration::from_millis(opt_u64(
+                opts,
+                "read-timeout-ms",
+                5_000,
+            )),
+            write_timeout: std::time::Duration::from_millis(opt_u64(
+                opts,
+                "write-timeout-ms",
+                5_000,
+            )),
+            max_frame_bytes: opt_usize(opts, "max-frame-kb", 1024) << 10,
+            rate_limit,
+            max_connections: opt_usize(opts, "max-conns", 256),
+        };
+        let fd = FrontDoor::start(Arc::new(router), fd_cfg)?;
+        // the e2e harness reads this line to learn the ephemeral port;
+        // piped stdout is block-buffered, so flush explicitly
+        println!("listening = {}", fd.local_addr());
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        fd.wait_shutdown();
+        let report = fd.shutdown();
+        let wire = report.wire.unwrap_or_default();
+        println!("wire.connections    = {}", wire.connections);
+        println!("wire.accepted       = {}", wire.accepted);
+        println!("wire.rejected_limit = {}", wire.rejected_limit);
+        println!("wire.rejected_route = {}", wire.rejected_route);
+        println!("wire.timed_out      = {}", wire.timed_out);
+        println!("wire.malformed      = {}", wire.malformed);
+        println!("wire.oversized      = {}", wire.oversized);
+        println!("wire.bytes          = {} in / {} out", wire.bytes_in, wire.bytes_out);
+        println!("{}", report.to_json());
+        return Ok(());
     }
 
     // drive traffic from the dataset's test split

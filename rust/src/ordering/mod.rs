@@ -78,8 +78,11 @@ pub fn pearson_permutation(x: &Matrix, reverse: bool) -> Vec<usize> {
         }
     }
     let mut perm: Vec<usize> = (0..n).collect();
+    // total_cmp: bitwise identical to partial_cmp on the finite sums this
+    // produces, and still a total order if a pathological input sneaks a
+    // NaN through — ordering must never panic a fit
     perm.sort_by(|&a, &b| {
-        let ord = p[a].partial_cmp(&p[b]).unwrap();
+        let ord = p[a].total_cmp(&p[b]);
         let ord = if reverse { ord.reverse() } else { ord };
         ord.then(a.cmp(&b))
     });

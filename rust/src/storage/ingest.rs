@@ -221,7 +221,12 @@ impl SegmentSink {
         if self.pending_rows == 0 {
             return Ok(());
         }
-        let n = self.n_fields.expect("rows before flush");
+        // pending_rows > 0 implies push_row ran, which sets n_fields —
+        // but storage never panics on its own invariants: surface a
+        // typed error instead
+        let n = self.n_fields.ok_or_else(|| {
+            AviError::Storage("ingest: flush with rows pending but no field count".into())
+        })?;
         let rows = self.pending_rows;
         self.colmaj.clear();
         self.colmaj.resize(rows * n, 0.0);
@@ -251,15 +256,19 @@ impl SegmentSink {
     pub fn finish(mut self, name: &str) -> Result<DatasetManifest> {
         self.flush_group()?;
         if self.total_rows == 0 {
-            return Err(AviError::Data(format!("ingest '{name}': no rows")));
+            return Err(AviError::Storage(format!("ingest '{name}': no rows")));
         }
+        // total_rows > 0 implies n_fields is set; typed error, not a panic
+        let cols = self.n_fields.ok_or_else(|| {
+            AviError::Storage(format!("ingest '{name}': rows counted but no field count"))
+        })?;
         let mut uniq = self.labels.clone();
         uniq.sort_unstable();
         uniq.dedup();
         let manifest = DatasetManifest {
             name: name.to_string(),
             rows: self.total_rows,
-            cols: self.n_fields.unwrap(),
+            cols,
             labels_uniq: uniq,
             col_min: self.col_min,
             col_max: self.col_max,
@@ -296,7 +305,12 @@ pub fn ingest_csv(csv: &Path, out_dir: &Path, opts: &IngestOptions) -> Result<Da
         if got == 0 {
             break;
         }
-        let n = rdr.n_fields().expect("fields known after a non-empty group");
+        let n = rdr.n_fields().ok_or_else(|| {
+            AviError::Storage(format!(
+                "ingest '{}': non-empty group with unknown field count",
+                csv.display()
+            ))
+        })?;
         for r in 0..got {
             sink.push_row(&buf[r * n..(r + 1) * n])?;
         }
@@ -376,6 +390,38 @@ mod tests {
         std::fs::write(&csv, "just,a,header\n").unwrap();
         let err = ingest_csv(&csv, &dir.join("ds"), &IngestOptions::default()).unwrap_err();
         assert!(err.to_string().contains("no rows"), "{err}");
+        assert!(matches!(err, AviError::Storage(_)), "{err:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ingest_zero_row_inputs_are_typed_errors_not_panics() {
+        // header-only, fully empty, and whitespace-only sources all reach
+        // finish() with zero rows through slightly different paths — each
+        // must surface a typed Storage error, never an unwrap panic
+        let dir = std::env::temp_dir().join(format!("avi_ingest_zero_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, body) in [
+            ("header_only.csv", "x0,x1,label\n"),
+            ("empty.csv", ""),
+            ("blank_lines.csv", "\n\n   \n\n"),
+        ] {
+            let csv = dir.join(name);
+            std::fs::write(&csv, body).unwrap();
+            let err = ingest_csv(
+                &csv,
+                &dir.join(format!("ds_{name}")),
+                &IngestOptions::default(),
+            )
+            .unwrap_err();
+            assert!(matches!(err, AviError::Storage(_)), "{name}: {err:?}");
+            assert!(err.to_string().contains("no rows"), "{name}: {err}");
+        }
+        // a sink finished with no pushed rows takes the direct path
+        let sink = SegmentSink::create(&dir.join("ds_direct"), 4).unwrap();
+        let err = sink.finish("direct").unwrap_err();
+        assert!(matches!(err, AviError::Storage(_)), "{err:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

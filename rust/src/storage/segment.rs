@@ -110,6 +110,16 @@ impl Segment {
         &self.path
     }
 
+    /// Lock the file handle, recovering from a poisoned mutex.  The only
+    /// guarded state is a file cursor, and every operation re-seeks to an
+    /// absolute offset before touching it — a panic mid-operation on
+    /// another thread leaves nothing inconsistent to inherit, so
+    /// propagating the poison (and panicking every later reader) would
+    /// turn one crashed worker into a crashed store.
+    fn lock_file(&self) -> std::sync::MutexGuard<'_, File> {
+        self.file.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Read `count` f64s starting at `byte_off` into `out` (cleared
     /// first).  Short files surface as `UnexpectedEof`.
     pub fn read_f64s_at(
@@ -122,7 +132,7 @@ impl Segment {
         scratch.clear();
         scratch.resize(count * 8, 0);
         {
-            let mut f = self.file.lock().expect("segment lock poisoned");
+            let mut f = self.lock_file();
             f.seek(SeekFrom::Start(byte_off))?;
             f.read_exact(scratch)?;
         }
@@ -134,7 +144,7 @@ impl Segment {
     pub fn write_f64s_at(&self, byte_off: u64, vals: &[f64]) -> std::io::Result<()> {
         let mut bytes = Vec::new();
         f64s_to_le(vals, &mut bytes);
-        let mut f = self.file.lock().expect("segment lock poisoned");
+        let mut f = self.lock_file();
         f.seek(SeekFrom::Start(byte_off))?;
         f.write_all(&bytes)?;
         f.flush()
@@ -142,7 +152,7 @@ impl Segment {
 
     /// File length in bytes.
     pub fn len_bytes(&self) -> std::io::Result<u64> {
-        let f = self.file.lock().expect("segment lock poisoned");
+        let f = self.lock_file();
         Ok(f.metadata()?.len())
     }
 }
@@ -220,6 +230,29 @@ mod tests {
         f64s_to_le(&col1, &mut bytes);
         h.update(&bytes);
         assert_eq!(checksum_file(&path).unwrap(), h.finish());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_cascade() {
+        // a worker panicking while holding the segment lock poisons the
+        // mutex; later readers must recover (every op re-seeks, so there
+        // is no inconsistent state to fear) instead of panicking too
+        let path = tmp("poison.bin");
+        let seg = std::sync::Arc::new(Segment::create(&path).unwrap());
+        seg.write_f64s_at(0, &[1.0, 2.0, 3.0]).unwrap();
+        let seg2 = seg.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = seg2.file.lock().unwrap();
+            panic!("poison the segment lock");
+        })
+        .join();
+        assert!(seg.file.lock().is_err(), "lock should be poisoned");
+        let (mut scratch, mut out) = (Vec::new(), Vec::new());
+        seg.read_f64s_at(0, 3, &mut scratch, &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        seg.write_f64s_at(24, &[4.0]).unwrap();
+        assert_eq!(seg.len_bytes().unwrap(), 32);
         std::fs::remove_file(&path).ok();
     }
 

@@ -128,11 +128,12 @@ impl PolyKernelSvm {
         if self.n_classes == 2 {
             usize::from(d[0] >= 0.0)
         } else {
+            // total_cmp: NaN-safe argmax (see LinearSvm::label_from_decision)
             d.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
-                .unwrap()
+                .unwrap_or(0)
         }
     }
 

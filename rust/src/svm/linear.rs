@@ -82,16 +82,19 @@ impl LinearSvm {
 
     /// Label implied by a decision vector — the one argmax/threshold rule
     /// shared by the offline predict path and the serving protocol, so
-    /// scores and labels can never disagree.
+    /// scores and labels can never disagree.  `total_cmp` keeps the
+    /// argmax panic-free even if a NaN score slips through (the serving
+    /// path rejects non-finite rows before they reach this, but a served
+    /// worker must never be one comparison away from a crash).
     pub fn label_from_decision(&self, d: &[f64]) -> usize {
         if self.n_classes == 2 {
             usize::from(d[0] >= 0.0)
         } else {
             d.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
-                .unwrap()
+                .unwrap_or(0)
         }
     }
 

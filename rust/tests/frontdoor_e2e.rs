@@ -1,0 +1,225 @@
+//! Front-door end-to-end: spawn the built `avi-scale` binary with
+//! `serve --listen`, speak the framed wire protocol over a real TCP
+//! socket, and check every ISSUE-8 serving contract from outside the
+//! process:
+//!
+//! * network scores are **bitwise identical** to the in-process
+//!   [`TransformService`] on the same persisted model;
+//! * malformed, oversized, rate-limited, and NaN-bearing traffic gets
+//!   typed rejections — the server never panics and never hangs a peer;
+//! * `--tenant` namespacing isolates routes (the bare key 404s);
+//! * a silent peer is reaped by the read deadline;
+//! * a `Shutdown` frame drains the in-flight batch before the process
+//!   exits and prints its `RouterReport` with the wire counters.
+//!
+//! One server instance serves every scenario; the token budget is
+//! arranged so each outcome is deterministic (`--rate-limit 0` never
+//! refills, so `--burst 3` grants route `acme/m` exactly three
+//! admissions, and the later scenarios draw on route `acme/aux`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+use avi_scale::coordinator::service::{ServeConfig, ServeRequest, TransformService};
+use avi_scale::coordinator::wire::{self, FrameKind, WireClient, WireOutcome};
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::estimator::{persist, EstimatorConfig};
+use avi_scale::oavi::OaviConfig;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{train_pipeline, PipelineConfig};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+/// Kill the server on drop so a failed assertion can't leak a process
+/// that outlives the test run.
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// `"key": N` out of the report JSON (the counters are flat u64 cells).
+fn json_counter(text: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\": ");
+    let pos = text.find(&pat).unwrap_or_else(|| panic!("missing {pat} in:\n{text}"));
+    let rest = &text[pos + pat.len()..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or_else(|_| panic!("bad counter {key} in:\n{text}"))
+}
+
+#[test]
+fn front_door_end_to_end() {
+    // -- persist a model for the server to load --------------------------
+    let dir = std::env::temp_dir().join(format!("avi_frontdoor_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let train = synthetic_dataset(300, 71);
+    let cfg = PipelineConfig {
+        estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01)),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    let model = train_pipeline(&cfg, &train).unwrap();
+    let path = dir.join("model.json");
+    persist::save(&model, &path).unwrap();
+
+    // in-process reference on the same persisted bytes the server loads
+    let loaded = Arc::new(persist::load(&path).unwrap());
+    let svc = TransformService::start(loaded, ServeConfig::default());
+    let ds = synthetic_dataset(64, 72);
+    let rows: Vec<Vec<f64>> = (0..8).map(|i| ds.x.row(i).to_vec()).collect();
+    let reference = svc.submit(ServeRequest::batch(rows.clone())).answer().unwrap();
+
+    // -- spawn the server -----------------------------------------------
+    let spec = format!("m@v1={p},aux@v1={p}", p = path.display());
+    let child = Command::new(env!("CARGO_BIN_EXE_avi-scale"))
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--model",
+            &spec,
+            "--tenant",
+            "acme",
+            "--scale",
+            "0.001",
+            "--rate-limit",
+            "0",
+            "--burst",
+            "3",
+            "--read-timeout-ms",
+            "1000",
+            "--max-frame-kb",
+            "4",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn avi-scale serve --listen");
+    let mut child = KillOnDrop(child);
+    let mut stdout = BufReader::new(child.0.stdout.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        assert!(
+            stdout.read_line(&mut line).unwrap() > 0,
+            "server exited before printing its address"
+        );
+        if let Some(rest) = line.trim().strip_prefix("listening = ") {
+            break rest.to_string();
+        }
+    };
+
+    // -- happy path: bitwise identity over the wire ----------------------
+    let mut client = WireClient::connect(&addr).unwrap();
+    let answer = client
+        .request("acme/m", &ServeRequest::batch(rows.clone()))
+        .unwrap()
+        .answer()
+        .unwrap();
+    assert_eq!(answer.key, "acme/m");
+    assert_eq!(answer.version, "v1");
+    assert_eq!(answer.predictions.len(), reference.predictions.len());
+    for (a, b) in answer.predictions.iter().zip(&reference.predictions) {
+        assert_eq!(a.label, b.label);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.scores), bits(&b.scores), "network scores must be bit-identical");
+    }
+
+    // -- tenant isolation: the bare key is not a route -------------------
+    match client.request("m", &ServeRequest::row(ds.x.row(0).to_vec())).unwrap() {
+        WireOutcome::Rejected { reason, .. } => assert_eq!(reason, "unknown_route"),
+        other => panic!("bare key must 404 under --tenant, got {other:?}"),
+    }
+
+    // -- a NaN row is rejected at admission, never panics a worker -------
+    let mut poisoned = ds.x.row(1).to_vec();
+    poisoned[1] = f64::NAN;
+    match client.request("acme/m", &ServeRequest::row(poisoned)).unwrap() {
+        WireOutcome::Rejected { reason, detail } => {
+            assert_eq!(reason, "non_finite");
+            assert!(detail.contains("col 1"), "{detail}");
+        }
+        other => panic!("expected non_finite, got {other:?}"),
+    }
+
+    // -- deadline 0 expires deterministically ----------------------------
+    let req = ServeRequest::row(ds.x.row(2).to_vec()).with_deadline(Duration::ZERO);
+    match client.request("acme/m", &req).unwrap() {
+        WireOutcome::Rejected { reason, .. } => assert_eq!(reason, "deadline_expired"),
+        other => panic!("expected deadline_expired, got {other:?}"),
+    }
+
+    // -- token budget spent (3 admissions): rate limit turns us away -----
+    for _ in 0..2 {
+        match client.request("acme/m", &ServeRequest::row(ds.x.row(3).to_vec())).unwrap() {
+            WireOutcome::Rejected { reason, .. } => assert_eq!(reason, "rate_limited"),
+            other => panic!("expected rate_limited, got {other:?}"),
+        }
+    }
+    drop(client);
+
+    // -- raw garbage gets a typed malformed error, then a close ----------
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    raw.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    let frame = wire::read_frame(&mut raw, 1 << 16).unwrap();
+    assert_eq!(frame.kind, FrameKind::Error);
+    assert_eq!(wire::decode_wire_error(&frame.payload).0, "malformed");
+    let mut rest = Vec::new();
+    raw.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server must close after a malformed header");
+    drop(raw);
+
+    // -- oversized is rejected from the header alone ---------------------
+    let mut big = TcpStream::connect(&addr).unwrap();
+    big.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    wire::write_frame(&mut big, FrameKind::Request, &[b'x'; 8192]).unwrap();
+    let frame = wire::read_frame(&mut big, 1 << 16).unwrap();
+    assert_eq!(frame.kind, FrameKind::Error);
+    assert_eq!(wire::decode_wire_error(&frame.payload).0, "oversized");
+    drop(big);
+
+    // -- a silent peer is reaped by the read deadline, not waited on -----
+    let mut silent = TcpStream::connect(&addr).unwrap();
+    silent.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    silent.read_to_end(&mut buf).unwrap(); // returns when the server reaps us
+    assert!(buf.is_empty());
+    drop(silent);
+
+    // -- graceful shutdown drains the in-flight batch --------------------
+    let drain_rows: Vec<Vec<f64>> = (8..24).map(|i| ds.x.row(i).to_vec()).collect();
+    let mut a = WireClient::connect(&addr).unwrap();
+    // warm-up proves conn A's handler is live before the shutdown races it
+    assert!(a.request("acme/aux", &ServeRequest::row(ds.x.row(0).to_vec())).unwrap().answer().is_ok());
+    let n_drain = drain_rows.len();
+    let in_flight = std::thread::spawn(move || {
+        a.request("acme/aux", &ServeRequest::batch(drain_rows)).unwrap().answer()
+    });
+    std::thread::sleep(Duration::from_millis(10));
+    let b = WireClient::connect(&addr).unwrap();
+    b.shutdown_server().unwrap();
+    let drained = in_flight.join().unwrap().expect("in-flight batch must drain");
+    assert_eq!(drained.predictions.len(), n_drain);
+
+    // -- the process exits and reports every wire counter ----------------
+    let mut tail = String::new();
+    stdout.read_to_string(&mut tail).unwrap();
+    let status = child.0.wait().unwrap();
+    assert!(status.success(), "server exit: {status:?}\n{tail}");
+    assert!(tail.contains("\"wire\""), "report must embed wire stats:\n{tail}");
+    // happy batch + NaN + deadline (route m) + warm-up + drain (route aux)
+    assert_eq!(json_counter(&tail, "accepted"), 5, "{tail}");
+    assert_eq!(json_counter(&tail, "rejected_limit"), 2, "{tail}");
+    assert_eq!(json_counter(&tail, "rejected_route"), 1, "{tail}");
+    assert_eq!(json_counter(&tail, "oversized"), 1, "{tail}");
+    assert!(json_counter(&tail, "malformed") >= 1, "{tail}");
+    assert!(json_counter(&tail, "timed_out") >= 1, "{tail}");
+    assert!(json_counter(&tail, "bytes_in") > 0 && json_counter(&tail, "bytes_out") > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -30,7 +30,7 @@ CLIPPY_LOG=$(mktemp)
 cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
 # every rustc diagnostic carries a "--> path:line:col" span line; match
 # spans inside the strict modules regardless of header distance
-STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|src/storage/|src/data/csvio|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane|tests/storage_parity)'
+STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|src/storage/|src/data/csvio|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane|tests/storage_parity|tests/frontdoor_e2e)'
 if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
   echo "FAIL: clippy findings in strict modules:"
   grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
@@ -146,6 +146,44 @@ echo "-- serve --shards deprecation warning"
 SHARDS_WARN=$("$BIN" serve $SMOKE --requests 50 --shards 2 2>&1 >/dev/null)
 echo "$SHARDS_WARN" | grep -qi "deprecated" || {
   echo "FAIL: serve --shards must print a deprecation warning"
+  exit 1
+}
+
+echo "-- serve --listen: framed TCP front door + graceful shutdown (ISSUE 8 smoke)"
+LISTEN_OUT="$SMOKE_DIR/listen.out"
+"$BIN" serve $SMOKE --model "m@v1=$SMOKE_DIR/champ.json" \
+  --listen 127.0.0.1:0 --read-timeout-ms 5000 > "$LISTEN_OUT" &
+LISTEN_PID=$!
+LISTEN_ADDR=""
+for _ in $(seq 1 100); do
+  LISTEN_ADDR=$(sed -n 's/^listening = //p' "$LISTEN_OUT" | head -n1)
+  [[ -n "$LISTEN_ADDR" ]] && break
+  sleep 0.1
+done
+if [[ -z "$LISTEN_ADDR" ]]; then
+  echo "FAIL: serve --listen never printed its bound address"
+  kill "$LISTEN_PID" 2>/dev/null || true
+  exit 1
+fi
+# graceful shutdown from the shell: one 12-byte Shutdown frame (magic
+# AVIW, version 1, kind 4, reserved, zero payload length) over /dev/tcp
+LISTEN_PORT="${LISTEN_ADDR##*:}"
+exec 3<>"/dev/tcp/127.0.0.1/$LISTEN_PORT"
+printf 'AVIW\x01\x04\x00\x00\x00\x00\x00\x00' >&3
+exec 3<&- 3>&-
+if ! wait "$LISTEN_PID"; then
+  echo "FAIL: serve --listen exited non-zero after a Shutdown frame"
+  cat "$LISTEN_OUT"
+  exit 1
+fi
+grep -q '"wire"' "$LISTEN_OUT" || {
+  echo "FAIL: front-door RouterReport is missing the wire counter block"
+  cat "$LISTEN_OUT"
+  exit 1
+}
+grep -q '"connections": 1' "$LISTEN_OUT" || {
+  echo "FAIL: front-door wire counters did not record the shutdown connection"
+  cat "$LISTEN_OUT"
   exit 1
 }
 
