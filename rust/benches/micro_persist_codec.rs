@@ -1,0 +1,121 @@
+//! Micro: the persistence envelope's two codecs head to head (ISSUE 9
+//! satellite) — JSON (`{:e}` shortest-round-trip floats) vs the binary
+//! AVIB artifact codec (raw little-endian f64 bits) — at three trained
+//! pipeline sizes.
+//!
+//! Both directions are bitwise-gated before any timing: the binary
+//! round trip must reproduce the JSON-loaded model's transform bits, so
+//! a perf or size reading can never come from divergent contents.  The
+//! acceptance bar asserted here is the ISSUE 9 one: the binary artifact
+//! is strictly smaller than the JSON envelope at every size.
+//!
+//! Cells land in `target/bench_results/BENCH_persist_codec.json`
+//! (`{size}_{json|bin}_{encode|decode}_ns`, `{size}_{json|bin}_bytes`,
+//! `{size}_bin_over_json`) for `scripts/bench_gate.sh` to diff across
+//! commits.
+
+use avi_scale::artifact;
+use avi_scale::bench::{BenchJson, Bencher};
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::estimator::{persist, EstimatorConfig};
+use avi_scale::oavi::OaviConfig;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::{train_pipeline, PipelineConfig, PipelineModel};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+fn trained(m: usize, psi: f64, seed: u64) -> PipelineModel {
+    let ds = synthetic_dataset(m, seed);
+    let cfg = PipelineConfig {
+        estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(psi)),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    train_pipeline(&cfg, &ds).expect("bench pipeline trains")
+}
+
+fn main() {
+    let bencher = Bencher::new(2, 9);
+    println!("== micro_persist_codec: JSON envelope vs binary AVIB artifact ==");
+    let mut json = BenchJson::new("persist_codec");
+    println!(
+        "{:>8} | {:>12} {:>12} {:>8} | {:>12} {:>12} | {:>12} {:>12}",
+        "size",
+        "json_bytes",
+        "bin_bytes",
+        "ratio",
+        "json_enc_ns",
+        "bin_enc_ns",
+        "json_dec_ns",
+        "bin_dec_ns"
+    );
+    // three model sizes: sample count and vanishing tolerance together
+    // drive |G|+|O| and therefore the float payload the codecs carry
+    for (tag, m, psi) in [
+        ("small", 200usize, 0.05),
+        ("medium", 600, 0.01),
+        ("large", 1500, 0.005),
+    ] {
+        let model = trained(m, psi, 9 + m as u64);
+        let json_bytes = persist::pipeline_to_json(&model).into_bytes();
+        let bin_bytes = artifact::encode_pipeline(&model).expect("binary encode");
+
+        // bitwise gate: the two codecs must describe the same model
+        let from_json = persist::pipeline_from_bytes(&json_bytes).unwrap();
+        let from_bin = artifact::decode_pipeline(&bin_bytes).unwrap();
+        let ds = synthetic_dataset(64, 77 + m as u64);
+        let backend = avi_scale::backend::NativeBackend;
+        let (la, sa) = from_json.predict_scores_with_backend(&ds.x, &backend);
+        let (lb, sb) = from_bin.predict_scores_with_backend(&ds.x, &backend);
+        assert_eq!(la, lb, "codec round trips disagree on labels at size {tag}");
+        for (ra, rb) in sa.iter().zip(&sb) {
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(ra), bits(rb), "score bits diverge at size {tag}");
+        }
+
+        // ISSUE 9 acceptance bar: binary strictly smaller than JSON
+        assert!(
+            bin_bytes.len() < json_bytes.len(),
+            "binary artifact ({} B) must be smaller than JSON ({} B) at size {tag}",
+            bin_bytes.len(),
+            json_bytes.len()
+        );
+
+        let t_json_enc = bencher.run(&format!("{tag}_json_encode"), || {
+            std::hint::black_box(persist::pipeline_to_json(&model));
+        });
+        let t_bin_enc = bencher.run(&format!("{tag}_bin_encode"), || {
+            std::hint::black_box(artifact::encode_pipeline(&model).unwrap());
+        });
+        let t_json_dec = bencher.run(&format!("{tag}_json_decode"), || {
+            std::hint::black_box(persist::pipeline_from_bytes(&json_bytes).unwrap());
+        });
+        let t_bin_dec = bencher.run(&format!("{tag}_bin_decode"), || {
+            std::hint::black_box(artifact::decode_pipeline(&bin_bytes).unwrap());
+        });
+
+        json.ns(&format!("{tag}_json_encode"), t_json_enc.median_s);
+        json.ns(&format!("{tag}_bin_encode"), t_bin_enc.median_s);
+        json.ns(&format!("{tag}_json_decode"), t_json_dec.median_s);
+        json.ns(&format!("{tag}_bin_decode"), t_bin_dec.median_s);
+        json.int(&format!("{tag}_json_bytes"), json_bytes.len() as u64);
+        json.int(&format!("{tag}_bin_bytes"), bin_bytes.len() as u64);
+        json.num(
+            &format!("{tag}_bin_over_json"),
+            bin_bytes.len() as f64 / json_bytes.len() as f64,
+        );
+        println!(
+            "{:>8} | {:>12} {:>12} {:>7.2}x | {:>12.0} {:>12.0} | {:>12.0} {:>12.0}",
+            tag,
+            json_bytes.len(),
+            bin_bytes.len(),
+            json_bytes.len() as f64 / bin_bytes.len() as f64,
+            t_json_enc.median_s * 1e9,
+            t_bin_enc.median_s * 1e9,
+            t_json_dec.median_s * 1e9,
+            t_bin_dec.median_s * 1e9,
+        );
+    }
+    if let Err(e) = json.write() {
+        eprintln!("(bench json write failed: {e})");
+    }
+}

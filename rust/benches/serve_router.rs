@@ -29,9 +29,9 @@ fn main() {
         Arc::new(train_pipeline(&cfg, &ds).unwrap())
     };
     let mut registry = ModelRegistry::new();
-    registry.insert("m", "v1", train("cgavi-ihb", 0.01));
-    registry.insert("m", "v2", train("bpcgavi-wihb", 0.01));
-    registry.insert("m", "cand", train("abm", 0.01));
+    registry.insert("m", "v1", train("cgavi-ihb", 0.01)).unwrap();
+    registry.insert("m", "v2", train("bpcgavi-wihb", 0.01)).unwrap();
+    registry.insert("m", "cand", train("abm", 0.01)).unwrap();
 
     // the bench enqueues the whole request set before waiting, so size
     // the admission queue to hold it (the default 1024 bound would

@@ -1,0 +1,767 @@
+//! The **binary model codec**: a hand-rolled, versioned, length-prefixed
+//! encoding of the persistence envelope in [`crate::estimator::persist`]
+//! — same payloads, same version gate, a fraction of the bytes.
+//!
+//! ## Container layout
+//!
+//! Every artifact starts with a fixed 8-byte header:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "AVIB"
+//! 4       1     codec version (currently 1)
+//! 5       1     format (1 model, 2 pipeline) — selects the body codec
+//! 6       2     reserved (zero)
+//! ```
+//!
+//! The body is a flat sequence of primitive cells, postcard-style:
+//!
+//! * integers — `u32` little-endian (indices, counts, tags);
+//! * floats — raw little-endian `f64` bit patterns (the same
+//!   [`crate::storage::segment::f64s_to_le`] convention as shard
+//!   segments), so every float round-trips **bitwise**, NaN included;
+//! * strings — `u32` byte length + UTF-8 bytes;
+//! * arrays — `u32` element count + the elements;
+//! * nested envelopes (a pipeline's per-class models) — `u32` byte
+//!   length + a complete model artifact, decodable standalone.
+//!
+//! ## Adversarial inputs
+//!
+//! Every declared length and count is validated against the bytes
+//! actually remaining *before* any allocation — the same discipline as
+//! [`crate::coordinator::wire::read_frame`] — so a truncated buffer, a
+//! flipped header byte, or a length field claiming `u32::MAX` elements
+//! is a typed [`AviError::Artifact`], never a panic and never a
+//! memory-exhaustion vector.  Structural indices (recipe parents, DAG
+//! node ids) re-run the same range validation the JSON path performs, so
+//! both codecs accept exactly the same payloads.
+
+use crate::baselines::vca::{VcaModel, VcaNode};
+use crate::error::{AviError, Result};
+use crate::estimator::persist;
+use crate::estimator::{FittedGeneratorSet, FittedModel, FittedVca};
+use crate::pipeline::{FittedTransformer, PipelineModel};
+use crate::poly::eval::{Recipe, TermSet};
+use crate::poly::poly::{Generator, GeneratorSet};
+use crate::svm::linear::{LinearSvm, LinearSvmConfig};
+
+/// Artifact magic: every binary envelope starts with these four bytes
+/// (the JSON envelope starts with `{`, so one byte tells them apart).
+pub const MAGIC: [u8; 4] = *b"AVIB";
+
+/// Current binary codec version; any other is rejected loudly.
+pub const CODEC_VERSION: u8 = 1;
+
+/// Header `format` byte: a single fitted model (mirror of
+/// [`persist::FORMAT_MODEL`]).
+pub const FORMAT_MODEL: u8 = 1;
+
+/// Header `format` byte: a whole fitted pipeline (mirror of
+/// [`persist::FORMAT_PIPELINE`]).
+pub const FORMAT_PIPELINE: u8 = 2;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 8;
+
+/// Payload kind tag: monomial-aware generator set.
+const KIND_GENERATOR_SET: u8 = 1;
+/// Payload kind tag: VCA polynomial op-DAG.
+const KIND_VCA_DAG: u8 = 2;
+
+/// Sentinel `(parent, var)` pair encoding the constant-1 recipe (the
+/// JSON path writes `[-1,-1]`).
+const RECIPE_ONE: u32 = u32::MAX;
+
+/// Does `bytes` start like a binary artifact?  (The version gate: JSON
+/// and binary payloads are interchangeable wherever this is consulted.)
+pub fn is_binary(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && bytes[..4] == MAGIC
+}
+
+fn err(m: impl Into<String>) -> AviError {
+    AviError::Artifact(m.into())
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn with_header(format: u8) -> Writer {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(CODEC_VERSION);
+        buf.push(format);
+        buf.extend_from_slice(&[0, 0]);
+        Writer { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn idx(&mut self, v: usize) -> Result<()> {
+        let v = u32::try_from(v)
+            .map_err(|_| err(format!("index {v} exceeds the u32 wire range")))?;
+        self.u32(v);
+        Ok(())
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) -> Result<()> {
+        self.idx(s.len())?;
+        self.buf.extend_from_slice(s.as_bytes());
+        Ok(())
+    }
+
+    fn f64s(&mut self, vals: &[f64]) -> Result<()> {
+        self.idx(vals.len())?;
+        for &v in vals {
+            self.f64(v);
+        }
+        Ok(())
+    }
+
+    fn block(&mut self, bytes: &[u8]) -> Result<()> {
+        self.idx(bytes.len())?;
+        self.buf.extend_from_slice(bytes);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader (every length validated before allocation)
+// ---------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(err(format!(
+                "truncated artifact: {what} wants {n} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        let b = self.take(8, what)?;
+        let mut arr = [0u8; 8];
+        arr.copy_from_slice(b);
+        Ok(f64::from_le_bytes(arr))
+    }
+
+    /// A declared element count, validated against the bytes remaining
+    /// (`elem_bytes` per element) **before** the caller allocates.
+    fn count(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u32(what)? as usize;
+        let need = n
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| err(format!("{what}: count {n} overflows")))?;
+        if need > self.remaining() {
+            return Err(err(format!(
+                "oversized declared length: {what} claims {n} elements \
+                 ({need} bytes), {} remain",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.count(1, what)?;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| err(format!("{what} is not UTF-8")))
+    }
+
+    fn f64s(&mut self, what: &str) -> Result<Vec<f64>> {
+        let n = self.count(8, what)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64(what)?);
+        }
+        Ok(out)
+    }
+
+    fn block(&mut self, what: &str) -> Result<&'a [u8]> {
+        let n = self.count(1, what)?;
+        self.take(n, what)
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(err(format!(
+                "{what}: {} trailing bytes after the envelope",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn check_header(r: &mut Reader<'_>, expected_format: u8) -> Result<()> {
+    let magic = r.take(4, "artifact magic")?;
+    if magic != MAGIC {
+        return Err(err(format!("bad artifact magic {magic:02x?} (want {MAGIC:02x?})")));
+    }
+    let version = r.u8("codec version")?;
+    if version != CODEC_VERSION {
+        return Err(err(format!(
+            "unsupported artifact codec version {version} (supported: {CODEC_VERSION})"
+        )));
+    }
+    let format = r.u8("format byte")?;
+    if format != expected_format {
+        return Err(err(format!(
+            "artifact format {format}, expected {expected_format} \
+             (1 model, 2 pipeline)"
+        )));
+    }
+    r.take(2, "reserved header bytes")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Payload codecs
+// ---------------------------------------------------------------------
+
+fn encode_generator_set(w: &mut Writer, gs: &GeneratorSet) -> Result<()> {
+    w.idx(gs.o_terms.n_vars())?;
+    w.idx(gs.o_terms.len())?;
+    for i in 0..gs.o_terms.len() {
+        match gs.o_terms.recipe(i) {
+            Recipe::One => {
+                w.u32(RECIPE_ONE);
+                w.u32(RECIPE_ONE);
+            }
+            Recipe::Product { parent, var } => {
+                w.idx(parent)?;
+                w.idx(var)?;
+            }
+        }
+    }
+    w.idx(gs.generators.len())?;
+    for g in &gs.generators {
+        w.idx(g.leading_parent)?;
+        w.idx(g.leading_var)?;
+        w.f64(g.mse);
+        w.f64s(&g.coeffs)?;
+    }
+    Ok(())
+}
+
+fn decode_generator_set(r: &mut Reader<'_>) -> Result<GeneratorSet> {
+    let n_vars = r.u32("n_vars")? as usize;
+    let n_terms = r.count(8, "o_recipes")?;
+    let mut o = TermSet::with_one(n_vars);
+    for i in 0..n_terms {
+        let parent = r.u32("recipe parent")?;
+        let var = r.u32("recipe var")?;
+        match (parent, var) {
+            (RECIPE_ONE, RECIPE_ONE) => {
+                if i != 0 {
+                    return Err(err("One recipe not first"));
+                }
+            }
+            _ if i == 0 => return Err(err("first recipe must be the One term")),
+            (p, v) => {
+                if v as usize >= n_vars {
+                    return Err(err(format!("recipe var {v} out of range (n_vars {n_vars})")));
+                }
+                o.push_product(p as usize, v as usize)
+                    .map_err(|e| err(format!("bad recipe: {e}")))?;
+            }
+        }
+    }
+    let n_gens = r.count(24, "generators")?;
+    let mut generators = Vec::with_capacity(n_gens);
+    for _ in 0..n_gens {
+        let parent = r.u32("generator parent")? as usize;
+        let var = r.u32("generator var")? as usize;
+        let mse = r.f64("generator mse")?;
+        let coeffs = r.f64s("generator coeffs")?;
+        if parent >= o.len() || var >= n_vars {
+            return Err(err("leading recipe out of range"));
+        }
+        let leading = o.terms()[parent].times_var(var);
+        generators.push(Generator {
+            coeffs,
+            leading,
+            leading_parent: parent,
+            leading_var: var,
+            mse,
+        });
+    }
+    Ok(GeneratorSet { o_terms: o, generators })
+}
+
+fn encode_vca(w: &mut Writer, model: &VcaModel) -> Result<()> {
+    w.idx(model.n_vars())?;
+    w.idx(model.nodes().len())?;
+    for node in model.nodes() {
+        match node {
+            VcaNode::One => w.u8(0),
+            VcaNode::Feature(j) => {
+                w.u8(1);
+                w.idx(*j)?;
+            }
+            VcaNode::Product(a, b) => {
+                w.u8(2);
+                w.idx(*a)?;
+                w.idx(*b)?;
+            }
+            VcaNode::LinComb(terms) => {
+                w.u8(3);
+                w.idx(terms.len())?;
+                for (weight, id) in terms {
+                    w.f64(*weight);
+                    w.idx(*id)?;
+                }
+            }
+        }
+    }
+    w.idx(model.degrees().len())?;
+    for &d in model.degrees() {
+        w.u32(d);
+    }
+    w.idx(model.vanishing.len())?;
+    for &v in &model.vanishing {
+        w.idx(v)?;
+    }
+    w.idx(model.f_sets.len())?;
+    for f in &model.f_sets {
+        w.idx(f.len())?;
+        for &id in f {
+            w.idx(id)?;
+        }
+    }
+    Ok(())
+}
+
+fn decode_vca(r: &mut Reader<'_>) -> Result<VcaModel> {
+    let n_vars = r.u32("n_vars")? as usize;
+    let n_nodes = r.count(1, "nodes")?;
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let node = match r.u8("node tag")? {
+            0 => VcaNode::One,
+            1 => VcaNode::Feature(r.u32("feature index")? as usize),
+            2 => {
+                let a = r.u32("product lhs")? as usize;
+                let b = r.u32("product rhs")? as usize;
+                VcaNode::Product(a, b)
+            }
+            3 => {
+                let n_terms = r.count(12, "lincomb terms")?;
+                let mut terms = Vec::with_capacity(n_terms);
+                for _ in 0..n_terms {
+                    let weight = r.f64("lincomb weight")?;
+                    let id = r.u32("lincomb id")? as usize;
+                    terms.push((weight, id));
+                }
+                VcaNode::LinComb(terms)
+            }
+            other => return Err(err(format!("unknown VCA node tag {other}"))),
+        };
+        nodes.push(node);
+    }
+    let n_degrees = r.count(4, "degrees")?;
+    let mut degrees = Vec::with_capacity(n_degrees);
+    for _ in 0..n_degrees {
+        degrees.push(r.u32("degree")?);
+    }
+    let n_van = r.count(4, "vanishing")?;
+    let mut vanishing = Vec::with_capacity(n_van);
+    for _ in 0..n_van {
+        vanishing.push(r.u32("vanishing id")? as usize);
+    }
+    let n_f = r.count(4, "f_sets")?;
+    let mut f_sets = Vec::with_capacity(n_f);
+    for _ in 0..n_f {
+        let n_ids = r.count(4, "f_set ids")?;
+        let mut ids = Vec::with_capacity(n_ids);
+        for _ in 0..n_ids {
+            ids.push(r.u32("f_set id")? as usize);
+        }
+        f_sets.push(ids);
+    }
+    // from_parts re-validates the DAG (forward references, feature
+    // bounds) exactly like the JSON path, so corrupt payloads fail the
+    // load instead of mutating the model
+    VcaModel::from_parts(nodes, vanishing, f_sets, degrees, n_vars)
+        .map_err(|e| err(format!("VCA DAG rejected: {e}")))
+}
+
+// ---------------------------------------------------------------------
+// Model envelope
+// ---------------------------------------------------------------------
+
+/// Encode one fitted model as a binary artifact (payload-compatible with
+/// [`persist::model_to_json`]).
+pub fn encode_model(model: &dyn FittedModel) -> Result<Vec<u8>> {
+    let mut w = Writer::with_header(FORMAT_MODEL);
+    w.str(model.report().name())?;
+    if let Some(gs) = model.as_any().downcast_ref::<FittedGeneratorSet>() {
+        w.u8(KIND_GENERATOR_SET);
+        encode_generator_set(&mut w, &gs.set)?;
+    } else if let Some(vca) = model.as_any().downcast_ref::<FittedVca>() {
+        w.u8(KIND_VCA_DAG);
+        encode_vca(&mut w, &vca.model)?;
+    } else {
+        return Err(err(format!(
+            "estimator '{}' (kind '{}') has no binary payload codec",
+            model.report().name(),
+            model.payload_kind()
+        )));
+    }
+    Ok(w.buf)
+}
+
+/// Decode a binary model artifact back into a fitted model — the exact
+/// structures [`persist::model_from_json`] produces.
+pub fn decode_model(bytes: &[u8]) -> Result<Box<dyn FittedModel>> {
+    let mut r = Reader::new(bytes);
+    check_header(&mut r, FORMAT_MODEL)?;
+    let model = decode_model_body(&mut r)?;
+    r.done("model artifact")?;
+    Ok(model)
+}
+
+fn decode_model_body(r: &mut Reader<'_>) -> Result<Box<dyn FittedModel>> {
+    let estimator = r.str("estimator name")?;
+    match r.u8("payload kind")? {
+        KIND_GENERATOR_SET => {
+            let set = decode_generator_set(r)?;
+            let report =
+                persist::loaded_report(&estimator, set.generators.len(), set.o_terms.len());
+            Ok(Box::new(FittedGeneratorSet { set, report }))
+        }
+        KIND_VCA_DAG => {
+            let model = decode_vca(r)?;
+            let n_f: usize = model.f_sets.iter().map(|f| f.len()).sum();
+            let report = persist::loaded_report(&estimator, model.n_generators(), n_f);
+            Ok(Box::new(FittedVca { model, report }))
+        }
+        other => Err(err(format!(
+            "unknown payload kind {other} (known: {KIND_GENERATOR_SET} generator-set, \
+             {KIND_VCA_DAG} vca-dag)"
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pipeline envelope
+// ---------------------------------------------------------------------
+
+/// Encode a whole fitted pipeline as a binary artifact
+/// (payload-compatible with [`persist::pipeline_to_json`]).
+pub fn encode_pipeline(model: &PipelineModel) -> Result<Vec<u8>> {
+    let mut w = Writer::with_header(FORMAT_PIPELINE);
+    w.str(&model.transformer.method_name)?;
+    w.idx(model.perm.len())?;
+    for &p in &model.perm {
+        w.idx(p)?;
+    }
+    w.idx(model.n_classes)?;
+    w.idx(model.transformer.per_class.len())?;
+    for cm in &model.transformer.per_class {
+        let nested = encode_model(cm.as_ref())?;
+        w.block(&nested)?;
+    }
+    w.f64(model.svm.config.lambda);
+    w.idx(model.svm.weights.len())?;
+    for (weights, bias) in &model.svm.weights {
+        w.f64(*bias);
+        w.f64s(weights)?;
+    }
+    Ok(w.buf)
+}
+
+/// Decode a binary pipeline artifact — the exact structures
+/// [`persist::pipeline_from_json`] produces.
+pub fn decode_pipeline(bytes: &[u8]) -> Result<PipelineModel> {
+    let mut r = Reader::new(bytes);
+    check_header(&mut r, FORMAT_PIPELINE)?;
+    let method_name = r.str("method name")?;
+    let n_perm = r.count(4, "perm")?;
+    let mut perm = Vec::with_capacity(n_perm);
+    for _ in 0..n_perm {
+        perm.push(r.u32("perm entry")? as usize);
+    }
+    let n_classes = r.u32("n_classes")? as usize;
+    let n_models = r.count(4, "classes")?;
+    let mut per_class: Vec<Box<dyn FittedModel>> = Vec::with_capacity(n_models);
+    for _ in 0..n_models {
+        let nested = r.block("class model envelope")?;
+        let mut nr = Reader::new(nested);
+        check_header(&mut nr, FORMAT_MODEL)?;
+        let model = decode_model_body(&mut nr)?;
+        nr.done("class model envelope")?;
+        per_class.push(model);
+    }
+    if per_class.len() != n_classes {
+        return Err(err(format!(
+            "{} classes decoded, expected {n_classes}",
+            per_class.len()
+        )));
+    }
+    let lambda = r.f64("svm lambda")?;
+    let n_heads = r.count(12, "svm heads")?;
+    let mut weights = Vec::with_capacity(n_heads);
+    for _ in 0..n_heads {
+        let bias = r.f64("head bias")?;
+        let w = r.f64s("head weights")?;
+        weights.push((w, bias));
+    }
+    if weights.is_empty() {
+        return Err(err("no svm heads"));
+    }
+    r.done("pipeline artifact")?;
+    let svm = LinearSvm {
+        weights,
+        n_classes,
+        config: LinearSvmConfig { lambda, ..Default::default() },
+        iters: vec![],
+    };
+    Ok(PipelineModel {
+        perm,
+        transformer: FittedTransformer { method_name, per_class },
+        svm,
+        n_classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::estimator::EstimatorConfig;
+    use crate::linalg::dense::Matrix;
+    use crate::oavi::OaviConfig;
+    use crate::ordering::FeatureOrdering;
+    use crate::pipeline::{train_pipeline, PipelineConfig};
+    use crate::svm::linear::LinearSvmConfig;
+    use crate::util::rng::Rng;
+
+    fn parabola(m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(m, 2);
+        for i in 0..m {
+            let t = rng.uniform();
+            x.set(i, 0, t);
+            x.set(i, 1, t * t);
+        }
+        x
+    }
+
+    fn pipeline(psi: f64, seed: u64) -> PipelineModel {
+        let ds = synthetic_dataset(200, seed);
+        let cfg = PipelineConfig {
+            estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(psi)),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        train_pipeline(&cfg, &ds).unwrap()
+    }
+
+    fn bits(m: &Matrix) -> Vec<u64> {
+        m.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn model_artifact_roundtrips_every_estimator_bitwise() {
+        let x = parabola(120, 5);
+        let z = parabola(40, 6);
+        for cfg in EstimatorConfig::battery(0.001) {
+            let model = cfg.fit(&x, &NativeBackend).unwrap();
+            let bin = encode_model(model.as_ref()).unwrap();
+            assert!(is_binary(&bin));
+            let back = decode_model(&bin).unwrap_or_else(|e| panic!("{}: {e}", cfg.name()));
+            assert_eq!(back.report().name(), model.report().name());
+            assert_eq!(back.n_generators(), model.n_generators());
+            assert_eq!(back.total_size(), model.total_size());
+            let a = model.transform_with(&z, &NativeBackend);
+            let b = back.transform_with(&z, &NativeBackend);
+            assert_eq!(bits(&a), bits(&b), "{}: transform not bitwise equal", cfg.name());
+            // and the binary form beats the JSON form on size
+            let json = persist::model_to_json(model.as_ref());
+            assert!(
+                bin.len() < json.len(),
+                "{}: binary {}B >= JSON {}B",
+                cfg.name(),
+                bin.len(),
+                json.len()
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_artifact_roundtrips_bitwise_and_is_smaller_than_json() {
+        let model = pipeline(0.01, 9);
+        let bin = encode_pipeline(&model).unwrap();
+        let back = decode_pipeline(&bin).unwrap();
+        assert_eq!(back.n_classes, model.n_classes);
+        assert_eq!(back.perm, model.perm);
+        assert_eq!(back.transformer.method_name, model.transformer.method_name);
+        assert_eq!(
+            back.svm.config.lambda.to_bits(),
+            model.svm.config.lambda.to_bits()
+        );
+        for ((wa, ba), (wb, bb)) in model.svm.weights.iter().zip(&back.svm.weights) {
+            assert_eq!(ba.to_bits(), bb.to_bits());
+            for (a, b) in wa.iter().zip(wb) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let ds = synthetic_dataset(32, 10);
+        let (la, sa) = model.predict_scores_with_backend(&ds.x, &NativeBackend);
+        let (lb, sb) = back.predict_scores_with_backend(&ds.x, &NativeBackend);
+        assert_eq!(la, lb);
+        for (ra, rb) in sa.iter().zip(&sb) {
+            for (a, b) in ra.iter().zip(rb) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let json = persist::pipeline_to_json(&model);
+        assert!(
+            bin.len() < json.len(),
+            "binary {}B >= JSON {}B",
+            bin.len(),
+            json.len()
+        );
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_a_typed_error_never_a_panic() {
+        let model = pipeline(0.05, 11);
+        let bin = encode_pipeline(&model).unwrap();
+        for cut in (0..bin.len()).step_by(7) {
+            let e = decode_pipeline(&bin[..cut]).unwrap_err();
+            assert!(matches!(e, AviError::Artifact(_)), "cut {cut}: {e}");
+        }
+        // and one byte short of complete
+        let e = decode_pipeline(&bin[..bin.len() - 1]).unwrap_err();
+        assert!(matches!(e, AviError::Artifact(_)), "{e}");
+    }
+
+    #[test]
+    fn flipped_bytes_never_panic() {
+        let model = pipeline(0.05, 12);
+        let bin = encode_pipeline(&model).unwrap();
+        // structural corruption must surface as a typed error or decode
+        // to different-but-valid floats (the checksum layer catches
+        // those); it must never panic or hang
+        for pos in 0..bin.len().min(512) {
+            let mut bad = bin.clone();
+            bad[pos] ^= 0xA5;
+            let _ = decode_pipeline(&bad);
+        }
+        // header flips specifically are typed rejections
+        for pos in 0..HEADER_LEN - 2 {
+            let mut bad = bin.clone();
+            bad[pos] ^= 0xFF;
+            let e = decode_pipeline(&bad).unwrap_err();
+            assert!(matches!(e, AviError::Artifact(_)), "pos {pos}: {e}");
+        }
+    }
+
+    #[test]
+    fn oversized_declared_lengths_reject_before_allocating() {
+        // a pipeline header followed by a string length claiming u32::MAX
+        // with 4 bytes behind it must fail on the count check, not OOM
+        let mut bad = vec![];
+        bad.extend_from_slice(&MAGIC);
+        bad.push(CODEC_VERSION);
+        bad.push(FORMAT_PIPELINE);
+        bad.extend_from_slice(&[0, 0]);
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        bad.extend_from_slice(b"abcd");
+        let e = decode_pipeline(&bad).unwrap_err();
+        assert!(matches!(e, AviError::Artifact(_)), "{e}");
+        assert!(e.to_string().contains("oversized"), "{e}");
+        // same for a model envelope's coefficient blob
+        let mut bad = vec![];
+        bad.extend_from_slice(&MAGIC);
+        bad.push(CODEC_VERSION);
+        bad.push(FORMAT_MODEL);
+        bad.extend_from_slice(&[0, 0]);
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(b"gg");
+        bad.push(KIND_GENERATOR_SET);
+        bad.extend_from_slice(&2u32.to_le_bytes()); // n_vars
+        bad.extend_from_slice(&0x0FFF_FFFFu32.to_le_bytes()); // recipe count
+        let e = decode_model(&bad).unwrap_err();
+        assert!(matches!(e, AviError::Artifact(_)), "{e}");
+    }
+
+    #[test]
+    fn wrong_format_version_and_kind_are_typed() {
+        let model = pipeline(0.05, 13);
+        let bin = encode_pipeline(&model).unwrap();
+        // a pipeline artifact is not a model artifact (and vice versa)
+        let e = decode_model(&bin).unwrap_err();
+        assert!(e.to_string().contains("format"), "{e}");
+        let cm = encode_model(model.transformer.per_class[0].as_ref()).unwrap();
+        let e = decode_pipeline(&cm).unwrap_err();
+        assert!(e.to_string().contains("format"), "{e}");
+        // future codec version
+        let mut v9 = bin.clone();
+        v9[4] = 9;
+        let e = decode_pipeline(&v9).unwrap_err();
+        assert!(e.to_string().contains("version 9"), "{e}");
+        // unknown payload kind inside a model envelope
+        let mut badkind = cm.clone();
+        // kind byte sits right after the header and the name string
+        let name_len =
+            u32::from_le_bytes([cm[8], cm[9], cm[10], cm[11]]) as usize;
+        badkind[HEADER_LEN + 4 + name_len] = 77;
+        let e = decode_model(&badkind).unwrap_err();
+        assert!(e.to_string().contains("payload kind"), "{e}");
+        // trailing garbage is rejected
+        let mut long = bin.clone();
+        long.extend_from_slice(b"xx");
+        let e = decode_pipeline(&long).unwrap_err();
+        assert!(e.to_string().contains("trailing"), "{e}");
+        // empty and magic-less buffers
+        assert!(decode_pipeline(b"").is_err());
+        assert!(decode_pipeline(b"{\"format\": \"avi-scale-pipeline\"}").is_err());
+        assert!(!is_binary(b"{}"));
+    }
+}

@@ -1,0 +1,41 @@
+//! **Model artifacts**: the layer between persistence and serving.
+//!
+//! A fitted model leaves [`crate::estimator::persist`] as an *envelope*
+//! — historically JSON, now alternatively the compact binary codec in
+//! [`codec`] (same version gate, bitwise-identical floats, a fraction of
+//! the bytes).  This module gives those envelopes a durable, verifiable
+//! home and a name:
+//!
+//! * [`codec`] — the hand-rolled `AVIB` binary format: versioned,
+//!   length-prefixed, no serde, every length validated before any
+//!   allocation.  Interchangeable with the JSON envelope through
+//!   [`crate::estimator::persist::pipeline_from_bytes`], which sniffs
+//!   the magic and routes to the right decoder.
+//! * [`store`] — [`ArtifactStore`]: a directory of artifacts indexed by
+//!   `key@version`, each entry signed with its byte length and an
+//!   FNV-1a-64 checksum in a manifest.  Corruption is a typed
+//!   [`crate::error::AviError::Artifact`] at open/get time, never a
+//!   silently wrong model.
+//!
+//! The serving control plane builds on both: `PushModel` /` PullModel` /
+//! `ActivateModel` wire frames (see [`crate::coordinator::wire`]) move
+//! artifacts into and out of a live server's store, and activation
+//! decodes + hot-swaps through [`crate::coordinator::router`] without a
+//! restart.
+
+pub mod codec;
+pub mod store;
+
+pub use codec::{decode_model, decode_pipeline, encode_model, encode_pipeline};
+pub use store::{fnv64, parse_hex64, ArtifactEntry, ArtifactStore};
+
+use crate::pipeline::PipelineModel;
+
+/// Deterministic fingerprint of a pipeline's *contents* (not its
+/// encoding): the FNV-1a-64 of the canonical JSON envelope.  Two models
+/// fingerprint equal iff their payloads are identical, whichever codec
+/// carried them — the registry uses this to refuse re-registering a
+/// `key@version` with different bytes.
+pub fn model_fingerprint(model: &PipelineModel) -> u64 {
+    fnv64(crate::estimator::persist::pipeline_to_json(model).as_bytes())
+}

@@ -1,0 +1,434 @@
+//! Checksummed **artifact store**: a directory of binary (or JSON)
+//! model artifacts plus a signed-length manifest, so a corrupt or
+//! truncated artifact is refused with a typed [`AviError::Artifact`]
+//! before it can ever route traffic.
+//!
+//! ## Directory layout
+//!
+//! ```text
+//! <root>/
+//!   manifest.json          index: key@version → file, byte length, FNV-1a-64
+//!   a<fnv64(key@version)>.avib   one file per artifact, opaque bytes
+//! ```
+//!
+//! The manifest records, per artifact, the **exact byte length** and the
+//! FNV-1a-64 checksum of the file — the same digest
+//! [`crate::storage::segment::checksum_file`] uses for shard segments.
+//! [`ArtifactStore::open`] re-verifies every entry (existence, length,
+//! digest) and [`ArtifactStore::get`] re-verifies the one entry it
+//! returns, so a flipped byte, a truncated write, or a hand-edited
+//! manifest surfaces as `AviError::Artifact`, never as a wrong model.
+//!
+//! Writes are crash-safe the same way segment/manifest writes are
+//! elsewhere in the crate: bytes land in a `*.tmp` sibling first and are
+//! `rename`d into place, and the manifest is rewritten last.
+//!
+//! The store is deliberately dumb about *semantics*: it will happily
+//! overwrite `key@version` with different bytes.  Conflict refusal is
+//! the registry's job ([`crate::coordinator::registry::ModelRegistry`]
+//! checks fingerprints before the store is touched).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::error::{AviError, Result};
+use crate::estimator::persist::{extract_array, extract_f64, extract_str, split_objects};
+use crate::storage::segment::{checksum_file, Fnv64};
+use crate::util::json_escape;
+
+/// Manifest self-description; anything else is refused.
+const MANIFEST_FORMAT: &str = "avi-scale-artifacts";
+/// Manifest schema version.
+const MANIFEST_VERSION: u64 = 1;
+/// Manifest file name inside the store root.
+const MANIFEST_FILE: &str = "manifest.json";
+
+/// FNV-1a-64 of `bytes` — the digest recorded in manifests and declared
+/// in `PushModel` headers.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// One manifest row.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Registry key (tenant-namespaced where applicable).
+    pub key: String,
+    /// Version label.
+    pub version: String,
+    /// File name inside the store root.
+    pub file: String,
+    /// Exact byte length — enforced, not advisory.
+    pub bytes: u64,
+    /// FNV-1a-64 of the file contents.
+    pub checksum: u64,
+}
+
+/// A verified directory of model artifacts.  See the module docs for
+/// the layout and the verification contract.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    root: PathBuf,
+    entries: BTreeMap<(String, String), ArtifactEntry>,
+}
+
+fn err(m: impl Into<String>) -> AviError {
+    AviError::Artifact(m.into())
+}
+
+fn file_name(key: &str, version: &str) -> String {
+    format!("a{:016x}.avib", fnv64(format!("{key}@{version}").as_bytes()))
+}
+
+impl ArtifactStore {
+    /// Open (creating if absent) the store at `root`, verifying every
+    /// manifest entry: the file must exist, match its recorded length,
+    /// and match its recorded checksum.
+    pub fn open(root: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        let manifest = root.join(MANIFEST_FILE);
+        let mut store = ArtifactStore { root, entries: BTreeMap::new() };
+        if !manifest.exists() {
+            return Ok(store);
+        }
+        let text = fs::read_to_string(&manifest)?;
+        let format = extract_str(&text, "\"format\":")
+            .map_err(|_| err("artifact manifest missing format header"))?;
+        if format != MANIFEST_FORMAT {
+            return Err(err(format!(
+                "artifact manifest format '{format}', expected '{MANIFEST_FORMAT}'"
+            )));
+        }
+        let version = extract_f64(&text, "\"version\":")
+            .map_err(|_| err("artifact manifest missing version"))? as u64;
+        if version != MANIFEST_VERSION {
+            return Err(err(format!(
+                "unsupported artifact manifest version {version} \
+                 (supported: {MANIFEST_VERSION})"
+            )));
+        }
+        let body = extract_array(&text, "\"artifacts\":")
+            .map_err(|_| err("artifact manifest missing artifacts array"))?;
+        for obj in split_objects(&body) {
+            let entry = ArtifactEntry {
+                key: extract_str(obj, "\"key\":")
+                    .map_err(|e| err(format!("manifest entry: {e}")))?,
+                version: extract_str(obj, "\"version\":")
+                    .map_err(|e| err(format!("manifest entry: {e}")))?,
+                file: extract_str(obj, "\"file\":")
+                    .map_err(|e| err(format!("manifest entry: {e}")))?,
+                bytes: extract_f64(obj, "\"bytes\":")
+                    .map_err(|e| err(format!("manifest entry: {e}")))?
+                    as u64,
+                checksum: parse_hex64(
+                    &extract_str(obj, "\"checksum\":")
+                        .map_err(|e| err(format!("manifest entry: {e}")))?,
+                )?,
+            };
+            store.verify_entry(&entry)?;
+            store
+                .entries
+                .insert((entry.key.clone(), entry.version.clone()), entry);
+        }
+        Ok(store)
+    }
+
+    /// Store root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Is `key@version` present?
+    pub fn contains(&self, key: &str, version: &str) -> bool {
+        self.entries
+            .contains_key(&(key.to_string(), version.to_string()))
+    }
+
+    /// All entries, sorted by `(key, version)`.
+    pub fn list(&self) -> Vec<&ArtifactEntry> {
+        self.entries.values().collect()
+    }
+
+    /// The recorded checksum of `key@version`, if present.
+    pub fn checksum(&self, key: &str, version: &str) -> Option<u64> {
+        self.entries
+            .get(&(key.to_string(), version.to_string()))
+            .map(|e| e.checksum)
+    }
+
+    /// Write `artifact` as `key@version`: tmp-file + rename, re-read
+    /// checksum verification (catching torn writes), manifest rewrite.
+    /// Overwrites an existing entry — semantic conflicts are gated
+    /// upstream by the registry.
+    pub fn put(&mut self, key: &str, version: &str, artifact: &[u8]) -> Result<()> {
+        let digest = fnv64(artifact);
+        let file = file_name(key, version);
+        let path = self.root.join(&file);
+        let tmp = self.root.join(format!("{file}.tmp"));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(artifact)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        let on_disk = checksum_file(&path)?;
+        if on_disk != digest {
+            return Err(err(format!(
+                "torn write: {file} digest {on_disk:016x} != {digest:016x} just written"
+            )));
+        }
+        self.entries.insert(
+            (key.to_string(), version.to_string()),
+            ArtifactEntry {
+                key: key.to_string(),
+                version: version.to_string(),
+                file,
+                bytes: artifact.len() as u64,
+                checksum: digest,
+            },
+        );
+        self.write_manifest()
+    }
+
+    /// Read back `key@version`, re-verifying length and checksum before
+    /// a single byte is handed to a decoder.
+    pub fn get(&self, key: &str, version: &str) -> Result<Vec<u8>> {
+        let entry = self
+            .entries
+            .get(&(key.to_string(), version.to_string()))
+            .ok_or_else(|| err(format!("unknown artifact {key}@{version}")))?;
+        self.verify_entry(entry)?;
+        let bytes = fs::read(self.root.join(&entry.file))?;
+        // verify_entry checked the file; check the bytes we actually read
+        if bytes.len() as u64 != entry.bytes || fnv64(&bytes) != entry.checksum {
+            return Err(err(format!(
+                "artifact {key}@{version} changed between verify and read"
+            )));
+        }
+        Ok(bytes)
+    }
+
+    /// Latest version label for `key` (lexicographically greatest,
+    /// matching registry rollback ordering), if any exist.
+    pub fn latest_version(&self, key: &str) -> Option<String> {
+        self.entries
+            .values()
+            .filter(|e| e.key == key)
+            .map(|e| e.version.clone())
+            .max()
+    }
+
+    /// Drop `key@version` from disk and manifest.  Unknown entries are
+    /// a no-op so eviction sweeps are idempotent.
+    pub fn remove(&mut self, key: &str, version: &str) -> Result<()> {
+        if let Some(entry) = self
+            .entries
+            .remove(&(key.to_string(), version.to_string()))
+        {
+            let path = self.root.join(&entry.file);
+            if path.exists() {
+                fs::remove_file(&path)?;
+            }
+            self.write_manifest()?;
+        }
+        Ok(())
+    }
+
+    fn verify_entry(&self, entry: &ArtifactEntry) -> Result<()> {
+        let path = self.root.join(&entry.file);
+        let meta = fs::metadata(&path).map_err(|_| {
+            err(format!(
+                "manifest names missing artifact file '{}' ({}@{})",
+                entry.file, entry.key, entry.version
+            ))
+        })?;
+        if meta.len() != entry.bytes {
+            return Err(err(format!(
+                "truncated artifact '{}': {} bytes on disk, manifest signs {}",
+                entry.file,
+                meta.len(),
+                entry.bytes
+            )));
+        }
+        let digest = checksum_file(&path)?;
+        if digest != entry.checksum {
+            return Err(err(format!(
+                "artifact '{}' checksum mismatch: {digest:016x} on disk, \
+                 manifest signs {:016x}",
+                entry.file, entry.checksum
+            )));
+        }
+        Ok(())
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"format\": \"{MANIFEST_FORMAT}\",\n"));
+        out.push_str(&format!("  \"version\": {MANIFEST_VERSION},\n"));
+        out.push_str("  \"artifacts\": [\n");
+        let rows: Vec<String> = self
+            .entries
+            .values()
+            .map(|e| {
+                format!(
+                    "    {{\"key\": \"{}\", \"version\": \"{}\", \"file\": \"{}\", \
+                     \"bytes\": {}, \"checksum\": \"{:016x}\"}}",
+                    json_escape(&e.key),
+                    json_escape(&e.version),
+                    json_escape(&e.file),
+                    e.bytes,
+                    e.checksum
+                )
+            })
+            .collect();
+        out.push_str(&rows.join(",\n"));
+        out.push_str("\n  ]\n}\n");
+        let tmp = self.root.join(format!("{MANIFEST_FILE}.tmp"));
+        fs::write(&tmp, &out)?;
+        fs::rename(&tmp, self.root.join(MANIFEST_FILE))?;
+        Ok(())
+    }
+}
+
+/// Parse a 64-bit checksum written as lowercase hex (manifests and wire
+/// headers carry digests as strings — u64 exceeds the integer range a
+/// JSON `f64` number can hold exactly).
+pub fn parse_hex64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s.trim(), 16)
+        .map_err(|_| err(format!("bad checksum literal '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs::OpenOptions;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "avi_artifact_store_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_reopen() {
+        let dir = tmpdir("roundtrip");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        let blob = vec![7u8; 1000];
+        store.put("acme/m", "v1", &blob).unwrap();
+        store.put("acme/m", "v2", b"hello").unwrap();
+        assert_eq!(store.get("acme/m", "v1").unwrap(), blob);
+        assert_eq!(store.latest_version("acme/m").as_deref(), Some("v2"));
+        assert!(store.contains("acme/m", "v2"));
+        assert!(!store.contains("acme/m", "v9"));
+        // a fresh open re-verifies and sees both entries
+        let reopened = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(reopened.list().len(), 2);
+        assert_eq!(reopened.get("acme/m", "v2").unwrap(), b"hello");
+        assert_eq!(
+            reopened.checksum("acme/m", "v1"),
+            Some(fnv64(&blob))
+        );
+        let e = reopened.get("acme/m", "v9").unwrap_err();
+        assert!(matches!(e, AviError::Artifact(_)), "{e}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flipped_byte_is_refused_on_open_and_on_get() {
+        let dir = tmpdir("flip");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        store.put("m", "v1", &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        let file = dir.join(&store.list()[0].file.clone());
+        let mut bytes = fs::read(&file).unwrap();
+        bytes[3] ^= 0xFF;
+        fs::write(&file, &bytes).unwrap();
+        // the open-handle still knows the old checksum: get refuses
+        let e = store.get("m", "v1").unwrap_err();
+        assert!(e.to_string().contains("checksum mismatch"), "{e}");
+        // and a fresh open refuses outright
+        let e = ArtifactStore::open(&dir).unwrap_err();
+        assert!(matches!(e, AviError::Artifact(_)), "{e}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncation_and_missing_file_are_typed() {
+        let dir = tmpdir("trunc");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        store.put("m", "v1", &[9u8; 64]).unwrap();
+        store.put("m", "v2", &[8u8; 64]).unwrap();
+        let file = dir.join(store.list()[0].file.clone());
+        OpenOptions::new()
+            .write(true)
+            .open(&file)
+            .unwrap()
+            .set_len(10)
+            .unwrap();
+        let e = ArtifactStore::open(&dir).unwrap_err();
+        assert!(e.to_string().contains("truncated artifact"), "{e}");
+        fs::remove_file(&file).unwrap();
+        let e = ArtifactStore::open(&dir).unwrap_err();
+        assert!(e.to_string().contains("missing artifact file"), "{e}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_tampering_is_typed() {
+        let dir = tmpdir("tamper");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        store.put("m", "v1", b"payload-bytes").unwrap();
+        let manifest = dir.join(MANIFEST_FILE);
+        // lie about the checksum
+        let text = fs::read_to_string(&manifest).unwrap();
+        let idx = text.find("\"checksum\": \"").unwrap() + "\"checksum\": \"".len();
+        let mut bad = text.clone();
+        bad.replace_range(idx..idx + 1, if &text[idx..idx + 1] == "0" { "1" } else { "0" });
+        fs::write(&manifest, &bad).unwrap();
+        let e = ArtifactStore::open(&dir).unwrap_err();
+        assert!(e.to_string().contains("checksum mismatch"), "{e}");
+        // unparseable manifest
+        fs::write(&manifest, "not json at all").unwrap();
+        let e = ArtifactStore::open(&dir).unwrap_err();
+        assert!(matches!(e, AviError::Artifact(_)), "{e}");
+        // wrong format header
+        fs::write(
+            &manifest,
+            "{\"format\": \"something-else\", \"version\": 1, \"artifacts\": []}",
+        )
+        .unwrap();
+        let e = ArtifactStore::open(&dir).unwrap_err();
+        assert!(e.to_string().contains("format"), "{e}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn remove_is_idempotent_and_overwrite_is_allowed() {
+        let dir = tmpdir("remove");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        store.put("m", "v1", b"first").unwrap();
+        store.put("m", "v1", b"second").unwrap(); // overwrite: store is not the conflict gate
+        assert_eq!(store.get("m", "v1").unwrap(), b"second");
+        store.remove("m", "v1").unwrap();
+        store.remove("m", "v1").unwrap(); // idempotent
+        assert!(store.list().is_empty());
+        assert!(ArtifactStore::open(&dir).unwrap().list().is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hex_checksums_roundtrip() {
+        assert_eq!(parse_hex64("00000000000000ff").unwrap(), 255);
+        assert_eq!(parse_hex64(&format!("{:016x}", u64::MAX)).unwrap(), u64::MAX);
+        assert!(parse_hex64("zz").is_err());
+        assert!(parse_hex64("").is_err());
+    }
+}

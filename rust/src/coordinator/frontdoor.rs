@@ -21,6 +21,15 @@
 //!   [`FrontDoor::shutdown`]) stops the accept loop, joins every
 //!   handler, and lets in-flight requests drain through the router's
 //!   existing drain path before the final report is cut.
+//! * **Model control plane** — when started with a [`ModelControl`],
+//!   the server also speaks `PushModel` / `PullModel` / `ActivateModel`
+//!   frames: a pushed artifact is checksum-verified, decoded, conflict-
+//!   checked, and landed in the checksummed
+//!   [`crate::artifact::ArtifactStore`]; activation hot-swaps the route
+//!   atomically through [`ModelRouter::register`] — all without a
+//!   restart, all rate-limited per tenant-namespaced key under separate
+//!   `model-control/<key>` buckets so control traffic cannot starve (or
+//!   be starved by) the data plane.
 //!
 //! Every failure mode ends in a typed frame or a closed socket — the
 //! front door never panics a worker and never leaves a peer hanging.
@@ -32,11 +41,15 @@ use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::artifact::{self, ArtifactStore};
+use crate::coordinator::registry::{self, ModelRegistry};
 use crate::coordinator::router::ModelRouter;
+use crate::coordinator::service::ServeConfig;
 use crate::coordinator::wire::{
     self, FrameKind, WireFault, WireStats, DEFAULT_MAX_FRAME_BYTES,
 };
 use crate::error::{AviError, Result};
+use crate::estimator::persist;
 
 // ---------------------------------------------------------------------
 // Rate limiting
@@ -107,6 +120,9 @@ struct WireMetrics {
     oversized: AtomicU64,
     bytes_in: AtomicU64,
     bytes_out: AtomicU64,
+    model_pushes: AtomicU64,
+    model_pulls: AtomicU64,
+    model_activations: AtomicU64,
 }
 
 impl WireMetrics {
@@ -121,7 +137,69 @@ impl WireMetrics {
             oversized: self.oversized.load(Ordering::Relaxed),
             bytes_in: self.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            model_pushes: self.model_pushes.load(Ordering::Relaxed),
+            model_pulls: self.model_pulls.load(Ordering::Relaxed),
+            model_activations: self.model_activations.load(Ordering::Relaxed),
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model control plane
+// ---------------------------------------------------------------------
+
+/// Versions retained per key unless overridden: the active/latest pair
+/// plus a couple of rollback candidates.
+pub const DEFAULT_MAX_RETAINED: usize = 4;
+
+/// State behind the `PushModel` / `PullModel` / `ActivateModel` frames:
+/// the registry of decodable models, the durable artifact store, and
+/// the [`ServeConfig`] used to build hot-swapped services.  Without one
+/// of these, control frames get a typed `push_disabled` rejection.
+#[derive(Debug)]
+pub struct ModelControl {
+    registry: Mutex<ModelRegistry>,
+    store: Mutex<ArtifactStore>,
+    serve_cfg: ServeConfig,
+    tenant: String,
+    max_retained: usize,
+}
+
+impl ModelControl {
+    /// Wrap a registry (usually the one the router was built from) and
+    /// an opened store.
+    pub fn new(registry: ModelRegistry, store: ArtifactStore, serve_cfg: ServeConfig) -> Self {
+        ModelControl {
+            registry: Mutex::new(registry),
+            store: Mutex::new(store),
+            serve_cfg,
+            tenant: String::new(),
+            max_retained: DEFAULT_MAX_RETAINED,
+        }
+    }
+
+    /// Namespace every pushed/pulled/activated key under `tenant`
+    /// (mirrors how `serve --tenant` namespaces `--model` keys).
+    pub fn with_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
+        self
+    }
+
+    /// Bound the versions retained per key (clamped to ≥ 1; the latest
+    /// and every live route are always pinned regardless).
+    pub fn with_max_retained(mut self, n: usize) -> Self {
+        self.max_retained = n.max(1);
+        self
+    }
+
+    /// Registered versions of the tenant-namespaced `key` (test and
+    /// report surface).
+    pub fn versions(&self, key: &str) -> Vec<String> {
+        let key = registry::namespaced(&self.tenant, key);
+        self.registry
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .versions(&key)
     }
 }
 
@@ -145,6 +223,9 @@ pub struct FrontDoorConfig {
     pub rate_limit: Option<RateLimit>,
     /// Handler-thread cap; connections beyond it get a `busy` error.
     pub max_connections: usize,
+    /// Model control plane; `None` rejects push/pull/activate frames
+    /// with a typed `push_disabled` error.
+    pub model_control: Option<Arc<ModelControl>>,
 }
 
 impl Default for FrontDoorConfig {
@@ -156,6 +237,7 @@ impl Default for FrontDoorConfig {
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             rate_limit: None,
             max_connections: 256,
+            model_control: None,
         }
     }
 }
@@ -174,6 +256,7 @@ struct Shared {
     read_timeout: Duration,
     write_timeout: Duration,
     max_frame_bytes: usize,
+    model_control: Option<Arc<ModelControl>>,
 }
 
 /// A running front door.  Dropping it without [`FrontDoor::shutdown`]
@@ -202,6 +285,7 @@ impl FrontDoor {
             read_timeout: cfg.read_timeout,
             write_timeout: cfg.write_timeout,
             max_frame_bytes: cfg.max_frame_bytes,
+            model_control: cfg.model_control,
         });
         let accept_shared = shared.clone();
         let max_connections = cfg.max_connections.max(1);
@@ -390,6 +474,31 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
                     break;
                 }
             }
+            FrameKind::PushModel | FrameKind::PullModel | FrameKind::ActivateModel => {
+                // same contract as Request: a bad payload inside a
+                // well-framed control frame keeps the stream in sync
+                let result = match frame.kind {
+                    FrameKind::PushModel => control_push(shared, &frame.payload),
+                    FrameKind::PullModel => control_pull(shared, &frame.payload),
+                    _ => control_activate(shared, &frame.payload),
+                };
+                match result {
+                    Ok(payload) => {
+                        if !send(&mut stream, shared, FrameKind::Reply, &payload) {
+                            break;
+                        }
+                    }
+                    Err(fault) => {
+                        shared.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                        let payload =
+                            wire::encode_wire_error("malformed", &fault.to_string());
+                        if !send(&mut stream, shared, FrameKind::Error, &payload) {
+                            break;
+                        }
+                        continue;
+                    }
+                }
+            }
             FrameKind::Shutdown => {
                 shared.stop.store(true, Ordering::SeqCst);
                 signal_shutdown(shared);
@@ -437,12 +546,277 @@ fn answer_request(
     }
 }
 
+// ---------------------------------------------------------------------
+// Control-plane handlers
+// ---------------------------------------------------------------------
+
+/// `Ok(..)` is the reply payload (a control ack or a typed rejection
+/// the peer can act on); `Err(..)` means the payload itself could not
+/// be decoded and the caller counts it as malformed.
+type ControlReply = std::result::Result<Vec<u8>, WireFault>;
+
+fn control_disabled() -> Vec<u8> {
+    wire::encode_rejection(
+        "push_disabled",
+        "server started without an artifact store (serve --artifact-dir)",
+    )
+}
+
+/// Control ops share the front door's limiter but under their own
+/// `model-control/<key>` buckets, so a chatty deployer cannot starve
+/// the data plane (or vice versa).
+fn control_limited(shared: &Shared, key: &str) -> bool {
+    if let Some(limiter) = &shared.limiter {
+        if !limiter.try_acquire(&format!("model-control/{key}")) {
+            shared.metrics.rejected_limit.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+    }
+    false
+}
+
+/// `PushModel`: verify the declared checksum, decode (a corrupt
+/// artifact must never become durable or routable), conflict-check the
+/// version label, land the bytes in the store, then register.
+fn control_push(shared: &Shared, payload: &[u8]) -> ControlReply {
+    let Some(mc) = &shared.model_control else {
+        return Ok(control_disabled());
+    };
+    let (header, artifact) = wire::decode_push_model(payload)?;
+    let key = registry::namespaced(&mc.tenant, &header.key);
+    if control_limited(shared, &key) {
+        return Ok(wire::encode_rejection(
+            "rate_limited",
+            &format!("route 'model-control/{key}'"),
+        ));
+    }
+    let digest = artifact::fnv64(artifact);
+    if digest != header.checksum {
+        return Ok(wire::encode_rejection(
+            "checksum_mismatch",
+            &format!(
+                "declared {:016x}, artifact hashes to {digest:016x}",
+                header.checksum
+            ),
+        ));
+    }
+    let model = match persist::pipeline_from_bytes(artifact) {
+        Ok(m) => Arc::new(m),
+        Err(e) => {
+            return Ok(wire::encode_rejection("bad_artifact", &e.to_string()));
+        }
+    };
+    let fingerprint = artifact::model_fingerprint(&model);
+    {
+        let reg = mc.registry.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Err(e) =
+            reg.check_register(&key, &header.version, fingerprint, header.force)
+        {
+            return Ok(wire::encode_rejection("version_conflict", &e.to_string()));
+        }
+    }
+    if let Err(e) = mc
+        .store
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .put(&key, &header.version, artifact)
+    {
+        return Ok(wire::encode_rejection("store_failed", &e.to_string()));
+    }
+    let landed = {
+        let mut reg = mc.registry.lock().unwrap_or_else(PoisonError::into_inner);
+        if header.force {
+            reg.insert_force(&key, &header.version, model);
+            Ok(())
+        } else {
+            reg.insert(&key, &header.version, model)
+        }
+    };
+    if let Err(e) = landed {
+        // a conflicting register raced in between the pre-check and the
+        // store write; sweep the orphaned bytes back out
+        let _ = mc
+            .store
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .remove(&key, &header.version);
+        return Ok(wire::encode_rejection("version_conflict", &e.to_string()));
+    }
+    shared.metrics.model_pushes.fetch_add(1, Ordering::Relaxed);
+    Ok(wire::encode_control_ok(
+        "push",
+        &key,
+        &header.version,
+        digest,
+        artifact.len() as u64,
+    ))
+}
+
+/// `PullModel`: serve the stored bytes (re-verified against the
+/// manifest checksum on read); models that were loaded at startup and
+/// never pushed are re-encoded through the binary codec on the fly.
+fn control_pull(shared: &Shared, payload: &[u8]) -> ControlReply {
+    let Some(mc) = &shared.model_control else {
+        return Ok(control_disabled());
+    };
+    let (raw_key, version) = wire::decode_pull_model(payload)?;
+    let key = registry::namespaced(&mc.tenant, &raw_key);
+    if control_limited(shared, &key) {
+        return Ok(wire::encode_rejection(
+            "rate_limited",
+            &format!("route 'model-control/{key}'"),
+        ));
+    }
+    let version = match version {
+        Some(v) => v,
+        None => {
+            let stored = mc
+                .store
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .latest_version(&key);
+            match stored {
+                Some(v) => v,
+                None => {
+                    let reg =
+                        mc.registry.lock().unwrap_or_else(PoisonError::into_inner);
+                    match reg.latest(&key) {
+                        Some((v, _)) => v,
+                        None => {
+                            return Ok(wire::encode_rejection(
+                                "unknown_model",
+                                &format!("no versions of '{key}'"),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    };
+    let stored = mc
+        .store
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .get(&key, &version);
+    let artifact = match stored {
+        Ok(bytes) => bytes,
+        Err(_) => {
+            let model = {
+                let reg = mc.registry.lock().unwrap_or_else(PoisonError::into_inner);
+                reg.get(&key, &version)
+            };
+            match model {
+                Some(m) => match artifact::encode_pipeline(&m) {
+                    Ok(bytes) => bytes,
+                    Err(e) => {
+                        return Ok(wire::encode_rejection(
+                            "bad_artifact",
+                            &e.to_string(),
+                        ));
+                    }
+                },
+                None => {
+                    return Ok(wire::encode_rejection(
+                        "unknown_model",
+                        &format!("'{key}@{version}' is neither stored nor registered"),
+                    ));
+                }
+            }
+        }
+    };
+    shared.metrics.model_pulls.fetch_add(1, Ordering::Relaxed);
+    Ok(wire::encode_pull_reply(&key, &version, &artifact))
+}
+
+/// `ActivateModel`: resolve `key@version` (registry first, store bytes
+/// as fallback), hot-swap the route through [`ModelRouter::register`],
+/// then bound retained versions — the latest and every live route stay
+/// pinned, evicted versions are swept from the store.
+fn control_activate(shared: &Shared, payload: &[u8]) -> ControlReply {
+    let Some(mc) = &shared.model_control else {
+        return Ok(control_disabled());
+    };
+    let (raw_key, version) = wire::decode_activate_model(payload)?;
+    let key = registry::namespaced(&mc.tenant, &raw_key);
+    if control_limited(shared, &key) {
+        return Ok(wire::encode_rejection(
+            "rate_limited",
+            &format!("route 'model-control/{key}'"),
+        ));
+    }
+    let registered = {
+        let reg = mc.registry.lock().unwrap_or_else(PoisonError::into_inner);
+        reg.get(&key, &version)
+    };
+    let model = match registered {
+        Some(m) => m,
+        None => {
+            // not in memory — fall back to the store (bytes re-verified
+            // against the manifest checksum by `get`)
+            let bytes = mc
+                .store
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .get(&key, &version);
+            let bytes = match bytes {
+                Ok(b) => b,
+                Err(_) => {
+                    return Ok(wire::encode_rejection(
+                        "unknown_model",
+                        &format!("'{key}@{version}' is neither registered nor stored"),
+                    ));
+                }
+            };
+            match persist::pipeline_from_bytes(&bytes) {
+                Ok(m) => {
+                    let m = Arc::new(m);
+                    mc.registry
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .insert_force(&key, &version, m.clone());
+                    m
+                }
+                Err(e) => {
+                    return Ok(wire::encode_rejection("bad_artifact", &e.to_string()));
+                }
+            }
+        }
+    };
+    shared
+        .router
+        .register(key.clone(), version.clone(), model, mc.serve_cfg.clone());
+    let mut pinned = shared.router.live_versions(&key);
+    pinned.push(version.clone());
+    let evicted = mc
+        .registry
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .evict(&key, mc.max_retained, &pinned);
+    if !evicted.is_empty() {
+        let mut store = mc.store.lock().unwrap_or_else(PoisonError::into_inner);
+        for v in &evicted {
+            let _ = store.remove(&key, v);
+        }
+    }
+    let (checksum, bytes) = {
+        let store = mc.store.lock().unwrap_or_else(PoisonError::into_inner);
+        match store.list().iter().find(|e| e.key == key && e.version == version) {
+            Some(e) => (e.checksum, e.bytes),
+            None => (0, 0),
+        }
+    };
+    shared.metrics.model_activations.fetch_add(1, Ordering::Relaxed);
+    Ok(wire::encode_control_ok("activate", &key, &version, checksum, bytes))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::registry::ModelRegistry;
     use crate::coordinator::service::{ServeConfig, ServeRequest};
-    use crate::coordinator::wire::{WireClient, WireOutcome};
+    use crate::coordinator::wire::{
+        ControlOutcome, PullOutcome, WireClient, WireOutcome,
+    };
     use crate::data::synthetic::synthetic_dataset;
     use crate::estimator::EstimatorConfig;
     use crate::oavi::OaviConfig;
@@ -462,7 +836,7 @@ mod tests {
 
     fn served_router(seed: u64) -> Arc<ModelRouter> {
         let mut registry = ModelRegistry::new();
-        registry.insert("m", "v1", trained_model(seed));
+        registry.insert("m", "v1", trained_model(seed)).unwrap();
         Arc::new(ModelRouter::from_registry(&registry, &ServeConfig::default()))
     }
 
@@ -474,7 +848,7 @@ mod tests {
     fn network_scores_are_bitwise_identical_to_in_process() {
         let model = trained_model(31);
         let mut registry = ModelRegistry::new();
-        registry.insert("m", "v1", model.clone());
+        registry.insert("m", "v1", model.clone()).unwrap();
         let router =
             Arc::new(ModelRouter::from_registry(&registry, &ServeConfig::default()));
         let fd = FrontDoor::start(router.clone(), FrontDoorConfig::default()).unwrap();
@@ -721,5 +1095,274 @@ mod tests {
         assert_eq!(wire::decode_wire_error(&frame.payload).0, "busy");
         drop(hold);
         fd.shutdown();
+    }
+
+    // -- model control plane ------------------------------------------
+
+    fn control_tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "avi-frontdoor-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// A front door whose router serves `m@v1` and whose control plane
+    /// is live (store at a fresh temp dir, default serve config).
+    fn start_with_control(
+        tag: &str,
+        seed: u64,
+        max_retained: usize,
+    ) -> (FrontDoor, Arc<ModelControl>, std::path::PathBuf) {
+        let dir = control_tmpdir(tag);
+        let mut registry = ModelRegistry::new();
+        registry.insert("m", "v1", trained_model(seed)).unwrap();
+        let router =
+            Arc::new(ModelRouter::from_registry(&registry, &ServeConfig::default()));
+        let store = crate::artifact::ArtifactStore::open(&dir).unwrap();
+        let control = Arc::new(
+            ModelControl::new(registry, store, ServeConfig::default())
+                .with_max_retained(max_retained),
+        );
+        let cfg = FrontDoorConfig {
+            model_control: Some(control.clone()),
+            ..FrontDoorConfig::default()
+        };
+        let fd = FrontDoor::start(router, cfg).unwrap();
+        (fd, control, dir)
+    }
+
+    #[test]
+    fn control_frames_without_store_get_push_disabled() {
+        let fd = start(FrontDoorConfig::default(), 50);
+        let mut client = WireClient::connect(&fd.local_addr().to_string()).unwrap();
+        let artifact = crate::artifact::encode_pipeline(&trained_model(50)).unwrap();
+        match client.push_model("m2", "v1", &artifact, false).unwrap() {
+            ControlOutcome::Rejected { reason, .. } => {
+                assert_eq!(reason, "push_disabled")
+            }
+            other => panic!("{other:?}"),
+        }
+        match client.pull_model("m", None).unwrap() {
+            PullOutcome::Rejected { reason, .. } => assert_eq!(reason, "push_disabled"),
+            other => panic!("{other:?}"),
+        }
+        match client.activate_model("m", "v1").unwrap() {
+            ControlOutcome::Rejected { reason, .. } => {
+                assert_eq!(reason, "push_disabled")
+            }
+            other => panic!("{other:?}"),
+        }
+        let wire = fd.shutdown().wire.unwrap();
+        assert_eq!(wire.model_pushes, 0);
+        assert_eq!(wire.model_pulls, 0);
+        assert_eq!(wire.model_activations, 0);
+    }
+
+    #[test]
+    fn push_activate_serve_pull_roundtrip_is_bitwise() {
+        let (fd, _control, dir) = start_with_control("roundtrip", 51, 4);
+        let model = trained_model(52);
+        let artifact = crate::artifact::encode_pipeline(&model).unwrap();
+        let mut client = WireClient::connect(&fd.local_addr().to_string()).unwrap();
+
+        let ack = client
+            .push_model("m2", "v1", &artifact, false)
+            .unwrap()
+            .ack()
+            .unwrap();
+        assert_eq!(ack.op, "push");
+        assert_eq!(ack.key, "m2");
+        assert_eq!(ack.bytes, artifact.len() as u64);
+        assert_eq!(ack.checksum, crate::artifact::fnv64(&artifact));
+
+        let ack = client
+            .activate_model("m2", "v1")
+            .unwrap()
+            .ack()
+            .unwrap();
+        assert_eq!(ack.op, "activate");
+
+        // served scores are bitwise identical to predicting in-process
+        // with the model the artifact was encoded from
+        let ds = synthetic_dataset(12, 53);
+        let rows: Vec<Vec<f64>> = (0..12).map(|i| ds.x.row(i).to_vec()).collect();
+        let answer = client
+            .request("m2", &ServeRequest::batch(rows))
+            .unwrap()
+            .answer()
+            .unwrap();
+        let (labels, scores) = model.predict_scores_with_backend(
+            &ds.x,
+            &crate::backend::NativeBackend,
+        );
+        for (i, p) in answer.predictions.iter().enumerate() {
+            assert_eq!(p.label, labels[i]);
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&p.scores), bits(&scores[i]));
+        }
+
+        // pulling hands back the exact bytes that were pushed
+        let pulled = client.pull_model("m2", None).unwrap().model().unwrap();
+        assert_eq!(pulled.version, "v1");
+        assert_eq!(pulled.artifact, artifact);
+        // pulling a never-pushed startup model re-encodes on the fly
+        let boot = client.pull_model("m", None).unwrap().model().unwrap();
+        assert!(crate::artifact::codec::is_binary(&boot.artifact));
+
+        let wire = fd.shutdown().wire.unwrap();
+        assert_eq!(wire.model_pushes, 1);
+        assert_eq!(wire.model_pulls, 2);
+        assert_eq!(wire.model_activations, 1);
+        assert_eq!(wire.accepted, 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn corrupt_and_conflicting_pushes_are_refused_and_never_routable() {
+        let (fd, control, dir) = start_with_control("refuse", 54, 4);
+        let mut client = WireClient::connect(&fd.local_addr().to_string()).unwrap();
+        let artifact = crate::artifact::encode_pipeline(&trained_model(55)).unwrap();
+
+        // flip a byte in the artifact tail after the header committed to
+        // a checksum: the server must refuse before anything lands
+        let mut lying = wire::encode_push_model("m2", "v1", &artifact, false);
+        *lying.last_mut().unwrap() ^= 0xff;
+        let mut raw = TcpStream::connect(fd.local_addr()).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        wire::write_frame(&mut raw, FrameKind::PushModel, &lying).unwrap();
+        let frame = wire::read_frame(&mut raw, 1 << 20).unwrap();
+        assert_eq!(frame.kind, FrameKind::Reply);
+        match wire::decode_control_reply(&frame.payload).unwrap() {
+            ControlOutcome::Rejected { reason, .. } => {
+                assert_eq!(reason, "checksum_mismatch")
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // garbage with an honest checksum decodes as no model at all
+        match client
+            .push_model("g", "v1", b"definitely not a model", false)
+            .unwrap()
+        {
+            ControlOutcome::Rejected { reason, .. } => assert_eq!(reason, "bad_artifact"),
+            other => panic!("{other:?}"),
+        }
+        // ...and is not activatable (nothing was stored or registered)
+        match client.activate_model("g", "v1").unwrap() {
+            ControlOutcome::Rejected { reason, .. } => {
+                assert_eq!(reason, "unknown_model")
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(control.versions("g").is_empty());
+
+        // a version label means one model forever — unless forced
+        client
+            .push_model("m2", "v1", &artifact, false)
+            .unwrap()
+            .ack()
+            .unwrap();
+        let different = crate::artifact::encode_pipeline(&trained_model(56)).unwrap();
+        match client.push_model("m2", "v1", &different, false).unwrap() {
+            ControlOutcome::Rejected { reason, detail } => {
+                assert_eq!(reason, "version_conflict");
+                assert!(detail.contains("force"), "{detail}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // identical bytes re-push is a no-op rollback, still allowed
+        client
+            .push_model("m2", "v1", &artifact, false)
+            .unwrap()
+            .ack()
+            .unwrap();
+        // force replaces
+        client
+            .push_model("m2", "v1", &different, true)
+            .unwrap()
+            .ack()
+            .unwrap();
+
+        let wire = fd.shutdown().wire.unwrap();
+        assert_eq!(wire.model_pushes, 3);
+        assert_eq!(wire.malformed, 0, "rejections are typed, not malformed");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn activation_evicts_old_versions_but_pins_latest_and_live() {
+        let (fd, control, dir) = start_with_control("evict", 57, 2);
+        let mut client = WireClient::connect(&fd.local_addr().to_string()).unwrap();
+        for v in ["v1", "v2", "v3", "v4"] {
+            let artifact =
+                crate::artifact::encode_pipeline(&trained_model(58)).unwrap();
+            client.push_model("m2", v, &artifact, false).unwrap().ack().unwrap();
+        }
+        // activating v2 hot-swaps the route; retention 2 must keep the
+        // live v2 and the latest v4, dropping v1/v3
+        client.activate_model("m2", "v2").unwrap().ack().unwrap();
+        let kept = control.versions("m2");
+        assert_eq!(kept, vec!["v2".to_string(), "v4".to_string()], "{kept:?}");
+        // the route answers with the activated version
+        let ds = synthetic_dataset(4, 59);
+        let answer = client
+            .request("m2", &ServeRequest::row(ds.x.row(0).to_vec()))
+            .unwrap()
+            .answer()
+            .unwrap();
+        assert_eq!(answer.version, "v2");
+        // evicted versions are gone from the store too
+        match client.pull_model("m2", Some("v1")).unwrap() {
+            PullOutcome::Rejected { reason, .. } => assert_eq!(reason, "unknown_model"),
+            other => panic!("{other:?}"),
+        }
+        let wire = fd.shutdown().wire.unwrap();
+        assert_eq!(wire.model_pushes, 4);
+        assert_eq!(wire.model_activations, 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn control_ops_are_rate_limited_under_their_own_bucket() {
+        let dir = control_tmpdir("ratelimit");
+        let mut registry = ModelRegistry::new();
+        registry.insert("m", "v1", trained_model(60)).unwrap();
+        let router =
+            Arc::new(ModelRouter::from_registry(&registry, &ServeConfig::default()));
+        let store = crate::artifact::ArtifactStore::open(&dir).unwrap();
+        let control = Arc::new(ModelControl::new(
+            registry,
+            store,
+            ServeConfig::default(),
+        ));
+        let cfg = FrontDoorConfig {
+            rate_limit: Some(RateLimit { per_sec: 0.0, burst: 2.0 }),
+            model_control: Some(control),
+            ..FrontDoorConfig::default()
+        };
+        let fd = FrontDoor::start(router, cfg).unwrap();
+        let mut client = WireClient::connect(&fd.local_addr().to_string()).unwrap();
+        let artifact = crate::artifact::encode_pipeline(&trained_model(61)).unwrap();
+        // burst 2 on the control bucket: two pushes pass, the third is
+        // refused — without having spent the data plane's own budget
+        client.push_model("m2", "v1", &artifact, false).unwrap().ack().unwrap();
+        client.push_model("m2", "v2", &artifact, false).unwrap().ack().unwrap();
+        match client.push_model("m2", "v3", &artifact, false).unwrap() {
+            ControlOutcome::Rejected { reason, .. } => assert_eq!(reason, "rate_limited"),
+            other => panic!("{other:?}"),
+        }
+        let ds = synthetic_dataset(4, 62);
+        assert!(client
+            .request("m", &ServeRequest::row(ds.x.row(0).to_vec()))
+            .unwrap()
+            .answer()
+            .is_ok());
+        let wire = fd.shutdown().wire.unwrap();
+        assert_eq!(wire.model_pushes, 2);
+        assert_eq!(wire.rejected_limit, 1);
+        assert_eq!(wire.accepted, 1);
+        let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -23,6 +23,14 @@
 //!   serving: scores travel as `{:?}`-formatted (shortest-round-trip)
 //!   floats.
 //!
+//!   With a [`frontdoor::ModelControl`] attached, the front door also
+//!   speaks the model control plane: `PushModel` lands a
+//!   checksum-verified binary artifact ([`crate::artifact`]) in the
+//!   durable [`crate::artifact::ArtifactStore`] and registers it,
+//!   `ActivateModel` hot-swaps the route to a stored version without a
+//!   restart (bounding retained versions per key, latest and live
+//!   routes pinned), and `PullModel` hands the verified bytes back.
+//!
 //! * **Registry** — [`registry::ModelRegistry`]: fitted pipelines
 //!   addressable as `key@version`, loaded from the unified persistence
 //!   envelope ([`crate::estimator::persist`]) by path, bytes, or
@@ -74,7 +82,7 @@ pub mod router;
 pub mod service;
 pub mod wire;
 
-pub use frontdoor::{FrontDoor, FrontDoorConfig, RateLimit};
+pub use frontdoor::{FrontDoor, FrontDoorConfig, ModelControl, RateLimit};
 pub use pool::{PoolHandle, ThreadPool};
 pub use registry::ModelRegistry;
 pub use router::{ModelRouter, RouterReport};
@@ -82,4 +90,7 @@ pub use service::{
     BatchPolicy, RejectReason, ServeAnswer, ServeConfig, ServeMetrics, ServeReply, ServeRequest,
     TransformService,
 };
-pub use wire::{WireClient, WireOutcome, WireStats};
+pub use wire::{
+    ControlAck, ControlOutcome, PullOutcome, PulledModel, WireClient, WireOutcome,
+    WireStats,
+};

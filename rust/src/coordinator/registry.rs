@@ -33,10 +33,21 @@ pub const MANIFEST_VERSION: u64 = 1;
 /// Version the bare-key form of a spec resolves to.
 pub const DEFAULT_VERSION: &str = "v1";
 
+/// One registered version: the model plus its content fingerprint
+/// ([`crate::artifact::model_fingerprint`]), so re-registration can
+/// distinguish a rollback (identical contents — always allowed) from a
+/// silent replacement (different contents — refused without `force`).
+#[derive(Clone, Debug)]
+struct VersionEntry {
+    version: String,
+    model: Arc<PipelineModel>,
+    fingerprint: u64,
+}
+
 /// Versions of one key, insertion-ordered (last = latest).
 #[derive(Clone, Debug, Default)]
 struct KeyEntry {
-    versions: Vec<(String, Arc<PipelineModel>)>,
+    versions: Vec<VersionEntry>,
 }
 
 /// A versioned collection of fitted pipelines keyed `key@version`.
@@ -70,23 +81,113 @@ impl ModelRegistry {
     pub fn versions(&self, key: &str) -> Vec<String> {
         self.keys
             .get(key)
-            .map(|e| e.versions.iter().map(|(v, _)| v.clone()).collect())
+            .map(|e| e.versions.iter().map(|v| v.version.clone()).collect())
             .unwrap_or_default()
     }
 
     /// Register an in-memory pipeline under `key@version`.  Re-inserting
-    /// an existing version replaces its model and promotes it to latest
-    /// (which is exactly a rollback when the version is an older one).
+    /// an existing version with **identical contents** replaces it and
+    /// promotes it to latest (which is exactly a rollback when the
+    /// version is an older one).  Re-inserting with **different
+    /// contents** is refused with a typed error — a version label must
+    /// mean one model forever unless the caller says
+    /// [`ModelRegistry::insert_force`].
     pub fn insert(
         &mut self,
         key: impl Into<String>,
         version: impl Into<String>,
         model: Arc<PipelineModel>,
+    ) -> Result<()> {
+        self.insert_inner(key.into(), version.into(), model, false)
+    }
+
+    /// [`ModelRegistry::insert`] without the conflict gate: explicitly
+    /// replace whatever `key@version` currently means.
+    pub fn insert_force(
+        &mut self,
+        key: impl Into<String>,
+        version: impl Into<String>,
+        model: Arc<PipelineModel>,
     ) {
-        let (key, version) = (key.into(), version.into());
+        let _ = self.insert_inner(key.into(), version.into(), model, true);
+    }
+
+    fn insert_inner(
+        &mut self,
+        key: String,
+        version: String,
+        model: Arc<PipelineModel>,
+        force: bool,
+    ) -> Result<()> {
+        let fingerprint = crate::artifact::model_fingerprint(&model);
+        if !force {
+            self.check_register(&key, &version, fingerprint, false)?;
+        }
         let entry = self.keys.entry(key).or_default();
-        entry.versions.retain(|(v, _)| *v != version);
-        entry.versions.push((version, model));
+        entry.versions.retain(|v| v.version != version);
+        entry.versions.push(VersionEntry { version, model, fingerprint });
+        Ok(())
+    }
+
+    /// Content fingerprint of a registered version, if present.
+    pub fn fingerprint_of(&self, key: &str, version: &str) -> Option<u64> {
+        self.keys
+            .get(key)?
+            .versions
+            .iter()
+            .find(|v| v.version == version)
+            .map(|v| v.fingerprint)
+    }
+
+    /// Would registering contents with `fingerprint` as `key@version`
+    /// succeed?  Lets callers (the push handler) refuse a conflict
+    /// *before* writing anything to disk.
+    pub fn check_register(
+        &self,
+        key: &str,
+        version: &str,
+        fingerprint: u64,
+        force: bool,
+    ) -> Result<()> {
+        if force {
+            return Ok(());
+        }
+        if let Some(existing) = self.fingerprint_of(key, version) {
+            if existing != fingerprint {
+                return Err(AviError::Registry(format!(
+                    "{key}@{version} is already registered with different contents \
+                     (fingerprint {existing:016x}, offered {fingerprint:016x}); \
+                     pass force to replace it"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Bound the retained versions of `key` to `max_retained`, never
+    /// evicting the latest version or any version named in `pinned`
+    /// (the router's live routes, the active version).  Oldest unpinned
+    /// versions go first; returns the evicted labels so the caller can
+    /// sweep its artifact store.  In-flight `Arc`s stay alive.
+    pub fn evict(&mut self, key: &str, max_retained: usize, pinned: &[String]) -> Vec<String> {
+        let max_retained = max_retained.max(1);
+        let Some(entry) = self.keys.get_mut(key) else {
+            return Vec::new();
+        };
+        let Some(latest) = entry.versions.last().map(|v| v.version.clone()) else {
+            return Vec::new();
+        };
+        let mut evicted = Vec::new();
+        let mut i = 0;
+        while entry.versions.len() > max_retained && i < entry.versions.len() {
+            let v = &entry.versions[i].version;
+            if *v != latest && !pinned.contains(v) {
+                evicted.push(entry.versions.remove(i).version);
+            } else {
+                i += 1;
+            }
+        }
+        evicted
     }
 
     /// Load a pipeline from the persistence envelope at `path` and
@@ -99,24 +200,35 @@ impl ModelRegistry {
         path: &Path,
     ) -> Result<Arc<PipelineModel>> {
         let (key, version) = (key.into(), version.into());
-        let text = std::fs::read_to_string(path).map_err(|e| {
+        let bytes = std::fs::read(path).map_err(|e| {
             AviError::Registry(format!("{key}@{version}: cannot read {}: {e}", path.display()))
         })?;
-        self.load_bytes(key, version, &text)
+        self.load_any(key, version, &bytes)
     }
 
-    /// Parse a pipeline envelope from `text` and register it.
+    /// Parse a JSON pipeline envelope from `text` and register it.
     pub fn load_bytes(
         &mut self,
         key: impl Into<String>,
         version: impl Into<String>,
         text: &str,
     ) -> Result<Arc<PipelineModel>> {
+        self.load_any(key, version, text.as_bytes())
+    }
+
+    /// Parse a pipeline envelope — JSON or binary, sniffed by magic via
+    /// [`persist::pipeline_from_bytes`] — and register it.
+    pub fn load_any(
+        &mut self,
+        key: impl Into<String>,
+        version: impl Into<String>,
+        bytes: &[u8],
+    ) -> Result<Arc<PipelineModel>> {
         let (key, version) = (key.into(), version.into());
-        let model = persist::pipeline_from_json(text)
+        let model = persist::pipeline_from_bytes(bytes)
             .map(Arc::new)
             .map_err(|e| AviError::Registry(format!("{key}@{version}: {e}")))?;
-        self.insert(key, version, model.clone());
+        self.insert(key, version, model.clone())?;
         Ok(model)
     }
 
@@ -126,8 +238,8 @@ impl ModelRegistry {
             .get(key)?
             .versions
             .iter()
-            .find(|(v, _)| v == version)
-            .map(|(_, m)| m.clone())
+            .find(|v| v.version == version)
+            .map(|v| v.model.clone())
     }
 
     /// [`ModelRegistry::get`] with a typed error naming the miss.
@@ -146,7 +258,7 @@ impl ModelRegistry {
             .get(key)?
             .versions
             .last()
-            .map(|(v, m)| (v.clone(), m.clone()))
+            .map(|v| (v.version.clone(), v.model.clone()))
     }
 
     /// Drop one version (in-flight `Arc`s stay alive).  Returns whether
@@ -154,7 +266,7 @@ impl ModelRegistry {
     pub fn remove(&mut self, key: &str, version: &str) -> bool {
         let Some(entry) = self.keys.get_mut(key) else { return false };
         let before = entry.versions.len();
-        entry.versions.retain(|(v, _)| v != version);
+        entry.versions.retain(|v| v.version != version);
         let removed = entry.versions.len() != before;
         if entry.versions.is_empty() {
             self.keys.remove(key);
@@ -224,13 +336,13 @@ impl ModelRegistry {
             if full.is_relative() {
                 full = base.join(full);
             }
-            let doc = std::fs::read_to_string(&full).map_err(|e| {
+            let doc = std::fs::read(&full).map_err(|e| {
                 AviError::Registry(format!(
                     "{key}@{version}: cannot read {}: {e}",
                     full.display()
                 ))
             })?;
-            let model = persist::pipeline_from_json(&doc)
+            let model = persist::pipeline_from_bytes(&doc)
                 .map(Arc::new)
                 .map_err(|e| AviError::Registry(format!("{key}@{version}: {e}")))?;
             staged.push((key, version, model));
@@ -238,9 +350,25 @@ impl ModelRegistry {
         if staged.is_empty() {
             return Err(AviError::Registry("manifest: no models listed".into()));
         }
+        // conflict pre-check (against the registry and within the
+        // manifest itself) before registering anything, so one refusal
+        // cannot leave the registry half-updated
+        let mut seen: HashMap<(String, String), u64> = HashMap::new();
+        for (key, version, model) in &staged {
+            let fp = crate::artifact::model_fingerprint(model);
+            self.check_register(key, version, fp, false)
+                .map_err(|e| AviError::Registry(format!("manifest: {e}")))?;
+            if let Some(prev) = seen.insert((key.clone(), version.clone()), fp) {
+                if prev != fp {
+                    return Err(AviError::Registry(format!(
+                        "manifest: {key}@{version} listed twice with different contents"
+                    )));
+                }
+            }
+        }
         let mut loaded = Vec::with_capacity(staged.len());
         for (key, version, model) in staged {
-            self.insert(&key, &version, model);
+            self.insert_force(&key, &version, model); // pre-checked above
             loaded.push((key, version));
         }
         Ok(loaded)
@@ -343,14 +471,15 @@ mod tests {
         let mut reg = ModelRegistry::new();
         let m1 = model(0.01, 1);
         let m2 = model(0.05, 2);
-        reg.insert("champ", "v1", m1.clone());
-        reg.insert("champ", "v2", m2.clone());
+        reg.insert("champ", "v1", m1.clone()).unwrap();
+        reg.insert("champ", "v2", m2.clone()).unwrap();
         assert_eq!(reg.len(), 2);
         assert_eq!(reg.versions("champ"), vec!["v1", "v2"]);
         assert_eq!(reg.latest("champ").unwrap().0, "v2");
         assert!(Arc::ptr_eq(&reg.get("champ", "v1").unwrap(), &m1));
-        // rollback: re-registering v1 promotes it back to latest
-        reg.insert("champ", "v1", m1.clone());
+        // rollback: re-registering v1 (identical contents) promotes it
+        // back to latest without needing force
+        reg.insert("champ", "v1", m1.clone()).unwrap();
         assert_eq!(reg.latest("champ").unwrap().0, "v1");
         assert_eq!(reg.len(), 2, "rollback must not duplicate the version");
         assert!(reg.remove("champ", "v2"));
@@ -359,9 +488,76 @@ mod tests {
     }
 
     #[test]
+    fn conflicting_reregistration_is_refused_without_force() {
+        let mut reg = ModelRegistry::new();
+        let m1 = model(0.01, 21);
+        let m2 = model(0.05, 22);
+        reg.insert("champ", "v1", m1.clone()).unwrap();
+        // different contents under the same label: typed refusal, and
+        // the original stays registered
+        let err = reg.insert("champ", "v1", m2.clone()).unwrap_err();
+        assert!(matches!(err, AviError::Registry(_)), "{err}");
+        assert!(err.to_string().contains("force"), "{err}");
+        assert!(Arc::ptr_eq(&reg.get("champ", "v1").unwrap(), &m1));
+        // a distinct Arc with identical contents is a rollback, not a
+        // conflict (fingerprints are content-based, not pointer-based)
+        let m1_clone = Arc::new(PipelineModel {
+            perm: m1.perm.clone(),
+            transformer: crate::pipeline::FittedTransformer {
+                method_name: m1.transformer.method_name.clone(),
+                per_class: m1
+                    .transformer
+                    .per_class
+                    .iter()
+                    .map(|m| m.clone_box())
+                    .collect(),
+            },
+            svm: m1.svm.clone(),
+            n_classes: m1.n_classes,
+        });
+        reg.insert("champ", "v1", m1_clone).unwrap();
+        // force replaces explicitly
+        reg.insert_force("champ", "v1", m2.clone());
+        assert!(Arc::ptr_eq(&reg.get("champ", "v1").unwrap(), &m2));
+        // check_register mirrors the gate without mutating
+        let fp1 = crate::artifact::model_fingerprint(&m1);
+        let fp2 = crate::artifact::model_fingerprint(&m2);
+        assert!(reg.check_register("champ", "v1", fp2, false).is_ok());
+        assert!(reg.check_register("champ", "v1", fp1, false).is_err());
+        assert!(reg.check_register("champ", "v1", fp1, true).is_ok());
+        assert!(reg.check_register("champ", "v9", fp1, false).is_ok());
+        assert_eq!(reg.fingerprint_of("champ", "v1"), Some(fp2));
+        assert_eq!(reg.fingerprint_of("champ", "v9"), None);
+    }
+
+    #[test]
+    fn eviction_keeps_latest_and_pinned_versions() {
+        let mut reg = ModelRegistry::new();
+        let m = model(0.01, 23);
+        for v in ["v1", "v2", "v3", "v4", "v5"] {
+            reg.insert("champ", v, m.clone()).unwrap();
+        }
+        // pin v2 (say, the active route); cap at 3
+        let evicted = reg.evict("champ", 3, &["v2".to_string()]);
+        assert_eq!(evicted, vec!["v1".to_string(), "v3".to_string()]);
+        assert_eq!(reg.versions("champ"), vec!["v2", "v4", "v5"]);
+        // latest survives even a cap of 1 when pins force an overflow
+        let evicted = reg.evict("champ", 1, &["v2".to_string()]);
+        assert_eq!(evicted, vec!["v4".to_string()]);
+        assert_eq!(reg.versions("champ"), vec!["v2", "v5"]);
+        // already bounded: no-op
+        assert!(reg.evict("champ", 3, &[]).is_empty());
+        assert!(reg.evict("ghost", 3, &[]).is_empty());
+        // cap of 0 is clamped to 1, and the latest is never evicted
+        let evicted = reg.evict("champ", 0, &[]);
+        assert_eq!(evicted, vec!["v2".to_string()]);
+        assert_eq!(reg.versions("champ"), vec!["v5"]);
+    }
+
+    #[test]
     fn resolve_names_the_miss_with_a_typed_error() {
         let mut reg = ModelRegistry::new();
-        reg.insert("champ", "v1", model(0.01, 3));
+        reg.insert("champ", "v1", model(0.01, 3)).unwrap();
         assert!(reg.resolve("champ", "v1").is_ok());
         let err = reg.resolve("champ", "v9").unwrap_err();
         assert!(matches!(err, AviError::Registry(_)), "{err}");
@@ -474,8 +670,8 @@ mod tests {
         assert_eq!(version, "v2");
         // and resolve as ordinary registry keys
         let mut reg = ModelRegistry::new();
-        reg.insert(namespaced("acme", "m"), "v1", model(0.01, 11));
-        reg.insert(namespaced("globex", "m"), "v1", model(0.05, 12));
+        reg.insert(namespaced("acme", "m"), "v1", model(0.01, 11)).unwrap();
+        reg.insert(namespaced("globex", "m"), "v1", model(0.05, 12)).unwrap();
         assert!(reg.get("acme/m", "v1").is_some());
         assert!(reg.get("globex/m", "v1").is_some());
         assert!(reg.get("m", "v1").is_none(), "tenants must not leak into the bare key");

@@ -372,6 +372,24 @@ impl ModelRouter {
         k
     }
 
+    /// Versions of `key` currently receiving traffic: every A/B arm
+    /// plus the shadow, deduplicated, sorted.  Registry eviction pins
+    /// these so a hot-swap can never tear a live route's model away.
+    pub fn live_versions(&self, key: &str) -> Vec<String> {
+        let routes = self.routes.read().expect("routes");
+        let Some(state) = routes.get(key) else {
+            return Vec::new();
+        };
+        let mut versions: Vec<String> =
+            state.arms.iter().map(|a| a.version.clone()).collect();
+        if let Some(shadow) = &state.shadow {
+            versions.push(shadow.version.clone());
+        }
+        versions.sort();
+        versions.dedup();
+        versions
+    }
+
     /// Admit one request to `key` without waiting for the answer.
     /// Unknown keys fail synchronously; shadow traffic is mirrored
     /// before the primary admission and can never affect it.

@@ -9,10 +9,11 @@
 //! offset  size  field
 //! 0       4     magic  "AVIW"
 //! 4       1     protocol version (currently 1)
-//! 5       1     frame kind (1 request, 2 reply, 3 error, 4 shutdown)
+//! 5       1     frame kind (1 request, 2 reply, 3 error, 4 shutdown,
+//!               5 push-model, 6 pull-model, 7 activate-model)
 //! 6       2     reserved (zero)
 //! 8       4     payload length, u32 little-endian
-//! 12      len   UTF-8 JSON payload
+//! 12      len   payload (UTF-8 JSON, or a hybrid envelope — below)
 //! ```
 //!
 //! The header is validated *before* the payload is read: a bad magic or
@@ -35,6 +36,34 @@
 //! * error — `{"error":"malformed"|"oversized"|"bad_version"|`
 //!   `"internal"|"busy","detail":".."}` — protocol-level faults; the
 //!   server closes the connection after sending one.
+//!
+//! ## Model-control payloads
+//!
+//! The control plane moves binary model artifacts, which JSON cannot
+//! carry.  `PushModel` requests and `PullModel` replies therefore use a
+//! **hybrid envelope**: `"AVIM"` magic, a u32-LE header length, a JSON
+//! header, then the raw artifact bytes:
+//!
+//! ```text
+//! 0   4           magic "AVIM"
+//! 4   4           header length, u32 little-endian
+//! 8   hdr_len     UTF-8 JSON header
+//! ..  rest        artifact bytes (binary or JSON envelope, opaque here)
+//! ```
+//!
+//! * push header — `{"key":..,"version":..,"checksum":"<16-hex fnv64>",`
+//!   `"force":true|false}`; the server re-hashes the artifact and
+//!   refuses a mismatch before anything touches disk.
+//! * pull / activate request — plain JSON `{"key":..,"version":..}`
+//!   (`version` omitted on pull = latest).
+//! * control ack — `{"status":"ok","op":"push"|"pull"|"activate",`
+//!   `"key":..,"version":..,"checksum":"<hex>","bytes":N}`; control
+//!   rejections reuse the `"status":"rejected"` shape with codes
+//!   `checksum_mismatch`, `version_conflict`, `bad_artifact`,
+//!   `unknown_model`, `push_disabled`, `rate_limited`.
+//!
+//! Checksums travel as 16-digit hex *strings* — a u64 exceeds the
+//! integer range a JSON number (f64) can represent exactly.
 //!
 //! Scores are serialized with Rust's `{:?}` float formatting (shortest
 //! round-trip) and parsed with `f64::from_str`, which reproduces every
@@ -73,6 +102,12 @@ pub enum FrameKind {
     Reply = 2,
     Error = 3,
     Shutdown = 4,
+    /// Upload a model artifact to the server's store (hybrid payload).
+    PushModel = 5,
+    /// Download a stored artifact (JSON request, hybrid reply).
+    PullModel = 6,
+    /// Register + hot-swap routes to a stored `key@version`.
+    ActivateModel = 7,
 }
 
 impl FrameKind {
@@ -82,6 +117,9 @@ impl FrameKind {
             2 => Some(FrameKind::Reply),
             3 => Some(FrameKind::Error),
             4 => Some(FrameKind::Shutdown),
+            5 => Some(FrameKind::PushModel),
+            6 => Some(FrameKind::PullModel),
+            7 => Some(FrameKind::ActivateModel),
             _ => None,
         }
     }
@@ -409,6 +447,289 @@ pub fn decode_wire_error(payload: &[u8]) -> (String, String) {
 }
 
 // ---------------------------------------------------------------------
+// Model-control payload codecs
+// ---------------------------------------------------------------------
+
+/// Magic opening a hybrid (JSON header + raw artifact bytes) payload.
+pub const HYBRID_MAGIC: [u8; 4] = *b"AVIM";
+
+fn encode_hybrid(header: &str, artifact: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + header.len() + artifact.len());
+    out.extend_from_slice(&HYBRID_MAGIC);
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(artifact);
+    out
+}
+
+/// Split a hybrid payload into its JSON header and artifact bytes.  The
+/// declared header length is validated against the bytes present before
+/// any slicing — same discipline as the frame header itself.
+fn decode_hybrid(payload: &[u8]) -> std::result::Result<(&str, &[u8]), WireFault> {
+    if payload.len() < 8 || payload[..4] != HYBRID_MAGIC {
+        return Err(WireFault::Malformed("not a hybrid model payload".into()));
+    }
+    let hdr_len =
+        u32::from_le_bytes([payload[4], payload[5], payload[6], payload[7]]) as usize;
+    if hdr_len > payload.len() - 8 {
+        return Err(WireFault::Malformed(format!(
+            "hybrid header claims {hdr_len} bytes, {} present",
+            payload.len() - 8
+        )));
+    }
+    let header = std::str::from_utf8(&payload[8..8 + hdr_len])
+        .map_err(|_| WireFault::Malformed("hybrid header is not UTF-8".into()))?;
+    Ok((header, &payload[8 + hdr_len..]))
+}
+
+fn parse_checksum(text: &str, key: &str) -> std::result::Result<u64, WireFault> {
+    let hex = get_str(text, key)?;
+    u64::from_str_radix(hex.trim(), 16)
+        .map_err(|_| WireFault::Malformed(format!("bad checksum literal '{hex}'")))
+}
+
+fn get_bool(text: &str, key: &str) -> std::result::Result<bool, WireFault> {
+    match after_key(text, key) {
+        None => Ok(false),
+        Some(rest) if rest.starts_with("true") => Ok(true),
+        Some(rest) if rest.starts_with("false") => Ok(false),
+        Some(_) => Err(WireFault::Malformed(format!("\"{key}\" is not a bool"))),
+    }
+}
+
+/// Declared metadata of a pushed artifact.
+#[derive(Clone, Debug)]
+pub struct PushHeader {
+    pub key: String,
+    pub version: String,
+    /// FNV-1a-64 the sender computed; the receiver re-hashes and
+    /// refuses a mismatch with `checksum_mismatch`.
+    pub checksum: u64,
+    /// Allow replacing an existing `key@version` with different bytes.
+    pub force: bool,
+}
+
+/// Encode a `PushModel` payload (checksum computed here, over exactly
+/// the bytes shipped).
+pub fn encode_push_model(key: &str, version: &str, artifact: &[u8], force: bool) -> Vec<u8> {
+    let header = format!(
+        "{{\"key\":\"{}\",\"version\":\"{}\",\"checksum\":\"{:016x}\",\"force\":{force}}}",
+        json_escape(key),
+        json_escape(version),
+        crate::artifact::fnv64(artifact),
+    );
+    encode_hybrid(&header, artifact)
+}
+
+/// Decode a `PushModel` payload into its header and artifact bytes.
+pub fn decode_push_model(
+    payload: &[u8],
+) -> std::result::Result<(PushHeader, &[u8]), WireFault> {
+    let (header, artifact) = decode_hybrid(payload)?;
+    Ok((
+        PushHeader {
+            key: get_str(header, "key")?,
+            version: get_str(header, "version")?,
+            checksum: parse_checksum(header, "checksum")?,
+            force: get_bool(header, "force")?,
+        },
+        artifact,
+    ))
+}
+
+/// Encode a `PullModel` request (`version: None` = latest).
+pub fn encode_pull_model(key: &str, version: Option<&str>) -> Vec<u8> {
+    match version {
+        Some(v) => format!(
+            "{{\"key\":\"{}\",\"version\":\"{}\"}}",
+            json_escape(key),
+            json_escape(v)
+        ),
+        None => format!("{{\"key\":\"{}\"}}", json_escape(key)),
+    }
+    .into_bytes()
+}
+
+/// Decode a `PullModel` request into `(key, version)`.
+pub fn decode_pull_model(
+    payload: &[u8],
+) -> std::result::Result<(String, Option<String>), WireFault> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| WireFault::Malformed("pull payload is not UTF-8".into()))?;
+    let key = get_str(text, "key")?;
+    let version = get_str(text, "version").ok();
+    Ok((key, version))
+}
+
+/// Encode an `ActivateModel` request.
+pub fn encode_activate_model(key: &str, version: &str) -> Vec<u8> {
+    format!(
+        "{{\"key\":\"{}\",\"version\":\"{}\"}}",
+        json_escape(key),
+        json_escape(version)
+    )
+    .into_bytes()
+}
+
+/// Decode an `ActivateModel` request into `(key, version)`.
+pub fn decode_activate_model(
+    payload: &[u8],
+) -> std::result::Result<(String, String), WireFault> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| WireFault::Malformed("activate payload is not UTF-8".into()))?;
+    Ok((get_str(text, "key")?, get_str(text, "version")?))
+}
+
+/// Successful control-plane acknowledgement.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ControlAck {
+    /// `"push"`, `"pull"`, or `"activate"`.
+    pub op: String,
+    pub key: String,
+    pub version: String,
+    pub checksum: u64,
+    /// Artifact size on the server, in bytes.
+    pub bytes: u64,
+}
+
+/// What a control frame (push/activate) came back as.
+#[derive(Clone, Debug)]
+pub enum ControlOutcome {
+    Ok(ControlAck),
+    Rejected { reason: String, detail: String },
+}
+
+impl ControlOutcome {
+    /// Unwrap the ack or surface the rejection as a typed error.
+    pub fn ack(self) -> Result<ControlAck> {
+        match self {
+            ControlOutcome::Ok(a) => Ok(a),
+            ControlOutcome::Rejected { reason, detail } => Err(AviError::Artifact(
+                format!("control rejected ({reason}): {detail}"),
+            )),
+        }
+    }
+}
+
+/// Encode a control-plane acknowledgement reply.
+pub fn encode_control_ok(
+    op: &str,
+    key: &str,
+    version: &str,
+    checksum: u64,
+    bytes: u64,
+) -> Vec<u8> {
+    format!(
+        "{{\"status\":\"ok\",\"op\":\"{}\",\"key\":\"{}\",\"version\":\"{}\",\
+         \"checksum\":\"{checksum:016x}\",\"bytes\":{bytes}}}",
+        json_escape(op),
+        json_escape(key),
+        json_escape(version)
+    )
+    .into_bytes()
+}
+
+/// Decode a push/activate reply payload.
+pub fn decode_control_reply(
+    payload: &[u8],
+) -> std::result::Result<ControlOutcome, WireFault> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| WireFault::Malformed("control reply is not UTF-8".into()))?;
+    match get_str(text, "status")?.as_str() {
+        "ok" => Ok(ControlOutcome::Ok(ControlAck {
+            op: get_str(text, "op")?,
+            key: get_str(text, "key")?,
+            version: get_str(text, "version")?,
+            checksum: parse_checksum(text, "checksum")?,
+            bytes: get_u64(text, "bytes")?,
+        })),
+        "rejected" => Ok(ControlOutcome::Rejected {
+            reason: get_str(text, "reason")?,
+            detail: get_str(text, "detail").unwrap_or_default(),
+        }),
+        other => {
+            Err(WireFault::Malformed(format!("unknown control status '{other}'")))
+        }
+    }
+}
+
+/// A pulled artifact: metadata + the verified bytes.
+#[derive(Clone, Debug)]
+pub struct PulledModel {
+    pub key: String,
+    pub version: String,
+    pub checksum: u64,
+    pub artifact: Vec<u8>,
+}
+
+/// What a `PullModel` frame came back as.
+#[derive(Clone, Debug)]
+pub enum PullOutcome {
+    Pulled(PulledModel),
+    Rejected { reason: String, detail: String },
+}
+
+impl PullOutcome {
+    /// Unwrap the artifact or surface the rejection as a typed error.
+    pub fn model(self) -> Result<PulledModel> {
+        match self {
+            PullOutcome::Pulled(m) => Ok(m),
+            PullOutcome::Rejected { reason, detail } => Err(AviError::Artifact(
+                format!("pull rejected ({reason}): {detail}"),
+            )),
+        }
+    }
+}
+
+/// Encode a successful `PullModel` reply: hybrid ack header + artifact.
+pub fn encode_pull_reply(key: &str, version: &str, artifact: &[u8]) -> Vec<u8> {
+    let header = format!(
+        "{{\"status\":\"ok\",\"op\":\"pull\",\"key\":\"{}\",\"version\":\"{}\",\
+         \"checksum\":\"{:016x}\",\"bytes\":{}}}",
+        json_escape(key),
+        json_escape(version),
+        crate::artifact::fnv64(artifact),
+        artifact.len()
+    );
+    encode_hybrid(&header, artifact)
+}
+
+/// Decode a `PullModel` reply: hybrid = artifact, plain JSON = rejection.
+/// The pulled bytes are re-hashed against the declared checksum, so a
+/// corrupted transfer is refused client-side too.
+pub fn decode_pull_reply(payload: &[u8]) -> std::result::Result<PullOutcome, WireFault> {
+    if payload.len() >= 4 && payload[..4] == HYBRID_MAGIC {
+        let (header, artifact) = decode_hybrid(payload)?;
+        let checksum = parse_checksum(header, "checksum")?;
+        if crate::artifact::fnv64(artifact) != checksum {
+            return Err(WireFault::Malformed(
+                "pulled artifact does not match its declared checksum".into(),
+            ));
+        }
+        if get_u64(header, "bytes")? != artifact.len() as u64 {
+            return Err(WireFault::Malformed(
+                "pulled artifact does not match its declared length".into(),
+            ));
+        }
+        return Ok(PullOutcome::Pulled(PulledModel {
+            key: get_str(header, "key")?,
+            version: get_str(header, "version")?,
+            checksum,
+            artifact: artifact.to_vec(),
+        }));
+    }
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| WireFault::Malformed("pull reply is not UTF-8".into()))?;
+    match get_str(text, "status")?.as_str() {
+        "rejected" => Ok(PullOutcome::Rejected {
+            reason: get_str(text, "reason")?,
+            detail: get_str(text, "detail").unwrap_or_default(),
+        }),
+        other => Err(WireFault::Malformed(format!("unknown pull status '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------------
 // Wire-level counters
 // ---------------------------------------------------------------------
 
@@ -438,6 +759,12 @@ pub struct WireStats {
     pub bytes_in: u64,
     /// Bytes written to the wire.
     pub bytes_out: u64,
+    /// Model artifacts accepted through `PushModel`.
+    pub model_pushes: u64,
+    /// Artifacts served through `PullModel`.
+    pub model_pulls: u64,
+    /// Successful `ActivateModel` hot-swaps.
+    pub model_activations: u64,
 }
 
 impl WireStats {
@@ -446,7 +773,8 @@ impl WireStats {
         format!(
             "{{\"connections\": {}, \"accepted\": {}, \"rejected_limit\": {}, \
              \"rejected_route\": {}, \"timed_out\": {}, \"malformed\": {}, \
-             \"oversized\": {}, \"bytes_in\": {}, \"bytes_out\": {}}}",
+             \"oversized\": {}, \"bytes_in\": {}, \"bytes_out\": {}, \
+             \"model_pushes\": {}, \"model_pulls\": {}, \"model_activations\": {}}}",
             self.connections,
             self.accepted,
             self.rejected_limit,
@@ -455,7 +783,10 @@ impl WireStats {
             self.malformed,
             self.oversized,
             self.bytes_in,
-            self.bytes_out
+            self.bytes_out,
+            self.model_pushes,
+            self.model_pulls,
+            self.model_activations
         )
     }
 }
@@ -508,6 +839,58 @@ impl WireClient {
         let frame = read_frame(&mut self.stream, self.max_frame)?;
         match frame.kind {
             FrameKind::Reply => Ok(decode_reply(&frame.payload)?),
+            FrameKind::Error => {
+                let (code, detail) = decode_wire_error(&frame.payload);
+                Err(AviError::Net(format!("server error ({code}): {detail}")))
+            }
+            other => Err(AviError::Net(format!("unexpected frame kind {other:?}"))),
+        }
+    }
+
+    /// Push a model artifact to the server's store as `key@version`.
+    /// `force` permits replacing an existing version with different
+    /// bytes (rollback to identical bytes never needs it).
+    pub fn push_model(
+        &mut self,
+        key: &str,
+        version: &str,
+        artifact: &[u8],
+        force: bool,
+    ) -> Result<ControlOutcome> {
+        let payload = encode_push_model(key, version, artifact, force);
+        self.control(FrameKind::PushModel, &payload)
+    }
+
+    /// Pull an artifact back out of the server's store
+    /// (`version: None` = latest).  Bytes are checksum-verified before
+    /// this returns.
+    pub fn pull_model(&mut self, key: &str, version: Option<&str>) -> Result<PullOutcome> {
+        let payload = encode_pull_model(key, version);
+        write_frame(&mut self.stream, FrameKind::PullModel, &payload)
+            .map_err(|e| AviError::Net(format!("send pull: {e}")))?;
+        let frame = read_frame(&mut self.stream, self.max_frame)?;
+        match frame.kind {
+            FrameKind::Reply => Ok(decode_pull_reply(&frame.payload)?),
+            FrameKind::Error => {
+                let (code, detail) = decode_wire_error(&frame.payload);
+                Err(AviError::Net(format!("server error ({code}): {detail}")))
+            }
+            other => Err(AviError::Net(format!("unexpected frame kind {other:?}"))),
+        }
+    }
+
+    /// Register + hot-swap routes to a stored `key@version`.
+    pub fn activate_model(&mut self, key: &str, version: &str) -> Result<ControlOutcome> {
+        let payload = encode_activate_model(key, version);
+        self.control(FrameKind::ActivateModel, &payload)
+    }
+
+    fn control(&mut self, kind: FrameKind, payload: &[u8]) -> Result<ControlOutcome> {
+        write_frame(&mut self.stream, kind, payload)
+            .map_err(|e| AviError::Net(format!("send {kind:?}: {e}")))?;
+        let frame = read_frame(&mut self.stream, self.max_frame)?;
+        match frame.kind {
+            FrameKind::Reply => Ok(decode_control_reply(&frame.payload)?),
             FrameKind::Error => {
                 let (code, detail) = decode_wire_error(&frame.payload);
                 Err(AviError::Net(format!("server error ({code}): {detail}")))
@@ -845,6 +1228,9 @@ mod tests {
             oversized: 7,
             bytes_in: 8,
             bytes_out: 9,
+            model_pushes: 10,
+            model_pulls: 11,
+            model_activations: 12,
         };
         let json = stats.to_json();
         for cell in [
@@ -857,8 +1243,118 @@ mod tests {
             "\"oversized\": 7",
             "\"bytes_in\": 8",
             "\"bytes_out\": 9",
+            "\"model_pushes\": 10",
+            "\"model_pulls\": 11",
+            "\"model_activations\": 12",
         ] {
             assert!(json.contains(cell), "{json}");
+        }
+    }
+
+    #[test]
+    fn push_model_codec_roundtrips_and_verifies() {
+        let artifact: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let payload = encode_push_model("acme/m", "v2", &artifact, true);
+        let (header, bytes) = decode_push_model(&payload).unwrap();
+        assert_eq!(header.key, "acme/m");
+        assert_eq!(header.version, "v2");
+        assert!(header.force);
+        assert_eq!(bytes, &artifact[..]);
+        assert_eq!(header.checksum, crate::artifact::fnv64(&artifact));
+        // force defaults to false
+        let payload = encode_push_model("m", "v1", b"abc", false);
+        let (header, _) = decode_push_model(&payload).unwrap();
+        assert!(!header.force);
+    }
+
+    #[test]
+    fn hybrid_envelope_rejects_lies_without_panicking() {
+        // header length claiming more bytes than present
+        let mut bad = encode_push_model("m", "v1", b"artifact", false);
+        let lie = (bad.len() as u32) * 2;
+        bad[4..8].copy_from_slice(&lie.to_le_bytes());
+        assert!(matches!(
+            decode_push_model(&bad).unwrap_err(),
+            WireFault::Malformed(_)
+        ));
+        // not hybrid at all / too short
+        assert!(decode_push_model(b"{}").is_err());
+        assert!(decode_push_model(b"AVIM").is_err());
+        assert!(decode_push_model(b"").is_err());
+        // truncation anywhere is typed
+        let good = encode_push_model("m", "v1", b"artifact-bytes", false);
+        for cut in 0..good.len().min(16) {
+            let _ = decode_push_model(&good[..cut]);
+        }
+    }
+
+    #[test]
+    fn pull_and_activate_request_codecs_roundtrip() {
+        let (key, version) = decode_pull_model(&encode_pull_model("t/m", Some("v3"))).unwrap();
+        assert_eq!(key, "t/m");
+        assert_eq!(version.as_deref(), Some("v3"));
+        let (key, version) = decode_pull_model(&encode_pull_model("t/m", None)).unwrap();
+        assert_eq!(key, "t/m");
+        assert!(version.is_none());
+        let (key, version) =
+            decode_activate_model(&encode_activate_model("t/m", "v3")).unwrap();
+        assert_eq!((key.as_str(), version.as_str()), ("t/m", "v3"));
+        assert!(decode_activate_model(b"{\"key\":\"m\"}").is_err());
+    }
+
+    #[test]
+    fn control_reply_codec_roundtrips_ok_and_rejected() {
+        let payload = encode_control_ok("push", "acme/m", "v2", u64::MAX - 5, 4096);
+        match decode_control_reply(&payload).unwrap() {
+            ControlOutcome::Ok(ack) => {
+                assert_eq!(ack.op, "push");
+                assert_eq!(ack.key, "acme/m");
+                assert_eq!(ack.version, "v2");
+                assert_eq!(ack.checksum, u64::MAX - 5);
+                assert_eq!(ack.bytes, 4096);
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_control_reply(&encode_rejection("checksum_mismatch", "boom")).unwrap() {
+            ControlOutcome::Rejected { reason, detail } => {
+                assert_eq!(reason, "checksum_mismatch");
+                assert_eq!(detail, "boom");
+            }
+            other => panic!("{other:?}"),
+        }
+        // rejection unwrap is a typed artifact error
+        let e = decode_control_reply(&encode_rejection("version_conflict", "m@v1"))
+            .unwrap()
+            .ack()
+            .unwrap_err();
+        assert!(matches!(e, AviError::Artifact(_)), "{e}");
+    }
+
+    #[test]
+    fn pull_reply_codec_verifies_checksum_client_side() {
+        let artifact = b"pretend-artifact-bytes".to_vec();
+        let payload = encode_pull_reply("m", "v1", &artifact);
+        match decode_pull_reply(&payload).unwrap() {
+            PullOutcome::Pulled(m) => {
+                assert_eq!(m.key, "m");
+                assert_eq!(m.version, "v1");
+                assert_eq!(m.artifact, artifact);
+                assert_eq!(m.checksum, crate::artifact::fnv64(&artifact));
+            }
+            other => panic!("{other:?}"),
+        }
+        // a flipped artifact byte no longer matches the declared digest
+        let mut bad = encode_pull_reply("m", "v1", &artifact);
+        let n = bad.len();
+        bad[n - 1] ^= 0xFF;
+        assert!(matches!(
+            decode_pull_reply(&bad).unwrap_err(),
+            WireFault::Malformed(_)
+        ));
+        // rejection path
+        match decode_pull_reply(&encode_rejection("unknown_model", "m@v9")).unwrap() {
+            PullOutcome::Rejected { reason, .. } => assert_eq!(reason, "unknown_model"),
+            other => panic!("{other:?}"),
         }
     }
 

@@ -42,6 +42,12 @@ pub enum AviError {
     /// any fit touches the data — a store that opens is trustworthy.
     Storage(String),
 
+    /// Model-artifact failure: malformed or truncated binary envelope,
+    /// artifact checksum mismatch, corrupt artifact-store manifest.
+    /// Raised *before* a pushed or loaded model can route traffic — an
+    /// artifact that decodes is byte-verified.
+    Artifact(String),
+
     /// Network front-door failure: bind/connect errors, malformed or
     /// oversized wire frames, protocol-version mismatches, connection
     /// timeouts.  Always a typed reply or a closed socket — never a
@@ -69,6 +75,7 @@ impl fmt::Display for AviError {
             AviError::Coordinator(m) => write!(f, "coordinator error: {m}"),
             AviError::Registry(m) => write!(f, "registry error: {m}"),
             AviError::Storage(m) => write!(f, "storage error: {m}"),
+            AviError::Artifact(m) => write!(f, "artifact error: {m}"),
             AviError::Net(m) => write!(f, "network error: {m}"),
             AviError::RateLimited(m) => write!(f, "rate limited: {m}"),
             AviError::Io(e) => write!(f, "io error: {e}"),
@@ -118,6 +125,10 @@ mod tests {
         assert_eq!(
             AviError::Storage("seg_0.bin checksum mismatch".into()).to_string(),
             "storage error: seg_0.bin checksum mismatch"
+        );
+        assert_eq!(
+            AviError::Artifact("truncated envelope".into()).to_string(),
+            "artifact error: truncated envelope"
         );
     }
 }

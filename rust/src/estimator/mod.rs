@@ -194,6 +194,12 @@ pub trait FittedModel: Send + Sync + std::fmt::Debug {
     /// Serialize the transform-relevant state as the envelope payload.
     fn payload_json(&self) -> String;
 
+    /// Concrete-type escape hatch for non-JSON codecs: the binary
+    /// artifact codec ([`crate::artifact::codec`]) downcasts to the
+    /// wrapper matching [`FittedModel::payload_kind`] instead of
+    /// re-parsing `payload_json` output.
+    fn as_any(&self) -> &dyn std::any::Any;
+
     /// Clone through the trait object (fitted models are plain data).
     fn clone_box(&self) -> Box<dyn FittedModel>;
 }
@@ -273,6 +279,10 @@ impl FittedModel for FittedGeneratorSet {
         persist::generator_set_to_json(&self.set)
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn clone_box(&self) -> Box<dyn FittedModel> {
         Box::new(self.clone())
     }
@@ -310,6 +320,10 @@ impl FittedModel for FittedVca {
 
     fn payload_json(&self) -> String {
         persist::vca_to_json(&self.model)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 
     fn clone_box(&self) -> Box<dyn FittedModel> {

@@ -23,6 +23,12 @@
 //! Numeric fidelity: floats are emitted with Rust's shortest-round-trip
 //! formatting, so a loaded model transforms **bit-identically** to the
 //! fitted one (pinned by `rust/tests/estimator_conformance.rs`).
+//!
+//! The same envelope also travels in a compact binary form — the `AVIB`
+//! codec in [`crate::artifact::codec`] (raw little-endian f64 bits, so
+//! fidelity is bitwise by construction).  [`model_from_bytes`] /
+//! [`pipeline_from_bytes`] are the version gate that makes the two
+//! codecs interchangeable: the leading magic byte selects the decoder.
 
 use std::fs;
 use std::path::Path;
@@ -80,9 +86,24 @@ pub fn save_model(model: &dyn FittedModel, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load one fitted model from a file.
+/// Load one fitted model from a file — JSON or binary, sniffed by magic.
 pub fn load_model(path: &Path) -> Result<Box<dyn FittedModel>> {
-    model_from_json(&fs::read_to_string(path)?)
+    model_from_bytes(&fs::read(path)?)
+}
+
+/// The codec-agnostic version gate for single models: bytes starting
+/// with the [`crate::artifact::codec::MAGIC`] route to the binary
+/// decoder, anything else must be the UTF-8 JSON envelope.  Both paths
+/// produce bit-identical models, so callers never care which codec
+/// wrote the artifact.
+pub fn model_from_bytes(bytes: &[u8]) -> Result<Box<dyn FittedModel>> {
+    if crate::artifact::codec::is_binary(bytes) {
+        return crate::artifact::codec::decode_model(bytes);
+    }
+    let text = std::str::from_utf8(bytes).map_err(|_| {
+        AviError::Data("persist: model envelope is neither binary (AVIB) nor UTF-8 JSON".into())
+    })?;
+    model_from_json(text)
 }
 
 fn decode_payload(estimator: &str, kind: &str, payload: &str) -> Result<Box<dyn FittedModel>> {
@@ -105,8 +126,9 @@ fn decode_payload(estimator: &str, kind: &str, payload: &str) -> Result<Box<dyn 
 }
 
 /// Report for a loaded model: name and sizes survive persistence; the
-/// fit-time counters and wall-clock do not.
-fn loaded_report(name: &str, n_generators: usize, n_order_terms: usize) -> FitReport {
+/// fit-time counters and wall-clock do not.  (`pub(crate)` so the
+/// binary codec in [`crate::artifact::codec`] builds identical reports.)
+pub(crate) fn loaded_report(name: &str, n_generators: usize, n_order_terms: usize) -> FitReport {
     FitReport {
         name: name.to_string(),
         n_generators,
@@ -212,9 +234,24 @@ pub fn save(model: &PipelineModel, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a pipeline from a file.
+/// Load a pipeline from a file — JSON or binary, sniffed by magic.
 pub fn load(path: &Path) -> Result<PipelineModel> {
-    pipeline_from_json(&fs::read_to_string(path)?)
+    pipeline_from_bytes(&fs::read(path)?)
+}
+
+/// The codec-agnostic version gate for pipelines: binary envelopes (by
+/// magic sniff) decode through [`crate::artifact::codec`], anything
+/// else through the JSON path.  JSON and binary payloads are fully
+/// interchangeable — the conformance suite pins the cross-codec
+/// round-trip bitwise.
+pub fn pipeline_from_bytes(bytes: &[u8]) -> Result<PipelineModel> {
+    if crate::artifact::codec::is_binary(bytes) {
+        return crate::artifact::codec::decode_pipeline(bytes);
+    }
+    let text = std::str::from_utf8(bytes).map_err(|_| {
+        AviError::Data("persist: pipeline envelope is neither binary (AVIB) nor UTF-8 JSON".into())
+    })?;
+    pipeline_from_json(text)
 }
 
 // ---------------------------------------------------------------------

@@ -35,7 +35,10 @@
 //!   [`estimator::FitReport`]; the typed
 //!   [`estimator::EstimatorConfig`] builds them, and
 //!   [`estimator::persist`] round-trips every fitted model (and whole
-//!   pipelines) through one versioned envelope.
+//!   pipelines) through one versioned envelope — JSON or the compact
+//!   [`artifact::codec`] binary form, selected by a magic sniff; the
+//!   checksummed [`artifact::ArtifactStore`] gives envelopes a durable
+//!   `key@version` home.
 //! * **Pipeline & serving** — [`pipeline`] (Algorithm 2: per-class fits
 //!   → (FT) transform → ℓ1 SVM, mixed-method grid search, Table-3
 //!   reporting) and the [`coordinator`] serving control plane
@@ -71,6 +74,7 @@
 //!     report.name(), report.n_generators, report.total_size(), report.wall_secs);
 //! ```
 
+pub mod artifact;
 pub mod backend;
 pub mod baselines;
 pub mod bench;

@@ -11,6 +11,9 @@
 //! ```text
 //! avi-scale dataset <action> [opts]       # out-of-core data plane:
 //!                                         #   ingest | inspect | stats | split | list
+//! avi-scale model   <action> [opts]       # binary model artifacts:
+//!                                         #   pack | unpack | inspect | push |
+//!                                         #   pull | activate | query
 //! avi-scale fit      [opts]               # fit one OAVI/ABM/VCA model per class
 //! avi-scale pipeline [opts]               # full Algorithm-2 train/test run
 //! avi-scale serve    [opts]               # batched transform service demo,
@@ -29,8 +32,12 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 use std::sync::Arc;
 
+use avi_scale::artifact::{self, ArtifactStore};
 use avi_scale::backend::{ComputeBackend, NativeBackend, StoreMode};
-use avi_scale::coordinator::frontdoor::{FrontDoor, FrontDoorConfig, RateLimit};
+use avi_scale::coordinator::frontdoor::{
+    FrontDoor, FrontDoorConfig, ModelControl, RateLimit, DEFAULT_MAX_RETAINED,
+};
+use avi_scale::coordinator::wire::WireClient;
 use avi_scale::coordinator::pool::ThreadPool;
 use avi_scale::coordinator::registry::{namespaced, parse_spec, ModelRegistry};
 use avi_scale::coordinator::router::ModelRouter;
@@ -60,11 +67,14 @@ fn main() -> ExitCode {
         eprintln!("{USAGE}");
         return ExitCode::from(2);
     };
-    // `dataset <action>` takes one positional action before the --key
-    // value pairs; every other command is options-only
+    // `dataset <action>` / `model <action>` take one positional action
+    // before the --key value pairs; every other command is options-only
     let (cmd, rest) = if first == "dataset" {
         let action = args.get(1).map(|s| s.as_str()).unwrap_or("list");
         (format!("dataset {action}"), &args[2.min(args.len())..])
+    } else if first == "model" {
+        let action = args.get(1).map(|s| s.as_str()).unwrap_or("help");
+        (format!("model {action}"), &args[2.min(args.len())..])
     } else {
         (first.clone(), &args[1..])
     };
@@ -79,12 +89,19 @@ fn main() -> ExitCode {
         "dataset inspect" => cmd_dataset_inspect(&opts),
         "dataset stats" => cmd_dataset_stats(&opts),
         "dataset split" => cmd_dataset_split(&opts),
+        "model pack" => cmd_model_pack(&opts),
+        "model unpack" => cmd_model_unpack(&opts),
+        "model inspect" => cmd_model_inspect(&opts),
+        "model push" => cmd_model_push(&opts),
+        "model pull" => cmd_model_pull(&opts),
+        "model activate" => cmd_model_activate(&opts),
+        "model query" => cmd_model_query(&opts),
         "fit" => cmd_fit(&opts),
         "pipeline" => cmd_pipeline(&opts),
         "predict" => cmd_predict(&opts),
         "serve" => cmd_serve(&opts),
         "bound" => cmd_bound(&opts),
-        "help" | "--help" | "-h" | "dataset help" => {
+        "help" | "--help" | "-h" | "dataset help" | "model help" => {
             println!("{USAGE}");
             Ok(())
         }
@@ -118,6 +135,29 @@ COMMANDS:
                 dataset stats   --data <dir>    streaming per-column min/max/mean
                 dataset split   --data <dir> --out-train <dir> --out-test <dir>
                                 [--test-frac <f>] [--seed <n>]
+  model       binary model artifacts (AVIB codec — docs/model-artifacts.md):
+                model pack     --model <envelope> --out <f>
+                               re-encode a saved pipeline (JSON or binary)
+                               as a compact binary artifact; floats are
+                               preserved bitwise in both directions
+                model unpack   --model <artifact> --out <f>
+                               back to the JSON envelope
+                model inspect  --model <f> | --store <dir>
+                               codec, sizes, FNV-1a-64 checksum; with
+                               --store, the checksummed manifest listing
+                model push     --addr <ip:port> --key <k> --version <v>
+                               --model <f> [--force true]
+                               upload to a live server's artifact store
+                               (refused on checksum mismatch or when the
+                               version exists with different contents)
+                model pull     --addr <ip:port> --key <k> [--version <v>]
+                               --out <f>   download the (checksum-verified)
+                               artifact; latest version when omitted
+                model activate --addr <ip:port> --key <k> --version <v>
+                               hot-swap the route to a stored version
+                model query    --addr <ip:port> --route <k> --row <csv>
+                               one prediction; scores print bitwise
+                               (shortest-round-trip floats)
   fit         fit generator models per class; print |G|+|O|, degree, SPAR
   pipeline    Algorithm-2 train/test run with a 60/40 split
               (--save <path> persists the trained pipeline as JSON)
@@ -216,6 +256,14 @@ SERVE OPTIONS:
                          error (default 1024)
   --max-conns <n>        handler-thread cap; connections beyond it get a
                          typed `busy` error frame (default 256)
+  --artifact-dir <dir>   enable the model control plane on --listen: open
+                         (or create) a checksummed artifact store there
+                         and accept PushModel / PullModel / ActivateModel
+                         frames; without it control frames get a typed
+                         `push_disabled` rejection
+  --max-versions <n>     retained versions per key in the store/registry
+                         (default 4; the latest and every live route stay
+                         pinned regardless)
 ";
 
 fn parse_opts(args: &[String]) -> Option<HashMap<String, String>> {
@@ -580,6 +628,155 @@ fn cmd_predict(opts: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// model — binary artifact family (docs/model-artifacts.md)
+// ---------------------------------------------------------------------
+
+fn req<'a>(opts: &'a HashMap<String, String>, key: &str, what: &str) -> Result<&'a String> {
+    opts.get(key)
+        .ok_or_else(|| avi_scale::AviError::Config(format!("{what} needs --{key} <value>")))
+}
+
+fn opt_force(opts: &HashMap<String, String>) -> bool {
+    opts.get("force").map(|v| v == "true" || v == "1").unwrap_or(false)
+}
+
+/// Re-encode a saved pipeline envelope (either codec) as a compact
+/// binary artifact.  Floats survive bitwise in both directions.
+fn cmd_model_pack(opts: &HashMap<String, String>) -> Result<()> {
+    let src = req(opts, "model", "model pack")?;
+    let out = req(opts, "out", "model pack")?;
+    let bytes = std::fs::read(src)?;
+    let model = avi_scale::estimator::persist::pipeline_from_bytes(&bytes)?;
+    let packed = artifact::encode_pipeline(&model)?;
+    std::fs::write(out, &packed)?;
+    println!("packed   = {out}");
+    println!(
+        "source   = {src} ({})",
+        if artifact::codec::is_binary(&bytes) { "binary" } else { "json" }
+    );
+    println!("bytes    = {} -> {}", bytes.len(), packed.len());
+    println!("checksum = {:016x}", artifact::fnv64(&packed));
+    Ok(())
+}
+
+/// Back to the JSON envelope (the two codecs are interchangeable behind
+/// the persistence version gate).
+fn cmd_model_unpack(opts: &HashMap<String, String>) -> Result<()> {
+    let src = req(opts, "model", "model unpack")?;
+    let out = req(opts, "out", "model unpack")?;
+    let model = avi_scale::estimator::persist::load(std::path::Path::new(src))?;
+    avi_scale::estimator::persist::save(&model, std::path::Path::new(out))?;
+    println!("unpacked = {src} -> {out}");
+    Ok(())
+}
+
+/// Codec, shape, and checksum of one artifact — or the manifest listing
+/// of a whole store directory via `--store`.
+fn cmd_model_inspect(opts: &HashMap<String, String>) -> Result<()> {
+    if let Some(dir) = opts.get("store") {
+        let store = ArtifactStore::open(dir)?;
+        println!("store = {dir} ({} artifacts, checksums verified)", store.list().len());
+        println!("{:<32} {:>10}  {:<16}  file", "key@version", "bytes", "checksum");
+        for e in store.list() {
+            println!(
+                "{:<32} {:>10}  {:016x}  {}",
+                format!("{}@{}", e.key, e.version),
+                e.bytes,
+                e.checksum,
+                e.file
+            );
+        }
+        return Ok(());
+    }
+    let src = req(opts, "model", "model inspect")?;
+    let bytes = std::fs::read(src)?;
+    let model = avi_scale::estimator::persist::pipeline_from_bytes(&bytes)?;
+    println!("model    = {src}");
+    println!(
+        "codec    = {}",
+        if artifact::codec::is_binary(&bytes) { "binary (AVIB)" } else { "json" }
+    );
+    println!("method   = {}", model.transformer.method_name);
+    println!("classes  = {}", model.n_classes);
+    println!("bytes    = {}", bytes.len());
+    println!("checksum = {:016x}", artifact::fnv64(&bytes));
+    Ok(())
+}
+
+/// Upload an artifact to a live server (`serve --listen --artifact-dir`).
+fn cmd_model_push(opts: &HashMap<String, String>) -> Result<()> {
+    let addr = req(opts, "addr", "model push")?;
+    let key = req(opts, "key", "model push")?;
+    let version = req(opts, "version", "model push")?;
+    let src = req(opts, "model", "model push")?;
+    let bytes = std::fs::read(src)?;
+    let mut client = WireClient::connect(addr)?;
+    let ack = client.push_model(key, version, &bytes, opt_force(opts))?.ack()?;
+    println!(
+        "pushed   = {}@{} ({} bytes, checksum {:016x})",
+        ack.key, ack.version, ack.bytes, ack.checksum
+    );
+    Ok(())
+}
+
+/// Download the checksum-verified artifact for `key` (latest version
+/// unless `--version` is given).
+fn cmd_model_pull(opts: &HashMap<String, String>) -> Result<()> {
+    let addr = req(opts, "addr", "model pull")?;
+    let key = req(opts, "key", "model pull")?;
+    let out = req(opts, "out", "model pull")?;
+    let mut client = WireClient::connect(addr)?;
+    let pulled = client
+        .pull_model(key, opts.get("version").map(|s| s.as_str()))?
+        .model()?;
+    std::fs::write(out, &pulled.artifact)?;
+    println!(
+        "pulled   = {}@{} -> {out} ({} bytes, checksum {:016x})",
+        pulled.key,
+        pulled.version,
+        pulled.artifact.len(),
+        pulled.checksum
+    );
+    Ok(())
+}
+
+/// Hot-swap a route to a stored version on a live server.
+fn cmd_model_activate(opts: &HashMap<String, String>) -> Result<()> {
+    let addr = req(opts, "addr", "model activate")?;
+    let key = req(opts, "key", "model activate")?;
+    let version = req(opts, "version", "model activate")?;
+    let mut client = WireClient::connect(addr)?;
+    let ack = client.activate_model(key, version)?.ack()?;
+    println!("active   = {}@{}", ack.key, ack.version);
+    Ok(())
+}
+
+/// One prediction over the wire; scores print as shortest-round-trip
+/// floats so two servers can be compared bitwise from the shell.
+fn cmd_model_query(opts: &HashMap<String, String>) -> Result<()> {
+    let addr = req(opts, "addr", "model query")?;
+    let route = req(opts, "route", "model query")?;
+    let row = req(opts, "row", "model query")?
+        .split(',')
+        .map(|t| {
+            t.trim().parse::<f64>().map_err(|_| {
+                avi_scale::AviError::Config(format!("--row: '{t}' is not a number"))
+            })
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    let mut client = WireClient::connect(addr)?;
+    let answer = client.request(route, &ServeRequest::row(row))?.answer()?;
+    let p = answer
+        .predictions
+        .first()
+        .ok_or_else(|| avi_scale::AviError::Net("empty prediction set".into()))?;
+    println!("route  = {}@{}", answer.key, answer.version);
+    println!("label  = {}", p.label);
+    println!("scores = {:?}", p.scores);
+    Ok(())
+}
+
 /// Parse `--ab key:v1=70,v2=30` into `(key, [(version, weight)])`.
 fn parse_ab(spec: &str) -> Result<(String, Vec<(String, u32)>)> {
     let (key, arms_src) = spec
@@ -665,7 +862,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         } else {
             Arc::new(avi_scale::pipeline::train_pipeline(&cfg, &split.train)?)
         };
-        registry.insert(namespaced(tenant, "default"), "v1", model);
+        registry.insert(namespaced(tenant, "default"), "v1", model)?;
     }
 
     // router: the --ab key gets its weighted split, every other key its
@@ -714,6 +911,26 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
                 Ok(RateLimit { per_sec, burst: opt_f64(opts, "burst", per_sec.max(1.0)) })
             })
             .transpose()?;
+        // --artifact-dir arms the model control plane: the registry the
+        // routes were built from becomes the conflict gate for pushes,
+        // and activations hot-swap through this same router
+        let model_control = match opts.get("artifact-dir") {
+            Some(dir) => {
+                let store = ArtifactStore::open(dir)?;
+                let max_versions =
+                    opt_usize(opts, "max-versions", DEFAULT_MAX_RETAINED);
+                println!(
+                    "artifacts = {dir} ({} stored, max {max_versions} versions/key)",
+                    store.list().len()
+                );
+                Some(Arc::new(
+                    ModelControl::new(registry, store, serve_cfg.clone())
+                        .with_tenant(tenant)
+                        .with_max_retained(max_versions),
+                ))
+            }
+            None => None,
+        };
         let fd_cfg = FrontDoorConfig {
             addr: addr.clone(),
             read_timeout: std::time::Duration::from_millis(opt_u64(
@@ -729,6 +946,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
             max_frame_bytes: opt_usize(opts, "max-frame-kb", 1024) << 10,
             rate_limit,
             max_connections: opt_usize(opts, "max-conns", 256),
+            model_control,
         };
         let fd = FrontDoor::start(Arc::new(router), fd_cfg)?;
         // the e2e harness reads this line to learn the ephemeral port;
@@ -746,6 +964,10 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         println!("wire.timed_out      = {}", wire.timed_out);
         println!("wire.malformed      = {}", wire.malformed);
         println!("wire.oversized      = {}", wire.oversized);
+        println!(
+            "wire.model_ops      = {} push / {} pull / {} activate",
+            wire.model_pushes, wire.model_pulls, wire.model_activations
+        );
         println!("wire.bytes          = {} in / {} out", wire.bytes_in, wire.bytes_out);
         println!("{}", report.to_json());
         return Ok(());

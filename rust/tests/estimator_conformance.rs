@@ -6,11 +6,12 @@
 //! `VanishingIdealEstimator` + `FittedModel` inherits this suite by
 //! being added to `EstimatorConfig`.
 
+use avi_scale::artifact;
 use avi_scale::backend::{ComputeBackend, NativeBackend, ShardedBackend};
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::estimator::persist::{
-    load_model, model_from_json, model_to_json, pipeline_from_json, pipeline_to_json,
-    save_model,
+    load_model, model_from_bytes, model_from_json, model_to_json, pipeline_from_bytes,
+    pipeline_from_json, pipeline_to_json, save_model,
 };
 use avi_scale::estimator::EstimatorConfig;
 use avi_scale::linalg::dense::Matrix;
@@ -125,4 +126,73 @@ fn persisted_models_serve_identically_across_backends() {
             est.name()
         );
     }
+}
+
+/// Cross-codec interchangeability (the PR-2 follow-up): the JSON
+/// envelope and the binary AVIB artifact are two encodings of the same
+/// payload behind one version gate.  For every estimator, JSON → binary
+/// → JSON reproduces the envelope **byte for byte**, and the reloaded
+/// model transforms bitwise identically; the binary side is also
+/// strictly smaller.
+#[test]
+fn json_and_binary_codecs_are_interchangeable_bitwise() {
+    let ds = synthetic_dataset(400, 53);
+    let x = ds.class_matrix(0);
+    let z = ds.class_matrix(1);
+    for est in EstimatorConfig::battery(0.01) {
+        // model-level envelope
+        let model = est.fit(&x, &NativeBackend).unwrap();
+        let json = model_to_json(model.as_ref());
+        let from_json = model_from_bytes(json.as_bytes()).unwrap();
+        let bin = artifact::encode_model(from_json.as_ref()).unwrap();
+        let from_bin = model_from_bytes(&bin).unwrap();
+        assert!(
+            artifact::codec::is_binary(&bin) && !artifact::codec::is_binary(json.as_bytes()),
+            "{}: version gate must tell the codecs apart",
+            est.name()
+        );
+        assert_eq!(
+            model_to_json(from_bin.as_ref()),
+            model_to_json(from_json.as_ref()),
+            "{}: JSON -> binary -> JSON is not byte-identical",
+            est.name()
+        );
+        let t = model.transform_with(&z, &NativeBackend);
+        let tb = from_bin.transform_with(&z, &NativeBackend);
+        assert_eq!(bits(&t), bits(&tb), "{}: cross-codec transform differs", est.name());
+        assert!(
+            bin.len() < json.len(),
+            "{}: binary ({}) must be smaller than JSON ({})",
+            est.name(),
+            bin.len(),
+            json.len()
+        );
+    }
+
+    // pipeline-level envelope, through the same gate
+    let cfg = PipelineConfig {
+        estimator: EstimatorConfig::battery(0.01)[0],
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    let pds = synthetic_dataset(400, 54);
+    let probe = synthetic_dataset(60, 55);
+    let model = train_pipeline_with_backend(&cfg, &pds, &NativeBackend).unwrap();
+    let json = pipeline_to_json(&model);
+    let from_json = pipeline_from_bytes(json.as_bytes()).unwrap();
+    let bin = artifact::encode_pipeline(&from_json).unwrap();
+    let from_bin = pipeline_from_bytes(&bin).unwrap();
+    assert_eq!(
+        pipeline_to_json(&from_bin),
+        pipeline_to_json(&from_json),
+        "pipeline: JSON -> binary -> JSON is not byte-identical"
+    );
+    let (la, sa) = model.predict_scores_with_backend(&probe.x, &NativeBackend);
+    let (lb, sb) = from_bin.predict_scores_with_backend(&probe.x, &NativeBackend);
+    assert_eq!(la, lb, "pipeline: cross-codec labels diverge");
+    for (ra, rb) in sa.iter().zip(&sb) {
+        let rbits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(rbits(ra), rbits(rb), "pipeline: cross-codec score bits diverge");
+    }
+    assert!(bin.len() < json.len(), "pipeline: binary must be smaller than JSON");
 }

@@ -12,10 +12,18 @@
 //! * a `Shutdown` frame drains the in-flight batch before the process
 //!   exits and prints its `RouterReport` with the wire counters.
 //!
+//! Plus the ISSUE-9 model control plane, against the same live server
+//! (`--artifact-dir`): a binary artifact pushed over the wire,
+//! activated, and served **bitwise identically** to in-process
+//! prediction; a corrupted push refused with a typed `checksum_mismatch`
+//! and never routable; garbage with an honest checksum refused as
+//! `bad_artifact`; pulls returning the exact pushed bytes; and control
+//! ops rate-limited under their own `model-control/<key>` buckets.
+//!
 //! One server instance serves every scenario; the token budget is
 //! arranged so each outcome is deterministic (`--rate-limit 0` never
 //! refills, so `--burst 3` grants route `acme/m` exactly three
-//! admissions, and the later scenarios draw on route `acme/aux`).
+//! admissions, and the later scenarios draw on fresh routes/buckets).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -23,10 +31,15 @@ use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::Duration;
 
+use avi_scale::artifact;
+use avi_scale::backend::NativeBackend;
 use avi_scale::coordinator::service::{ServeConfig, ServeRequest, TransformService};
-use avi_scale::coordinator::wire::{self, FrameKind, WireClient, WireOutcome};
+use avi_scale::coordinator::wire::{
+    self, ControlOutcome, FrameKind, PullOutcome, WireClient, WireOutcome,
+};
 use avi_scale::data::synthetic::synthetic_dataset;
 use avi_scale::estimator::{persist, EstimatorConfig};
+use avi_scale::linalg::dense::Matrix;
 use avi_scale::oavi::OaviConfig;
 use avi_scale::ordering::FeatureOrdering;
 use avi_scale::pipeline::{train_pipeline, PipelineConfig};
@@ -95,7 +108,9 @@ fn front_door_end_to_end() {
             "--read-timeout-ms",
             "1000",
             "--max-frame-kb",
-            "4",
+            "256",
+            "--artifact-dir",
+            &dir.join("store").display().to_string(),
         ])
         .stdout(Stdio::piped())
         .stderr(Stdio::null())
@@ -163,6 +178,102 @@ fn front_door_end_to_end() {
     }
     drop(client);
 
+    // -- model control plane: push a binary artifact, activate it, and
+    //    serve it bitwise identically to in-process prediction ----------
+    let train2 = synthetic_dataset(300, 73);
+    let cfg2 = PipelineConfig {
+        estimator: EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.02)),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    let model2 = train_pipeline(&cfg2, &train2).unwrap();
+    let artifact_bytes = artifact::encode_pipeline(&model2).unwrap();
+    let mut deployer = WireClient::connect(&addr).unwrap();
+    let ack = deployer
+        .push_model("m2", "v1", &artifact_bytes, false)
+        .unwrap()
+        .ack()
+        .unwrap();
+    assert_eq!(ack.key, "acme/m2", "push must land under the server's tenant");
+    assert_eq!(ack.bytes, artifact_bytes.len() as u64);
+    assert_eq!(ack.checksum, artifact::fnv64(&artifact_bytes));
+    deployer.activate_model("m2", "v1").unwrap().ack().unwrap();
+
+    let mut probe = Matrix::zeros(rows.len(), ds.x.cols());
+    for (i, row) in rows.iter().enumerate() {
+        for (j, v) in row.iter().enumerate() {
+            probe.set(i, j, *v);
+        }
+    }
+    let (labels2, scores2) = model2.predict_scores_with_backend(&probe, &NativeBackend);
+    let answer = deployer
+        .request("acme/m2", &ServeRequest::batch(rows.clone()))
+        .unwrap()
+        .answer()
+        .unwrap();
+    assert_eq!(answer.key, "acme/m2");
+    assert_eq!(answer.version, "v1");
+    for (i, p) in answer.predictions.iter().enumerate() {
+        assert_eq!(p.label, labels2[i]);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&p.scores),
+            bits(&scores2[i]),
+            "pushed+activated model must serve bit-identical scores"
+        );
+    }
+
+    // pulling returns the exact bytes that were pushed (checksum
+    // re-verified on both ends)
+    let pulled = deployer.pull_model("m2", None).unwrap().model().unwrap();
+    assert_eq!(pulled.key, "acme/m2");
+    assert_eq!(pulled.version, "v1");
+    assert_eq!(pulled.artifact, artifact_bytes);
+
+    // the model-control bucket for this key (burst 3: push + activate +
+    // pull) is now spent — control ops are rate-limited independently of
+    // the data plane, which answered acme/m2 above just fine
+    match deployer.pull_model("m2", None).unwrap() {
+        PullOutcome::Rejected { reason, .. } => assert_eq!(reason, "rate_limited"),
+        other => panic!("expected rate_limited control op, got {other:?}"),
+    }
+
+    // -- a corrupted push is refused with a typed checksum_mismatch ------
+    let mut lying = wire::encode_push_model("corrupt", "v1", &artifact_bytes, false);
+    *lying.last_mut().unwrap() ^= 0xff; // bit-rot after the checksum was computed
+    let mut corrupt = TcpStream::connect(&addr).unwrap();
+    corrupt.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    wire::write_frame(&mut corrupt, FrameKind::PushModel, &lying).unwrap();
+    let frame = wire::read_frame(&mut corrupt, 1 << 20).unwrap();
+    assert_eq!(frame.kind, FrameKind::Reply);
+    match wire::decode_control_reply(&frame.payload).unwrap() {
+        ControlOutcome::Rejected { reason, .. } => assert_eq!(reason, "checksum_mismatch"),
+        other => panic!("expected checksum_mismatch, got {other:?}"),
+    }
+    drop(corrupt);
+
+    // -- garbage with an honest checksum is refused as bad_artifact and
+    //    never becomes routable or activatable ---------------------------
+    match deployer
+        .push_model("g", "v1", b"definitely not a model artifact", false)
+        .unwrap()
+    {
+        ControlOutcome::Rejected { reason, .. } => assert_eq!(reason, "bad_artifact"),
+        other => panic!("expected bad_artifact, got {other:?}"),
+    }
+    match deployer.activate_model("g", "v1").unwrap() {
+        ControlOutcome::Rejected { reason, .. } => assert_eq!(reason, "unknown_model"),
+        other => panic!("expected unknown_model, got {other:?}"),
+    }
+    match deployer
+        .request("acme/g", &ServeRequest::row(ds.x.row(0).to_vec()))
+        .unwrap()
+    {
+        WireOutcome::Rejected { reason, .. } => assert_eq!(reason, "unknown_route"),
+        other => panic!("a refused artifact must never be routable, got {other:?}"),
+    }
+    drop(deployer);
+
     // -- raw garbage gets a typed malformed error, then a close ----------
     let mut raw = TcpStream::connect(&addr).unwrap();
     raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
@@ -175,10 +286,17 @@ fn front_door_end_to_end() {
     assert!(rest.is_empty(), "server must close after a malformed header");
     drop(raw);
 
-    // -- oversized is rejected from the header alone ---------------------
+    // -- oversized is rejected from the header alone: a hand-crafted
+    //    frame declaring u32::MAX payload bytes must be refused without
+    //    the server allocating (or reading) any of them
     let mut big = TcpStream::connect(&addr).unwrap();
     big.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-    wire::write_frame(&mut big, FrameKind::Request, &[b'x'; 8192]).unwrap();
+    let mut lying_header = [0u8; 12];
+    lying_header[..4].copy_from_slice(b"AVIW");
+    lying_header[4] = wire::WIRE_VERSION;
+    lying_header[5] = FrameKind::Request as u8;
+    lying_header[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    big.write_all(&lying_header).unwrap();
     let frame = wire::read_frame(&mut big, 1 << 16).unwrap();
     assert_eq!(frame.kind, FrameKind::Error);
     assert_eq!(wire::decode_wire_error(&frame.payload).0, "oversized");
@@ -213,10 +331,17 @@ fn front_door_end_to_end() {
     let status = child.0.wait().unwrap();
     assert!(status.success(), "server exit: {status:?}\n{tail}");
     assert!(tail.contains("\"wire\""), "report must embed wire stats:\n{tail}");
-    // happy batch + NaN + deadline (route m) + warm-up + drain (route aux)
-    assert_eq!(json_counter(&tail, "accepted"), 5, "{tail}");
-    assert_eq!(json_counter(&tail, "rejected_limit"), 2, "{tail}");
-    assert_eq!(json_counter(&tail, "rejected_route"), 1, "{tail}");
+    // happy batch + NaN + deadline (route m) + m2 batch + warm-up + drain
+    assert_eq!(json_counter(&tail, "accepted"), 6, "{tail}");
+    // two data-plane refusals on route m + one control-plane (m2 bucket)
+    assert_eq!(json_counter(&tail, "rejected_limit"), 3, "{tail}");
+    // bare-key 404 + the never-registered acme/g probe
+    assert_eq!(json_counter(&tail, "rejected_route"), 2, "{tail}");
+    // refused pushes (corrupt, garbage) and the rate-limited pull must
+    // not count as model ops
+    assert_eq!(json_counter(&tail, "model_pushes"), 1, "{tail}");
+    assert_eq!(json_counter(&tail, "model_pulls"), 1, "{tail}");
+    assert_eq!(json_counter(&tail, "model_activations"), 1, "{tail}");
     assert_eq!(json_counter(&tail, "oversized"), 1, "{tail}");
     assert!(json_counter(&tail, "malformed") >= 1, "{tail}");
     assert!(json_counter(&tail, "timed_out") >= 1, "{tail}");

@@ -30,7 +30,7 @@ CLIPPY_LOG=$(mktemp)
 cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
 # every rustc diagnostic carries a "--> path:line:col" span line; match
 # spans inside the strict modules regardless of header distance
-STRICT_SPANS='^[[:space:]]*--> (src/backend/|src/estimator/|src/coordinator/|src/storage/|src/data/csvio|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane|tests/storage_parity|tests/frontdoor_e2e)'
+STRICT_SPANS='^[[:space:]]*--> (src/artifact/|src/backend/|src/estimator/|src/coordinator/|src/storage/|src/data/csvio|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/micro_persist_codec|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane|tests/storage_parity|tests/frontdoor_e2e)'
 if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
   echo "FAIL: clippy findings in strict modules:"
   grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
@@ -184,6 +184,71 @@ grep -q '"wire"' "$LISTEN_OUT" || {
 grep -q '"connections": 1' "$LISTEN_OUT" || {
   echo "FAIL: front-door wire counters did not record the shutdown connection"
   cat "$LISTEN_OUT"
+  exit 1
+}
+
+echo "-- model artifacts: pack -> push -> activate -> query, bitwise (ISSUE 9 smoke)"
+"$BIN" model pack --model "$SMOKE_DIR/champ.json" --out "$SMOKE_DIR/champ.avib"
+"$BIN" model inspect --model "$SMOKE_DIR/champ.avib" | grep -q '^codec    = binary (AVIB)' || {
+  echo "FAIL: model pack did not produce a binary artifact"
+  exit 1
+}
+# a server that loaded the JSON envelope at boot; the same model arrives
+# a second time as a pushed binary artifact under a fresh key
+ART_OUT="$SMOKE_DIR/artifact.out"
+"$BIN" serve $SMOKE --model "m@v1=$SMOKE_DIR/champ.json" \
+  --listen 127.0.0.1:0 --read-timeout-ms 5000 \
+  --artifact-dir "$SMOKE_DIR/store" > "$ART_OUT" &
+ART_PID=$!
+ART_ADDR=""
+for _ in $(seq 1 100); do
+  ART_ADDR=$(sed -n 's/^listening = //p' "$ART_OUT" | head -n1)
+  [[ -n "$ART_ADDR" ]] && break
+  sleep 0.1
+done
+if [[ -z "$ART_ADDR" ]]; then
+  echo "FAIL: artifact smoke server never printed its bound address"
+  kill "$ART_PID" 2>/dev/null || true
+  exit 1
+fi
+"$BIN" model push --addr "$ART_ADDR" --key m2 --version v1 --model "$SMOKE_DIR/champ.avib"
+"$BIN" model activate --addr "$ART_ADDR" --key m2 --version v1
+# identical model behind both routes ⇒ the {:?}-formatted score lines
+# must match bit for bit (JSON-loaded vs binary-pushed serving path)
+ART_ROW="0.31,0.67,0.52"
+Q_JSON=$("$BIN" model query --addr "$ART_ADDR" --route m --row "$ART_ROW" | grep '^scores')
+Q_BIN=$("$BIN" model query --addr "$ART_ADDR" --route m2 --row "$ART_ROW" | grep '^scores')
+if [[ -z "$Q_JSON" || "$Q_JSON" != "$Q_BIN" ]]; then
+  echo "FAIL: binary-pushed route diverged from the JSON-loaded route:"
+  echo "  json: $Q_JSON"
+  echo "  bin:  $Q_BIN"
+  kill "$ART_PID" 2>/dev/null || true
+  exit 1
+fi
+# a pull must return the exact pushed bytes (checksummed at both ends)
+"$BIN" model pull --addr "$ART_ADDR" --key m2 --out "$SMOKE_DIR/pulled.avib"
+cmp -s "$SMOKE_DIR/champ.avib" "$SMOKE_DIR/pulled.avib" || {
+  echo "FAIL: pulled artifact differs from the pushed bytes"
+  kill "$ART_PID" 2>/dev/null || true
+  exit 1
+}
+ART_PORT="${ART_ADDR##*:}"
+exec 3<>"/dev/tcp/127.0.0.1/$ART_PORT"
+printf 'AVIW\x01\x04\x00\x00\x00\x00\x00\x00' >&3
+exec 3<&- 3>&-
+if ! wait "$ART_PID"; then
+  echo "FAIL: artifact smoke server exited non-zero after a Shutdown frame"
+  cat "$ART_OUT"
+  exit 1
+fi
+grep -q '"model_pushes": 1' "$ART_OUT" || {
+  echo "FAIL: wire counters did not record the model push"
+  cat "$ART_OUT"
+  exit 1
+}
+grep -q '"model_activations": 1' "$ART_OUT" || {
+  echo "FAIL: wire counters did not record the activation"
+  cat "$ART_OUT"
   exit 1
 }
 
