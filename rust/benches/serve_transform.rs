@@ -1,0 +1,117 @@
+//! Serve-transform bench: cold-rebuild vs compiled-plan per-request cost.
+//!
+//! The legacy request path re-derives everything x-independent on every
+//! call (permutation buffer, per-class eval stores, `C`/`U` operands,
+//! per-class block matrices + concatenation); the compiled
+//! [`TransformPlan`] hoists all of it to build time and serves from
+//! per-worker scratch.  This bench measures both paths per request at
+//! m ∈ {1, 32, 1024} rows, dense and forced-sparse kernels, plus the
+//! steady-state scratch growth count (must be 0), and emits
+//! `BENCH_serve_transform.json` for the trajectory gate
+//! (AVI_BENCH_REPS to grow).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use avi_scale::backend::NativeBackend;
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::estimator::plan::PlanPolicy;
+use avi_scale::estimator::EstimatorConfig;
+use avi_scale::linalg::dense::Matrix;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::plan::{TransformPlan, TransformScratch};
+use avi_scale::pipeline::{train_pipeline, PipelineConfig};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+fn main() {
+    let base_reps: usize = std::env::var("AVI_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let ds = synthetic_dataset(2_000, 9);
+    let cfg = PipelineConfig {
+        estimator: EstimatorConfig::parse("cgavi-ihb", 0.01).unwrap(),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    let model = Arc::new(train_pipeline(&cfg, &ds).unwrap());
+
+    let t0 = Instant::now();
+    let dense = TransformPlan::build(Arc::clone(&model), &PlanPolicy::default());
+    let dense_build = t0.elapsed();
+    let t0 = Instant::now();
+    let sparse = TransformPlan::build(
+        Arc::clone(&model),
+        &PlanPolicy { sparse: true, sparse_min_zero_frac: 0.0 },
+    );
+    let sparse_build = t0.elapsed();
+
+    let mut json = avi_scale::bench::BenchJson::new("serve_transform");
+    json.int("n_generators", model.transformer.n_generators() as u64);
+    json.ns("plan_build_dense", dense_build.as_secs_f64());
+    json.ns("plan_build_sparse", sparse_build.as_secs_f64());
+    json.int("sparse_classes", sparse.sparse_classes() as u64);
+    json.int("sparse_flops_saved_per_row", sparse.flops_saved_per_row());
+
+    println!(
+        "model: |G| = {}, plan build dense = {:?}, sparse = {:?} ({} sparse classes)",
+        model.transformer.n_generators(),
+        dense_build,
+        sparse_build,
+        sparse.sparse_classes()
+    );
+    println!(
+        "{:>6} {:>16} {:>16} {:>16} {:>9}",
+        "m", "cold ns/req", "prepared ns/req", "sparse ns/req", "speedup"
+    );
+
+    for &m in &[1usize, 32, 1024] {
+        // keep total rows touched roughly constant across cells
+        let reps = (base_reps * 64 / m.max(1)).clamp(20, 20_000);
+        let rows: Vec<Vec<f64>> = (0..m).map(|i| ds.x.row(i % ds.len()).to_vec()).collect();
+        let probe = Matrix::from_rows(&rows).unwrap();
+
+        // cold rebuild: the pre-plan request path
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let (labels, _) = model.predict_scores_with_backend(&probe, &NativeBackend);
+            assert_eq!(labels.len(), m);
+        }
+        let cold_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+
+        // prepared dense: warm once, then steady state must not grow
+        let mut scratch = TransformScratch::new();
+        let _ = dense.predict_scores(&probe, &mut scratch);
+        let grows_before = scratch.grows();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let (labels, _) = dense.predict_scores(&probe, &mut scratch);
+            assert_eq!(labels.len(), m);
+        }
+        let prep_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+        let steady_grows = scratch.grows() - grows_before;
+        assert_eq!(steady_grows, 0, "m={m}: steady-state scratch growth");
+
+        // prepared sparse (forced): the packed-column kernel
+        let mut sp_scratch = TransformScratch::new();
+        let _ = sparse.predict_scores(&probe, &mut sp_scratch);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let (labels, _) = sparse.predict_scores(&probe, &mut sp_scratch);
+            assert_eq!(labels.len(), m);
+        }
+        let sparse_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+
+        println!(
+            "{m:>6} {cold_ns:>16.0} {prep_ns:>16.0} {sparse_ns:>16.0} {:>8.2}x",
+            cold_ns / prep_ns
+        );
+        json.ns(&format!("cold_m{m}"), cold_ns / 1e9);
+        json.ns(&format!("prepared_m{m}"), prep_ns / 1e9);
+        json.ns(&format!("prepared_sparse_m{m}"), sparse_ns / 1e9);
+        json.num(&format!("speedup_m{m}"), cold_ns / prep_ns);
+        json.int(&format!("steady_state_grows_m{m}"), steady_grows);
+    }
+
+    json.write().expect("write BENCH_serve_transform.json");
+}

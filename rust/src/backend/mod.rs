@@ -124,7 +124,10 @@ pub use backing::{BackingCounters, FileBacking, ShardBacking, ShardLease, StoreM
 pub use sharded::ShardedBackend;
 pub use store::{CandidatePanel, ColumnStore, CrossMode, NumericsMode, PanelRecipe, PanelStats};
 
-use crate::backend::store::{gram_panel_fast_seq, gram_panel_seq, gram_stats_seq, transform_abs_seq};
+use crate::backend::store::{
+    gram_panel_fast_seq, gram_panel_seq, gram_stats_seq, transform_abs_seq,
+    transform_abs_strided_seq,
+};
 use crate::linalg::dense::Matrix;
 
 /// Streaming compute abstraction over the per-sample hot loops.
@@ -160,6 +163,30 @@ pub trait ComputeBackend {
     /// `|A·C + U|` where A is m×ℓ (the store), C is ℓ×g, U is m×g.
     /// Row-major output m×g.
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix;
+
+    /// [`ComputeBackend::transform_abs`] written into a column range of a
+    /// caller-owned m×`stride` slab: row `i`'s g-wide block lands at
+    /// `out[i*stride + col_off ..]`.  Lets the pipeline concatenate
+    /// per-class (FT) blocks without intermediate block matrices.  The
+    /// written cells must be bitwise identical to `transform_abs`'s; the
+    /// default materializes the block and copies it, sequential backends
+    /// override with direct strided writes.
+    fn transform_abs_into(
+        &self,
+        cols: &ColumnStore,
+        c: &Matrix,
+        u: &Matrix,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        let block = self.transform_abs(cols, c, u);
+        let g = u.cols();
+        for i in 0..u.rows() {
+            let base = i * stride + col_off;
+            out[base..base + g].copy_from_slice(block.row(i));
+        }
+    }
 
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str;
@@ -197,6 +224,18 @@ impl ComputeBackend for NativeBackend {
 
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
         transform_abs_seq(cols, c, u)
+    }
+
+    fn transform_abs_into(
+        &self,
+        cols: &ColumnStore,
+        c: &Matrix,
+        u: &Matrix,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        transform_abs_strided_seq(cols, c, u, out, stride, col_off)
     }
 
     fn name(&self) -> &'static str {
@@ -243,6 +282,18 @@ impl ComputeBackend for PinnedShards {
 
     fn transform_abs(&self, cols: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix {
         self.inner.transform_abs(cols, c, u)
+    }
+
+    fn transform_abs_into(
+        &self,
+        cols: &ColumnStore,
+        c: &Matrix,
+        u: &Matrix,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        self.inner.transform_abs_into(cols, c, u, out, stride, col_off)
     }
 
     fn name(&self) -> &'static str {

@@ -34,8 +34,8 @@ use std::ops::Range;
 use crate::backend::store::{
     gram_panel_fast_seq, gram_panel_partial, gram_panel_partial_fast, gram_panel_seq,
     gram_partial, gram_stats_seq, panel_cross_partial, panel_diag_partial,
-    panel_diag_partial_fast, transform_abs_seq, transform_block, CandidatePanel, ColumnStore,
-    CrossMode, NumericsMode, PanelStats,
+    panel_diag_partial_fast, transform_abs_seq, transform_abs_strided_seq, transform_block,
+    CandidatePanel, ColumnStore, CrossMode, NumericsMode, PanelStats,
 };
 use crate::backend::{ComputeBackend, NativeBackend};
 use crate::coordinator::pool::{PoolHandle, ThreadPool};
@@ -319,6 +319,38 @@ impl ComputeBackend for ShardedBackend {
             out.data_mut()[r.start * g..r.end * g].copy_from_slice(block);
         }
         out
+    }
+
+    fn transform_abs_into(
+        &self,
+        cols: &ColumnStore,
+        c: &Matrix,
+        u: &Matrix,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        let n = cols.n_shards();
+        if n == 1 || self.inner_workers == 1 {
+            return transform_abs_strided_seq(cols, c, u, out, stride, col_off);
+        }
+        let work_per_shard = cols.len().max(1) * u.cols().max(1) * (cols.rows() / n);
+        if work_per_shard < self.min_work_threshold() {
+            return transform_abs_strided_seq(cols, c, u, out, stride, col_off);
+        }
+        // workers can't share `&mut` slices of the strided slab without
+        // unsafe, so the parallel path maps owned contiguous blocks (the
+        // exact per-shard kernel) and strided-copies them in shard order
+        let ids: Vec<usize> = (0..n).collect();
+        let blocks = self.pool.map(&ids, |&s| transform_block(cols, s, c, u));
+        let g = u.cols();
+        for (s, block) in blocks.iter().enumerate() {
+            let r = cols.shard_range(s);
+            for (k, i) in r.enumerate() {
+                let base = i * stride + col_off;
+                out[base..base + g].copy_from_slice(&block[k * g..(k + 1) * g]);
+            }
+        }
     }
 
     fn name(&self) -> &'static str {

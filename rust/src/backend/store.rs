@@ -1229,6 +1229,61 @@ pub fn transform_block(store: &ColumnStore, s: usize, c: &Matrix, u: &Matrix) ->
     out
 }
 
+/// [`transform_block_into`] with an arbitrary output row stride and
+/// column offset: shard row `i` lands at
+/// `out[i*stride + col_off .. i*stride + col_off + g]`, where `out` is
+/// the caller's full m×stride slab.  This is how the pipeline writes one
+/// class's (FT) block directly into its column range of the concatenated
+/// feature matrix — no per-class block allocation, no row-by-row stitch.
+///
+/// Per (row, generator) element the arithmetic is the seed-then-
+/// ascending-j accumulation of [`transform_block_into`], so the written
+/// cells are bitwise identical to the contiguous kernel's.
+pub fn transform_block_into_strided(
+    store: &ColumnStore,
+    s: usize,
+    c: &Matrix,
+    u: &Matrix,
+    out: &mut [f64],
+    stride: usize,
+    col_off: usize,
+) {
+    let range = store.shard_range(s);
+    let g = u.cols();
+    debug_assert!(col_off + g <= stride);
+    debug_assert_eq!(c.rows(), store.len());
+    debug_assert_eq!(c.cols(), g);
+    if g == 0 {
+        return;
+    }
+    for i in range.clone() {
+        let base = i * stride + col_off;
+        out[base..base + g].copy_from_slice(u.row(i));
+    }
+    let lease = store.lease(s);
+    for j in 0..store.len() {
+        let crow = c.row(j);
+        // same column-granular sparse skip as the contiguous kernel
+        if crow.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let col = lease.col(j);
+        for (k, &a_ij) in col.iter().enumerate() {
+            let base = (range.start + k) * stride + col_off;
+            let orow = &mut out[base..base + g];
+            for (o, ck) in orow.iter_mut().zip(crow.iter()) {
+                *o += a_ij * ck;
+            }
+        }
+    }
+    for i in range {
+        let base = i * stride + col_off;
+        for v in out[base..base + g].iter_mut() {
+            *v = v.abs();
+        }
+    }
+}
+
 /// Sequential in-shard-order reduction of [`gram_partial`] — the exact
 /// reduction both backends share (bit-reproducibility anchor).
 pub fn gram_stats_seq(store: &ColumnStore, b_col: &[f64]) -> (Vec<f64>, f64) {
@@ -1255,6 +1310,22 @@ pub fn transform_abs_seq(store: &ColumnStore, c: &Matrix, u: &Matrix) -> Matrix 
         transform_block_into(store, s, c, u, &mut out.data_mut()[r.start * g..r.end * g]);
     }
     out
+}
+
+/// Sequential shard-order application of [`transform_block_into_strided`]
+/// — the strided sibling of [`transform_abs_seq`], writing into a column
+/// range of the caller's m×stride slab.
+pub fn transform_abs_strided_seq(
+    store: &ColumnStore,
+    c: &Matrix,
+    u: &Matrix,
+    out: &mut [f64],
+    stride: usize,
+    col_off: usize,
+) {
+    for s in 0..store.n_shards() {
+        transform_block_into_strided(store, s, c, u, out, stride, col_off);
+    }
 }
 
 #[cfg(test)]

@@ -239,6 +239,31 @@ impl VcaModel {
         self.transform_sharded(x, 1)
     }
 
+    /// [`VcaModel::transform_with`] written directly into a column range
+    /// of the caller's concatenated m×`stride` feature slab — the
+    /// per-class write path of the pipeline's (FT) concatenation.  The
+    /// DAG evaluation is per-element shard-independent, so the written
+    /// cells are bitwise identical to [`VcaModel::transform_with`]'s.
+    pub fn transform_into(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        let store = self.eval_store(x, backend.preferred_shards(x.rows()));
+        for (gi, &nid) in self.vanishing.iter().enumerate() {
+            for s in 0..store.n_shards() {
+                let lease = store.lease(s);
+                let col = lease.col(nid);
+                for (k, i) in store.shard_range(s).enumerate() {
+                    out[i * stride + col_off + gi] = col[k].abs();
+                }
+            }
+        }
+    }
+
     fn transform_sharded(&self, x: &Matrix, n_shards: usize) -> Matrix {
         let store = self.eval_store(x, n_shards);
         let m = x.rows();

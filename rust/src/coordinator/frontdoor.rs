@@ -782,9 +782,20 @@ fn control_activate(shared: &Shared, payload: &[u8]) -> ControlReply {
             }
         }
     };
-    shared
-        .router
-        .register(key.clone(), version.clone(), model, mc.serve_cfg.clone());
+    // adopt the transform plan compiled at registration — the hot-swap
+    // goes live with a warmed plan instead of rebuilding operands on
+    // the first request (both resolve branches leave one: `get` hits a
+    // registered entry, the store fallback just ran `insert_force`)
+    let mut cfg = mc.serve_cfg.clone();
+    if let Some(plan) = mc
+        .registry
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .plan_for(&key, &version)
+    {
+        cfg = cfg.with_plan(plan);
+    }
+    shared.router.register(key.clone(), version.clone(), model, cfg);
     let mut pinned = shared.router.live_versions(&key);
     pinned.push(version.clone());
     let evicted = mc

@@ -23,6 +23,8 @@ use std::sync::Arc;
 
 use crate::error::{AviError, Result};
 use crate::estimator::persist;
+use crate::estimator::plan::PlanPolicy;
+use crate::pipeline::plan::TransformPlan;
 use crate::pipeline::PipelineModel;
 
 /// Manifest envelope format tag.
@@ -42,6 +44,10 @@ struct VersionEntry {
     version: String,
     model: Arc<PipelineModel>,
     fingerprint: u64,
+    /// Transform plan compiled at registration (default dense policy),
+    /// so activation/hot-swap adopts a pre-warmed plan instead of
+    /// compiling on the serving path.
+    plan: Arc<TransformPlan>,
 }
 
 /// Versions of one key, insertion-ordered (last = latest).
@@ -123,10 +129,23 @@ impl ModelRegistry {
         if !force {
             self.check_register(&key, &version, fingerprint, false)?;
         }
+        // compile the transform plan once, at registration time, so the
+        // serving tier adopts a ready plan at activation/hot-swap
+        let plan = Arc::new(TransformPlan::build(model.clone(), &PlanPolicy::default()));
         let entry = self.keys.entry(key).or_default();
         entry.versions.retain(|v| v.version != version);
-        entry.versions.push(VersionEntry { version, model, fingerprint });
+        entry.versions.push(VersionEntry { version, model, fingerprint, plan });
         Ok(())
+    }
+
+    /// The transform plan compiled for `key@version` at registration.
+    pub fn plan_for(&self, key: &str, version: &str) -> Option<Arc<TransformPlan>> {
+        self.keys
+            .get(key)?
+            .versions
+            .iter()
+            .find(|v| v.version == version)
+            .map(|v| v.plan.clone())
     }
 
     /// Content fingerprint of a registered version, if present.
@@ -552,6 +571,18 @@ mod tests {
         let evicted = reg.evict("champ", 0, &[]);
         assert_eq!(evicted, vec!["v2".to_string()]);
         assert_eq!(reg.versions("champ"), vec!["v5"]);
+    }
+
+    #[test]
+    fn registration_compiles_a_transform_plan() {
+        let mut reg = ModelRegistry::new();
+        let m = model(0.01, 31);
+        reg.insert("champ", "v1", m.clone()).unwrap();
+        let plan = reg.plan_for("champ", "v1").unwrap();
+        assert!(Arc::ptr_eq(plan.model(), &m));
+        assert_eq!(plan.total_cols(), m.transformer.n_generators());
+        assert!(reg.plan_for("champ", "v9").is_none());
+        assert!(reg.plan_for("ghost", "v1").is_none());
     }
 
     #[test]

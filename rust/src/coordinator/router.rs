@@ -217,6 +217,20 @@ impl ModelRouter {
         seed: u64,
         cfg: &ServeConfig,
     ) -> Result<()> {
+        self.register_split_planned(key, arms, seed, cfg, None)
+    }
+
+    /// [`ModelRouter::register_split`] with an optional registry: when
+    /// given, each arm adopts the transform plan compiled at registry
+    /// insert instead of compiling its own on the batcher thread.
+    fn register_split_planned(
+        &self,
+        key: &str,
+        arms: Vec<(String, Arc<PipelineModel>, u32)>,
+        seed: u64,
+        cfg: &ServeConfig,
+        registry: Option<&ModelRegistry>,
+    ) -> Result<()> {
         if arms.is_empty() {
             return Err(AviError::Registry(format!("route '{key}': no arms")));
         }
@@ -228,9 +242,15 @@ impl ModelRouter {
             .into_iter()
             .filter(|(_, _, w)| *w > 0)
             .map(|(version, model, weight)| {
+                let mut arm_cfg = cfg.clone();
+                if let Some(plan) =
+                    registry.and_then(|reg| reg.plan_for(key, &version))
+                {
+                    arm_cfg = arm_cfg.with_plan(plan);
+                }
                 let service = Arc::new(TransformService::start(
                     model,
-                    cfg.clone().stamp(key, &version),
+                    arm_cfg.stamp(key, &version),
                 ));
                 Arm { version, weight, service }
             })
@@ -248,19 +268,27 @@ impl ModelRouter {
     }
 
     /// Register every key's latest version from a registry under one
-    /// serve configuration.
+    /// serve configuration.  Each arm adopts the transform plan the
+    /// registry compiled at insert, so no route rebuilds operands before
+    /// taking traffic.
     pub fn from_registry(registry: &ModelRegistry, cfg: &ServeConfig) -> Self {
         let router = ModelRouter::new();
         for key in registry.keys() {
             if let Some((version, model)) = registry.latest(&key) {
-                router.register(key, version, model, cfg.clone());
+                let mut arm_cfg = cfg.clone();
+                if let Some(plan) = registry.plan_for(&key, &version) {
+                    arm_cfg = arm_cfg.with_plan(plan);
+                }
+                router.register(key, version, model, arm_cfg);
             }
         }
         router
     }
 
     /// Register (or hot-swap) `key` as a weighted split across registry
-    /// versions `(version, weight)`.
+    /// versions `(version, weight)`.  Arms adopt the registry-compiled
+    /// transform plans, so an `ActivateModel` hot-swap serves from a
+    /// plan that was warmed before the swap became visible.
     pub fn register_ab(
         &self,
         registry: &ModelRegistry,
@@ -275,7 +303,7 @@ impl ModelRouter {
                 registry.resolve(key, version).map(|m| (version.clone(), m, *weight))
             })
             .collect::<Result<Vec<_>>>()?;
-        self.register_split(key, arms, seed, cfg)
+        self.register_split_planned(key, arms, seed, cfg, Some(registry))
     }
 
     /// Mirror `key`'s traffic to `version` as a shadow: every request is
@@ -531,6 +559,17 @@ pub struct RouteLoad {
     pub max_batch: u64,
     pub mean_queue_us: f64,
     pub mean_compute_us: f64,
+    /// Transform plans compiled by this arm's batcher (1 per arm start
+    /// whether self-compiled or adopted from the registry).
+    pub plan_builds: u64,
+    /// Microseconds spent compiling this arm's plan.
+    pub plan_build_us: u64,
+    /// Flushes served through the prepared plan path.
+    pub plan_hits: u64,
+    /// Plan-path flushes served by the packed sparse kernel.
+    pub plan_sparse_hits: u64,
+    /// Multiply-adds skipped by the sparse kernel, summed over rows.
+    pub plan_flops_saved: u64,
     /// Flush-size histogram counts ([`BATCH_BUCKETS`] + overflow).
     pub batch_rows_hist: Vec<u64>,
     /// Latency histogram counts ([`LATENCY_BUCKETS_US`] + overflow).
@@ -561,6 +600,11 @@ impl RouteLoad {
             max_batch: m.max_batch.load(Ordering::Relaxed),
             mean_queue_us: m.queue_us.load(Ordering::Relaxed) as f64 / div,
             mean_compute_us: m.compute_us.load(Ordering::Relaxed) as f64 / div,
+            plan_builds: m.plan_builds.load(Ordering::Relaxed),
+            plan_build_us: m.plan_build_us.load(Ordering::Relaxed),
+            plan_hits: m.plan_hits.load(Ordering::Relaxed),
+            plan_sparse_hits: m.plan_sparse_hits.load(Ordering::Relaxed),
+            plan_flops_saved: m.plan_flops_saved.load(Ordering::Relaxed),
             batch_rows_hist: m.batch_rows_hist.snapshot(),
             latency_us_hist: m.latency_us_hist.snapshot(),
         }
@@ -597,6 +641,8 @@ impl RouterReport {
                  \"weight\": {}, \"requests\": {}, \"rows\": {}, \"rejected\": {}, \
                  \"mirrored\": {}, \"batches\": {}, \"max_batch\": {}, \
                  \"mean_queue_us\": {:.1}, \"mean_compute_us\": {:.1}, \
+                 \"plan_builds\": {}, \"plan_build_us\": {}, \"plan_hits\": {}, \
+                 \"plan_sparse_hits\": {}, \"plan_flops_saved\": {}, \
                  \"batch_rows\": {}, \"latency_us\": {}}}",
                 json_escape(&r.key),
                 json_escape(&r.version),
@@ -610,6 +656,11 @@ impl RouterReport {
                 r.max_batch,
                 r.mean_queue_us,
                 r.mean_compute_us,
+                r.plan_builds,
+                r.plan_build_us,
+                r.plan_hits,
+                r.plan_sparse_hits,
+                r.plan_flops_saved,
                 hist_json(BATCH_BUCKETS, &r.batch_rows_hist),
                 hist_json(LATENCY_BUCKETS_US, &r.latency_us_hist),
             ));
@@ -916,6 +967,42 @@ mod tests {
         });
         assert_eq!(answered.load(std::sync::atomic::Ordering::SeqCst), 64);
         assert_eq!(r.report().total_requests, 64);
+    }
+
+    #[test]
+    fn registry_routes_adopt_precompiled_plans_and_report_counters() {
+        let mut registry = ModelRegistry::new();
+        registry.insert("m", "v1", model(0.01, 1)).unwrap();
+        registry.insert("m", "v2", model(0.01, 1)).unwrap();
+        let r = ModelRouter::new();
+        r.register_ab(
+            &registry,
+            "m",
+            &[("v1".into(), 50), ("v2".into(), 50)],
+            42,
+            &ServeConfig::default(),
+        )
+        .unwrap();
+        let ds = synthetic_dataset(32, 12);
+        for i in 0..32 {
+            r.predict("m", ds.x.row(i).to_vec()).unwrap();
+        }
+        let report = r.report();
+        let primaries: Vec<_> =
+            report.routes.iter().filter(|l| l.role == "primary").collect();
+        assert_eq!(primaries.len(), 2);
+        for arm in &primaries {
+            // each arm counts exactly one plan start (adopted from the
+            // registry, not recompiled) and serves through it
+            assert_eq!(arm.plan_builds, 1, "{}@{}", arm.key, arm.version);
+            assert!(arm.plan_hits > 0, "{}@{} never hit its plan", arm.key, arm.version);
+            assert_eq!(arm.plan_sparse_hits, 0, "dense default must not engage sparse");
+            assert_eq!(arm.plan_flops_saved, 0);
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"plan_builds\": 1"), "{json}");
+        assert!(json.contains("\"plan_hits\""), "{json}");
+        assert!(json.contains("\"plan_flops_saved\": 0"), "{json}");
     }
 
     #[test]

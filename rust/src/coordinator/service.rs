@@ -33,7 +33,9 @@ use std::time::{Duration, Instant};
 use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend};
 use crate::coordinator::pool::PoolHandle;
 use crate::error::{AviError, Result};
+use crate::estimator::plan::PlanPolicy;
 use crate::linalg::dense::Matrix;
+use crate::pipeline::plan::{TransformPlan, TransformScratch};
 use crate::pipeline::PipelineModel;
 
 // ---------------------------------------------------------------------
@@ -293,6 +295,17 @@ pub struct ServeMetrics {
     pub queue_us: AtomicU64,
     /// Σ compute latency over answered requests (µs).
     pub compute_us: AtomicU64,
+    /// Transform plans compiled or adopted by this arm (one per start).
+    pub plan_builds: AtomicU64,
+    /// Σ plan compile time (µs) across builds/adoptions.
+    pub plan_build_us: AtomicU64,
+    /// Flushes served from the compiled plan (vs the legacy backend
+    /// path, which large batches still take for shard parallelism).
+    pub plan_hits: AtomicU64,
+    /// Plan flushes served by the packed sparse kernel.
+    pub plan_sparse_hits: AtomicU64,
+    /// Σ multiply-adds skipped by the packed sparse kernel.
+    pub plan_flops_saved: AtomicU64,
     /// Flush-size histogram (rows).
     pub batch_rows_hist: Histogram,
     /// End-to-end latency histogram over answered requests (µs).
@@ -312,6 +325,11 @@ impl Default for ServeMetrics {
             rejected_value: AtomicU64::new(0),
             queue_us: AtomicU64::new(0),
             compute_us: AtomicU64::new(0),
+            plan_builds: AtomicU64::new(0),
+            plan_build_us: AtomicU64::new(0),
+            plan_hits: AtomicU64::new(0),
+            plan_sparse_hits: AtomicU64::new(0),
+            plan_flops_saved: AtomicU64::new(0),
             batch_rows_hist: Histogram::new(BATCH_BUCKETS),
             latency_us_hist: Histogram::new(LATENCY_BUCKETS_US),
         }
@@ -342,6 +360,11 @@ impl ServeMetrics {
         add(&self.rejected_value, &other.rejected_value);
         add(&self.queue_us, &other.queue_us);
         add(&self.compute_us, &other.compute_us);
+        add(&self.plan_builds, &other.plan_builds);
+        add(&self.plan_build_us, &other.plan_build_us);
+        add(&self.plan_hits, &other.plan_hits);
+        add(&self.plan_sparse_hits, &other.plan_sparse_hits);
+        add(&self.plan_flops_saved, &other.plan_flops_saved);
         self.max_batch
             .fetch_max(other.max_batch.load(Ordering::Relaxed), Ordering::Relaxed);
         self.batch_rows_hist.absorb(&other.batch_rows_hist);
@@ -421,6 +444,13 @@ pub struct ServeConfig {
     pub key: String,
     /// Registry version stamped onto every answer.
     pub version: String,
+    /// Pre-compiled transform plan to adopt (the router passes the plan
+    /// the registry compiled at insert).  When absent, the batcher
+    /// compiles one under `plan_policy` before taking traffic.
+    pub plan: Option<Arc<TransformPlan>>,
+    /// Policy for plans compiled by the service itself (dense exact by
+    /// default; sparse opt-in mirrors `NumericsMode::Fast` gating).
+    pub plan_policy: PlanPolicy,
     /// Test hook: while `true`, the batcher sleeps without draining the
     /// queue, making admission control deterministic to exercise.
     #[doc(hidden)]
@@ -435,6 +465,8 @@ impl Default for ServeConfig {
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             key: "default".into(),
             version: "v1".into(),
+            plan: None,
+            plan_policy: PlanPolicy::default(),
             hold_gate: None,
         }
     }
@@ -481,6 +513,22 @@ impl ServeConfig {
     pub fn stamp(mut self, key: impl Into<String>, version: impl Into<String>) -> Self {
         self.key = key.into();
         self.version = version.into();
+        self
+    }
+
+    /// Adopt a pre-compiled transform plan (the registry compiles one at
+    /// insert; the router threads it through so activation serves from a
+    /// warmed plan instead of compiling on the serving path).
+    pub fn with_plan(mut self, plan: Arc<TransformPlan>) -> Self {
+        self.plan = Some(plan);
+        self
+    }
+
+    /// Opt service-compiled plans into the packed sparse kernel (engages
+    /// per class past the measured zero-fraction threshold; dense exact
+    /// stays the default).
+    pub fn sparse_plans(mut self) -> Self {
+        self.plan_policy = PlanPolicy::sparse_enabled();
         self
     }
 }
@@ -532,7 +580,16 @@ impl TransformService {
     /// Spawn the batcher thread over a trained pipeline — the single
     /// constructor for every backend / queueing / batching combination.
     pub fn start(model: Arc<PipelineModel>, cfg: ServeConfig) -> Self {
-        let ServeConfig { backend, policy, queue_capacity, key, version, hold_gate } = cfg;
+        let ServeConfig {
+            backend,
+            policy,
+            queue_capacity,
+            key,
+            version,
+            plan,
+            plan_policy,
+            hold_gate,
+        } = cfg;
         let queue_capacity = queue_capacity.max(1);
         let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(queue_capacity);
         let stop = Arc::new(AtomicBool::new(false));
@@ -558,6 +615,15 @@ impl TransformService {
                     )
                 }
             };
+            // adopt the registry-compiled plan or compile one now — either
+            // way the arm counts exactly one build, and warmup grows every
+            // scratch slab to steady-state size before the first request
+            let plan = plan
+                .unwrap_or_else(|| Arc::new(TransformPlan::build(model.clone(), &plan_policy)));
+            metrics_c.plan_builds.fetch_add(1, Ordering::Relaxed);
+            metrics_c.plan_build_us.fetch_add(plan.build_micros(), Ordering::Relaxed);
+            let mut scratch = TransformScratch::new();
+            plan.warm(&mut scratch);
             if let Some(gate) = hold_gate {
                 // stop must still end the spin, or dropping a gated
                 // service would join a thread that never exits
@@ -565,7 +631,8 @@ impl TransformService {
                     std::thread::sleep(Duration::from_micros(200));
                 }
             }
-            batcher_loop(model, rx, policy, stop_c, metrics_c, backend.as_ref(), &stamp)
+            let mut arm = ArmState { model, plan, scratch };
+            batcher_loop(&mut arm, rx, policy, stop_c, metrics_c, backend.as_ref(), &stamp)
         });
         TransformService {
             tx,
@@ -690,8 +757,17 @@ impl Drop for TransformService {
     }
 }
 
-fn batcher_loop(
+/// Per-arm serving state threaded through the batcher: the fitted model
+/// (the legacy path large sharded batches still take), its compiled
+/// transform plan, and the reusable per-worker scratch slabs.
+struct ArmState {
     model: Arc<PipelineModel>,
+    plan: Arc<TransformPlan>,
+    scratch: TransformScratch,
+}
+
+fn batcher_loop(
+    arm: &mut ArmState,
     rx: Receiver<Request>,
     policy: BatchPolicy,
     stop: Arc<AtomicBool>,
@@ -714,7 +790,7 @@ fn batcher_loop(
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
-                    flush(&model, &mut pending, &metrics, backend, stamp);
+                    flush(arm, &mut pending, &metrics, backend, stamp);
                     return;
                 }
             }
@@ -727,7 +803,7 @@ fn batcher_loop(
         // remains as the recv_timeout pacing below.
         if !pending.is_empty() {
             pending_rows = 0;
-            flush(&model, &mut pending, &metrics, backend, stamp);
+            flush(arm, &mut pending, &metrics, backend, stamp);
             continue;
         }
         if stop.load(Ordering::SeqCst) {
@@ -736,7 +812,7 @@ fn batcher_loop(
             while let Ok(req) = rx.try_recv() {
                 pending.push(req);
             }
-            flush(&model, &mut pending, &metrics, backend, stamp);
+            flush(arm, &mut pending, &metrics, backend, stamp);
             return;
         }
         // block for the next request, up to the configured pacing
@@ -747,7 +823,7 @@ fn batcher_loop(
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                flush(&model, &mut pending, &metrics, backend, stamp);
+                flush(arm, &mut pending, &metrics, backend, stamp);
                 return;
             }
         }
@@ -755,7 +831,7 @@ fn batcher_loop(
 }
 
 fn flush(
-    model: &PipelineModel,
+    arm: &mut ArmState,
     pending: &mut Vec<Request>,
     metrics: &ServeMetrics,
     backend: &dyn ComputeBackend,
@@ -790,7 +866,23 @@ fn flush(
     let n_rows = rows.len();
     let x = Matrix::from_rows(&rows).expect("uniform rows");
     let t_compute = Instant::now();
-    let (labels, scores) = model.predict_scores_with_backend(&x, backend);
+    // plan path whenever the backend would not shard this batch anyway;
+    // large sharded batches keep the legacy backend fan-out.  The dense
+    // plan is bitwise identical to the legacy path, so routing never
+    // changes answers.
+    let (labels, scores) = if backend.preferred_shards(n_rows) <= 1 {
+        metrics.plan_hits.fetch_add(1, Ordering::Relaxed);
+        if arm.plan.sparse_engaged() {
+            metrics.plan_sparse_hits.fetch_add(1, Ordering::Relaxed);
+            metrics.plan_flops_saved.fetch_add(
+                arm.plan.flops_saved_per_row() * n_rows as u64,
+                Ordering::Relaxed,
+            );
+        }
+        arm.plan.predict_scores(&x, &mut arm.scratch)
+    } else {
+        arm.model.predict_scores_with_backend(&x, backend)
+    };
     let compute = t_compute.elapsed();
     metrics.requests.fetch_add(alive.len() as u64, Ordering::Relaxed);
     metrics.rows.fetch_add(n_rows as u64, Ordering::Relaxed);
@@ -962,6 +1054,30 @@ mod tests {
         let jobs: Vec<crate::coordinator::pool::Job<'static, u32>> =
             vec![Box::new(|| 1), Box::new(|| 2)];
         assert_eq!(pool.run_all(jobs), vec![1, 2]);
+    }
+
+    #[test]
+    fn plan_counters_track_builds_and_hits() {
+        let model = trained_model();
+        let ds = synthetic_dataset(16, 30);
+        let svc = TransformService::start(model.clone(), ServeConfig::default());
+        let rows: Vec<Vec<f64>> = (0..16).map(|i| ds.x.row(i).to_vec()).collect();
+        svc.predict_many(rows).unwrap();
+        assert_eq!(svc.metrics.plan_builds.load(Ordering::Relaxed), 1);
+        assert!(svc.metrics.plan_hits.load(Ordering::Relaxed) >= 1);
+        // the dense default never engages the packed kernel
+        assert_eq!(svc.metrics.plan_sparse_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.metrics.plan_flops_saved.load(Ordering::Relaxed), 0);
+        svc.shutdown();
+
+        // an adopted pre-compiled plan still counts as this arm's build
+        let plan = Arc::new(TransformPlan::build(model.clone(), &PlanPolicy::default()));
+        let svc = TransformService::start(model, ServeConfig::new().with_plan(plan));
+        let ans = svc.predict_blocking(ds.x.row(0).to_vec()).unwrap();
+        assert_eq!(ans.predictions.len(), 1);
+        assert_eq!(svc.metrics.plan_builds.load(Ordering::Relaxed), 1);
+        assert!(svc.metrics.plan_hits.load(Ordering::Relaxed) >= 1);
+        svc.shutdown();
     }
 
     #[test]

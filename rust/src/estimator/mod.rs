@@ -31,6 +31,7 @@
 //! [`persist`] (one versioned envelope for every estimator).
 
 pub mod persist;
+pub mod plan;
 
 use crate::backend::{ComputeBackend, NativeBackend, NumericsMode, StoreMode};
 use crate::baselines::abm::{Abm, AbmConfig};
@@ -168,6 +169,37 @@ pub trait FittedModel: Send + Sync + std::fmt::Debug {
     /// block — through an explicit streaming backend.
     fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix;
 
+    /// [`FittedModel::transform_with`] written directly into a column
+    /// range of a caller-owned concatenated m×`stride` slab (row `i`'s
+    /// block at `out[i*stride + col_off ..]`).  The default materializes
+    /// the block and copies; both in-tree wrappers override with the
+    /// strided backend kernels, bitwise identical to the default.
+    fn transform_into(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        let block = self.transform_with(x, backend);
+        let g = block.cols();
+        for i in 0..x.rows() {
+            let base = i * stride + col_off;
+            out[base..base + g].copy_from_slice(block.row(i));
+        }
+    }
+
+    /// Compile this model's transform once into a [`plan::
+    /// PreparedTransform`]: cached operands, reusable scratch, zero
+    /// per-request rebuild work.  The default falls back to the legacy
+    /// path behind the plan interface; both in-tree wrappers override
+    /// with real compiled plans.
+    fn prepare(&self, policy: &plan::PlanPolicy) -> Box<dyn plan::PreparedTransform> {
+        let _ = policy;
+        plan::fallback_prepared(self.clone_box())
+    }
+
     /// Fit diagnostics (name, sizes, wall-clock, counters).
     fn report(&self) -> &FitReport;
 
@@ -254,6 +286,21 @@ impl FittedModel for FittedGeneratorSet {
         self.set.transform_with(x, backend)
     }
 
+    fn transform_into(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        self.set.transform_into(x, backend, out, stride, col_off)
+    }
+
+    fn prepare(&self, policy: &plan::PlanPolicy) -> Box<dyn plan::PreparedTransform> {
+        Box::new(plan::GeneratorPlan::new(&self.set, policy))
+    }
+
     fn report(&self) -> &FitReport {
         &self.report
     }
@@ -298,6 +345,21 @@ pub struct FittedVca {
 impl FittedModel for FittedVca {
     fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
         self.model.transform_with(x, backend)
+    }
+
+    fn transform_into(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        self.model.transform_into(x, backend, out, stride, col_off)
+    }
+
+    fn prepare(&self, _policy: &plan::PlanPolicy) -> Box<dyn plan::PreparedTransform> {
+        Box::new(plan::VcaPlan::new(&self.model))
     }
 
     fn report(&self) -> &FitReport {

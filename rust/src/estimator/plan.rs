@@ -1,0 +1,529 @@
+//! Compiled transform plans: prepare a fitted model once, serve its (FT)
+//! transform from cached operands and reusable scratch.
+//!
+//! The legacy per-call path ([`crate::poly::poly::GeneratorSet::
+//! transform_with`]) rebuilds everything that is *model*-side state on
+//! every request: the dense zero-padded coefficient matrix `C`, the
+//! leading-term matrix `U` via a column scatter, and a fresh
+//! [`crate::backend::ColumnStore`] of term evaluations.  Theorem 4.2
+//! prices evaluation at one multiply per (term, point); a plan gets the
+//! per-request cost down to exactly the x-dependent work:
+//!
+//! * [`GeneratorPlan`] caches the flattened DegLex term-evaluation
+//!   program ([`Recipe`] list), the dense `C`, the per-generator packed
+//!   nonzero columns of `C`, and the `U` recipes `(parent, var)` — built
+//!   once from a [`GeneratorSet`].
+//! * [`VcaPlan`] caches VCA's polynomial op-DAG and the vanishing-node
+//!   ids — the monomial-agnostic analogue.
+//! * [`PlanScratch`] owns the term-evaluation buffer and counts capacity
+//!   growths, so steady-state serving can *prove* it performs zero
+//!   transform allocations (the serve bench asserts `grows() == 0` after
+//!   warmup).
+//!
+//! # Bitwise contract
+//!
+//! The dense plan kernel replays the exact arithmetic of the legacy
+//! path: recipe evaluation is the per-element `parent · x_var` multiply
+//! of `ColumnStore::fill_product`, the accumulation per output cell is
+//! the seed-from-`U`-then-ascending-`j` order of
+//! `store::transform_block_into` (including its all-zero-`C`-row skip),
+//! and the transform is per-row independent, so shard counts never enter.
+//! Dense plan output is therefore **bitwise identical** to
+//! `transform_with` on every backend (`tests/transform_plan_parity.rs`).
+//!
+//! # Sparsity gating
+//!
+//! CG-family generators are deliberately sparse (the paper's SPAR
+//! statistic); the packed kernel skips the structural zeros.  Mirroring
+//! the [`crate::backend::NumericsMode::Fast`] discipline, the packed
+//! kernel is **opt-in** ([`PlanPolicy::sparse`]) and engages only past a
+//! measured zero-fraction threshold; the dense bitwise-exact kernel
+//! remains the default.  (Skipping `a_ij · 0.0` terms can only change
+//! ±0.0 signs ahead of the final `abs`, but the conservative gating
+//! keeps the default path exactly the legacy bits.)
+
+use crate::backend::NativeBackend;
+use crate::baselines::vca::{VcaModel, VcaNode};
+use crate::estimator::FittedModel;
+use crate::linalg::dense::Matrix;
+use crate::poly::eval::Recipe;
+use crate::poly::poly::GeneratorSet;
+
+/// How a plan is compiled: dense bitwise-exact by default, packed sparse
+/// kernel opt-in past a measured sparsity threshold (the
+/// `NumericsMode::Fast` gating discipline).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanPolicy {
+    /// Opt into the packed sparse kernel (default: off — dense exact).
+    pub sparse: bool,
+    /// Minimum measured fraction of structural zeros in the live rows of
+    /// `C` before the packed kernel engages.
+    pub sparse_min_zero_frac: f64,
+}
+
+impl Default for PlanPolicy {
+    fn default() -> Self {
+        PlanPolicy { sparse: false, sparse_min_zero_frac: 0.5 }
+    }
+}
+
+impl PlanPolicy {
+    /// The opt-in sparse policy at the default engagement threshold.
+    pub fn sparse_enabled() -> Self {
+        PlanPolicy { sparse: true, ..PlanPolicy::default() }
+    }
+}
+
+/// Reusable per-worker scratch for plan transforms.  One instance per
+/// serving thread; buffers grow to the high-water mark and are then
+/// reused, so steady-state requests allocate nothing.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    cols: Vec<f64>,
+    grows: u64,
+}
+
+impl PlanScratch {
+    pub fn new() -> Self {
+        PlanScratch::default()
+    }
+
+    /// Buffer-capacity growth events since construction.  After warmup a
+    /// steady-state serving loop must hold this constant — the serve
+    /// bench and smoke assert it.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Record a growth performed on a caller-managed companion buffer
+    /// (the pipeline-level slabs share this counter).
+    pub fn note_grow(&mut self) {
+        self.grows += 1;
+    }
+
+    /// The term/node evaluation buffer, grown (and counted) on demand.
+    /// Contents are overwritten by every kernel before being read.
+    pub fn cols_buf(&mut self, n: usize) -> &mut [f64] {
+        if self.cols.len() < n {
+            self.grows += 1;
+            self.cols.resize(n, 0.0);
+        }
+        &mut self.cols[..n]
+    }
+}
+
+/// A compiled per-class transform: all model-side operands cached, only
+/// x-dependent work per call.  `Send + Sync` (plain data) so serving
+/// threads can share plans behind an `Arc`.
+pub trait PreparedTransform: Send + Sync + std::fmt::Debug {
+    /// |G| — feature columns this class contributes.
+    fn n_cols(&self) -> usize;
+
+    /// Write |g(x)| for every generator into the caller's m×`stride`
+    /// slab at column `col_off` (row `i` at `out[i*stride + col_off ..]`).
+    /// On the dense path the written cells must be bitwise identical to
+    /// the legacy `transform_with` on any backend.
+    fn transform_into(
+        &self,
+        x: &Matrix,
+        scratch: &mut PlanScratch,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    );
+
+    /// Whether the packed sparse kernel is engaged for this class.
+    fn sparse_engaged(&self) -> bool {
+        false
+    }
+
+    /// Multiply-adds the packed kernel skips per transformed row
+    /// (0 when the dense kernel is active) — feeds the FLOPs-saved
+    /// serving counter.
+    fn flops_saved_per_row(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Monomial-aware plan (OAVI family, ABM)
+// ---------------------------------------------------------------------
+
+/// Compiled plan for a [`GeneratorSet`]: cached `C`/`U` operands, the
+/// flattened term program, and the packed sparse columns.
+#[derive(Clone, Debug)]
+pub struct GeneratorPlan {
+    /// Flattened DegLex evaluation program (one multiply per term).
+    recipes: Vec<Recipe>,
+    /// Dense zero-padded coefficient matrix (ℓ×g) — built once, not per
+    /// request.
+    dense_c: Matrix,
+    /// Term indices whose `C` row has any nonzero, ascending — the
+    /// column-granular skip of the legacy kernel, precomputed.
+    live: Vec<usize>,
+    /// Per-generator packed `(term, coeff)` pairs, ascending term index.
+    packed: Vec<Vec<(usize, f64)>>,
+    /// Per-generator `U` recipe: `u = terms[parent] · x_var`.
+    u_recipes: Vec<(usize, usize)>,
+    /// Measured fraction of structural zeros among the live-row cells.
+    zero_frac: f64,
+    /// Packed kernel engaged (policy opt-in AND threshold met).
+    sparse: bool,
+    flops_saved_per_row: u64,
+}
+
+impl GeneratorPlan {
+    /// Compile a plan from a fitted generator set.
+    pub fn new(set: &GeneratorSet, policy: &PlanPolicy) -> Self {
+        let ell = set.o_terms.len();
+        let g = set.generators.len();
+        let mut dense_c = Matrix::zeros(ell, g);
+        let mut packed: Vec<Vec<(usize, f64)>> = vec![Vec::new(); g];
+        let mut u_recipes = Vec::with_capacity(g);
+        for (gi, gen) in set.generators.iter().enumerate() {
+            for (j, &cj) in gen.coeffs.iter().enumerate() {
+                dense_c.set(j, gi, cj);
+                if cj != 0.0 {
+                    packed[gi].push((j, cj));
+                }
+            }
+            u_recipes.push((gen.leading_parent, gen.leading_var));
+        }
+        let live: Vec<usize> =
+            (0..ell).filter(|&j| dense_c.row(j).iter().any(|&v| v != 0.0)).collect();
+        let dense_muladds = live.len() * g;
+        let packed_muladds: usize = packed.iter().map(|p| p.len()).sum();
+        let zero_frac = if dense_muladds == 0 {
+            0.0
+        } else {
+            1.0 - packed_muladds as f64 / dense_muladds as f64
+        };
+        let sparse = policy.sparse && zero_frac >= policy.sparse_min_zero_frac;
+        let flops_saved_per_row =
+            if sparse { (dense_muladds - packed_muladds) as u64 } else { 0 };
+        GeneratorPlan {
+            recipes: set.o_terms.recipes().to_vec(),
+            dense_c,
+            live,
+            packed,
+            u_recipes,
+            zero_frac,
+            sparse,
+            flops_saved_per_row,
+        }
+    }
+
+    /// Measured structural-zero fraction of the live `C` rows.
+    pub fn zero_frac(&self) -> f64 {
+        self.zero_frac
+    }
+
+    /// Evaluate the term program over `x` into `cols` (column-major,
+    /// term-major m-blocks) — the exact per-element arithmetic of
+    /// `TermSet::eval_store` / `ColumnStore::fill_product`.
+    fn eval_terms(&self, x: &Matrix, cols: &mut [f64]) {
+        let m = x.rows();
+        for (j, r) in self.recipes.iter().enumerate() {
+            match *r {
+                Recipe::One => cols[j * m..(j + 1) * m].fill(1.0),
+                Recipe::Product { parent, var } => {
+                    // DegLex append order guarantees parent < j
+                    let (lo, hi) = cols.split_at_mut(j * m);
+                    let p = &lo[parent * m..parent * m + m];
+                    for (i, o) in hi[..m].iter_mut().enumerate() {
+                        *o = p[i] * x.get(i, var);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl PreparedTransform for GeneratorPlan {
+    fn n_cols(&self) -> usize {
+        self.u_recipes.len()
+    }
+
+    fn transform_into(
+        &self,
+        x: &Matrix,
+        scratch: &mut PlanScratch,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        let m = x.rows();
+        let g = self.u_recipes.len();
+        let ell = self.recipes.len();
+        let cols = scratch.cols_buf(ell * m);
+        self.eval_terms(x, cols);
+        if g == 0 {
+            return;
+        }
+        if self.sparse {
+            for i in 0..m {
+                let base = i * stride + col_off;
+                let orow = &mut out[base..base + g];
+                for (gi, o) in orow.iter_mut().enumerate() {
+                    let (p, v) = self.u_recipes[gi];
+                    let mut acc = cols[p * m + i] * x.get(i, v);
+                    for &(j, cj) in &self.packed[gi] {
+                        acc += cols[j * m + i] * cj;
+                    }
+                    *o = acc.abs();
+                }
+            }
+        } else {
+            // dense bitwise-exact kernel: per (row, generator) the seed-
+            // then-ascending-j accumulation of store::transform_block_into
+            for i in 0..m {
+                let base = i * stride + col_off;
+                let orow = &mut out[base..base + g];
+                for (o, &(p, v)) in orow.iter_mut().zip(self.u_recipes.iter()) {
+                    *o = cols[p * m + i] * x.get(i, v);
+                }
+                for &j in &self.live {
+                    let a_ij = cols[j * m + i];
+                    for (o, &ck) in orow.iter_mut().zip(self.dense_c.row(j).iter()) {
+                        *o += a_ij * ck;
+                    }
+                }
+                for o in orow.iter_mut() {
+                    *o = o.abs();
+                }
+            }
+        }
+    }
+
+    fn sparse_engaged(&self) -> bool {
+        self.sparse
+    }
+
+    fn flops_saved_per_row(&self) -> u64 {
+        self.flops_saved_per_row
+    }
+}
+
+// ---------------------------------------------------------------------
+// Monomial-agnostic plan (VCA op-DAG)
+// ---------------------------------------------------------------------
+
+/// Compiled plan for a [`VcaModel`]: the op-DAG walk flattened onto the
+/// shared scratch buffer.  VCA's `LinComb` nodes already skip zero
+/// weights in the legacy path, so there is no separate packed kernel;
+/// the walk replays the legacy per-element arithmetic exactly.
+#[derive(Clone, Debug)]
+pub struct VcaPlan {
+    nodes: Vec<VcaNode>,
+    vanishing: Vec<usize>,
+}
+
+impl VcaPlan {
+    /// Compile a plan from a fitted VCA model.
+    pub fn new(model: &VcaModel) -> Self {
+        VcaPlan { nodes: model.nodes().to_vec(), vanishing: model.vanishing.clone() }
+    }
+}
+
+impl PreparedTransform for VcaPlan {
+    fn n_cols(&self) -> usize {
+        self.vanishing.len()
+    }
+
+    fn transform_into(
+        &self,
+        x: &Matrix,
+        scratch: &mut PlanScratch,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        let m = x.rows();
+        let n_nodes = self.nodes.len();
+        let cols = scratch.cols_buf(n_nodes * m);
+        for (id, node) in self.nodes.iter().enumerate() {
+            let (lo, hi) = cols.split_at_mut(id * m);
+            let dst = &mut hi[..m];
+            match node {
+                VcaNode::One => dst.fill(1.0),
+                VcaNode::Feature(j) => {
+                    for (i, o) in dst.iter_mut().enumerate() {
+                        *o = x.get(i, *j);
+                    }
+                }
+                VcaNode::Product(a, b) => {
+                    let (va, vb) = (&lo[a * m..a * m + m], &lo[b * m..b * m + m]);
+                    for (o, (pa, pb)) in dst.iter_mut().zip(va.iter().zip(vb.iter())) {
+                        *o = pa * pb;
+                    }
+                }
+                VcaNode::LinComb(terms) => {
+                    dst.fill(0.0);
+                    for (w, idx) in terms {
+                        if *w == 0.0 {
+                            continue;
+                        }
+                        let src = &lo[idx * m..idx * m + m];
+                        for (o, s) in dst.iter_mut().zip(src.iter()) {
+                            *o += w * s;
+                        }
+                    }
+                }
+            }
+        }
+        for (gi, &nid) in self.vanishing.iter().enumerate() {
+            let col = &cols[nid * m..nid * m + m];
+            for (i, v) in col.iter().enumerate() {
+                out[i * stride + col_off + gi] = v.abs();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fallback for foreign FittedModel implementations
+// ---------------------------------------------------------------------
+
+/// Catch-all prepared transform for [`FittedModel`] implementations
+/// without a compiled plan: runs the legacy native-backend transform and
+/// copies it into the slab.  Correct (the transform is per-row
+/// independent, so native bits are THE bits) but not allocation-free —
+/// both in-tree model kinds override [`FittedModel::prepare`] instead.
+#[derive(Debug)]
+struct PreparedFallback {
+    model: Box<dyn FittedModel>,
+}
+
+impl PreparedTransform for PreparedFallback {
+    fn n_cols(&self) -> usize {
+        self.model.n_generators()
+    }
+
+    fn transform_into(
+        &self,
+        x: &Matrix,
+        _scratch: &mut PlanScratch,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        let block = self.model.transform_with(x, &NativeBackend);
+        let g = block.cols();
+        for i in 0..x.rows() {
+            let base = i * stride + col_off;
+            out[base..base + g].copy_from_slice(block.row(i));
+        }
+    }
+}
+
+/// Wrap a fitted model in the legacy-path fallback plan (the
+/// [`FittedModel::prepare`] default).
+pub fn fallback_prepared(model: Box<dyn FittedModel>) -> Box<dyn PreparedTransform> {
+    Box::new(PreparedFallback { model })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::estimator::EstimatorConfig;
+    use crate::util::rng::Rng;
+
+    fn sample(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                x.set(i, j, rng.uniform());
+            }
+        }
+        x
+    }
+
+    fn bits(m: &Matrix) -> Vec<u64> {
+        m.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn dense_generator_plan_is_bitwise_identical_to_legacy() {
+        let x = sample(120, 3, 7);
+        for method in ["cgavi-ihb", "bpcgavi-wihb", "abm"] {
+            let model =
+                EstimatorConfig::parse(method, 0.01).unwrap().fit(&x, &NativeBackend).unwrap();
+            let plan = model.prepare(&PlanPolicy::default());
+            let fresh = sample(40, 3, 8);
+            let legacy = model.transform_with(&fresh, &NativeBackend);
+            let g = plan.n_cols();
+            assert_eq!(g, legacy.cols(), "{method}");
+            let mut scratch = PlanScratch::new();
+            let mut out = vec![f64::NAN; fresh.rows() * g];
+            plan.transform_into(&fresh, &mut scratch, &mut out, g, 0);
+            let out_bits: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(out_bits, bits(&legacy), "{method}: plan diverges from legacy");
+        }
+    }
+
+    #[test]
+    fn vca_plan_is_bitwise_identical_to_legacy() {
+        let x = sample(150, 2, 9);
+        let model = EstimatorConfig::parse("vca", 0.01).unwrap().fit(&x, &NativeBackend).unwrap();
+        let plan = model.prepare(&PlanPolicy::default());
+        let fresh = sample(33, 2, 10);
+        let legacy = model.transform_with(&fresh, &NativeBackend);
+        let mut scratch = PlanScratch::new();
+        let g = plan.n_cols();
+        let mut out = vec![f64::NAN; fresh.rows() * g];
+        plan.transform_into(&fresh, &mut scratch, &mut out, g, 0);
+        let out_bits: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(out_bits, bits(&legacy));
+    }
+
+    #[test]
+    fn sparse_gating_follows_policy_and_threshold() {
+        let x = sample(150, 3, 11);
+        let model = EstimatorConfig::parse("bpcgavi-wihb", 0.01)
+            .unwrap()
+            .fit(&x, &NativeBackend)
+            .unwrap();
+        // dense default never engages the packed kernel
+        let dense = model.prepare(&PlanPolicy::default());
+        assert!(!dense.sparse_engaged());
+        assert_eq!(dense.flops_saved_per_row(), 0);
+        // opt-in with an impossible threshold stays dense too
+        let gated = model
+            .prepare(&PlanPolicy { sparse: true, sparse_min_zero_frac: 1.1 });
+        assert!(!gated.sparse_engaged());
+        // opt-in with a zero threshold engages whenever any zero exists
+        let engaged = model.prepare(&PlanPolicy { sparse: true, sparse_min_zero_frac: 0.0 });
+        assert!(engaged.sparse_engaged());
+        // engaged or not, results match the dense kernel to a tight budget
+        let fresh = sample(25, 3, 12);
+        let g = dense.n_cols();
+        let mut scratch = PlanScratch::new();
+        let mut a = vec![0.0; fresh.rows() * g];
+        let mut b = vec![0.0; fresh.rows() * g];
+        dense.transform_into(&fresh, &mut scratch, &mut a, g, 0);
+        engaged.transform_into(&fresh, &mut scratch, &mut b, g, 0);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() <= 1e-12, "sparse kernel diverged: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn scratch_growth_settles_after_warmup() {
+        let x = sample(100, 3, 13);
+        let model =
+            EstimatorConfig::parse("cgavi-ihb", 0.01).unwrap().fit(&x, &NativeBackend).unwrap();
+        let plan = model.prepare(&PlanPolicy::default());
+        let g = plan.n_cols();
+        let mut scratch = PlanScratch::new();
+        let row = sample(1, 3, 14);
+        let mut out = vec![0.0; g];
+        plan.transform_into(&row, &mut scratch, &mut out, g, 0);
+        let after_warmup = scratch.grows();
+        for _ in 0..50 {
+            plan.transform_into(&row, &mut scratch, &mut out, g, 0);
+        }
+        assert_eq!(scratch.grows(), after_warmup, "steady state must not reallocate");
+    }
+}

@@ -875,7 +875,13 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
             continue;
         }
         if let Some((version, model)) = registry.latest(&key) {
-            router.register(key, version, model, serve_cfg.clone());
+            // adopt the transform plan compiled at registry insert so the
+            // route is warmed before its first request
+            let mut cfg = serve_cfg.clone();
+            if let Some(plan) = registry.plan_for(&key, &version) {
+                cfg = cfg.with_plan(plan);
+            }
+            router.register(key, version, model, cfg);
         }
     }
     let mut target_key = registry.keys().first().cloned().unwrap_or_default();
@@ -893,7 +899,11 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
             None => (target_key.clone(), shadow.clone()),
         };
         let model = registry.resolve(&key, &version)?;
-        router.set_shadow(&key, &version, model, serve_cfg.clone())?;
+        let mut cfg = serve_cfg.clone();
+        if let Some(plan) = registry.plan_for(&key, &version) {
+            cfg = cfg.with_plan(plan);
+        }
+        router.set_shadow(&key, &version, model, cfg)?;
         println!("shadow      = {key}:{version}");
     }
 

@@ -23,6 +23,7 @@
 //! [`crate::estimator::persist`].
 
 pub mod gridsearch;
+pub mod plan;
 pub mod report;
 
 use crate::backend::sharded::MIN_ROWS_PER_SHARD;
@@ -51,21 +52,69 @@ impl FittedTransformer {
     }
 
     /// (FT) through an explicit streaming backend (native / sharded /
-    /// PJRT) — the serving path's intra-batch parallelism knob.
+    /// PJRT) — the serving path's intra-batch parallelism knob.  Each
+    /// class writes its feature columns directly into its column range
+    /// of the concatenated matrix (no intermediate per-class blocks, no
+    /// row-by-row stitch).
     pub fn transform_with(&self, x: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
-        let blocks: Vec<Matrix> =
-            self.per_class.iter().map(|c| c.transform_with(x, backend)).collect();
-        let total: usize = blocks.iter().map(|b| b.cols()).sum();
+        let total = self.n_generators();
         let mut out = Matrix::zeros(x.rows(), total);
         let mut off = 0;
-        for b in &blocks {
-            for i in 0..x.rows() {
-                let dst = out.row_mut(i);
-                dst[off..off + b.cols()].copy_from_slice(b.row(i));
-            }
-            off += b.cols();
+        for c in &self.per_class {
+            c.transform_into(x, backend, out.data_mut(), total, off);
+            off += c.n_generators();
         }
         out
+    }
+
+    /// (FT) with **two-level parallelism** over a shared pool: per-class
+    /// transforms fan out as outer jobs (the worker budget split once via
+    /// [`PoolHandle::budget_split`]) and each job's [`ShardedBackend`]
+    /// shard kernels are the inner axis.  The transform is per-row
+    /// independent, so the result is bitwise identical to
+    /// [`FittedTransformer::transform_with`] regardless of the split.
+    pub fn transform_pooled(&self, x: &Matrix, pool: &PoolHandle) -> Result<Matrix> {
+        let n_classes = self.per_class.len();
+        let total = self.n_generators();
+        let mut out = Matrix::zeros(x.rows(), total);
+        if n_classes == 0 {
+            return Ok(out);
+        }
+        let (_, inner) = pool.budget_split(n_classes);
+        let jobs: Vec<Job<'_, Matrix>> = self
+            .per_class
+            .iter()
+            .map(|c| {
+                let handle = pool.clone();
+                Box::new(move || {
+                    let backend =
+                        ShardedBackend::boxed_with_handle(handle, inner, MIN_ROWS_PER_SHARD);
+                    c.transform_with(x, backend.as_ref())
+                }) as Job<'_, Matrix>
+            })
+            .collect();
+        // workers can't share &mut column ranges of one slab without
+        // unsafe, so jobs return owned blocks and the stitch is a
+        // block-level strided copy on the caller's thread
+        let mut off = 0;
+        for result in pool.try_run_all(jobs) {
+            match result {
+                Ok(block) => {
+                    let g = block.cols();
+                    for i in 0..x.rows() {
+                        let base = i * total + off;
+                        out.data_mut()[base..base + g].copy_from_slice(block.row(i));
+                    }
+                    off += g;
+                }
+                Err(panic_msg) => {
+                    return Err(AviError::Coordinator(format!(
+                        "per-class transform job panicked: {panic_msg}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// Σ_i (|G^i| + |O^i|) — Table 3's |G|+|O| row.
@@ -306,10 +355,9 @@ pub fn train_pipeline_pooled(
     let ordered = train.permute_features(&perm);
     let handle = pool.handle();
     let transformer = fit_transformer_pooled(&cfg.estimator, &ordered, &handle)?;
-    // the final transform is a single job: give it the full inner budget
-    let backend =
-        ShardedBackend::boxed_with_handle(handle, pool.workers(), MIN_ROWS_PER_SHARD);
-    let feats = transformer.transform_with(&ordered.x, backend.as_ref());
+    // the final (FT) pass fans per-class blocks out as outer pool jobs,
+    // with shard kernels as the inner axis — same split as the fit
+    let feats = transformer.transform_pooled(&ordered.x, &handle)?;
     let svm = LinearSvm::fit(&feats, &ordered.y, ordered.n_classes, cfg.svm)?;
     Ok(PipelineModel { perm, transformer, svm, n_classes: train.n_classes })
 }
@@ -418,6 +466,19 @@ mod tests {
             &pool.handle(),
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn pooled_transform_is_bitwise_identical_to_sequential() {
+        let ds = small_synth().head(250);
+        let est = EstimatorConfig::Oavi(OaviConfig::cgavi_ihb(0.01));
+        let t = fit_transformer(est.build().as_ref(), &ds, &NativeBackend).unwrap();
+        let seq = t.transform_with(&ds.x, &NativeBackend);
+        let pool = ThreadPool::new(4);
+        let par = t.transform_pooled(&ds.x, &pool.handle()).unwrap();
+        let seq_bits: Vec<u64> = seq.data().iter().map(|v| v.to_bits()).collect();
+        let par_bits: Vec<u64> = par.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(seq_bits, par_bits);
     }
 
     #[test]

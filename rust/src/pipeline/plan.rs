@@ -1,0 +1,231 @@
+//! Pipeline-level compiled transform plans: one [`TransformPlan`] per
+//! fitted [`PipelineModel`], built once (at registry insert / model
+//! activation) and shared behind an `Arc` by every serving worker.
+//!
+//! A plan composes the per-class [`PreparedTransform`]s (see
+//! [`crate::estimator::plan`]) with the pipeline's two remaining
+//! per-request chores — the feature permutation and the SVM decision —
+//! over a [`TransformScratch`] of reusable buffers, so the steady-state
+//! request path performs **zero transform allocations**: no eval store,
+//! no `C`/`U` rebuild, no intermediate per-class blocks, no permuted
+//! copy of `x` beyond the resident scratch matrix.  Each class writes
+//! its feature columns directly into its column range of one
+//! concatenated row-major slab.
+//!
+//! Dense-kernel plans are bitwise identical to
+//! [`PipelineModel::predict_scores_with_backend`] on every backend (the
+//! transform is per-row independent; see `tests/transform_plan_parity.rs`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::estimator::plan::{PlanPolicy, PlanScratch, PreparedTransform};
+use crate::linalg::dense::Matrix;
+use crate::pipeline::PipelineModel;
+
+/// Reusable per-worker serving scratch: the estimator-level term buffer
+/// plus the pipeline-level permuted-input and feature slabs.  One
+/// instance per serving thread; everything grows to the high-water mark
+/// and is then reused.
+#[derive(Debug, Default)]
+pub struct TransformScratch {
+    plan: PlanScratch,
+    xp: Matrix,
+    feats: Vec<f64>,
+}
+
+impl TransformScratch {
+    pub fn new() -> Self {
+        TransformScratch::default()
+    }
+
+    /// Buffer growth events across *all* scratch slabs since
+    /// construction — must stay constant in steady state (the serve
+    /// smoke and bench assert it).
+    pub fn grows(&self) -> u64 {
+        self.plan.grows()
+    }
+}
+
+/// A pipeline transform compiled once per fitted model: per-class
+/// prepared transforms, their column offsets, and the build cost —
+/// everything x-independent hoisted out of the request path.
+#[derive(Debug)]
+pub struct TransformPlan {
+    model: Arc<PipelineModel>,
+    class_plans: Vec<Box<dyn PreparedTransform>>,
+    offsets: Vec<usize>,
+    total_cols: usize,
+    build_micros: u64,
+    sparse_classes: usize,
+    flops_saved_per_row: u64,
+}
+
+impl TransformPlan {
+    /// Compile a plan for `model` under `policy` (dense exact by
+    /// default; packed sparse kernels opt-in per class past the measured
+    /// threshold).
+    pub fn build(model: Arc<PipelineModel>, policy: &PlanPolicy) -> TransformPlan {
+        let t0 = Instant::now();
+        let n_classes = model.transformer.per_class.len();
+        let mut class_plans = Vec::with_capacity(n_classes);
+        let mut offsets = Vec::with_capacity(n_classes);
+        let mut total_cols = 0usize;
+        for c in &model.transformer.per_class {
+            let p = c.prepare(policy);
+            offsets.push(total_cols);
+            total_cols += p.n_cols();
+            class_plans.push(p);
+        }
+        let sparse_classes = class_plans.iter().filter(|p| p.sparse_engaged()).count();
+        let flops_saved_per_row = class_plans.iter().map(|p| p.flops_saved_per_row()).sum();
+        TransformPlan {
+            model,
+            class_plans,
+            offsets,
+            total_cols,
+            build_micros: t0.elapsed().as_micros() as u64,
+            sparse_classes,
+            flops_saved_per_row,
+        }
+    }
+
+    /// The model this plan was compiled for.
+    pub fn model(&self) -> &Arc<PipelineModel> {
+        &self.model
+    }
+
+    /// Total (FT) feature columns across classes.
+    pub fn total_cols(&self) -> usize {
+        self.total_cols
+    }
+
+    /// Wall-clock microseconds the compile took.
+    pub fn build_micros(&self) -> u64 {
+        self.build_micros
+    }
+
+    /// Number of classes served by the packed sparse kernel.
+    pub fn sparse_classes(&self) -> usize {
+        self.sparse_classes
+    }
+
+    /// Whether any class engaged the packed sparse kernel.
+    pub fn sparse_engaged(&self) -> bool {
+        self.sparse_classes > 0
+    }
+
+    /// Multiply-adds skipped per transformed row by the packed kernels
+    /// (0 on the dense default path).
+    pub fn flops_saved_per_row(&self) -> u64 {
+        self.flops_saved_per_row
+    }
+
+    /// Run one zero-row request through the plan so every scratch slab
+    /// reaches its steady-state size before real traffic (called at
+    /// plan adoption, ahead of the first request).
+    pub fn warm(&self, scratch: &mut TransformScratch) {
+        let probe = Matrix::zeros(1, self.model.perm.len());
+        let _ = self.predict_scores(&probe, scratch);
+    }
+
+    /// Labels **and** per-class decision scores through the compiled
+    /// plan — the serving reply payload, bitwise identical to
+    /// [`PipelineModel::predict_scores_with_backend`] when every class
+    /// runs the dense kernel.  Steady state touches only the scratch
+    /// slabs plus the reply vectors.
+    pub fn predict_scores(
+        &self,
+        x: &Matrix,
+        scratch: &mut TransformScratch,
+    ) -> (Vec<usize>, Vec<Vec<f64>>) {
+        let m = x.rows();
+        let n = self.model.perm.len();
+        if scratch.xp.rows() != m || scratch.xp.cols() != n {
+            scratch.xp = Matrix::zeros(m, n);
+            scratch.plan.note_grow();
+        }
+        // same element writes as the legacy permute_cols
+        for i in 0..m {
+            for (new_j, &old_j) in self.model.perm.iter().enumerate() {
+                scratch.xp.set(i, new_j, x.get(i, old_j));
+            }
+        }
+        let total = self.total_cols;
+        if scratch.feats.len() < m * total {
+            scratch.plan.note_grow();
+            scratch.feats.resize(m * total, 0.0);
+        }
+        let mut feats = std::mem::take(&mut scratch.feats);
+        for (p, &off) in self.class_plans.iter().zip(self.offsets.iter()) {
+            p.transform_into(&scratch.xp, &mut scratch.plan, &mut feats[..m * total], total, off);
+        }
+        let svm = &self.model.svm;
+        let mut labels = Vec::with_capacity(m);
+        let mut scores = Vec::with_capacity(m);
+        for i in 0..m {
+            let d = svm.decision_row(&feats[i * total..(i + 1) * total]);
+            labels.push(svm.label_from_decision(&d));
+            scores.push(d);
+        }
+        scratch.feats = feats;
+        (labels, scores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synthetic::synthetic_dataset;
+    use crate::estimator::EstimatorConfig;
+    use crate::ordering::FeatureOrdering;
+    use crate::pipeline::{train_pipeline, PipelineConfig};
+    use crate::svm::linear::LinearSvmConfig;
+
+    fn trained(method: &str) -> Arc<PipelineModel> {
+        let ds = synthetic_dataset(400, 9);
+        let cfg = PipelineConfig {
+            estimator: EstimatorConfig::parse(method, 0.01).unwrap(),
+            svm: LinearSvmConfig::default(),
+            ordering: FeatureOrdering::Pearson,
+        };
+        Arc::new(train_pipeline(&cfg, &ds).unwrap())
+    }
+
+    #[test]
+    fn plan_predictions_are_bitwise_identical_to_legacy() {
+        for method in ["cgavi-ihb", "vca"] {
+            let model = trained(method);
+            let plan = TransformPlan::build(Arc::clone(&model), &PlanPolicy::default());
+            let ds = synthetic_dataset(57, 9);
+            let (legacy_labels, legacy_scores) =
+                model.predict_scores_with_backend(&ds.x, &NativeBackend);
+            let mut scratch = TransformScratch::new();
+            let (labels, scores) = plan.predict_scores(&ds.x, &mut scratch);
+            assert_eq!(labels, legacy_labels, "{method}");
+            for (a, b) in scores.iter().zip(legacy_scores.iter()) {
+                let ab: Vec<u64> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u64> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "{method}: score bits diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn warmed_plan_serves_single_rows_without_scratch_growth() {
+        let model = trained("cgavi-ihb");
+        let plan = TransformPlan::build(Arc::clone(&model), &PlanPolicy::default());
+        let mut scratch = TransformScratch::new();
+        plan.warm(&mut scratch);
+        let after_warm = scratch.grows();
+        let ds = synthetic_dataset(40, 9);
+        for i in 0..ds.x.rows() {
+            let row = Matrix::from_rows(&[ds.x.row(i).to_vec()]).unwrap();
+            let _ = plan.predict_scores(&row, &mut scratch);
+        }
+        assert_eq!(scratch.grows(), after_warm, "steady state must not reallocate");
+        assert!(plan.build_micros() < 10_000_000);
+        assert_eq!(plan.total_cols(), model.transformer.n_generators());
+    }
+}

@@ -66,6 +66,13 @@ impl TermSet {
         self.recipes[i]
     }
 
+    /// The full flattened evaluation program, in append (= DegLex) order —
+    /// the model-side invariant a compiled transform plan caches once.
+    #[inline]
+    pub fn recipes(&self) -> &[Recipe] {
+        &self.recipes
+    }
+
     /// Index of a term, if present.
     pub fn position(&self, t: &Term) -> Option<usize> {
         self.index.get(t).copied()

@@ -122,6 +122,23 @@ impl GeneratorSet {
         backend.transform_abs(&store, &c, &u)
     }
 
+    /// [`GeneratorSet::transform_with`] written directly into a column
+    /// range of the caller's concatenated m×`stride` feature slab (see
+    /// [`ComputeBackend::transform_abs_into`]) — the per-class write path
+    /// of the pipeline's (FT) concatenation.  Written cells are bitwise
+    /// identical to [`GeneratorSet::transform_with`]'s.
+    pub fn transform_into(
+        &self,
+        x: &Matrix,
+        backend: &dyn ComputeBackend,
+        out: &mut [f64],
+        stride: usize,
+        col_off: usize,
+    ) {
+        let (store, c, u) = self.transform_operands(x, backend.preferred_shards(x.rows()));
+        backend.transform_abs_into(&store, &c, &u, out, stride, col_off);
+    }
+
     /// [`GeneratorSet::transform_with`] on the native reference backend.
     pub fn transform(&self, x: &Matrix) -> Matrix {
         self.transform_with(x, &NativeBackend)

@@ -24,12 +24,13 @@ pub fn solve_agd(p: &GramProblem, params: &SolverParams, warm: Option<&[f64]>) -
     let mut t_k = 1.0f64;
     let mut f_prev = f64::INFINITY;
     let mut stall = 0usize;
+    let mut g: Vec<f64> = Vec::with_capacity(ell); // gradient buffer, reused every iteration
     // gradient scale for the convergence test: ∇f entries are O(‖B‖·y/m)
     let grad_tol = (params.eps / m).sqrt().max(1e-13) * (1.0 + lmax / m);
 
     for t in 0..params.max_iters {
         let bx = p.b.matvec(&x);
-        let g = p.grad_with_by(&bx);
+        p.grad_with_by_into(&bx, &mut g);
         // y⁺ = x − (1/L) ∇f(x)
         let y_new: Vec<f64> = x.iter().zip(g.iter()).map(|(xi, gi)| xi - step * gi).collect();
         let f_new = p.f(&y_new);

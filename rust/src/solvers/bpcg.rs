@@ -24,9 +24,10 @@ pub fn solve_bpcg(p: &GramProblem, params: &SolverParams, warm: Option<&[f64]>) 
     };
     let mut stall = 0usize;
     let mut f_prev = f64::INFINITY;
+    let mut g: Vec<f64> = Vec::with_capacity(p.dim()); // gradient buffer, reused every iteration
 
     for t in 0..params.max_iters {
-        let g = p.grad_with_by(&act.by);
+        p.grad_with_by_into(&act.by, &mut g);
         let w = lmo_l1(&g, r); // global FW vertex (Line 6)
         let f = p.f_with_by(&act.y, &act.by);
         let fw_gap = dot(&g, &act.y) - w.dot_grad(&g, r);

@@ -52,8 +52,20 @@ impl<'a> GramProblem<'a> {
     /// ∇f(y) given `by = B·y`.
     #[inline]
     pub fn grad_with_by(&self, by: &[f64]) -> Vec<f64> {
+        let mut g = Vec::with_capacity(self.dim());
+        self.grad_with_by_into(by, &mut g);
+        g
+    }
+
+    /// ∇f(y) given `by = B·y`, written into a caller-owned buffer so the
+    /// solver hot loops allocate one gradient per *solve*, not one per
+    /// iteration.  Same map as [`Self::grad_with_by`], so results are
+    /// bitwise identical.
+    #[inline]
+    pub fn grad_with_by_into(&self, by: &[f64], out: &mut Vec<f64>) {
         let scale = 2.0 / self.m as f64;
-        by.iter().zip(self.atb.iter()).map(|(byi, ri)| scale * (byi + ri)).collect()
+        out.clear();
+        out.extend(by.iter().zip(self.atb.iter()).map(|(byi, ri)| scale * (byi + ri)));
     }
 
     /// Curvature along d: `dᵀBd / m · 2` is the second derivative of

@@ -1,0 +1,227 @@
+//! Compiled transform-plan parity — the serving-plan contract:
+//!
+//! * **prepared ↔ legacy, bitwise**: a [`TransformPlan`] compiled from a
+//!   fitted pipeline must reproduce `predict_scores_with_backend`
+//!   **bit-for-bit** for every estimator method, against the native
+//!   backend and against every pinned store shard count.  The transform
+//!   is per-row independent, so shard count never changes bits — which
+//!   is exactly why the service may route small flushes through the
+//!   plan and large ones through the sharded legacy path without the
+//!   answer depending on the split.
+//! * **concatenation**: per-class prepared transforms writing directly
+//!   into their column ranges of one slab must equal the legacy
+//!   per-class block concatenation.
+//! * **sparse kernel**: the packed-column kernel is opt-in and gated;
+//!   when forced on it must stay within an explicit error budget of the
+//!   dense exact path (the only arithmetic difference is skipping
+//!   `a_ij * 0.0` terms, which can only flip signed zeros before the
+//!   final `abs`).
+//! * **hot swap**: a mid-traffic swap serves the new generation from a
+//!   freshly adopted plan (plan counters prove no cold rebuild on the
+//!   request path).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use avi_scale::backend::{NativeBackend, PinnedShards, ShardedBackend};
+use avi_scale::coordinator::registry::ModelRegistry;
+use avi_scale::coordinator::router::ModelRouter;
+use avi_scale::coordinator::service::{ServeConfig, ServeRequest};
+use avi_scale::data::synthetic::synthetic_dataset;
+use avi_scale::estimator::plan::PlanPolicy;
+use avi_scale::estimator::EstimatorConfig;
+use avi_scale::ordering::FeatureOrdering;
+use avi_scale::pipeline::plan::{TransformPlan, TransformScratch};
+use avi_scale::pipeline::{train_pipeline, PipelineConfig, PipelineModel};
+use avi_scale::svm::linear::LinearSvmConfig;
+
+const METHODS: [&str; 8] = [
+    "cgavi-ihb",
+    "agdavi-ihb",
+    "bpcgavi-wihb",
+    "bpcgavi",
+    "pcgavi",
+    "cgavi",
+    "abm",
+    "vca",
+];
+
+fn trained(method: &str, psi: f64, seed: u64) -> Arc<PipelineModel> {
+    let ds = synthetic_dataset(300, seed);
+    let cfg = PipelineConfig {
+        estimator: EstimatorConfig::parse(method, psi).unwrap(),
+        svm: LinearSvmConfig::default(),
+        ordering: FeatureOrdering::Pearson,
+    };
+    Arc::new(train_pipeline(&cfg, &ds).unwrap())
+}
+
+fn score_bits(scores: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    scores.iter().map(|row| row.iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+#[test]
+fn methods_list_covers_every_known_estimator() {
+    // keep the parity battery in sync with the estimator registry
+    let known = EstimatorConfig::known_methods();
+    assert_eq!(known.len(), METHODS.len(), "estimator registry changed: {known:?}");
+    for m in METHODS {
+        assert!(known.contains(&m), "parity battery is missing '{m}'");
+    }
+}
+
+#[test]
+fn prepared_plan_is_bitwise_identical_to_legacy_for_every_method_and_shard_count() {
+    let probe = synthetic_dataset(53, 17);
+    for method in METHODS {
+        let model = trained(method, 0.01, 9);
+        let plan = TransformPlan::build(Arc::clone(&model), &PlanPolicy::default());
+        let mut scratch = TransformScratch::new();
+        let (plan_labels, plan_scores) = plan.predict_scores(&probe.x, &mut scratch);
+        let plan_bits = score_bits(&plan_scores);
+
+        // native reference
+        let (labels, scores) = model.predict_scores_with_backend(&probe.x, &NativeBackend);
+        assert_eq!(plan_labels, labels, "{method}: native labels diverged");
+        assert_eq!(plan_bits, score_bits(&scores), "{method}: native score bits diverged");
+
+        // every pinned store shard count, sequential and pool-sharded
+        for &shards in &[1usize, 2, 3, 5, 8] {
+            let native_pin = PinnedShards::new(Box::new(NativeBackend), shards);
+            let sharded_pin =
+                PinnedShards::new(Box::new(ShardedBackend::new(3).with_min_work(0)), shards);
+            let pinned: [(&str, &dyn avi_scale::backend::ComputeBackend); 2] =
+                [("native", &native_pin), ("sharded", &sharded_pin)];
+            for (tag, backend) in pinned {
+                let (labels, scores) = model.predict_scores_with_backend(&probe.x, backend);
+                assert_eq!(
+                    plan_labels, labels,
+                    "{method}: labels diverged ({tag}, shards={shards})"
+                );
+                assert_eq!(
+                    plan_bits,
+                    score_bits(&scores),
+                    "{method}: score bits diverged ({tag}, shards={shards})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn per_class_plans_write_the_same_concatenation_as_the_legacy_transform() {
+    // multi-class model → several class blocks → exercises the direct
+    // column-range writes of both paths
+    let model = trained("cgavi-ihb", 0.01, 21);
+    let transformer = &model.transformer;
+    let probe = synthetic_dataset(31, 5);
+    let legacy = transformer.transform_with(&probe.x, &NativeBackend);
+
+    let policy = PlanPolicy::default();
+    let total = transformer.n_generators();
+    let mut slab = vec![0.0f64; probe.x.rows() * total];
+    let mut scratch = avi_scale::estimator::plan::PlanScratch::new();
+    let mut off = 0;
+    for class in &transformer.per_class {
+        let prepared = class.prepare(&policy);
+        prepared.transform_into(&probe.x, &mut scratch, &mut slab, total, off);
+        off += prepared.n_cols();
+    }
+    assert_eq!(off, total, "class column ranges must tile the slab exactly");
+    for i in 0..probe.x.rows() {
+        for j in 0..total {
+            assert_eq!(
+                slab[i * total + j].to_bits(),
+                legacy.get(i, j).to_bits(),
+                "concatenated cell ({i}, {j}) diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn forced_sparse_kernel_stays_within_the_error_budget() {
+    // force engagement regardless of measured density: threshold 0.0
+    let forced = PlanPolicy { sparse: true, sparse_min_zero_frac: 0.0 };
+    let probe = synthetic_dataset(47, 13);
+    for method in ["cgavi-ihb", "bpcgavi-wihb", "abm"] {
+        let model = trained(method, 0.01, 9);
+        let dense = TransformPlan::build(Arc::clone(&model), &PlanPolicy::default());
+        let sparse = TransformPlan::build(Arc::clone(&model), &forced);
+        assert!(!dense.sparse_engaged(), "{method}: dense default engaged sparse");
+        assert!(sparse.sparse_engaged(), "{method}: forced policy did not engage");
+
+        let mut ds_scratch = TransformScratch::new();
+        let mut sp_scratch = TransformScratch::new();
+        let (dense_labels, dense_scores) = dense.predict_scores(&probe.x, &mut ds_scratch);
+        let (sparse_labels, sparse_scores) = sparse.predict_scores(&probe.x, &mut sp_scratch);
+        // the kernels differ only in skipped zero multiplies: scores must
+        // agree to well under any decision margin
+        for (a, b) in dense_scores.iter().zip(sparse_scores.iter()) {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!(
+                    (x - y).abs() <= 1e-12,
+                    "{method}: sparse kernel drifted {x} vs {y}"
+                );
+            }
+        }
+        assert_eq!(dense_labels, sparse_labels, "{method}: labels flipped");
+    }
+
+    // default-threshold opt-in: engagement may or may not trigger on this
+    // model, but gating must follow the measured density deterministically
+    let model = trained("cgavi-ihb", 0.01, 9);
+    let a = TransformPlan::build(Arc::clone(&model), &PlanPolicy::sparse_enabled());
+    let b = TransformPlan::build(Arc::clone(&model), &PlanPolicy::sparse_enabled());
+    assert_eq!(a.sparse_classes(), b.sparse_classes(), "gating must be deterministic");
+}
+
+#[test]
+fn hot_swap_mid_traffic_serves_the_new_generation_from_a_fresh_plan() {
+    let ds = synthetic_dataset(24, 19);
+    let mut registry = ModelRegistry::new();
+    registry.insert("m", "v1", trained("cgavi-ihb", 0.01, 9)).unwrap();
+    registry.insert("m", "v2", trained("cgavi-ihb", 0.01, 9)).unwrap();
+
+    let router = ModelRouter::new();
+    let gate = Arc::new(AtomicBool::new(true));
+    let held = ServeConfig { hold_gate: Some(gate.clone()), ..ServeConfig::default() };
+    router
+        .register_ab(&registry, "m", &[("v1".into(), 100)], 0, &held)
+        .unwrap();
+
+    // admitted to v1 while its batcher is gated — in flight across the swap
+    let pending = router.enqueue("m", ServeRequest::row(ds.x.row(0).to_vec())).unwrap();
+
+    // hot swap to v2: the arm adopts the plan the registry compiled at
+    // insert, so the new generation is warmed before taking traffic
+    router
+        .register_ab(&registry, "m", &[("v2".into(), 100)], 0, &ServeConfig::default())
+        .unwrap();
+    for i in 1..ds.x.rows() {
+        let ans = router.predict("m", ds.x.row(i).to_vec()).unwrap();
+        assert_eq!(ans.model_version, "v2");
+    }
+
+    // release the old generation; the in-flight request is still answered
+    // by (and stamped with) v1
+    gate.store(false, Ordering::SeqCst);
+    let ans = pending.wait().answer().unwrap();
+    assert_eq!(ans.model_version, "v1");
+
+    let report = router.report();
+    let v2 = report
+        .routes
+        .iter()
+        .find(|r| r.role == "primary" && r.version == "v2")
+        .expect("live v2 arm");
+    assert_eq!(v2.plan_builds, 1, "new generation must start exactly one plan");
+    assert!(v2.plan_hits > 0, "new generation never served from its plan");
+    let v1 = report
+        .routes
+        .iter()
+        .find(|r| r.role == "retired" && r.version == "v1")
+        .expect("retired v1 arm");
+    assert_eq!(v1.plan_builds, 1, "old generation had its own plan");
+    assert!(v1.plan_hits > 0, "drained in-flight request must go through v1's plan");
+}

@@ -23,12 +23,13 @@ cd "$(dirname "$0")/.."
 BASELINE_DIR=bench
 FRESH_DIR=rust/target/bench_results
 TOLERANCE=${TOLERANCE:-15}
-BENCHES=(micro_gram_panel backend_scaling serve_router persist_codec)
+BENCHES=(micro_gram_panel backend_scaling serve_router serve_transform persist_codec)
 
 if [[ "${SKIP_RUN:-0}" != "1" ]]; then
   echo "== running micro benches =="
   (cd rust && cargo bench --bench micro_gram_panel && cargo bench --bench micro_backend_scaling \
-    && cargo bench --bench serve_router && cargo bench --bench micro_persist_codec)
+    && cargo bench --bench serve_router && cargo bench --bench serve_transform \
+    && cargo bench --bench micro_persist_codec)
 fi
 
 mkdir -p "$BASELINE_DIR"

@@ -30,7 +30,7 @@ CLIPPY_LOG=$(mktemp)
 cargo clippy --release --all-targets 2>&1 | tee "$CLIPPY_LOG"
 # every rustc diagnostic carries a "--> path:line:col" span line; match
 # spans inside the strict modules regardless of header distance
-STRICT_SPANS='^[[:space:]]*--> (src/artifact/|src/backend/|src/estimator/|src/coordinator/|src/storage/|src/data/csvio|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/micro_persist_codec|benches/serve_router|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane|tests/storage_parity|tests/frontdoor_e2e)'
+STRICT_SPANS='^[[:space:]]*--> (src/artifact/|src/backend/|src/estimator/|src/coordinator/|src/storage/|src/pipeline/plan|src/data/csvio|src/linalg/simd|benches/micro_backend_scaling|benches/micro_gram_panel|benches/micro_persist_codec|benches/serve_router|benches/serve_transform|tests/runtime_parity|tests/estimator_conformance|tests/kernel_parity|tests/pool_concurrency|tests/serve_control_plane|tests/storage_parity|tests/frontdoor_e2e|tests/transform_plan_parity)'
 if grep -E "$STRICT_SPANS" "$CLIPPY_LOG" >/dev/null; then
   echo "FAIL: clippy findings in strict modules:"
   grep -E "$STRICT_SPANS" "$CLIPPY_LOG"
@@ -139,6 +139,27 @@ echo "$SERVE_OUT" | grep -q '^router.total_requests = 300$' || {
 }
 echo "$SERVE_OUT" | grep -q '^router.total_rejected = 0$' || {
   echo "FAIL: serve smoke rejected requests"
+  echo "$SERVE_OUT"
+  exit 1
+}
+# compiled transform plans (ISSUE 10): every serving arm (v1 primary,
+# v2 primary, v2 shadow) starts exactly one plan — plan_builds is 1 per
+# arm, i.e. one build per distinct model behind each route, and never 0
+# (a cold-rebuilding arm) or >1 (a plan rebuilt on the request path)
+PLAN_ARMS=$(echo "$SERVE_OUT" | grep -c '"plan_builds": 1' || true)
+if [[ "$PLAN_ARMS" -ne 3 ]]; then
+  echo "FAIL: expected 3 serving arms with plan_builds=1, saw $PLAN_ARMS"
+  echo "$SERVE_OUT"
+  exit 1
+fi
+if echo "$SERVE_OUT" | grep -qE '"plan_builds": (0|[2-9])'; then
+  echo "FAIL: an arm rebuilt (or never built) its transform plan"
+  echo "$SERVE_OUT"
+  exit 1
+fi
+# steady-state traffic must flow through the prepared plans
+echo "$SERVE_OUT" | grep -qE '"plan_hits": [1-9]' || {
+  echo "FAIL: no serving arm ever hit its compiled plan"
   echo "$SERVE_OUT"
   exit 1
 }
